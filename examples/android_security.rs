@@ -1,0 +1,138 @@
+//! Android Security scenario (§1.1 of the paper).
+//!
+//! The Android Security & Privacy team uses Dynamic GUS to catch
+//! potentially-harmful apps (PHAs) *before* they reach users: when an app
+//! is uploaded, its neighborhood among known apps is computed immediately;
+//! if it sits in a neighborhood of known-harmful apps, it is flagged now —
+//! instead of waiting for the next offline Grale batch rebuild. The paper
+//! reports a 4× reduction in detection latency and +40% action rate.
+//!
+//! This example simulates that pipeline and measures exactly that gap:
+//!
+//! - a store of apps (products_like schema: code-embedding + permission/API
+//!   token set), some clusters seeded as "malware families";
+//! - a live upload stream; each upload is inserted into Dynamic GUS and
+//!   immediately risk-scored by weighted k-NN vote over its neighborhood;
+//! - the baseline detects the same uploads only at the next periodic batch
+//!   rebuild (period `--batch-mins`, default 60 simulated minutes);
+//! - report: detection precision/recall of the kNN vote, and the
+//!   distribution of detection-latency improvement (dynamic vs batch).
+//!
+//! Run: cargo run --release --example android_security -- [--n 15000]
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::util::cli::Args;
+use dynamic_gus::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("n", 15_000);
+    let uploads = args.get_usize("uploads", 2_000);
+    let batch_mins = args.get_f64("batch-mins", 60.0);
+    let uploads_per_min = args.get_f64("uploads-per-min", 20.0);
+    let k = args.get_usize("k", 10);
+
+    println!("== Android Security: dynamic PHA detection ==");
+    // App store: products_like (embedding = code/behavior vector, tokens =
+    // permissions/API calls). Latent clusters = app families.
+    let ds = SyntheticConfig::products_like(n, 0x5ec).generate();
+    let n_clusters = ds.cluster_of.iter().copied().max().unwrap_or(0) as usize + 1;
+
+    // Seed ~10% of families as malware families; known apps in those
+    // families are labeled harmful (the team's existing verdicts).
+    let mut rng = Rng::seeded(0xbad);
+    let mut is_malware_family = vec![false; n_clusters];
+    for f in is_malware_family.iter_mut() {
+        *f = rng.chance(0.10);
+    }
+
+    let split = n - uploads;
+    let corpus = &ds.points[..split];
+    let stream = &ds.points[split..];
+
+    println!(
+        "store: {} known apps ({} families, {} malware families); {} live uploads",
+        corpus.len(),
+        n_clusters,
+        is_malware_family.iter().filter(|&&b| b).count(),
+        stream.len()
+    );
+
+    let config = GusConfig {
+        scann_nn: k,
+        filter_p: 10.0,
+        scorer: ScorerKind::Auto,
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), config, corpus, 8)?;
+
+    // Known verdicts: every corpus app in a malware family.
+    let verdict = |idx: usize| is_malware_family[ds.cluster_of[idx] as usize];
+
+    // --- live stream ---
+    let mut tp = 0u64;
+    let mut fp = 0u64;
+    let mut fn_ = 0u64;
+    let mut tn = 0u64;
+    let mut improvements_min: Vec<f64> = Vec::new();
+    for (i, app) in stream.iter().enumerate() {
+        let upload_min = i as f64 / uploads_per_min;
+        // Dynamic path: query neighborhood, then insert (order irrelevant —
+        // freshness is immediate either way).
+        let neighbors = gus.query(app, k)?;
+        gus.insert(app.clone())?;
+        // Weighted vote over known-verdict neighbors.
+        let mut risk = 0.0f64;
+        let mut mass = 0.0f64;
+        for nb in &neighbors {
+            if (nb.id as usize) < split {
+                mass += nb.score as f64;
+                if verdict(nb.id as usize) {
+                    risk += nb.score as f64;
+                }
+            }
+        }
+        let flagged = mass > 0.0 && risk / mass > 0.5;
+        let truth = verdict(app.id as usize);
+        match (flagged, truth) {
+            (true, true) => {
+                tp += 1;
+                // Batch baseline detects at the next rebuild boundary.
+                let batch_detect_min = (upload_min / batch_mins).floor() * batch_mins + batch_mins;
+                improvements_min.push(batch_detect_min - upload_min);
+            }
+            (true, false) => fp += 1,
+            (false, true) => fn_ += 1,
+            (false, false) => tn += 1,
+        }
+    }
+
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    let recall = tp as f64 / (tp + fn_).max(1) as f64;
+    println!("\nresults over {} uploads:", stream.len());
+    println!("  kNN-vote detection: precision {precision:.3}, recall {recall:.3} (tp={tp} fp={fp} fn={fn_} tn={tn})");
+    if !improvements_min.is_empty() {
+        improvements_min.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = improvements_min[improvements_min.len() / 2];
+        let mean: f64 =
+            improvements_min.iter().sum::<f64>() / improvements_min.len() as f64;
+        // Dynamic detection latency ≈ query latency (ms); batch ≈ med minutes.
+        let ql = gus.metrics.query_latency.summary();
+        println!(
+            "  detection latency: dynamic = {:.1} ms (query p50); batch rebuild = {:.0} min median wait",
+            ql.p50_ns as f64 / 1e6,
+            med
+        );
+        println!(
+            "  => harmful apps detected a median {med:.0} min (mean {mean:.0} min) sooner than the {batch_mins:.0}-min batch pipeline"
+        );
+        println!(
+            "     (paper §1.1 reports a 4x detection-latency reduction in production, where the \
+             baseline itself was already incremental; against a pure batch rebuild the dynamic \
+             path's win is bounded only by the rebuild period)"
+        );
+    }
+    Ok(())
+}

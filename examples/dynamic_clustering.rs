@@ -1,0 +1,140 @@
+//! Downstream graph mining on the dynamic graph: clustering + label
+//! propagation (the paper's §1: the computed neighborhoods "enable more
+//! involved graph mining algorithms, including ... Clustering, Label
+//! Propagation, and GNNs").
+//!
+//! Builds the neighborhood graph through Dynamic GUS queries, then:
+//!
+//! 1. **Connected-component clustering** over edges with score ≥ τ —
+//!    compared against the latent clusters (adjusted match rate);
+//! 2. **Label propagation**: seed 2% of points with their true cluster
+//!    label, propagate over the weighted graph, report accuracy on the
+//!    unlabeled rest;
+//! 3. re-runs both after a burst of live mutations (new points appear in
+//!    existing clusters) to show the graph stays mine-able under churn.
+//!
+//! Run: cargo run --release --example dynamic_clustering -- [--n 8000]
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::data::Dataset;
+use dynamic_gus::graph::Graph;
+use dynamic_gus::util::cli::Args;
+use dynamic_gus::util::hash::FxHashMap;
+use dynamic_gus::util::rng::Rng;
+
+fn build_graph(gus: &DynamicGus, ds: &Dataset, ids: &[u64], k: usize, tau: f32) -> Graph {
+    let mut g = Graph::new();
+    for &id in ids {
+        g.add_node(id);
+        let Ok(neighbors) = gus.query(&ds.points[id as usize], k) else {
+            continue;
+        };
+        for nb in neighbors {
+            if nb.score >= tau && id < nb.id {
+                g.add_edge(id, nb.id, nb.score);
+            }
+        }
+    }
+    g
+}
+
+fn cluster_agreement(g: &Graph, ds: &Dataset) -> f64 {
+    // For each graph component, its purity-weighted share: how well do
+    // components recover latent clusters?
+    let cc = g.connected_components();
+    let mut by_comp: FxHashMap<usize, Vec<u64>> = FxHashMap::default();
+    for (&id, &comp) in &cc {
+        by_comp.entry(comp).or_default().push(id);
+    }
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for members in by_comp.values() {
+        let mut counts: FxHashMap<u32, usize> = FxHashMap::default();
+        for &id in members {
+            *counts.entry(ds.cluster_of[id as usize]).or_insert(0) += 1;
+        }
+        let majority = counts.values().copied().max().unwrap_or(0);
+        agree += majority;
+        total += members.len();
+    }
+    agree as f64 / total.max(1) as f64
+}
+
+fn label_prop_accuracy(g: &Graph, ds: &Dataset, seed_frac: f64, rng: &mut Rng) -> f64 {
+    let ids: Vec<u64> = g.nodes().collect();
+    let mut seeds: FxHashMap<u64, u32> = FxHashMap::default();
+    for &id in &ids {
+        if rng.chance(seed_frac) {
+            seeds.insert(id, ds.cluster_of[id as usize]);
+        }
+    }
+    let labels = g.label_propagation(&seeds, 10);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for &id in &ids {
+        if seeds.contains_key(&id) {
+            continue;
+        }
+        if let Some(&l) = labels.get(&id) {
+            total += 1;
+            if l == ds.cluster_of[id as usize] {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("n", 8_000);
+    let k = args.get_usize("k", 10);
+    let tau = args.get_f64("tau", 0.7) as f32;
+
+    println!("== Dynamic graph mining: clustering + label propagation ==");
+    let ds = SyntheticConfig::arxiv_like(n, 0xc1).generate();
+    let burst = n / 10;
+    let corpus_ids: Vec<u64> = (0..(n - burst) as u64).collect();
+    let config = GusConfig {
+        scann_nn: k,
+        filter_p: 10.0,
+        scorer: ScorerKind::Auto,
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap(
+        ds.schema.clone(),
+        config,
+        &ds.points[..n - burst],
+        8,
+    )?;
+
+    println!("[1] building neighborhood graph (k={k}, tau={tau})...");
+    let g = build_graph(&gus, &ds, &corpus_ids, k, tau);
+    println!("    {} nodes, {} edges", g.n_nodes(), g.n_edges());
+    let agree = cluster_agreement(&g, &ds);
+    let mut rng = Rng::seeded(0x5eed);
+    let lp = label_prop_accuracy(&g, &ds, 0.02, &mut rng);
+    println!("    component/cluster agreement: {:.1}%", agree * 100.0);
+    println!("    label propagation accuracy (2% seeds): {:.1}%", lp * 100.0);
+
+    println!("[2] applying a burst of {} live inserts...", burst);
+    for p in &ds.points[n - burst..] {
+        gus.insert(p.clone())?;
+    }
+    let all_ids: Vec<u64> = (0..n as u64).collect();
+    let g2 = build_graph(&gus, &ds, &all_ids, k, tau);
+    println!("    {} nodes, {} edges", g2.n_nodes(), g2.n_edges());
+    let agree2 = cluster_agreement(&g2, &ds);
+    let lp2 = label_prop_accuracy(&g2, &ds, 0.02, &mut rng);
+    println!("    component/cluster agreement: {:.1}%", agree2 * 100.0);
+    println!("    label propagation accuracy: {:.1}%", lp2 * 100.0);
+    println!(
+        "    (new points absorbed without rebuild; mutation p95 {:.3} ms)",
+        gus.metrics.mutation_latency.summary().p95_ns as f64 / 1e6
+    );
+
+    anyhow::ensure!(agree2 > 0.5, "clustering collapsed after churn");
+    Ok(())
+}

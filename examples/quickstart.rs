@@ -1,0 +1,148 @@
+//! Quickstart — the end-to-end driver.
+//!
+//! Exercises the full stack on a real small workload and reports the
+//! paper's headline metrics:
+//!
+//! 1. generate an ogbn-arxiv-shaped dataset (20k points by default);
+//! 2. bootstrap Dynamic GUS (offline preprocessing §4.3: bucket stats,
+//!    IDF table, popular-bucket filter; index warm-up; XLA scorer from
+//!    `artifacts/` if present, else the native model);
+//! 3. serve a mixed dynamic workload (inserts / updates / deletes /
+//!    neighborhood queries) through the real coordinator;
+//! 4. report: query latency percentiles (paper: median 10–20 ms at this
+//!    scale class), insertion latency (paper: 0.29–0.42 ms median),
+//!    staleness p99, neighborhood quality vs the latent clusters.
+//!
+//! Run:  cargo run --release --example quickstart -- [--n 20000] [--ops 5000]
+
+use std::time::Instant;
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::data::trace::{Op, TraceConfig};
+use dynamic_gus::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("n", 20_000);
+    let n_ops = args.get_usize("ops", 5_000);
+    let k = args.get_usize("k", 10);
+
+    println!("== Dynamic GUS quickstart ==");
+    println!("[1/4] generating arxiv_like dataset (n={n})...");
+    let ds = SyntheticConfig::arxiv_like(n, 0xa1).generate();
+
+    println!("[2/4] bootstrapping service (preprocess + index + scorer)...");
+    let config = GusConfig {
+        scann_nn: k,
+        filter_p: 10.0,
+        idf_s: 0,
+        scorer: ScorerKind::Auto,
+        ..GusConfig::default()
+    };
+    let t0 = Instant::now();
+    // Hold out 20% of points to drive inserts from the stream.
+    let trace = TraceConfig {
+        initial_fraction: 0.8,
+        n_ops,
+        insert_prob: 0.10,
+        update_prob: 0.05,
+        delete_prob: 0.02,
+        query_k: k,
+        seed: 7,
+    }
+    .build(&ds);
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), config, &trace.initial, 8)?;
+    println!(
+        "       ready in {:.1}s ({} points, scorer={})",
+        t0.elapsed().as_secs_f64(),
+        gus.len(),
+        if dynamic_gus::scorer::XlaScorer::artifacts_available(
+            &dynamic_gus::runtime::artifacts_dir(),
+            &ds.schema.name
+        ) {
+            "xla (AOT artifacts)"
+        } else {
+            "native (run `make artifacts` for the XLA path)"
+        }
+    );
+
+    println!("[3/4] running {} mixed operations...", trace.ops.len());
+    let mut cluster_hits = 0u64;
+    let mut cluster_total = 0u64;
+    let t1 = Instant::now();
+    for op in &trace.ops {
+        match op {
+            Op::Insert(p) | Op::Update(p) => {
+                gus.insert(p.clone())?;
+            }
+            Op::Delete(id) => {
+                gus.delete(*id)?;
+            }
+            Op::Query { point, k } => {
+                let res = gus.query(point, *k)?;
+                // Quality probe: neighbors sharing the latent cluster.
+                let qc = ds.cluster_of[point.id as usize];
+                for nb in &res {
+                    if let Some(&c) = ds.cluster_of.get(nb.id as usize) {
+                        cluster_total += 1;
+                        if c == qc {
+                            cluster_hits += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let wall = t1.elapsed();
+
+    println!("[4/4] results");
+    let (ins, upd, del, q) = trace_mix(&trace.ops);
+    println!("  ops: {ins} inserts, {upd} updates, {del} deletes, {q} queries");
+    println!(
+        "  throughput: {:.0} ops/s (wall {:.1}s, sequential)",
+        trace.ops.len() as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
+    );
+    let ql = gus.metrics.query_latency.summary();
+    println!(
+        "  query latency:    p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms   (paper: median 5-25 ms)",
+        ql.p50_ns as f64 / 1e6,
+        ql.p90_ns as f64 / 1e6,
+        ql.p99_ns as f64 / 1e6
+    );
+    let ml = gus.metrics.mutation_latency.summary();
+    println!(
+        "  mutation latency: p50 {:.3} ms  p95 {:.3} ms              (paper: 0.29-0.42 / 0.54-0.78 ms)",
+        ml.p50_ns as f64 / 1e6,
+        ml.p95_ns as f64 / 1e6
+    );
+    println!(
+        "  staleness p99:    {:.3} ms (mutations visible to the next query immediately)",
+        gus.metrics.staleness.p99_ms()
+    );
+    if cluster_total > 0 {
+        println!(
+            "  neighborhood quality: {:.1}% of returned neighbors share the query's latent cluster ({}/{})",
+            100.0 * cluster_hits as f64 / cluster_total as f64,
+            cluster_hits,
+            cluster_total
+        );
+    }
+    println!("  service stats: {}", gus.stats_json().dump());
+    Ok(())
+}
+
+fn trace_mix(ops: &[Op]) -> (usize, usize, usize, usize) {
+    let mut mix = (0, 0, 0, 0);
+    for op in ops {
+        match op {
+            Op::Insert(_) => mix.0 += 1,
+            Op::Update(_) => mix.1 += 1,
+            Op::Delete(_) => mix.2 += 1,
+            Op::Query { .. } => mix.3 += 1,
+        }
+    }
+    mix
+}

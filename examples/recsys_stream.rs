@@ -1,0 +1,120 @@
+//! Recommendation-system scenario: "finding similar items in
+//! recommendation systems with thousands of new entities per second" (§1).
+//!
+//! A product catalog (products_like schema) receives a continuous stream of
+//! new listings; for every new product the service returns related items
+//! immediately (the "customers also considered" shelf). This example
+//! drives Dynamic GUS through the TCP RPC server — the full wire path —
+//! with several concurrent client threads, and reports:
+//!
+//! - end-to-end RPC latency percentiles (client-observed, including JSON +
+//!   TCP) vs in-process service latency;
+//! - sustained mutation + query throughput over the run;
+//! - shelf quality: fraction of recommended items from the product's
+//!   latent category.
+//!
+//! Run: cargo run --release --example recsys_stream -- [--n 10000] [--clients 4]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use dynamic_gus::client::GusClient;
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::metrics::LatencyHistogram;
+use dynamic_gus::server::{serve, ServerConfig};
+use dynamic_gus::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("n", 10_000);
+    let n_clients = args.get_usize("clients", 4);
+    let per_client = args.get_usize("per-client", 250);
+    let k = args.get_usize("k", 10);
+
+    println!("== RecSys stream over the RPC server ==");
+    let ds = SyntheticConfig::products_like(n, 0x0ec).generate();
+    let held_out = n_clients * per_client;
+    let corpus = &ds.points[..n - held_out];
+
+    let config = GusConfig {
+        scann_nn: k,
+        filter_p: 10.0,
+        scorer: ScorerKind::Auto,
+        ..GusConfig::default()
+    };
+    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), config, corpus, 8)?);
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::default())?;
+    let addr = handle.addr.to_string();
+    println!("serving {} products on {addr}", corpus.len());
+
+    // Concurrent "merchant" clients: insert a new listing, immediately ask
+    // for its shelf, check the category.
+    let rpc_latency = Arc::new(LatencyHistogram::new());
+    let hits = Arc::new(AtomicU64::new(0));
+    let total = Arc::new(AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            let ds = &ds;
+            let rpc_latency = Arc::clone(&rpc_latency);
+            let hits = Arc::clone(&hits);
+            let total = Arc::clone(&total);
+            s.spawn(move || {
+                let mut client = GusClient::connect(&addr).expect("connect");
+                let base = n - held_out + c * per_client;
+                for i in 0..per_client {
+                    let p = &ds.points[base + i];
+                    let t = std::time::Instant::now();
+                    client.insert(p).expect("insert");
+                    let shelf = client.query_id(p.id, k).expect("query");
+                    rpc_latency.record(t.elapsed());
+                    let cat = ds.cluster_of[p.id as usize];
+                    for item in shelf {
+                        total.fetch_add(1, Ordering::Relaxed);
+                        if ds
+                            .cluster_of
+                            .get(item.id as usize)
+                            .map(|&cc| cc == cat)
+                            .unwrap_or(false)
+                        {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    let listings = (n_clients * per_client) as f64;
+    println!("\nresults:");
+    println!(
+        "  {} listings over {:.1}s with {n_clients} concurrent clients = {:.0} listing+shelf pairs/s",
+        listings,
+        wall.as_secs_f64(),
+        listings / wall.as_secs_f64()
+    );
+    let rl = rpc_latency.summary();
+    println!(
+        "  client-observed insert+query RPC: p50 {:.2} ms  p99 {:.2} ms (incl. JSON + TCP)",
+        rl.p50_ns as f64 / 1e6,
+        rl.p99_ns as f64 / 1e6
+    );
+    let ql = gus.metrics.query_latency.summary();
+    println!(
+        "  in-process query latency:         p50 {:.2} ms  p99 {:.2} ms",
+        ql.p50_ns as f64 / 1e6,
+        ql.p99_ns as f64 / 1e6
+    );
+    let h = hits.load(Ordering::Relaxed);
+    let t = total.load(Ordering::Relaxed).max(1);
+    println!(
+        "  shelf quality: {:.1}% of recommended items share the listing's category ({h}/{t})",
+        100.0 * h as f64 / t as f64
+    );
+    handle.shutdown();
+    Ok(())
+}

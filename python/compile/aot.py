@@ -1,0 +1,94 @@
+"""AOT lowering: JAX scorer graph -> HLO text artifacts for the Rust runtime.
+
+Emits, per schema (arxiv_like, products_like) and per candidate-batch
+variant B in (32, 128, 512, 2048):
+
+    artifacts/scorer_<schema>_b<B>.hlo.txt
+
+plus (with --train) the trained weights ``artifacts/weights_<schema>.json``.
+
+HLO *text* is the interchange format — NOT ``lowered.compiler_ir("hlo")
+.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and aot_recipe.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import BATCH_SIZES, SCHEMAS, example_args, scorer_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(spec, batch: int) -> str:
+    # Tile size per variant: interpret-mode grid steps lower to an HLO
+    # while-loop with dynamic-slice bookkeeping whose per-step overhead
+    # dominates at small tiles (measured: B=2048 goes 12.3ms -> 1.5ms when
+    # the tile grows 32 -> 512; see EXPERIMENTS.md §Perf). 512 keeps the
+    # per-tile VMEM footprint at 512·d·4B ≈ 256 KiB for d=128 — comfortably
+    # inside a TPU core's ~16 MiB VMEM with double buffering.
+    block_b = min(batch, 512)
+    fn = lambda *args: scorer_fn(*args, block_b=block_b)  # noqa: E731
+    lowered = jax.jit(fn).lower(*example_args(spec, batch))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--schemas", default="arxiv_like,products_like")
+    ap.add_argument(
+        "--batches", default=",".join(str(b) for b in BATCH_SIZES)
+    )
+    ap.add_argument("--train", action="store_true", help="also train weights")
+    ap.add_argument("--train-steps", type=int, default=1500)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    for name in args.schemas.split(","):
+        spec = SCHEMAS[name]
+        for b in batches:
+            text = lower_variant(spec, b)
+            path = os.path.join(args.out_dir, f"scorer_{name}_b{b}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    if args.train:
+        from compile import train as train_mod
+
+        from compile.model import weights_to_json
+
+        for name in args.schemas.split(","):
+            spec = SCHEMAS[name]
+            params, metrics = train_mod.train(spec, steps=args.train_steps)
+            assert metrics["val_auc"] > 0.75, f"{name}: {metrics}"
+            path = os.path.join(args.out_dir, f"weights_{name}.json")
+            with open(path, "w") as f:
+                f.write(
+                    weights_to_json(
+                        spec, params["w1"], params["b1"], params["w2"],
+                        params["b2"], params["w3"], params["b3"],
+                    )
+                )
+            print(f"wrote {path} ({metrics})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

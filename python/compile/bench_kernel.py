@@ -1,0 +1,90 @@
+"""L1 kernel structure analysis: block-size sweep + VMEM/MXU estimates.
+
+`interpret=True` wallclock is NOT a TPU proxy (it measures the HLO
+while-loop the interpreter lowers to) — but it does expose the grid-step
+*overhead* structure, and the VMEM/MXU table is computed analytically from
+the BlockSpec. This script documents the `block_b = min(B, 512)` choice in
+aot.py and DESIGN.md §Perf.
+
+Run: cd python && python -m compile.bench_kernel
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from compile.kernels.scorer_kernel import pallas_score
+from compile.model import ARXIV, HIDDEN, SchemaSpec
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on recent TPUs
+
+
+def make_args(spec: SchemaSpec, b: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    d, ke, h = spec.dense_dim, spec.extra_dim, HIDDEN
+    return (
+        rng.normal(size=(d,)).astype(np.float32),
+        rng.normal(size=(b, d)).astype(np.float32),
+        rng.normal(size=(b, ke)).astype(np.float32),
+        (rng.normal(size=(d, h)) * 0.1).astype(np.float32),
+        (rng.normal(size=(d, h)) * 0.1).astype(np.float32),
+        (rng.normal(size=(ke, h)) * 0.1).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.normal(size=(h, h)) * 0.1).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.normal(size=(h,)) * 0.1).astype(np.float32),
+        np.float32(0.0),
+    )
+
+
+def vmem_estimate(spec: SchemaSpec, block_b: int) -> dict:
+    """Per-grid-step VMEM residency for the BlockSpec in scorer_kernel."""
+    d, ke, h = spec.dense_dim, spec.extra_dim, HIDDEN
+    f = 4  # f32 bytes
+    tile = block_b * d * f + block_b * ke * f  # C tile + E tile
+    weights = (2 * d * h + ke * h + 3 * h + h * h) * f + d * f  # + q
+    out = block_b * f
+    total = tile + weights + out
+    return {
+        "tile_bytes": tile,
+        "weights_bytes": weights,
+        "total_bytes": total,
+        "fits_double_buffered": 2 * tile + weights + out < VMEM_BYTES,
+        # Arithmetic intensity: FLOPs per byte of streamed candidate tile.
+        "flops_per_cand_byte": (2 * (2 * d + ke) * h + 2 * h * h + 2 * h)
+        / ((d + ke) * f),
+        "mxu_util_bound": h / 128.0,  # contraction width H vs 128x128 MXU
+    }
+
+
+def main() -> None:
+    spec = ARXIV
+    print(f"schema={spec.name} d={spec.dense_dim} ke={spec.extra_dim} H={HIDDEN}")
+    print(f"{'B':>6} {'block':>6} {'steps':>6} {'ms/call':>9} {'tileKiB':>8} "
+          f"{'2xbuf?':>7} {'AI':>6} {'MXUcap':>7}")
+    for b in (128, 512, 2048):
+        args = make_args(spec, b)
+        for block in (32, 128, 512, 2048):
+            if block > b:
+                continue
+            f = jax.jit(lambda *a, blk=block: pallas_score(*a, block_b=blk))
+            f(*args).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(10):
+                f(*args).block_until_ready()
+            dt = (time.perf_counter() - t0) / 10
+            est = vmem_estimate(spec, block)
+            print(
+                f"{b:>6} {block:>6} {b // block:>6} {dt * 1e3:>9.2f} "
+                f"{est['tile_bytes'] / 1024:>8.0f} "
+                f"{str(est['fits_double_buffered']):>7} "
+                f"{est['flops_per_cand_byte']:>6.1f} "
+                f"{est['mxu_util_bound']:>6.1%}"
+            )
+
+
+if __name__ == "__main__":
+    main()

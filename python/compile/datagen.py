@@ -1,0 +1,139 @@
+"""Synthetic training data for the pairwise similarity model.
+
+Mirrors the generative family of ``rust/src/data/synthetic.rs`` (the
+cross-language contract is the *distribution*, not bitwise identity — the
+offline-trained model must generalize to the Rust-generated serving data,
+which it does because both draw from the same family):
+
+- clusters with lognormal sizes; hierarchical centers (n_clusters/5 parent
+  topics, cluster center = parent + 0.6*N(0,I)) so cross-cluster similarity
+  is graded; unit-normalized Gaussian embeddings around the centers (noise
+  sigma 0.55 / 0.5);
+- arxiv_like: cluster base year in [1995, 2023] + N(0, 3);
+- products_like: 3-12 tokens from a 40-token cluster pool + 2-8 Zipf(1.1)
+  tokens from a global 2000-token popular pool (the junk mega-buckets that
+  Filter-P exists to ban).
+
+Training pairs: positives are same-cluster pairs, negatives are
+cross-cluster pairs, balanced 50/50, with LABEL_NOISE of labels flipped —
+production Grale trains on noisy weak labels, and the noise floor keeps the
+model calibrated (graded scores) instead of saturating at 0/1, which is
+what gives the paper-like edge-weight distributions. Features are computed
+with the same formulas as rust/src/scorer/featurize.rs (golden-tested in
+tests/test_featurize_contract.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile.model import ARXIV, PRODUCTS, SchemaSpec
+
+SCALAR_SCALE = 10.0  # rust scorer::featurize::SCALAR_SCALE
+
+# Fraction of training labels flipped (weak-label noise floor).
+LABEL_NOISE = 0.1
+
+
+def make_dataset(spec: SchemaSpec, n_points: int, seed: int):
+    """Returns (dense [n,d], extras_raw, cluster [n]).
+
+    extras_raw: for arxiv, years [n]; for products, a list of token sets.
+    """
+    rng = np.random.default_rng(seed)
+    d = spec.dense_dim
+    n_clusters = max(4, n_points // 200 if spec.name == "arxiv_like" else n_points // 150)
+
+    weights = rng.lognormal(0.0, 1.0, size=n_clusters)
+    sizes = np.floor(weights / weights.sum() * n_points).astype(int)
+    while sizes.sum() < n_points:
+        sizes[rng.integers(0, n_clusters)] += 1
+
+    n_parents = max(1, n_clusters // 5)
+    parents = rng.normal(size=(n_parents, d))
+    centers = parents[np.arange(n_clusters) % n_parents] + 0.6 * rng.normal(
+        size=(n_clusters, d)
+    )
+    noise = 0.55 if spec.name == "arxiv_like" else 0.5
+    base_years = 1995 + rng.integers(0, 29, size=n_clusters)
+
+    dense, clusters = [], []
+    years, token_sets = [], []
+    for c, size in enumerate(sizes):
+        x = centers[c][None, :] + noise * rng.normal(size=(size, d))
+        x = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+        dense.append(x)
+        clusters.extend([c] * size)
+        if spec.name == "arxiv_like":
+            y = np.clip(base_years[c] + 3.0 * rng.normal(size=size), 1995, 2023)
+            years.extend(y.tolist())
+        else:
+            pool = 1_000_000 + c * 1000 + np.arange(40)
+            for _ in range(size):
+                n_tok = rng.integers(3, 13)
+                toks = set(rng.choice(pool, size=min(n_tok, 40), replace=False).tolist())
+                n_pop = rng.integers(2, 9)
+                for _ in range(n_pop):
+                    # Zipf-ish rank over the 2000-token popular pool.
+                    r = min(int(rng.zipf(1.1)), 2000)
+                    toks.add(r)
+                token_sets.append(toks)
+    dense = np.concatenate(dense, axis=0).astype(np.float32)
+    clusters = np.asarray(clusters)
+    if spec.name == "arxiv_like":
+        return dense, np.asarray(years, np.float32), clusters
+    return dense, token_sets, clusters
+
+
+def pair_extras(spec: SchemaSpec, extras_raw, i: int, j: int) -> list[float]:
+    """Extra features for a pair — same formulas as the rust featurizer."""
+    if spec.name == "arxiv_like":
+        return [abs(float(extras_raw[i]) - float(extras_raw[j])) / SCALAR_SCALE]
+    a, b = extras_raw[i], extras_raw[j]
+    inter = len(a & b)
+    union = len(a | b)
+    jaccard = inter / union if union else 0.0
+    return [jaccard, float(np.log1p(inter))]
+
+
+def make_pairs(spec: SchemaSpec, n_pairs: int, seed: int, n_points: int = 4000):
+    """Balanced labeled pairs: returns (phi [n,D], labels [n]).
+
+    phi layout matches kernels.ref.phi: [q*c, |q-c|, extras].
+    """
+    dense, extras_raw, clusters = make_dataset(spec, n_points, seed)
+    rng = np.random.default_rng(seed + 1)
+    n = len(clusters)
+    by_cluster: dict[int, np.ndarray] = {
+        c: np.flatnonzero(clusters == c) for c in np.unique(clusters)
+    }
+    multi = [c for c, idx in by_cluster.items() if len(idx) >= 2]
+
+    feats = np.empty((n_pairs, spec.input_dim), np.float32)
+    labels = np.empty(n_pairs, np.float32)
+    for row in range(n_pairs):
+        positive = row % 2 == 0
+        if positive:
+            c = multi[rng.integers(0, len(multi))]
+            i, j = rng.choice(by_cluster[c], size=2, replace=False)
+        else:
+            while True:
+                i, j = rng.integers(0, n, size=2)
+                if clusters[i] != clusters[j]:
+                    break
+        qi, cj = dense[i], dense[j]
+        ex = pair_extras(spec, extras_raw, int(i), int(j))
+        feats[row, : spec.dense_dim] = qi * cj
+        feats[row, spec.dense_dim : 2 * spec.dense_dim] = np.abs(qi - cj)
+        feats[row, 2 * spec.dense_dim :] = ex
+        label = 1.0 if positive else 0.0
+        if rng.random() < LABEL_NOISE:
+            label = 1.0 - label
+        labels[row] = label
+    return feats, labels
+
+
+if __name__ == "__main__":
+    for spec in (ARXIV, PRODUCTS):
+        x, y = make_pairs(spec, 1000, 0)
+        print(spec.name, x.shape, y.mean())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the scorer kernel — the CORE correctness signal.
+
+``ref_score`` materializes phi explicitly and applies the MLP with plain
+jax.numpy ops; pytest asserts the Pallas kernel matches it to float32
+tolerance across a hypothesis sweep of shapes. It is also the apply
+function used by training (``train.py``) so the trained weights are, by
+construction, weights for exactly this computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def phi(q, c, e):
+    """Materialized pairwise features: [B, 2d + ke].
+
+    q: [d]; c: [B, d]; e: [B, ke].
+    """
+    prod = c * q[None, :]
+    diff = jnp.abs(c - q[None, :])
+    return jnp.concatenate([prod, diff, e], axis=1)
+
+
+def mlp_apply(x, w1, b1, w2, b2, w3, b3):
+    """score = sigmoid(relu(relu(x @ W1 + b1) @ W2 + b2) @ w3 + b3).
+
+    x: [B, D]; w1: [D, H]; w2: [H, H]; w3: [H]; b3 scalar.
+    """
+    z1 = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    z2 = jnp.maximum(z1 @ w2 + b2[None, :], 0.0)
+    return jax.nn.sigmoid(z2 @ w3 + b3)
+
+
+def mlp_logits(x, w1, b1, w2, b2, w3, b3):
+    """Pre-sigmoid logits (numerically stable BCE in training)."""
+    z1 = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    z2 = jnp.maximum(z1 @ w2 + b2[None, :], 0.0)
+    return z2 @ w3 + b3
+
+
+def ref_score(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3):
+    """Same signature as ``pallas_score`` with split W1 blocks."""
+    w1 = jnp.concatenate([w1p, w1d, w1e], axis=0)
+    x = phi(q.astype(jnp.float32), c.astype(jnp.float32), e.astype(jnp.float32))
+    return mlp_apply(
+        x,
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+        w3.astype(jnp.float32),
+        jnp.asarray(b3, jnp.float32).reshape(()),
+    )

@@ -1,0 +1,138 @@
+"""L1: fused pairwise-featurize + 2-layer-MLP Pallas kernel.
+
+The similarity scorer is Dynamic GUS's only dense-compute hot spot: for each
+neighborhood query, the retrieved candidate set (ScaNN-NN rows) is scored
+against the query point by the paper's model (a 2-layer MLP, 10 hidden units
+per layer, over pairwise features).
+
+The pairwise feature vector is
+
+    phi(q, c) = [ q * c, |q - c|, extras ]          (width 2*d + ke)
+
+This kernel never materializes phi in HBM: each grid step loads one
+``(BLOCK_B, d)`` tile of candidates into VMEM, forms the product/abs-diff
+terms in registers, and contracts them directly against the row-blocks of
+W1 (W1p for the product block, W1d for the difference block, W1e for the
+extras) — a 2x HBM-traffic saving over materializing the ``(B, 2d+ke)``
+feature matrix at d=128. The MLP weights (~11 KiB at H=10) stay resident in
+VMEM across all grid steps.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the matmuls use
+``preferred_element_type=float32`` so they lower onto the MXU; the candidate
+tile is the unit of HBM->VMEM streaming expressed via BlockSpec (the role
+threadblock tiling would play in a CUDA formulation). ``interpret=True`` is
+mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret-mode lowering produces plain HLO that both pytest and the Rust
+runtime run bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of candidates processed per grid step. 32 divides every AOT batch
+# variant (32/128/512/2048) and keeps the VMEM footprint tiny (32*128 floats
+# = 16 KiB for the candidate tile at d=128).
+BLOCK_B = 32
+
+
+def _scorer_kernel(
+    q_ref,
+    c_ref,
+    e_ref,
+    w1p_ref,
+    w1d_ref,
+    w1e_ref,
+    b1_ref,
+    w2_ref,
+    b2_ref,
+    w3_ref,
+    b3_ref,
+    o_ref,
+):
+    """One grid step: score BLOCK_B candidates against the query."""
+    q = q_ref[...]  # [d]
+    c = c_ref[...]  # [BLOCK_B, d]
+    e = e_ref[...]  # [BLOCK_B, ke]
+
+    prod = c * q[None, :]
+    diff = jnp.abs(c - q[None, :])
+
+    # z1 = phi @ W1 + b1, computed blockwise so phi never exists.
+    z1 = (
+        jnp.dot(prod, w1p_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(diff, w1d_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(e, w1e_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :]
+    )
+    z1 = jnp.maximum(z1, 0.0)
+    z2 = (
+        jnp.dot(z1, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...][None, :]
+    )
+    z2 = jnp.maximum(z2, 0.0)
+    logit = jnp.dot(z2, w3_ref[...], preferred_element_type=jnp.float32) + b3_ref[0]
+    o_ref[...] = jax.nn.sigmoid(logit)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def pallas_score(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3, *, block_b=BLOCK_B):
+    """Score a batch of candidates against a query point.
+
+    Args:
+      q:   [d]      query dense features.
+      c:   [B, d]   candidate dense features; B % block_b == 0.
+      e:   [B, ke]  per-pair extra features (tokens/scalar channels).
+      w1p: [d, H]   W1 rows for the product block.
+      w1d: [d, H]   W1 rows for the |difference| block.
+      w1e: [ke, H]  W1 rows for the extras block.
+      b1:  [H]; w2: [H, H]; b2: [H]; w3: [H]; b3: [] or [1].
+
+    Returns:
+      [B] similarity scores in (0, 1).
+    """
+    b, d = c.shape
+    ke = e.shape[1]
+    h = b1.shape[0]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    b3v = jnp.reshape(b3, (1,)).astype(jnp.float32)
+
+    grid = (b // block_b,)
+    full = lambda *dims: pl.BlockSpec(dims, lambda i: tuple(0 for _ in dims))
+    return pl.pallas_call(
+        _scorer_kernel,
+        grid=grid,
+        in_specs=[
+            full(d),  # q broadcast to every step
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # candidate tile
+            pl.BlockSpec((block_b, ke), lambda i: (i, 0)),  # extras tile
+            full(d, h),
+            full(d, h),
+            full(ke, h),
+            full(h),
+            full(h, h),
+            full(h),
+            full(h),
+            full(1),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        q.astype(jnp.float32),
+        c.astype(jnp.float32),
+        e.astype(jnp.float32),
+        w1p.astype(jnp.float32),
+        w1d.astype(jnp.float32),
+        w1e.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+        w3.astype(jnp.float32),
+        b3v,
+    )

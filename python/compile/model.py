@@ -1,0 +1,115 @@
+"""L2: the JAX scorer model (build-time only; never on the request path).
+
+Defines the schema contracts shared with the Rust coordinator (dense dim
+``d``, extras width ``ke``, hidden width H=10 — the paper's architecture)
+and the jittable inference graph ``scorer_fn`` that calls the L1 Pallas
+kernel. ``aot.py`` lowers this graph to HLO text per (schema, batch)
+variant; the Rust runtime executes it via PJRT.
+
+Graph signature (frozen contract with rust/src/scorer/xla.rs):
+
+    scorer(q[d], C[B,d], E[B,ke],
+           w1p[d,H], w1d[d,H], w1e[ke,H], b1[H], w2[H,H], b2[H], w3[H], b3[])
+      -> scores[B]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.scorer_kernel import pallas_score
+
+# The paper's model: two layers, 10 hidden units per layer.
+HIDDEN = 10
+
+# Candidate batch variants compiled AOT (must match BATCH_SIZES in
+# rust/src/scorer/xla.rs).
+BATCH_SIZES = (32, 128, 512, 2048)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemaSpec:
+    """Scorer-relevant shape info for one dataset schema."""
+
+    name: str
+    dense_dim: int
+    extra_dim: int
+
+    @property
+    def input_dim(self) -> int:
+        return 2 * self.dense_dim + self.extra_dim
+
+
+# Mirrors rust features::Schema::{arxiv_like, products_like} and
+# scorer::featurize extras: arxiv = scalar year (1 extra); products =
+# co-purchase tokens (jaccard + log-intersection = 2 extras).
+ARXIV = SchemaSpec(name="arxiv_like", dense_dim=128, extra_dim=1)
+PRODUCTS = SchemaSpec(name="products_like", dense_dim=100, extra_dim=2)
+SCHEMAS = {s.name: s for s in (ARXIV, PRODUCTS)}
+
+
+def scorer_fn(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3, *, block_b=None):
+    """The L2 graph: delegates the fused compute to the Pallas kernel."""
+    kwargs = {} if block_b is None else {"block_b": block_b}
+    return (pallas_score(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3, **kwargs),)
+
+
+def scorer_ref_fn(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3):
+    """Reference graph (materialized phi) — for tests and ablations."""
+    return (ref.ref_score(q, c, e, w1p, w1d, w1e, b1, w2, b2, w3, b3),)
+
+
+def example_args(spec: SchemaSpec, batch: int, hidden: int = HIDDEN):
+    """ShapeDtypeStructs for lowering one variant."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    d, ke = spec.dense_dim, spec.extra_dim
+    return (
+        sd((d,), f32),  # q
+        sd((batch, d), f32),  # C
+        sd((batch, ke), f32),  # E
+        sd((d, hidden), f32),  # w1p
+        sd((d, hidden), f32),  # w1d
+        sd((ke, hidden), f32),  # w1e
+        sd((hidden,), f32),  # b1
+        sd((hidden, hidden), f32),  # w2
+        sd((hidden,), f32),  # b2
+        sd((hidden,), f32),  # w3
+        sd((), f32),  # b3
+    )
+
+
+def split_w1(w1, spec: SchemaSpec):
+    """Split a full [D, H] W1 into the kernel's (w1p, w1d, w1e) blocks."""
+    d, ke = spec.dense_dim, spec.extra_dim
+    assert w1.shape[0] == 2 * d + ke, (w1.shape, spec)
+    return w1[:d], w1[d : 2 * d], w1[2 * d :]
+
+
+def weights_to_json(spec: SchemaSpec, w1, b1, w2, b2, w3, b3) -> str:
+    """Serialize weights in the format rust's MlpWeights::load expects.
+
+    W1 is stored row-major as [input_dim][hidden] — numpy C-order flatten of
+    a [D, H] array matches.
+    """
+    import json
+
+    def flat(a):
+        return [float(x) for x in jnp.asarray(a, jnp.float32).reshape(-1)]
+
+    return json.dumps(
+        {
+            "input_dim": spec.input_dim,
+            "hidden": int(b1.shape[0]),
+            "w1": flat(w1),
+            "b1": flat(b1),
+            "w2": flat(w2),
+            "b2": flat(b2),
+            "w3": flat(w3),
+            "b3": float(jnp.asarray(b3).reshape(())),
+        }
+    )

@@ -1,0 +1,137 @@
+"""Offline model training (§4.3: "train a model ... in the same fashion as
+in Grale", periodically retrainable).
+
+Trains the paper's 2-layer/10-unit MLP on balanced synthetic similarity
+pairs with Adam + binary cross-entropy, and exports weights as JSON for the
+Rust runtime (``artifacts/weights_<schema>.json``). Runs once at `make
+artifacts`; a production deployment would re-run it periodically and hot-
+swap the JSON (the Rust side passes weights as execute-time buffers, so no
+HLO recompilation is needed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datagen
+from compile.kernels import ref
+from compile.model import HIDDEN, SCHEMAS, SchemaSpec, weights_to_json
+
+
+def init_params(input_dim: int, hidden: int, seed: int):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s1 = (2.0 / (input_dim + hidden)) ** 0.5
+    s2 = (2.0 / (2 * hidden)) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (input_dim, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, hidden)) * s2,
+        "b2": jnp.zeros((hidden,)),
+        "w3": jax.random.normal(k3, (hidden,)) * s2,
+        "b3": jnp.zeros(()),
+    }
+
+
+def bce_loss(params, x, y):
+    logits = ref.mlp_logits(
+        x, params["w1"], params["b1"], params["w2"], params["b2"],
+        params["w3"], params["b3"],
+    )
+    # Stable BCE-with-logits.
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def adam_step(params, m, v, t, x, y, lr=1e-3):
+    b1m, b2m, eps = 0.9, 0.999, 1e-8
+    loss, grads = jax.value_and_grad(bce_loss)(params, x, y)
+    m = jax.tree.map(lambda a, g: b1m * a + (1 - b1m) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2m * a + (1 - b2m) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1m**t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2m**t), v)
+    params = jax.tree.map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat
+    )
+    return params, m, v, loss
+
+
+def train(
+    spec: SchemaSpec,
+    n_pairs: int = 40_000,
+    steps: int = 1500,
+    batch: int = 256,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    """Train and return (params, metrics)."""
+    x, y = datagen.make_pairs(spec, n_pairs, seed)
+    n_train = int(0.9 * len(y))
+    x_train, y_train = x[:n_train], y[:n_train]
+    x_val, y_val = x[n_train:], y[n_train:]
+
+    params = init_params(spec.input_dim, HIDDEN, seed)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed + 7)
+    loss = None
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n_train, size=batch)
+        params, m, v, loss = adam_step(params, m, v, t, x_train[idx], y_train[idx])
+        if verbose and t % 500 == 0:
+            print(f"  [{spec.name}] step {t}: loss {float(loss):.4f}")
+
+    scores = ref.mlp_apply(
+        x_val, params["w1"], params["b1"], params["w2"], params["b2"],
+        params["w3"], params["b3"],
+    )
+    acc = float(jnp.mean((scores > 0.5) == (y_val > 0.5)))
+    auc = _auc(np.asarray(scores), np.asarray(y_val))
+    metrics = {"val_acc": acc, "val_auc": auc, "final_loss": float(loss)}
+    if verbose:
+        print(f"  [{spec.name}] val acc {acc:.3f}, val auc {auc:.3f}")
+    return params, metrics
+
+
+def _auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels > 0.5
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--pairs", type=int, default=40_000)
+    ap.add_argument("--schemas", default="arxiv_like,products_like")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in args.schemas.split(","):
+        spec = SCHEMAS[name]
+        print(f"training {name} (D={spec.input_dim}, H={HIDDEN})")
+        params, metrics = train(spec, n_pairs=args.pairs, steps=args.steps)
+        assert metrics["val_auc"] > 0.75, f"{name}: model failed to learn: {metrics}"
+        path = os.path.join(args.out_dir, f"weights_{name}.json")
+        with open(path, "w") as f:
+            f.write(
+                weights_to_json(
+                    spec, params["w1"], params["b1"], params["w2"],
+                    params["b2"], params["w3"], params["b3"],
+                )
+            )
+        print(f"wrote {path} ({metrics})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Allow running pytest from the repo root: make `compile.*` importable.
+sys.path.insert(0, os.path.dirname(__file__))

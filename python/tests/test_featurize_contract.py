@@ -1,0 +1,64 @@
+"""Cross-language featurizer contract.
+
+These GOLDEN values are mirrored bit-for-bit in
+rust/src/scorer/featurize.rs::tests::{golden_arxiv_like,
+golden_products_like}. If either side changes, both tests fail — the
+trained weights are only valid for this exact feature map.
+"""
+
+import math
+
+import numpy as np
+
+from compile.datagen import SCALAR_SCALE, pair_extras
+from compile.kernels.ref import phi
+from compile.model import ARXIV, PRODUCTS, SchemaSpec
+
+
+def test_scalar_scale_matches_rust():
+    assert SCALAR_SCALE == 10.0
+
+
+def test_golden_arxiv_like():
+    q = np.array([1.0, -2.0, 0.5], np.float32)
+    c = np.array([2.0, 1.0, 0.5], np.float32)
+    years = np.array([2020.0, 2015.0], np.float32)
+    ex = pair_extras(
+        SchemaSpec(name="arxiv_like", dense_dim=3, extra_dim=1), years, 0, 1
+    )
+    full = phi(q, c[None, :], np.array([ex], np.float32))[0]
+    np.testing.assert_allclose(
+        np.asarray(full),
+        # q*c               |q-c|           |Δyear|/10
+        [2.0, -2.0, 0.25, 1.0, 3.0, 0.0, 0.5],
+        rtol=1e-6,
+    )
+
+
+def test_golden_products_like():
+    q = np.array([1.0, 0.0], np.float32)
+    c = np.array([0.5, 0.5], np.float32)
+    token_sets = [{10, 20, 30}, {20, 30, 40, 50}]
+    ex = pair_extras(
+        SchemaSpec(name="products_like", dense_dim=2, extra_dim=2), token_sets, 0, 1
+    )
+    full = np.asarray(phi(q, c[None, :], np.array([ex], np.float32))[0])
+    np.testing.assert_allclose(full[:4], [0.5, 0.0, 0.5, 0.5], rtol=1e-6)
+    assert abs(full[4] - 0.4) < 1e-6  # jaccard 2/5
+    assert abs(full[5] - math.log(3.0)) < 1e-6  # ln(1 + |∩|)
+
+
+def test_token_edge_cases_match_rust():
+    spec = SchemaSpec(name="products_like", dense_dim=1, extra_dim=2)
+    # Both empty: jaccard 0, log1p(0) = 0 (no NaN).
+    assert pair_extras(spec, [set(), set()], 0, 1) == [0.0, 0.0]
+    # Identical sets: jaccard 1.
+    ex = pair_extras(spec, [{5}, {5}], 0, 1)
+    assert abs(ex[0] - 1.0) < 1e-9
+
+
+def test_input_dims_match_rust_schemas():
+    # rust Schema::arxiv_like(128) -> featurizer input_dim 257;
+    # products_like(100) -> 202.
+    assert ARXIV.input_dim == 257
+    assert PRODUCTS.input_dim == 202

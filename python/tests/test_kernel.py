@@ -1,0 +1,122 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (d, ke, B, H) and value distributions; every case
+asserts allclose between ``pallas_score`` and ``ref_score``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_score
+from compile.kernels.scorer_kernel import pallas_score
+
+
+def make_case(rng, d, ke, b, h, scale=1.0):
+    return dict(
+        q=(rng.normal(size=(d,)) * scale).astype(np.float32),
+        c=(rng.normal(size=(b, d)) * scale).astype(np.float32),
+        e=(rng.normal(size=(b, ke)) * scale).astype(np.float32),
+        w1p=(rng.normal(size=(d, h)) * 0.2).astype(np.float32),
+        w1d=(rng.normal(size=(d, h)) * 0.2).astype(np.float32),
+        w1e=(rng.normal(size=(ke, h)) * 0.2).astype(np.float32),
+        b1=(rng.normal(size=(h,)) * 0.1).astype(np.float32),
+        w2=(rng.normal(size=(h, h)) * 0.2).astype(np.float32),
+        b2=(rng.normal(size=(h,)) * 0.1).astype(np.float32),
+        w3=(rng.normal(size=(h,)) * 0.2).astype(np.float32),
+        b3=np.float32(rng.normal() * 0.1),
+    )
+
+
+def assert_kernel_matches_ref(case, block_b=None):
+    kwargs = {} if block_b is None else {"block_b": block_b}
+    got = np.asarray(pallas_score(**case, **kwargs))
+    want = np.asarray(ref_score(**case))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert got.shape == (case["c"].shape[0],)
+    assert np.all((got >= 0.0) & (got <= 1.0))
+
+
+def test_basic_batch32():
+    rng = np.random.default_rng(0)
+    assert_kernel_matches_ref(make_case(rng, d=16, ke=2, b=32, h=10))
+
+
+def test_paper_shapes_arxiv():
+    # d=128, ke=1: the arxiv_like AOT variant shape.
+    rng = np.random.default_rng(1)
+    assert_kernel_matches_ref(make_case(rng, d=128, ke=1, b=128, h=10))
+
+
+def test_paper_shapes_products():
+    rng = np.random.default_rng(2)
+    assert_kernel_matches_ref(make_case(rng, d=100, ke=2, b=64, h=10))
+
+
+def test_multi_tile_grid():
+    # B spans several grid steps; each tile must land in the right slice.
+    rng = np.random.default_rng(3)
+    case = make_case(rng, d=8, ke=1, b=160, h=10)
+    assert_kernel_matches_ref(case)
+    # Tiles are independent: permuting candidates permutes scores.
+    perm = rng.permutation(160)
+    case2 = dict(case)
+    case2["c"] = case["c"][perm]
+    case2["e"] = case["e"][perm]
+    got = np.asarray(pallas_score(**case2))
+    want = np.asarray(pallas_score(**case))[perm]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_block_b_equals_batch():
+    rng = np.random.default_rng(4)
+    assert_kernel_matches_ref(make_case(rng, d=4, ke=3, b=16, h=6), block_b=16)
+
+
+def test_non_divisible_batch_rejected():
+    rng = np.random.default_rng(5)
+    case = make_case(rng, d=4, ke=1, b=33, h=4)
+    with pytest.raises(ValueError, match="not a multiple"):
+        pallas_score(**case)
+
+
+def test_large_magnitudes_saturate_not_nan():
+    rng = np.random.default_rng(6)
+    case = make_case(rng, d=8, ke=1, b=32, h=10, scale=100.0)
+    got = np.asarray(pallas_score(**case))
+    assert np.all(np.isfinite(got))
+    assert_kernel_matches_ref(case)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=96),
+    ke=st.integers(min_value=1, max_value=4),
+    tiles=st.integers(min_value=1, max_value=4),
+    h=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_shape_sweep(d, ke, tiles, h, seed):
+    """Property: kernel == oracle for arbitrary shapes (B multiple of 8)."""
+    rng = np.random.default_rng(seed)
+    b = 8 * tiles
+    case = make_case(rng, d=d, ke=ke, b=b, h=h)
+    kwargs = {"block_b": 8}
+    got = np.asarray(pallas_score(**case, **kwargs))
+    want = np.asarray(ref_score(**case))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    dtype=st.sampled_from([np.float32, np.float64, np.float16]),
+)
+def test_hypothesis_dtype_coercion(seed, dtype):
+    """Inputs in other float dtypes are coerced to f32 inside the kernel."""
+    rng = np.random.default_rng(seed)
+    case = make_case(rng, d=8, ke=1, b=32, h=8)
+    cast = {k: (np.asarray(v, dtype) if k in ("q", "c", "e") else v) for k, v in case.items()}
+    got = np.asarray(pallas_score(**cast))
+    want = np.asarray(ref_score(**cast))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,126 @@
+"""L2 model-level tests: graph shapes, lowering, weight export."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import (
+    ARXIV,
+    BATCH_SIZES,
+    HIDDEN,
+    PRODUCTS,
+    SCHEMAS,
+    example_args,
+    scorer_fn,
+    scorer_ref_fn,
+    split_w1,
+    weights_to_json,
+)
+
+
+def rand_weights(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    d, ke, h = spec.dense_dim, spec.extra_dim, HIDDEN
+    w1 = (rng.normal(size=(spec.input_dim, h)) * 0.1).astype(np.float32)
+    return dict(
+        w1=w1,
+        b1=np.zeros(h, np.float32),
+        w2=(rng.normal(size=(h, h)) * 0.1).astype(np.float32),
+        b2=np.zeros(h, np.float32),
+        w3=(rng.normal(size=(h,)) * 0.1).astype(np.float32),
+        b3=np.float32(0.0),
+    )
+
+
+def test_schema_specs():
+    assert ARXIV.input_dim == 2 * 128 + 1
+    assert PRODUCTS.input_dim == 2 * 100 + 2
+    assert set(SCHEMAS) == {"arxiv_like", "products_like"}
+
+
+def test_split_w1_blocks():
+    w = rand_weights(ARXIV)
+    w1p, w1d, w1e = split_w1(w["w1"], ARXIV)
+    assert w1p.shape == (128, HIDDEN)
+    assert w1d.shape == (128, HIDDEN)
+    assert w1e.shape == (1, HIDDEN)
+    np.testing.assert_array_equal(np.concatenate([w1p, w1d, w1e]), w["w1"])
+
+
+def test_scorer_fn_matches_ref_fn():
+    spec = PRODUCTS
+    rng = np.random.default_rng(1)
+    w = rand_weights(spec, 1)
+    w1p, w1d, w1e = split_w1(w["w1"], spec)
+    b = 32
+    args = (
+        rng.normal(size=(spec.dense_dim,)).astype(np.float32),
+        rng.normal(size=(b, spec.dense_dim)).astype(np.float32),
+        rng.normal(size=(b, spec.extra_dim)).astype(np.float32),
+        w1p, w1d, w1e, w["b1"], w["w2"], w["b2"], w["w3"], w["b3"],
+    )
+    (got,) = scorer_fn(*args)
+    (want,) = scorer_ref_fn(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_example_args_shapes():
+    args = example_args(ARXIV, 128)
+    assert args[0].shape == (128,)
+    assert args[1].shape == (128, 128)
+    assert args[2].shape == (128, 1)
+    assert args[-1].shape == ()
+
+
+@pytest.mark.parametrize("spec", [ARXIV, PRODUCTS])
+def test_lowering_produces_hlo_text(spec):
+    text = aot.lower_variant(spec, BATCH_SIZES[0])
+    assert text.startswith("HloModule")
+    # The entry layout mentions the candidate matrix shape.
+    assert f"f32[{BATCH_SIZES[0]},{spec.dense_dim}]" in text
+    # Output is a 1-tuple of [B] scores.
+    assert f"(f32[{BATCH_SIZES[0]}]" in text
+
+
+def test_lowered_graph_is_executable_and_matches_ref():
+    # Compile the lowered stablehlo via jax and compare numerics — guards
+    # against lowering-time constant folding bugs.
+    spec = ARXIV
+    rng = np.random.default_rng(2)
+    w = rand_weights(spec, 2)
+    w1p, w1d, w1e = split_w1(w["w1"], spec)
+    b = 32
+    args = (
+        rng.normal(size=(spec.dense_dim,)).astype(np.float32),
+        rng.normal(size=(b, spec.dense_dim)).astype(np.float32),
+        rng.normal(size=(b, spec.extra_dim)).astype(np.float32),
+        w1p, w1d, w1e, w["b1"], w["w2"], w["b2"], w["w3"], w["b3"],
+    )
+    compiled = jax.jit(scorer_fn).lower(*example_args(spec, b)).compile()
+    (got,) = compiled(*args)
+    (want,) = scorer_ref_fn(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_weights_json_contract():
+    spec = PRODUCTS
+    w = rand_weights(spec, 3)
+    text = weights_to_json(spec, w["w1"], w["b1"], w["w2"], w["b2"], w["w3"], w["b3"])
+    j = json.loads(text)
+    assert j["input_dim"] == spec.input_dim
+    assert j["hidden"] == HIDDEN
+    assert len(j["w1"]) == spec.input_dim * HIDDEN
+    assert len(j["w2"]) == HIDDEN * HIDDEN
+    # Row-major: first HIDDEN entries are w1[0, :].
+    np.testing.assert_allclose(j["w1"][:HIDDEN], w["w1"][0], rtol=1e-6)
+    assert isinstance(j["b3"], float)
+
+
+def test_batch_sizes_match_rust_contract():
+    # rust/src/scorer/xla.rs BATCH_SIZES
+    assert BATCH_SIZES == (32, 128, 512, 2048)
+    assert all(b % 32 == 0 for b in BATCH_SIZES)

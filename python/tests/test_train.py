@@ -1,0 +1,59 @@
+"""Training pipeline sanity: data generation + quick training run."""
+
+import numpy as np
+
+from compile import datagen, train
+from compile.model import ARXIV, PRODUCTS
+
+
+def test_make_dataset_shapes():
+    dense, years, clusters = datagen.make_dataset(ARXIV, 500, seed=0)
+    assert dense.shape == (500, 128)
+    assert years.shape == (500,)
+    assert clusters.shape == (500,)
+    # Unit-norm embeddings.
+    norms = np.linalg.norm(dense, axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+    assert years.min() >= 1995 and years.max() <= 2023
+
+
+def test_make_dataset_products_tokens():
+    dense, token_sets, clusters = datagen.make_dataset(PRODUCTS, 400, seed=1)
+    assert dense.shape == (400, 100)
+    assert len(token_sets) == 400
+    assert all(len(t) >= 3 for t in token_sets)
+    # Popular (global) tokens 1..50 appear somewhere.
+    popular = sum(1 for t in token_sets for tok in t if tok <= 2000)
+    assert popular > 50
+
+
+def test_make_pairs_balanced_and_noisy():
+    x, y = datagen.make_pairs(ARXIV, 2000, seed=2, n_points=1000)
+    assert x.shape == (2000, ARXIV.input_dim)
+    # Balanced up to the 10% label noise.
+    assert 0.4 < y.mean() < 0.6
+    assert np.isfinite(x).all()
+
+
+def test_quick_training_learns():
+    params, metrics = train.train(
+        ARXIV, n_pairs=4000, steps=200, batch=128, seed=0, verbose=False
+    )
+    # 10% label noise caps achievable accuracy near 0.9.
+    assert metrics["val_auc"] > 0.7, metrics
+    assert metrics["final_loss"] < 0.69, "no better than chance"
+    assert params["w1"].shape == (ARXIV.input_dim, 10)
+
+
+def test_training_deterministic():
+    _, m1 = train.train(ARXIV, n_pairs=2000, steps=50, seed=3, verbose=False)
+    _, m2 = train.train(ARXIV, n_pairs=2000, steps=50, seed=3, verbose=False)
+    assert m1["final_loss"] == m2["final_loss"]
+
+
+def test_auc_helper():
+    scores = np.array([0.9, 0.8, 0.3, 0.1])
+    labels = np.array([1.0, 1.0, 0.0, 0.0])
+    assert train._auc(scores, labels) == 1.0
+    assert abs(train._auc(scores, labels[::-1]) - 0.0) < 1e-9
+    assert train._auc(scores, np.ones(4)) == 0.5

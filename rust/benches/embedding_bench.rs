@@ -1,0 +1,57 @@
+//! Embedding-generation benchmarks: §3.2's latency-critical component
+//! ("it is crucial for this component to have a very low latency").
+//!
+//! The paper claims embedding computation takes "a few milliseconds" and
+//! is negligible; these benches verify that for both schemas, with and
+//! without IDF/filter tables.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::config::GusConfig;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::embed::EmbeddingGenerator;
+use dynamic_gus::lsh::Bucketer;
+use dynamic_gus::preprocess;
+
+fn main() {
+    let mut b = Bencher::new();
+    for (name, ds) in [
+        ("arxiv_like", SyntheticConfig::arxiv_like(5_000, 0xe1).generate()),
+        ("products_like", SyntheticConfig::products_like(5_000, 0xe2).generate()),
+    ] {
+        let bucketer = Bucketer::with_defaults(&ds.schema, 0xe7a1);
+        let plain = EmbeddingGenerator::plain(Bucketer::with_defaults(&ds.schema, 0xe7a1));
+        let mut i = 0usize;
+        b.bench(&format!("embed/plain/{name}"), || {
+            i = (i + 1) % ds.points.len();
+            plain.embed(&ds.points[i])
+        });
+
+        // With IDF + filter tables (the production configuration).
+        let cfg = GusConfig { idf_s: 1_000_000, filter_p: 10.0, ..GusConfig::default() };
+        let pre = preprocess::preprocess(&bucketer, &ds.points, &cfg, 8);
+        let full = preprocess::build_generator(
+            Bucketer::with_defaults(&ds.schema, 0xe7a1),
+            &pre,
+        );
+        b.bench(&format!("embed/idf+filter/{name}"), || {
+            i = (i + 1) % ds.points.len();
+            full.embed(&ds.points[i])
+        });
+
+        // Bucketing alone (the LSH cost).
+        let mut buf = Vec::new();
+        b.bench(&format!("embed/buckets_only/{name}"), || {
+            i = (i + 1) % ds.points.len();
+            bucketer.buckets_into(&ds.points[i], &mut buf);
+            buf.len()
+        });
+
+        // Offline preprocessing throughput (per 5k corpus).
+        b.bench(&format!("preprocess/5k_corpus/{name}"), || {
+            preprocess::preprocess(&bucketer, &ds.points, &cfg, 8)
+                .stats
+                .num_buckets()
+        });
+    }
+    b.dump_json("embedding_bench");
+}

@@ -1,0 +1,33 @@
+//! Grale-baseline cost benchmarks: the offline build the paper's dynamic
+//! system replaces. One row per (Bucket-S, Top-K) cell at bench scale —
+//! demonstrates that Grale's cost does NOT drop with Top-K (the paper's
+//! §5.1 third-experiment observation), while GUS's does with ScaNN-NN.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::eval::offline::{grale_run, gus_offline, GusOfflineParams};
+
+fn main() {
+    let mut b = Bencher::new();
+    // Small corpus: each iteration is a FULL graph build.
+    let ds = SyntheticConfig::arxiv_like(2_000, 0x6b).generate();
+    for &bucket_s in &[10usize, 100, 1000] {
+        b.bench(&format!("grale/full_build/bucket_s={bucket_s}"), || {
+            grale_run(&ds, Some(bucket_s), None, 8).scored_pairs
+        });
+    }
+    // Top-K does not reduce Grale's cost...
+    for &k in &[10usize, 100] {
+        b.bench(&format!("grale/full_build/bucket_s=100/top_k={k}"), || {
+            grale_run(&ds, Some(100), Some(k), 8).scored_pairs
+        });
+    }
+    // ...but ScaNN-NN does reduce GUS's.
+    for &nn in &[10usize, 100] {
+        b.bench(&format!("gus/offline_build/nn={nn}"), || {
+            gus_offline(&ds, GusOfflineParams { nn, idf_s: 0, filter_p: 10.0 }, 8)
+                .directed_edges
+        });
+    }
+    b.dump_json("grale_bench");
+}

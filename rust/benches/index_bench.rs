@@ -1,0 +1,64 @@
+//! Index micro-benchmarks: the ScaNN-substitute's retrieval hot path.
+//!
+//! These isolate step 3 of the Neighborhood RPC (candidate retrieval) from
+//! embedding and scoring, across ScaNN-NN and corpus scale — the knobs
+//! Fig. 9 shows dominate latency.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::embed::EmbeddingGenerator;
+use dynamic_gus::index::{QueryParams, QueryScratch, SparseAnn};
+use dynamic_gus::lsh::Bucketer;
+use dynamic_gus::sparse::SparseVec;
+
+fn build(n: usize, seed: u64) -> (SparseAnn, Vec<SparseVec>) {
+    let ds = SyntheticConfig::arxiv_like(n, seed).generate();
+    let generator =
+        EmbeddingGenerator::plain(Bucketer::with_defaults(&ds.schema, 0xe7a1));
+    let mut index = SparseAnn::new();
+    let mut embeddings = Vec::with_capacity(n);
+    for p in &ds.points {
+        let e = generator.embed(p);
+        index.upsert(p.id, e.clone());
+        embeddings.push(e);
+    }
+    (index, embeddings)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    for &n in &[5_000usize, 20_000] {
+        let (mut index, embeddings) = build(n, 0xb1);
+        let mut scratch = QueryScratch::default();
+        let mut qi = 0usize;
+        for &k in &[10usize, 100, 1000] {
+            b.bench(&format!("index/top_k/n={n}/k={k}"), || {
+                qi = (qi + 7919) % embeddings.len();
+                index.top_k(
+                    &embeddings[qi],
+                    k,
+                    QueryParams { exclude: Some(qi as u64), max_postings: 0 },
+                    &mut scratch,
+                )
+            });
+        }
+        b.bench(&format!("index/threshold_all_negative/n={n}"), || {
+            qi = (qi + 7919) % embeddings.len();
+            index.threshold(
+                &embeddings[qi],
+                -f32::MIN_POSITIVE,
+                QueryParams::default(),
+                &mut scratch,
+            )
+        });
+        // Mutation path.
+        let mut victim = 0u64;
+        b.bench(&format!("index/upsert_remove_cycle/n={n}"), || {
+            victim = (victim + 13) % n as u64;
+            let e = embeddings[victim as usize].clone();
+            index.remove(victim);
+            index.upsert(victim, e)
+        });
+    }
+    b.dump_json("index_bench");
+}

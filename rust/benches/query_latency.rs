@@ -1,0 +1,41 @@
+//! End-to-end query latency (the Fig. 9 measurement, as a bench target).
+//!
+//! Runs the whole Neighborhood RPC pipeline — embed → retrieve → score →
+//! sort — through the live coordinator, per (ScaNN-NN, Filter-P) cell, at
+//! the default experiment scale divided by 4 to keep `cargo bench` fast.
+//! The full-scale version is `experiments fig9`.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+
+fn main() {
+    let mut b = Bencher::new();
+    for (name, ds) in [
+        ("arxiv_like", SyntheticConfig::arxiv_like(5_000, 0x91).generate()),
+        ("products_like", SyntheticConfig::products_like(7_500, 0x92).generate()),
+    ] {
+        for &filter_p in &[0.0f64, 10.0] {
+            for &nn in &[10usize, 100, 1000] {
+                let cfg = GusConfig {
+                    scann_nn: nn,
+                    filter_p,
+                    scorer: ScorerKind::Auto,
+                    ..GusConfig::default()
+                };
+                let gus =
+                    DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 8).unwrap();
+                let mut qi = 0usize;
+                b.bench(
+                    &format!("query/{name}/nn={nn}/filter_p={filter_p}"),
+                    || {
+                        qi = (qi + 7919) % ds.points.len();
+                        gus.query(&ds.points[qi], nn).unwrap()
+                    },
+                );
+            }
+        }
+    }
+    b.dump_json("query_latency");
+}

@@ -1,0 +1,47 @@
+//! Similarity-scorer benchmarks: native vs XLA/PJRT path, across candidate
+//! batch sizes (the ScaNN-NN axis). The XLA rows exist only after
+//! `make artifacts`.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::features::Point;
+use dynamic_gus::runtime::artifacts_dir;
+use dynamic_gus::scorer::{
+    MlpWeights, NativeScorer, PairFeaturizer, PairScorer, XlaScorer,
+};
+
+fn main() {
+    let mut b = Bencher::new();
+    for (name, ds) in [
+        ("arxiv_like", SyntheticConfig::arxiv_like(3_000, 0x5c).generate()),
+        ("products_like", SyntheticConfig::products_like(3_000, 0x5d).generate()),
+    ] {
+        let featurizer = PairFeaturizer::new(&ds.schema);
+        let weights_path = XlaScorer::weights_path(&artifacts_dir(), &ds.schema.name);
+        let weights = if weights_path.exists() {
+            MlpWeights::load(&weights_path).unwrap()
+        } else {
+            MlpWeights::random(featurizer.input_dim(), dynamic_gus::scorer::HIDDEN, 1)
+        };
+        let native = NativeScorer::new(featurizer.clone(), weights.clone());
+        let q = &ds.points[0];
+        for &nn in &[10usize, 100, 1000] {
+            let cands: Vec<&Point> = ds.points[1..=nn].iter().collect();
+            b.bench(&format!("scorer/native/{name}/batch={nn}"), || {
+                native.score_batch(q, &cands)
+            });
+        }
+        if XlaScorer::artifacts_available(&artifacts_dir(), &ds.schema.name) {
+            let xla = XlaScorer::with_weights(featurizer, &artifacts_dir(), weights).unwrap();
+            for &nn in &[10usize, 100, 1000] {
+                let cands: Vec<&Point> = ds.points[1..=nn].iter().collect();
+                b.bench(&format!("scorer/xla/{name}/batch={nn}"), || {
+                    xla.score_batch(q, &cands)
+                });
+            }
+        } else {
+            eprintln!("[scorer_bench] no artifacts for {name}: skipping XLA rows");
+        }
+    }
+    b.dump_json("scorer_bench");
+}

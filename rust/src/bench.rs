@@ -1,0 +1,192 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`): each
+//! bench is a plain `main` that registers closures with a [`Bencher`].
+//! The harness warms up, then runs timed batches until a wall-clock budget
+//! or iteration cap is reached, and reports mean/median/p95/p99 per
+//! iteration plus throughput. Results can also be dumped as JSON for
+//! EXPERIMENTS.md bookkeeping.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// One benchmark's collected statistics (per-iteration latencies in ns).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    fn from_samples(name: &str, mut ns: Vec<f64>) -> BenchResult {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len().max(1);
+        let pct = |p: f64| ns[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        BenchResult {
+            name: name.to_string(),
+            iters: ns.len(),
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: ns.first().copied().unwrap_or(0.0),
+            max_ns: ns.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("p99_ns", Json::num(self.p99_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("max_ns", Json::num(self.max_ns)),
+        ])
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark registry + runner.
+pub struct Bencher {
+    /// Wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// Max timed iterations per benchmark.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup_iters: usize,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        // `cargo bench -- <filter>` passes the filter as a positional arg.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        // Keep each bench target's total runtime modest: many targets.
+        let budget_ms = std::env::var("GUS_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500u64);
+        Bencher {
+            budget: Duration::from_millis(budget_ms),
+            max_iters: 100_000,
+            warmup_iters: 3,
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Run a benchmark: `f` is one iteration; its return value is
+    /// black-boxed so the work is not optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult::from_samples(name, samples);
+        println!(
+            "{:<58} {:>10}/iter  (median {:>10}, p95 {:>10}, p99 {:>10}, n={})",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns),
+            fmt_ns(r.p99_ns),
+            r.iters
+        );
+        self.results.push(r);
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as a JSON file under `results/bench/` (best effort).
+    pub fn dump_json(&self, target: &str) {
+        let _ = std::fs::create_dir_all("results/bench");
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench/{target}.json");
+        if std::fs::write(&path, arr.dump()).is_ok() {
+            println!("[bench] wrote {path}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut b = Bencher::new();
+        b.budget = Duration::from_millis(30);
+        b.warmup_iters = 1;
+        b.filter = None;
+        b.bench("noop", || 1 + 1);
+        let r = &b.results()[0];
+        assert!(r.iters > 10);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher::new();
+        b.budget = Duration::from_millis(5);
+        b.filter = Some("yes".to_string());
+        b.bench("no-match", || 0);
+        b.bench("yes-match", || 0);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].name, "yes-match");
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

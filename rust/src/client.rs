@@ -1,0 +1,105 @@
+//! Blocking TCP client for the Dynamic GUS RPC protocol.
+//!
+//! One connection, pipelined line-at-a-time; see [`crate::server`] for the
+//! wire format.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::ScoredNeighbor;
+use crate::features::Point;
+use crate::util::json::Json;
+
+/// A connected client.
+pub struct GusClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl GusClient {
+    pub fn connect(addr: &str) -> Result<GusClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(GusClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed connection (backpressure refusal?)");
+        }
+        let resp = Json::parse(line.trim())
+            .map_err(|e| anyhow!("bad response: {e}: {line}"))?;
+        if resp.get("ok").as_bool() != Some(true) {
+            bail!(
+                "rpc error: {}",
+                resp.get("error").as_str().unwrap_or("<unknown>")
+            );
+        }
+        Ok(resp)
+    }
+
+    /// Insert or update a point; returns true if it existed.
+    pub fn insert(&mut self, p: &Point) -> Result<bool> {
+        let req = Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())]);
+        Ok(self.call(&req)?.get("existed").as_bool().unwrap_or(false))
+    }
+
+    /// Delete a point; returns true if it existed.
+    pub fn delete(&mut self, id: u64) -> Result<bool> {
+        let req = Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))]);
+        Ok(self.call(&req)?.get("existed").as_bool().unwrap_or(false))
+    }
+
+    /// Neighborhood of a (new or known) point.
+    pub fn query(&mut self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("query")),
+            ("point", p.to_json()),
+            ("k", Json::num(k as f64)),
+        ]);
+        Self::parse_neighbors(&self.call(&req)?)
+    }
+
+    /// Neighborhood of a known point by id.
+    pub fn query_id(&mut self, id: u64, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("query_id")),
+            ("id", Json::u64(id)),
+            ("k", Json::num(k as f64)),
+        ]);
+        Self::parse_neighbors(&self.call(&req)?)
+    }
+
+    /// Service stats.
+    pub fn stats(&mut self) -> Result<Json> {
+        let req = Json::obj(vec![("op", Json::str("stats"))]);
+        Ok(self.call(&req)?.get("stats").clone())
+    }
+
+    fn parse_neighbors(resp: &Json) -> Result<Vec<ScoredNeighbor>> {
+        resp.get("neighbors")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing neighbors"))?
+            .iter()
+            .map(|n| {
+                Ok(ScoredNeighbor {
+                    id: n.get("id").as_u64().ok_or_else(|| anyhow!("bad id"))?,
+                    score: n.get("score").as_f32().unwrap_or(0.0),
+                    dot: n.get("dot").as_f32().unwrap_or(0.0),
+                })
+            })
+            .collect()
+    }
+}
+
+// End-to-end client/server tests live in rust/tests/server_test.rs.

@@ -1,0 +1,187 @@
+//! Service configuration.
+//!
+//! Every knob of the paper's evaluation is a field here: `ScaNN-NN`
+//! (`scann_nn`), `IDF-S` (`idf_s`), `Filter-P` (`filter_p`), plus the
+//! deployment knobs (shards, scorer backend). Configs parse from JSON
+//! files and/or CLI flags; [`GusConfig::apply_args`] layers CLI overrides
+//! on top of file values so experiment sweeps stay one-liners.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Scoring backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerKind {
+    /// AOT XLA executable via PJRT (production path; needs `artifacts/`).
+    Xla,
+    /// Pure-Rust model (oracle / fallback).
+    Native,
+    /// Xla if artifacts exist, else Native.
+    Auto,
+}
+
+impl ScorerKind {
+    pub fn parse(s: &str) -> Result<ScorerKind, String> {
+        match s {
+            "xla" => Ok(ScorerKind::Xla),
+            "native" => Ok(ScorerKind::Native),
+            "auto" => Ok(ScorerKind::Auto),
+            other => Err(format!("unknown scorer '{other}' (xla|native|auto)")),
+        }
+    }
+}
+
+/// Dynamic GUS service configuration.
+#[derive(Debug, Clone)]
+pub struct GusConfig {
+    /// Default number of neighbors retrieved from the ANN index (ScaNN-NN).
+    pub scann_nn: usize,
+    /// IDF table size; 0 disables IDF (paper's IDF-S).
+    pub idf_s: usize,
+    /// Percentage of overly popular buckets filtered (paper's Filter-P).
+    pub filter_p: f64,
+    /// Index shards (1 = the paper's sequential setting).
+    pub n_shards: usize,
+    /// Scoring backend.
+    pub scorer: ScorerKind,
+    /// LSH seed (bucketing must be identical across restarts).
+    pub lsh_seed: u64,
+    /// Optional posting-scan budget (0 = exact; emulates ScaNN's
+    /// approximation dial for ablations).
+    pub max_postings: usize,
+}
+
+impl Default for GusConfig {
+    fn default() -> Self {
+        GusConfig {
+            scann_nn: 10,
+            idf_s: 0,
+            filter_p: 10.0,
+            n_shards: 1,
+            scorer: ScorerKind::Auto,
+            lsh_seed: 0x677573,
+            max_postings: 0,
+        }
+    }
+}
+
+impl GusConfig {
+    /// Layer CLI overrides on top of this config.
+    pub fn apply_args(mut self, args: &Args) -> Result<GusConfig, String> {
+        self.scann_nn = args.get_usize("scann-nn", self.scann_nn);
+        self.idf_s = args.get_usize("idf-s", self.idf_s);
+        self.filter_p = args.get_f64("filter-p", self.filter_p);
+        self.n_shards = args.get_usize("shards", self.n_shards);
+        self.lsh_seed = args.get_u64("lsh-seed", self.lsh_seed);
+        self.max_postings = args.get_usize("max-postings", self.max_postings);
+        if let Some(s) = args.opt_str("scorer") {
+            self.scorer = ScorerKind::parse(&s)?;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.scann_nn == 0 {
+            return Err("scann-nn must be >= 1".into());
+        }
+        if !(0.0..=100.0).contains(&self.filter_p) {
+            return Err("filter-p must be in [0, 100]".into());
+        }
+        if self.n_shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scann_nn", Json::num(self.scann_nn as f64)),
+            ("idf_s", Json::num(self.idf_s as f64)),
+            ("filter_p", Json::num(self.filter_p)),
+            ("n_shards", Json::num(self.n_shards as f64)),
+            (
+                "scorer",
+                Json::str(match self.scorer {
+                    ScorerKind::Xla => "xla",
+                    ScorerKind::Native => "native",
+                    ScorerKind::Auto => "auto",
+                }),
+            ),
+            ("lsh_seed", Json::u64(self.lsh_seed)),
+            ("max_postings", Json::num(self.max_postings as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GusConfig, String> {
+        let d = GusConfig::default();
+        let cfg = GusConfig {
+            scann_nn: j.get("scann_nn").as_usize().unwrap_or(d.scann_nn),
+            idf_s: j.get("idf_s").as_usize().unwrap_or(d.idf_s),
+            filter_p: j.get("filter_p").as_f64().unwrap_or(d.filter_p),
+            n_shards: j.get("n_shards").as_usize().unwrap_or(d.n_shards),
+            scorer: match j.get("scorer").as_str() {
+                Some(s) => ScorerKind::parse(s)?,
+                None => d.scorer,
+            },
+            lsh_seed: j.get("lsh_seed").as_u64().unwrap_or(d.lsh_seed),
+            max_postings: j.get("max_postings").as_usize().unwrap_or(d.max_postings),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON config file.
+    pub fn load(path: &std::path::Path) -> Result<GusConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        GusConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse_from(
+            ["--scann-nn=100", "--idf-s=1000000", "--filter-p=10", "--scorer=native"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.scann_nn, 100);
+        assert_eq!(cfg.idf_s, 1_000_000);
+        assert_eq!(cfg.filter_p, 10.0);
+        assert_eq!(cfg.scorer, ScorerKind::Native);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = GusConfig::default();
+        cfg.scann_nn = 1000;
+        cfg.scorer = ScorerKind::Xla;
+        let j = cfg.to_json().dump();
+        let back = GusConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.scann_nn, 1000);
+        assert_eq!(back.scorer, ScorerKind::Xla);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let args =
+            Args::parse_from(["--filter-p=150".to_string()]).unwrap();
+        assert!(GusConfig::default().apply_args(&args).is_err());
+        let args = Args::parse_from(["--scann-nn=0".to_string()]).unwrap();
+        assert!(GusConfig::default().apply_args(&args).is_err());
+        assert!(ScorerKind::parse("gpu").is_err());
+    }
+}

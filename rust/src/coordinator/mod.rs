@@ -1,0 +1,483 @@
+//! The Dynamic GUS coordinator — the serving core (§3).
+//!
+//! Owns the three components of the paper's architecture and wires them
+//! into the two RPC families:
+//!
+//! - **Mutation RPCs** (§3.3.1–3.3.2): insert/update computes the sparse
+//!   embedding with the Embedding Generator and upserts `(p, M(p))` into
+//!   the ANN index (plus the feature store, which the scorer needs to score
+//!   retrieved candidates); delete removes the point. Both return an
+//!   acknowledgment.
+//! - **Neighborhood RPC** (§3.3.3): embed the (new or known) query point,
+//!   retrieve the ScaNN-NN closest points `Q` from the index, score `p`
+//!   against each `q ∈ Q` with the model, and return `(Q, S)`.
+//!
+//! Everything on the request path is local in-memory state: the bucketer,
+//! the IDF/filter tables, the posting lists, the feature store, and the
+//! (pre-compiled) scorer. Freshness is immediate: a mutation is visible to
+//! the next query the moment its ack returns ([`staleness`] tracks the
+//! mutation-to-visibility interval the paper bounds by "a few seconds" at
+//! the 99th percentile; here it is the mutation latency itself).
+
+pub mod ingest;
+pub mod snapshot;
+pub mod staleness;
+pub mod store;
+
+use std::sync::RwLock;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{GusConfig, ScorerKind};
+use crate::embed::EmbeddingGenerator;
+use crate::features::{Point, PointId, Schema};
+use crate::index::sharded::ShardedIndex;
+use crate::index::QueryParams;
+use crate::lsh::Bucketer;
+use crate::metrics::{Counters, LatencyHistogram};
+use crate::preprocess;
+use crate::scorer::{MlpWeights, NativeScorer, PairFeaturizer, PairScorer, XlaScorer, HIDDEN};
+use crate::util::json::Json;
+
+pub use ingest::{IngestPipeline, Mutation};
+pub use staleness::StalenessTracker;
+pub use store::FeatureStore;
+
+/// A scored neighbor returned by the Neighborhood RPC: the model similarity
+/// plus the embedding-space dot (diagnostics / ablations).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoredNeighbor {
+    pub id: PointId,
+    pub score: f32,
+    pub dot: f32,
+}
+
+/// Service metrics bundle.
+#[derive(Default)]
+pub struct GusMetrics {
+    pub mutation_latency: LatencyHistogram,
+    pub query_latency: LatencyHistogram,
+    pub counters: Counters,
+    pub staleness: StalenessTracker,
+}
+
+/// The Dynamic GUS service.
+pub struct DynamicGus {
+    schema: Schema,
+    config: GusConfig,
+    embedder: RwLock<EmbeddingGenerator>,
+    index: ShardedIndex,
+    store: FeatureStore,
+    scorer: Box<dyn PairScorer>,
+    pub metrics: GusMetrics,
+}
+
+impl DynamicGus {
+    /// Boot the service: offline preprocessing over the initial corpus
+    /// (§4.3), index warm-up, scorer selection.
+    pub fn bootstrap(
+        schema: Schema,
+        config: GusConfig,
+        initial: &[Point],
+        threads: usize,
+    ) -> Result<DynamicGus> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        let scorer = Self::make_scorer(&schema, config.scorer)?;
+        Self::bootstrap_with_scorer(schema, config, initial, threads, scorer)
+    }
+
+    /// Boot with an explicit scorer (tests, custom models).
+    pub fn bootstrap_with_scorer(
+        schema: Schema,
+        config: GusConfig,
+        initial: &[Point],
+        threads: usize,
+        scorer: Box<dyn PairScorer>,
+    ) -> Result<DynamicGus> {
+        let bucketer = Bucketer::with_defaults(&schema, config.lsh_seed);
+        let pre = preprocess::preprocess(&bucketer, initial, &config, threads);
+        let embedder = preprocess::build_generator(bucketer, &pre);
+
+        let gus = DynamicGus {
+            schema,
+            config: config.clone(),
+            embedder: RwLock::new(embedder),
+            index: ShardedIndex::new(config.n_shards),
+            store: FeatureStore::new(config.n_shards.max(4)),
+            scorer,
+            metrics: GusMetrics::default(),
+        };
+        for p in initial {
+            gus.apply_insert(p.clone())?;
+        }
+        // Bootstrapping inserts are not request-path mutations: reset.
+        gus.metrics.mutation_latency.reset();
+        gus.metrics
+            .counters
+            .inserts
+            .store(0, std::sync::atomic::Ordering::Relaxed);
+        Ok(gus)
+    }
+
+    /// Choose the scorer backend (Auto prefers XLA artifacts).
+    pub fn make_scorer(schema: &Schema, kind: ScorerKind) -> Result<Box<dyn PairScorer>> {
+        let featurizer = PairFeaturizer::new(schema);
+        let dir = crate::runtime::artifacts_dir();
+        let use_xla = match kind {
+            ScorerKind::Xla => true,
+            ScorerKind::Native => false,
+            ScorerKind::Auto => XlaScorer::artifacts_available(&dir, &schema.name),
+        };
+        if use_xla {
+            Ok(Box::new(XlaScorer::load(featurizer, &dir)?))
+        } else {
+            let weights_path = XlaScorer::weights_path(&dir, &schema.name);
+            let weights = if weights_path.exists() {
+                MlpWeights::load(&weights_path)?
+            } else {
+                // No trained artifact: deterministic random weights keep the
+                // pipeline runnable (quality figures then use `native`
+                // trained weights from `make artifacts`).
+                MlpWeights::random(featurizer.input_dim(), HIDDEN, 0x5eed)
+            };
+            Ok(Box::new(NativeScorer::new(featurizer, weights)))
+        }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn config(&self) -> &GusConfig {
+        &self.config
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, id: PointId) -> bool {
+        self.store.get(id).is_some()
+    }
+
+    fn apply_insert(&self, p: Point) -> Result<bool> {
+        self.schema.validate(&p).map_err(|e| anyhow!("{e}"))?;
+        let embedding = { self.embedder.read().unwrap().embed(&p) };
+        let id = p.id;
+        self.store.put(p);
+        Ok(self.index.upsert(id, embedding))
+    }
+
+    /// Mutation RPC: insert or update (§3.3.1). Returns `true` if the point
+    /// already existed (update).
+    pub fn insert(&self, p: Point) -> Result<bool> {
+        let t0 = Instant::now();
+        let existed = self.apply_insert(p)?;
+        let dt = t0.elapsed();
+        self.metrics.mutation_latency.record(dt);
+        self.metrics.staleness.record_visible(dt);
+        use std::sync::atomic::Ordering::Relaxed;
+        if existed {
+            self.metrics.counters.updates.fetch_add(1, Relaxed);
+        } else {
+            self.metrics.counters.inserts.fetch_add(1, Relaxed);
+        }
+        Ok(existed)
+    }
+
+    /// Mutation RPC: delete (§3.3.2). Returns `true` if present.
+    pub fn delete(&self, id: PointId) -> Result<bool> {
+        let t0 = Instant::now();
+        let in_index = self.index.remove(id);
+        let in_store = self.store.remove(id).is_some();
+        let dt = t0.elapsed();
+        self.metrics.mutation_latency.record(dt);
+        self.metrics.staleness.record_visible(dt);
+        self.metrics
+            .counters
+            .deletes
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        debug_assert_eq!(in_index, in_store);
+        Ok(in_index)
+    }
+
+    /// Neighborhood RPC (§3.3.3) for a point given by features (may be new
+    /// or existing). Returns scored neighbors sorted by model score desc.
+    pub fn query(&self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let t0 = Instant::now();
+        self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        let embedding = { self.embedder.read().unwrap().embed(p) };
+        let params = QueryParams {
+            exclude: Some(p.id),
+            max_postings: self.config.max_postings,
+        };
+        let neighbors = self.index.top_k(&embedding, k, params);
+        use std::sync::atomic::Ordering::Relaxed;
+        self.metrics
+            .counters
+            .candidates_retrieved
+            .fetch_add(neighbors.len() as u64, Relaxed);
+
+        // Fetch candidate features and score.
+        let cand_points: Vec<std::sync::Arc<Point>> = neighbors
+            .iter()
+            .filter_map(|n| self.store.get(n.id))
+            .collect();
+        let cand_refs: Vec<&Point> = cand_points.iter().map(|a| a.as_ref()).collect();
+        let scores = self.scorer.score_batch(p, &cand_refs);
+        self.metrics
+            .counters
+            .pairs_scored
+            .fetch_add(scores.len() as u64, Relaxed);
+
+        let mut out: Vec<ScoredNeighbor> = neighbors
+            .iter()
+            .zip(&scores)
+            .map(|(n, &score)| ScoredNeighbor { id: n.id, score, dot: n.dot })
+            .collect();
+        out.sort_unstable_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        self.metrics.query_latency.record(t0.elapsed());
+        self.metrics.counters.queries.fetch_add(1, Relaxed);
+        Ok(out)
+    }
+
+    /// Neighborhood RPC for an existing point by id.
+    pub fn query_by_id(&self, id: PointId, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let p = self
+            .store
+            .get(id)
+            .ok_or_else(|| anyhow!("unknown point {id}"))?;
+        self.query(&p, k)
+    }
+
+    /// Periodic reload (§4.3): recompute IDF/filter tables from the current
+    /// corpus and swap them in without downtime. Re-embeds and re-indexes
+    /// all points (embeddings depend on the tables).
+    pub fn refresh_tables(&self, threads: usize) -> Result<()> {
+        let snapshot = self.store.snapshot();
+        let points: Vec<Point> = snapshot.iter().map(|a| (**a).clone()).collect();
+        let bucketer = Bucketer::with_defaults(&self.schema, self.config.lsh_seed);
+        let pre = preprocess::preprocess(&bucketer, &points, &self.config, threads);
+        {
+            let mut em = self.embedder.write().unwrap();
+            em.reload(pre.idf.clone(), pre.filter.clone());
+        }
+        // Re-index under the new embeddings.
+        for p in points {
+            let embedding = { self.embedder.read().unwrap().embed(&p) };
+            self.index.upsert(p.id, embedding);
+        }
+        Ok(())
+    }
+
+    /// Snapshot of all stored points (persistence, periodic refresh).
+    pub fn store_snapshot(&self) -> Vec<std::sync::Arc<Point>> {
+        self.store.snapshot()
+    }
+
+    /// Current IDF/filter tables (persistence).
+    pub fn tables(&self) -> (Option<crate::embed::IdfTable>, Option<crate::embed::PopularFilter>) {
+        let e = self.embedder.read().unwrap();
+        (e.idf().cloned(), e.filter().cloned())
+    }
+
+    /// Install explicit tables (snapshot restore) and re-index every stored
+    /// point under the new embeddings.
+    pub fn set_tables(
+        &self,
+        idf: Option<crate::embed::IdfTable>,
+        filter: Option<crate::embed::PopularFilter>,
+    ) -> Result<()> {
+        {
+            let mut em = self.embedder.write().unwrap();
+            em.reload(idf, filter);
+        }
+        for p in self.store.snapshot() {
+            let embedding = { self.embedder.read().unwrap().embed(&p) };
+            self.index.upsert(p.id, embedding);
+        }
+        Ok(())
+    }
+
+    /// Service stats as JSON (the `stats` RPC).
+    pub fn stats_json(&self) -> Json {
+        let ix = self.index.stats();
+        Json::obj(vec![
+            ("points", Json::num(ix.live_points as f64)),
+            ("live_postings", Json::num(ix.live_postings as f64)),
+            ("dead_postings", Json::num(ix.dead_postings as f64)),
+            ("index_bytes", Json::num(ix.approx_bytes as f64)),
+            ("rss_bytes", Json::num(crate::metrics::current_rss_bytes() as f64)),
+            ("peak_rss_bytes", Json::num(crate::metrics::peak_rss_bytes() as f64)),
+            ("counters", self.metrics.counters.to_json()),
+            ("mutation_latency", self.metrics.mutation_latency.summary().to_json()),
+            ("query_latency", self.metrics.query_latency.summary().to_json()),
+            ("staleness_p99_ms", Json::num(self.metrics.staleness.p99_ms())),
+            ("config", self.config.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn boot(n: usize) -> (DynamicGus, crate::data::Dataset) {
+        let ds = SyntheticConfig::arxiv_like(n, 21).generate();
+        let config = GusConfig {
+            scorer: ScorerKind::Native,
+            filter_p: 0.0,
+            ..GusConfig::default()
+        };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points, 2).unwrap();
+        (gus, ds)
+    }
+
+    #[test]
+    fn bootstrap_indexes_all() {
+        let (gus, ds) = boot(300);
+        assert_eq!(gus.len(), 300);
+        assert!(gus.contains(ds.points[5].id));
+    }
+
+    #[test]
+    fn query_returns_cluster_mates() {
+        let (gus, ds) = boot(400);
+        // Query an existing point: its neighbors should mostly share its
+        // cluster (the whole point of the system).
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for qi in 0..30 {
+            let res = gus.query(&ds.points[qi], 10).unwrap();
+            for n in res {
+                assert_ne!(n.id, ds.points[qi].id, "self returned");
+                let ni = n.id as usize;
+                total += 1;
+                if ds.cluster_of[ni] == ds.cluster_of[qi] {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(total > 0);
+        assert!(
+            hits as f64 / total as f64 > 0.7,
+            "cluster precision too low: {hits}/{total}"
+        );
+    }
+
+    #[test]
+    fn insert_then_visible_to_query() {
+        let (gus, ds) = boot(200);
+        // A brand-new point duplicated from an existing one must surface it.
+        let mut newp = ds.points[0].clone();
+        newp.id = 999_999;
+        gus.insert(newp.clone()).unwrap();
+        assert_eq!(gus.len(), 201);
+        let res = gus.query(&ds.points[0], 5).unwrap();
+        assert!(
+            res.iter().any(|n| n.id == 999_999),
+            "fresh insert not visible: {res:?}"
+        );
+    }
+
+    #[test]
+    fn delete_disappears() {
+        let (gus, ds) = boot(200);
+        let victim = ds.points[1].id;
+        assert!(gus.delete(victim).unwrap());
+        assert!(!gus.delete(victim).unwrap());
+        assert!(!gus.contains(victim));
+        for qi in 0..20 {
+            let res = gus.query(&ds.points[qi], 20).unwrap();
+            assert!(res.iter().all(|n| n.id != victim));
+        }
+    }
+
+    #[test]
+    fn update_moves_point() {
+        let (gus, ds) = boot(200);
+        // Move point 0 onto point 100's features: they become neighbors.
+        let mut moved = ds.points[100].clone();
+        moved.id = ds.points[0].id;
+        let existed = gus.insert(moved).unwrap();
+        assert!(existed);
+        assert_eq!(gus.len(), 200);
+        let res = gus.query(&ds.points[100], 5).unwrap();
+        assert!(res.iter().any(|n| n.id == ds.points[0].id), "{res:?}");
+    }
+
+    #[test]
+    fn query_by_id_and_unknown() {
+        let (gus, ds) = boot(150);
+        let res = gus.query_by_id(ds.points[3].id, 5).unwrap();
+        assert!(!res.is_empty());
+        assert!(gus.query_by_id(123_456_789, 5).is_err());
+    }
+
+    #[test]
+    fn scores_sorted_desc() {
+        let (gus, ds) = boot(200);
+        let res = gus.query(&ds.points[0], 10).unwrap();
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn schema_violation_rejected() {
+        let (gus, _) = boot(100);
+        let bad = Point::new(1, vec![]);
+        assert!(gus.insert(bad.clone()).is_err());
+        assert!(gus.query(&bad, 5).is_err());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (gus, ds) = boot(100);
+        let _ = gus.query(&ds.points[0], 5);
+        let _ = gus.query(&ds.points[1], 5);
+        let mut p = ds.points[0].clone();
+        p.id = 77_777;
+        let _ = gus.insert(p);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(gus.metrics.counters.queries.load(Relaxed), 2);
+        assert_eq!(gus.metrics.counters.inserts.load(Relaxed), 1);
+        assert_eq!(gus.metrics.query_latency.count(), 2);
+        let js = gus.stats_json();
+        assert_eq!(js.get("points").as_usize(), Some(101));
+    }
+
+    #[test]
+    fn refresh_tables_keeps_service_consistent() {
+        let ds = SyntheticConfig::products_like(300, 22).generate();
+        let config = GusConfig {
+            scorer: ScorerKind::Native,
+            filter_p: 10.0,
+            idf_s: 1000,
+            ..GusConfig::default()
+        };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points, 2).unwrap();
+        let before = gus.query(&ds.points[0], 10).unwrap();
+        gus.refresh_tables(2).unwrap();
+        assert_eq!(gus.len(), 300);
+        let after = gus.query(&ds.points[0], 10).unwrap();
+        // Corpus unchanged ⇒ tables unchanged ⇒ same neighbor set.
+        let ids = |v: &[ScoredNeighbor]| {
+            let mut x: Vec<u64> = v.iter().map(|n| n.id).collect();
+            x.sort_unstable();
+            x
+        };
+        assert_eq!(ids(&before), ids(&after));
+    }
+}

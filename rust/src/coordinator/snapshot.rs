@@ -1,0 +1,167 @@
+//! Service snapshot / restore.
+//!
+//! Industrial deployments restart; §4.3's "initial set of points" is, on
+//! restart, the previous incarnation's corpus. A snapshot is the service
+//! config plus the full feature store (points JSONL — same format as
+//! `data::loader`); restore replays bootstrap: preprocessing tables and the
+//! index are recomputed deterministically from the points (the LSH seed is
+//! part of the config), so the restored service answers queries identically.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::GusConfig;
+use crate::coordinator::DynamicGus;
+use crate::data::{loader, Dataset};
+use crate::features::Schema;
+use crate::util::json::Json;
+
+/// Write `gus`'s current corpus + config under `dir/`
+/// (`snapshot.json` + `points.jsonl`).
+pub fn save(gus: &DynamicGus, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let (idf, filter) = gus.tables();
+    let meta = Json::obj(vec![
+        ("schema", Json::str(gus.schema().name.clone())),
+        (
+            "dense_dim",
+            Json::num(gus.schema().primary_dense_dim() as f64),
+        ),
+        ("config", gus.config().to_json()),
+        ("points", Json::num(gus.len() as f64)),
+        // Tables are persisted, not recomputed: the restored service must
+        // answer queries identically even though its corpus has drifted
+        // from the bootstrap corpus the tables were derived from.
+        ("idf", idf.map(|t| t.to_json()).unwrap_or(Json::Null)),
+        ("filter", filter.map(|f| f.to_json()).unwrap_or(Json::Null)),
+    ]);
+    std::fs::write(dir.join("snapshot.json"), meta.dump())
+        .with_context(|| format!("writing {}/snapshot.json", dir.display()))?;
+    let snapshot = gus.store_snapshot();
+    let ds = Dataset {
+        schema: gus.schema().clone(),
+        points: snapshot.iter().map(|p| (**p).clone()).collect(),
+        cluster_of: Vec::new(),
+    };
+    loader::save(&ds, &dir.join("points.jsonl"))?;
+    Ok(())
+}
+
+/// Restore a service from a snapshot directory.
+pub fn restore(dir: &Path, threads: usize) -> Result<DynamicGus> {
+    let meta_text = std::fs::read_to_string(dir.join("snapshot.json"))
+        .with_context(|| format!("reading {}/snapshot.json", dir.display()))?;
+    let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("snapshot.json: {e}"))?;
+    let config = GusConfig::from_json(meta.get("config"))
+        .map_err(|e| anyhow::anyhow!("snapshot config: {e}"))?;
+    let schema_name = meta
+        .get("schema")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing schema"))?;
+    let dense_dim = meta
+        .get("dense_dim")
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing dense_dim"))?;
+    let schema = match schema_name {
+        "arxiv_like" => Schema::arxiv_like(dense_dim),
+        "products_like" => Schema::products_like(dense_dim),
+        other => anyhow::bail!("unknown schema '{other}'"),
+    };
+    let ds = loader::load(&dir.join("points.jsonl"))?;
+    anyhow::ensure!(ds.schema == schema, "snapshot schema mismatch");
+    let expect = meta.get("points").as_usize().unwrap_or(ds.points.len());
+    anyhow::ensure!(
+        ds.points.len() == expect,
+        "snapshot truncated: {} of {expect} points",
+        ds.points.len()
+    );
+    let gus = DynamicGus::bootstrap(schema, config, &ds.points, threads)?;
+    // Replace the recomputed tables with the persisted ones.
+    let idf = match meta.get("idf") {
+        Json::Null => None,
+        j => Some(
+            crate::embed::IdfTable::from_json(j)
+                .ok_or_else(|| anyhow::anyhow!("snapshot: bad idf table"))?,
+        ),
+    };
+    let filter = match meta.get("filter") {
+        Json::Null => None,
+        j => Some(
+            crate::embed::PopularFilter::from_json(j)
+                .ok_or_else(|| anyhow::anyhow!("snapshot: bad filter"))?,
+        ),
+    };
+    gus.set_tables(idf, filter)?;
+    Ok(gus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScorerKind;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("gus-snapshot-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn snapshot_restore_round_trip() {
+        let ds = SyntheticConfig::arxiv_like(300, 0x5a).generate();
+        let cfg = GusConfig {
+            scorer: ScorerKind::Native,
+            filter_p: 10.0,
+            ..GusConfig::default()
+        };
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points[..250], 2).unwrap();
+        // Mutate after bootstrap so the snapshot differs from the corpus.
+        for p in &ds.points[250..] {
+            gus.insert(p.clone()).unwrap();
+        }
+        gus.delete(ds.points[0].id).unwrap();
+
+        let dir = tmpdir("roundtrip");
+        save(&gus, &dir).unwrap();
+        let restored = restore(&dir, 2).unwrap();
+        assert_eq!(restored.len(), gus.len());
+        assert!(!restored.contains(ds.points[0].id));
+        // Identical answers (same LSH seed + tables recomputed from the
+        // same corpus).
+        for qi in (1..ds.points.len()).step_by(41) {
+            assert_eq!(
+                gus.query(&ds.points[qi], 10).unwrap(),
+                restored.query(&ds.points[qi], 10).unwrap(),
+                "query {qi} differs after restore"
+            );
+        }
+    }
+
+    #[test]
+    fn restore_missing_dir_errors() {
+        assert!(restore(Path::new("/nonexistent/snap"), 1).is_err());
+    }
+
+    #[test]
+    fn restore_detects_truncation() {
+        let ds = SyntheticConfig::arxiv_like(50, 0x5b).generate();
+        let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 1).unwrap();
+        let dir = tmpdir("truncated");
+        save(&gus, &dir).unwrap();
+        // Truncate points.jsonl.
+        let path = dir.join("points.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let keep: Vec<&str> = text.lines().take(10).collect();
+        std::fs::write(&path, keep.join("\n")).unwrap();
+        let err = match restore(&dir, 1) {
+            Ok(_) => panic!("expected truncation error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("truncated"), "{err}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Feature store: the authoritative id → features map.
+//!
+//! The Neighborhood RPC needs candidate features to score retrieved points
+//! (§3.3.3 — ScaNN returns "the closest points to p (and their features)").
+//! Points are stored behind `Arc` so the query path borrows them without
+//! copying feature vectors; the store is sharded like the index to keep
+//! write contention off the query path.
+
+use std::sync::{Arc, RwLock};
+
+use crate::features::{Point, PointId};
+use crate::util::hash::{mix64, FxHashMap};
+
+/// Sharded `PointId → Arc<Point>` map.
+pub struct FeatureStore {
+    shards: Vec<RwLock<FxHashMap<PointId, Arc<Point>>>>,
+}
+
+impl FeatureStore {
+    pub fn new(n_shards: usize) -> FeatureStore {
+        assert!(n_shards >= 1);
+        FeatureStore {
+            shards: (0..n_shards)
+                .map(|_| RwLock::new(FxHashMap::default()))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, id: PointId) -> usize {
+        (mix64(id) % self.shards.len() as u64) as usize
+    }
+
+    /// Insert or replace; returns the previous value if any.
+    pub fn put(&self, p: Point) -> Option<Arc<Point>> {
+        let shard = self.shard_of(p.id);
+        self.shards[shard]
+            .write()
+            .unwrap()
+            .insert(p.id, Arc::new(p))
+    }
+
+    pub fn get(&self, id: PointId) -> Option<Arc<Point>> {
+        self.shards[self.shard_of(id)]
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+    }
+
+    pub fn remove(&self, id: PointId) -> Option<Arc<Point>> {
+        self.shards[self.shard_of(id)].write().unwrap().remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all points (periodic table refresh; offline exports).
+    pub fn snapshot(&self) -> Vec<Arc<Point>> {
+        let mut out = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            out.extend(s.read().unwrap().values().cloned());
+        }
+        out.sort_unstable_by_key(|p| p.id); // deterministic order
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::FeatureValue;
+
+    fn pt(id: u64) -> Point {
+        Point::new(id, vec![FeatureValue::Scalar(id as f32)])
+    }
+
+    #[test]
+    fn put_get_remove() {
+        let s = FeatureStore::new(4);
+        assert!(s.put(pt(1)).is_none());
+        assert!(s.put(pt(2)).is_none());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(1).unwrap().id, 1);
+        let old = s.put(pt(1)).unwrap();
+        assert_eq!(old.id, 1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.remove(1).unwrap().id, 1);
+        assert!(s.get(1).is_none());
+        assert!(s.remove(1).is_none());
+    }
+
+    #[test]
+    fn snapshot_sorted_complete() {
+        let s = FeatureStore::new(3);
+        for id in [5u64, 1, 9, 3] {
+            s.put(pt(id));
+        }
+        let snap = s.snapshot();
+        let ids: Vec<u64> = snap.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let s = Arc::new(FeatureStore::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let id = t * 1000 + i;
+                    s.put(pt(id));
+                    assert!(s.get(id).is_some());
+                    if i % 2 == 0 {
+                        s.remove(id);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 4 * 100);
+    }
+}

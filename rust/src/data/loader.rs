@@ -1,0 +1,175 @@
+//! Dataset persistence: JSONL save/load (and the OGB drop-in path).
+//!
+//! Format: one JSON object per line. First line is a header
+//! `{"schema": "arxiv_like"|"products_like", "dense_dim": d}`; every other
+//! line is a point `{"id": .., "features": [..], "cluster": ..?}` in the
+//! [`crate::features::Point::to_json`] encoding. Real OGB exports converted
+//! to this format (e.g. via a small offline script) load through the same
+//! path — see DESIGN.md's substitution table.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Dataset;
+use crate::features::{Point, Schema};
+use crate::util::json::Json;
+
+/// Save a dataset as JSONL.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let header = Json::obj(vec![
+        ("schema", Json::str(ds.schema.name.clone())),
+        ("dense_dim", Json::num(ds.schema.primary_dense_dim() as f64)),
+    ]);
+    writeln!(w, "{}", header.dump())?;
+    for (i, p) in ds.points.iter().enumerate() {
+        let mut j = p.to_json();
+        if let (Json::Obj(m), Some(&c)) = (&mut j, ds.cluster_of.get(i)) {
+            m.insert("cluster".to_string(), Json::num(c as f64));
+        }
+        writeln!(w, "{}", j.dump())?;
+    }
+    Ok(())
+}
+
+/// Load a dataset from JSONL.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow!("{}: empty file", path.display()))??;
+    let header =
+        Json::parse(&header_line).map_err(|e| anyhow!("{}: header: {e}", path.display()))?;
+    let schema_name = header
+        .get("schema")
+        .as_str()
+        .ok_or_else(|| anyhow!("header missing 'schema'"))?;
+    let dense_dim = header
+        .get("dense_dim")
+        .as_usize()
+        .ok_or_else(|| anyhow!("header missing 'dense_dim'"))?;
+    let schema = match schema_name {
+        "arxiv_like" => Schema::arxiv_like(dense_dim),
+        "products_like" => Schema::products_like(dense_dim),
+        other => bail!("unknown schema '{other}'"),
+    };
+
+    let mut points = Vec::new();
+    let mut cluster_of = Vec::new();
+    let mut any_cluster = false;
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow!("{} line {}: {e}", path.display(), lineno + 2))?;
+        let p = Point::from_json(&j)
+            .ok_or_else(|| anyhow!("{} line {}: bad point", path.display(), lineno + 2))?;
+        schema
+            .validate(&p)
+            .map_err(|e| anyhow!("{} line {}: {e}", path.display(), lineno + 2))?;
+        if let Some(c) = j.get("cluster").as_u64() {
+            cluster_of.push(c as u32);
+            any_cluster = true;
+        } else {
+            cluster_of.push(u32::MAX);
+        }
+        points.push(p);
+    }
+    Ok(Dataset {
+        schema,
+        points,
+        cluster_of: if any_cluster { cluster_of } else { Vec::new() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("gus-loader-tests");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_arxiv() {
+        let ds = SyntheticConfig::arxiv_like(50, 1).generate();
+        let path = tmpfile("arxiv.jsonl");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.points, ds.points);
+        assert_eq!(back.cluster_of, ds.cluster_of);
+        assert_eq!(back.schema, ds.schema);
+    }
+
+    #[test]
+    fn roundtrip_products() {
+        let ds = SyntheticConfig::products_like(40, 2).generate();
+        let path = tmpfile("products.jsonl");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.points, ds.points);
+        assert_eq!(back.schema.name, "products_like");
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/ds.jsonl")).is_err());
+    }
+
+    #[test]
+    fn load_rejects_schema_violation() {
+        let path = tmpfile("bad.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"schema\":\"arxiv_like\",\"dense_dim\":4}\n",
+                "{\"id\":0,\"features\":[{\"dense\":[1,2]},{\"scalar\":2020}]}\n"
+            ),
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err}").contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn load_rejects_bad_json() {
+        let path = tmpfile("badjson.jsonl");
+        std::fs::write(
+            &path,
+            "{\"schema\":\"arxiv_like\",\"dense_dim\":2}\nnot json\n",
+        )
+        .unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn cluster_labels_optional() {
+        let path = tmpfile("nocluster.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"schema\":\"arxiv_like\",\"dense_dim\":2}\n",
+                "{\"id\":0,\"features\":[{\"dense\":[1,0]},{\"scalar\":2020}]}\n"
+            ),
+        )
+        .unwrap();
+        let ds = load(&path).unwrap();
+        assert_eq!(ds.points.len(), 1);
+        assert!(ds.cluster_of.is_empty());
+    }
+}

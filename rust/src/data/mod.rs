@@ -1,0 +1,43 @@
+//! Datasets and workload traces.
+//!
+//! The paper evaluates on **ogbn-arxiv** (169,343 papers: 128-d text
+//! embedding + publication year) and **ogbn-products** (2,449,029 products:
+//! 100-d bag-of-words/PCA embedding + co-purchase list). This environment
+//! is offline, so [`synthetic`] generates clustered multimodal datasets
+//! with the same schemas and the statistical properties the evaluation
+//! depends on (latent similarity structure; heavy-tailed bucket
+//! popularity); [`loader`] reads real OGB-format exports if the user drops
+//! them under `data/ogb/` (see DESIGN.md substitution table).
+//!
+//! [`trace`] turns a dataset into the dynamic workload of §5.2: an initial
+//! corpus plus a stream of insert/update/delete/query operations.
+
+pub mod loader;
+pub mod synthetic;
+pub mod trace;
+
+use crate::features::{Point, Schema};
+
+pub use synthetic::{SyntheticConfig, SyntheticDataset};
+pub use trace::{Op, Trace, TraceConfig};
+
+/// A concrete dataset: schema + points (+ optional latent cluster labels,
+/// available for synthetic data and used by training and examples).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub schema: Schema,
+    pub points: Vec<Point>,
+    /// Latent cluster id per point (parallel to `points`); empty if unknown.
+    pub cluster_of: Vec<u32>,
+}
+
+impl Dataset {
+    /// Ground-truth "similar" relation for training/eval: same cluster.
+    pub fn same_cluster(&self, i: usize, j: usize) -> Option<bool> {
+        if self.cluster_of.is_empty() {
+            None
+        } else {
+            Some(self.cluster_of[i] == self.cluster_of[j])
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Synthetic clustered multimodal datasets.
+//!
+//! Generative model (kept deliberately simple and **mirrored in
+//! `python/compile/datagen.py`** so the offline-trained model sees the same
+//! distribution family the Rust side serves — the parameters below are the
+//! cross-language contract):
+//!
+//! - `n_clusters` clusters; cluster sizes ∝ lognormal(σ=1) (heavy-tailed,
+//!   like real topic/product categories);
+//! - clusters are **hierarchical**: `n_clusters/5` parent topics with
+//!   centers `~ N(0, I_d)`; each cluster center = parent + 0.6·N(0, I).
+//!   Same-parent clusters are therefore moderately similar — this is what
+//!   gives the similarity model a *graded* score distribution (like the
+//!   paper's curves) instead of a trivially separable 0/1 one;
+//! - point embedding `x = μ_c + σ·N(0, I)` then L2-normalized (OGB text
+//!   embeddings are average word vectors — roughly unit-norm directions);
+//! - **arxiv_like**: publication year = cluster base year (uniform in
+//!   [1995, 2023]) + N(0, 3), clamped to the range;
+//! - **products_like**: co-purchase tokens = `n_tok ~ U[3, 12]` samples from
+//!   the cluster's pool of 40 tokens, **plus** `2 + U[0, 6]` samples from a
+//!   global Zipf(1.1) pool of 2,000 "popular" tokens shared across all
+//!   clusters (best-sellers co-purchased with everything — the "the"/"a"
+//!   analogue). Every point carries junk tokens, and the junk pool is a few
+//!   percent of the distinct-bucket universe, so `Filter-P` has exactly the
+//!   role the paper gives it: banning the junk mega-buckets that otherwise
+//!   pollute candidate retrieval.
+
+use super::Dataset;
+use crate::features::{FeatureValue, Point, Schema};
+use crate::util::rng::Rng;
+
+/// Parameters of the generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    /// `"arxiv_like"` or `"products_like"`.
+    pub kind: SyntheticDataset,
+    pub n_points: usize,
+    pub n_clusters: usize,
+    pub dense_dim: usize,
+    /// Embedding noise σ around the cluster center (before normalization).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+/// The two dataset shapes of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyntheticDataset {
+    ArxivLike,
+    ProductsLike,
+}
+
+impl SyntheticConfig {
+    /// ogbn-arxiv stand-in (paper scale: 169,343; default laptop scale).
+    pub fn arxiv_like(n_points: usize, seed: u64) -> SyntheticConfig {
+        SyntheticConfig {
+            kind: SyntheticDataset::ArxivLike,
+            n_points,
+            n_clusters: (n_points / 200).max(4),
+            dense_dim: 128,
+            noise: 0.55,
+            seed,
+        }
+    }
+
+    /// ogbn-products stand-in (paper scale: 2,449,029; default laptop scale).
+    pub fn products_like(n_points: usize, seed: u64) -> SyntheticConfig {
+        SyntheticConfig {
+            kind: SyntheticDataset::ProductsLike,
+            n_points,
+            n_clusters: (n_points / 150).max(4),
+            dense_dim: 100,
+            noise: 0.5,
+            seed,
+        }
+    }
+
+    pub fn schema(&self) -> Schema {
+        match self.kind {
+            SyntheticDataset::ArxivLike => Schema::arxiv_like(self.dense_dim),
+            SyntheticDataset::ProductsLike => Schema::products_like(self.dense_dim),
+        }
+    }
+
+    /// Generate the dataset.
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Rng::seeded(self.seed);
+        let schema = self.schema();
+        let d = self.dense_dim;
+        let k = self.n_clusters.max(1);
+
+        // Cluster sizes: lognormal weights normalized to n_points.
+        let weights: Vec<f64> = (0..k).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut sizes: Vec<usize> = weights
+            .iter()
+            .map(|w| ((w / wsum) * self.n_points as f64).floor() as usize)
+            .collect();
+        // Distribute the rounding remainder.
+        let mut total: usize = sizes.iter().sum();
+        let mut ci = 0;
+        while total < self.n_points {
+            sizes[ci % k] += 1;
+            total += 1;
+            ci += 1;
+        }
+
+        // Cluster parameters: hierarchical centers (see module docs).
+        let n_parents = (k / 5).max(1);
+        let parents: Vec<Vec<f32>> = (0..n_parents).map(|_| rng.normal_vec_f32(d)).collect();
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|c| {
+                parents[c % n_parents]
+                    .iter()
+                    .map(|&x| x + 0.6 * rng.normal() as f32)
+                    .collect()
+            })
+            .collect();
+        let base_years: Vec<f32> =
+            (0..k).map(|_| 1995.0 + rng.below(29) as f32).collect();
+        let token_pools: Vec<Vec<u64>> = (0..k)
+            .map(|c| (0..40u64).map(|t| 1_000_000 + c as u64 * 1000 + t).collect())
+            .collect();
+        // Global popular tokens: ids 1..=2000, sampled by Zipf rank.
+        const GLOBAL_POOL: u64 = 2000;
+        const ZIPF_S: f64 = 1.1;
+
+        let mut points = Vec::with_capacity(self.n_points);
+        let mut cluster_of = Vec::with_capacity(self.n_points);
+        let mut next_id = 0u64;
+        for (c, &size) in sizes.iter().enumerate() {
+            for _ in 0..size {
+                let mut x: Vec<f32> = centers[c]
+                    .iter()
+                    .map(|&m| m + (self.noise * rng.normal()) as f32)
+                    .collect();
+                let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+                for v in &mut x {
+                    *v /= norm;
+                }
+                let features = match self.kind {
+                    SyntheticDataset::ArxivLike => {
+                        let year = (base_years[c] + (3.0 * rng.normal()) as f32)
+                            .clamp(1995.0, 2023.0);
+                        vec![FeatureValue::Dense(x), FeatureValue::Scalar(year)]
+                    }
+                    SyntheticDataset::ProductsLike => {
+                        let n_tok = 3 + rng.below_usize(10);
+                        let mut toks: Vec<u64> = rng
+                            .sample_indices(token_pools[c].len(), n_tok.min(40))
+                            .into_iter()
+                            .map(|i| token_pools[c][i])
+                            .collect();
+                        let n_pop = 2 + rng.below_usize(7);
+                        for _ in 0..n_pop {
+                            toks.push(1 + rng.zipf(GLOBAL_POOL, ZIPF_S));
+                        }
+                        toks.sort_unstable();
+                        toks.dedup();
+                        vec![FeatureValue::Dense(x), FeatureValue::Tokens(toks)]
+                    }
+                };
+                points.push(Point::new(next_id, features));
+                cluster_of.push(c as u32);
+                next_id += 1;
+            }
+        }
+
+        // Shuffle so ids do not correlate with clusters (stream realism),
+        // keeping (point, cluster) pairs aligned.
+        let mut perm: Vec<usize> = (0..points.len()).collect();
+        rng.shuffle(&mut perm);
+        let points_shuffled: Vec<Point> = perm.iter().map(|&i| points[i].clone()).collect();
+        let clusters_shuffled: Vec<u32> = perm.iter().map(|&i| cluster_of[i]).collect();
+        // Re-assign ids in order so external ids are dense 0..n.
+        let points_final: Vec<Point> = points_shuffled
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut p)| {
+                p.id = i as u64;
+                p
+            })
+            .collect();
+
+        Dataset {
+            schema,
+            points: points_final,
+            cluster_of: clusters_shuffled,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size_and_schema() {
+        let ds = SyntheticConfig::arxiv_like(500, 1).generate();
+        assert_eq!(ds.points.len(), 500);
+        assert_eq!(ds.cluster_of.len(), 500);
+        assert_eq!(ds.schema.name, "arxiv_like");
+        for p in &ds.points {
+            ds.schema.validate(p).unwrap();
+        }
+        // Dense ids 0..n.
+        for (i, p) in ds.points.iter().enumerate() {
+            assert_eq!(p.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn products_have_tokens_with_popular_overlap() {
+        let ds = SyntheticConfig::products_like(800, 2).generate();
+        assert_eq!(ds.schema.name, "products_like");
+        let mut popular_count = 0usize;
+        for p in &ds.points {
+            let toks = p.tokens(1);
+            assert!(!toks.is_empty());
+            popular_count += toks.iter().filter(|&&t| t <= 2000).count();
+        }
+        // Zipf pool tokens must actually occur (they drive Filter-P).
+        assert!(popular_count > 200, "too few popular tokens: {popular_count}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SyntheticConfig::arxiv_like(100, 7).generate();
+        let b = SyntheticConfig::arxiv_like(100, 7).generate();
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.cluster_of, b.cluster_of);
+        let c = SyntheticConfig::arxiv_like(100, 8).generate();
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn embeddings_unit_norm() {
+        let ds = SyntheticConfig::arxiv_like(50, 3).generate();
+        for p in &ds.points {
+            let n: f32 = p.dense(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "norm {n}");
+        }
+    }
+
+    #[test]
+    fn same_cluster_points_are_closer() {
+        let ds = SyntheticConfig::arxiv_like(400, 4).generate();
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let (mut intra, mut inter, mut ni, mut nx) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d = dot(ds.points[i].dense(0), ds.points[j].dense(0)) as f64;
+                if ds.same_cluster(i, j).unwrap() {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        if ni > 0 && nx > 0 {
+            assert!(
+                intra / ni as f64 > inter / nx as f64 + 0.2,
+                "clusters not separated: intra={} inter={}",
+                intra / ni as f64,
+                inter / nx as f64
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_sizes_heavy_tailed() {
+        let ds = SyntheticConfig::products_like(2000, 5).generate();
+        let k = ds.cluster_of.iter().max().unwrap() + 1;
+        let mut sizes = vec![0usize; k as usize + 1];
+        for &c in &ds.cluster_of {
+            sizes[c as usize] += 1;
+        }
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().filter(|&&s| s > 0).min().unwrap();
+        assert!(max > min * 2, "sizes not skewed: max={max} min={min}");
+    }
+}

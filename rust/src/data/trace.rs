@@ -1,0 +1,371 @@
+//! Dynamic workload traces (§5.2).
+//!
+//! A trace is an initial corpus plus an operation stream. The paper's
+//! dynamic experiment loads the dataset, then queries the neighborhood of
+//! 10,000 sampled points sequentially; it also measures insertion latency.
+//! [`TraceConfig`] generalizes this into a mixed mutation/query stream for
+//! the end-to-end examples (e.g. the Android-security scenario streams
+//! inserts of new apps and queries their neighborhoods immediately).
+
+use super::Dataset;
+use crate::features::{Point, PointId};
+use crate::util::rng::Rng;
+
+/// One operation in a dynamic workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Insert (or re-insert) a point.
+    Insert(Point),
+    /// Update an existing point with new features.
+    Update(Point),
+    /// Delete a point by id.
+    Delete(PointId),
+    /// Query the neighborhood of a point (by full features — the point may
+    /// be new or known) with `k` neighbors.
+    Query { point: Point, k: usize },
+}
+
+/// A dynamic workload: preloaded corpus + operation stream.
+pub struct Trace {
+    /// Points loaded before the stream starts (§4.3 initial corpus).
+    pub initial: Vec<Point>,
+    pub ops: Vec<Op>,
+}
+
+/// Stream composition knobs.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Fraction of the dataset preloaded as the initial corpus.
+    pub initial_fraction: f64,
+    /// Number of stream operations.
+    pub n_ops: usize,
+    /// Mix (must sum to ≤ 1.0; remainder = queries).
+    pub insert_prob: f64,
+    pub update_prob: f64,
+    pub delete_prob: f64,
+    /// `k` for queries (the paper's ScaNN-NN).
+    pub query_k: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            initial_fraction: 0.8,
+            n_ops: 10_000,
+            insert_prob: 0.1,
+            update_prob: 0.05,
+            delete_prob: 0.02,
+            query_k: 10,
+            seed: 0x7472_6163_65,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// The paper's §5.2 query-only experiment: full corpus preloaded, then
+    /// `n_queries` sequential neighborhood queries of sampled known points.
+    pub fn query_only(n_queries: usize, k: usize, seed: u64) -> TraceConfig {
+        TraceConfig {
+            initial_fraction: 1.0,
+            n_ops: n_queries,
+            insert_prob: 0.0,
+            update_prob: 0.0,
+            delete_prob: 0.0,
+            query_k: k,
+            seed,
+        }
+    }
+
+    /// Build a trace from a dataset.
+    ///
+    /// Inserts introduce the held-out points; updates re-feature random live
+    /// points (jittering the dense embedding); deletes remove random live
+    /// points; queries sample random live points.
+    pub fn build(&self, ds: &Dataset) -> Trace {
+        assert!(self.insert_prob + self.update_prob + self.delete_prob <= 1.0 + 1e-9);
+        let mut rng = Rng::seeded(self.seed);
+        let n = ds.points.len();
+        let n_initial = ((n as f64) * self.initial_fraction).round() as usize;
+        let n_initial = n_initial.min(n);
+        let initial: Vec<Point> = ds.points[..n_initial].to_vec();
+
+        let mut live: Vec<usize> = (0..n_initial).collect();
+        let mut pending: Vec<usize> = (n_initial..n).collect();
+        let mut ops = Vec::with_capacity(self.n_ops);
+        for _ in 0..self.n_ops {
+            let r = rng.f64();
+            if r < self.insert_prob && !pending.is_empty() {
+                let i = pending.swap_remove(rng.below_usize(pending.len()));
+                ops.push(Op::Insert(ds.points[i].clone()));
+                live.push(i);
+            } else if r < self.insert_prob + self.update_prob && !live.is_empty() {
+                let &i = rng.choose(&live);
+                let mut p = ds.points[i].clone();
+                jitter_dense(&mut p, &mut rng, 0.05);
+                ops.push(Op::Update(p));
+            } else if r < self.insert_prob + self.update_prob + self.delete_prob
+                && live.len() > 1
+            {
+                let pos = rng.below_usize(live.len());
+                let i = live.swap_remove(pos);
+                ops.push(Op::Delete(ds.points[i].id));
+            } else if !live.is_empty() {
+                let &i = rng.choose(&live);
+                ops.push(Op::Query { point: ds.points[i].clone(), k: self.query_k });
+            }
+        }
+        Trace { initial, ops }
+    }
+}
+
+/// Add N(0, σ) noise to the first dense channel and re-normalize.
+fn jitter_dense(p: &mut Point, rng: &mut Rng, sigma: f64) {
+    for f in &mut p.features {
+        if let crate::features::FeatureValue::Dense(v) = f {
+            for x in v.iter_mut() {
+                *x += (sigma * rng.normal()) as f32;
+            }
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            break;
+        }
+    }
+}
+
+impl Op {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            Op::Insert(p) => Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())]),
+            Op::Update(p) => Json::obj(vec![("op", Json::str("update")), ("point", p.to_json())]),
+            Op::Delete(id) => Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(*id))]),
+            Op::Query { point, k } => Json::obj(vec![
+                ("op", Json::str("query")),
+                ("point", point.to_json()),
+                ("k", Json::num(*k as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Op> {
+        match j.get("op").as_str()? {
+            "insert" => Some(Op::Insert(Point::from_json(j.get("point"))?)),
+            "update" => Some(Op::Update(Point::from_json(j.get("point"))?)),
+            "delete" => Some(Op::Delete(j.get("id").as_u64()?)),
+            "query" => Some(Op::Query {
+                point: Point::from_json(j.get("point"))?,
+                k: j.get("k").as_usize()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+impl Trace {
+    /// Save as JSONL: first line `{"initial": N}`, then N initial points,
+    /// then one op per line (shareable, replayable workloads).
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let header = crate::util::json::Json::obj(vec![(
+            "initial",
+            crate::util::json::Json::num(self.initial.len() as f64),
+        )]);
+        writeln!(w, "{}", header.dump())?;
+        for p in &self.initial {
+            writeln!(w, "{}", p.to_json().dump())?;
+        }
+        for op in &self.ops {
+            writeln!(w, "{}", op.to_json().dump())?;
+        }
+        Ok(())
+    }
+
+    /// Load a trace saved by [`Trace::save`].
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
+        use std::io::BufRead;
+        let f = std::fs::File::open(path)?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        let header = crate::util::json::Json::parse(
+            &lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))??,
+        )
+        .map_err(|e| anyhow::anyhow!("trace header: {e}"))?;
+        let n_initial = header
+            .get("initial")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("trace header missing 'initial'"))?;
+        let mut initial = Vec::with_capacity(n_initial);
+        let mut ops = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = crate::util::json::Json::parse(&line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 2))?;
+            if i < n_initial {
+                initial.push(
+                    Point::from_json(&j)
+                        .ok_or_else(|| anyhow::anyhow!("trace line {}: bad point", i + 2))?,
+                );
+            } else {
+                ops.push(
+                    Op::from_json(&j)
+                        .ok_or_else(|| anyhow::anyhow!("trace line {}: bad op", i + 2))?,
+                );
+            }
+        }
+        anyhow::ensure!(initial.len() == n_initial, "trace truncated");
+        Ok(Trace { initial, ops })
+    }
+
+    /// Count of each op kind: (inserts, updates, deletes, queries).
+    pub fn op_mix(&self) -> (usize, usize, usize, usize) {
+        let mut mix = (0, 0, 0, 0);
+        for op in &self.ops {
+            match op {
+                Op::Insert(_) => mix.0 += 1,
+                Op::Update(_) => mix.1 += 1,
+                Op::Delete(_) => mix.2 += 1,
+                Op::Query { .. } => mix.3 += 1,
+            }
+        }
+        mix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn ds() -> Dataset {
+        SyntheticConfig::arxiv_like(300, 9).generate()
+    }
+
+    #[test]
+    fn query_only_trace() {
+        let d = ds();
+        let t = TraceConfig::query_only(100, 10, 1).build(&d);
+        assert_eq!(t.initial.len(), 300);
+        assert_eq!(t.ops.len(), 100);
+        let (i, u, del, q) = t.op_mix();
+        assert_eq!((i, u, del), (0, 0, 0));
+        assert_eq!(q, 100);
+        for op in &t.ops {
+            match op {
+                Op::Query { k, .. } => assert_eq!(*k, 10),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_trace_respects_probabilities_roughly() {
+        let d = ds();
+        let cfg = TraceConfig {
+            initial_fraction: 0.5,
+            n_ops: 2000,
+            insert_prob: 0.2,
+            update_prob: 0.1,
+            delete_prob: 0.05,
+            query_k: 5,
+            seed: 3,
+        };
+        let t = cfg.build(&d);
+        assert_eq!(t.initial.len(), 150);
+        let (i, u, del, q) = t.op_mix();
+        assert!(i > 50, "inserts {i}"); // capped by 150 held-out points
+        assert!(u > 100, "updates {u}");
+        assert!(del > 40, "deletes {del}");
+        assert!(q > 1000, "queries {q}");
+    }
+
+    #[test]
+    fn inserts_only_introduce_held_out_points() {
+        let d = ds();
+        let cfg = TraceConfig {
+            initial_fraction: 0.9,
+            n_ops: 500,
+            insert_prob: 0.5,
+            update_prob: 0.0,
+            delete_prob: 0.0,
+            query_k: 5,
+            seed: 4,
+        };
+        let t = cfg.build(&d);
+        let initial_ids: std::collections::HashSet<u64> =
+            t.initial.iter().map(|p| p.id).collect();
+        let mut seen = std::collections::HashSet::new();
+        for op in &t.ops {
+            if let Op::Insert(p) = op {
+                assert!(!initial_ids.contains(&p.id), "re-inserting initial point");
+                assert!(seen.insert(p.id), "duplicate insert");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = ds();
+        let t1 = TraceConfig::default().build(&d);
+        let t2 = TraceConfig::default().build(&d);
+        assert_eq!(t1.ops.len(), t2.ops.len());
+        assert_eq!(t1.op_mix(), t2.op_mix());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = ds();
+        let t = TraceConfig {
+            n_ops: 200,
+            insert_prob: 0.2,
+            update_prob: 0.1,
+            delete_prob: 0.05,
+            ..TraceConfig::default()
+        }
+        .build(&d);
+        let path = std::env::temp_dir().join("gus-trace-tests/t.jsonl");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.initial, t.initial);
+        assert_eq!(back.ops, t.ops);
+    }
+
+    #[test]
+    fn load_rejects_truncated() {
+        let d = ds();
+        let t = TraceConfig::query_only(10, 5, 1).build(&d);
+        let path = std::env::temp_dir().join("gus-trace-tests/trunc.jsonl");
+        t.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let keep: Vec<&str> = text.lines().take(50).collect();
+        std::fs::write(&path, keep.join("\n")).unwrap();
+        assert!(Trace::load(&path).is_err());
+    }
+
+    #[test]
+    fn updates_stay_normalized() {
+        let d = ds();
+        let cfg = TraceConfig {
+            update_prob: 1.0,
+            insert_prob: 0.0,
+            delete_prob: 0.0,
+            n_ops: 50,
+            ..TraceConfig::default()
+        };
+        let t = cfg.build(&d);
+        for op in &t.ops {
+            if let Op::Update(p) = op {
+                let n: f32 = p.dense(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!((n - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+}

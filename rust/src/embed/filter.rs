@@ -1,0 +1,128 @@
+//! Overly-popular bucket filtering (§4.2).
+//!
+//! `Filter-P = x` bans the `x`% of distinct buckets with the highest
+//! cardinality. Banned buckets contribute no embedding dimension at all —
+//! they are dropped both at indexing and at query time, shrinking posting
+//! lists and candidate sets (the paper observes this also improves latency
+//! and memory, Figs. 9–10).
+
+use super::stats::BucketStats;
+use crate::util::hash::FxHashSet;
+use crate::util::json::Json;
+
+/// Set of banned (overly popular) bucket IDs.
+#[derive(Debug, Clone, Default)]
+pub struct PopularFilter {
+    banned: FxHashSet<u64>,
+}
+
+impl PopularFilter {
+    /// Ban the top `percent`% of distinct buckets by cardinality
+    /// (deterministic tie-breaking via `BucketStats::by_count_desc`).
+    pub fn from_stats(stats: &BucketStats, percent: f64) -> PopularFilter {
+        assert!((0.0..=100.0).contains(&percent), "Filter-P out of range");
+        let n_ban = ((stats.num_buckets() as f64) * percent / 100.0).floor() as usize;
+        let banned = stats
+            .by_count_desc()
+            .into_iter()
+            .take(n_ban)
+            .map(|(b, _)| b)
+            .collect();
+        PopularFilter { banned }
+    }
+
+    /// Ban an explicit set (tests, manual configuration).
+    pub fn from_banned(banned: Vec<u64>) -> PopularFilter {
+        PopularFilter { banned: banned.into_iter().collect() }
+    }
+
+    #[inline]
+    pub fn is_banned(&self, bucket: u64) -> bool {
+        self.banned.contains(&bucket)
+    }
+
+    pub fn len(&self) -> usize {
+        self.banned.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banned.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut v: Vec<u64> = self.banned.iter().copied().collect();
+        v.sort_unstable();
+        Json::obj(vec![("banned", Json::u64_arr(&v))])
+    }
+
+    pub fn from_json(j: &Json) -> Option<PopularFilter> {
+        Some(PopularFilter {
+            banned: j.get("banned").to_u64_vec()?.into_iter().collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_stats() -> BucketStats {
+        // 10 buckets; bucket i appears in 2^(10-i) points (bucket 0 hottest).
+        let mut s = BucketStats::new();
+        for i in 0..10u64 {
+            for _ in 0..(1u64 << (10 - i)) {
+                s.add_buckets(&[i]);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn bans_top_percent() {
+        let s = skewed_stats();
+        let f = PopularFilter::from_stats(&s, 20.0);
+        assert_eq!(f.len(), 2);
+        assert!(f.is_banned(0));
+        assert!(f.is_banned(1));
+        assert!(!f.is_banned(2));
+        assert!(!f.is_banned(9));
+    }
+
+    #[test]
+    fn zero_percent_bans_nothing() {
+        let f = PopularFilter::from_stats(&skewed_stats(), 0.0);
+        assert!(f.is_empty());
+        assert!(!f.is_banned(0));
+    }
+
+    #[test]
+    fn hundred_percent_bans_all() {
+        let f = PopularFilter::from_stats(&skewed_stats(), 100.0);
+        assert_eq!(f.len(), 10);
+    }
+
+    #[test]
+    fn rounding_floors() {
+        // 10 buckets, 15% → floor(1.5) = 1 banned.
+        let f = PopularFilter::from_stats(&skewed_stats(), 15.0);
+        assert_eq!(f.len(), 1);
+        assert!(f.is_banned(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_percent_panics() {
+        let _ = PopularFilter::from_stats(&skewed_stats(), 101.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = PopularFilter::from_stats(&skewed_stats(), 30.0);
+        let j = f.to_json().dump();
+        let f2 = PopularFilter::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(f.len(), f2.len());
+        for b in 0..10u64 {
+            assert_eq!(f.is_banned(b), f2.is_banned(b));
+        }
+    }
+}

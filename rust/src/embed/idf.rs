@@ -1,0 +1,182 @@
+//! Bounded Inverse Document Frequency table (§4.2).
+//!
+//! Weight of bucket `b`: `log(|P| / N(b))`. The paper bounds the table to
+//! the `IDF-S` buckets with the **highest** IDF (the rarest buckets); every
+//! other bucket defaults to the `IDF-S`-th highest retained weight, keeping
+//! the table's memory footprint proportional to `IDF-S` regardless of how
+//! many distinct buckets exist.
+
+use super::stats::BucketStats;
+use crate::util::hash::FxHashMap;
+use crate::util::json::Json;
+
+/// Bounded IDF table.
+#[derive(Debug, Clone)]
+pub struct IdfTable {
+    weights: FxHashMap<u64, f32>,
+    /// Weight for buckets not in the table (the IDF-S-th highest weight).
+    default_weight: f32,
+}
+
+impl IdfTable {
+    /// Build from corpus stats, keeping the `size` buckets with the highest
+    /// IDF (ties broken deterministically by bucket id). `size = 0` is not
+    /// meaningful here — the paper's `IDF-S = 0` means "IDF disabled", which
+    /// callers express by passing `None` for the table.
+    pub fn from_stats(stats: &BucketStats, size: usize) -> IdfTable {
+        assert!(size > 0, "IDF-S=0 means IDF disabled: pass None instead");
+        let total = stats.num_points().max(1) as f64;
+        // Highest IDF = lowest count: ascending count order.
+        let mut by_count: Vec<(u64, u64)> = stats.iter().collect();
+        by_count.sort_unstable_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+        by_count.truncate(size);
+        let mut weights = FxHashMap::default();
+        let mut min_weight = f32::INFINITY;
+        for (b, c) in by_count {
+            let w = (total / c.max(1) as f64).ln().max(0.0) as f32;
+            // Keep weights strictly positive so Lemma 4.1 still holds: a
+            // bucket carried by every point gets a tiny but non-zero weight.
+            let w = w.max(MIN_POSITIVE_WEIGHT);
+            min_weight = min_weight.min(w);
+            weights.insert(b, w);
+        }
+        let default_weight = if weights.is_empty() {
+            1.0
+        } else {
+            min_weight
+        };
+        IdfTable { weights, default_weight }
+    }
+
+    /// Weight for a bucket (default for out-of-table buckets).
+    #[inline]
+    pub fn weight(&self, bucket: u64) -> f32 {
+        self.weights.get(&bucket).copied().unwrap_or(self.default_weight)
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn default_weight(&self) -> f32 {
+        self.default_weight
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(u64, f32)> =
+            self.weights.iter().map(|(&b, &w)| (b, w)).collect();
+        pairs.sort_unstable_by_key(|p| p.0);
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::u64_arr(&pairs.iter().map(|p| p.0).collect::<Vec<_>>()),
+            ),
+            (
+                "weights",
+                Json::f32_arr(&pairs.iter().map(|p| p.1).collect::<Vec<_>>()),
+            ),
+            ("default_weight", Json::num(self.default_weight as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<IdfTable> {
+        let buckets = j.get("buckets").to_u64_vec()?;
+        let ws = j.get("weights").to_f32_vec()?;
+        if buckets.len() != ws.len() {
+            return None;
+        }
+        let mut weights = FxHashMap::default();
+        for (b, w) in buckets.into_iter().zip(ws) {
+            weights.insert(b, w);
+        }
+        Some(IdfTable {
+            weights,
+            default_weight: j.get("default_weight").as_f32()?,
+        })
+    }
+}
+
+/// Floor for IDF weights: keeps every dimension strictly positive.
+const MIN_POSITIVE_WEIGHT: f32 = 1e-4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_abc() -> BucketStats {
+        // bucket 1: 4 points; bucket 2: 2 points; bucket 3: 1 point; |P|=4.
+        let mut s = BucketStats::new();
+        s.add_buckets(&[1, 2, 3]);
+        s.add_buckets(&[1, 2]);
+        s.add_buckets(&[1]);
+        s.add_buckets(&[1]);
+        s
+    }
+
+    #[test]
+    fn weights_are_log_ratio() {
+        let t = IdfTable::from_stats(&stats_abc(), 100);
+        assert!((t.weight(3) - (4.0f32 / 1.0).ln()).abs() < 1e-6);
+        assert!((t.weight(2) - (4.0f32 / 2.0).ln()).abs() < 1e-6);
+        // Bucket in every point: floored at MIN_POSITIVE_WEIGHT, not 0.
+        assert!(t.weight(1) > 0.0);
+        assert!(t.weight(1) <= 1e-4 + 1e-9);
+    }
+
+    #[test]
+    fn rarer_is_heavier() {
+        let t = IdfTable::from_stats(&stats_abc(), 100);
+        assert!(t.weight(3) > t.weight(2));
+        assert!(t.weight(2) > t.weight(1));
+    }
+
+    #[test]
+    fn bounded_size_keeps_highest_idf() {
+        let t = IdfTable::from_stats(&stats_abc(), 2);
+        assert_eq!(t.len(), 2);
+        // Retained: buckets 3 (count 1) and 2 (count 2) — the rarest.
+        assert!((t.weight(3) - 4.0f32.ln()).abs() < 1e-6);
+        assert!((t.weight(2) - 2.0f32.ln()).abs() < 1e-6);
+        // Out-of-table bucket 1 defaults to the 2nd-highest weight = ln 2.
+        assert!((t.weight(1) - 2.0f32.ln()).abs() < 1e-6);
+        assert_eq!(t.default_weight(), t.weight(2));
+    }
+
+    #[test]
+    fn unseen_bucket_gets_default() {
+        let t = IdfTable::from_stats(&stats_abc(), 2);
+        assert_eq!(t.weight(999), t.default_weight());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_size_panics() {
+        let _ = IdfTable::from_stats(&stats_abc(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = IdfTable::from_stats(&stats_abc(), 2);
+        let j = t.to_json().dump();
+        let t2 = IdfTable::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(t.len(), t2.len());
+        for b in [1u64, 2, 3, 999] {
+            assert!((t.weight(b) - t2.weight(b)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_weights_strictly_positive() {
+        let mut s = BucketStats::new();
+        for _ in 0..1000 {
+            s.add_buckets(&[42]);
+        }
+        let t = IdfTable::from_stats(&s, 10);
+        assert!(t.weight(42) > 0.0, "Lemma 4.1 requires positive weights");
+    }
+}

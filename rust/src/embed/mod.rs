@@ -1,0 +1,209 @@
+//! Sparse embedding generation (§4.1–4.2 of the paper).
+//!
+//! The embedding `M(p)` has one non-zero dimension per bucket ID of `p`.
+//! Base weights are 1.0; two optional refinements improve quality:
+//!
+//! - **Filtering** ([`filter::PopularFilter`]): the `Filter-P`% of buckets
+//!   with the highest cardinality are ignored entirely — overly popular
+//!   buckets (the "the"/"a" analogue) are not a reliable similarity signal
+//!   and blow up candidate sets.
+//! - **Inverse Document Frequency** ([`idf::IdfTable`]): dimension `b` gets
+//!   weight `log(|P| / N(b))`; the table is bounded to the `IDF-S` buckets
+//!   with the highest IDF, all other buckets defaulting to the `IDF-S`-th
+//!   highest weight (paper §5, "Second experiment").
+//!
+//! Both are computed offline from an initial corpus ([`stats::BucketStats`])
+//! and refreshed periodically (§4.3) — never on the request path.
+
+pub mod filter;
+pub mod idf;
+pub mod stats;
+
+use crate::features::Point;
+use crate::lsh::Bucketer;
+use crate::sparse::SparseVec;
+
+pub use filter::PopularFilter;
+pub use idf::IdfTable;
+pub use stats::BucketStats;
+
+/// The Embedding Generator (§3.2): buckets → filtered, weighted sparse vec.
+///
+/// Latency-critical: operates on purely local information plus two
+/// precomputed in-memory tables.
+pub struct EmbeddingGenerator {
+    bucketer: Bucketer,
+    idf: Option<IdfTable>,
+    filter: Option<PopularFilter>,
+}
+
+impl EmbeddingGenerator {
+    pub fn new(
+        bucketer: Bucketer,
+        idf: Option<IdfTable>,
+        filter: Option<PopularFilter>,
+    ) -> EmbeddingGenerator {
+        EmbeddingGenerator { bucketer, idf, filter }
+    }
+
+    /// Plain generator: weights 1.0, no filtering (the baseline of §4.1).
+    pub fn plain(bucketer: Bucketer) -> EmbeddingGenerator {
+        EmbeddingGenerator::new(bucketer, None, None)
+    }
+
+    pub fn bucketer(&self) -> &Bucketer {
+        &self.bucketer
+    }
+
+    pub fn idf(&self) -> Option<&IdfTable> {
+        self.idf.as_ref()
+    }
+
+    pub fn filter(&self) -> Option<&PopularFilter> {
+        self.filter.as_ref()
+    }
+
+    /// Swap in freshly recomputed tables (periodic reload, §4.3).
+    pub fn reload(&mut self, idf: Option<IdfTable>, filter: Option<PopularFilter>) {
+        self.idf = idf;
+        self.filter = filter;
+    }
+
+    /// Compute the sparse embedding of a point.
+    ///
+    /// Every retained bucket ID becomes a dimension with strictly positive
+    /// weight, so Lemma 4.1 (`Dist < 0 ⇔ shared bucket`) holds with or
+    /// without IDF/filtering — see `sparse::tests::prop_lemma41_core`.
+    pub fn embed(&self, p: &Point) -> SparseVec {
+        let mut buckets = Vec::with_capacity(32);
+        self.bucketer.buckets_into(p, &mut buckets);
+        self.embed_buckets(&buckets)
+    }
+
+    /// Embedding from precomputed bucket IDs (sorted, deduplicated).
+    pub fn embed_buckets(&self, buckets: &[u64]) -> SparseVec {
+        let mut pairs = Vec::with_capacity(buckets.len());
+        for &b in buckets {
+            if let Some(f) = &self.filter {
+                if f.is_banned(b) {
+                    continue;
+                }
+            }
+            let w = match &self.idf {
+                Some(t) => t.weight(b),
+                None => 1.0,
+            };
+            pairs.push((b, w));
+        }
+        SparseVec::from_pairs(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureValue, Point, Schema};
+    use crate::util::rng::Rng;
+
+    fn generator_with(
+        idf: Option<IdfTable>,
+        filter: Option<PopularFilter>,
+    ) -> EmbeddingGenerator {
+        let schema = Schema::arxiv_like(8);
+        let bucketer = Bucketer::with_defaults(&schema, 3);
+        EmbeddingGenerator::new(bucketer, idf, filter)
+    }
+
+    fn pt(rng: &mut Rng) -> Point {
+        Point::new(
+            rng.below(1 << 30),
+            vec![
+                FeatureValue::Dense(rng.normal_vec_f32(8)),
+                FeatureValue::Scalar(2000.0 + rng.below(20) as f32),
+            ],
+        )
+    }
+
+    #[test]
+    fn plain_embedding_has_unit_weights() {
+        let g = generator_with(None, None);
+        let mut rng = Rng::seeded(1);
+        let p = pt(&mut rng);
+        let v = g.embed(&p);
+        assert!(!v.is_empty());
+        assert!(v.weights().iter().all(|&w| w == 1.0));
+        // Dimensions are exactly the bucket IDs.
+        assert_eq!(v.dims(), g.bucketer().buckets(&p).as_slice());
+    }
+
+    #[test]
+    fn filter_removes_banned_dims() {
+        let g0 = generator_with(None, None);
+        let mut rng = Rng::seeded(2);
+        let p = pt(&mut rng);
+        let buckets = g0.bucketer().buckets(&p);
+        let banned = vec![buckets[0], buckets[2]];
+        let g = generator_with(None, Some(PopularFilter::from_banned(banned.clone())));
+        let v = g.embed(&p);
+        assert_eq!(v.nnz(), buckets.len() - 2);
+        for b in banned {
+            assert_eq!(v.get(b), 0.0);
+        }
+    }
+
+    #[test]
+    fn idf_weights_applied() {
+        let g0 = generator_with(None, None);
+        let mut rng = Rng::seeded(3);
+        let p = pt(&mut rng);
+        let buckets = g0.bucketer().buckets(&p);
+        // Fake corpus stats: bucket[0] very common, others rare.
+        let mut stats = BucketStats::new();
+        for _ in 0..100 {
+            stats.add_buckets(&[buckets[0]]);
+        }
+        stats.add_buckets(&buckets); // every bucket appears once more
+        let idf = IdfTable::from_stats(&stats, usize::MAX);
+        let g = generator_with(Some(idf), None);
+        let v = g.embed(&p);
+        let w_common = v.get(buckets[0]);
+        let w_rare = v.get(buckets[1]);
+        assert!(w_common < w_rare, "common bucket must get lower weight");
+        assert!(v.weights().iter().all(|&w| w > 0.0), "weights stay positive");
+    }
+
+    #[test]
+    fn lemma41_preserved_under_idf_and_filter() {
+        // Shared-retained-bucket ⇔ negative distance, for any tables.
+        let mut rng = Rng::seeded(4);
+        let g0 = generator_with(None, None);
+        let mut stats = BucketStats::new();
+        let points: Vec<Point> = (0..40).map(|_| pt(&mut rng)).collect();
+        for p in &points {
+            stats.add_buckets(&g0.bucketer().buckets(p));
+        }
+        let idf = IdfTable::from_stats(&stats, 10);
+        let filter = PopularFilter::from_stats(&stats, 10.0);
+        let g = generator_with(Some(idf), Some(filter));
+        for i in 0..points.len() {
+            for j in (i + 1)..points.len() {
+                let a = g.embed(&points[i]);
+                let b = g.embed(&points[j]);
+                let share = a.shared_dims(&b) > 0;
+                assert_eq!(share, a.dist(&b) < 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn reload_swaps_tables() {
+        let mut g = generator_with(None, None);
+        let mut rng = Rng::seeded(5);
+        let p = pt(&mut rng);
+        let before = g.embed(&p);
+        let banned = vec![before.dims()[0]];
+        g.reload(None, Some(PopularFilter::from_banned(banned)));
+        let after = g.embed(&p);
+        assert_eq!(after.nnz(), before.nnz() - 1);
+    }
+}

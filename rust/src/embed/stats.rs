@@ -1,0 +1,147 @@
+//! Corpus bucket statistics: the shared substrate for IDF tables and
+//! popular-bucket filters (§4.3 offline preprocessing).
+
+use crate::util::hash::FxHashMap;
+use crate::util::json::Json;
+
+/// Bucket cardinalities over a corpus: `N(b)` = number of points carrying
+/// bucket `b`, plus the corpus size `|P|`.
+#[derive(Debug, Clone, Default)]
+pub struct BucketStats {
+    counts: FxHashMap<u64, u64>,
+    num_points: u64,
+}
+
+impl BucketStats {
+    pub fn new() -> BucketStats {
+        BucketStats::default()
+    }
+
+    /// Record one point's (deduplicated) bucket IDs.
+    pub fn add_buckets(&mut self, buckets: &[u64]) {
+        self.num_points += 1;
+        for &b in buckets {
+            *self.counts.entry(b).or_insert(0) += 1;
+        }
+    }
+
+    /// Merge another stats object (parallel preprocessing).
+    pub fn merge(&mut self, other: &BucketStats) {
+        self.num_points += other.num_points;
+        for (&b, &c) in &other.counts {
+            *self.counts.entry(b).or_insert(0) += c;
+        }
+    }
+
+    /// Corpus size |P|.
+    pub fn num_points(&self) -> u64 {
+        self.num_points
+    }
+
+    /// Number of distinct buckets observed.
+    pub fn num_buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// N(b), or 0 if unseen.
+    pub fn count(&self, bucket: u64) -> u64 {
+        self.counts.get(&bucket).copied().unwrap_or(0)
+    }
+
+    /// Iterate `(bucket, count)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().map(|(&b, &c)| (b, c))
+    }
+
+    /// Buckets sorted by descending count (ties by bucket id, so the order —
+    /// and hence Filter-P / IDF-S cutoffs — is deterministic).
+    pub fn by_count_desc(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self.iter().collect();
+        v.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pairs = self.by_count_desc();
+        Json::obj(vec![
+            ("num_points", Json::num(self.num_points as f64)),
+            (
+                "buckets",
+                Json::u64_arr(&pairs.iter().map(|p| p.0).collect::<Vec<_>>()),
+            ),
+            (
+                "counts",
+                Json::u64_arr(&pairs.iter().map(|p| p.1).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<BucketStats> {
+        let num_points = j.get("num_points").as_u64()?;
+        let buckets = j.get("buckets").to_u64_vec()?;
+        let counts = j.get("counts").to_u64_vec()?;
+        if buckets.len() != counts.len() {
+            return None;
+        }
+        let mut map = FxHashMap::default();
+        for (b, c) in buckets.into_iter().zip(counts) {
+            map.insert(b, c);
+        }
+        Some(BucketStats { counts: map, num_points })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut s = BucketStats::new();
+        s.add_buckets(&[1, 2, 3]);
+        s.add_buckets(&[2, 3]);
+        s.add_buckets(&[3]);
+        assert_eq!(s.num_points(), 3);
+        assert_eq!(s.count(1), 1);
+        assert_eq!(s.count(2), 2);
+        assert_eq!(s.count(3), 3);
+        assert_eq!(s.count(99), 0);
+        assert_eq!(s.num_buckets(), 3);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = BucketStats::new();
+        a.add_buckets(&[1, 2]);
+        let mut b = BucketStats::new();
+        b.add_buckets(&[2, 3]);
+        a.merge(&b);
+        assert_eq!(a.num_points(), 2);
+        assert_eq!(a.count(2), 2);
+        assert_eq!(a.count(3), 1);
+    }
+
+    #[test]
+    fn by_count_desc_deterministic() {
+        let mut s = BucketStats::new();
+        s.add_buckets(&[5, 9]);
+        s.add_buckets(&[5, 7]);
+        let v = s.by_count_desc();
+        assert_eq!(v[0], (5, 2));
+        // Tie between 7 and 9 broken by bucket id ascending.
+        assert_eq!(v[1], (7, 1));
+        assert_eq!(v[2], (9, 1));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = BucketStats::new();
+        s.add_buckets(&[10, 20]);
+        s.add_buckets(&[20]);
+        let j = s.to_json().dump();
+        let s2 = BucketStats::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.num_points(), 2);
+        assert_eq!(s2.count(20), 2);
+        assert_eq!(s2.count(10), 1);
+    }
+}

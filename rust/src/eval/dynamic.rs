@@ -1,0 +1,202 @@
+//! Dynamic (serving) experiments: Figs. 9–10 + §5.2 insertion latencies.
+//!
+//! Mirrors the paper's §5.2 protocol: preload the corpus into a live
+//! [`DynamicGus`], then (a) insert a held-out slice of points one by one
+//! (insertion wall-clock), and (b) query the neighborhoods of `n_queries`
+//! sampled points **sequentially, one by one** on a single worker. Reports
+//! wall-clock latency percentiles, average CPU time per query, and peak
+//! RSS.
+//!
+//! One process measures one configuration — the `experiments` binary
+//! re-execs itself per grid cell so peak-RSS (`VmHWM`) is per-config, like
+//! the paper's one-experiment-at-a-time methodology.
+
+use anyhow::Result;
+
+use crate::config::{GusConfig, ScorerKind};
+use crate::coordinator::DynamicGus;
+use crate::data::Dataset;
+use crate::metrics::{self, LatencyHistogram};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One dynamic-experiment configuration (a row of Fig. 10's tables).
+#[derive(Debug, Clone)]
+pub struct DynamicParams {
+    pub scann_nn: usize,
+    pub idf_s: usize,
+    pub filter_p: f64,
+    pub n_queries: usize,
+    /// Points inserted dynamically (after bootstrap) to measure insertion.
+    pub n_inserts: usize,
+    pub scorer: ScorerKind,
+    pub seed: u64,
+}
+
+impl Default for DynamicParams {
+    fn default() -> Self {
+        DynamicParams {
+            scann_nn: 10,
+            idf_s: 0,
+            filter_p: 0.0,
+            n_queries: 10_000,
+            n_inserts: 1_000,
+            scorer: ScorerKind::Auto,
+            seed: 0xd1a,
+        }
+    }
+}
+
+/// Measured outcome of one dynamic run.
+#[derive(Debug, Clone)]
+pub struct DynamicOutput {
+    pub query_ms: LatencySummaryMs,
+    pub insert_ms: LatencySummaryMs,
+    pub avg_cpu_ms_per_query: f64,
+    pub peak_rss_mib: f64,
+    pub n_points: usize,
+}
+
+/// Millisecond latency summary.
+#[derive(Debug, Clone)]
+pub struct LatencySummaryMs {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencySummaryMs {
+    fn from_hist(h: &LatencyHistogram) -> LatencySummaryMs {
+        let s = h.summary();
+        LatencySummaryMs {
+            count: s.count,
+            mean: s.mean_ns / 1e6,
+            p50: s.p50_ns as f64 / 1e6,
+            p90: s.p90_ns as f64 / 1e6,
+            p95: s.p95_ns as f64 / 1e6,
+            p99: s.p99_ns as f64 / 1e6,
+            max: s.max_ns as f64 / 1e6,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean)),
+            ("p50_ms", Json::num(self.p50)),
+            ("p90_ms", Json::num(self.p90)),
+            ("p95_ms", Json::num(self.p95)),
+            ("p99_ms", Json::num(self.p99)),
+            ("max_ms", Json::num(self.max)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<LatencySummaryMs> {
+        Some(LatencySummaryMs {
+            count: j.get("count").as_u64()?,
+            mean: j.get("mean_ms").as_f64()?,
+            p50: j.get("p50_ms").as_f64()?,
+            p90: j.get("p90_ms").as_f64()?,
+            p95: j.get("p95_ms").as_f64()?,
+            p99: j.get("p99_ms").as_f64()?,
+            max: j.get("max_ms").as_f64()?,
+        })
+    }
+}
+
+/// Run one dynamic experiment on a dataset.
+pub fn run_dynamic(ds: &Dataset, params: &DynamicParams) -> Result<DynamicOutput> {
+    let n = ds.points.len();
+    let n_inserts = params.n_inserts.min(n / 10);
+    let preload = &ds.points[..n - n_inserts];
+    let holdout = &ds.points[n - n_inserts..];
+
+    let config = GusConfig {
+        scann_nn: params.scann_nn,
+        idf_s: params.idf_s,
+        filter_p: params.filter_p,
+        n_shards: 1, // the paper's sequential single-core setting
+        scorer: params.scorer,
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), config, preload, 1)?;
+
+    // --- insertion latencies (§5.2 last paragraph) ---
+    for p in holdout {
+        gus.insert(p.clone())?;
+    }
+
+    // --- sequential query pass (Figs. 9–10) ---
+    let mut rng = Rng::seeded(params.seed);
+    let cpu_before = metrics::process_cpu_time();
+    for _ in 0..params.n_queries {
+        let qi = rng.below_usize(n);
+        let _ = gus.query(&ds.points[qi], params.scann_nn)?;
+    }
+    let cpu_after = metrics::process_cpu_time();
+    let queries = gus.metrics.query_latency.count().max(1);
+
+    Ok(DynamicOutput {
+        query_ms: LatencySummaryMs::from_hist(&gus.metrics.query_latency),
+        insert_ms: LatencySummaryMs::from_hist(&gus.metrics.mutation_latency),
+        avg_cpu_ms_per_query: (cpu_after - cpu_before).as_secs_f64() * 1e3 / queries as f64,
+        peak_rss_mib: metrics::peak_rss_bytes() as f64 / (1024.0 * 1024.0),
+        n_points: gus.len(),
+    })
+}
+
+impl DynamicOutput {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", self.query_ms.to_json()),
+            ("insert", self.insert_ms.to_json()),
+            ("avg_cpu_ms_per_query", Json::num(self.avg_cpu_ms_per_query)),
+            ("peak_rss_mib", Json::num(self.peak_rss_mib)),
+            ("n_points", Json::num(self.n_points as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<DynamicOutput> {
+        Some(DynamicOutput {
+            query_ms: LatencySummaryMs::from_json(j.get("query"))?,
+            insert_ms: LatencySummaryMs::from_json(j.get("insert"))?,
+            avg_cpu_ms_per_query: j.get("avg_cpu_ms_per_query").as_f64()?,
+            peak_rss_mib: j.get("peak_rss_mib").as_f64()?,
+            n_points: j.get("n_points").as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    #[test]
+    fn dynamic_run_produces_sane_numbers() {
+        let ds = SyntheticConfig::arxiv_like(600, 55).generate();
+        let params = DynamicParams {
+            n_queries: 200,
+            n_inserts: 50,
+            scorer: ScorerKind::Native,
+            ..DynamicParams::default()
+        };
+        let out = run_dynamic(&ds, &params).unwrap();
+        assert_eq!(out.n_points, 600);
+        assert_eq!(out.query_ms.count, 200);
+        assert_eq!(out.insert_ms.count, 50);
+        assert!(out.query_ms.p50 > 0.0);
+        assert!(out.query_ms.p50 <= out.query_ms.p99);
+        assert!(out.insert_ms.p50 < out.query_ms.max + 1000.0);
+        assert!(out.avg_cpu_ms_per_query >= 0.0);
+        assert!(out.peak_rss_mib > 1.0);
+        // JSON roundtrip (subprocess protocol).
+        let j = out.to_json().dump();
+        let back = DynamicOutput::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.query_ms.count, 200);
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment harness: regenerates every figure/table of the paper's §5.
+//!
+//! - [`offline`]: the quality experiments (Figs. 3–8) — edge-weight
+//!   percentile curves + total edge counts for Grale and offline GUS under
+//!   the paper's parameter grids. (The paper notes offline and dynamic GUS
+//!   produce identical results, §5.1 — ours are literally the same code
+//!   path: embed → retrieve → score.)
+//! - [`dynamic`]: the serving experiments (Figs. 9–10 + insertion
+//!   latencies, §5.2) — per-configuration latency distributions, CPU time
+//!   per query, and peak memory, measured on a live [`DynamicGus`]
+//!   instance.
+//! - [`report`]: CSV/markdown/ASCII-plot output under `results/`.
+//!
+//! See DESIGN.md's experiment index for the exact figure ↔ module ↔
+//! command mapping.
+
+pub mod dynamic;
+pub mod offline;
+pub mod report;
+
+use crate::data::synthetic::SyntheticConfig;
+use crate::data::Dataset;
+
+/// Default laptop-scale sizes standing in for the paper's full datasets
+/// (ogbn-arxiv 169,343 / ogbn-products 2,449,029). Both are overridable
+/// from the CLI; the generators scale linearly.
+pub const DEFAULT_ARXIV_N: usize = 20_000;
+pub const DEFAULT_PRODUCTS_N: usize = 30_000;
+
+/// Deterministic dataset seeds (figures must be reproducible).
+pub const ARXIV_SEED: u64 = 0xa1;
+pub const PRODUCTS_SEED: u64 = 0xb2;
+
+/// Resolve a dataset by name at a given scale.
+pub fn load_dataset(name: &str, n: usize) -> Dataset {
+    match name {
+        "arxiv_like" => SyntheticConfig::arxiv_like(n, ARXIV_SEED).generate(),
+        "products_like" => SyntheticConfig::products_like(n, PRODUCTS_SEED).generate(),
+        other => panic!("unknown dataset '{other}' (arxiv_like|products_like)"),
+    }
+}
+
+/// The two datasets of the paper's evaluation.
+pub fn dataset_names() -> [&'static str; 2] {
+    ["arxiv_like", "products_like"]
+}
+
+/// Default scale per dataset.
+pub fn default_n(name: &str) -> usize {
+    match name {
+        "arxiv_like" => DEFAULT_ARXIV_N,
+        _ => DEFAULT_PRODUCTS_N,
+    }
+}

@@ -1,0 +1,206 @@
+//! Experiment output: CSV files, markdown tables, ASCII percentile plots.
+//!
+//! Everything lands under `results/` with deterministic names so
+//! EXPERIMENTS.md can reference them and reruns diff cleanly.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::graph::{standard_percentiles, WeightHistogram};
+
+/// Root of experiment outputs.
+pub fn results_dir() -> PathBuf {
+    std::env::var("GUS_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// One labeled curve for a figure: percentile → edge weight.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub total_edges: u64,
+    pub curve: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn from_histogram(label: impl Into<String>, h: &WeightHistogram) -> Series {
+        Series {
+            label: label.into(),
+            total_edges: h.total(),
+            curve: h.percentile_curve(&standard_percentiles()),
+        }
+    }
+}
+
+/// Write a figure's series as CSV: `percentile,<label1>,<label2>,...` plus a
+/// `#total_edges` comment row per series.
+pub fn write_csv(name: &str, series: &[Series]) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    for s in series {
+        writeln!(f, "# {}: total_edges={}", s.label, s.total_edges)?;
+    }
+    write!(f, "percentile")?;
+    for s in series {
+        write!(f, ",{}", s.label.replace(',', ";"))?;
+    }
+    writeln!(f)?;
+    if let Some(first) = series.first() {
+        for (i, &(p, _)) in first.curve.iter().enumerate() {
+            write!(f, "{p}")?;
+            for s in series {
+                write!(f, ",{:.6}", s.curve[i].1)?;
+            }
+            writeln!(f)?;
+        }
+    }
+    Ok(path)
+}
+
+/// Render an ASCII plot of the percentile curves (stdout-friendly stand-in
+/// for the paper's figures).
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== {title} ===\n"));
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks: &[u8] = b"*o+x#@%&";
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(p, w) in &s.curve {
+            let x = ((p / 100.0) * (width - 1) as f64).round() as usize;
+            let y = ((1.0 - w.clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+            grid[y.min(height - 1)][x.min(width - 1)] = mark;
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let yval = 1.0 - i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:5.2} |"));
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str("      +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str("       0%");
+    out.push_str(&" ".repeat(width.saturating_sub(12)));
+    out.push_str("100%\n");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} {}  (edges: {})\n",
+            marks[si % marks.len()] as char,
+            s.label,
+            s.total_edges
+        ));
+    }
+    out
+}
+
+/// Append a markdown section to `results/SUMMARY.md`.
+pub fn append_summary(section: &str) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("SUMMARY.md");
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{section}\n")?;
+    Ok(())
+}
+
+/// Write a generic markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", headers.join(" | ")));
+    out.push_str(&format!(
+        "|{}\n",
+        headers.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Write arbitrary text to `results/<name>`.
+pub fn write_text(name: &str, text: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+/// Write CSV rows (header + data) to `results/<name>.csv`.
+pub fn write_rows_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+/// Check a path exists relative to results (test helper).
+pub fn exists(name: &str) -> bool {
+    results_dir().join(name).exists()
+}
+
+#[allow(unused)]
+fn _assert_path_is_path(_: &Path) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(weights: &[f32]) -> WeightHistogram {
+        let mut h = WeightHistogram::new(128);
+        for &w in weights {
+            h.add(w);
+        }
+        h
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        std::env::set_var("GUS_RESULTS_DIR", std::env::temp_dir().join("gus-results-test"));
+        let s1 = Series::from_histogram("a", &hist(&[0.1, 0.5, 0.9]));
+        let s2 = Series::from_histogram("b", &hist(&[0.2, 0.8]));
+        let path = write_csv("unittest_fig", &[s1, s2]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("total_edges=3"));
+        assert!(text.contains("total_edges=2"));
+        assert!(text.lines().any(|l| l.starts_with("percentile,a,b")));
+        // 21 standard percentiles + headers + 2 comments.
+        assert_eq!(text.lines().count(), 2 + 1 + 21);
+        std::env::remove_var("GUS_RESULTS_DIR");
+    }
+
+    #[test]
+    fn ascii_plot_contains_labels() {
+        let s = Series::from_histogram("curve-x", &hist(&[0.3, 0.6]));
+        let plot = ascii_plot("t", &[s], 40, 10);
+        assert!(plot.contains("curve-x"));
+        assert!(plot.contains("edges: 2"));
+        assert!(plot.lines().count() > 10);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert_eq!(t.lines().count(), 4);
+        assert!(t.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,384 @@
+//! Point features and dataset schemas.
+//!
+//! Dynamic GUS operates on *multimodal* points: each point carries several
+//! features of different kinds (the paper's motivating examples are video
+//! visual/audio/text signals; its experiments use dense embeddings plus a
+//! publication year for ogbn-arxiv and a co-purchase set for ogbn-products).
+//!
+//! A [`Schema`] declares, per dataset, the ordered list of feature channels
+//! and how each is bucketed by LSH and featurized for the pairwise model;
+//! [`Point`] is a concrete point.
+
+use crate::util::json::Json;
+
+/// One feature value. The three kinds cover the paper's datasets:
+/// - `Dense`: a fixed-dimension real embedding (arxiv title/abstract
+///   embedding, products bag-of-words PCA),
+/// - `Tokens`: a set of discrete token ids (products co-purchase list),
+/// - `Scalar`: a single real value (arxiv publication year).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FeatureValue {
+    Dense(Vec<f32>),
+    Tokens(Vec<u64>),
+    Scalar(f32),
+}
+
+impl FeatureValue {
+    pub fn kind(&self) -> FeatureKind {
+        match self {
+            FeatureValue::Dense(_) => FeatureKind::Dense,
+            FeatureValue::Tokens(_) => FeatureKind::Tokens,
+            FeatureValue::Scalar(_) => FeatureKind::Scalar,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            FeatureValue::Dense(v) => {
+                Json::obj(vec![("dense", Json::f32_arr(v))])
+            }
+            FeatureValue::Tokens(t) => {
+                Json::obj(vec![("tokens", Json::u64_arr(t))])
+            }
+            FeatureValue::Scalar(x) => Json::obj(vec![("scalar", Json::num(*x as f64))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<FeatureValue> {
+        if let Some(v) = j.get("dense").to_f32_vec() {
+            if !j.get("dense").is_null() {
+                return Some(FeatureValue::Dense(v));
+            }
+        }
+        if !j.get("tokens").is_null() {
+            return Some(FeatureValue::Tokens(j.get("tokens").to_u64_vec()?));
+        }
+        if let Some(x) = j.get("scalar").as_f32() {
+            return Some(FeatureValue::Scalar(x));
+        }
+        None
+    }
+}
+
+/// Feature kind tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureKind {
+    Dense,
+    Tokens,
+    Scalar,
+}
+
+/// External point identifier (user-facing, stable). Internally the index
+/// assigns compact slots; the coordinator maps between the two.
+pub type PointId = u64;
+
+/// A point: id + one value per schema channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    pub id: PointId,
+    pub features: Vec<FeatureValue>,
+}
+
+impl Point {
+    pub fn new(id: PointId, features: Vec<FeatureValue>) -> Point {
+        Point { id, features }
+    }
+
+    /// The dense feature at channel `ch` (panics on kind mismatch —
+    /// schema validation happens at ingest).
+    pub fn dense(&self, ch: usize) -> &[f32] {
+        match &self.features[ch] {
+            FeatureValue::Dense(v) => v,
+            other => panic!("channel {ch} is not dense: {:?}", other.kind()),
+        }
+    }
+
+    pub fn tokens(&self, ch: usize) -> &[u64] {
+        match &self.features[ch] {
+            FeatureValue::Tokens(t) => t,
+            other => panic!("channel {ch} is not tokens: {:?}", other.kind()),
+        }
+    }
+
+    pub fn scalar(&self, ch: usize) -> f32 {
+        match &self.features[ch] {
+            FeatureValue::Scalar(x) => *x,
+            other => panic!("channel {ch} is not scalar: {:?}", other.kind()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            (
+                "features",
+                Json::Arr(self.features.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Point> {
+        let id = j.get("id").as_u64()?;
+        let features = j
+            .get("features")
+            .as_arr()?
+            .iter()
+            .map(FeatureValue::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(Point { id, features })
+    }
+}
+
+/// Per-channel schema entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelSchema {
+    pub name: String,
+    pub kind: FeatureKind,
+    /// Dimension for dense channels (validation + featurizer sizing).
+    pub dim: usize,
+}
+
+/// Dataset schema: the ordered channels every point must carry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    pub name: String,
+    pub channels: Vec<ChannelSchema>,
+}
+
+/// Schema validation failure.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SchemaError {
+    #[error("point {id}: expected {expected} channels, got {got}")]
+    ChannelCount { id: PointId, expected: usize, got: usize },
+    #[error("point {id} channel {channel} ({name}): expected {expected:?}, got {got:?}")]
+    KindMismatch {
+        id: PointId,
+        channel: usize,
+        name: String,
+        expected: FeatureKind,
+        got: FeatureKind,
+    },
+    #[error("point {id} channel {channel} ({name}): expected dim {expected}, got {got}")]
+    DimMismatch {
+        id: PointId,
+        channel: usize,
+        name: String,
+        expected: usize,
+        got: usize,
+    },
+    #[error("point {id} channel {channel} ({name}): non-finite value")]
+    NonFinite { id: PointId, channel: usize, name: String },
+}
+
+impl Schema {
+    /// The `ogbn-arxiv`-shaped schema: 128-d dense embedding + year scalar.
+    pub fn arxiv_like(dim: usize) -> Schema {
+        Schema {
+            name: "arxiv_like".to_string(),
+            channels: vec![
+                ChannelSchema {
+                    name: "embedding".to_string(),
+                    kind: FeatureKind::Dense,
+                    dim,
+                },
+                ChannelSchema {
+                    name: "year".to_string(),
+                    kind: FeatureKind::Scalar,
+                    dim: 1,
+                },
+            ],
+        }
+    }
+
+    /// The `ogbn-products`-shaped schema: 100-d dense embedding +
+    /// co-purchase token set.
+    pub fn products_like(dim: usize) -> Schema {
+        Schema {
+            name: "products_like".to_string(),
+            channels: vec![
+                ChannelSchema {
+                    name: "embedding".to_string(),
+                    kind: FeatureKind::Dense,
+                    dim,
+                },
+                ChannelSchema {
+                    name: "copurchase".to_string(),
+                    kind: FeatureKind::Tokens,
+                    dim: 0,
+                },
+            ],
+        }
+    }
+
+    /// Index of the first dense channel (the scorer kernel's `q`/`C` input).
+    pub fn primary_dense_channel(&self) -> Option<usize> {
+        self.channels.iter().position(|c| c.kind == FeatureKind::Dense)
+    }
+
+    /// Dense dimension of the primary dense channel (0 if none).
+    pub fn primary_dense_dim(&self) -> usize {
+        self.primary_dense_channel()
+            .map(|i| self.channels[i].dim)
+            .unwrap_or(0)
+    }
+
+    /// Validate a point against this schema.
+    pub fn validate(&self, p: &Point) -> Result<(), SchemaError> {
+        if p.features.len() != self.channels.len() {
+            return Err(SchemaError::ChannelCount {
+                id: p.id,
+                expected: self.channels.len(),
+                got: p.features.len(),
+            });
+        }
+        for (i, (f, c)) in p.features.iter().zip(&self.channels).enumerate() {
+            if f.kind() != c.kind {
+                return Err(SchemaError::KindMismatch {
+                    id: p.id,
+                    channel: i,
+                    name: c.name.clone(),
+                    expected: c.kind,
+                    got: f.kind(),
+                });
+            }
+            match f {
+                FeatureValue::Dense(v) => {
+                    if v.len() != c.dim {
+                        return Err(SchemaError::DimMismatch {
+                            id: p.id,
+                            channel: i,
+                            name: c.name.clone(),
+                            expected: c.dim,
+                            got: v.len(),
+                        });
+                    }
+                    if v.iter().any(|x| !x.is_finite()) {
+                        return Err(SchemaError::NonFinite {
+                            id: p.id,
+                            channel: i,
+                            name: c.name.clone(),
+                        });
+                    }
+                }
+                FeatureValue::Scalar(x) => {
+                    if !x.is_finite() {
+                        return Err(SchemaError::NonFinite {
+                            id: p.id,
+                            channel: i,
+                            name: c.name.clone(),
+                        });
+                    }
+                }
+                FeatureValue::Tokens(_) => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arxiv_point(id: u64, dim: usize) -> Point {
+        Point::new(
+            id,
+            vec![
+                FeatureValue::Dense(vec![0.5; dim]),
+                FeatureValue::Scalar(2020.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn validate_ok() {
+        let s = Schema::arxiv_like(8);
+        s.validate(&arxiv_point(1, 8)).unwrap();
+    }
+
+    #[test]
+    fn validate_channel_count() {
+        let s = Schema::arxiv_like(8);
+        let p = Point::new(1, vec![FeatureValue::Scalar(1.0)]);
+        assert!(matches!(
+            s.validate(&p),
+            Err(SchemaError::ChannelCount { expected: 2, got: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_kind_mismatch() {
+        let s = Schema::arxiv_like(8);
+        let p = Point::new(
+            1,
+            vec![FeatureValue::Tokens(vec![1]), FeatureValue::Scalar(1.0)],
+        );
+        assert!(matches!(s.validate(&p), Err(SchemaError::KindMismatch { .. })));
+    }
+
+    #[test]
+    fn validate_dim_mismatch() {
+        let s = Schema::arxiv_like(8);
+        assert!(matches!(
+            s.validate(&arxiv_point(1, 7)),
+            Err(SchemaError::DimMismatch { expected: 8, got: 7, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_non_finite() {
+        let s = Schema::arxiv_like(2);
+        let p = Point::new(
+            1,
+            vec![
+                FeatureValue::Dense(vec![1.0, f32::NAN]),
+                FeatureValue::Scalar(2020.0),
+            ],
+        );
+        assert!(matches!(s.validate(&p), Err(SchemaError::NonFinite { .. })));
+    }
+
+    #[test]
+    fn json_roundtrip_point() {
+        let p = Point::new(
+            7,
+            vec![
+                FeatureValue::Dense(vec![1.0, -2.5, 0.0]),
+                FeatureValue::Tokens(vec![3, 5, 8]),
+                FeatureValue::Scalar(2021.0),
+            ],
+        );
+        let j = p.to_json().dump();
+        let p2 = Point::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn accessors() {
+        let p = Point::new(
+            1,
+            vec![
+                FeatureValue::Dense(vec![1.0, 2.0]),
+                FeatureValue::Tokens(vec![9]),
+                FeatureValue::Scalar(3.0),
+            ],
+        );
+        assert_eq!(p.dense(0), &[1.0, 2.0]);
+        assert_eq!(p.tokens(1), &[9]);
+        assert_eq!(p.scalar(2), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn accessor_panics_on_wrong_kind() {
+        let p = Point::new(1, vec![FeatureValue::Scalar(3.0)]);
+        let _ = p.dense(0);
+    }
+
+    #[test]
+    fn schemas_have_primary_dense() {
+        assert_eq!(Schema::arxiv_like(128).primary_dense_dim(), 128);
+        assert_eq!(Schema::products_like(100).primary_dense_dim(), 100);
+        assert_eq!(Schema::arxiv_like(128).primary_dense_channel(), Some(0));
+    }
+}

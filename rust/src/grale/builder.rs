@@ -1,0 +1,415 @@
+//! Grale graph construction: bucket table → splitting → scoring pairs.
+
+use crate::features::Point;
+use crate::graph::{Graph, WeightHistogram};
+use crate::lsh::Bucketer;
+use crate::scorer::PairScorer;
+use crate::util::hash::{mix2, FxHashMap};
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// Grale configuration (the paper's experiment knobs).
+#[derive(Debug, Clone)]
+pub struct GraleConfig {
+    /// `Bucket-S`: split any bucket larger than this into random
+    /// sub-buckets of at most this size. `None` = no splitting (Fig. 3).
+    pub bucket_split_size: Option<usize>,
+    /// `Top-K` post-processing: keep each point's K heaviest edges.
+    /// `None` = keep everything.
+    pub top_k: Option<usize>,
+    /// Seed for the random bucket subdivision.
+    pub seed: u64,
+    /// Materialize the graph (needed by downstream examples; costs memory).
+    pub materialize_graph: bool,
+    /// Worker threads for the scoring pass.
+    pub threads: usize,
+}
+
+impl Default for GraleConfig {
+    fn default() -> Self {
+        GraleConfig {
+            bucket_split_size: None,
+            top_k: None,
+            seed: 0x6772_616c_65,
+            materialize_graph: false,
+            threads: crate::util::threadpool::default_parallelism(),
+        }
+    }
+}
+
+/// Result of a Grale build.
+pub struct GraleOutput {
+    /// Distribution of edge weights over **directed** edges (the paper's
+    /// totals convention: each scored pair contributes one edge per
+    /// endpoint; with Top-K, each point's kept list counts).
+    pub histogram: WeightHistogram,
+    /// Unordered pairs scored by the model.
+    pub scored_pairs: u64,
+    /// Directed edge count reported under the figures.
+    pub directed_edges: u64,
+    /// Number of buckets before splitting.
+    pub n_buckets: usize,
+    /// Number of (sub-)buckets after splitting.
+    pub n_split_buckets: usize,
+    /// Materialized (undirected, possibly pruned) graph if requested.
+    pub graph: Option<Graph>,
+}
+
+/// Offline Grale builder.
+pub struct GraleBuilder<'a> {
+    bucketer: &'a Bucketer,
+    scorer: &'a dyn PairScorer,
+    config: GraleConfig,
+}
+
+impl<'a> GraleBuilder<'a> {
+    pub fn new(
+        bucketer: &'a Bucketer,
+        scorer: &'a dyn PairScorer,
+        config: GraleConfig,
+    ) -> GraleBuilder<'a> {
+        GraleBuilder { bucketer, scorer, config }
+    }
+
+    /// Build the graph over `points`.
+    pub fn build(&self, points: &[Point]) -> GraleOutput {
+        let n = points.len();
+        let threads = self.config.threads.max(1);
+
+        // --- 1. bucket every point (parallel; pure local computation) ---
+        let point_buckets: Vec<Vec<u64>> =
+            parallel_map(n, threads, |i| self.bucketer.buckets(&points[i]));
+
+        // --- 2. bucket table ---
+        let mut table: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+        for (i, buckets) in point_buckets.iter().enumerate() {
+            for &b in buckets {
+                table.entry(b).or_default().push(i as u32);
+            }
+        }
+        let n_buckets = table.len();
+
+        // --- 3. bucket splitting (Bucket-S) ---
+        // Deterministic: each bucket's shuffle is seeded by (seed, bucket).
+        let mut split_buckets: Vec<Vec<u32>> = Vec::with_capacity(table.len());
+        let mut by_id: Vec<(u64, Vec<u32>)> = table.into_iter().collect();
+        by_id.sort_unstable_by_key(|&(b, _)| b); // deterministic order
+        for (bucket_id, mut members) in by_id {
+            match self.config.bucket_split_size {
+                Some(m) if members.len() > m => {
+                    let mut rng = Rng::seeded(mix2(self.config.seed, bucket_id));
+                    rng.shuffle(&mut members);
+                    for chunk in members.chunks(m) {
+                        split_buckets.push(chunk.to_vec());
+                    }
+                }
+                _ => split_buckets.push(members),
+            }
+        }
+        let n_split_buckets = split_buckets.len();
+
+        // --- 4. per-point membership lists over split buckets ---
+        let mut memberships: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (bi, bucket) in split_buckets.iter().enumerate() {
+            for &p in bucket {
+                memberships[p as usize].push(bi as u32);
+            }
+        }
+
+        // --- 5. enumerate + score pairs (parallel over points) ---
+        // Pair (p, q) with p < q is handled in p's iteration; dedup within
+        // p via sort+dedup of its candidate list.
+        struct Local {
+            hist: WeightHistogram,
+            pairs: u64,
+            /// Top-K mode: per-node bounded best lists, else raw edges.
+            kept: FxHashMap<u32, Vec<(f32, u32)>>,
+            edges: Vec<(u32, u32, f32)>,
+        }
+        let top_k = self.config.top_k;
+        let need_edges = self.config.materialize_graph && top_k.is_none();
+        let locals: Vec<Local> = {
+            let chunk = n.div_ceil(threads);
+            let ranges: Vec<std::ops::Range<usize>> = (0..threads)
+                .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+                .filter(|r| !r.is_empty())
+                .collect();
+            parallel_map(ranges.len(), threads, |ri| {
+                let range = ranges[ri].clone();
+                let mut local = Local {
+                    hist: WeightHistogram::default_bins(),
+                    pairs: 0,
+                    kept: FxHashMap::default(),
+                    edges: Vec::new(),
+                };
+                let mut cands: Vec<u32> = Vec::new();
+                for p in range {
+                    cands.clear();
+                    for &bi in &memberships[p] {
+                        for &q in &split_buckets[bi as usize] {
+                            if (q as usize) > p {
+                                cands.push(q);
+                            }
+                        }
+                    }
+                    cands.sort_unstable();
+                    cands.dedup();
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    let cand_pts: Vec<&Point> =
+                        cands.iter().map(|&q| &points[q as usize]).collect();
+                    let scores = self.scorer.score_batch(&points[p], &cand_pts);
+                    local.pairs += cands.len() as u64;
+                    for (&q, &w) in cands.iter().zip(&scores) {
+                        match top_k {
+                            None => {
+                                // Directed convention: both endpoints see it.
+                                local.hist.add(w);
+                                local.hist.add(w);
+                                if need_edges {
+                                    local.edges.push((p as u32, q, w));
+                                }
+                            }
+                            Some(k) => {
+                                push_topk(local.kept.entry(p as u32).or_default(), k, w, q);
+                                push_topk(local.kept.entry(q).or_default(), k, w, p as u32);
+                            }
+                        }
+                    }
+                }
+                local
+            })
+        };
+
+        // --- 6. merge ---
+        let mut histogram = WeightHistogram::default_bins();
+        let mut scored_pairs = 0u64;
+        let mut directed_edges = 0u64;
+        let mut graph = self.config.materialize_graph.then(Graph::new);
+        match top_k {
+            None => {
+                for l in &locals {
+                    histogram.merge(&l.hist);
+                    scored_pairs += l.pairs;
+                }
+                directed_edges = scored_pairs * 2;
+                if let Some(g) = &mut graph {
+                    for l in &locals {
+                        for &(p, q, w) in &l.edges {
+                            g.add_edge(points[p as usize].id, points[q as usize].id, w);
+                        }
+                    }
+                    for p in points {
+                        g.add_node(p.id);
+                    }
+                }
+            }
+            Some(k) => {
+                // Merge per-node kept lists across threads, truncate to k.
+                let mut merged: FxHashMap<u32, Vec<(f32, u32)>> = FxHashMap::default();
+                for l in locals {
+                    scored_pairs += l.pairs;
+                    for (node, list) in l.kept {
+                        let entry = merged.entry(node).or_default();
+                        for (w, other) in list {
+                            push_topk(entry, k, w, other);
+                        }
+                    }
+                }
+                let mut edge_set: std::collections::BTreeSet<(u32, u32)> = Default::default();
+                let mut edge_weight: FxHashMap<(u32, u32), f32> = FxHashMap::default();
+                for (node, list) in &merged {
+                    for &(w, other) in list {
+                        histogram.add(w);
+                        directed_edges += 1;
+                        if graph.is_some() {
+                            let key = (*node.min(&other), *node.max(&other));
+                            edge_set.insert(key);
+                            edge_weight.insert(key, w);
+                        }
+                    }
+                }
+                if let Some(g) = &mut graph {
+                    for (a, b) in edge_set {
+                        g.add_edge(
+                            points[a as usize].id,
+                            points[b as usize].id,
+                            edge_weight[&(a, b)],
+                        );
+                    }
+                    for p in points {
+                        g.add_node(p.id);
+                    }
+                }
+            }
+        }
+
+        GraleOutput {
+            histogram,
+            scored_pairs,
+            directed_edges,
+            n_buckets,
+            n_split_buckets,
+            graph,
+        }
+    }
+}
+
+/// Maintain a bounded top-k list (min kept at the end; k is small).
+fn push_topk(list: &mut Vec<(f32, u32)>, k: usize, w: f32, other: u32) {
+    if list.len() < k {
+        list.push((w, other));
+        if list.len() == k {
+            list.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        }
+        return;
+    }
+    let worst = list.last().copied().unwrap();
+    if w > worst.0 || (w == worst.0 && other < worst.1) {
+        // Insert in sorted position.
+        let pos = list
+            .partition_point(|&(lw, lo)| lw > w || (lw == w && lo < other));
+        list.pop();
+        list.insert(pos, (w, other));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureValue, Schema};
+    use crate::scorer::{MlpWeights, NativeScorer, PairFeaturizer, HIDDEN};
+
+    fn setup(n: usize) -> (Bucketer, NativeScorer, Vec<Point>) {
+        let schema = Schema::arxiv_like(8);
+        let bucketer = Bucketer::with_defaults(&schema, 42);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), HIDDEN, 7);
+        let scorer = NativeScorer::new(f, w);
+        let mut rng = Rng::seeded(1);
+        // Two clusters so some pairs share buckets.
+        let pts = (0..n)
+            .map(|i| {
+                let center = if i % 2 == 0 { 1.0 } else { -1.0 };
+                let v: Vec<f32> = (0..8)
+                    .map(|_| center + 0.1 * rng.normal() as f32)
+                    .collect();
+                Point::new(
+                    i as u64,
+                    vec![FeatureValue::Dense(v), FeatureValue::Scalar(2020.0)],
+                )
+            })
+            .collect();
+        (bucketer, scorer, pts)
+    }
+
+    #[test]
+    fn builds_and_counts_consistently() {
+        let (b, s, pts) = setup(60);
+        let out = GraleBuilder::new(&b, &s, GraleConfig::default()).build(&pts);
+        assert!(out.scored_pairs > 0, "clustered points must share buckets");
+        assert_eq!(out.directed_edges, out.scored_pairs * 2);
+        assert_eq!(out.histogram.total(), out.directed_edges);
+        assert!(out.n_buckets > 0);
+        assert_eq!(out.n_buckets, out.n_split_buckets); // no splitting
+        assert!(out.graph.is_none());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (b, s, pts) = setup(50);
+        let cfg = GraleConfig {
+            bucket_split_size: Some(5),
+            ..GraleConfig::default()
+        };
+        let o1 = GraleBuilder::new(&b, &s, cfg.clone()).build(&pts);
+        let o2 = GraleBuilder::new(&b, &s, cfg).build(&pts);
+        assert_eq!(o1.scored_pairs, o2.scored_pairs);
+        assert_eq!(o1.n_split_buckets, o2.n_split_buckets);
+        assert_eq!(
+            o1.histogram.percentile_curve(&[10.0, 50.0, 90.0]),
+            o2.histogram.percentile_curve(&[10.0, 50.0, 90.0])
+        );
+    }
+
+    #[test]
+    fn splitting_reduces_pairs() {
+        let (b, s, pts) = setup(80);
+        let full = GraleBuilder::new(&b, &s, GraleConfig::default()).build(&pts);
+        let split = GraleBuilder::new(
+            &b,
+            &s,
+            GraleConfig { bucket_split_size: Some(4), ..GraleConfig::default() },
+        )
+        .build(&pts);
+        assert!(split.scored_pairs < full.scored_pairs);
+        assert!(split.n_split_buckets > full.n_buckets);
+        // Every sub-bucket respects the cap — implied by pair counts, and
+        // the scored pairs are a subset of the unsplit ones.
+    }
+
+    #[test]
+    fn top_k_bounds_directed_edges() {
+        let (b, s, pts) = setup(60);
+        let k = 3;
+        let out = GraleBuilder::new(
+            &b,
+            &s,
+            GraleConfig { top_k: Some(k), ..GraleConfig::default() },
+        )
+        .build(&pts);
+        assert!(out.directed_edges <= (pts.len() * k) as u64);
+        assert_eq!(out.histogram.total(), out.directed_edges);
+        // Top-k keeps the heaviest edges: its mean weight should not drop.
+        let full = GraleBuilder::new(&b, &s, GraleConfig::default()).build(&pts);
+        assert!(out.histogram.mean() >= full.histogram.mean() - 1e-9);
+    }
+
+    #[test]
+    fn materialized_graph_matches_counts() {
+        let (b, s, pts) = setup(40);
+        let out = GraleBuilder::new(
+            &b,
+            &s,
+            GraleConfig { materialize_graph: true, ..GraleConfig::default() },
+        )
+        .build(&pts);
+        let g = out.graph.as_ref().unwrap();
+        assert_eq!(g.n_edges() as u64, out.scored_pairs);
+        assert_eq!(g.n_nodes(), pts.len());
+    }
+
+    #[test]
+    fn single_thread_equals_parallel() {
+        let (b, s, pts) = setup(70);
+        let cfg1 = GraleConfig { threads: 1, ..GraleConfig::default() };
+        let cfg4 = GraleConfig { threads: 4, ..GraleConfig::default() };
+        let o1 = GraleBuilder::new(&b, &s, cfg1).build(&pts);
+        let o4 = GraleBuilder::new(&b, &s, cfg4).build(&pts);
+        assert_eq!(o1.scored_pairs, o4.scored_pairs);
+        assert_eq!(o1.histogram.total(), o4.histogram.total());
+        assert_eq!(
+            o1.histogram.percentile_curve(&[25.0, 75.0]),
+            o4.histogram.percentile_curve(&[25.0, 75.0])
+        );
+    }
+
+    #[test]
+    fn push_topk_keeps_best() {
+        let mut list = Vec::new();
+        for (w, o) in [(0.5, 1u32), (0.9, 2), (0.1, 3), (0.7, 4), (0.95, 5)] {
+            push_topk(&mut list, 3, w, o);
+        }
+        let others: Vec<u32> = list.iter().map(|&(_, o)| o).collect();
+        assert_eq!(others, vec![5, 2, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let (b, s, _) = setup(0);
+        let out = GraleBuilder::new(&b, &s, GraleConfig::default()).build(&[]);
+        assert_eq!(out.scored_pairs, 0);
+        assert_eq!(out.histogram.total(), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Offline Grale baseline (§4; Halcrow et al., KDD'20).
+//!
+//! Grale's three steps: (1) a trained pairwise model, (2) *scoring pairs*
+//! found by LSH bucketing, (3) scoring every pair. This module reproduces
+//! the graph-building part faithfully enough to serve as the paper's
+//! comparison baseline:
+//!
+//! - bucket table: bucket id → member points,
+//! - optional **bucket splitting** (`Bucket-S`): any bucket larger than `m`
+//!   is randomly subdivided into sub-buckets of size ≤ m (the paper's
+//!   mechanism for bounding the O(bucket²) pair blow-up),
+//! - scoring-pair enumeration with per-point dedup (a pair sharing several
+//!   buckets is scored once),
+//! - scoring through any [`PairScorer`], streamed into a
+//!   [`WeightHistogram`] and optionally materialized as a [`Graph`] with
+//!   Top-K pruning.
+//!
+//! Edge counting follows the paper's convention: "the number of edges
+//!   returned for a point p is always the number of scoring pairs that
+//!   contain p" — i.e. each unordered pair contributes 2 directed edges to
+//! the totals reported under the figures ([`GraleOutput::directed_edges`]).
+
+pub mod builder;
+
+pub use builder::{GraleBuilder, GraleConfig, GraleOutput};

@@ -1,0 +1,709 @@
+//! Dynamic sparse ANN index — the ScaNN substitute.
+//!
+//! The paper uses ScaNN's (Google-internal) dynamic sparse-vector mode with
+//! distance `Dist(p,q) = -M(p)·M(q)` and two retrieval primitives (§2):
+//! top-k nearest and all-points-below-a-distance-threshold. This module
+//! provides the same contract with an inverted (posting-list) index:
+//!
+//! - **exact** for sparse dot products (every candidate sharing ≥1 dimension
+//!   is scored, everything else has dot = 0), which makes Lemma 4.1
+//!   experiments deterministic;
+//! - **dynamic**: insert / update / delete at sub-millisecond cost via
+//!   generation-tagged slots and tombstoned postings with incremental
+//!   compaction — no global rebuilds, matching the paper's freshness
+//!   requirement (mutations visible to queries immediately);
+//! - optional posting-budget approximation ([`QueryParams::max_postings`])
+//!   to emulate ScaNN's accuracy/latency knob for ablations.
+//!
+//! [`sharded::ShardedIndex`] wraps the core in N independently-locked
+//! shards for concurrent serving.
+
+pub mod sharded;
+
+use crate::features::PointId;
+use crate::sparse::SparseVec;
+use crate::util::hash::FxHashMap;
+
+/// A retrieved neighbor: external id + dot product (`dist = -dot`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: PointId,
+    pub dot: f32,
+}
+
+impl Neighbor {
+    /// The paper's distance.
+    #[inline]
+    pub fn dist(&self) -> f32 {
+        -self.dot
+    }
+}
+
+/// Query-time knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryParams {
+    /// Exclude this id from results (a point is never its own neighbor).
+    pub exclude: Option<PointId>,
+    /// Approximation budget: stop scoring after this many postings
+    /// (0 = unlimited = exact). Emulates ScaNN's recall/latency dial.
+    pub max_postings: usize,
+}
+
+impl Default for QueryParams {
+    fn default() -> Self {
+        QueryParams { exclude: None, max_postings: 0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Posting {
+    slot: u32,
+    generation: u32,
+    weight: f32,
+}
+
+#[derive(Debug, Default)]
+struct PostingList {
+    entries: Vec<Posting>,
+    dead: u32,
+}
+
+#[derive(Debug)]
+struct Slot {
+    id: PointId,
+    generation: u32,
+    alive: bool,
+    vec: SparseVec,
+}
+
+/// Reusable query scratch space: dense accumulator over slots plus the
+/// touched list. Reusing it across queries removes all per-query allocation
+/// from the hot path (see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct QueryScratch {
+    acc: Vec<f32>,
+    touched: Vec<u32>,
+    heap: Vec<(f32, PointId)>,
+}
+
+/// Single-shard dynamic sparse ANN index.
+pub struct SparseAnn {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    id_to_slot: FxHashMap<PointId, u32>,
+    postings: FxHashMap<u64, PostingList>,
+    live_points: usize,
+    live_postings: usize,
+    dead_postings: usize,
+    /// Compact a posting list when dead entries exceed this fraction.
+    compact_threshold: f32,
+}
+
+impl Default for SparseAnn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SparseAnn {
+    pub fn new() -> SparseAnn {
+        SparseAnn {
+            slots: Vec::new(),
+            free: Vec::new(),
+            id_to_slot: FxHashMap::default(),
+            postings: FxHashMap::default(),
+            live_points: 0,
+            live_postings: 0,
+            dead_postings: 0,
+            compact_threshold: 0.5,
+        }
+    }
+
+    /// Number of live points.
+    pub fn len(&self) -> usize {
+        self.live_points
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_points == 0
+    }
+
+    /// Whether `id` is currently present.
+    pub fn contains(&self, id: PointId) -> bool {
+        self.id_to_slot.contains_key(&id)
+    }
+
+    /// The stored embedding for `id`, if present.
+    pub fn get(&self, id: PointId) -> Option<&SparseVec> {
+        self.id_to_slot.get(&id).map(|&s| &self.slots[s as usize].vec)
+    }
+
+    /// Insert or update (upsert) a point's embedding. Returns `true` if the
+    /// point was already present (update).
+    pub fn upsert(&mut self, id: PointId, vec: SparseVec) -> bool {
+        let existed = self.remove(id);
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let sl = &mut self.slots[s as usize];
+                sl.id = id;
+                sl.generation = sl.generation.wrapping_add(1);
+                sl.alive = true;
+                sl.vec = vec;
+                s
+            }
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    id,
+                    generation: 0,
+                    alive: true,
+                    vec,
+                });
+                s
+            }
+        };
+        let generation = self.slots[slot as usize].generation;
+        // The borrow checker: read dims/weights through a clone-free split.
+        let nnz = self.slots[slot as usize].vec.nnz();
+        for i in 0..nnz {
+            let (dim, w) = {
+                let v = &self.slots[slot as usize].vec;
+                (v.dims()[i], v.weights()[i])
+            };
+            self.postings.entry(dim).or_default().entries.push(Posting {
+                slot,
+                generation,
+                weight: w,
+            });
+        }
+        self.live_postings += nnz;
+        self.id_to_slot.insert(id, slot);
+        self.live_points += 1;
+        existed
+    }
+
+    /// Delete a point. Returns `true` if it was present. O(1): postings
+    /// become tombstones invalidated by the generation check and are
+    /// reclaimed lazily by per-list compaction.
+    pub fn remove(&mut self, id: PointId) -> bool {
+        let Some(slot) = self.id_to_slot.remove(&id) else {
+            return false;
+        };
+        let sl = &mut self.slots[slot as usize];
+        sl.alive = false;
+        let nnz = sl.vec.nnz();
+        self.live_points -= 1;
+        self.live_postings -= nnz;
+        self.dead_postings += nnz;
+        // Account the dead entries on their lists so compaction can trigger.
+        let dims: Vec<u64> = sl.vec.dims().to_vec();
+        for d in dims {
+            if let Some(list) = self.postings.get_mut(&d) {
+                list.dead += 1;
+                if list.dead as f32 > list.entries.len() as f32 * self.compact_threshold {
+                    Self::compact_list(&self.slots, list, &mut self.dead_postings);
+                    if list.entries.is_empty() {
+                        self.postings.remove(&d);
+                    }
+                }
+            }
+        }
+        self.free.push(slot);
+        true
+    }
+
+    fn compact_list(slots: &[Slot], list: &mut PostingList, dead_total: &mut usize) {
+        let before = list.entries.len();
+        list.entries.retain(|p| {
+            let sl = &slots[p.slot as usize];
+            sl.alive && sl.generation == p.generation
+        });
+        let removed = before - list.entries.len();
+        *dead_total = dead_total.saturating_sub(removed);
+        list.dead = 0;
+    }
+
+    /// Force-compact every posting list (periodic maintenance).
+    pub fn compact_all(&mut self) {
+        let slots = std::mem::take(&mut self.slots);
+        self.postings.retain(|_, list| {
+            Self::compact_list(&slots, list, &mut self.dead_postings);
+            !list.entries.is_empty()
+        });
+        self.slots = slots;
+        self.dead_postings = 0;
+    }
+
+    /// Score all points sharing ≥ 1 dimension with `query` into the scratch
+    /// accumulator; returns number of postings scanned.
+    fn accumulate(&self, query: &SparseVec, params: &QueryParams, scratch: &mut QueryScratch) -> usize {
+        scratch.acc.resize(self.slots.len(), 0.0);
+        scratch.touched.clear();
+        let mut scanned = 0usize;
+        'outer: for (dim, qw) in query.iter() {
+            let Some(list) = self.postings.get(&dim) else {
+                continue;
+            };
+            for p in &list.entries {
+                let sl = &self.slots[p.slot as usize];
+                if !sl.alive || sl.generation != p.generation {
+                    continue;
+                }
+                scanned += 1;
+                let a = &mut scratch.acc[p.slot as usize];
+                if *a == 0.0 {
+                    scratch.touched.push(p.slot);
+                }
+                *a += qw * p.weight;
+                if params.max_postings != 0 && scanned >= params.max_postings {
+                    break 'outer;
+                }
+            }
+        }
+        scanned
+    }
+
+    /// Top-k nearest (highest dot / lowest dist). Deterministic: ties in dot
+    /// are broken by ascending id. Only points with `dot > 0` are returned —
+    /// with the strictly-positive embeddings of §4.1 these are exactly the
+    /// points sharing ≥ 1 bucket (Lemma 4.1); everything else is at the
+    /// maximal distance 0 and is not a neighbor.
+    pub fn top_k(
+        &self,
+        query: &SparseVec,
+        k: usize,
+        params: QueryParams,
+        scratch: &mut QueryScratch,
+    ) -> Vec<Neighbor> {
+        if k == 0 || self.live_points == 0 {
+            return Vec::new();
+        }
+        self.accumulate(query, &params, scratch);
+        // Select top-k by (dot desc, id asc) with a bounded min-heap
+        // materialized as a sorted insertion buffer (k is small: 10–1000).
+        let heap = &mut scratch.heap;
+        heap.clear();
+        for &slot in &scratch.touched {
+            let dot = scratch.acc[slot as usize];
+            scratch.acc[slot as usize] = 0.0; // reset for next query
+            if dot <= 0.0 {
+                continue;
+            }
+            let id = self.slots[slot as usize].id;
+            if params.exclude == Some(id) {
+                continue;
+            }
+            if heap.len() < k {
+                heap.push((dot, id));
+                if heap.len() == k {
+                    // Build min-heap ordering lazily: sort once full.
+                    heap.sort_unstable_by(cmp_heap);
+                }
+            } else {
+                // heap[0] is the current worst (smallest dot, largest id).
+                if cmp_candidate(dot, id, heap[0]) {
+                    heap[0] = (dot, id);
+                    sift_down(heap);
+                }
+            }
+        }
+        if heap.len() < k {
+            heap.sort_unstable_by(cmp_heap);
+        }
+        let mut out: Vec<Neighbor> =
+            heap.iter().map(|&(dot, id)| Neighbor { id, dot }).collect();
+        out.sort_unstable_by(|a, b| {
+            b.dot
+                .partial_cmp(&a.dot)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        out
+    }
+
+    /// All points with `Dist ≤ tau` i.e. `dot ≥ -tau`. With `tau` slightly
+    /// below 0 this is the paper's "all points with negative distance"
+    /// (Lemma 4.1). Results sorted by (dot desc, id asc).
+    pub fn threshold(
+        &self,
+        query: &SparseVec,
+        tau: f32,
+        params: QueryParams,
+        scratch: &mut QueryScratch,
+    ) -> Vec<Neighbor> {
+        self.accumulate(query, &params, scratch);
+        let min_dot = -tau;
+        let mut out = Vec::new();
+        for &slot in &scratch.touched {
+            let dot = scratch.acc[slot as usize];
+            scratch.acc[slot as usize] = 0.0;
+            // `dot > 0` is implied for touched slots with positive weights,
+            // but embeddings may in principle carry any weights: check.
+            if dot >= min_dot && dot != 0.0 {
+                let id = self.slots[slot as usize].id;
+                if params.exclude != Some(id) {
+                    out.push(Neighbor { id, dot });
+                }
+            }
+        }
+        out.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// Index statistics (Fig. 10 memory accounting + ops).
+    pub fn stats(&self) -> IndexStats {
+        IndexStats {
+            live_points: self.live_points,
+            live_postings: self.live_postings,
+            dead_postings: self.dead_postings,
+            distinct_dims: self.postings.len(),
+            slot_capacity: self.slots.len(),
+            approx_bytes: self.approx_bytes(),
+        }
+    }
+
+    fn approx_bytes(&self) -> usize {
+        let posting_bytes: usize = self
+            .postings
+            .values()
+            .map(|l| l.entries.capacity() * std::mem::size_of::<Posting>() + 48)
+            .sum();
+        let slot_bytes: usize = self
+            .slots
+            .iter()
+            .map(|s| s.vec.heap_bytes() + std::mem::size_of::<Slot>())
+            .sum();
+        posting_bytes + slot_bytes + self.id_to_slot.len() * 24
+    }
+
+    /// Iterate live `(id, embedding)` pairs (offline experiments).
+    pub fn iter_live(&self) -> impl Iterator<Item = (PointId, &SparseVec)> + '_ {
+        self.slots
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| (s.id, &s.vec))
+    }
+}
+
+/// Heap ordering: worst candidate first = (dot asc, id desc).
+#[inline]
+fn cmp_heap(a: &(f32, PointId), b: &(f32, PointId)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1))
+}
+
+/// Does candidate (dot, id) beat the heap's worst `w`?
+#[inline]
+fn cmp_candidate(dot: f32, id: PointId, w: (f32, PointId)) -> bool {
+    dot > w.0 || (dot == w.0 && id < w.1)
+}
+
+fn sift_down(heap: &mut [(f32, PointId)]) {
+    let n = heap.len();
+    let mut i = 0;
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut worst = i;
+        if l < n && cmp_heap(&heap[l], &heap[worst]).is_lt() {
+            worst = l;
+        }
+        if r < n && cmp_heap(&heap[r], &heap[worst]).is_lt() {
+            worst = r;
+        }
+        if worst == i {
+            break;
+        }
+        heap.swap(i, worst);
+        i = worst;
+    }
+}
+
+/// Snapshot of index size/health.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexStats {
+    pub live_points: usize,
+    pub live_postings: usize,
+    pub dead_postings: usize,
+    pub distinct_dims: usize,
+    pub slot_capacity: usize,
+    pub approx_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::proptest;
+    use crate::util::rng::Rng;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    fn topk(ix: &SparseAnn, q: &SparseVec, k: usize) -> Vec<Neighbor> {
+        ix.top_k(q, k, QueryParams::default(), &mut QueryScratch::default())
+    }
+
+    #[test]
+    fn insert_query_basic() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(10, 1.0), (20, 1.0)]));
+        ix.upsert(2, sv(&[(20, 1.0), (30, 1.0)]));
+        ix.upsert(3, sv(&[(40, 1.0)]));
+        let r = topk(&ix, &sv(&[(10, 1.0), (20, 1.0)]), 10);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].id, 1);
+        assert_eq!(r[0].dot, 2.0);
+        assert_eq!(r[1].id, 2);
+        assert_eq!(r[1].dot, 1.0);
+        assert_eq!(r[0].dist(), -2.0);
+    }
+
+    #[test]
+    fn no_shared_dim_not_returned() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(10, 1.0)]));
+        let r = topk(&ix, &sv(&[(99, 1.0)]), 10);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn k_limits_results() {
+        let mut ix = SparseAnn::new();
+        for i in 0..100u64 {
+            ix.upsert(i, sv(&[(7, 1.0 + i as f32)]));
+        }
+        let r = topk(&ix, &sv(&[(7, 1.0)]), 5);
+        assert_eq!(r.len(), 5);
+        // Highest weights win.
+        assert_eq!(r[0].id, 99);
+        assert_eq!(r[4].id, 95);
+    }
+
+    #[test]
+    fn exclude_self() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0)]));
+        ix.upsert(2, sv(&[(5, 1.0)]));
+        let r = ix.top_k(
+            &sv(&[(5, 1.0)]),
+            10,
+            QueryParams { exclude: Some(1), max_postings: 0 },
+            &mut QueryScratch::default(),
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 2);
+    }
+
+    #[test]
+    fn delete_removes_from_results() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0)]));
+        ix.upsert(2, sv(&[(5, 2.0)]));
+        assert!(ix.remove(2));
+        assert!(!ix.remove(2));
+        let r = topk(&ix, &sv(&[(5, 1.0)]), 10);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 1);
+        assert_eq!(ix.len(), 1);
+        assert!(!ix.contains(2));
+    }
+
+    #[test]
+    fn update_replaces_embedding() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0)]));
+        let existed = ix.upsert(1, sv(&[(9, 1.0)]));
+        assert!(existed);
+        assert_eq!(ix.len(), 1);
+        assert!(topk(&ix, &sv(&[(5, 1.0)]), 10).is_empty());
+        let r = topk(&ix, &sv(&[(9, 1.0)]), 10);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn slot_reuse_does_not_resurrect() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0)]));
+        ix.remove(1);
+        // Slot of point 1 is reused by point 2 with a different dim.
+        ix.upsert(2, sv(&[(6, 1.0)]));
+        // A stale posting for dim 5 must not surface point 2.
+        let r = topk(&ix, &sv(&[(5, 1.0)]), 10);
+        assert!(r.is_empty(), "stale posting resurrected: {r:?}");
+    }
+
+    #[test]
+    fn threshold_query_negative_distance() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0), (6, 1.0)]));
+        ix.upsert(2, sv(&[(6, 1.0)]));
+        ix.upsert(3, sv(&[(7, 1.0)]));
+        // All with Dist < 0 ⇔ dot > 0: tau just below zero.
+        let r = ix.threshold(
+            &sv(&[(5, 1.0), (6, 1.0)]),
+            -f32::MIN_POSITIVE,
+            QueryParams::default(),
+            &mut QueryScratch::default(),
+        );
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].id, 1);
+    }
+
+    #[test]
+    fn threshold_tau_cuts() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 3.0)]));
+        ix.upsert(2, sv(&[(5, 1.0)]));
+        // dot(q,1)=3, dot(q,2)=1. Dist: -3 and -1. tau=-2 keeps only dist≤-2.
+        let r = ix.threshold(
+            &sv(&[(5, 1.0)]),
+            -2.0,
+            QueryParams::default(),
+            &mut QueryScratch::default(),
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 1);
+    }
+
+    #[test]
+    fn compaction_reclaims() {
+        let mut ix = SparseAnn::new();
+        for i in 0..100u64 {
+            ix.upsert(i, sv(&[(7, 1.0)]));
+        }
+        for i in 0..90u64 {
+            ix.remove(i);
+        }
+        // Per-list compaction should have fired (dead > 50%).
+        let st = ix.stats();
+        assert_eq!(st.live_points, 10);
+        assert!(
+            st.dead_postings < 60,
+            "compaction did not run: {st:?}"
+        );
+        ix.compact_all();
+        assert_eq!(ix.stats().dead_postings, 0);
+        let r = topk(&ix, &sv(&[(7, 1.0)]), 100);
+        assert_eq!(r.len(), 10);
+    }
+
+    #[test]
+    fn stats_track_sizes() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(1, 1.0), (2, 1.0)]));
+        ix.upsert(2, sv(&[(2, 1.0)]));
+        let st = ix.stats();
+        assert_eq!(st.live_points, 2);
+        assert_eq!(st.live_postings, 3);
+        assert_eq!(st.distinct_dims, 2);
+        assert!(st.approx_bytes > 0);
+    }
+
+    #[test]
+    fn max_postings_budget_approximates() {
+        let mut ix = SparseAnn::new();
+        for i in 0..50u64 {
+            ix.upsert(i, sv(&[(7, 1.0)]));
+        }
+        let r = ix.top_k(
+            &sv(&[(7, 1.0)]),
+            50,
+            QueryParams { exclude: None, max_postings: 10 },
+            &mut QueryScratch::default(),
+        );
+        assert_eq!(r.len(), 10, "budget should cap scanning");
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_id() {
+        let mut ix = SparseAnn::new();
+        for &id in &[42u64, 7, 19, 3, 88] {
+            ix.upsert(id, sv(&[(5, 1.0)]));
+        }
+        let r = topk(&ix, &sv(&[(5, 1.0)]), 3);
+        let ids: Vec<u64> = r.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![3, 7, 19]);
+    }
+
+    #[test]
+    fn empty_query_returns_nothing() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0)]));
+        assert!(topk(&ix, &SparseVec::empty(), 10).is_empty());
+        assert!(topk(&ix, &sv(&[(5, 1.0)]), 0).is_empty());
+    }
+
+    /// Property: top-k always matches a brute-force scan over live points.
+    #[test]
+    fn prop_topk_matches_bruteforce() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live: std::collections::BTreeMap<u64, SparseVec> = Default::default();
+            let n_ops = 60 + rng.below_usize(60);
+            for _ in 0..n_ops {
+                let id = rng.below(30);
+                match rng.below(10) {
+                    0..=6 => {
+                        let v = random_vec(rng);
+                        ix.upsert(id, v.clone());
+                        live.insert(id, v);
+                    }
+                    _ => {
+                        ix.remove(id);
+                        live.remove(&id);
+                    }
+                }
+            }
+            assert_eq!(ix.len(), live.len());
+            let q = random_vec(rng);
+            let k = 1 + rng.below_usize(8);
+            let got = ix.top_k(&q, k, QueryParams::default(), &mut QueryScratch::default());
+            // Brute force oracle.
+            let mut want: Vec<Neighbor> = live
+                .iter()
+                .map(|(&id, v)| Neighbor { id, dot: q.dot(v) })
+                .filter(|n| n.dot > 0.0)
+                .collect();
+            want.sort_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+            want.truncate(k);
+            assert_eq!(got.len(), want.len(), "count mismatch");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.id, w.id, "got {got:?} want {want:?}");
+                assert!((g.dot - w.dot).abs() < 1e-4);
+            }
+        });
+    }
+
+    /// Property: threshold query equals brute-force filter.
+    #[test]
+    fn prop_threshold_matches_bruteforce() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live: std::collections::BTreeMap<u64, SparseVec> = Default::default();
+            for _ in 0..40 {
+                let id = rng.below(25);
+                let v = random_vec(rng);
+                ix.upsert(id, v.clone());
+                live.insert(id, v);
+            }
+            let q = random_vec(rng);
+            let tau = -0.5 - rng.f32() * 2.0; // Dist ≤ tau < 0
+            let got = ix.threshold(&q, tau, QueryParams::default(), &mut QueryScratch::default());
+            let want: Vec<u64> = live
+                .iter()
+                .filter(|(_, v)| -q.dot(v) <= tau && q.dot(v) != 0.0)
+                .map(|(&id, _)| id)
+                .collect();
+            let got_ids: std::collections::BTreeSet<u64> =
+                got.iter().map(|n| n.id).collect();
+            let want_ids: std::collections::BTreeSet<u64> = want.into_iter().collect();
+            assert_eq!(got_ids, want_ids);
+        });
+    }
+
+    fn random_vec(rng: &mut Rng) -> SparseVec {
+        let n = 1 + rng.below_usize(8);
+        SparseVec::from_pairs(
+            (0..n).map(|_| (rng.below(20), 0.1 + rng.f32())).collect(),
+        )
+    }
+}

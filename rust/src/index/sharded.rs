@@ -1,0 +1,211 @@
+//! Sharded, thread-safe wrapper around [`SparseAnn`].
+//!
+//! The paper's dynamic experiments are single-core by design (§5.2,
+//! "for interpretability and stability"), but the system "can be run in a
+//! parallel and distributed setting" — this wrapper is that setting's
+//! single-machine form: N shards, each an independently RwLock'd
+//! [`SparseAnn`]; points are routed by id hash, queries fan out to all
+//! shards and merge.
+
+use std::sync::RwLock;
+
+use super::{Neighbor, QueryParams, QueryScratch, SparseAnn};
+use crate::features::PointId;
+use crate::sparse::SparseVec;
+use crate::util::hash::mix64;
+
+/// Sharded dynamic sparse ANN index.
+pub struct ShardedIndex {
+    shards: Vec<RwLock<SparseAnn>>,
+}
+
+impl ShardedIndex {
+    /// `n_shards` must be ≥ 1; 1 shard reproduces the paper's sequential
+    /// setting exactly.
+    pub fn new(n_shards: usize) -> ShardedIndex {
+        assert!(n_shards >= 1);
+        ShardedIndex {
+            shards: (0..n_shards).map(|_| RwLock::new(SparseAnn::new())).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, id: PointId) -> usize {
+        (mix64(id) % self.shards.len() as u64) as usize
+    }
+
+    /// Upsert a point; returns true if it existed.
+    pub fn upsert(&self, id: PointId, vec: SparseVec) -> bool {
+        self.shards[self.shard_of(id)].write().unwrap().upsert(id, vec)
+    }
+
+    /// Remove a point; returns true if it existed.
+    pub fn remove(&self, id: PointId) -> bool {
+        self.shards[self.shard_of(id)].write().unwrap().remove(id)
+    }
+
+    pub fn contains(&self, id: PointId) -> bool {
+        self.shards[self.shard_of(id)].read().unwrap().contains(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Top-k across all shards (per-shard top-k then merge; exact because
+    /// per-shard retrieval is exact).
+    pub fn top_k(&self, query: &SparseVec, k: usize, params: QueryParams) -> Vec<Neighbor> {
+        let mut all = Vec::with_capacity(k * self.shards.len().min(4));
+        let mut scratch = QueryScratch::default();
+        for shard in &self.shards {
+            let res = shard.read().unwrap().top_k(query, k, params, &mut scratch);
+            all.extend(res);
+        }
+        all.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        all.truncate(k);
+        all
+    }
+
+    /// Threshold query across all shards.
+    pub fn threshold(&self, query: &SparseVec, tau: f32, params: QueryParams) -> Vec<Neighbor> {
+        let mut all = Vec::new();
+        let mut scratch = QueryScratch::default();
+        for shard in &self.shards {
+            all.extend(shard.read().unwrap().threshold(query, tau, params, &mut scratch));
+        }
+        all.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        all
+    }
+
+    /// Aggregate stats over shards.
+    pub fn stats(&self) -> super::IndexStats {
+        let mut agg = super::IndexStats {
+            live_points: 0,
+            live_postings: 0,
+            dead_postings: 0,
+            distinct_dims: 0,
+            slot_capacity: 0,
+            approx_bytes: 0,
+        };
+        for s in &self.shards {
+            let st = s.read().unwrap().stats();
+            agg.live_points += st.live_points;
+            agg.live_postings += st.live_postings;
+            agg.dead_postings += st.dead_postings;
+            agg.distinct_dims += st.distinct_dims; // upper bound (dims span shards)
+            agg.slot_capacity += st.slot_capacity;
+            agg.approx_bytes += st.approx_bytes;
+        }
+        agg
+    }
+
+    /// Compact all shards.
+    pub fn compact_all(&self) {
+        for s in &self.shards {
+            s.write().unwrap().compact_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::proptest;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn routes_and_merges() {
+        let ix = ShardedIndex::new(4);
+        for i in 0..100u64 {
+            ix.upsert(i, sv(&[(7, 1.0 + i as f32)]));
+        }
+        assert_eq!(ix.len(), 100);
+        let r = ix.top_k(&sv(&[(7, 1.0)]), 5, QueryParams::default());
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0].id, 99); // global best regardless of shard
+        assert!(ix.contains(50));
+        ix.remove(99);
+        let r = ix.top_k(&sv(&[(7, 1.0)]), 1, QueryParams::default());
+        assert_eq!(r[0].id, 98);
+    }
+
+    #[test]
+    fn single_shard_equivalence() {
+        // Sharded results must equal a 1-shard index for any op sequence.
+        proptest(|rng| {
+            let multi = ShardedIndex::new(1 + rng.below_usize(5));
+            let single = ShardedIndex::new(1);
+            for _ in 0..60 {
+                let id = rng.below(30);
+                if rng.chance(0.7) {
+                    let n = 1 + rng.below_usize(5);
+                    let v = SparseVec::from_pairs(
+                        (0..n).map(|_| (rng.below(15), 0.1 + rng.f32())).collect(),
+                    );
+                    multi.upsert(id, v.clone());
+                    single.upsert(id, v);
+                } else {
+                    multi.remove(id);
+                    single.remove(id);
+                }
+            }
+            assert_eq!(multi.len(), single.len());
+            let q = SparseVec::from_pairs(vec![
+                (rng.below(15), 1.0),
+                (rng.below(15), 0.5),
+            ]);
+            let a = multi.top_k(&q, 7, QueryParams::default());
+            let b = single.top_k(&q, 7, QueryParams::default());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert!((x.dot - y.dot).abs() < 1e-5);
+            }
+            let at = multi.threshold(&q, -0.2, QueryParams::default());
+            let bt = single.threshold(&q, -0.2, QueryParams::default());
+            assert_eq!(
+                at.iter().map(|n| n.id).collect::<Vec<_>>(),
+                bt.iter().map(|n| n.id).collect::<Vec<_>>()
+            );
+        });
+    }
+
+    #[test]
+    fn concurrent_mutations_and_queries() {
+        use std::sync::Arc;
+        let ix = Arc::new(ShardedIndex::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ix = Arc::clone(&ix);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let id = t * 1000 + i;
+                    ix.upsert(id, sv(&[(i % 50, 1.0)]));
+                    if i % 3 == 0 {
+                        ix.remove(id);
+                    }
+                    if i % 7 == 0 {
+                        let _ = ix.top_k(&sv(&[(i % 50, 1.0)]), 5, QueryParams::default());
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 500 per thread, every 3rd removed → ceil(2/3 * 500)*4 total-ish.
+        let expect: usize = 4 * (500 - 167);
+        assert_eq!(ix.len(), expect);
+    }
+}

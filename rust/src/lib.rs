@@ -1,0 +1,47 @@
+//! # Dynamic GUS — Dynamic Grale Using ScaNN
+//!
+//! Reproduction of *"Large-Scale Graph Building in Dynamic Environments:
+//! Low Latency and High Quality"* (Google, CS.DC 2025).
+//!
+//! Dynamic GUS maintains a Grale-quality similarity graph under a continuous
+//! stream of point insertions, updates and deletions, answering neighborhood
+//! queries with tens-of-milliseconds latency. The pipeline per query:
+//!
+//! 1. **Embedding generation** ([`embed`]): the point's features are hashed
+//!    into LSH bucket IDs ([`lsh`]); the bucket IDs become the non-zero
+//!    dimensions of a sparse embedding, optionally IDF-weighted with overly
+//!    popular buckets filtered (§4.1–4.2 of the paper).
+//! 2. **Neighbor candidates** ([`index`]): a dynamic sparse ANN index (the
+//!    ScaNN substitute) retrieves the top-NN closest points under
+//!    `Dist(p,q) = -M(p)·M(q)`.
+//! 3. **Similarity scoring** ([`scorer`]): a trained pairwise model (2-layer
+//!    MLP) scores the query against each candidate. The model runs either
+//!    natively or through an AOT-compiled XLA executable ([`runtime`])
+//!    produced by the python/JAX/Pallas build pipeline.
+//!
+//! The [`coordinator`] module owns the serving loop; [`grale`] implements
+//! the offline Grale baseline the paper compares against; [`data`] provides
+//! the synthetic multimodal datasets standing in for ogbn-arxiv /
+//! ogbn-products (offline environment — see DESIGN.md for the substitution
+//! table); [`eval`] regenerates every figure/table of the paper.
+
+pub mod bench;
+pub mod client;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod eval;
+pub mod grale;
+pub mod graph;
+pub mod index;
+pub mod preprocess;
+pub mod runtime;
+pub mod scorer;
+pub mod server;
+pub mod features;
+pub mod lsh;
+pub mod sparse;
+pub mod metrics;
+pub mod testing;
+pub mod util;

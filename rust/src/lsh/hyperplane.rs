@@ -1,0 +1,132 @@
+//! Sign-random-projection (hyperplane) LSH for dense embeddings.
+//!
+//! Band `b` owns `bits` random Gaussian hyperplanes; a point's signature in
+//! band `b` packs the signs of the projections. Two points collide in a band
+//! with probability `(1 - θ/π)^bits` where θ is the angle between them — the
+//! classic SimHash guarantee, which is what makes shared bucket IDs a good
+//! candidate-neighbor signal.
+
+use crate::util::hash::mix3;
+use crate::util::rng::Rng;
+
+/// Hyperplane LSH for one dense channel.
+pub struct HyperplaneLsh {
+    dim: usize,
+    bands: usize,
+    bits: usize,
+    /// Row-major `[bands * bits][dim]` hyperplane normals.
+    planes: Vec<f32>,
+    seed: u64,
+}
+
+impl HyperplaneLsh {
+    pub fn new(dim: usize, bands: usize, bits: usize, seed: u64) -> HyperplaneLsh {
+        assert!(dim > 0 && bands > 0 && bits > 0 && bits <= 64);
+        let mut rng = Rng::seeded(seed ^ 0x9e3779b97f4a7c15);
+        let planes = rng.normal_vec_f32(bands * bits * dim);
+        HyperplaneLsh { dim, bands, bits, planes, seed }
+    }
+
+    pub fn bands(&self) -> usize {
+        self.bands
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Band signature: packed projection signs.
+    fn signature(&self, band: usize, v: &[f32]) -> u64 {
+        let mut sig = 0u64;
+        let base = band * self.bits * self.dim;
+        for bit in 0..self.bits {
+            let row = &self.planes[base + bit * self.dim..base + (bit + 1) * self.dim];
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            if acc >= 0.0 {
+                sig |= 1 << bit;
+            }
+        }
+        sig
+    }
+
+    /// Append this channel's bucket IDs (one per band).
+    pub fn buckets_into(&self, v: &[f32], out: &mut Vec<u64>) {
+        assert_eq!(v.len(), self.dim, "dense dim mismatch");
+        for band in 0..self.bands {
+            let sig = self.signature(band, v);
+            out.push(mix3(self.seed, band as u64, sig));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_bucket_per_band() {
+        let h = HyperplaneLsh::new(8, 5, 10, 1);
+        let mut out = Vec::new();
+        h.buckets_into(&[0.3; 8], &mut out);
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let h1 = HyperplaneLsh::new(8, 3, 6, 42);
+        let h2 = HyperplaneLsh::new(8, 3, 6, 42);
+        let v: Vec<f32> = (0..8).map(|i| (i as f32) - 3.5).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h1.buckets_into(&v, &mut a);
+        h2.buckets_into(&v, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        // Hyperplane signs ignore magnitude: v and 3v share all buckets.
+        let h = HyperplaneLsh::new(16, 8, 8, 7);
+        let mut rng = Rng::seeded(1);
+        let v = rng.normal_vec_f32(16);
+        let v3: Vec<f32> = v.iter().map(|x| x * 3.0).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h.buckets_into(&v, &mut a);
+        h.buckets_into(&v3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn collision_probability_decreases_with_angle() {
+        let h = HyperplaneLsh::new(32, 64, 4, 3);
+        let mut rng = Rng::seeded(2);
+        let count_shared = |noise: f32, rng: &mut Rng| -> usize {
+            let mut shared = 0;
+            for _ in 0..20 {
+                let v = rng.normal_vec_f32(32);
+                let w: Vec<f32> =
+                    v.iter().map(|x| x + noise * rng.normal() as f32).collect();
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                h.buckets_into(&v, &mut a);
+                h.buckets_into(&w, &mut b);
+                a.sort_unstable();
+                shared += b.iter().filter(|x| a.binary_search(x).is_ok()).count();
+            }
+            shared
+        };
+        let near = count_shared(0.05, &mut rng);
+        let mid = count_shared(0.5, &mut rng);
+        let far = count_shared(5.0, &mut rng);
+        assert!(near > mid && mid > far, "near={near} mid={mid} far={far}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_panics() {
+        let h = HyperplaneLsh::new(8, 1, 4, 0);
+        let mut out = Vec::new();
+        h.buckets_into(&[1.0; 7], &mut out);
+    }
+}

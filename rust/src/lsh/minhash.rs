@@ -1,0 +1,129 @@
+//! MinHash LSH for token-set features.
+//!
+//! Band `b` combines `rows` per-row minima (min over `mix2(row_seed, token)`)
+//! into one signature; collision probability in a band is `J^rows` for
+//! Jaccard similarity `J` — the standard minhash banding scheme.
+//!
+//! Empty token sets produce no buckets (a point with no tokens cannot be
+//! similar to anything through this channel).
+
+use crate::util::hash::{mix2, mix3};
+
+/// MinHash bucketer for one token channel.
+pub struct MinHash {
+    bands: usize,
+    rows: usize,
+    seed: u64,
+}
+
+impl MinHash {
+    pub fn new(bands: usize, rows: usize, seed: u64) -> MinHash {
+        assert!(bands > 0 && rows > 0);
+        MinHash { bands, rows, seed }
+    }
+
+    /// Append bucket IDs (one per band) for a token set.
+    pub fn buckets_into(&self, tokens: &[u64], out: &mut Vec<u64>) {
+        if tokens.is_empty() {
+            return;
+        }
+        for band in 0..self.bands {
+            let mut sig = 0u64;
+            for row in 0..self.rows {
+                let row_seed = mix3(self.seed, band as u64, row as u64);
+                let m = tokens
+                    .iter()
+                    .map(|&t| mix2(row_seed, t))
+                    .min()
+                    .unwrap();
+                // Combine row minima order-dependently.
+                sig = mix2(sig, m);
+            }
+            out.push(mix3(self.seed, 0x6d68 + band as u64, sig));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn buckets(m: &MinHash, tokens: &[u64]) -> Vec<u64> {
+        let mut out = Vec::new();
+        m.buckets_into(tokens, &mut out);
+        out
+    }
+
+    #[test]
+    fn empty_tokens_no_buckets() {
+        let m = MinHash::new(4, 2, 1);
+        assert!(buckets(&m, &[]).is_empty());
+    }
+
+    #[test]
+    fn one_bucket_per_band_and_deterministic() {
+        let m = MinHash::new(6, 2, 9);
+        let b1 = buckets(&m, &[1, 2, 3]);
+        let b2 = buckets(&m, &[3, 2, 1]); // order-invariant (set semantics)
+        assert_eq!(b1.len(), 6);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn identical_sets_collide_fully() {
+        let m = MinHash::new(8, 3, 5);
+        assert_eq!(buckets(&m, &[10, 20, 30]), buckets(&m, &[10, 20, 30]));
+    }
+
+    #[test]
+    fn jaccard_monotonicity() {
+        // Statistically: higher Jaccard ⇒ more shared bands.
+        let m = MinHash::new(64, 1, 13);
+        let mut rng = Rng::seeded(3);
+        let mut shared_hi = 0usize;
+        let mut shared_lo = 0usize;
+        for _ in 0..20 {
+            let base: Vec<u64> = (0..40).map(|_| rng.below(10_000)).collect();
+            // hi: 90% overlap; lo: 10% overlap.
+            let mut hi = base[..36].to_vec();
+            hi.extend((0..4).map(|_| rng.below(10_000) + 20_000));
+            let mut lo = base[..4].to_vec();
+            lo.extend((0..36).map(|_| rng.below(10_000) + 20_000));
+            let bb = buckets(&m, &base);
+            let bh = buckets(&m, &hi);
+            let bl = buckets(&m, &lo);
+            shared_hi += bb.iter().zip(&bh).filter(|(a, b)| a == b).count();
+            shared_lo += bb.iter().zip(&bl).filter(|(a, b)| a == b).count();
+        }
+        assert!(
+            shared_hi > shared_lo * 2,
+            "minhash not similarity sensitive: hi={shared_hi} lo={shared_lo}"
+        );
+    }
+
+    #[test]
+    fn rows_sharpen_threshold() {
+        // With more rows per band, low-Jaccard pairs collide less.
+        let mut rng = Rng::seeded(4);
+        let m1 = MinHash::new(32, 1, 7);
+        let m4 = MinHash::new(32, 4, 7);
+        let (mut c1, mut c4) = (0usize, 0usize);
+        for _ in 0..30 {
+            let a: Vec<u64> = (0..20).map(|_| rng.below(1000)).collect();
+            let mut b = a[..10].to_vec(); // ~0.33 jaccard
+            b.extend((0..10).map(|_| 5000 + rng.below(1000)));
+            c1 += buckets(&m1, &a)
+                .iter()
+                .zip(buckets(&m1, &b).iter())
+                .filter(|(x, y)| x == y)
+                .count();
+            c4 += buckets(&m4, &a)
+                .iter()
+                .zip(buckets(&m4, &b).iter())
+                .filter(|(x, y)| x == y)
+                .count();
+        }
+        assert!(c1 > c4, "rows did not sharpen: rows1={c1} rows4={c4}");
+    }
+}

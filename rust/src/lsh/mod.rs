@@ -1,0 +1,311 @@
+//! Locality-Sensitive Hashing: features → bucket IDs.
+//!
+//! Grale computes, for each point, a list of bucket IDs via LSH; points
+//! sharing a bucket ID become *scoring pairs* (§4 of the paper). Dynamic GUS
+//! reuses the same bucket IDs as the non-zero dimensions of the sparse
+//! embedding (§4.1). The paper deliberately leaves the bucketing algorithm
+//! pluggable ("these buckets can be done via any other algorithm as well");
+//! we implement the standard family per feature kind:
+//!
+//! - dense embeddings → [`hyperplane`] sign-random-projection bands,
+//! - token sets → [`minhash`] bands or direct per-token buckets,
+//! - scalars → [`scalar`] overlapping quantization.
+//!
+//! Bucket IDs are 64-bit hashes namespaced by (channel, band) so different
+//! channels can never collide into the same bucket except by hash collision
+//! (~2⁻⁶⁴).
+
+pub mod hyperplane;
+pub mod minhash;
+pub mod scalar;
+
+use crate::features::{FeatureValue, Point, Schema};
+use crate::util::hash::{mix2, mix3};
+
+pub use hyperplane::HyperplaneLsh;
+pub use minhash::MinHash;
+pub use scalar::ScalarQuantizer;
+
+/// Per-channel bucketing configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChannelLshConfig {
+    /// Sign-random-projection bands for dense channels:
+    /// `bands` independent bucket IDs per point, each from `bits` hyperplanes.
+    Hyperplane { bands: usize, bits: usize },
+    /// MinHash bands for token channels: `bands` bucket IDs, each the min of
+    /// `rows` per-row minima combined (rows=1 ⇒ plain minhash).
+    MinHash { bands: usize, rows: usize },
+    /// Each token becomes its own bucket ID (good when tokens are already
+    /// strong similarity signals, e.g. co-purchased product ids).
+    DirectTokens,
+    /// Overlapping scalar quantization: `offsets` shifted grids of `width`.
+    Quantize { width: f32, offsets: usize },
+    /// Channel does not contribute buckets (model-only channel).
+    Skip,
+}
+
+/// Full bucketer for a schema: one config per channel.
+pub struct Bucketer {
+    schema: Schema,
+    seed: u64,
+    channels: Vec<ChannelBucketer>,
+}
+
+enum ChannelBucketer {
+    Hyperplane(HyperplaneLsh),
+    MinHash(MinHash),
+    DirectTokens { seed: u64 },
+    Quantize(ScalarQuantizer),
+    Skip,
+}
+
+impl Bucketer {
+    /// Build a bucketer. `configs` must have one entry per schema channel.
+    pub fn new(schema: &Schema, configs: &[ChannelLshConfig], seed: u64) -> Bucketer {
+        assert_eq!(
+            configs.len(),
+            schema.channels.len(),
+            "one LSH config per channel"
+        );
+        let channels = configs
+            .iter()
+            .enumerate()
+            .map(|(ch, cfg)| {
+                let ch_seed = mix2(seed, ch as u64);
+                match cfg {
+                    ChannelLshConfig::Hyperplane { bands, bits } => ChannelBucketer::Hyperplane(
+                        HyperplaneLsh::new(schema.channels[ch].dim, *bands, *bits, ch_seed),
+                    ),
+                    ChannelLshConfig::MinHash { bands, rows } => {
+                        ChannelBucketer::MinHash(MinHash::new(*bands, *rows, ch_seed))
+                    }
+                    ChannelLshConfig::DirectTokens => {
+                        ChannelBucketer::DirectTokens { seed: ch_seed }
+                    }
+                    ChannelLshConfig::Quantize { width, offsets } => ChannelBucketer::Quantize(
+                        ScalarQuantizer::new(*width, *offsets, ch_seed),
+                    ),
+                    ChannelLshConfig::Skip => ChannelBucketer::Skip,
+                }
+            })
+            .collect();
+        Bucketer { schema: schema.clone(), seed, channels }
+    }
+
+    /// Default configs for the paper's two dataset shapes.
+    pub fn default_configs(schema: &Schema) -> Vec<ChannelLshConfig> {
+        schema
+            .channels
+            .iter()
+            .map(|c| match c.kind {
+                crate::features::FeatureKind::Dense => {
+                    ChannelLshConfig::Hyperplane { bands: 16, bits: 12 }
+                }
+                crate::features::FeatureKind::Tokens => ChannelLshConfig::DirectTokens,
+                crate::features::FeatureKind::Scalar => {
+                    ChannelLshConfig::Quantize { width: 2.0, offsets: 2 }
+                }
+            })
+            .collect()
+    }
+
+    /// Convenience: bucketer with default configs.
+    pub fn with_defaults(schema: &Schema, seed: u64) -> Bucketer {
+        let configs = Self::default_configs(schema);
+        Bucketer::new(schema, &configs, seed)
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Compute the point's bucket IDs (sorted, deduplicated).
+    ///
+    /// This is the hot path for both mutations and queries — it runs on
+    /// purely local information, no global state (a hard requirement from
+    /// §3.2: the Embedding Generator is on the critical path).
+    pub fn buckets(&self, p: &Point) -> Vec<u64> {
+        let mut out = Vec::with_capacity(32);
+        self.buckets_into(p, &mut out);
+        out
+    }
+
+    /// `buckets` with a caller-provided buffer (hot path, no allocation).
+    pub fn buckets_into(&self, p: &Point, out: &mut Vec<u64>) {
+        out.clear();
+        for (ch, bucketer) in self.channels.iter().enumerate() {
+            match (bucketer, &p.features[ch]) {
+                (ChannelBucketer::Hyperplane(h), FeatureValue::Dense(v)) => {
+                    h.buckets_into(v, out);
+                }
+                (ChannelBucketer::MinHash(m), FeatureValue::Tokens(t)) => {
+                    m.buckets_into(t, out);
+                }
+                (ChannelBucketer::DirectTokens { seed }, FeatureValue::Tokens(t)) => {
+                    for &tok in t {
+                        out.push(mix3(*seed, 0xd17ec7, tok));
+                    }
+                }
+                (ChannelBucketer::Quantize(q), FeatureValue::Scalar(x)) => {
+                    q.buckets_into(*x, out);
+                }
+                (ChannelBucketer::Skip, _) => {}
+                (_, f) => panic!(
+                    "channel {ch}: LSH config does not match feature kind {:?}",
+                    f.kind()
+                ),
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureValue, Point, Schema};
+    use crate::util::rng::Rng;
+
+    fn schema3() -> Schema {
+        let mut s = Schema::arxiv_like(16);
+        s.channels.push(crate::features::ChannelSchema {
+            name: "tags".to_string(),
+            kind: crate::features::FeatureKind::Tokens,
+            dim: 0,
+        });
+        s
+    }
+
+    fn point3(rng: &mut Rng) -> Point {
+        Point::new(
+            rng.below(1 << 40),
+            vec![
+                FeatureValue::Dense(rng.normal_vec_f32(16)),
+                FeatureValue::Scalar(2000.0 + rng.below(30) as f32),
+                FeatureValue::Tokens((0..rng.below_usize(6)).map(|_| rng.below(100)).collect()),
+            ],
+        )
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = schema3();
+        let cfg = vec![
+            ChannelLshConfig::Hyperplane { bands: 4, bits: 8 },
+            ChannelLshConfig::Quantize { width: 2.0, offsets: 2 },
+            ChannelLshConfig::DirectTokens,
+        ];
+        let b1 = Bucketer::new(&s, &cfg, 99);
+        let b2 = Bucketer::new(&s, &cfg, 99);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..20 {
+            let p = point3(&mut rng);
+            assert_eq!(b1.buckets(&p), b2.buckets(&p));
+        }
+        // Different seed ⇒ (almost surely) different buckets.
+        let b3 = Bucketer::new(&s, &cfg, 100);
+        let p = point3(&mut rng);
+        assert_ne!(b1.buckets(&p), b3.buckets(&p));
+    }
+
+    #[test]
+    fn sorted_dedup_output() {
+        let s = schema3();
+        let b = Bucketer::with_defaults(&s, 7);
+        let mut rng = Rng::seeded(2);
+        for _ in 0..20 {
+            let p = point3(&mut rng);
+            let buckets = b.buckets(&p);
+            assert!(buckets.windows(2).all(|w| w[0] < w[1]), "unsorted/dup");
+        }
+    }
+
+    #[test]
+    fn identical_points_share_all_buckets() {
+        let s = schema3();
+        let b = Bucketer::with_defaults(&s, 7);
+        let mut rng = Rng::seeded(3);
+        let p = point3(&mut rng);
+        let mut q = p.clone();
+        q.id = p.id + 1; // id does not affect buckets
+        assert_eq!(b.buckets(&p), b.buckets(&q));
+    }
+
+    #[test]
+    fn similar_points_share_more_buckets_than_dissimilar() {
+        // The LSH property, statistically: near-duplicates collide in many
+        // bands; random pairs rarely do.
+        let s = Schema::arxiv_like(32);
+        let b = Bucketer::with_defaults(&s, 11);
+        let mut rng = Rng::seeded(4);
+        let mut sim_shared = 0usize;
+        let mut rand_shared = 0usize;
+        for _ in 0..50 {
+            let base: Vec<f32> = rng.normal_vec_f32(32);
+            let near: Vec<f32> = base.iter().map(|x| x + 0.05 * rng.normal() as f32).collect();
+            let far: Vec<f32> = rng.normal_vec_f32(32);
+            let mk = |v: Vec<f32>| {
+                Point::new(0, vec![FeatureValue::Dense(v), FeatureValue::Scalar(2020.0)])
+            };
+            let pb = b.buckets(&mk(base));
+            let pn = b.buckets(&mk(near));
+            let pf = b.buckets(&mk(far));
+            sim_shared += pb.iter().filter(|x| pn.binary_search(x).is_ok()).count();
+            rand_shared += pb.iter().filter(|x| pf.binary_search(x).is_ok()).count();
+        }
+        assert!(
+            sim_shared > rand_shared * 3,
+            "LSH not locality sensitive: near={sim_shared} far={rand_shared}"
+        );
+    }
+
+    #[test]
+    fn channels_do_not_collide() {
+        // Two channels with identical content must produce distinct buckets.
+        let s = Schema {
+            name: "twin".into(),
+            channels: vec![
+                crate::features::ChannelSchema {
+                    name: "a".into(),
+                    kind: crate::features::FeatureKind::Tokens,
+                    dim: 0,
+                },
+                crate::features::ChannelSchema {
+                    name: "b".into(),
+                    kind: crate::features::FeatureKind::Tokens,
+                    dim: 0,
+                },
+            ],
+        };
+        let cfg = vec![ChannelLshConfig::DirectTokens, ChannelLshConfig::DirectTokens];
+        let b = Bucketer::new(&s, &cfg, 5);
+        let p = Point::new(
+            1,
+            vec![
+                FeatureValue::Tokens(vec![42]),
+                FeatureValue::Tokens(vec![42]),
+            ],
+        );
+        assert_eq!(b.buckets(&p).len(), 2, "channel namespacing failed");
+    }
+
+    #[test]
+    fn skip_channel_contributes_nothing() {
+        let s = Schema::arxiv_like(8);
+        let cfg = vec![
+            ChannelLshConfig::Skip,
+            ChannelLshConfig::Quantize { width: 1.0, offsets: 1 },
+        ];
+        let b = Bucketer::new(&s, &cfg, 5);
+        let p = Point::new(
+            1,
+            vec![FeatureValue::Dense(vec![1.0; 8]), FeatureValue::Scalar(2020.0)],
+        );
+        assert_eq!(b.buckets(&p).len(), 1);
+    }
+}

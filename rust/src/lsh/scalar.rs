@@ -1,0 +1,93 @@
+//! Overlapping scalar quantization for scalar features.
+//!
+//! A scalar (e.g. publication year) is mapped to `offsets` shifted grids of
+//! cell `width`: grid `o` buckets `x` at `floor(x/width + o/offsets)`. Two
+//! scalars within `width * (1 - 1/offsets)` of each other are guaranteed to
+//! share at least one grid cell for some shift; values far apart share none.
+//! This is the 1-d analogue of Grale's bucketing for ordinal features.
+
+use crate::util::hash::mix3;
+
+/// Overlapping quantizer for one scalar channel.
+pub struct ScalarQuantizer {
+    width: f32,
+    offsets: usize,
+    seed: u64,
+}
+
+impl ScalarQuantizer {
+    pub fn new(width: f32, offsets: usize, seed: u64) -> ScalarQuantizer {
+        assert!(width > 0.0 && offsets > 0);
+        ScalarQuantizer { width, offsets, seed }
+    }
+
+    /// Append bucket IDs (one per shifted grid).
+    pub fn buckets_into(&self, x: f32, out: &mut Vec<u64>) {
+        for o in 0..self.offsets {
+            let shift = o as f32 / self.offsets as f32;
+            let cell = (x / self.width + shift).floor() as i64;
+            out.push(mix3(self.seed, o as u64, cell as u64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buckets(q: &ScalarQuantizer, x: f32) -> Vec<u64> {
+        let mut out = Vec::new();
+        q.buckets_into(x, &mut out);
+        out
+    }
+
+    #[test]
+    fn one_bucket_per_offset() {
+        let q = ScalarQuantizer::new(2.0, 3, 1);
+        assert_eq!(buckets(&q, 5.0).len(), 3);
+    }
+
+    #[test]
+    fn equal_values_share_all() {
+        let q = ScalarQuantizer::new(2.0, 2, 5);
+        assert_eq!(buckets(&q, 2020.0), buckets(&q, 2020.0));
+    }
+
+    #[test]
+    fn close_values_share_some_far_share_none() {
+        let q = ScalarQuantizer::new(2.0, 2, 5);
+        let a = buckets(&q, 2020.0);
+        let close = buckets(&q, 2020.6); // within width*(1-1/2)=1.0
+        let far = buckets(&q, 2030.0);
+        let shared_close = a.iter().filter(|x| close.contains(x)).count();
+        let shared_far = a.iter().filter(|x| far.contains(x)).count();
+        assert!(shared_close >= 1, "close values must share a bucket");
+        assert_eq!(shared_far, 0);
+    }
+
+    #[test]
+    fn negative_values_work() {
+        let q = ScalarQuantizer::new(1.0, 2, 5);
+        let a = buckets(&q, -3.2);
+        let b = buckets(&q, -3.2);
+        assert_eq!(a, b);
+        assert_ne!(buckets(&q, -3.2), buckets(&q, 3.2));
+    }
+
+    #[test]
+    fn guarantee_threshold() {
+        // Any pair within width*(1-1/offsets) shares >= 1 bucket.
+        let q = ScalarQuantizer::new(4.0, 4, 9);
+        let thresh = 4.0 * (1.0 - 0.25);
+        for i in 0..200 {
+            let x = -50.0 + i as f32 * 0.5;
+            let y = x + thresh * 0.99;
+            let bx = buckets(&q, x);
+            let by = buckets(&q, y);
+            assert!(
+                bx.iter().any(|b| by.contains(b)),
+                "no shared bucket for x={x}, y={y}"
+            );
+        }
+    }
+}

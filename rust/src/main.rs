@@ -1,0 +1,328 @@
+//! `gus` — the Dynamic GUS launcher.
+//!
+//! ```text
+//! gus serve   --dataset arxiv_like --n 20000 --addr 127.0.0.1:7717
+//!             [--scann-nn K] [--idf-s S] [--filter-p P] [--scorer auto]
+//!             [--load data.jsonl]
+//! gus query   --addr 127.0.0.1:7717 --id 42 [--k 10]
+//! gus insert  --addr 127.0.0.1:7717 --point '{"id":..,"features":[..]}'
+//! gus delete  --addr 127.0.0.1:7717 --id 42
+//! gus stats   --addr 127.0.0.1:7717
+//! gus gen     --dataset products_like --n 5000 --out data.jsonl
+//! gus gen-trace --dataset arxiv_like --n 5000 --ops 2000 --out trace.jsonl
+//! gus replay  --trace trace.jsonl [--workers 8]   # replay a workload
+//! gus preprocess --dataset arxiv_like --n 20000   # table summary (§4.3)
+//! ```
+//!
+//! `serve` accepts `--snapshot-dir DIR` to restore from / periodically save
+//! to a snapshot (coordinator::snapshot).
+//!
+//! `serve` boots the full stack: dataset (generated or loaded), offline
+//! preprocessing, index warm-up, scorer (XLA artifacts if present), then
+//! the TCP JSON-lines RPC server. See rust/src/server.rs for the protocol.
+
+use std::sync::Arc;
+
+use dynamic_gus::client::GusClient;
+use dynamic_gus::config::GusConfig;
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::{loader, synthetic::SyntheticConfig};
+use dynamic_gus::features::Point;
+use dynamic_gus::server::{serve, ServerConfig};
+use dynamic_gus::util::cli::Args;
+use dynamic_gus::util::json::Json;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    let code = match run(&cmd, &args) {
+        Ok(()) => match args.check_unused() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("warning: {e}");
+                0
+            }
+        },
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_or_generate(args: &Args) -> anyhow::Result<dynamic_gus::data::Dataset> {
+    if let Some(path) = args.opt_str("load") {
+        return loader::load(std::path::Path::new(&path));
+    }
+    let name = args.get_str("dataset", "arxiv_like");
+    let n = args.get_usize("n", 20_000);
+    let seed = args.get_u64("seed", 0xa1);
+    Ok(match name.as_str() {
+        "arxiv_like" => SyntheticConfig::arxiv_like(n, seed).generate(),
+        "products_like" => SyntheticConfig::products_like(n, seed).generate(),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    })
+}
+
+/// Infer the schema from loaded points (trace files carry no header).
+fn infer_schema(points: &[Point]) -> anyhow::Result<dynamic_gus::features::Schema> {
+    let p = points
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("empty trace: cannot infer schema"))?;
+    use dynamic_gus::features::{FeatureValue, Schema};
+    let dense_dim = p
+        .features
+        .iter()
+        .find_map(|f| match f {
+            FeatureValue::Dense(v) => Some(v.len()),
+            _ => None,
+        })
+        .ok_or_else(|| anyhow::anyhow!("points have no dense channel"))?;
+    let has_tokens = p
+        .features
+        .iter()
+        .any(|f| matches!(f, FeatureValue::Tokens(_)));
+    Ok(if has_tokens {
+        Schema::products_like(dense_dim)
+    } else {
+        Schema::arxiv_like(dense_dim)
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "serve" => {
+            if let Some(dir) = args.opt_str("snapshot-dir") {
+                let dir = std::path::PathBuf::from(dir);
+                if dir.join("snapshot.json").exists() {
+                    eprintln!("[gus] restoring from snapshot {}", dir.display());
+                    let gus = dynamic_gus::coordinator::snapshot::restore(
+                        &dir,
+                        dynamic_gus::util::threadpool::default_parallelism(),
+                    )?;
+                    let addr = args.get_str("addr", "127.0.0.1:7717");
+                    let handle = serve(Arc::new(gus), &addr, ServerConfig::default())?;
+                    println!("[gus] serving restored snapshot on {}", handle.addr);
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(3600));
+                    }
+                }
+            }
+            let ds = load_or_generate(args)?;
+            let config = GusConfig::default()
+                .apply_args(args)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let threads = args.get_usize(
+                "threads",
+                dynamic_gus::util::threadpool::default_parallelism(),
+            );
+            eprintln!(
+                "[gus] bootstrapping {} points ({}), config {}",
+                ds.points.len(),
+                ds.schema.name,
+                config.to_json().dump()
+            );
+            let t0 = std::time::Instant::now();
+            let gus = DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points, threads)?;
+            eprintln!("[gus] ready in {:.1}s", t0.elapsed().as_secs_f64());
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let handle = serve(Arc::new(gus), &addr, ServerConfig::default())?;
+            println!("[gus] serving on {}", handle.addr);
+            // Serve until killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "query" => {
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let mut client = GusClient::connect(&addr)?;
+            let k = args.get_usize("k", 10);
+            let neighbors = if let Some(id) = args.opt_str("id") {
+                client.query_id(id.parse()?, k)?
+            } else if let Some(pjson) = args.opt_str("point") {
+                let p = Point::from_json(&Json::parse(&pjson).map_err(|e| anyhow::anyhow!("{e}"))?)
+                    .ok_or_else(|| anyhow::anyhow!("bad point json"))?;
+                client.query(&p, k)?
+            } else {
+                anyhow::bail!("query needs --id or --point");
+            };
+            for n in neighbors {
+                println!("{}\t{:.4}\t{:.3}", n.id, n.score, n.dot);
+            }
+            Ok(())
+        }
+        "insert" => {
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let mut client = GusClient::connect(&addr)?;
+            let pjson = args
+                .opt_str("point")
+                .ok_or_else(|| anyhow::anyhow!("insert needs --point"))?;
+            let p = Point::from_json(&Json::parse(&pjson).map_err(|e| anyhow::anyhow!("{e}"))?)
+                .ok_or_else(|| anyhow::anyhow!("bad point json"))?;
+            let existed = client.insert(&p)?;
+            println!("ok existed={existed}");
+            Ok(())
+        }
+        "delete" => {
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let mut client = GusClient::connect(&addr)?;
+            let id: u64 = args
+                .opt_str("id")
+                .ok_or_else(|| anyhow::anyhow!("delete needs --id"))?
+                .parse()?;
+            let existed = client.delete(id)?;
+            println!("ok existed={existed}");
+            Ok(())
+        }
+        "stats" => {
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let mut client = GusClient::connect(&addr)?;
+            println!("{}", client.stats()?.dump());
+            Ok(())
+        }
+        "gen-trace" => {
+            let ds = load_or_generate(args)?;
+            let trace_cfg = dynamic_gus::data::trace::TraceConfig {
+                initial_fraction: args.get_f64("initial-fraction", 0.8),
+                n_ops: args.get_usize("ops", 2_000),
+                insert_prob: args.get_f64("insert-prob", 0.1),
+                update_prob: args.get_f64("update-prob", 0.05),
+                delete_prob: args.get_f64("delete-prob", 0.02),
+                query_k: args.get_usize("k", 10),
+                seed: args.get_u64("trace-seed", 0x7472),
+            };
+            let trace = trace_cfg.build(&ds);
+            let out = args.get_str("out", "trace.jsonl");
+            trace.save(std::path::Path::new(&out))?;
+            let (i, u, d, q) = trace.op_mix();
+            println!(
+                "wrote {out}: {} initial points; ops: {i} inserts {u} updates {d} deletes {q} queries",
+                trace.initial.len()
+            );
+            Ok(())
+        }
+        "replay" => {
+            use dynamic_gus::coordinator::{IngestPipeline, Mutation};
+            use dynamic_gus::data::trace::{Op, Trace};
+            let path = args
+                .opt_str("trace")
+                .ok_or_else(|| anyhow::anyhow!("replay needs --trace FILE"))?;
+            let trace = Trace::load(std::path::Path::new(&path))?;
+            let schema = infer_schema(&trace.initial)?;
+            let config = GusConfig::default()
+                .apply_args(args)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let workers = args.get_usize("workers", 1);
+            let gus = Arc::new(DynamicGus::bootstrap(
+                schema,
+                config,
+                &trace.initial,
+                dynamic_gus::util::threadpool::default_parallelism(),
+            )?);
+            let t0 = std::time::Instant::now();
+            if workers <= 1 {
+                for op in &trace.ops {
+                    match op {
+                        Op::Insert(p) | Op::Update(p) => {
+                            gus.insert(p.clone())?;
+                        }
+                        Op::Delete(id) => {
+                            gus.delete(*id)?;
+                        }
+                        Op::Query { point, k } => {
+                            gus.query(point, *k)?;
+                        }
+                    }
+                }
+            } else {
+                // Mutations through the bulk pipeline; queries inline.
+                let pipeline = IngestPipeline::new(Arc::clone(&gus), workers, 1024);
+                for op in &trace.ops {
+                    match op {
+                        Op::Insert(p) | Op::Update(p) => {
+                            pipeline.submit(Mutation::Upsert(p.clone()))
+                        }
+                        Op::Delete(id) => pipeline.submit(Mutation::Delete(*id)),
+                        Op::Query { point, k } => {
+                            gus.query(point, *k)?;
+                        }
+                    }
+                }
+                pipeline.flush();
+                pipeline.shutdown();
+            }
+            let wall = t0.elapsed();
+            println!(
+                "replayed {} ops in {:.2}s ({:.0} ops/s, workers={workers})",
+                trace.ops.len(),
+                wall.as_secs_f64(),
+                trace.ops.len() as f64 / wall.as_secs_f64()
+            );
+            println!("{}", gus.stats_json().dump());
+            Ok(())
+        }
+        "snapshot" => {
+            // Save a freshly-bootstrapped service (demo/ops tool); the
+            // served process also does this via --snapshot-dir.
+            let ds = load_or_generate(args)?;
+            let config = GusConfig::default()
+                .apply_args(args)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let gus = DynamicGus::bootstrap(
+                ds.schema.clone(),
+                config,
+                &ds.points,
+                dynamic_gus::util::threadpool::default_parallelism(),
+            )?;
+            let dir = args.get_str("snapshot-dir", "snapshot");
+            dynamic_gus::coordinator::snapshot::save(&gus, std::path::Path::new(&dir))?;
+            println!("snapshot of {} points written to {dir}/", gus.len());
+            Ok(())
+        }
+        "gen" => {
+            let ds = load_or_generate(args)?;
+            let out = args.get_str("out", "dataset.jsonl");
+            loader::save(&ds, std::path::Path::new(&out))?;
+            println!("wrote {} points to {out}", ds.points.len());
+            Ok(())
+        }
+        "preprocess" => {
+            let ds = load_or_generate(args)?;
+            let config = GusConfig::default()
+                .apply_args(args)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let bucketer =
+                dynamic_gus::lsh::Bucketer::with_defaults(&ds.schema, config.lsh_seed);
+            let pre = dynamic_gus::preprocess::preprocess(
+                &bucketer,
+                &ds.points,
+                &config,
+                dynamic_gus::util::threadpool::default_parallelism(),
+            );
+            println!(
+                "points={} distinct_buckets={} idf_entries={} banned_buckets={}",
+                pre.stats.num_points(),
+                pre.stats.num_buckets(),
+                pre.idf.as_ref().map(|t| t.len()).unwrap_or(0),
+                pre.filter.as_ref().map(|f| f.len()).unwrap_or(0),
+            );
+            let top: Vec<(u64, u64)> = pre.stats.by_count_desc().into_iter().take(10).collect();
+            println!("top-10 bucket cardinalities: {top:?}");
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: gus <serve|query|insert|delete|stats|gen|preprocess> [options]\n\
+                 see rust/src/main.rs docs for details"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Service metrics: log-bucketed latency histograms, counters, RSS probe.
+//!
+//! Fig. 9 plots per-configuration latency distributions and Fig. 10 reports
+//! average CPU time per query and maximum memory usage — this module
+//! provides the measurement substrate for both.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Log-bucketed histogram for durations (ns). Two buckets per octave from
+/// 1 ns to ~18 s; records are lock-free.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    min_ns: AtomicU64,
+}
+
+const SUB_BUCKETS_LOG2: u32 = 3; // 8 sub-buckets per octave → ≤ ~9% error
+const NUM_BUCKETS: usize = (64 - SUB_BUCKETS_LOG2 as usize) << SUB_BUCKETS_LOG2;
+
+#[inline]
+fn bucket_index(ns: u64) -> usize {
+    let ns = ns.max(1);
+    let msb = 63 - ns.leading_zeros();
+    if msb < SUB_BUCKETS_LOG2 {
+        return ns as usize;
+    }
+    let sub = ((ns >> (msb - SUB_BUCKETS_LOG2)) & ((1 << SUB_BUCKETS_LOG2) - 1)) as usize;
+    (((msb - SUB_BUCKETS_LOG2 + 1) as usize) << SUB_BUCKETS_LOG2) + sub
+}
+
+#[inline]
+fn bucket_lower_bound(idx: usize) -> u64 {
+    let sb = SUB_BUCKETS_LOG2 as usize;
+    if idx < (1 << sb) {
+        return idx as u64;
+    }
+    let oct = (idx >> sb) - 1;
+    let sub = (idx & ((1 << sb) - 1)) as u64;
+    ((1u64 << sb) + sub) << oct
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64)
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (bucket lower bound), q in [0,1].
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_lower_bound(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Standard summary for reports.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile_ns(0.50),
+            p90_ns: self.quantile_ns(0.90),
+            p95_ns: self.quantile_ns(0.95),
+            p99_ns: self.quantile_ns(0.99),
+            max_ns: self.max_ns(),
+        }
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+        self.min_ns.store(u64::MAX, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of a latency histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencySummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean_ns / 1e6)),
+            ("p50_ms", Json::num(self.p50_ns as f64 / 1e6)),
+            ("p90_ms", Json::num(self.p90_ns as f64 / 1e6)),
+            ("p95_ms", Json::num(self.p95_ns as f64 / 1e6)),
+            ("p99_ms", Json::num(self.p99_ns as f64 / 1e6)),
+            ("max_ms", Json::num(self.max_ns as f64 / 1e6)),
+        ])
+    }
+}
+
+/// Service counters for the coordinator.
+#[derive(Default)]
+pub struct Counters {
+    pub inserts: AtomicU64,
+    pub updates: AtomicU64,
+    pub deletes: AtomicU64,
+    pub queries: AtomicU64,
+    pub errors: AtomicU64,
+    pub candidates_retrieved: AtomicU64,
+    pub pairs_scored: AtomicU64,
+}
+
+impl Counters {
+    pub fn to_json(&self) -> Json {
+        let g = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("inserts", g(&self.inserts)),
+            ("updates", g(&self.updates)),
+            ("deletes", g(&self.deletes)),
+            ("queries", g(&self.queries)),
+            ("errors", g(&self.errors)),
+            ("candidates_retrieved", g(&self.candidates_retrieved)),
+            ("pairs_scored", g(&self.pairs_scored)),
+        ])
+    }
+}
+
+/// Current resident set size in bytes (Linux `/proc/self/status`), and the
+/// peak (`VmHWM`). Returns 0 if unavailable (non-Linux).
+pub fn current_rss_bytes() -> u64 {
+    read_proc_status_kb("VmRSS:") * 1024
+}
+
+/// Peak RSS (high-water mark) in bytes.
+pub fn peak_rss_bytes() -> u64 {
+    read_proc_status_kb("VmHWM:") * 1024
+}
+
+fn read_proc_status_kb(field: &str) -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb;
+        }
+    }
+    0
+}
+
+/// Process CPU time (user+sys) so far, from `/proc/self/stat` (Linux).
+pub fn process_cpu_time() -> Duration {
+    let Ok(text) = std::fs::read_to_string("/proc/self/stat") else {
+        return Duration::ZERO;
+    };
+    // Fields 14 (utime) and 15 (stime) in clock ticks, after the comm field
+    // which can contain spaces — skip past the closing paren.
+    let Some(rest) = text.rsplit_once(')').map(|(_, r)| r) else {
+        return Duration::ZERO;
+    };
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    if fields.len() < 13 {
+        return Duration::ZERO;
+    }
+    let utime: u64 = fields[11].parse().unwrap_or(0);
+    let stime: u64 = fields[12].parse().unwrap_or(0);
+    let ticks_per_sec = 100u64; // Linux USER_HZ is 100 on all mainstream builds
+    Duration::from_nanos((utime + stime) * (1_000_000_000 / ticks_per_sec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotone() {
+        let mut prev = 0;
+        for ns in [1u64, 2, 5, 10, 100, 1_000, 10_000, 1_000_000, 1 << 40] {
+            let b = bucket_index(ns);
+            assert!(b >= prev, "bucket not monotone at {ns}");
+            prev = b;
+            assert!(bucket_lower_bound(b) <= ns, "lower bound above value at {ns}");
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        for ns in (0..200).map(|i| 1u64 << (i % 40)).chain(1..1000) {
+            let b = bucket_index(ns);
+            let lo = bucket_lower_bound(b);
+            let hi = bucket_lower_bound(b + 1);
+            assert!(lo <= ns && ns < hi, "ns={ns} not in [{lo},{hi})");
+            if ns > 16 {
+                let err = (hi - lo) as f64 / ns as f64;
+                assert!(err <= 0.15, "relative error {err} at {ns}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        let mut rng = crate::util::rng::Rng::seeded(11);
+        for _ in 0..10_000 {
+            h.record_ns(1_000 + rng.below(1_000_000));
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 10_000);
+        assert!(s.p50_ns <= s.p90_ns && s.p90_ns <= s.p95_ns && s.p95_ns <= s.p99_ns);
+        assert!(s.p99_ns <= s.max_ns);
+        assert!(s.mean_ns > 1_000.0);
+    }
+
+    #[test]
+    fn quantile_accuracy_on_constant() {
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record_ns(123_456);
+        }
+        let p50 = h.quantile_ns(0.5);
+        let err = (p50 as f64 - 123_456.0).abs() / 123_456.0;
+        assert!(err < 0.15, "p50={p50}");
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = LatencyHistogram::new();
+        h.record_ns(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn rss_probe_positive_on_linux() {
+        if std::path::Path::new("/proc/self/status").exists() {
+            assert!(current_rss_bytes() > 0);
+            assert!(peak_rss_bytes() >= current_rss_bytes() / 2);
+        }
+    }
+
+    #[test]
+    fn cpu_time_monotone() {
+        let a = process_cpu_time();
+        // Burn a little CPU.
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let b = process_cpu_time();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,145 @@
+//! Offline preprocessing (§4.3).
+//!
+//! Before the dynamic service starts, the initial corpus is scanned once to
+//! (1) collect bucket statistics, (2) derive the bounded IDF table and the
+//! popular-bucket filter, and (3) warm the index. The same scan is re-run
+//! periodically ("periodic reloading") so the tables stay approximately
+//! consistent with the evolving dataset; the model itself is retrained by
+//! `python/compile/train.py` and hot-swapped through the weights JSON.
+
+use crate::config::GusConfig;
+use crate::embed::{BucketStats, EmbeddingGenerator, IdfTable, PopularFilter};
+use crate::features::Point;
+use crate::lsh::Bucketer;
+use crate::util::threadpool::parallel_map;
+
+/// Result of an offline preprocessing pass.
+pub struct Preprocessed {
+    pub stats: BucketStats,
+    pub idf: Option<IdfTable>,
+    pub filter: Option<PopularFilter>,
+}
+
+/// Scan `corpus` once and derive the §4.2 tables per `config`.
+pub fn preprocess(
+    bucketer: &Bucketer,
+    corpus: &[Point],
+    config: &GusConfig,
+    threads: usize,
+) -> Preprocessed {
+    // Parallel bucket computation, merged into one stats object.
+    let threads = threads.max(1);
+    let chunk = corpus.len().div_ceil(threads).max(1);
+    let ranges: Vec<std::ops::Range<usize>> = (0..threads)
+        .map(|t| (t * chunk).min(corpus.len())..((t + 1) * chunk).min(corpus.len()))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let partials: Vec<BucketStats> = parallel_map(ranges.len(), threads, |ri| {
+        let mut stats = BucketStats::new();
+        let mut buf = Vec::new();
+        for i in ranges[ri].clone() {
+            bucketer.buckets_into(&corpus[i], &mut buf);
+            stats.add_buckets(&buf);
+        }
+        stats
+    });
+    let mut stats = BucketStats::new();
+    for p in &partials {
+        stats.merge(p);
+    }
+    let idf = (config.idf_s > 0).then(|| IdfTable::from_stats(&stats, config.idf_s));
+    let filter =
+        (config.filter_p > 0.0).then(|| PopularFilter::from_stats(&stats, config.filter_p));
+    Preprocessed { stats, idf, filter }
+}
+
+/// Build a ready-to-serve [`EmbeddingGenerator`] from a preprocessing pass.
+pub fn build_generator(
+    bucketer: Bucketer,
+    pre: &Preprocessed,
+) -> EmbeddingGenerator {
+    EmbeddingGenerator::new(bucketer, pre.idf.clone(), pre.filter.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn corpus() -> (Bucketer, Vec<Point>) {
+        let ds = SyntheticConfig::products_like(400, 3).generate();
+        let bucketer = Bucketer::with_defaults(&ds.schema, 42);
+        (bucketer, ds.points)
+    }
+
+    #[test]
+    fn derives_tables_per_config() {
+        let (b, pts) = corpus();
+        let cfg = GusConfig { idf_s: 100, filter_p: 5.0, ..GusConfig::default() };
+        let pre = preprocess(&b, &pts, &cfg, 4);
+        assert_eq!(pre.stats.num_points(), 400);
+        assert!(pre.stats.num_buckets() > 0);
+        let idf = pre.idf.as_ref().unwrap();
+        assert!(idf.len() <= 100);
+        let filter = pre.filter.as_ref().unwrap();
+        assert_eq!(
+            filter.len(),
+            (pre.stats.num_buckets() as f64 * 0.05).floor() as usize
+        );
+    }
+
+    #[test]
+    fn disabled_tables_are_none() {
+        let (b, pts) = corpus();
+        let cfg = GusConfig { idf_s: 0, filter_p: 0.0, ..GusConfig::default() };
+        let pre = preprocess(&b, &pts, &cfg, 2);
+        assert!(pre.idf.is_none());
+        assert!(pre.filter.is_none());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let (b, pts) = corpus();
+        let cfg = GusConfig { idf_s: 50, filter_p: 10.0, ..GusConfig::default() };
+        let p1 = preprocess(&b, &pts, &cfg, 1);
+        let p8 = preprocess(&b, &pts, &cfg, 8);
+        assert_eq!(p1.stats.num_points(), p8.stats.num_points());
+        assert_eq!(p1.stats.num_buckets(), p8.stats.num_buckets());
+        // Same filter decisions.
+        for (bucket, _) in p1.stats.iter() {
+            assert_eq!(
+                p1.filter.as_ref().unwrap().is_banned(bucket),
+                p8.filter.as_ref().unwrap().is_banned(bucket)
+            );
+        }
+    }
+
+    #[test]
+    fn generator_applies_tables() {
+        let (b, pts) = corpus();
+        let cfg = GusConfig { idf_s: 1000, filter_p: 20.0, ..GusConfig::default() };
+        let pre = preprocess(&b, &pts, &cfg, 2);
+        let banned_before: usize = pts
+            .iter()
+            .map(|p| {
+                b.buckets(p)
+                    .iter()
+                    .filter(|&&bk| pre.filter.as_ref().unwrap().is_banned(bk))
+                    .count()
+            })
+            .sum();
+        assert!(banned_before > 0, "popular tokens should produce bans");
+        let bucketer2 = Bucketer::with_defaults(
+            &SyntheticConfig::products_like(400, 3).generate().schema,
+            42,
+        );
+        let g = build_generator(bucketer2, &pre);
+        // Embeddings exclude banned dims.
+        for p in pts.iter().take(50) {
+            let v = g.embed(p);
+            for d in v.dims() {
+                assert!(!pre.filter.as_ref().unwrap().is_banned(*d));
+            }
+        }
+    }
+}

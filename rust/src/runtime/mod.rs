@@ -1,0 +1,196 @@
+//! XLA/PJRT runtime: load and execute AOT-compiled artifacts.
+//!
+//! The build-time python pipeline (`python/compile/aot.py`) lowers the L2
+//! JAX scorer graph — whose hot spot is the L1 Pallas kernel — to **HLO
+//! text** under `artifacts/`. This module wraps the `xla` crate (PJRT C
+//! API) to load those artifacts once at startup, compile them on the CPU
+//! PJRT client, and execute them from the Rust request path. Python is
+//! never involved at runtime.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Thread-safety: `PjRtClient` is `Rc`-based, so an [`Engine`] is pinned to
+//! one thread. [`crate::scorer::xla::XlaScorer`] wraps it in an actor
+//! thread with a channel interface for the multi-threaded coordinator.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT CPU engine: client + literal/buffer helpers.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    /// Platform name (e.g. "cpu") — useful for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Compile an in-process `XlaComputation` (tests, tooling).
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<Executable> {
+        let exe = self.client.compile(comp).map_err(|e| anyhow!("compile: {e}"))?;
+        Ok(Executable { exe, name: "<in-process>".into() })
+    }
+
+    /// Upload an f32 tensor to the device (done once for weights; per-call
+    /// for query tensors).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("buffer_from_host_buffer dims {dims:?}: {e}"))
+    }
+}
+
+/// A compiled executable (one AOT variant).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with device buffers; expect a single (possibly 1-tuple) f32
+    /// output and copy it back to the host.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        Self::first_output(outs, &self.name)
+    }
+
+    /// Execute with host literals (tests / one-shot calls).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self
+            .exe
+            .execute(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        Self::first_output(outs, &self.name)
+    }
+
+    fn first_output(outs: Vec<Vec<xla::PjRtBuffer>>, name: &str) -> Result<Vec<f32>> {
+        let lit = outs
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("{name}: no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal_sync: {e}"))?;
+        Self::literal_to_f32(lit).with_context(|| format!("output of {name}"))
+    }
+
+    /// Unwrap an (optionally 1-tuple-wrapped) f32 literal.
+    fn literal_to_f32(lit: xla::Literal) -> Result<Vec<f32>> {
+        // aot.py lowers with return_tuple=True ⇒ a 1-tuple.
+        let lit = match lit.shape() {
+            Ok(xla::Shape::Tuple(_)) => lit
+                .to_tuple1()
+                .map_err(|e| anyhow!("unwrapping 1-tuple output: {e}"))?,
+            _ => lit,
+        };
+        lit.to_vec::<f32>().map_err(|e| anyhow!("reading f32 output: {e}"))
+    }
+}
+
+/// Make an f32 literal with a shape (helper for tests and one-shot runs).
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        debug_assert_eq!(dims[0], data.len());
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+}
+
+/// Directory where AOT artifacts live (overridable via `GUS_ARTIFACTS_DIR`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("GUS_ARTIFACTS_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise the PJRT wiring without python: they build tiny
+    // computations with XlaBuilder in-process.
+
+    #[test]
+    fn engine_builds_and_runs_builder_computation() {
+        let engine = Engine::cpu().expect("cpu client");
+        assert!(!engine.platform().is_empty());
+        let builder = xla::XlaBuilder::new("t");
+        let shape = xla::Shape::array::<f32>(vec![4]);
+        let p = builder.parameter_s(0, &shape, "p").unwrap();
+        let q = builder.parameter_s(1, &shape, "q").unwrap();
+        let comp = (p + q).unwrap().build().unwrap();
+        let exe = engine.compile(&comp).unwrap();
+
+        // Literal path.
+        let a = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let b = literal_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
+        let out = exe.run_literals(&[a, b]).unwrap();
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+
+        // Buffer path (the production path).
+        let ba = engine.buffer_f32(&[1.0, 1.0, 1.0, 1.0], &[4]).unwrap();
+        let bb = engine.buffer_f32(&[2.0, 2.0, 2.0, 2.0], &[4]).unwrap();
+        let out = exe.run_buffers(&[&ba, &bb]).unwrap();
+        assert_eq!(out, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn matrix_shapes_roundtrip() {
+        let engine = Engine::cpu().expect("cpu client");
+        let b = engine
+            .buffer_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])
+            .unwrap();
+        let shape = b.on_device_shape().unwrap();
+        match shape {
+            xla::Shape::Array(a) => assert_eq!(a.dims(), &[2, 3]),
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn buffer_dim_mismatch_errors() {
+        let engine = Engine::cpu().expect("cpu client");
+        assert!(engine.buffer_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let engine = Engine::cpu().expect("cpu client");
+        let err = match engine.load_hlo_text(Path::new("/nonexistent/model.hlo.txt")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("nonexistent"));
+    }
+}

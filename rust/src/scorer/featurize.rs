@@ -1,0 +1,297 @@
+//! Pairwise feature map φ(q, c) — the model's input.
+//!
+//! The layout is a frozen cross-language contract with
+//! `python/compile/model.py` (which trains on and AOT-compiles exactly this
+//! map); golden tests on both sides pin the same values:
+//!
+//! ```text
+//! φ(q, c) = [ q_dense * c_dense          (d values, elementwise product)
+//!           , |q_dense - c_dense|        (d values, absolute difference)
+//!           , extras...                  (ke values, in channel order) ]
+//! ```
+//!
+//! Extras, per non-primary channel in schema order:
+//! - `Tokens`: `[jaccard(q, c), ln(1 + |q ∩ c|)]`
+//! - `Scalar`: `[|q - c| / SCALAR_SCALE]`
+//! - additional `Dense` channels: `[cosine(q, c)]`
+//!
+//! The dense product/difference blocks are computed *inside* the Pallas
+//! kernel (never materialized in HBM); the extras are computed here on the
+//! Rust side for both the native and the XLA paths.
+
+use crate::features::{FeatureKind, FeatureValue, Point, Schema};
+
+/// Scale for scalar |difference| features (years differ by ~0–30).
+pub const SCALAR_SCALE: f32 = 10.0;
+
+/// The featurizer for a schema.
+#[derive(Debug, Clone)]
+pub struct PairFeaturizer {
+    schema: Schema,
+    primary_dense: usize,
+    extra_dim: usize,
+}
+
+impl PairFeaturizer {
+    pub fn new(schema: &Schema) -> PairFeaturizer {
+        let primary_dense = schema
+            .primary_dense_channel()
+            .expect("schema needs a dense channel for the scorer");
+        let extra_dim = schema
+            .channels
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != primary_dense)
+            .map(|(_, c)| match c.kind {
+                FeatureKind::Tokens => 2,
+                FeatureKind::Scalar => 1,
+                FeatureKind::Dense => 1,
+            })
+            .sum();
+        PairFeaturizer {
+            schema: schema.clone(),
+            primary_dense,
+            extra_dim,
+        }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Index of the primary dense channel (the kernel's q/C input).
+    pub fn primary_dense_channel(&self) -> usize {
+        self.primary_dense
+    }
+
+    /// d = primary dense dimension.
+    pub fn dense_dim(&self) -> usize {
+        self.schema.channels[self.primary_dense].dim
+    }
+
+    /// ke = number of extra features.
+    pub fn extra_dim(&self) -> usize {
+        self.extra_dim
+    }
+
+    /// Total φ dimension: `2·d + ke`.
+    pub fn input_dim(&self) -> usize {
+        2 * self.dense_dim() + self.extra_dim
+    }
+
+    /// Append the extra features of the pair (token/scalar channels) to
+    /// `out`. Exactly `extra_dim()` values, deterministic channel order.
+    pub fn extras_into(&self, q: &Point, c: &Point, out: &mut Vec<f32>) {
+        for (i, ch) in self.schema.channels.iter().enumerate() {
+            if i == self.primary_dense {
+                continue;
+            }
+            match (&q.features[i], &c.features[i]) {
+                (FeatureValue::Tokens(a), FeatureValue::Tokens(b)) => {
+                    let (inter, na, nb) = set_overlap(a, b);
+                    let union = na + nb - inter;
+                    let jaccard = if union == 0 {
+                        0.0
+                    } else {
+                        inter as f32 / union as f32
+                    };
+                    out.push(jaccard);
+                    out.push((1.0 + inter as f32).ln());
+                }
+                (FeatureValue::Scalar(a), FeatureValue::Scalar(b)) => {
+                    out.push((a - b).abs() / SCALAR_SCALE);
+                }
+                (FeatureValue::Dense(a), FeatureValue::Dense(b)) => {
+                    out.push(cosine(a, b));
+                }
+                _ => panic!("channel {i} ({}): mismatched kinds", ch.name),
+            }
+        }
+    }
+
+    /// Extra features as a fresh vector.
+    pub fn extras(&self, q: &Point, c: &Point) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.extra_dim);
+        self.extras_into(q, c, &mut out);
+        out
+    }
+
+    /// The full φ(q, c) — used by the native scorer and tests. The XLA path
+    /// never materializes this (dense blocks are fused in the kernel).
+    pub fn full_into(&self, q: &Point, c: &Point, out: &mut Vec<f32>) {
+        let qd = q.dense(self.primary_dense);
+        let cd = c.dense(self.primary_dense);
+        assert_eq!(qd.len(), cd.len(), "dense dim mismatch");
+        for (a, b) in qd.iter().zip(cd) {
+            out.push(a * b);
+        }
+        for (a, b) in qd.iter().zip(cd) {
+            out.push((a - b).abs());
+        }
+        self.extras_into(q, c, out);
+    }
+
+    /// Full φ as a fresh vector.
+    pub fn full(&self, q: &Point, c: &Point) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.input_dim());
+        self.full_into(q, c, &mut out);
+        out
+    }
+}
+
+/// `(|a ∩ b|, |a|, |b|)` with set semantics (duplicates count once).
+fn set_overlap(a: &[u64], b: &[u64]) -> (usize, usize, usize) {
+    // Token lists are small (tens); sort-merge on copies.
+    let mut aa: Vec<u64> = a.to_vec();
+    let mut bb: Vec<u64> = b.to_vec();
+    aa.sort_unstable();
+    aa.dedup();
+    bb.sort_unstable();
+    bb.dedup();
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < aa.len() && j < bb.len() {
+        match aa[i].cmp(&bb[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    (n, aa.len(), bb.len())
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Schema;
+
+    fn arxiv_pair() -> (PairFeaturizer, Point, Point) {
+        let schema = Schema::arxiv_like(3);
+        let f = PairFeaturizer::new(&schema);
+        let q = Point::new(
+            1,
+            vec![
+                FeatureValue::Dense(vec![1.0, -2.0, 0.5]),
+                FeatureValue::Scalar(2020.0),
+            ],
+        );
+        let c = Point::new(
+            2,
+            vec![
+                FeatureValue::Dense(vec![2.0, 1.0, 0.5]),
+                FeatureValue::Scalar(2015.0),
+            ],
+        );
+        (f, q, c)
+    }
+
+    #[test]
+    fn golden_arxiv_like() {
+        // GOLDEN VALUES — mirrored in python/tests/test_featurize_contract.py.
+        let (f, q, c) = arxiv_pair();
+        assert_eq!(f.dense_dim(), 3);
+        assert_eq!(f.extra_dim(), 1);
+        assert_eq!(f.input_dim(), 7);
+        let phi = f.full(&q, &c);
+        assert_eq!(
+            phi,
+            vec![
+                2.0, -2.0, 0.25, // q*c
+                1.0, 3.0, 0.0, // |q-c|
+                0.5, // |2020-2015|/10
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_products_like() {
+        // GOLDEN VALUES — mirrored in python/tests/test_featurize_contract.py.
+        let schema = Schema::products_like(2);
+        let f = PairFeaturizer::new(&schema);
+        let q = Point::new(
+            1,
+            vec![
+                FeatureValue::Dense(vec![1.0, 0.0]),
+                FeatureValue::Tokens(vec![10, 20, 30]),
+            ],
+        );
+        let c = Point::new(
+            2,
+            vec![
+                FeatureValue::Dense(vec![0.5, 0.5]),
+                FeatureValue::Tokens(vec![20, 30, 40, 50]),
+            ],
+        );
+        let phi = f.full(&q, &c);
+        // extras: jaccard = 2/5 = 0.4, ln(1+2) = 1.0986123.
+        assert_eq!(phi.len(), 6);
+        assert_eq!(&phi[..4], &[0.5, 0.0, 0.5, 0.5]);
+        assert!((phi[4] - 0.4).abs() < 1e-6);
+        assert!((phi[5] - 3.0f32.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetric() {
+        let (f, q, c) = arxiv_pair();
+        assert_eq!(f.full(&q, &c), f.full(&c, &q));
+    }
+
+    #[test]
+    fn identical_points_zero_diff() {
+        let (f, q, _) = arxiv_pair();
+        let phi = f.full(&q, &q);
+        // |q-q| block all zeros, scalar extra 0.
+        assert_eq!(&phi[3..6], &[0.0, 0.0, 0.0]);
+        assert_eq!(phi[6], 0.0);
+    }
+
+    #[test]
+    fn token_edge_cases() {
+        let schema = Schema::products_like(1);
+        let f = PairFeaturizer::new(&schema);
+        let mk = |tokens: Vec<u64>| {
+            Point::new(
+                0,
+                vec![FeatureValue::Dense(vec![1.0]), FeatureValue::Tokens(tokens)],
+            )
+        };
+        // Both empty: jaccard 0 (not NaN).
+        let e = f.extras(&mk(vec![]), &mk(vec![]));
+        assert_eq!(e, vec![0.0, 0.0]);
+        // Duplicate tokens count once (set semantics).
+        let e = f.extras(&mk(vec![5, 5, 5]), &mk(vec![5]));
+        assert!((e[0] - 1.0).abs() < 1e-6, "jaccard of identical sets is 1");
+    }
+
+    #[test]
+    fn extras_match_full_suffix() {
+        let (f, q, c) = arxiv_pair();
+        let full = f.full(&q, &c);
+        let extras = f.extras(&q, &c);
+        assert_eq!(&full[full.len() - extras.len()..], extras.as_slice());
+    }
+
+    #[test]
+    fn cosine_helper() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0], &[1.0]), 0.0);
+    }
+}

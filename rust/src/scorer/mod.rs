@@ -1,0 +1,196 @@
+//! Pairwise similarity scoring (§3.2 "Similarity Computation").
+//!
+//! The paper scores candidate pairs with a pre-trained model over the two
+//! points' features — its experiments use a two-layer neural network with 10
+//! hidden units per layer. This module provides:
+//!
+//! - [`featurize::PairFeaturizer`]: the deterministic pairwise feature map
+//!   φ(q, c) shared (by specification, and checked by golden tests) with the
+//!   python training/AOT pipeline;
+//! - [`MlpWeights`]: the trained parameters, loaded from
+//!   `artifacts/weights_<dataset>.json` as exported by
+//!   `python/compile/train.py`;
+//! - [`native::NativeScorer`]: a pure-Rust implementation — the numeric
+//!   oracle for the XLA path, the scorer for the Grale baseline, and the
+//!   fallback when artifacts are absent;
+//! - [`xla::XlaScorer`]: the production path — an AOT-compiled XLA/Pallas
+//!   executable run through PJRT ([`crate::runtime`]).
+//!
+//! Both scorers implement [`PairScorer`].
+
+pub mod featurize;
+pub mod native;
+pub mod xla;
+
+use crate::features::Point;
+use crate::util::json::Json;
+
+pub use featurize::PairFeaturizer;
+pub use native::NativeScorer;
+pub use xla::XlaScorer;
+
+/// Hidden width of the paper's model (§5 "Model training": two layers, 10
+/// hidden units per layer).
+pub const HIDDEN: usize = 10;
+
+/// A pairwise similarity scorer: query point vs a batch of candidates,
+/// returning one score in [0, 1] per candidate.
+pub trait PairScorer: Send + Sync {
+    /// Score `q` against each candidate.
+    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32>;
+
+    /// Convenience: single pair.
+    fn score(&self, q: &Point, c: &Point) -> f32 {
+        self.score_batch(q, &[c])[0]
+    }
+}
+
+/// MLP parameters: `score = σ(relu(relu(φ·W1 + b1)·W2 + b2)·w3 + b3)`.
+///
+/// `W1` is `[input_dim × HIDDEN]` row-major; `input_dim = 2·d_dense + ke`
+/// where the first `d_dense` rows correspond to the elementwise-product
+/// block, the next `d_dense` to the |difference| block, and the last `ke`
+/// to the extra (token/scalar) features — the row split the Pallas kernel
+/// uses to avoid materializing φ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpWeights {
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub w1: Vec<f32>, // [input_dim][hidden]
+    pub b1: Vec<f32>, // [hidden]
+    pub w2: Vec<f32>, // [hidden][hidden]
+    pub b2: Vec<f32>, // [hidden]
+    pub w3: Vec<f32>, // [hidden]
+    pub b3: f32,
+}
+
+impl MlpWeights {
+    /// Random (Xavier-ish) initialization — used in tests and as the
+    /// fallback when no trained artifact exists.
+    pub fn random(input_dim: usize, hidden: usize, seed: u64) -> MlpWeights {
+        let mut rng = crate::util::rng::Rng::seeded(seed);
+        let s1 = (2.0 / (input_dim + hidden) as f64).sqrt();
+        let s2 = (2.0 / (2 * hidden) as f64).sqrt();
+        MlpWeights {
+            input_dim,
+            hidden,
+            w1: (0..input_dim * hidden)
+                .map(|_| (rng.normal() * s1) as f32)
+                .collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..hidden * hidden).map(|_| (rng.normal() * s2) as f32).collect(),
+            b2: vec![0.0; hidden],
+            w3: (0..hidden).map(|_| (rng.normal() * s2) as f32).collect(),
+            b3: 0.0,
+        }
+    }
+
+    /// Validate dimensions.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.w1.len() == self.input_dim * self.hidden, "w1 size");
+        anyhow::ensure!(self.b1.len() == self.hidden, "b1 size");
+        anyhow::ensure!(self.w2.len() == self.hidden * self.hidden, "w2 size");
+        anyhow::ensure!(self.b2.len() == self.hidden, "b2 size");
+        anyhow::ensure!(self.w3.len() == self.hidden, "w3 size");
+        let all_finite = self
+            .w1
+            .iter()
+            .chain(&self.b1)
+            .chain(&self.w2)
+            .chain(&self.b2)
+            .chain(&self.w3)
+            .all(|x| x.is_finite())
+            && self.b3.is_finite();
+        anyhow::ensure!(all_finite, "non-finite weights");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("input_dim", Json::num(self.input_dim as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("w1", Json::f32_arr(&self.w1)),
+            ("b1", Json::f32_arr(&self.b1)),
+            ("w2", Json::f32_arr(&self.w2)),
+            ("b2", Json::f32_arr(&self.b2)),
+            ("w3", Json::f32_arr(&self.w3)),
+            ("b3", Json::num(self.b3 as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MlpWeights> {
+        let get_arr = |k: &str| -> anyhow::Result<Vec<f32>> {
+            j.get(k)
+                .to_f32_vec()
+                .ok_or_else(|| anyhow::anyhow!("weights json: missing/invalid '{k}'"))
+        };
+        let w = MlpWeights {
+            input_dim: j
+                .get("input_dim")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing input_dim"))?,
+            hidden: j
+                .get("hidden")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing hidden"))?,
+            w1: get_arr("w1")?,
+            b1: get_arr("b1")?,
+            w2: get_arr("w2")?,
+            b2: get_arr("b2")?,
+            w3: get_arr("w3")?,
+            b3: j
+                .get("b3")
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("missing b3"))?,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Load from a JSON file written by `python/compile/train.py`.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<MlpWeights> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_validate() {
+        let w = MlpWeights::random(20, HIDDEN, 1);
+        w.validate().unwrap();
+        assert_eq!(w.w1.len(), 200);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = MlpWeights::random(6, 4, 2);
+        let j = w.to_json().dump();
+        let w2 = MlpWeights::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(w.input_dim, w2.input_dim);
+        for (a, b) in w.w1.iter().zip(&w2.w1) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(w.b3, w2.b3);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_sizes() {
+        let w = MlpWeights::random(6, 4, 2);
+        let mut j = w.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("b1".into(), Json::f32_arr(&[1.0])); // wrong length
+        }
+        assert!(MlpWeights::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(MlpWeights::load(std::path::Path::new("/nonexistent/w.json")).is_err());
+    }
+}

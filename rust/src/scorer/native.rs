@@ -1,0 +1,229 @@
+//! Pure-Rust scorer: the reference implementation of the model.
+//!
+//! Serves three roles: (1) numeric oracle for the XLA/Pallas path (parity
+//! asserted in `rust/tests/runtime_parity.rs`), (2) the scorer inside the
+//! offline Grale baseline, (3) fallback when `artifacts/` has not been
+//! built. The hot loop is written blockwise over W1's three row-blocks so
+//! φ is never materialized — mirroring the Pallas kernel's structure.
+
+use super::featurize::PairFeaturizer;
+use super::{MlpWeights, PairScorer};
+use crate::features::Point;
+
+/// Native (CPU, pure Rust) pairwise scorer.
+pub struct NativeScorer {
+    featurizer: PairFeaturizer,
+    weights: MlpWeights,
+}
+
+impl NativeScorer {
+    pub fn new(featurizer: PairFeaturizer, weights: MlpWeights) -> NativeScorer {
+        assert_eq!(
+            weights.input_dim,
+            featurizer.input_dim(),
+            "weights trained for input_dim {}, featurizer produces {}",
+            weights.input_dim,
+            featurizer.input_dim()
+        );
+        NativeScorer { featurizer, weights }
+    }
+
+    pub fn featurizer(&self) -> &PairFeaturizer {
+        &self.featurizer
+    }
+
+    pub fn weights(&self) -> &MlpWeights {
+        &self.weights
+    }
+
+    /// Score one candidate given the query's dense slice + extras buffer.
+    fn score_one(&self, qd: &[f32], cd: &[f32], extras: &[f32]) -> f32 {
+        let w = &self.weights;
+        let h = w.hidden;
+        let d = qd.len();
+        // z1 = relu( (q*c)·W1p + |q-c|·W1d + e·W1e + b1 ), blockwise:
+        let mut z1 = [0.0f32; 64];
+        debug_assert!(h <= 64);
+        let z1 = &mut z1[..h];
+        z1.copy_from_slice(&w.b1);
+        for (j, (&a, &b)) in qd.iter().zip(cd).enumerate() {
+            let prod = a * b;
+            let diff = (a - b).abs();
+            let row_p = &w.w1[j * h..(j + 1) * h];
+            let row_d = &w.w1[(d + j) * h..(d + j + 1) * h];
+            for k in 0..h {
+                z1[k] += prod * row_p[k] + diff * row_d[k];
+            }
+        }
+        for (j, &e) in extras.iter().enumerate() {
+            let row = &w.w1[(2 * d + j) * h..(2 * d + j + 1) * h];
+            for k in 0..h {
+                z1[k] += e * row[k];
+            }
+        }
+        for v in z1.iter_mut() {
+            *v = v.max(0.0);
+        }
+        // z2 = relu(z1·W2 + b2)
+        let mut z2 = [0.0f32; 64];
+        let z2 = &mut z2[..h];
+        z2.copy_from_slice(&w.b2);
+        for (j, &x) in z1.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let row = &w.w2[j * h..(j + 1) * h];
+            for k in 0..h {
+                z2[k] += x * row[k];
+            }
+        }
+        let mut logit = w.b3;
+        for k in 0..h {
+            logit += z2[k].max(0.0) * w.w3[k];
+        }
+        sigmoid(logit)
+    }
+}
+
+#[inline]
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl PairScorer for NativeScorer {
+    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
+        let ch = self.featurizer.primary_dense_channel();
+        let qd = q.dense(ch);
+        let mut extras = Vec::with_capacity(self.featurizer.extra_dim());
+        cands
+            .iter()
+            .map(|c| {
+                extras.clear();
+                self.featurizer.extras_into(q, c, &mut extras);
+                self.score_one(qd, c.dense(ch), &extras)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureValue, Schema};
+    use crate::scorer::HIDDEN;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (NativeScorer, Vec<Point>) {
+        let schema = Schema::arxiv_like(8);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), HIDDEN, 7);
+        let scorer = NativeScorer::new(f, w);
+        let mut rng = Rng::seeded(5);
+        let pts = (0..10)
+            .map(|i| {
+                Point::new(
+                    i,
+                    vec![
+                        FeatureValue::Dense(rng.normal_vec_f32(8)),
+                        FeatureValue::Scalar(2010.0 + rng.below(20) as f32),
+                    ],
+                )
+            })
+            .collect();
+        (scorer, pts)
+    }
+
+    /// Oracle: materialize φ and run the MLP naively.
+    fn naive_score(s: &NativeScorer, q: &Point, c: &Point) -> f32 {
+        let phi = s.featurizer().full(q, c);
+        let w = s.weights();
+        let h = w.hidden;
+        let mut z1 = w.b1.clone();
+        for (j, &x) in phi.iter().enumerate() {
+            for k in 0..h {
+                z1[k] += x * w.w1[j * h + k];
+            }
+        }
+        for v in z1.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let mut z2 = w.b2.clone();
+        for (j, &x) in z1.iter().enumerate() {
+            for k in 0..h {
+                z2[k] += x * w.w2[j * h + k];
+            }
+        }
+        let mut logit = w.b3;
+        for k in 0..h {
+            logit += z2[k].max(0.0) * w.w3[k];
+        }
+        sigmoid(logit)
+    }
+
+    #[test]
+    fn blockwise_matches_naive() {
+        let (scorer, pts) = setup();
+        for q in &pts {
+            let cands: Vec<&Point> = pts.iter().collect();
+            let got = scorer.score_batch(q, &cands);
+            for (c, g) in pts.iter().zip(&got) {
+                let want = naive_score(&scorer, q, c);
+                assert!(
+                    (g - want).abs() < 1e-5,
+                    "blockwise {g} vs naive {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scores_in_unit_interval() {
+        let (scorer, pts) = setup();
+        let cands: Vec<&Point> = pts.iter().collect();
+        for s in scorer.score_batch(&pts[0], &cands) {
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn symmetric_scoring() {
+        let (scorer, pts) = setup();
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                let a = scorer.score(&pts[i], &pts[j]);
+                let b = scorer.score(&pts[j], &pts[i]);
+                assert!((a - b).abs() < 1e-6, "asymmetric: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (scorer, pts) = setup();
+        let a = scorer.score(&pts[0], &pts[1]);
+        let b = scorer.score(&pts[0], &pts[1]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let schema = Schema::arxiv_like(8);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(5, HIDDEN, 7); // wrong input_dim
+        let _ = NativeScorer::new(f, w);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (scorer, pts) = setup();
+        assert!(scorer.score_batch(&pts[0], &[]).is_empty());
+    }
+
+    #[test]
+    fn sigmoid_sane() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(100.0) > 0.999);
+        assert!(sigmoid(-100.0) < 0.001);
+    }
+}

@@ -1,0 +1,365 @@
+//! XLA-backed scorer: the production scoring path.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`:
+//!
+//! - `artifacts/scorer_<schema>_b<B>.hlo.txt` — one compiled variant per
+//!   candidate batch size `B` (the graph has static shapes; the scorer pads
+//!   the candidate set to the smallest variant that fits and truncates the
+//!   output);
+//! - `artifacts/weights_<schema>.json` — trained MLP parameters, passed as
+//!   execute-time buffers so periodic retraining (§4.3) swaps a JSON file
+//!   without recompiling HLO.
+//!
+//! Graph signature (frozen contract with `aot.py`):
+//!
+//! ```text
+//! scorer(q[d], C[B,d], E[B,ke],
+//!        w1p[d,H], w1d[d,H], w1e[ke,H], b1[H], w2[H,H], b2[H], w3[H], b3[])
+//!   -> scores[B]
+//! ```
+//!
+//! `PjRtClient` is not `Send`/`Sync`, so the engine lives on a dedicated
+//! actor thread owning the executables and pre-uploaded weight buffers;
+//! [`XlaScorer`] is a `Send + Sync` handle that ships batches over a
+//! channel. Weights are uploaded to the device once, candidate tensors per
+//! call.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::featurize::PairFeaturizer;
+use super::{MlpWeights, PairScorer};
+use crate::features::Point;
+use crate::runtime::Engine;
+
+/// Candidate batch sizes compiled by `aot.py` (must match `BATCH_SIZES`
+/// there).
+pub const BATCH_SIZES: [usize; 4] = [32, 128, 512, 2048];
+
+enum Req {
+    Score {
+        qd: Vec<f32>,
+        cd_flat: Vec<f32>,
+        extras_flat: Vec<f32>,
+        n: usize,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Send + Sync handle to the XLA scoring actor.
+pub struct XlaScorer {
+    featurizer: PairFeaturizer,
+    tx: Mutex<mpsc::Sender<Req>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    batch_sizes: Vec<usize>,
+}
+
+impl XlaScorer {
+    /// Artifact path for a scorer variant.
+    pub fn variant_path(dir: &Path, schema_name: &str, b: usize) -> PathBuf {
+        dir.join(format!("scorer_{schema_name}_b{b}.hlo.txt"))
+    }
+
+    /// Artifact path for trained weights.
+    pub fn weights_path(dir: &Path, schema_name: &str) -> PathBuf {
+        dir.join(format!("weights_{schema_name}.json"))
+    }
+
+    /// True if at least one variant + weights exist for this schema.
+    pub fn artifacts_available(dir: &Path, schema_name: &str) -> bool {
+        Self::weights_path(dir, schema_name).exists()
+            && BATCH_SIZES
+                .iter()
+                .any(|&b| Self::variant_path(dir, schema_name, b).exists())
+    }
+
+    /// Load weights + all available variants for `featurizer.schema()` and
+    /// spawn the actor thread.
+    pub fn load(featurizer: PairFeaturizer, dir: &Path) -> Result<XlaScorer> {
+        let schema_name = featurizer.schema().name.clone();
+        let weights = MlpWeights::load(&Self::weights_path(dir, &schema_name))?;
+        Self::with_weights(featurizer, dir, weights)
+    }
+
+    /// Load with explicit weights (tests; custom deployments).
+    pub fn with_weights(
+        featurizer: PairFeaturizer,
+        dir: &Path,
+        weights: MlpWeights,
+    ) -> Result<XlaScorer> {
+        weights.validate()?;
+        let d = featurizer.dense_dim();
+        let ke = featurizer.extra_dim();
+        if weights.input_dim != featurizer.input_dim() {
+            bail!(
+                "weights input_dim {} != featurizer {}",
+                weights.input_dim,
+                featurizer.input_dim()
+            );
+        }
+        let schema_name = featurizer.schema().name.clone();
+        let variants: Vec<(usize, PathBuf)> = BATCH_SIZES
+            .iter()
+            .map(|&b| (b, Self::variant_path(dir, &schema_name, b)))
+            .filter(|(_, p)| p.exists())
+            .collect();
+        if variants.is_empty() {
+            bail!(
+                "no scorer artifacts for schema '{schema_name}' in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let batch_sizes: Vec<usize> = variants.iter().map(|&(b, _)| b).collect();
+
+        // Boot the actor; report load errors synchronously.
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("gus-xla-scorer".into())
+            .spawn(move || actor_main(variants, weights, d, ke, rx, boot_tx))
+            .expect("spawn scorer actor");
+        boot_rx
+            .recv()
+            .map_err(|_| anyhow!("scorer actor died during startup"))??;
+        Ok(XlaScorer {
+            featurizer,
+            tx: Mutex::new(tx),
+            join: Some(join),
+            batch_sizes,
+        })
+    }
+
+    pub fn featurizer(&self) -> &PairFeaturizer {
+        &self.featurizer
+    }
+
+    /// Batch sizes of the loaded variants (ascending).
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    fn call(&self, qd: Vec<f32>, cd_flat: Vec<f32>, extras_flat: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Req::Score { qd, cd_flat, extras_flat, n, resp: resp_tx })
+                .map_err(|_| anyhow!("scorer actor gone"))?;
+        }
+        resp_rx.recv().map_err(|_| anyhow!("scorer actor dropped response"))?
+    }
+
+    /// Score a batch, propagating runtime errors (the `PairScorer` impl
+    /// panics on error; prefer this in fallible contexts).
+    pub fn try_score_batch(&self, q: &Point, cands: &[&Point]) -> Result<Vec<f32>> {
+        if cands.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ch = self.featurizer.primary_dense_channel();
+        let d = self.featurizer.dense_dim();
+        let ke = self.featurizer.extra_dim();
+        let qd = q.dense(ch).to_vec();
+        let mut cd_flat = Vec::with_capacity(cands.len() * d);
+        let mut extras_flat = Vec::with_capacity(cands.len() * ke);
+        for c in cands {
+            cd_flat.extend_from_slice(c.dense(ch));
+            self.featurizer.extras_into(q, c, &mut extras_flat);
+        }
+        self.call(qd, cd_flat, extras_flat, cands.len())
+    }
+}
+
+impl PairScorer for XlaScorer {
+    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
+        self.try_score_batch(q, cands).expect("xla scorer failed")
+    }
+}
+
+impl Drop for XlaScorer {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Req::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Per-variant state on the actor thread.
+struct Variant {
+    b: usize,
+    exe: crate::runtime::Executable,
+}
+
+fn actor_main(
+    variant_paths: Vec<(usize, PathBuf)>,
+    weights: MlpWeights,
+    d: usize,
+    ke: usize,
+    rx: mpsc::Receiver<Req>,
+    boot_tx: mpsc::Sender<Result<()>>,
+) {
+    // --- startup: engine, executables, weight buffers ---
+    let boot = (|| -> Result<(Engine, Vec<Variant>, Vec<xla::PjRtBuffer>)> {
+        let engine = Engine::cpu()?;
+        let mut variants = Vec::new();
+        for (b, path) in &variant_paths {
+            let exe = engine
+                .load_hlo_text(path)
+                .with_context(|| format!("loading variant b={b}"))?;
+            variants.push(Variant { b: *b, exe });
+        }
+        variants.sort_by_key(|v| v.b);
+        let h = weights.hidden;
+        // Split W1's rows into the three kernel blocks (see module docs).
+        let w1p = &weights.w1[..d * h];
+        let w1d = &weights.w1[d * h..2 * d * h];
+        let w1e = &weights.w1[2 * d * h..(2 * d + ke) * h];
+        let wbufs = vec![
+            engine.buffer_f32(w1p, &[d, h])?,
+            engine.buffer_f32(w1d, &[d, h])?,
+            engine.buffer_f32(w1e, &[ke, h])?,
+            engine.buffer_f32(&weights.b1, &[h])?,
+            engine.buffer_f32(&weights.w2, &[h, h])?,
+            engine.buffer_f32(&weights.b2, &[h])?,
+            engine.buffer_f32(&weights.w3, &[h])?,
+            engine.buffer_f32(&[weights.b3], &[])?,
+        ];
+        Ok((engine, variants, wbufs))
+    })();
+
+    let (engine, variants, wbufs) = match boot {
+        Ok(x) => {
+            let _ = boot_tx.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = boot_tx.send(Err(e));
+            return;
+        }
+    };
+
+    // --- serve ---
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Score { qd, cd_flat, extras_flat, n, resp } => {
+                let r = score_padded(&engine, &variants, &wbufs, &qd, &cd_flat, &extras_flat, n, d, ke);
+                let _ = resp.send(r);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn score_padded(
+    engine: &Engine,
+    variants: &[Variant],
+    wbufs: &[xla::PjRtBuffer],
+    qd: &[f32],
+    cd_flat: &[f32],
+    extras_flat: &[f32],
+    n: usize,
+    d: usize,
+    ke: usize,
+) -> Result<Vec<f32>> {
+    debug_assert_eq!(cd_flat.len(), n * d);
+    debug_assert_eq!(extras_flat.len(), n * ke);
+    // Pick the variant minimizing total padded elements ceil(n/v)·v (ties →
+    // larger v = fewer calls). Padding a batch of 1000 to the 2048 variant
+    // costs 2048 scored rows; two 512-variant calls cost 1024 — measured
+    // ~7× faster end-to-end (EXPERIMENTS.md §Perf).
+    let mut chunk_b = 0usize;
+    let mut best_cost = usize::MAX;
+    for v in variants {
+        // variants are sorted ascending: `<=` prefers the larger batch
+        // (fewer calls) among equal-cost choices.
+        let cost = n.div_ceil(v.b) * v.b;
+        if cost <= best_cost {
+            best_cost = cost;
+            chunk_b = v.b;
+        }
+    }
+    if chunk_b == 0 {
+        bail!("no variants loaded");
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut offset = 0usize;
+    while offset < n {
+        let chunk = (n - offset).min(chunk_b);
+        let variant = variants
+            .iter()
+            .find(|v| v.b >= chunk)
+            .ok_or_else(|| anyhow!("no variant for chunk {chunk}"))?;
+        let b = variant.b;
+        let qbuf = engine.buffer_f32(qd, &[d])?;
+        let (cbuf, ebuf);
+        if chunk == b {
+            cbuf = engine.buffer_f32(&cd_flat[offset * d..(offset + chunk) * d], &[b, d])?;
+            ebuf = engine.buffer_f32(&extras_flat[offset * ke..(offset + chunk) * ke], &[b, ke])?;
+        } else {
+            // Pad with zero rows up to the variant's static batch.
+            let mut cpad = vec![0.0f32; b * d];
+            cpad[..chunk * d].copy_from_slice(&cd_flat[offset * d..(offset + chunk) * d]);
+            let mut epad = vec![0.0f32; b * ke];
+            epad[..chunk * ke]
+                .copy_from_slice(&extras_flat[offset * ke..(offset + chunk) * ke]);
+            cbuf = engine.buffer_f32(&cpad, &[b, d])?;
+            ebuf = engine.buffer_f32(&epad, &[b, ke])?;
+        }
+        let args: Vec<&xla::PjRtBuffer> = [&qbuf, &cbuf, &ebuf]
+            .into_iter()
+            .chain(wbufs.iter())
+            .collect();
+        let scores = variant.exe.run_buffers(&args)?;
+        if scores.len() != b {
+            bail!(
+                "variant b={b} returned {} scores (artifact/schema mismatch?)",
+                scores.len()
+            );
+        }
+        out.extend_from_slice(&scores[..chunk]);
+        offset += chunk;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Schema;
+
+    #[test]
+    fn variant_paths() {
+        let dir = Path::new("artifacts");
+        assert_eq!(
+            XlaScorer::variant_path(dir, "arxiv_like", 128),
+            PathBuf::from("artifacts/scorer_arxiv_like_b128.hlo.txt")
+        );
+        assert_eq!(
+            XlaScorer::weights_path(dir, "arxiv_like"),
+            PathBuf::from("artifacts/weights_arxiv_like.json")
+        );
+    }
+
+    #[test]
+    fn load_without_artifacts_errors() {
+        let schema = Schema::arxiv_like(8);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), super::super::HIDDEN, 1);
+        let tmp = std::env::temp_dir().join("gus-empty-artifacts");
+        let _ = std::fs::create_dir_all(&tmp);
+        let err = match XlaScorer::with_weights(f, &tmp, w) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("make artifacts"), "{err}");
+    }
+
+    // Full numeric parity vs NativeScorer lives in
+    // rust/tests/runtime_parity.rs (requires `make artifacts`).
+}

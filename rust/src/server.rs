@@ -1,0 +1,259 @@
+//! TCP JSON-lines RPC server.
+//!
+//! The paper's system is an RPC service (§3.1: Mutation RPCs and the
+//! Neighborhood RPC). This server exposes both over a newline-delimited
+//! JSON protocol (the offline build has no gRPC stack; the RPC *semantics*
+//! are the same):
+//!
+//! ```text
+//! → {"op":"insert","point":{"id":1,"features":[...]}}
+//! ← {"ok":true,"existed":false}
+//! → {"op":"delete","id":1}
+//! ← {"ok":true,"existed":true}
+//! → {"op":"query","k":10,"point":{...}}        # new or known point
+//! → {"op":"query_id","k":10,"id":1}            # known point by id
+//! ← {"ok":true,"neighbors":[{"id":4,"score":0.93,"dot":3.0},...]}
+//! → {"op":"stats"}
+//! ← {"ok":true,"stats":{...}}
+//! ```
+//!
+//! Connections are handled by a fixed worker pool with a bounded backlog —
+//! the backpressure strategy is "refuse new connections when saturated"
+//! (clients retry), keeping tail latency of admitted requests flat.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::DynamicGus;
+use crate::features::Point;
+use crate::util::json::Json;
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_concurrent_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_concurrent_connections: 64 }
+    }
+}
+
+/// Handle to a running server (for tests and embedding).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and wait for the accept loop to exit.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start serving `gus` on `addr` (e.g. "127.0.0.1:0" for an ephemeral
+/// port). Returns immediately with a handle.
+pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let active = Arc::new(AtomicUsize::new(0));
+    let join = std::thread::Builder::new()
+        .name("gus-server-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                if active.load(Ordering::SeqCst) >= config.max_concurrent_connections {
+                    // Backpressure: refuse (client sees EOF and retries).
+                    drop(stream);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
+                let gus = Arc::clone(&gus);
+                let active = Arc::clone(&active);
+                let _ = std::thread::Builder::new()
+                    .name("gus-server-conn".into())
+                    .spawn(move || {
+                        let _ = handle_connection(&gus, stream);
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    });
+            }
+        })?;
+    Ok(ServerHandle { addr: local, stop, join: Some(join) })
+}
+
+fn handle_connection(gus: &DynamicGus, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = dispatch(gus, &line);
+        writer.write_all(response.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Decode one request line, execute, encode the response.
+pub fn dispatch(gus: &DynamicGus, line: &str) -> Json {
+    match dispatch_inner(gus, line) {
+        Ok(j) => j,
+        Err(e) => {
+            gus.metrics
+                .counters
+                .errors
+                .fetch_add(1, Ordering::Relaxed);
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e}"))),
+            ])
+        }
+    }
+}
+
+fn dispatch_inner(gus: &DynamicGus, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req
+        .get("op")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("missing 'op'"))?;
+    match op {
+        "insert" | "update" => {
+            let p = Point::from_json(req.get("point"))
+                .ok_or_else(|| anyhow::anyhow!("missing/bad 'point'"))?;
+            let existed = gus.insert(p)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("existed", Json::Bool(existed)),
+            ]))
+        }
+        "delete" => {
+            let id = req
+                .get("id")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("missing 'id'"))?;
+            let existed = gus.delete(id)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("existed", Json::Bool(existed)),
+            ]))
+        }
+        "query" | "query_id" => {
+            let k = req.get("k").as_usize().unwrap_or(gus.config().scann_nn);
+            let neighbors = if op == "query" {
+                let p = Point::from_json(req.get("point"))
+                    .ok_or_else(|| anyhow::anyhow!("missing/bad 'point'"))?;
+                gus.query(&p, k)?
+            } else {
+                let id = req
+                    .get("id")
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("missing 'id'"))?;
+                gus.query_by_id(id, k)?
+            };
+            let arr = neighbors
+                .iter()
+                .map(|n| {
+                    Json::obj(vec![
+                        ("id", Json::u64(n.id)),
+                        ("score", Json::num(n.score as f64)),
+                        ("dot", Json::num(n.dot as f64)),
+                    ])
+                })
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("neighbors", Json::Arr(arr)),
+            ]))
+        }
+        "stats" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("stats", gus.stats_json()),
+        ])),
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GusConfig, ScorerKind};
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn boot() -> (Arc<DynamicGus>, crate::data::Dataset) {
+        let ds = SyntheticConfig::arxiv_like(150, 31).generate();
+        let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap();
+        (Arc::new(gus), ds)
+    }
+
+    #[test]
+    fn dispatch_query_and_mutations() {
+        let (gus, ds) = boot();
+        // Query by id.
+        let resp = dispatch(&gus, &format!(r#"{{"op":"query_id","id":{},"k":5}}"#, 3));
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert!(!resp.get("neighbors").as_arr().unwrap().is_empty());
+        // Insert a new point via JSON.
+        let mut p = ds.points[0].clone();
+        p.id = 50_000;
+        let req = Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())]);
+        let resp = dispatch(&gus, &req.dump());
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        assert_eq!(resp.get("existed").as_bool(), Some(false));
+        // Delete it.
+        let resp = dispatch(&gus, r#"{"op":"delete","id":50000}"#);
+        assert_eq!(resp.get("existed").as_bool(), Some(true));
+        // Stats.
+        let resp = dispatch(&gus, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("stats").get("points").as_usize(), Some(150));
+    }
+
+    #[test]
+    fn dispatch_errors_are_structured() {
+        let (gus, _) = boot();
+        for bad in [
+            "not json",
+            r#"{"no_op":1}"#,
+            r#"{"op":"unknown"}"#,
+            r#"{"op":"delete"}"#,
+            r#"{"op":"query_id","id":987654321}"#,
+        ] {
+            let resp = dispatch(&gus, bad);
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+            assert!(resp.get("error").as_str().is_some());
+        }
+        assert!(gus.metrics.counters.errors.load(Ordering::Relaxed) >= 5);
+    }
+}

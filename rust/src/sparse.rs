@@ -1,0 +1,287 @@
+//! Sparse vectors over a `u64` dimension space.
+//!
+//! The embedding `M(p)` of §4.1 has one non-zero dimension per (retained)
+//! bucket ID — bucket IDs are 64-bit hashes, so the dimension space is the
+//! full `u64` range and a dense representation is impossible. A sparse
+//! vector is a sorted list of `(dim, weight)` pairs; the ScaNN-substitute
+//! index consumes these directly as posting insertions and computes
+//! `Dist(p,q) = -dot(M(p), M(q))`.
+
+use crate::util::json::Json;
+
+/// Immutable sparse vector: dims strictly ascending, weights finite.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SparseVec {
+    dims: Vec<u64>,
+    weights: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Empty vector.
+    pub fn empty() -> SparseVec {
+        SparseVec::default()
+    }
+
+    /// Build from unsorted `(dim, weight)` pairs. Duplicate dims are summed
+    /// (bucket collisions across channels), zero weights are dropped.
+    pub fn from_pairs(mut pairs: Vec<(u64, f32)>) -> SparseVec {
+        pairs.sort_unstable_by_key(|&(d, _)| d);
+        let mut dims = Vec::with_capacity(pairs.len());
+        let mut weights: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (d, w) in pairs {
+            debug_assert!(w.is_finite(), "non-finite weight for dim {d}");
+            if let Some(&last) = dims.last() {
+                if last == d {
+                    *weights.last_mut().unwrap() += w;
+                    continue;
+                }
+            }
+            dims.push(d);
+            weights.push(w);
+        }
+        // Drop zeros created either directly or by cancellation.
+        let mut out_d = Vec::with_capacity(dims.len());
+        let mut out_w = Vec::with_capacity(dims.len());
+        for (d, w) in dims.into_iter().zip(weights) {
+            if w != 0.0 {
+                out_d.push(d);
+                out_w.push(w);
+            }
+        }
+        SparseVec { dims: out_d, weights: out_w }
+    }
+
+    /// Number of non-zero dimensions.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Sorted dimensions.
+    #[inline]
+    pub fn dims(&self) -> &[u64] {
+        &self.dims
+    }
+
+    /// Weights parallel to `dims()`.
+    #[inline]
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Iterate `(dim, weight)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f32)> + '_ {
+        self.dims.iter().copied().zip(self.weights.iter().copied())
+    }
+
+    /// Weight of a dimension (0.0 if absent). O(log nnz).
+    pub fn get(&self, dim: u64) -> f32 {
+        match self.dims.binary_search(&dim) {
+            Ok(i) => self.weights[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Dot product via sorted-merge. O(nnz_a + nnz_b).
+    pub fn dot(&self, other: &SparseVec) -> f32 {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut acc = 0.0f32;
+        while i < self.dims.len() && j < other.dims.len() {
+            match self.dims[i].cmp(&other.dims[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.weights[i] * other.weights[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Number of shared non-zero dimensions.
+    pub fn shared_dims(&self, other: &SparseVec) -> usize {
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+        while i < self.dims.len() && j < other.dims.len() {
+            match self.dims[i].cmp(&other.dims[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// The paper's distance: `Dist(p,q) = -M(p)·M(q)`.
+    #[inline]
+    pub fn dist(&self, other: &SparseVec) -> f32 {
+        -self.dot(other)
+    }
+
+    /// Squared L2 norm.
+    pub fn norm_sq(&self) -> f32 {
+        self.weights.iter().map(|w| w * w).sum()
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dims", Json::u64_arr(&self.dims)),
+            ("weights", Json::f32_arr(&self.weights)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<SparseVec> {
+        let dims = j.get("dims").to_u64_vec()?;
+        let weights = j.get("weights").to_f32_vec()?;
+        if dims.len() != weights.len() || dims.windows(2).any(|w| w[0] >= w[1]) {
+            return None;
+        }
+        Some(SparseVec { dims, weights })
+    }
+
+    /// Approximate heap size in bytes (for Fig. 10 memory accounting).
+    pub fn heap_bytes(&self) -> usize {
+        self.dims.capacity() * std::mem::size_of::<u64>()
+            + self.weights.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+impl FromIterator<(u64, f32)> for SparseVec {
+    fn from_iter<T: IntoIterator<Item = (u64, f32)>>(iter: T) -> Self {
+        SparseVec::from_pairs(iter.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::*;
+
+    #[test]
+    fn from_pairs_sorts_dedups_sums() {
+        let v = SparseVec::from_pairs(vec![(5, 1.0), (1, 2.0), (5, 0.5), (3, -1.0)]);
+        assert_eq!(v.dims(), &[1, 3, 5]);
+        assert_eq!(v.weights(), &[2.0, -1.0, 1.5]);
+    }
+
+    #[test]
+    fn zeros_dropped() {
+        let v = SparseVec::from_pairs(vec![(1, 0.0), (2, 1.0), (3, 0.5), (3, -0.5)]);
+        assert_eq!(v.dims(), &[2]);
+        assert_eq!(v.nnz(), 1);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let a = SparseVec::from_pairs(vec![(1, 1.0), (2, 2.0), (4, 3.0)]);
+        let b = SparseVec::from_pairs(vec![(2, 5.0), (3, 7.0), (4, -1.0)]);
+        assert_eq!(a.dot(&b), 2.0 * 5.0 + 3.0 * (-1.0));
+        assert_eq!(a.dist(&b), -(a.dot(&b)));
+        assert_eq!(a.shared_dims(&b), 2);
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        let a = SparseVec::empty();
+        let b = SparseVec::from_pairs(vec![(1, 1.0)]);
+        assert_eq!(a.dot(&b), 0.0);
+        assert_eq!(a.dot(&a), 0.0);
+    }
+
+    #[test]
+    fn get_and_norm() {
+        let a = SparseVec::from_pairs(vec![(10, 3.0), (20, 4.0)]);
+        assert_eq!(a.get(10), 3.0);
+        assert_eq!(a.get(15), 0.0);
+        assert_eq!(a.norm(), 5.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = SparseVec::from_pairs(vec![(10, 3.5), (20, -4.25), (1 << 60, 1.0)]);
+        let j = a.to_json().dump();
+        let b = SparseVec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_json_rejects_unsorted() {
+        let j = Json::parse(r#"{"dims":[2,1],"weights":[1,1]}"#).unwrap();
+        assert!(SparseVec::from_json(&j).is_none());
+        let j = Json::parse(r#"{"dims":[1],"weights":[1,2]}"#).unwrap();
+        assert!(SparseVec::from_json(&j).is_none());
+    }
+
+    /// Property: dot is symmetric and matches a hashmap-based oracle.
+    #[test]
+    fn prop_dot_symmetric_and_correct() {
+        proptest(|rng| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                let n = rng.below_usize(40);
+                let pairs: Vec<(u64, f32)> = (0..n)
+                    .map(|_| (rng.below(64), rng.f32() * 4.0 - 2.0))
+                    .collect();
+                SparseVec::from_pairs(pairs)
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let ab = a.dot(&b);
+            let ba = b.dot(&a);
+            assert!((ab - ba).abs() < 1e-4, "asymmetric: {ab} vs {ba}");
+            // Oracle.
+            let mut oracle = 0.0f32;
+            for (d, w) in a.iter() {
+                oracle += w * b.get(d);
+            }
+            assert!((ab - oracle).abs() < 1e-3, "dot {ab} vs oracle {oracle}");
+        });
+    }
+
+    /// Property: shared_dims > 0 ⇔ dot of all-positive vectors > 0
+    /// (this is exactly the argument in Lemma 4.1).
+    #[test]
+    fn prop_lemma41_core() {
+        proptest(|rng| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                let n = rng.below_usize(20);
+                let pairs: Vec<(u64, f32)> = (0..n)
+                    .map(|_| (rng.below(40), 0.01 + rng.f32()))
+                    .collect();
+                SparseVec::from_pairs(pairs)
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let share = a.shared_dims(&b) > 0;
+            let neg_dist = a.dist(&b) < 0.0;
+            assert_eq!(share, neg_dist, "lemma 4.1 violated: share={share}");
+        });
+    }
+
+    #[test]
+    fn prop_norm_triangle() {
+        proptest(|rng| {
+            let n = rng.below_usize(30);
+            let pairs: Vec<(u64, f32)> =
+                (0..n).map(|_| (rng.below(50), rng.f32() - 0.5)).collect();
+            let a = SparseVec::from_pairs(pairs);
+            // Cauchy–Schwarz with itself.
+            assert!(a.dot(&a) >= -1e-6);
+            assert!((a.dot(&a) - a.norm_sq()).abs() < 1e-4);
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Property-testing harness (no `proptest` offline).
+//!
+//! A deliberately small substitute: a seeded case runner with value
+//! generators built on [`crate::util::rng::Rng`]. On failure it reports the
+//! case seed so the exact failing input can be replayed by pinning
+//! `GUS_PROP_SEED`. No shrinking — generators are kept small enough that raw
+//! failing cases are readable.
+//!
+//! ```ignore
+//! proptest(|rng| {
+//!     let xs = gen_f32_vec(rng, 0..100, -1.0..1.0);
+//!     let v = SparseVec::from_dense(&xs);
+//!     prop_assert!((v.dot(&v) - dense_dot(&xs, &xs)).abs() < 1e-4);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via `GUS_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("GUS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Base seed (overridable via `GUS_PROP_SEED` for replay).
+pub fn base_seed() -> u64 {
+    std::env::var("GUS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x6275_735f_7072_6f70)
+}
+
+/// Run `prop` for `default_cases()` seeded cases. The closure gets a
+/// per-case RNG; any panic is re-raised with the case seed attached.
+pub fn proptest(prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    proptest_cases(default_cases(), prop)
+}
+
+/// Run `prop` for exactly `cases` seeded cases.
+pub fn proptest_cases(cases: u64, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seeded(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {case} (replay with GUS_PROP_SEED={seed} GUS_PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+// ---------- common generators ----------
+
+/// Uniform usize in [lo, hi).
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(lo < hi);
+    lo + rng.below_usize(hi - lo)
+}
+
+/// f32 vector with entries uniform in [lo, hi), length in [min_len, max_len).
+pub fn gen_f32_vec(rng: &mut Rng, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    let n = gen_usize(rng, min_len, max_len.max(min_len + 1));
+    (0..n).map(|_| lo + rng.f32() * (hi - lo)).collect()
+}
+
+/// Sorted, deduplicated u64 keys in [0, key_space).
+pub fn gen_sorted_keys(rng: &mut Rng, max_len: usize, key_space: u64) -> Vec<u64> {
+    let n = rng.below_usize(max_len + 1);
+    let mut keys: Vec<u64> = (0..n).map(|_| rng.below(key_space)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// Random alphanumeric identifier.
+pub fn gen_ident(rng: &mut Rng, max_len: usize) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+    let n = 1 + rng.below_usize(max_len.max(1));
+    (0..n).map(|_| ALPHA[rng.below_usize(ALPHA.len())] as char).collect()
+}
+
+/// Assert with context, mirrors `proptest`'s `prop_assert!`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond { panic!($($arg)+); }
+    };
+    ($cond:expr) => {
+        if !$cond { panic!(concat!("assertion failed: ", stringify!($cond))); }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        proptest_cases(10, |_rng| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn failure_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            proptest_cases(5, |rng| {
+                let x = rng.below(100);
+                prop_assert!(x < 1000); // passes
+                if rng.below(3) == 99 {
+                    unreachable!();
+                }
+            });
+        });
+        assert!(r.is_ok());
+
+        let r = std::panic::catch_unwind(|| {
+            proptest_cases(3, |_rng| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("GUS_PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        proptest_cases(20, |rng| {
+            let v = gen_f32_vec(rng, 0, 50, -2.0, 2.0);
+            assert!(v.len() < 50);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+            let keys = gen_sorted_keys(rng, 30, 1000);
+            assert!(keys.windows(2).all(|w| w[0] < w[1]));
+            let id = gen_ident(rng, 8);
+            assert!(!id.is_empty() && id.len() <= 8);
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `program SUBCOMMAND [--flag] [--key=value] [--key value] [pos]`.
+//! Typed accessors record which keys were consumed so unknown arguments can
+//! be rejected — silent typos in experiment parameters would corrupt results.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminates option parsing.
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // `--key value` if next token isn't an option,
+                        // otherwise a boolean flag.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => {
+                                (stripped.to_string(), it.next().unwrap())
+                            }
+                            _ => (stripped.to_string(), "true".to_string()),
+                        }
+                    }
+                };
+                if options.insert(key.clone(), val).is_some() {
+                    return Err(format!("duplicate option --{key}"));
+                }
+            } else if command.is_none() {
+                command = Some(a);
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args {
+            command,
+            positional,
+            options,
+            consumed: Default::default(),
+        })
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        let v = self.options.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    /// String option.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    /// u64 option with default; panics with a clear message on bad input.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.raw(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// usize option.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    /// f64 option.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.raw(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Boolean flag (`--x`, `--x=true/false`).
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.raw(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a boolean, got '{v}'"),
+        }
+    }
+
+    /// Comma-separated list of u64.
+    pub fn get_u64_list(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        match self.raw(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided `--option` was never consumed (catches typos).
+    pub fn check_unused(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unused: Vec<&String> =
+            self.options.keys().filter(|k| !consumed.contains(*k)).collect();
+        if unused.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown options: {unused:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--port=7001", "--dataset", "arxiv", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_u64("port", 0), 7001);
+        assert_eq!(a.get_str("dataset", ""), "arxiv");
+        assert!(a.get_bool("verbose", false));
+        a.check_unused().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_u64("k", 10), 10);
+        assert_eq!(a.get_f64("tau", 0.5), 0.5);
+        assert!(!a.get_bool("flag", false));
+        assert_eq!(a.get_u64_list("nns", &[10, 100]), vec![10, 100]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--nns=10,100,1000"]);
+        assert_eq!(a.get_u64_list("nns", &[]), vec![10, 100, 1000]);
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = parse(&["x", "--typo=1"]);
+        assert!(a.check_unused().is_err());
+        let _ = a.get_u64("typo", 0);
+        assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn positional_and_dashdash() {
+        let a = parse(&["run", "file1", "--", "--not-an-option"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file1", "--not-an-option"]);
+    }
+
+    #[test]
+    fn duplicate_option_is_error() {
+        assert!(Args::parse_from(["--a=1".to_string(), "--a=2".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse(&["x", "--flag", "--k", "5"]);
+        assert!(a.get_bool("flag", false));
+        assert_eq!(a.get_u64("k", 0), 5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled utility substrates (the offline build environment has no
+//! third-party crates beyond `xla`/`anyhow`/`thiserror`): JSON, RNG and
+//! distributions, stable hashing, a thread pool, and CLI parsing.
+
+pub mod cli;
+pub mod hash;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,347 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The offline build environment carries no `rand` crate, so this module
+//! implements the pieces the project needs from scratch:
+//! - [`Rng`]: xoshiro256++ (Blackman & Vigna), seeded via splitmix64 — fast,
+//!   high-quality, and reproducible across platforms;
+//! - uniform ints/floats, Box–Muller normals, log-normal, Zipf sampling,
+//!   Fisher–Yates shuffle, sampling without replacement.
+//!
+//! All experiment workloads are generated from explicit seeds so every
+//! figure is exactly reproducible.
+
+use crate::util::hash::mix64;
+
+/// xoshiro256++ PRNG with splitmix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box–Muller.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded with splitmix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            mix64(sm.wrapping_sub(0x9e37_79b9_7f4a_7c15))
+        };
+        let s = [next(), next(), next(), next()];
+        // xoshiro must not be seeded with all zeros; splitmix64 of any seed
+        // cannot produce four zeros, but guard anyway.
+        let s = if s == [0, 0, 0, 0] { [1, 2, 3, 4] } else { s };
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream for a sub-task (e.g. per-shard, per-point).
+    pub fn fork(&self, stream: u64) -> Rng {
+        // Mixing the current state with the stream id gives disjoint streams
+        // without advancing `self`.
+        Rng::seeded(mix64(self.s[0] ^ mix64(self.s[2] ^ stream)))
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (Lemire's unbiased bounded sampling).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi)` (integer).
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the paired variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal with underlying normal(mu, sigma).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (rank 0 most likely).
+    ///
+    /// Uses inverse-CDF on the (approximate) generalized harmonic numbers via
+    /// rejection-free discrete inversion over a precomputed table is avoided;
+    /// instead we use the standard rejection-inversion method of Hörmann &
+    /// Derflinger which needs no table and is O(1) per sample.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n >= 1);
+        if n == 1 {
+            return 0;
+        }
+        // Rejection-inversion (works for s != 1; nudge s=1 slightly).
+        let s = if (s - 1.0).abs() < 1e-9 { 1.0 + 1e-9 } else { s };
+        let nf = n as f64;
+        let h = |x: f64| -> f64 { ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s) };
+        let h_inv = |x: f64| -> f64 { ((1.0 - s) * x + 1.0).powf(1.0 / (1.0 - s)) - 1.0 };
+        let h_x1 = h(1.5) - 1.0f64.powf(-s);
+        let h_n = h(nf + 0.5);
+        loop {
+            let u = h_x1 + self.f64() * (h_n - h_x1);
+            let x = h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, nf);
+            if k - x <= 0.0 || u >= h(k + 0.5) - k.powf(-s) {
+                return k as u64 - 1;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (order unspecified).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        if k * 3 >= n {
+            // Dense case: shuffle a full index vector prefix.
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below_usize(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        } else {
+            // Sparse case: rejection with a set.
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let i = self.below_usize(n);
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        }
+    }
+
+    /// Choose one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below_usize(xs.len())]
+    }
+
+    /// Vector of iid standard normals as f32.
+    pub fn normal_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seeded(43);
+        assert_ne!(Rng::seeded(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fork_streams_are_independent_and_stable() {
+        let r = Rng::seeded(7);
+        let mut f1 = r.fork(1);
+        let mut f2 = r.fork(2);
+        let mut f1b = r.fork(1);
+        assert_eq!(f1.next_u64(), f1b.next_u64());
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::seeded(1);
+        let n = 10u64;
+        let mut counts = [0u32; 10];
+        for _ in 0..10_000 {
+            let x = r.below(n);
+            assert!(x < n);
+            counts[x as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::seeded(2);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((0.48..0.52).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((0.95..1.05).contains(&var), "var={var}");
+    }
+
+    #[test]
+    fn zipf_rank0_most_frequent() {
+        let mut r = Rng::seeded(4);
+        let n = 100u64;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..20_000 {
+            let k = r.zipf(n, 1.1);
+            assert!(k < n);
+            counts[k as usize] += 1;
+        }
+        assert!(counts[0] > counts[9], "{:?}", &counts[..10]);
+        assert!(counts[0] > counts[50] * 3);
+    }
+
+    #[test]
+    fn zipf_n1() {
+        let mut r = Rng::seeded(5);
+        assert_eq!(r.zipf(1, 1.2), 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seeded(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::seeded(8);
+        for &(n, k) in &[(10usize, 10usize), (1000, 10), (50, 25), (5, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::seeded(9);
+        for _ in 0..1000 {
+            assert!(r.lognormal(1.0, 0.8) > 0.0);
+        }
+    }
+}

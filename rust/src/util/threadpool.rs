@@ -1,0 +1,226 @@
+//! A small work-stealing-free thread pool and scoped `parallel_for`.
+//!
+//! No `rayon`/`tokio` offline, so the offline experiments (Grale full-graph
+//! scoring, dataset generation) use this: a fixed pool of workers pulling
+//! closures from a shared channel, plus a blocking chunked `parallel_for`
+//! built on `std::thread::scope` (no pool needed, no 'static bound).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs are `FnOnce() + Send + 'static`.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("gus-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(tx), workers }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+
+    /// Submit a job and get a handle to its result.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> JobHandle<T> {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            // Receiver may have been dropped; ignore send failure.
+            let _ = tx.send(job());
+        });
+        JobHandle { rx }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel, then join workers.
+        self.sender.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle to a pool job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("job panicked")
+    }
+}
+
+/// Default parallelism: number of available cores (capped at 16 to keep the
+/// single-machine experiments well-behaved).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Chunked parallel-for over `0..n`: calls `f(chunk_range)` on `threads`
+/// scoped threads. `f` only needs to borrow its environment (no 'static).
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>` in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = SyncSlice(out.as_mut_ptr() as usize, std::marker::PhantomData::<T>);
+        parallel_for_chunks(n, threads, |range| {
+            for i in range {
+                // SAFETY: each index is written by exactly one chunk/thread.
+                unsafe {
+                    let ptr = (slots.0 as *mut Option<T>).add(i);
+                    std::ptr::write(ptr, Some(f(i)));
+                }
+            }
+        });
+    }
+    out.into_iter().map(|x| x.expect("all slots written")).collect()
+}
+
+// Helper carrying a raw pointer across the Sync boundary; sound because
+// chunk ranges are disjoint.
+struct SyncSlice<T>(usize, std::marker::PhantomData<T>);
+unsafe impl<T> Sync for SyncSlice<T> {}
+impl<T> Clone for SyncSlice<T> {
+    fn clone(&self) -> Self {
+        SyncSlice(self.0, std::marker::PhantomData)
+    }
+}
+impl<T> Copy for SyncSlice<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            handles.push(pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_values() {
+        let pool = ThreadPool::new(2);
+        let h1 = pool.submit(|| 21 * 2);
+        let h2 = pool.submit(|| "ok".to_string());
+        assert_eq!(h1.join(), 42);
+        assert_eq!(h2.join(), "ok");
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(3);
+        for _ in 0..10 {
+            pool.execute(|| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            });
+        }
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(257, 5, |i| i * i);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_zero_and_one() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+}

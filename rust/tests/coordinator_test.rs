@@ -1,0 +1,234 @@
+//! Coordinator integration: dynamic semantics under realistic traces,
+//! concurrency, and failure injection.
+
+use std::sync::Arc;
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::data::trace::{Op, TraceConfig};
+use dynamic_gus::features::{FeatureValue, Point};
+use dynamic_gus::testing::proptest_cases;
+use dynamic_gus::util::rng::Rng;
+
+fn boot(n: usize, seed: u64) -> (DynamicGus, dynamic_gus::data::Dataset) {
+    let ds = SyntheticConfig::arxiv_like(n, seed).generate();
+    let cfg = GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 10.0,
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap();
+    (gus, ds)
+}
+
+/// Replay a full mixed trace; service-level invariants hold throughout.
+#[test]
+fn mixed_trace_replay_consistent() {
+    let ds = SyntheticConfig::arxiv_like(800, 0x71).generate();
+    let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+    let trace = TraceConfig {
+        initial_fraction: 0.7,
+        n_ops: 2_000,
+        insert_prob: 0.15,
+        update_prob: 0.1,
+        delete_prob: 0.05,
+        query_k: 10,
+        seed: 3,
+    }
+    .build(&ds);
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &trace.initial, 2).unwrap();
+    let mut live: std::collections::BTreeSet<u64> =
+        trace.initial.iter().map(|p| p.id).collect();
+    for op in &trace.ops {
+        match op {
+            Op::Insert(p) | Op::Update(p) => {
+                gus.insert(p.clone()).unwrap();
+                live.insert(p.id);
+            }
+            Op::Delete(id) => {
+                gus.delete(*id).unwrap();
+                live.remove(id);
+            }
+            Op::Query { point, k } => {
+                let res = gus.query(point, *k).unwrap();
+                assert!(res.len() <= *k);
+                for nb in &res {
+                    assert!(live.contains(&nb.id), "dead neighbor {}", nb.id);
+                    assert_ne!(nb.id, point.id, "self-neighbor");
+                    assert!((0.0..=1.0).contains(&nb.score));
+                }
+            }
+        }
+        assert_eq!(gus.len(), live.len(), "index drift");
+    }
+}
+
+/// A delete immediately hides the point; a re-insert immediately restores
+/// it (sequential consistency from one client's view).
+#[test]
+fn delete_insert_visibility_cycle() {
+    let (gus, ds) = boot(300, 0x72);
+    let victim = ds.points[7].clone();
+    for _ in 0..10 {
+        gus.delete(victim.id).unwrap();
+        let res = gus.query(&ds.points[8], 50).unwrap();
+        assert!(res.iter().all(|n| n.id != victim.id));
+        gus.insert(victim.clone()).unwrap();
+    }
+    assert_eq!(gus.len(), 300);
+}
+
+/// Concurrent clients: mutations and queries from many threads never
+/// produce malformed results.
+#[test]
+fn concurrent_clients_no_dangling_results() {
+    let (gus, ds) = boot(500, 0x73);
+    let gus = Arc::new(gus);
+    let ds = Arc::new(ds);
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let gus = Arc::clone(&gus);
+        let ds = Arc::clone(&ds);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(t);
+            for i in 0..300 {
+                match i % 3 {
+                    0 => {
+                        // churn: delete + re-insert a random point
+                        let idx = rng.below_usize(ds.points.len());
+                        let p = ds.points[idx].clone();
+                        gus.delete(p.id).ok();
+                        gus.insert(p).unwrap();
+                    }
+                    _ => {
+                        let idx = rng.below_usize(ds.points.len());
+                        if let Ok(res) = gus.query(&ds.points[idx], 10) {
+                            for nb in res {
+                                assert!(nb.score.is_finite());
+                                assert!((0.0..=1.0).contains(&nb.score));
+                            }
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(gus.len(), 500);
+}
+
+/// Failure injection: malformed points are rejected atomically — the
+/// service state is untouched by failed mutations.
+#[test]
+fn rejected_mutations_leave_no_trace() {
+    let (gus, _ds) = boot(200, 0x74);
+    let before = gus.len();
+    let bad_points = vec![
+        Point::new(9001, vec![]),
+        Point::new(9002, vec![FeatureValue::Scalar(1.0)]),
+        Point::new(
+            9003,
+            vec![
+                FeatureValue::Dense(vec![1.0; 3]), // wrong dim
+                FeatureValue::Scalar(2020.0),
+            ],
+        ),
+        Point::new(
+            9004,
+            vec![
+                FeatureValue::Dense(vec![f32::NAN; 128]),
+                FeatureValue::Scalar(2020.0),
+            ],
+        ),
+    ];
+    for p in bad_points {
+        assert!(gus.insert(p.clone()).is_err(), "{p:?} accepted");
+        assert!(!gus.contains(p.id));
+    }
+    assert_eq!(gus.len(), before);
+}
+
+/// Property: after any random op sequence, query results are sorted by
+/// score and contain only live points.
+#[test]
+fn prop_random_ops_preserve_invariants() {
+    let ds = SyntheticConfig::arxiv_like(150, 0x75).generate();
+    proptest_cases(8, |rng| {
+        let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+        let split = 100;
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points[..split], 1).unwrap();
+        let mut live: std::collections::BTreeSet<u64> =
+            ds.points[..split].iter().map(|p| p.id).collect();
+        for _ in 0..60 {
+            match rng.below(4) {
+                0 => {
+                    let idx = rng.below_usize(ds.points.len());
+                    gus.insert(ds.points[idx].clone()).unwrap();
+                    live.insert(ds.points[idx].id);
+                }
+                1 => {
+                    if let Some(&id) = live.iter().next() {
+                        gus.delete(id).unwrap();
+                        live.remove(&id);
+                    }
+                }
+                _ => {
+                    let idx = rng.below_usize(ds.points.len());
+                    let res = gus.query(&ds.points[idx], 5).unwrap();
+                    for w in res.windows(2) {
+                        assert!(w[0].score >= w[1].score, "unsorted");
+                    }
+                    for nb in &res {
+                        assert!(live.contains(&nb.id));
+                    }
+                }
+            }
+        }
+        assert_eq!(gus.len(), live.len());
+    });
+}
+
+/// Sharded deployment answers exactly like the single-shard one.
+#[test]
+fn sharded_equals_sequential() {
+    let ds = SyntheticConfig::arxiv_like(400, 0x76).generate();
+    let mk = |shards: usize| {
+        let cfg = GusConfig {
+            scorer: ScorerKind::Native,
+            n_shards: shards,
+            ..GusConfig::default()
+        };
+        DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap()
+    };
+    let g1 = mk(1);
+    let g4 = mk(4);
+    for qi in (0..ds.points.len()).step_by(37) {
+        let a = g1.query(&ds.points[qi], 10).unwrap();
+        let b = g4.query(&ds.points[qi], 10).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert!((x.score - y.score).abs() < 1e-6);
+        }
+    }
+}
+
+/// Staleness SLO: with synchronous apply, p99 staleness is far inside the
+/// paper's "few seconds" bound.
+#[test]
+fn staleness_slo_within_bound() {
+    let (gus, ds) = boot(300, 0x77);
+    for i in 0..100 {
+        let mut p = ds.points[i].clone();
+        p.id = 10_000 + i as u64;
+        gus.insert(p).unwrap();
+    }
+    assert!(gus
+        .metrics
+        .staleness
+        .within_slo(std::time::Duration::from_secs(5)));
+}

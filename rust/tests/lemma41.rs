@@ -1,0 +1,98 @@
+//! Lemma 4.1 end-to-end: "For any point p, the neighborhood of p is exactly
+//! the same in Grale and Dynamic GUS if we retrieve all the points with
+//! negative distance to p in ScaNN."
+//!
+//! The paper validates this experimentally in Fig. 3; here it is an
+//! integration test over both datasets, plus the generalization the paper
+//! notes after the lemma: it holds for *any* strictly-positive embedding
+//! weights, i.e. with IDF enabled too.
+
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::embed::{BucketStats, EmbeddingGenerator, IdfTable};
+use dynamic_gus::eval::offline;
+use dynamic_gus::index::{QueryParams, QueryScratch, SparseAnn};
+use dynamic_gus::lsh::Bucketer;
+use dynamic_gus::util::hash::FxHashSet;
+
+#[test]
+fn fig3_identity_arxiv_like() {
+    let ds = SyntheticConfig::arxiv_like(1200, 0xf3).generate();
+    let (series, identical) = offline::fig3(&ds, 4);
+    assert!(identical, "Lemma 4.1 violated on arxiv_like");
+    assert!(series[0].total_edges > 0);
+}
+
+#[test]
+fn fig3_identity_products_like() {
+    let ds = SyntheticConfig::products_like(1000, 0xf4).generate();
+    let (series, identical) = offline::fig3(&ds, 4);
+    assert!(identical, "Lemma 4.1 violated on products_like");
+    assert!(series[0].total_edges > 0);
+}
+
+/// Pairwise form of the lemma, with IDF weights: shared bucket ⇔ negative
+/// distance, point by point against a brute-force bucket comparison.
+#[test]
+fn lemma_holds_with_idf_weights() {
+    let ds = SyntheticConfig::products_like(300, 0xf5).generate();
+    let bucketer = Bucketer::with_defaults(&ds.schema, 0x11);
+    let mut stats = BucketStats::new();
+    let all_buckets: Vec<Vec<u64>> =
+        ds.points.iter().map(|p| bucketer.buckets(p)).collect();
+    for b in &all_buckets {
+        stats.add_buckets(b);
+    }
+    let idf = IdfTable::from_stats(&stats, 50); // bounded table, default weight
+    let generator = EmbeddingGenerator::new(bucketer, Some(idf), None);
+
+    let mut index = SparseAnn::new();
+    for p in &ds.points {
+        index.upsert(p.id, generator.embed(p));
+    }
+    let mut scratch = QueryScratch::default();
+    for (i, p) in ds.points.iter().enumerate().take(60) {
+        let emb = generator.embed(p);
+        let got: FxHashSet<u64> = index
+            .threshold(
+                &emb,
+                -f32::MIN_POSITIVE,
+                QueryParams { exclude: Some(p.id), max_postings: 0 },
+                &mut scratch,
+            )
+            .into_iter()
+            .map(|n| n.id)
+            .collect();
+        // Brute force: share >= 1 bucket.
+        let want: FxHashSet<u64> = ds
+            .points
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != i)
+            .filter(|&(j, _)| {
+                all_buckets[i]
+                    .iter()
+                    .any(|b| all_buckets[j].binary_search(b).is_ok())
+            })
+            .map(|(_, q)| q.id)
+            .collect();
+        assert_eq!(got, want, "point {i}: neighborhood mismatch");
+    }
+}
+
+/// The lemma intentionally stops applying under Filter-P: filtered buckets
+/// no longer connect points. Check the direction of the containment.
+#[test]
+fn filtering_only_removes_neighbors() {
+    let ds = SyntheticConfig::products_like(300, 0xf6).generate();
+    let unfiltered = offline::gus_offline(
+        &ds,
+        offline::GusOfflineParams { nn: 0, idf_s: 0, filter_p: 0.0 },
+        2,
+    );
+    let filtered = offline::gus_offline(
+        &ds,
+        offline::GusOfflineParams { nn: 0, idf_s: 0, filter_p: 20.0 },
+        2,
+    );
+    assert!(filtered.directed_edges <= unfiltered.directed_edges);
+}

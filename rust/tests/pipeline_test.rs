@@ -1,0 +1,128 @@
+//! Whole-pipeline integration: dataset → preprocess → embed → index →
+//! retrieve → score, including the XLA path when artifacts exist, plus the
+//! offline/dynamic equivalence the paper asserts in §5.1.
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::eval::offline::{self, GusOfflineParams};
+use dynamic_gus::graph::WeightHistogram;
+use dynamic_gus::runtime::artifacts_dir;
+use dynamic_gus::scorer::XlaScorer;
+
+/// §5.1: "the offline GUS and dynamic GUS provide identical results" —
+/// querying every point through the live coordinator must reproduce the
+/// offline harness's histogram exactly (same retrieval, same scorer).
+#[test]
+fn offline_equals_dynamic() {
+    let ds = SyntheticConfig::arxiv_like(600, 0x91).generate();
+    let nn = 10;
+
+    let offline_out = offline::gus_offline(
+        &ds,
+        GusOfflineParams { nn, idf_s: 0, filter_p: 10.0 },
+        2,
+    );
+
+    let cfg = GusConfig {
+        scann_nn: nn,
+        idf_s: 0,
+        filter_p: 10.0,
+        scorer: ScorerKind::Native,
+        lsh_seed: offline::EVAL_LSH_SEED, // same buckets as the offline run
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap();
+    let mut hist = WeightHistogram::default_bins();
+    let mut edges = 0u64;
+    for p in &ds.points {
+        for nb in gus.query(p, nn).unwrap() {
+            hist.add(nb.score);
+            edges += 1;
+        }
+    }
+    assert_eq!(edges, offline_out.directed_edges, "edge count differs");
+    assert_eq!(
+        hist.percentile_curve(&dynamic_gus::graph::standard_percentiles()),
+        offline_out
+            .histogram
+            .percentile_curve(&dynamic_gus::graph::standard_percentiles()),
+        "histograms differ"
+    );
+}
+
+/// The dynamic system built incrementally (point by point) ends in the same
+/// state as one bootstrapped from the full corpus (same tables).
+#[test]
+fn incremental_equals_bulk() {
+    let ds = SyntheticConfig::arxiv_like(400, 0x92).generate();
+    let cfg = GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 0.0, // tables derived from initial corpus only — disable
+        idf_s: 0,      // to make bulk/incremental strictly comparable
+        ..GusConfig::default()
+    };
+    let bulk = DynamicGus::bootstrap(ds.schema.clone(), cfg.clone(), &ds.points, 2).unwrap();
+    let incr = DynamicGus::bootstrap(ds.schema.clone(), cfg, &[], 2).unwrap();
+    for p in &ds.points {
+        incr.insert(p.clone()).unwrap();
+    }
+    assert_eq!(bulk.len(), incr.len());
+    for qi in (0..ds.points.len()).step_by(29) {
+        let a = bulk.query(&ds.points[qi], 10).unwrap();
+        let b = incr.query(&ds.points[qi], 10).unwrap();
+        assert_eq!(a, b, "query {qi} differs");
+    }
+}
+
+/// XLA-scored coordinator matches the native-scored one end-to-end
+/// (requires `make artifacts`; skips otherwise).
+#[test]
+fn xla_and_native_coordinators_agree() {
+    let ds = SyntheticConfig::arxiv_like(300, 0x93).generate();
+    if !XlaScorer::artifacts_available(&artifacts_dir(), &ds.schema.name) {
+        eprintln!("SKIP xla_and_native_coordinators_agree: run `make artifacts`");
+        return;
+    }
+    let mk = |kind| {
+        let cfg = GusConfig { scorer: kind, ..GusConfig::default() };
+        DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap()
+    };
+    let native = mk(ScorerKind::Native);
+    let xla = mk(ScorerKind::Xla);
+    for qi in (0..ds.points.len()).step_by(17) {
+        let a = native.query(&ds.points[qi], 10).unwrap();
+        let b = xla.query(&ds.points[qi], 10).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "neighbor sets differ at {qi}");
+            assert!(
+                (x.score - y.score).abs() < 1e-4,
+                "scores differ: {} vs {}",
+                x.score,
+                y.score
+            );
+        }
+    }
+}
+
+/// Dataset persistence round-trips through the full pipeline.
+#[test]
+fn saved_dataset_serves_identically() {
+    let ds = SyntheticConfig::products_like(300, 0x94).generate();
+    let dir = std::env::temp_dir().join("gus-pipeline-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.jsonl");
+    dynamic_gus::data::loader::save(&ds, &path).unwrap();
+    let ds2 = dynamic_gus::data::loader::load(&path).unwrap();
+
+    let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+    let a = DynamicGus::bootstrap(ds.schema.clone(), cfg.clone(), &ds.points, 2).unwrap();
+    let b = DynamicGus::bootstrap(ds2.schema.clone(), cfg, &ds2.points, 2).unwrap();
+    for qi in (0..ds.points.len()).step_by(31) {
+        assert_eq!(
+            a.query(&ds.points[qi], 5).unwrap(),
+            b.query(&ds2.points[qi], 5).unwrap()
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration: AOT artifacts × PJRT runtime × native oracle parity.
+//!
+//! Requires `make artifacts` (skips with a visible message otherwise).
+//! This is the load-bearing cross-language test: it proves the python
+//! JAX/Pallas graph and the Rust featurizer/scorer implement the same
+//! mathematical function, so the XLA path can serve what the model was
+//! trained for.
+
+use dynamic_gus::features::{FeatureValue, Point, Schema};
+use dynamic_gus::runtime::artifacts_dir;
+use dynamic_gus::scorer::{
+    MlpWeights, NativeScorer, PairFeaturizer, PairScorer, XlaScorer, HIDDEN,
+};
+use dynamic_gus::util::rng::Rng;
+
+fn have_artifacts(schema: &str) -> bool {
+    XlaScorer::artifacts_available(&artifacts_dir(), schema)
+}
+
+fn random_points(schema: &Schema, n: usize, seed: u64) -> Vec<Point> {
+    let mut rng = Rng::seeded(seed);
+    let d = schema.primary_dense_dim();
+    (0..n as u64)
+        .map(|id| {
+            let features = schema
+                .channels
+                .iter()
+                .map(|c| match c.kind {
+                    dynamic_gus::features::FeatureKind::Dense => {
+                        FeatureValue::Dense(rng.normal_vec_f32(d))
+                    }
+                    dynamic_gus::features::FeatureKind::Scalar => {
+                        FeatureValue::Scalar(1995.0 + rng.below(29) as f32)
+                    }
+                    dynamic_gus::features::FeatureKind::Tokens => FeatureValue::Tokens(
+                        (0..rng.below_usize(12)).map(|_| rng.below(500)).collect(),
+                    ),
+                })
+                .collect();
+            Point::new(id, features)
+        })
+        .collect()
+}
+
+fn parity_for(schema: Schema, seed: u64) {
+    if !have_artifacts(&schema.name) {
+        eprintln!(
+            "SKIP runtime_parity({}): artifacts missing — run `make artifacts`",
+            schema.name
+        );
+        return;
+    }
+    let featurizer = PairFeaturizer::new(&schema);
+    // Use the *trained* weights so the test also validates the weights file.
+    let weights =
+        MlpWeights::load(&XlaScorer::weights_path(&artifacts_dir(), &schema.name)).unwrap();
+    let native = NativeScorer::new(featurizer.clone(), weights.clone());
+    let xla = XlaScorer::with_weights(featurizer, &artifacts_dir(), weights).unwrap();
+
+    let pts = random_points(&schema, 80, seed);
+    let q = &pts[0];
+    // Sweep batch sizes across variant boundaries incl. padding + chunking.
+    for n in [1usize, 2, 31, 32, 33, 79] {
+        let cands: Vec<&Point> = pts[..n].iter().collect();
+        let a = native.score_batch(q, &cands);
+        let b = xla.score_batch(q, &cands);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-5,
+                "{}: n={n} cand {i}: native {x} vs xla {y}",
+                schema.name
+            );
+        }
+    }
+}
+
+#[test]
+fn arxiv_like_parity() {
+    parity_for(Schema::arxiv_like(128), 11);
+}
+
+#[test]
+fn products_like_parity() {
+    parity_for(Schema::products_like(100), 12);
+}
+
+#[test]
+fn random_weights_parity_arxiv() {
+    // Independent of training: random weights through both paths.
+    let schema = Schema::arxiv_like(128);
+    if !have_artifacts(&schema.name) {
+        eprintln!("SKIP random_weights_parity: artifacts missing");
+        return;
+    }
+    let featurizer = PairFeaturizer::new(&schema);
+    let weights = MlpWeights::random(featurizer.input_dim(), HIDDEN, 999);
+    let native = NativeScorer::new(featurizer.clone(), weights.clone());
+    let xla = XlaScorer::with_weights(featurizer, &artifacts_dir(), weights).unwrap();
+    let pts = random_points(&schema, 40, 13);
+    let cands: Vec<&Point> = pts[1..].iter().collect();
+    let a = native.score_batch(&pts[0], &cands);
+    let b = xla.score_batch(&pts[0], &cands);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "native {x} vs xla {y}");
+    }
+}
+
+#[test]
+fn scores_are_probabilities() {
+    let schema = Schema::products_like(100);
+    if !have_artifacts(&schema.name) {
+        eprintln!("SKIP scores_are_probabilities: artifacts missing");
+        return;
+    }
+    let featurizer = PairFeaturizer::new(&schema);
+    let xla = XlaScorer::load(featurizer, &artifacts_dir()).unwrap();
+    let pts = random_points(&schema, 20, 14);
+    let cands: Vec<&Point> = pts[1..].iter().collect();
+    for s in xla.score_batch(&pts[0], &cands) {
+        assert!((0.0..=1.0).contains(&s), "score {s} out of range");
+    }
+}

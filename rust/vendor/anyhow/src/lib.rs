@@ -1,0 +1,182 @@
+//! Offline vendored subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no crates.io access, so this path crate
+//! implements exactly the surface `dynamic_gus` uses, with the same
+//! semantics as the real crate for that subset:
+//!
+//! - [`Error`]: an opaque, message-carrying error type (`Send + Sync`);
+//! - [`Result<T>`]: `std::result::Result<T, Error>` with a defaulted error
+//!   parameter;
+//! - `?` conversion from any `std::error::Error + Send + Sync + 'static`;
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending context to the message chain;
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros (literal, single-expression
+//!   and format-args forms).
+//!
+//! Unlike the real crate there is no backtrace capture and no downcasting —
+//! nothing in this repository uses either. Swap this path dependency for
+//! the real `anyhow` when building online.
+
+use std::fmt;
+
+/// `Result` with a defaulted [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error carrying a human-readable message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line, like `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from standard error types. `Error` itself deliberately
+// does NOT implement `std::error::Error`, so this blanket impl cannot
+// overlap the identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formattable value, or format
+/// args — the three forms of `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error, like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition fails, like `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let x = 7;
+        let e = anyhow!("x = {x}");
+        assert_eq!(format!("{e}"), "x = 7");
+        let e = anyhow!("x = {}", 9);
+        assert_eq!(format!("{e}"), "x = 9");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e:?}"), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted ok");
+            if !ok {
+                bail!("unreachable {}", 1);
+            }
+            Ok(5)
+        }
+        assert_eq!(f(true).unwrap(), 5);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "wanted ok");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("gone"));
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "f.txt")).unwrap_err();
+        assert_eq!(format!("{e}"), "reading f.txt: gone");
+        let o: Option<u32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+}

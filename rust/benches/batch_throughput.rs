@@ -1,0 +1,86 @@
+//! Concurrent serving-path throughput: sharded fan-out and the batch APIs.
+//!
+//! This is the measurement behind the PR that parallelized `ShardedIndex`:
+//! every row reports **per-item** latency (`bench_batch` divides by the
+//! batch size), so the three serving strategies compare directly per
+//! (shards, threads) cell:
+//!
+//! - `top_k` — one query, shards scanned on the worker threads;
+//! - `query_batch` — 64 queries per call, parallelized across queries;
+//! - `upsert_batch` — 64 mutations per call, one write-lock take per shard.
+//!
+//! The `(shards=1, threads=1)` rows are the sequential seed baseline; the
+//! multi-shard/multi-thread rows must beat them on ≥ 4 cores.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::embed::EmbeddingGenerator;
+use dynamic_gus::index::sharded::ShardedIndex;
+use dynamic_gus::index::QueryParams;
+use dynamic_gus::lsh::Bucketer;
+use dynamic_gus::sparse::SparseVec;
+
+fn build(n: usize, shards: usize, threads: usize) -> (ShardedIndex, Vec<SparseVec>) {
+    let ds = SyntheticConfig::arxiv_like(n, 0xba7c).generate();
+    let generator = EmbeddingGenerator::plain(Bucketer::with_defaults(&ds.schema, 0xe7a1));
+    let ix = ShardedIndex::with_threads(shards, threads);
+    let mut embeddings = Vec::with_capacity(n);
+    for p in &ds.points {
+        let e = generator.embed(p);
+        ix.upsert(p.id, e.clone());
+        embeddings.push(e);
+    }
+    (ix, embeddings)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 20_000usize;
+    let k = 100usize;
+    let batch = 64usize;
+    for &(shards, threads) in &[(1usize, 1usize), (4, 1), (4, 4), (8, 8)] {
+        let (ix, embeddings) = build(n, shards, threads);
+
+        let mut qi = 0usize;
+        b.bench(
+            &format!("sharded/top_k/k={k}/shards={shards}/threads={threads}"),
+            || {
+                qi = (qi + 7919) % embeddings.len();
+                ix.top_k(&embeddings[qi], k, QueryParams::default())
+            },
+        );
+
+        let queries: Vec<(SparseVec, QueryParams)> = (0..batch)
+            .map(|i| {
+                (
+                    embeddings[(i * 7919) % embeddings.len()].clone(),
+                    QueryParams::default(),
+                )
+            })
+            .collect();
+        b.bench_batch(
+            &format!("sharded/query_batch{batch}/k={k}/shards={shards}/threads={threads}"),
+            batch,
+            || ix.query_batch(&queries, k),
+        );
+
+        // Mutation path: re-upsert a sliding window of existing points so
+        // the corpus size stays constant across iterations.
+        let mut base = 0u64;
+        b.bench_batch(
+            &format!("sharded/upsert_batch{batch}/shards={shards}/threads={threads}"),
+            batch,
+            || {
+                base = (base + 131) % n as u64;
+                let items: Vec<(u64, SparseVec)> = (0..batch as u64)
+                    .map(|i| {
+                        let id = (base + i) % n as u64;
+                        (id, embeddings[id as usize].clone())
+                    })
+                    .collect();
+                ix.upsert_batch(items)
+            },
+        );
+    }
+    b.dump_json("batch_throughput");
+}

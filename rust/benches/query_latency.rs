@@ -9,6 +9,7 @@ use dynamic_gus::bench::Bencher;
 use dynamic_gus::config::{GusConfig, ScorerKind};
 use dynamic_gus::coordinator::DynamicGus;
 use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::features::Point;
 
 fn main() {
     let mut b = Bencher::new();
@@ -35,6 +36,27 @@ fn main() {
                     },
                 );
             }
+        }
+
+        // Concurrent serving path: per-query latency of the batch RPC
+        // across shard/thread configurations. (shards=1, threads=1) is the
+        // sequential baseline the parallel cells are compared against.
+        let batch_len = 64usize;
+        for &(shards, threads) in &[(1usize, 1usize), (4, 1), (4, 4)] {
+            let cfg = GusConfig {
+                scann_nn: 100,
+                n_shards: shards,
+                query_threads: threads,
+                scorer: ScorerKind::Auto,
+                ..GusConfig::default()
+            };
+            let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 8).unwrap();
+            let batch: Vec<Point> = ds.points.iter().take(batch_len).cloned().collect();
+            b.bench_batch(
+                &format!("query_batch{batch_len}/{name}/nn=100/shards={shards}/threads={threads}"),
+                batch_len,
+                || gus.query_batch(&batch, 100).unwrap(),
+            );
         }
     }
     b.dump_json("query_latency");

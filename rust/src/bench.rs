@@ -109,7 +109,15 @@ impl Bencher {
 
     /// Run a benchmark: `f` is one iteration; its return value is
     /// black-boxed so the work is not optimized away.
-    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        self.bench_batch(name, 1, f)
+    }
+
+    /// Like [`bench`](Bencher::bench), but one call of `f` processes
+    /// `batch` items; collected stats are **per item**, so batched and
+    /// unbatched rows of the same workload compare directly.
+    pub fn bench_batch<T>(&mut self, name: &str, batch: usize, mut f: impl FnMut() -> T) {
+        let per = batch.max(1) as f64;
         if let Some(filt) = &self.filter {
             if !name.contains(filt.as_str()) {
                 return;
@@ -123,7 +131,7 @@ impl Bencher {
         while start.elapsed() < self.budget && samples.len() < self.max_iters {
             let t0 = Instant::now();
             black_box(f());
-            samples.push(t0.elapsed().as_nanos() as f64);
+            samples.push(t0.elapsed().as_nanos() as f64 / per);
         }
         let r = BenchResult::from_samples(name, samples);
         println!(
@@ -169,6 +177,21 @@ mod tests {
         assert!(r.iters > 10);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
         assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn bench_batch_reports_per_item() {
+        let mut b = Bencher::new();
+        b.budget = Duration::from_millis(30);
+        b.warmup_iters = 1;
+        b.filter = None;
+        b.bench_batch("sleepy-batch", 10, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        let r = &b.results()[0];
+        // 1 ms per call over 10 items → ≈ 100 µs per item.
+        assert!(r.mean_ns < 1e6, "not divided by batch: {}", r.mean_ns);
+        assert!(r.mean_ns > 1e4, "divided too much: {}", r.mean_ns);
     }
 
     #[test]

@@ -54,6 +54,65 @@ impl GusClient {
         Ok(self.call(&req)?.get("existed").as_bool().unwrap_or(false))
     }
 
+    /// Insert or update a batch of points in one RPC; returns, per input
+    /// position, whether the point existed. The server applies the batch
+    /// through the parallel mutation path (one shard-lock acquisition per
+    /// shard), so this is the high-throughput ingestion call.
+    pub fn insert_batch(&mut self, points: &[Point]) -> Result<Vec<bool>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("insert_batch")),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ]);
+        let resp = self.call(&req)?;
+        Self::parse_existed(&resp, points.len())
+    }
+
+    /// Delete a batch of points in one RPC; returns, per input position,
+    /// whether the point was present.
+    pub fn delete_batch(&mut self, ids: &[u64]) -> Result<Vec<bool>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("delete_batch")),
+            ("ids", Json::u64_arr(ids)),
+        ]);
+        let resp = self.call(&req)?;
+        Self::parse_existed(&resp, ids.len())
+    }
+
+    /// Decode a batch response's `existed` array, checking its length
+    /// against the request batch.
+    fn parse_existed(resp: &Json, expected_len: usize) -> Result<Vec<bool>> {
+        let arr = resp
+            .get("existed")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing 'existed'"))?;
+        if arr.len() != expected_len {
+            bail!("existed length {} != batch length {expected_len}", arr.len());
+        }
+        arr.iter()
+            .map(|j| j.as_bool().ok_or_else(|| anyhow!("bad 'existed' entry")))
+            .collect()
+    }
+
+    /// Neighborhoods of a batch of points in one RPC; result `i`
+    /// corresponds to `points[i]` and matches what [`GusClient::query`]
+    /// would return for it.
+    pub fn query_batch(&mut self, points: &[Point], k: usize) -> Result<Vec<Vec<ScoredNeighbor>>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("query_batch")),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+            ("k", Json::num(k as f64)),
+        ]);
+        let resp = self.call(&req)?;
+        let results = resp
+            .get("results")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing 'results'"))?;
+        if results.len() != points.len() {
+            bail!("results length {} != batch length {}", results.len(), points.len());
+        }
+        results.iter().map(Self::parse_neighbor_list).collect()
+    }
+
     /// Delete a point; returns true if it existed.
     pub fn delete(&mut self, id: u64) -> Result<bool> {
         let req = Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))]);
@@ -87,8 +146,13 @@ impl GusClient {
     }
 
     fn parse_neighbors(resp: &Json) -> Result<Vec<ScoredNeighbor>> {
-        resp.get("neighbors")
-            .as_arr()
+        Self::parse_neighbor_list(resp.get("neighbors"))
+    }
+
+    /// Decode one JSON neighbor array (shared by the single and batch
+    /// query paths).
+    fn parse_neighbor_list(arr: &Json) -> Result<Vec<ScoredNeighbor>> {
+        arr.as_arr()
             .ok_or_else(|| anyhow!("missing neighbors"))?
             .iter()
             .map(|n| {

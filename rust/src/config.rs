@@ -47,8 +47,17 @@ pub struct GusConfig {
     /// LSH seed (bucketing must be identical across restarts).
     pub lsh_seed: u64,
     /// Optional posting-scan budget (0 = exact; emulates ScaNN's
-    /// approximation dial for ablations).
+    /// approximation dial for ablations). The budget is global: the
+    /// sharded index splits it across shards.
     pub max_postings: usize,
+    /// Worker threads for the concurrent serving path (shard fan-out and
+    /// the batch RPCs). 0 = auto (available cores, capped); 1 reproduces
+    /// the paper's sequential setting. Thread count never changes results.
+    pub query_threads: usize,
+    /// Chunk size used when an op stream is grouped into batch RPCs
+    /// (currently `gus replay --mode batch`; the batch endpoints
+    /// themselves accept any length). Must be ≥ 1.
+    pub batch_size: usize,
 }
 
 impl Default for GusConfig {
@@ -61,6 +70,8 @@ impl Default for GusConfig {
             scorer: ScorerKind::Auto,
             lsh_seed: 0x677573,
             max_postings: 0,
+            query_threads: 0,
+            batch_size: 128,
         }
     }
 }
@@ -74,6 +85,8 @@ impl GusConfig {
         self.n_shards = args.get_usize("shards", self.n_shards);
         self.lsh_seed = args.get_u64("lsh-seed", self.lsh_seed);
         self.max_postings = args.get_usize("max-postings", self.max_postings);
+        self.query_threads = args.get_usize("query-threads", self.query_threads);
+        self.batch_size = args.get_usize("batch-size", self.batch_size);
         if let Some(s) = args.opt_str("scorer") {
             self.scorer = ScorerKind::parse(&s)?;
         }
@@ -91,7 +104,20 @@ impl GusConfig {
         if self.n_shards == 0 {
             return Err("shards must be >= 1".into());
         }
+        if self.batch_size == 0 {
+            return Err("batch-size must be >= 1".into());
+        }
         Ok(())
+    }
+
+    /// Resolved serving-path worker count: `query_threads`, or the machine
+    /// default (available cores, capped) when 0.
+    pub fn resolved_query_threads(&self) -> usize {
+        if self.query_threads == 0 {
+            crate::util::threadpool::default_parallelism()
+        } else {
+            self.query_threads
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -110,6 +136,8 @@ impl GusConfig {
             ),
             ("lsh_seed", Json::u64(self.lsh_seed)),
             ("max_postings", Json::num(self.max_postings as f64)),
+            ("query_threads", Json::num(self.query_threads as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
         ])
     }
 
@@ -126,6 +154,8 @@ impl GusConfig {
             },
             lsh_seed: j.get("lsh_seed").as_u64().unwrap_or(d.lsh_seed),
             max_postings: j.get("max_postings").as_usize().unwrap_or(d.max_postings),
+            query_threads: j.get("query_threads").as_usize().unwrap_or(d.query_threads),
+            batch_size: j.get("batch_size").as_usize().unwrap_or(d.batch_size),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -169,10 +199,30 @@ mod tests {
         let mut cfg = GusConfig::default();
         cfg.scann_nn = 1000;
         cfg.scorer = ScorerKind::Xla;
+        cfg.query_threads = 6;
+        cfg.batch_size = 32;
         let j = cfg.to_json().dump();
         let back = GusConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back.scann_nn, 1000);
         assert_eq!(back.scorer, ScorerKind::Xla);
+        assert_eq!(back.query_threads, 6);
+        assert_eq!(back.batch_size, 32);
+    }
+
+    #[test]
+    fn serving_knobs_parse_and_validate() {
+        let args = Args::parse_from(
+            ["--query-threads=4", "--batch-size=64"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.query_threads, 4);
+        assert_eq!(cfg.batch_size, 64);
+        assert_eq!(cfg.resolved_query_threads(), 4);
+        // 0 = auto resolves to at least one worker.
+        assert!(GusConfig::default().resolved_query_threads() >= 1);
+        let args = Args::parse_from(["--batch-size=0".to_string()]).unwrap();
+        assert!(GusConfig::default().apply_args(&args).is_err());
     }
 
     #[test]

@@ -18,6 +18,28 @@
 //! the next query the moment its ack returns ([`staleness`] tracks the
 //! mutation-to-visibility interval the paper bounds by "a few seconds" at
 //! the 99th percentile; here it is the mutation latency itself).
+//!
+//! # Threading and batch RPCs
+//!
+//! The index is a [`ShardedIndex`] served by up to
+//! [`GusConfig::resolved_query_threads`] workers: single queries fan out
+//! across shards in parallel, and the batch RPCs parallelize across items
+//! (embedding, retrieval and scoring all run on the scoped worker pool,
+//! drawing reusable query scratches from the index's pool — the hot path
+//! is allocation-free). Thread count never changes results.
+//!
+//! - [`DynamicGus::insert_batch`] embeds points in parallel and groups
+//!   index upserts by shard so each shard's write lock is taken once per
+//!   batch. The whole batch is schema-validated up front: on error the
+//!   service state is untouched. The batch's wall time is recorded once in
+//!   `mutation_latency` (it is also the batch's staleness bound);
+//!   per-point counters are still exact. [`DynamicGus::delete_batch`] is
+//!   the mirror-image bulk delete.
+//! - [`DynamicGus::query_batch`] answers each query identically to
+//!   [`DynamicGus::query`] (same retrieval, same scoring, same order) —
+//!   entry `i` equals `query(&points[i], k)` run against the same
+//!   snapshot. The batch wall time is recorded once in `query_latency`;
+//!   the `queries` counter advances by the batch length.
 
 pub mod ingest;
 pub mod snapshot;
@@ -103,7 +125,7 @@ impl DynamicGus {
             schema,
             config: config.clone(),
             embedder: RwLock::new(embedder),
-            index: ShardedIndex::new(config.n_shards),
+            index: ShardedIndex::with_threads(config.n_shards, config.resolved_query_threads()),
             store: FeatureStore::new(config.n_shards.max(4)),
             scorer,
             metrics: GusMetrics::default(),
@@ -206,39 +228,44 @@ impl DynamicGus {
         Ok(in_index)
     }
 
-    /// Neighborhood RPC (§3.3.3) for a point given by features (may be new
-    /// or existing). Returns scored neighbors sorted by model score desc.
-    pub fn query(&self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
-        let t0 = Instant::now();
-        self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
-        let embedding = { self.embedder.read().unwrap().embed(p) };
-        let params = QueryParams {
+    /// Query-time retrieval params for a point.
+    fn query_params(&self, p: &Point) -> QueryParams {
+        QueryParams {
             exclude: Some(p.id),
             max_postings: self.config.max_postings,
-        };
-        let neighbors = self.index.top_k(&embedding, k, params);
+        }
+    }
+
+    /// Score retrieved candidates against the query point and sort by
+    /// model score desc (id asc on ties). Neighbors whose features are
+    /// gone by scoring time (concurrently deleted) are dropped — they are
+    /// filtered *before* scoring so every neighbor is paired with its own
+    /// score (zipping raw neighbors against the filtered candidates used
+    /// to misalign the pairs whenever a delete raced a query).
+    fn score_neighbors(
+        &self,
+        p: &Point,
+        neighbors: &[crate::index::Neighbor],
+    ) -> Vec<ScoredNeighbor> {
         use std::sync::atomic::Ordering::Relaxed;
         self.metrics
             .counters
             .candidates_retrieved
             .fetch_add(neighbors.len() as u64, Relaxed);
-
-        // Fetch candidate features and score.
-        let cand_points: Vec<std::sync::Arc<Point>> = neighbors
+        let kept: Vec<(&crate::index::Neighbor, std::sync::Arc<Point>)> = neighbors
             .iter()
-            .filter_map(|n| self.store.get(n.id))
+            .filter_map(|n| self.store.get(n.id).map(|p| (n, p)))
             .collect();
-        let cand_refs: Vec<&Point> = cand_points.iter().map(|a| a.as_ref()).collect();
+        let cand_refs: Vec<&Point> = kept.iter().map(|(_, a)| a.as_ref()).collect();
         let scores = self.scorer.score_batch(p, &cand_refs);
         self.metrics
             .counters
             .pairs_scored
             .fetch_add(scores.len() as u64, Relaxed);
-
-        let mut out: Vec<ScoredNeighbor> = neighbors
+        let mut out: Vec<ScoredNeighbor> = kept
             .iter()
             .zip(&scores)
-            .map(|(n, &score)| ScoredNeighbor { id: n.id, score, dot: n.dot })
+            .map(|((n, _), &score)| ScoredNeighbor { id: n.id, score, dot: n.dot })
             .collect();
         out.sort_unstable_by(|a, b| {
             b.score
@@ -246,9 +273,123 @@ impl DynamicGus {
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
+        out
+    }
+
+    /// Neighborhood RPC (§3.3.3) for a point given by features (may be new
+    /// or existing). Returns scored neighbors sorted by model score desc.
+    pub fn query(&self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let t0 = Instant::now();
+        self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        let embedding = { self.embedder.read().unwrap().embed(p) };
+        let neighbors = self.index.top_k(&embedding, k, self.query_params(p));
+        let out = self.score_neighbors(p, &neighbors);
         self.metrics.query_latency.record(t0.elapsed());
-        self.metrics.counters.queries.fetch_add(1, Relaxed);
+        self.metrics
+            .counters
+            .queries
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(out)
+    }
+
+    /// Batch Neighborhood RPC: answer `k`-neighborhoods for many points in
+    /// one call. Embedding, retrieval and scoring run in parallel across
+    /// queries on the serving workers; entry `i` is exactly what
+    /// [`query`](DynamicGus::query) would return for `points[i]` against
+    /// the same index snapshot.
+    pub fn query_batch(&self, points: &[Point], k: usize) -> Result<Vec<Vec<ScoredNeighbor>>> {
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        for p in points {
+            self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        }
+        // Same worker count the index resolved at construction.
+        let threads = self.index.query_threads();
+        let queries: Vec<(crate::sparse::SparseVec, QueryParams)> = {
+            let guard = self.embedder.read().unwrap();
+            let em = &*guard;
+            crate::util::threadpool::parallel_map(points.len(), threads, |i| {
+                (em.embed(&points[i]), self.query_params(&points[i]))
+            })
+        };
+        let neighbor_lists = self.index.query_batch(&queries, k);
+        let out = crate::util::threadpool::parallel_map(points.len(), threads, |i| {
+            self.score_neighbors(&points[i], &neighbor_lists[i])
+        });
+        self.metrics.query_latency.record(t0.elapsed());
+        self.metrics
+            .counters
+            .queries
+            .fetch_add(points.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Batch Mutation RPC: insert or update many points in one call.
+    /// The whole batch is schema-validated first (on error nothing is
+    /// applied), embeddings are computed in parallel, and index upserts
+    /// are grouped by shard (one write-lock acquisition per shard).
+    /// Returns, per input position, whether the point already existed.
+    /// Duplicate ids within a batch apply in input order.
+    pub fn insert_batch(&self, points: Vec<Point>) -> Result<Vec<bool>> {
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        for p in &points {
+            self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        }
+        let threads = self.index.query_threads();
+        let items: Vec<(PointId, crate::sparse::SparseVec)> = {
+            let guard = self.embedder.read().unwrap();
+            let em = &*guard;
+            crate::util::threadpool::parallel_map(points.len(), threads, |i| {
+                (points[i].id, em.embed(&points[i]))
+            })
+        };
+        // Store before indexing, matching the single-insert order (a
+        // racing query sees features for everything the index returns).
+        for p in points {
+            self.store.put(p);
+        }
+        let existed = self.index.upsert_batch(items);
+        let dt = t0.elapsed();
+        self.metrics.mutation_latency.record(dt);
+        self.metrics.staleness.record_visible(dt);
+        use std::sync::atomic::Ordering::Relaxed;
+        let updates = existed.iter().filter(|&&e| e).count() as u64;
+        self.metrics.counters.updates.fetch_add(updates, Relaxed);
+        self.metrics
+            .counters
+            .inserts
+            .fetch_add(existed.len() as u64 - updates, Relaxed);
+        Ok(existed)
+    }
+
+    /// Batch Mutation RPC: delete many points in one call. Index removals
+    /// are grouped by shard (one write-lock acquisition per shard, via
+    /// [`ShardedIndex::remove_batch`]). Returns, per input position,
+    /// whether the point was present.
+    pub fn delete_batch(&self, ids: &[PointId]) -> Result<Vec<bool>> {
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        // Index first, then store — the same order as the single delete
+        // (a racing query never sees an indexed point without features).
+        let existed = self.index.remove_batch(ids);
+        for &id in ids {
+            self.store.remove(id);
+        }
+        let dt = t0.elapsed();
+        self.metrics.mutation_latency.record(dt);
+        self.metrics.staleness.record_visible(dt);
+        self.metrics
+            .counters
+            .deletes
+            .fetch_add(ids.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(existed)
     }
 
     /// Neighborhood RPC for an existing point by id.
@@ -456,6 +597,96 @@ mod tests {
         assert_eq!(gus.metrics.query_latency.count(), 2);
         let js = gus.stats_json();
         assert_eq!(js.get("points").as_usize(), Some(101));
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential_inserts() {
+        let ds = SyntheticConfig::arxiv_like(300, 21).generate();
+        let config = GusConfig {
+            scorer: ScorerKind::Native,
+            filter_p: 0.0,
+            n_shards: 4,
+            ..GusConfig::default()
+        };
+        let batch_gus =
+            DynamicGus::bootstrap(ds.schema.clone(), config.clone(), &ds.points[..100], 2).unwrap();
+        let seq_gus =
+            DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points[..100], 2).unwrap();
+        let new_points: Vec<Point> = ds.points[100..250].to_vec();
+        for p in &new_points {
+            seq_gus.insert(p.clone()).unwrap();
+        }
+        let existed = batch_gus.insert_batch(new_points).unwrap();
+        assert_eq!(existed.len(), 150);
+        assert!(existed.iter().all(|&e| !e), "fresh points reported existing");
+        assert_eq!(batch_gus.len(), seq_gus.len());
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(batch_gus.metrics.counters.inserts.load(Relaxed), 150);
+        // Re-inserting via batch counts as updates and changes nothing.
+        let existed = batch_gus.insert_batch(ds.points[100..120].to_vec()).unwrap();
+        assert!(existed.iter().all(|&e| e));
+        assert_eq!(batch_gus.metrics.counters.updates.load(Relaxed), 20);
+        // Both services answer queries identically.
+        for qi in (0..250).step_by(23) {
+            let a = batch_gus.query(&ds.points[qi], 10).unwrap();
+            let b = seq_gus.query(&ds.points[qi], 10).unwrap();
+            assert_eq!(a, b, "query {qi} diverged");
+        }
+    }
+
+    #[test]
+    fn delete_batch_matches_sequential_deletes() {
+        let (batch_gus, ds) = boot(200);
+        let (seq_gus, _) = boot(200);
+        let victims: Vec<u64> = ds.points[..40].iter().map(|p| p.id).collect();
+        let want: Vec<bool> = victims.iter().map(|&id| seq_gus.delete(id).unwrap()).collect();
+        let got = batch_gus.delete_batch(&victims).unwrap();
+        assert_eq!(got, want);
+        assert!(got.iter().all(|&e| e));
+        assert_eq!(batch_gus.len(), seq_gus.len());
+        for &id in &victims {
+            assert!(!batch_gus.contains(id));
+        }
+        // Deleting again (including unknown ids) reports absent, harmlessly.
+        let mut again = victims[..5].to_vec();
+        again.push(987_654_321);
+        let got = batch_gus.delete_batch(&again).unwrap();
+        assert!(got.iter().all(|&e| !e));
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(batch_gus.metrics.counters.deletes.load(Relaxed), 46);
+        assert!(batch_gus.delete_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn query_batch_matches_single_queries() {
+        let (gus, ds) = boot(300);
+        let queries: Vec<Point> = ds.points[..25].to_vec();
+        let batch = gus.query_batch(&queries, 10).unwrap();
+        assert_eq!(batch.len(), 25);
+        for (i, p) in queries.iter().enumerate() {
+            let single = gus.query(p, 10).unwrap();
+            assert_eq!(batch[i], single, "query {i} diverged");
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        // 25 batched + 25 singles.
+        assert_eq!(gus.metrics.counters.queries.load(Relaxed), 50);
+        assert!(gus.query_batch(&[], 10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn insert_batch_rejects_atomically() {
+        let (gus, ds) = boot(100);
+        let before = gus.len();
+        let mut batch = vec![ds.points[0].clone()];
+        batch[0].id = 55_001;
+        batch.push(Point::new(55_002, vec![])); // schema violation
+        assert!(gus.insert_batch(batch).is_err());
+        assert_eq!(gus.len(), before, "partial batch applied");
+        assert!(!gus.contains(55_001));
+        assert!(!gus.contains(55_002));
+        // query_batch validates the whole batch too.
+        let bad = vec![ds.points[0].clone(), Point::new(1, vec![])];
+        assert!(gus.query_batch(&bad, 5).is_err());
     }
 
     #[test]

@@ -79,9 +79,20 @@ struct Slot {
 /// Reusable query scratch space: dense accumulator over slots plus the
 /// touched list. Reusing it across queries removes all per-query allocation
 /// from the hot path (see EXPERIMENTS.md §Perf).
+///
+/// Touched-slot membership is tracked with an epoch-tagged `visited` array
+/// (`visited[slot] == epoch` ⇔ slot touched by the current query), not by
+/// testing `acc[slot] == 0.0`: with signed embedding weights a partial dot
+/// sum can cancel back to exactly `0.0` mid-accumulation, and the old
+/// zero-test pushed such slots into `touched` twice. Epoch tagging also
+/// makes a scratch safely reusable across different index instances (the
+/// sharded fan-out pools scratches across shards) — stale accumulator
+/// values are lazily reset on first touch of each new query.
 #[derive(Default)]
 pub struct QueryScratch {
     acc: Vec<f32>,
+    visited: Vec<u32>,
+    epoch: u32,
     touched: Vec<u32>,
     heap: Vec<(f32, PointId)>,
 }
@@ -236,8 +247,23 @@ impl SparseAnn {
 
     /// Score all points sharing ≥ 1 dimension with `query` into the scratch
     /// accumulator; returns number of postings scanned.
-    fn accumulate(&self, query: &SparseVec, params: &QueryParams, scratch: &mut QueryScratch) -> usize {
-        scratch.acc.resize(self.slots.len(), 0.0);
+    fn accumulate(
+        &self,
+        query: &SparseVec,
+        params: &QueryParams,
+        scratch: &mut QueryScratch,
+    ) -> usize {
+        if scratch.acc.len() < self.slots.len() {
+            scratch.acc.resize(self.slots.len(), 0.0);
+            scratch.visited.resize(self.slots.len(), 0);
+        }
+        scratch.epoch = scratch.epoch.wrapping_add(1);
+        if scratch.epoch == 0 {
+            // Epoch counter wrapped: stale tags could alias the new epoch.
+            scratch.visited.fill(0);
+            scratch.epoch = 1;
+        }
+        let epoch = scratch.epoch;
         scratch.touched.clear();
         let mut scanned = 0usize;
         'outer: for (dim, qw) in query.iter() {
@@ -250,11 +276,13 @@ impl SparseAnn {
                     continue;
                 }
                 scanned += 1;
-                let a = &mut scratch.acc[p.slot as usize];
-                if *a == 0.0 {
+                let s = p.slot as usize;
+                if scratch.visited[s] != epoch {
+                    scratch.visited[s] = epoch;
+                    scratch.acc[s] = 0.0;
                     scratch.touched.push(p.slot);
                 }
-                *a += qw * p.weight;
+                scratch.acc[s] += qw * p.weight;
                 if params.max_postings != 0 && scanned >= params.max_postings {
                     break 'outer;
                 }
@@ -285,7 +313,6 @@ impl SparseAnn {
         heap.clear();
         for &slot in &scratch.touched {
             let dot = scratch.acc[slot as usize];
-            scratch.acc[slot as usize] = 0.0; // reset for next query
             if dot <= 0.0 {
                 continue;
             }
@@ -336,7 +363,6 @@ impl SparseAnn {
         let mut out = Vec::new();
         for &slot in &scratch.touched {
             let dot = scratch.acc[slot as usize];
-            scratch.acc[slot as usize] = 0.0;
             // `dot > 0` is implied for touched slots with positive weights,
             // but embeddings may in principle carry any weights: check.
             if dot >= min_dot && dot != 0.0 {
@@ -630,6 +656,90 @@ mod tests {
         ix.upsert(1, sv(&[(5, 1.0)]));
         assert!(topk(&ix, &SparseVec::empty(), 10).is_empty());
         assert!(topk(&ix, &sv(&[(5, 1.0)]), 0).is_empty());
+    }
+
+    /// Regression for the `accumulate` touched-list bug: with signed
+    /// weights, point 1's partial sum goes 1.0 → 0.0 → 2.0 over the query's
+    /// (sorted) dims, so the old `acc == 0.0` membership test pushed its
+    /// slot into `touched` twice. Epoch tagging must yield each id exactly
+    /// once, with the fully-accumulated dot.
+    #[test]
+    fn threshold_no_duplicates_with_signed_weights() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0), (6, -1.0), (7, 2.0)]));
+        ix.upsert(2, sv(&[(7, 1.0)]));
+        let q = sv(&[(5, 1.0), (6, 1.0), (7, 1.0)]);
+        let r = ix.threshold(&q, 10.0, QueryParams::default(), &mut QueryScratch::default());
+        let ids: Vec<u64> = r.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 2], "duplicate or wrong ids: {r:?}");
+        assert_eq!(r[0].dot, 2.0);
+        assert_eq!(r[1].dot, 1.0);
+
+        let r = ix.top_k(&q, 10, QueryParams::default(), &mut QueryScratch::default());
+        let ids: Vec<u64> = r.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 2], "top_k duplicated: {r:?}");
+    }
+
+    /// A slot whose dot cancels to exactly 0.0 overall is not a neighbor,
+    /// and a reused scratch must not leak state between queries.
+    #[test]
+    fn signed_weights_cancel_to_zero_excluded() {
+        let mut ix = SparseAnn::new();
+        ix.upsert(1, sv(&[(5, 1.0), (6, -1.0)]));
+        ix.upsert(2, sv(&[(5, 0.5)]));
+        let mut scratch = QueryScratch::default();
+        let q = sv(&[(5, 1.0), (6, 1.0)]);
+        for _ in 0..3 {
+            // dot(q, 1) = 0.0 exactly → excluded; dot(q, 2) = 0.5.
+            let r = ix.threshold(&q, 10.0, QueryParams::default(), &mut scratch);
+            let ids: Vec<u64> = r.iter().map(|n| n.id).collect();
+            assert_eq!(ids, vec![2], "{r:?}");
+            let r = ix.top_k(&q, 10, QueryParams::default(), &mut scratch);
+            assert_eq!(r.len(), 1);
+            assert_eq!(r[0].id, 2);
+        }
+    }
+
+    /// Property with signed weights: threshold never returns duplicate ids
+    /// and always matches the brute-force oracle.
+    #[test]
+    fn prop_signed_weights_no_duplicates() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live: std::collections::BTreeMap<u64, SparseVec> = Default::default();
+            for _ in 0..40 {
+                let id = rng.below(20);
+                let n = 1 + rng.below_usize(6);
+                // Half-integral signed weights make exact mid-accumulation
+                // cancellation likely.
+                let v = SparseVec::from_pairs(
+                    (0..n)
+                        .map(|_| (rng.below(12), (rng.below(9) as f32 - 4.0) * 0.5))
+                        .collect(),
+                );
+                ix.upsert(id, v.clone());
+                live.insert(id, v);
+            }
+            let q = SparseVec::from_pairs(
+                (0..3).map(|_| (rng.below(12), (rng.below(9) as f32 - 4.0) * 0.5)).collect(),
+            );
+            let tau = 2.0 - rng.f32() * 6.0;
+            let got = ix.threshold(&q, tau, QueryParams::default(), &mut QueryScratch::default());
+            let got_ids: Vec<u64> = got.iter().map(|n| n.id).collect();
+            let mut dedup = got_ids.clone();
+            dedup.dedup();
+            assert_eq!(got_ids, dedup, "duplicate neighbors: {got:?}");
+            let want_ids: std::collections::BTreeSet<u64> = live
+                .iter()
+                .filter(|(_, v)| {
+                    let d = q.dot(v);
+                    -d <= tau && d != 0.0
+                })
+                .map(|(&id, _)| id)
+                .collect();
+            let got_set: std::collections::BTreeSet<u64> = got_ids.iter().copied().collect();
+            assert_eq!(got_set, want_ids);
+        });
     }
 
     /// Property: top-k always matches a brute-force scan over live points.

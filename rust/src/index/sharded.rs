@@ -1,4 +1,5 @@
-//! Sharded, thread-safe wrapper around [`SparseAnn`].
+//! Sharded, thread-safe wrapper around [`SparseAnn`] — the concurrent
+//! serving engine.
 //!
 //! The paper's dynamic experiments are single-core by design (§5.2,
 //! "for interpretability and stability"), but the system "can be run in a
@@ -6,26 +7,109 @@
 //! single-machine form: N shards, each an independently RwLock'd
 //! [`SparseAnn`]; points are routed by id hash, queries fan out to all
 //! shards and merge.
+//!
+//! # Threading model
+//!
+//! - **Shard locks.** Each shard is a `RwLock<SparseAnn>`: any number of
+//!   concurrent readers (queries) per shard, one writer (mutation) at a
+//!   time, and no lock is ever held across shards — so mutations on one
+//!   shard never block queries on another.
+//! - **Query fan-out.** [`top_k`](ShardedIndex::top_k) and
+//!   [`threshold`](ShardedIndex::threshold) scan shards on up to
+//!   `query_threads` scoped worker threads
+//!   ([`crate::util::threadpool::parallel_map`]); per-shard results are
+//!   collected in shard order and merged with the deterministic
+//!   (dot desc, id asc) order, so results are identical for any thread
+//!   count — `with_threads(n, 1)` reproduces the paper's sequential
+//!   setting exactly. The scoped workers are spawned per call (the
+//!   borrow-friendly `thread::scope` mechanism; `ThreadPool` jobs need
+//!   `'static`), which costs tens of microseconds per fan-out — worth it
+//!   for large multi-shard scans, and amortized to one spawn set per
+//!   *batch* by [`query_batch`](ShardedIndex::query_batch), which is the
+//!   intended high-throughput path. A persistent scoped worker pool is
+//!   the natural next optimization.
+//! - **Scratch pool.** Workers draw [`QueryScratch`] buffers from a
+//!   free-list pool instead of allocating per call, so the scoring hot
+//!   path (accumulators, touched lists, heaps) allocates nothing in
+//!   steady state; the pool grows to the peak number of concurrent
+//!   workers. (Scratches are safely shared across shards because
+//!   touched-slot tracking is epoch-tagged — see [`QueryScratch`].)
+//! - **Posting budget.** A nonzero [`QueryParams::max_postings`] is a
+//!   *global* budget: it is split across shards as `ceil(budget / N)`, so
+//!   the effective scan volume does not scale with the shard count (it
+//!   previously did, which also meant 1-shard equivalence tests never
+//!   exercised the budget). Total postings scanned is at most
+//!   `budget + N - 1` due to the per-shard rounding.
+//!
+//! # Batch APIs
+//!
+//! - [`upsert_batch`](ShardedIndex::upsert_batch) /
+//!   [`remove_batch`](ShardedIndex::remove_batch) group mutations by
+//!   destination shard, take each shard's write lock **once**, and apply
+//!   the groups on the worker threads. Mutations to the same id land in
+//!   the same group and apply in input order, so batch semantics match the
+//!   equivalent sequence of single calls.
+//! - [`query_batch`](ShardedIndex::query_batch) parallelizes *across
+//!   queries* (each worker scans shards sequentially with a pooled
+//!   scratch), which keeps every per-query computation identical to the
+//!   single-query path — results are byte-identical to calling
+//!   [`top_k`](ShardedIndex::top_k) per query, in order.
 
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 
 use super::{Neighbor, QueryParams, QueryScratch, SparseAnn};
 use crate::features::PointId;
 use crate::sparse::SparseVec;
 use crate::util::hash::mix64;
+use crate::util::threadpool::parallel_map;
 
-/// Sharded dynamic sparse ANN index.
+/// Free-list of [`QueryScratch`] buffers shared by query workers. `take`
+/// falls back to a fresh scratch when the pool is empty, so it never
+/// blocks; the pool size converges to the peak worker concurrency.
+struct ScratchPool {
+    pool: Mutex<Vec<QueryScratch>>,
+}
+
+impl ScratchPool {
+    fn new() -> ScratchPool {
+        ScratchPool { pool: Mutex::new(Vec::new()) }
+    }
+
+    fn take(&self) -> QueryScratch {
+        self.pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, scratch: QueryScratch) {
+        self.pool.lock().unwrap().push(scratch);
+    }
+}
+
+/// Sharded dynamic sparse ANN index with a parallel serving path.
 pub struct ShardedIndex {
     shards: Vec<RwLock<SparseAnn>>,
+    scratch: ScratchPool,
+    query_threads: usize,
 }
 
 impl ShardedIndex {
-    /// `n_shards` must be ≥ 1; 1 shard reproduces the paper's sequential
-    /// setting exactly.
+    /// `n_shards` must be ≥ 1. Queries scan shards on the calling thread
+    /// (the paper's sequential setting); use [`with_threads`] for the
+    /// parallel serving path.
+    ///
+    /// [`with_threads`]: ShardedIndex::with_threads
     pub fn new(n_shards: usize) -> ShardedIndex {
+        Self::with_threads(n_shards, 1)
+    }
+
+    /// `n_shards` shards served by up to `query_threads` worker threads
+    /// (both clamped to ≥ 1). Thread count affects only latency, never
+    /// results.
+    pub fn with_threads(n_shards: usize, query_threads: usize) -> ShardedIndex {
         assert!(n_shards >= 1);
         ShardedIndex {
             shards: (0..n_shards).map(|_| RwLock::new(SparseAnn::new())).collect(),
+            scratch: ScratchPool::new(),
+            query_threads: query_threads.max(1),
         }
     }
 
@@ -33,9 +117,28 @@ impl ShardedIndex {
         self.shards.len()
     }
 
+    /// Worker threads used by the query fan-out and batch APIs.
+    pub fn query_threads(&self) -> usize {
+        self.query_threads
+    }
+
     #[inline]
     fn shard_of(&self, id: PointId) -> usize {
         (mix64(id) % self.shards.len() as u64) as usize
+    }
+
+    /// Per-shard query params: a nonzero global posting budget is divided
+    /// across shards (ceil) so total scanning stays ≈ the requested budget
+    /// regardless of shard count.
+    fn shard_params(&self, params: QueryParams) -> QueryParams {
+        if params.max_postings == 0 || self.shards.len() == 1 {
+            params
+        } else {
+            QueryParams {
+                max_postings: params.max_postings.div_ceil(self.shards.len()),
+                ..params
+            }
+        }
     }
 
     /// Upsert a point; returns true if it existed.
@@ -60,27 +163,129 @@ impl ShardedIndex {
         self.len() == 0
     }
 
-    /// Top-k across all shards (per-shard top-k then merge; exact because
-    /// per-shard retrieval is exact).
-    pub fn top_k(&self, query: &SparseVec, k: usize, params: QueryParams) -> Vec<Neighbor> {
-        let mut all = Vec::with_capacity(k * self.shards.len().min(4));
-        let mut scratch = QueryScratch::default();
-        for shard in &self.shards {
-            let res = shard.read().unwrap().top_k(query, k, params, &mut scratch);
-            all.extend(res);
+    /// Upsert a batch of points. Items are grouped by destination shard so
+    /// each shard's write lock is taken once; groups apply in parallel on
+    /// the worker threads. Returns, per input position, whether the point
+    /// already existed. Duplicate ids within one batch apply in input
+    /// order (they share a shard group), matching sequential semantics.
+    pub fn upsert_batch(&self, items: Vec<(PointId, SparseVec)>) -> Vec<bool> {
+        // One batch entry routed to a shard: (input position, id, vector).
+        type Group = Vec<(usize, PointId, SparseVec)>;
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
         }
-        all.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        let n_shards = self.shards.len();
+        let mut grouped: Vec<Group> = (0..n_shards).map(|_| Vec::new()).collect();
+        for (pos, (id, vec)) in items.into_iter().enumerate() {
+            grouped[self.shard_of(id)].push((pos, id, vec));
+        }
+        // Mutex-wrapped so each worker can move its group out by value.
+        let grouped: Vec<Mutex<Group>> = grouped.into_iter().map(Mutex::new).collect();
+        let per_shard: Vec<Vec<(usize, bool)>> =
+            parallel_map(n_shards, self.query_threads, |s| {
+                let group = std::mem::take(&mut *grouped[s].lock().unwrap());
+                if group.is_empty() {
+                    return Vec::new();
+                }
+                let mut shard = self.shards[s].write().unwrap();
+                group
+                    .into_iter()
+                    .map(|(pos, id, vec)| (pos, shard.upsert(id, vec)))
+                    .collect()
+            });
+        let mut existed = vec![false; n];
+        for (pos, e) in per_shard.into_iter().flatten() {
+            existed[pos] = e;
+        }
+        existed
+    }
+
+    /// Remove a batch of points; one write-lock acquisition per shard, as
+    /// in [`upsert_batch`](ShardedIndex::upsert_batch). Returns, per input
+    /// position, whether the point was present.
+    pub fn remove_batch(&self, ids: &[PointId]) -> Vec<bool> {
+        let n = ids.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let n_shards = self.shards.len();
+        let mut grouped: Vec<Vec<(usize, PointId)>> = (0..n_shards).map(|_| Vec::new()).collect();
+        for (pos, &id) in ids.iter().enumerate() {
+            grouped[self.shard_of(id)].push((pos, id));
+        }
+        let per_shard: Vec<Vec<(usize, bool)>> =
+            parallel_map(n_shards, self.query_threads, |s| {
+                let group = &grouped[s];
+                if group.is_empty() {
+                    return Vec::new();
+                }
+                let mut shard = self.shards[s].write().unwrap();
+                group.iter().map(|&(pos, id)| (pos, shard.remove(id))).collect()
+            });
+        let mut existed = vec![false; n];
+        for (pos, e) in per_shard.into_iter().flatten() {
+            existed[pos] = e;
+        }
+        existed
+    }
+
+    /// Top-k across all shards: the per-shard top-k runs on the worker
+    /// threads (exact because per-shard retrieval is exact), then results
+    /// merge with the deterministic (dot desc, id asc) order.
+    pub fn top_k(&self, query: &SparseVec, k: usize, params: QueryParams) -> Vec<Neighbor> {
+        let sp = self.shard_params(params);
+        let per_shard = parallel_map(self.shards.len(), self.query_threads, |s| {
+            let mut scratch = self.scratch.take();
+            let res = self.shards[s].read().unwrap().top_k(query, k, sp, &mut scratch);
+            self.scratch.put(scratch);
+            res
+        });
+        let mut all = Self::merge(per_shard);
         all.truncate(k);
         all
     }
 
-    /// Threshold query across all shards.
+    /// Threshold query across all shards (parallel fan-out + merge, as in
+    /// [`top_k`](ShardedIndex::top_k)).
     pub fn threshold(&self, query: &SparseVec, tau: f32, params: QueryParams) -> Vec<Neighbor> {
-        let mut all = Vec::new();
-        let mut scratch = QueryScratch::default();
-        for shard in &self.shards {
-            all.extend(shard.read().unwrap().threshold(query, tau, params, &mut scratch));
-        }
+        let sp = self.shard_params(params);
+        let per_shard = parallel_map(self.shards.len(), self.query_threads, |s| {
+            let mut scratch = self.scratch.take();
+            let res = self.shards[s].read().unwrap().threshold(query, tau, sp, &mut scratch);
+            self.scratch.put(scratch);
+            res
+        });
+        Self::merge(per_shard)
+    }
+
+    /// Top-k for a batch of `(query, params)` pairs, parallelized across
+    /// queries: each worker scans shards sequentially with a pooled
+    /// scratch, so entry `i` is byte-identical to
+    /// `self.top_k(&queries[i].0, k, queries[i].1)`.
+    pub fn query_batch(
+        &self,
+        queries: &[(SparseVec, QueryParams)],
+        k: usize,
+    ) -> Vec<Vec<Neighbor>> {
+        parallel_map(queries.len(), self.query_threads, |i| {
+            let (query, params) = &queries[i];
+            let sp = self.shard_params(*params);
+            let mut scratch = self.scratch.take();
+            let mut per_shard = Vec::with_capacity(self.shards.len());
+            for shard in &self.shards {
+                per_shard.push(shard.read().unwrap().top_k(query, k, sp, &mut scratch));
+            }
+            self.scratch.put(scratch);
+            let mut all = Self::merge(per_shard);
+            all.truncate(k);
+            all
+        })
+    }
+
+    /// Merge per-shard results into the global (dot desc, id asc) order.
+    fn merge(per_shard: Vec<Vec<Neighbor>>) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = per_shard.into_iter().flatten().collect();
         all.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
         all
     }
@@ -119,9 +324,15 @@ impl ShardedIndex {
 mod tests {
     use super::*;
     use crate::testing::proptest;
+    use crate::util::rng::Rng;
 
     fn sv(pairs: &[(u64, f32)]) -> SparseVec {
         SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    fn random_vec(rng: &mut Rng) -> SparseVec {
+        let n = 1 + rng.below_usize(5);
+        SparseVec::from_pairs((0..n).map(|_| (rng.below(15), 0.1 + rng.f32())).collect())
     }
 
     #[test]
@@ -142,17 +353,16 @@ mod tests {
 
     #[test]
     fn single_shard_equivalence() {
-        // Sharded results must equal a 1-shard index for any op sequence.
+        // Sharded results must equal a 1-shard index for any op sequence —
+        // on any worker-thread count, including with a non-binding posting
+        // budget (a binding budget is approximation, exercised separately).
         proptest(|rng| {
-            let multi = ShardedIndex::new(1 + rng.below_usize(5));
+            let multi = ShardedIndex::with_threads(1 + rng.below_usize(5), 1 + rng.below_usize(4));
             let single = ShardedIndex::new(1);
             for _ in 0..60 {
                 let id = rng.below(30);
                 if rng.chance(0.7) {
-                    let n = 1 + rng.below_usize(5);
-                    let v = SparseVec::from_pairs(
-                        (0..n).map(|_| (rng.below(15), 0.1 + rng.f32())).collect(),
-                    );
+                    let v = random_vec(rng);
                     multi.upsert(id, v.clone());
                     single.upsert(id, v);
                 } else {
@@ -165,15 +375,23 @@ mod tests {
                 (rng.below(15), 1.0),
                 (rng.below(15), 0.5),
             ]);
-            let a = multi.top_k(&q, 7, QueryParams::default());
-            let b = single.top_k(&q, 7, QueryParams::default());
+            // A budget of live_postings × n_shards cannot bind on any shard
+            // after the ceil split, so results must stay exact.
+            let budget = if rng.chance(0.5) {
+                0
+            } else {
+                (single.stats().live_postings.max(1)) * multi.n_shards()
+            };
+            let params = QueryParams { exclude: None, max_postings: budget };
+            let a = multi.top_k(&q, 7, params);
+            let b = single.top_k(&q, 7, params);
             assert_eq!(a.len(), b.len());
             for (x, y) in a.iter().zip(&b) {
                 assert_eq!(x.id, y.id);
                 assert!((x.dot - y.dot).abs() < 1e-5);
             }
-            let at = multi.threshold(&q, -0.2, QueryParams::default());
-            let bt = single.threshold(&q, -0.2, QueryParams::default());
+            let at = multi.threshold(&q, -0.2, params);
+            let bt = single.threshold(&q, -0.2, params);
             assert_eq!(
                 at.iter().map(|n| n.id).collect::<Vec<_>>(),
                 bt.iter().map(|n| n.id).collect::<Vec<_>>()
@@ -181,10 +399,126 @@ mod tests {
         });
     }
 
+    /// The posting budget is global: splitting it across shards keeps the
+    /// result volume ≈ budget instead of scaling with the shard count.
+    #[test]
+    fn max_postings_budget_splits_across_shards() {
+        let multi = ShardedIndex::with_threads(4, 4);
+        let single = ShardedIndex::new(1);
+        for i in 0..100u64 {
+            let v = sv(&[(7, 1.0)]);
+            multi.upsert(i, v.clone());
+            single.upsert(i, v);
+        }
+        let params = QueryParams { exclude: None, max_postings: 20 };
+        let q = sv(&[(7, 1.0)]);
+        let rs = single.top_k(&q, 100, params);
+        assert_eq!(rs.len(), 20, "1-shard budget baseline");
+        let rm = multi.top_k(&q, 100, params);
+        // Per-shard budget is ceil(20/4) = 5 ⇒ at most 20 results in total
+        // (the old per-shard semantics returned 4 × 20 = 80).
+        assert!(
+            rm.len() <= 20,
+            "budget scaled with shard count: {} results",
+            rm.len()
+        );
+        assert!(rm.len() >= 5, "budget collapsed: {} results", rm.len());
+        let rt = multi.threshold(&q, 10.0, params);
+        assert!(rt.len() <= 20, "threshold budget scaled: {}", rt.len());
+    }
+
+    /// Parallel `query_batch` must be byte-identical to the sequential
+    /// single-query path, for any shard count, thread count, exclusion and
+    /// posting budget.
+    #[test]
+    fn prop_query_batch_equals_sequential() {
+        proptest(|rng| {
+            let ix = ShardedIndex::with_threads(1 + rng.below_usize(5), 1 + rng.below_usize(4));
+            for _ in 0..50 {
+                let id = rng.below(30);
+                if rng.chance(0.75) {
+                    ix.upsert(id, random_vec(rng));
+                } else {
+                    ix.remove(id);
+                }
+            }
+            let k = 1 + rng.below_usize(8);
+            let queries: Vec<(SparseVec, QueryParams)> = (0..1 + rng.below_usize(8))
+                .map(|_| {
+                    let params = QueryParams {
+                        exclude: if rng.chance(0.3) { Some(rng.below(30)) } else { None },
+                        max_postings: if rng.chance(0.3) { 1 + rng.below_usize(40) } else { 0 },
+                    };
+                    (random_vec(rng), params)
+                })
+                .collect();
+            let batch = ix.query_batch(&queries, k);
+            assert_eq!(batch.len(), queries.len());
+            for (i, (q, params)) in queries.iter().enumerate() {
+                let single = ix.top_k(q, k, *params);
+                assert_eq!(batch[i].len(), single.len(), "query {i}");
+                for (x, y) in batch[i].iter().zip(&single) {
+                    assert_eq!(x.id, y.id, "query {i}");
+                    assert_eq!(
+                        x.dot.to_bits(),
+                        y.dot.to_bits(),
+                        "query {i}: batch dot {} != single dot {}",
+                        x.dot,
+                        y.dot
+                    );
+                }
+            }
+        });
+    }
+
+    /// Batch mutations must be equivalent to the same mutations applied
+    /// one at a time — including duplicate ids within a batch, which must
+    /// apply in input order.
+    #[test]
+    fn prop_batch_mutations_equal_sequential() {
+        proptest(|rng| {
+            let batched = ShardedIndex::with_threads(1 + rng.below_usize(4), 4);
+            let sequential = ShardedIndex::new(1 + rng.below_usize(4));
+            for _round in 0..3 {
+                let upserts: Vec<(u64, SparseVec)> = (0..5 + rng.below_usize(20))
+                    .map(|_| (rng.below(20), random_vec(rng)))
+                    .collect();
+                let want: Vec<bool> = upserts
+                    .iter()
+                    .map(|(id, v)| sequential.upsert(*id, v.clone()))
+                    .collect();
+                let got = batched.upsert_batch(upserts);
+                assert_eq!(got, want, "upsert existed-flags diverged");
+
+                let removals: Vec<u64> = (0..rng.below_usize(10)).map(|_| rng.below(20)).collect();
+                let want: Vec<bool> = removals.iter().map(|&id| sequential.remove(id)).collect();
+                let got = batched.remove_batch(&removals);
+                assert_eq!(got, want, "remove existed-flags diverged");
+            }
+            assert_eq!(batched.len(), sequential.len());
+            let q = random_vec(rng);
+            let a = batched.top_k(&q, 10, QueryParams::default());
+            let b = sequential.top_k(&q, 10, QueryParams::default());
+            assert_eq!(
+                a.iter().map(|n| n.id).collect::<Vec<_>>(),
+                b.iter().map(|n| n.id).collect::<Vec<_>>()
+            );
+        });
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let ix = ShardedIndex::with_threads(3, 2);
+        assert!(ix.upsert_batch(Vec::new()).is_empty());
+        assert!(ix.remove_batch(&[]).is_empty());
+        assert!(ix.query_batch(&[], 5).is_empty());
+        assert_eq!(ix.len(), 0);
+    }
+
     #[test]
     fn concurrent_mutations_and_queries() {
         use std::sync::Arc;
-        let ix = Arc::new(ShardedIndex::new(4));
+        let ix = Arc::new(ShardedIndex::with_threads(4, 2));
         let mut handles = Vec::new();
         for t in 0..4u64 {
             let ix = Arc::clone(&ix);
@@ -207,5 +541,52 @@ mod tests {
         // 500 per thread, every 3rd removed → ceil(2/3 * 500)*4 total-ish.
         let expect: usize = 4 * (500 - 167);
         assert_eq!(ix.len(), expect);
+    }
+
+    /// Stress: batch mutations racing batch queries and single-op threads.
+    /// Each thread owns a disjoint id range, so the final count is exact.
+    #[test]
+    fn concurrent_batch_mutations_and_queries() {
+        use std::sync::Arc;
+        let ix = Arc::new(ShardedIndex::with_threads(4, 2));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ix = Arc::clone(&ix);
+            handles.push(std::thread::spawn(move || {
+                for chunk in 0..10u64 {
+                    let base = t * 10_000 + chunk * 50;
+                    let batch: Vec<(u64, SparseVec)> = (0..50)
+                        .map(|i| (base + i, sv(&[((base + i) % 50, 1.0)])))
+                        .collect();
+                    let existed = ix.upsert_batch(batch);
+                    assert!(existed.iter().all(|&e| !e), "fresh ids reported existing");
+                    // Remove every other id of the chunk via the batch path.
+                    let removals: Vec<u64> =
+                        (0..50).filter(|i| i % 2 == 0).map(|i| base + i).collect();
+                    let removed = ix.remove_batch(&removals);
+                    assert!(removed.iter().all(|&e| e), "own ids must be present");
+                    // Query batch racing other threads' mutations: results
+                    // must stay well-formed (sorted, positive dots).
+                    let queries: Vec<(SparseVec, QueryParams)> = (0..4)
+                        .map(|i| (sv(&[(i % 50, 1.0)]), QueryParams::default()))
+                        .collect();
+                    for res in ix.query_batch(&queries, 8) {
+                        assert!(res.len() <= 8);
+                        for w in res.windows(2) {
+                            assert!(
+                                w[0].dot > w[1].dot || (w[0].dot == w[1].dot && w[0].id < w[1].id),
+                                "unordered merge: {w:?}"
+                            );
+                        }
+                        assert!(res.iter().all(|n| n.dot > 0.0));
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Per thread: 10 chunks × 50 inserts, 25 of each chunk removed.
+        assert_eq!(ix.len(), 4 * 10 * 25);
     }
 }

@@ -10,7 +10,9 @@
 //! gus stats   --addr 127.0.0.1:7717
 //! gus gen     --dataset products_like --n 5000 --out data.jsonl
 //! gus gen-trace --dataset arxiv_like --n 5000 --ops 2000 --out trace.jsonl
-//! gus replay  --trace trace.jsonl [--workers 8]   # replay a workload
+//! gus replay  --trace trace.jsonl [--workers 8] [--mode sync|pipeline|batch]
+//!             # replay a workload; `batch` drives the insert_batch /
+//!             # query_batch RPCs in --batch-size chunks
 //! gus preprocess --dataset arxiv_like --n 20000   # table summary (§4.3)
 //! ```
 //!
@@ -226,8 +228,75 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 &trace.initial,
                 dynamic_gus::util::threadpool::default_parallelism(),
             )?);
+            let mode = args.get_str("mode", if workers <= 1 { "sync" } else { "pipeline" });
+            if !["sync", "pipeline", "batch"].contains(&mode.as_str()) {
+                anyhow::bail!("unknown --mode '{mode}' (sync|pipeline|batch)");
+            }
             let t0 = std::time::Instant::now();
-            if workers <= 1 {
+            if mode == "batch" {
+                // Drive the batch RPCs: consecutive ops of one kind are
+                // grouped into --batch-size chunks. Buffers are flushed
+                // before any op of a different kind, so every op observes
+                // all earlier mutations (same visibility as sync replay).
+                let bs = gus.config().batch_size;
+                let mut inserts: Vec<Point> = Vec::new();
+                let mut deletes: Vec<u64> = Vec::new();
+                let mut queries: Vec<Point> = Vec::new();
+                let mut query_k = 0usize;
+                for op in &trace.ops {
+                    match op {
+                        Op::Insert(p) | Op::Update(p) => {
+                            if !queries.is_empty() {
+                                gus.query_batch(&std::mem::take(&mut queries), query_k)?;
+                            }
+                            if !deletes.is_empty() {
+                                gus.delete_batch(&std::mem::take(&mut deletes))?;
+                            }
+                            inserts.push(p.clone());
+                            if inserts.len() >= bs {
+                                gus.insert_batch(std::mem::take(&mut inserts))?;
+                            }
+                        }
+                        Op::Delete(id) => {
+                            if !queries.is_empty() {
+                                gus.query_batch(&std::mem::take(&mut queries), query_k)?;
+                            }
+                            if !inserts.is_empty() {
+                                gus.insert_batch(std::mem::take(&mut inserts))?;
+                            }
+                            deletes.push(*id);
+                            if deletes.len() >= bs {
+                                gus.delete_batch(&std::mem::take(&mut deletes))?;
+                            }
+                        }
+                        Op::Query { point, k } => {
+                            if !inserts.is_empty() {
+                                gus.insert_batch(std::mem::take(&mut inserts))?;
+                            }
+                            if !deletes.is_empty() {
+                                gus.delete_batch(&std::mem::take(&mut deletes))?;
+                            }
+                            if !queries.is_empty() && *k != query_k {
+                                gus.query_batch(&std::mem::take(&mut queries), query_k)?;
+                            }
+                            query_k = *k;
+                            queries.push(point.clone());
+                            if queries.len() >= bs {
+                                gus.query_batch(&std::mem::take(&mut queries), query_k)?;
+                            }
+                        }
+                    }
+                }
+                if !inserts.is_empty() {
+                    gus.insert_batch(inserts)?;
+                }
+                if !deletes.is_empty() {
+                    gus.delete_batch(&deletes)?;
+                }
+                if !queries.is_empty() {
+                    gus.query_batch(&queries, query_k)?;
+                }
+            } else if mode == "sync" || workers <= 1 {
                 for op in &trace.ops {
                     match op {
                         Op::Insert(p) | Op::Update(p) => {
@@ -260,7 +329,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
             let wall = t0.elapsed();
             println!(
-                "replayed {} ops in {:.2}s ({:.0} ops/s, workers={workers})",
+                "replayed {} ops in {:.2}s ({:.0} ops/s, mode={mode}, workers={workers})",
                 trace.ops.len(),
                 wall.as_secs_f64(),
                 trace.ops.len() as f64 / wall.as_secs_f64()

@@ -142,7 +142,13 @@ impl XlaScorer {
         &self.batch_sizes
     }
 
-    fn call(&self, qd: Vec<f32>, cd_flat: Vec<f32>, extras_flat: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+    fn call(
+        &self,
+        qd: Vec<f32>,
+        cd_flat: Vec<f32>,
+        extras_flat: Vec<f32>,
+        n: usize,
+    ) -> Result<Vec<f32>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         {
             let tx = self.tx.lock().unwrap();
@@ -248,7 +254,8 @@ fn actor_main(
         match req {
             Req::Shutdown => break,
             Req::Score { qd, cd_flat, extras_flat, n, resp } => {
-                let r = score_padded(&engine, &variants, &wbufs, &qd, &cd_flat, &extras_flat, n, d, ke);
+                let r =
+                    score_padded(&engine, &variants, &wbufs, &qd, &cd_flat, &extras_flat, n, d, ke);
                 let _ = resp.send(r);
             }
         }

@@ -13,9 +13,20 @@
 //! → {"op":"query","k":10,"point":{...}}        # new or known point
 //! → {"op":"query_id","k":10,"id":1}            # known point by id
 //! ← {"ok":true,"neighbors":[{"id":4,"score":0.93,"dot":3.0},...]}
+//! → {"op":"insert_batch","points":[{...},{...}]}
+//! ← {"ok":true,"existed":[false,true]}
+//! → {"op":"delete_batch","ids":[1,2,3]}
+//! ← {"ok":true,"existed":[true,true,false]}
+//! → {"op":"query_batch","k":10,"points":[{...},{...}]}
+//! ← {"ok":true,"results":[[{"id":4,...},...],[...]]}
 //! → {"op":"stats"}
 //! ← {"ok":true,"stats":{...}}
 //! ```
+//!
+//! The batch ops map to [`DynamicGus::insert_batch`] /
+//! [`DynamicGus::query_batch`], which parallelize across items on the
+//! serving workers — one RPC amortizes framing, locking and scheduling
+//! over the whole batch.
 //!
 //! Connections are handled by a fixed worker pool with a bounded backlog —
 //! the backpressure strategy is "refuse new connections when saturated"
@@ -182,19 +193,40 @@ fn dispatch_inner(gus: &DynamicGus, line: &str) -> Result<Json> {
                     .ok_or_else(|| anyhow::anyhow!("missing 'id'"))?;
                 gus.query_by_id(id, k)?
             };
-            let arr = neighbors
-                .iter()
-                .map(|n| {
-                    Json::obj(vec![
-                        ("id", Json::u64(n.id)),
-                        ("score", Json::num(n.score as f64)),
-                        ("dot", Json::num(n.dot as f64)),
-                    ])
-                })
-                .collect();
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("neighbors", Json::Arr(arr)),
+                ("neighbors", neighbors_json(&neighbors)),
+            ]))
+        }
+        "insert_batch" => {
+            let points = parse_points(&req)?;
+            let existed = gus.insert_batch(points)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("existed", Json::Arr(existed.into_iter().map(Json::Bool).collect())),
+            ]))
+        }
+        "delete_batch" => {
+            let ids = req
+                .get("ids")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("missing/bad 'ids'"))?
+                .iter()
+                .map(|j| j.as_u64().ok_or_else(|| anyhow::anyhow!("bad id in 'ids'")))
+                .collect::<Result<Vec<u64>>>()?;
+            let existed = gus.delete_batch(&ids)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("existed", Json::Arr(existed.into_iter().map(Json::Bool).collect())),
+            ]))
+        }
+        "query_batch" => {
+            let k = req.get("k").as_usize().unwrap_or(gus.config().scann_nn);
+            let points = parse_points(&req)?;
+            let results = gus.query_batch(&points, k)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("results", Json::Arr(results.iter().map(|r| neighbors_json(r)).collect())),
             ]))
         }
         "stats" => Ok(Json::obj(vec![
@@ -203,6 +235,32 @@ fn dispatch_inner(gus: &DynamicGus, line: &str) -> Result<Json> {
         ])),
         other => anyhow::bail!("unknown op '{other}'"),
     }
+}
+
+/// Decode the `points` array of a batch request.
+fn parse_points(req: &Json) -> Result<Vec<Point>> {
+    req.get("points")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("missing/bad 'points'"))?
+        .iter()
+        .map(|j| Point::from_json(j).ok_or_else(|| anyhow::anyhow!("bad point in 'points'")))
+        .collect()
+}
+
+/// Encode a scored-neighbor list.
+fn neighbors_json(neighbors: &[crate::coordinator::ScoredNeighbor]) -> Json {
+    Json::Arr(
+        neighbors
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("id", Json::u64(n.id)),
+                    ("score", Json::num(n.score as f64)),
+                    ("dot", Json::num(n.dot as f64)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -238,6 +296,77 @@ mod tests {
         // Stats.
         let resp = dispatch(&gus, r#"{"op":"stats"}"#);
         assert_eq!(resp.get("stats").get("points").as_usize(), Some(150));
+    }
+
+    #[test]
+    fn dispatch_batch_ops() {
+        let (gus, ds) = boot();
+        // Insert a batch of fresh points.
+        let mut pts = Vec::new();
+        for (i, p) in ds.points.iter().take(5).enumerate() {
+            let mut p = p.clone();
+            p.id = 60_000 + i as u64;
+            pts.push(p.to_json());
+        }
+        let req = Json::obj(vec![
+            ("op", Json::str("insert_batch")),
+            ("points", Json::Arr(pts)),
+        ]);
+        let resp = dispatch(&gus, &req.dump());
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        let existed = resp.get("existed").as_arr().unwrap();
+        assert_eq!(existed.len(), 5);
+        assert!(existed.iter().all(|j| j.as_bool() == Some(false)));
+        assert_eq!(gus.len(), 155);
+
+        // Batch query: one result list per input point, matching singles.
+        let req = Json::obj(vec![
+            ("op", Json::str("query_batch")),
+            ("k", Json::num(5.0)),
+            (
+                "points",
+                Json::Arr(ds.points.iter().take(3).map(|p| p.to_json()).collect()),
+            ),
+        ]);
+        let resp = dispatch(&gus, &req.dump());
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        let results = resp.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        for (i, r) in results.iter().enumerate() {
+            let single = gus.query(&ds.points[i], 5).unwrap();
+            let got: Vec<u64> =
+                r.as_arr().unwrap().iter().map(|n| n.get("id").as_u64().unwrap()).collect();
+            let want: Vec<u64> = single.iter().map(|n| n.id).collect();
+            assert_eq!(got, want, "batch result {i} diverged");
+        }
+
+        // Batch delete removes the freshly inserted points.
+        let resp = dispatch(
+            &gus,
+            r#"{"op":"delete_batch","ids":[60000,60001,60002,60003,60004,61111]}"#,
+        );
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        let existed: Vec<bool> = resp
+            .get("existed")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_bool().unwrap())
+            .collect();
+        assert_eq!(existed, vec![true, true, true, true, true, false]);
+        assert_eq!(gus.len(), 150);
+
+        // Malformed batches are structured errors.
+        for bad in [
+            r#"{"op":"insert_batch"}"#,
+            r#"{"op":"insert_batch","points":[{"id":1}]}"#,
+            r#"{"op":"query_batch","points":42}"#,
+            r#"{"op":"delete_batch"}"#,
+            r#"{"op":"delete_batch","ids":[true]}"#,
+        ] {
+            let resp = dispatch(&gus, bad);
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+        }
     }
 
     #[test]

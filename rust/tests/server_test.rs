@@ -58,6 +58,58 @@ fn full_rpc_round_trip() {
 }
 
 #[test]
+fn batch_rpcs_round_trip() {
+    let (handle, gus, ds) = boot_server(200);
+    let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();
+
+    // Batch insert of fresh points over the wire.
+    let fresh: Vec<_> = ds
+        .points
+        .iter()
+        .take(20)
+        .enumerate()
+        .map(|(i, p)| {
+            let mut p = p.clone();
+            p.id = 80_000 + i as u64;
+            p
+        })
+        .collect();
+    let existed = client.insert_batch(&fresh).unwrap();
+    assert_eq!(existed.len(), 20);
+    assert!(existed.iter().all(|&e| !e));
+    assert_eq!(gus.len(), 220);
+    // Re-sending the batch reports every point as an update.
+    let existed = client.insert_batch(&fresh).unwrap();
+    assert!(existed.iter().all(|&e| e));
+
+    // Batch query matches per-point queries.
+    let queries: Vec<_> = ds.points.iter().take(6).cloned().collect();
+    let batch = client.query_batch(&queries, 5).unwrap();
+    assert_eq!(batch.len(), 6);
+    for (i, p) in queries.iter().enumerate() {
+        let single = client.query(p, 5).unwrap();
+        assert_eq!(batch[i].len(), single.len(), "query {i}");
+        for (x, y) in batch[i].iter().zip(&single) {
+            assert_eq!(x.id, y.id, "query {i}");
+        }
+    }
+
+    // A batch with a malformed point is rejected whole.
+    let mut bad = fresh.clone();
+    bad.push(dynamic_gus::features::Point::new(90_000, vec![]));
+    assert!(client.insert_batch(&bad).is_err());
+    assert!(!client.delete(90_000).unwrap());
+
+    // Batch delete over the wire removes the fresh points again.
+    let ids: Vec<u64> = fresh.iter().map(|p| p.id).collect();
+    let removed = client.delete_batch(&ids).unwrap();
+    assert!(removed.iter().all(|&e| e));
+    assert!(!client.delete_batch(&ids).unwrap().iter().any(|&e| e));
+    assert_eq!(gus.len(), 200);
+    handle.shutdown();
+}
+
+#[test]
 fn unknown_id_is_rpc_error_not_crash() {
     let (handle, _gus, _ds) = boot_server(50);
     let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();

@@ -1,0 +1,107 @@
+//! Restart cost: recovery latency vs WAL length.
+//!
+//! The durability design's claim is that restart cost is O(checkpoint
+//! delta), not O(corpus): `recover` restores the latest checkpoint and
+//! replays only the WAL tail. This bench prepares one checkpoint of a
+//! fixed corpus plus WAL tails of increasing length and measures
+//! end-to-end `wal::recover` latency for each, alongside the WAL append
+//! cost per fsync policy (the price paid on the mutation path).
+//!
+//! Expected shape: `recover/delta=0` ≈ the pure snapshot restore;
+//! each added WAL record costs roughly one embed+upsert on top.
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::config::{FsyncPolicy, GusConfig, ScorerKind};
+use dynamic_gus::coordinator::{snapshot, wal, DynamicGus};
+use dynamic_gus::data::synthetic::SyntheticConfig;
+
+fn bench_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("gus-recovery-bench").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let corpus = 2_000usize;
+    let ds = SyntheticConfig::arxiv_like(corpus + 1_024, 0xeec0).generate();
+    let cfg = GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 10.0,
+        fsync: FsyncPolicy::Never,
+        ..GusConfig::default()
+    };
+
+    // One durable dir per WAL tail length: checkpoint of `corpus` points,
+    // then `delta` uncheckpointed mutations.
+    for delta in [0usize, 64, 256, 1024] {
+        let dir = bench_dir(&format!("delta-{delta}"));
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg.clone(), &ds.points[..corpus], 8)
+                .unwrap();
+        wal::init_fresh(&gus, &dir).unwrap();
+        for p in &ds.points[corpus..corpus + delta] {
+            gus.insert(p.clone()).unwrap();
+        }
+        drop(gus); // crash without checkpoint: the delta lives in the WAL
+        b.bench(&format!("recover/corpus={corpus}/delta={delta}"), || {
+            let rec = wal::recover(&dir, 8).unwrap();
+            assert_eq!(rec.replayed, delta);
+            rec.gus.len()
+        });
+    }
+
+    // Baseline: pure snapshot restore of the same corpus (what `recover`
+    // does before any replay).
+    {
+        let dir = bench_dir("snapshot-only");
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg.clone(), &ds.points[..corpus], 8)
+                .unwrap();
+        snapshot::save(&gus, &dir).unwrap();
+        drop(gus);
+        b.bench(&format!("restore/snapshot-only/corpus={corpus}"), || {
+            snapshot::restore(&dir, 8).unwrap().len()
+        });
+    }
+
+    // The other side of the ledger: what logging costs the mutation path
+    // at each fsync policy (insert latency with durability on vs off).
+    for (name, policy) in [
+        ("never", FsyncPolicy::Never),
+        ("every_n:32", FsyncPolicy::EveryN(32)),
+        ("always", FsyncPolicy::Always),
+    ] {
+        let dir = bench_dir(&format!("append-{name}"));
+        let gus = DynamicGus::bootstrap(
+            ds.schema.clone(),
+            GusConfig { fsync: policy, ..cfg.clone() },
+            &ds.points[..corpus],
+            8,
+        )
+        .unwrap();
+        wal::init_fresh(&gus, &dir).unwrap();
+        let holdout = &ds.points[corpus..];
+        let mut i = 0usize;
+        b.bench(&format!("insert/wal/fsync={name}"), || {
+            let p = holdout[i % holdout.len()].clone();
+            i += 1;
+            gus.insert(p).unwrap()
+        });
+    }
+    {
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg.clone(), &ds.points[..corpus], 8)
+                .unwrap();
+        let holdout = &ds.points[corpus..];
+        let mut i = 0usize;
+        b.bench("insert/no-wal", || {
+            let p = holdout[i % holdout.len()].clone();
+            i += 1;
+            gus.insert(p).unwrap()
+        });
+    }
+
+    b.dump_json("recovery");
+}

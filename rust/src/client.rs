@@ -145,6 +145,17 @@ impl GusClient {
         Ok(self.call(&req)?.get("stats").clone())
     }
 
+    /// Force an incremental checkpoint on a durable server (snapshot +
+    /// WAL truncation); returns the WAL sequence number it covers.
+    /// Errors if the server runs without `--wal-dir`.
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        let req = Json::obj(vec![("op", Json::str("checkpoint"))]);
+        self.call(&req)?
+            .get("seq")
+            .as_u64()
+            .ok_or_else(|| anyhow!("checkpoint response missing 'seq'"))
+    }
+
     fn parse_neighbors(resp: &Json) -> Result<Vec<ScoredNeighbor>> {
         Self::parse_neighbor_list(resp.get("neighbors"))
     }

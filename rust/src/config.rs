@@ -31,6 +31,58 @@ impl ScorerKind {
     }
 }
 
+/// Write-ahead-log fsync policy: when appended records are forced to
+/// stable storage (see [`crate::coordinator::wal`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fsync` after every appended record: no acknowledged mutation is
+    /// ever lost, even to power failure. Highest durability, lowest
+    /// mutation throughput.
+    Always,
+    /// `fsync` once every N appended records: bounds the power-loss
+    /// window to N mutations while amortizing the sync cost. A process
+    /// crash (`kill -9`) still loses nothing — the records are already
+    /// in the page cache.
+    EveryN(usize),
+    /// Never `fsync` from the hot path; the OS flushes on its own
+    /// schedule. Process crashes still lose nothing; power loss may.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse `always` | `every_n` | `every_n:N` | `never`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy, String> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            "every_n" => Ok(FsyncPolicy::EveryN(32)),
+            other => match other.strip_prefix("every_n:") {
+                Some(n) => {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| format!("bad fsync interval in '{other}'"))?;
+                    if n == 0 {
+                        return Err("fsync every_n interval must be >= 1".into());
+                    }
+                    Ok(FsyncPolicy::EveryN(n))
+                }
+                None => Err(format!(
+                    "unknown fsync policy '{other}' (always|every_n[:N]|never)"
+                )),
+            },
+        }
+    }
+
+    /// Inverse of [`FsyncPolicy::parse`].
+    pub fn to_str(self) -> String {
+        match self {
+            FsyncPolicy::Always => "always".into(),
+            FsyncPolicy::EveryN(n) => format!("every_n:{n}"),
+            FsyncPolicy::Never => "never".into(),
+        }
+    }
+}
+
 /// Dynamic GUS service configuration.
 #[derive(Debug, Clone)]
 pub struct GusConfig {
@@ -58,6 +110,20 @@ pub struct GusConfig {
     /// (currently `gus replay --mode batch`; the batch endpoints
     /// themselves accept any length). Must be ≥ 1.
     pub batch_size: usize,
+    /// Durability directory: when set, every accepted mutation is
+    /// appended to `<wal_dir>/wal.log` before it is applied, and
+    /// checkpoints (snapshot + WAL truncation) land in the same
+    /// directory. `None` (the default) disables durability — the
+    /// paper's in-memory setting.
+    pub wal_dir: Option<String>,
+    /// When the WAL forces appended records to stable storage.
+    pub fsync: FsyncPolicy,
+    /// Automatic checkpoint threshold: when this many mutations have
+    /// accumulated in the WAL since the last checkpoint, the background
+    /// checkpointer writes a new one — bounding both the log's size and
+    /// the restart replay cost. 0 disables automatic checkpoints (manual
+    /// `checkpoint` RPC / CLI only). Irrelevant while `wal_dir` is unset.
+    pub checkpoint_every: u64,
 }
 
 impl Default for GusConfig {
@@ -72,6 +138,9 @@ impl Default for GusConfig {
             max_postings: 0,
             query_threads: 0,
             batch_size: 128,
+            wal_dir: None,
+            fsync: FsyncPolicy::Always,
+            checkpoint_every: 10_000,
         }
     }
 }
@@ -90,6 +159,13 @@ impl GusConfig {
         if let Some(s) = args.opt_str("scorer") {
             self.scorer = ScorerKind::parse(&s)?;
         }
+        if let Some(dir) = args.opt_str("wal-dir") {
+            self.wal_dir = Some(dir);
+        }
+        if let Some(s) = args.opt_str("fsync") {
+            self.fsync = FsyncPolicy::parse(&s)?;
+        }
+        self.checkpoint_every = args.get_u64("checkpoint-every", self.checkpoint_every);
         self.validate()?;
         Ok(self)
     }
@@ -138,6 +214,15 @@ impl GusConfig {
             ("max_postings", Json::num(self.max_postings as f64)),
             ("query_threads", Json::num(self.query_threads as f64)),
             ("batch_size", Json::num(self.batch_size as f64)),
+            (
+                "wal_dir",
+                match &self.wal_dir {
+                    Some(d) => Json::str(d.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("fsync", Json::str(self.fsync.to_str())),
+            ("checkpoint_every", Json::u64(self.checkpoint_every)),
         ])
     }
 
@@ -156,6 +241,12 @@ impl GusConfig {
             max_postings: j.get("max_postings").as_usize().unwrap_or(d.max_postings),
             query_threads: j.get("query_threads").as_usize().unwrap_or(d.query_threads),
             batch_size: j.get("batch_size").as_usize().unwrap_or(d.batch_size),
+            wal_dir: j.get("wal_dir").as_str().map(|s| s.to_string()),
+            fsync: match j.get("fsync").as_str() {
+                Some(s) => FsyncPolicy::parse(s)?,
+                None => d.fsync,
+            },
+            checkpoint_every: j.get("checkpoint_every").as_u64().unwrap_or(d.checkpoint_every),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -222,6 +313,47 @@ mod tests {
         // 0 = auto resolves to at least one worker.
         assert!(GusConfig::default().resolved_query_threads() >= 1);
         let args = Args::parse_from(["--batch-size=0".to_string()]).unwrap();
+        assert!(GusConfig::default().apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_roundtrips() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("every_n").unwrap(), FsyncPolicy::EveryN(32));
+        assert_eq!(FsyncPolicy::parse("every_n:7").unwrap(), FsyncPolicy::EveryN(7));
+        for p in [FsyncPolicy::Always, FsyncPolicy::EveryN(5), FsyncPolicy::Never] {
+            assert_eq!(FsyncPolicy::parse(&p.to_str()).unwrap(), p);
+        }
+        assert!(FsyncPolicy::parse("every_n:0").is_err());
+        assert!(FsyncPolicy::parse("every_n:x").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn wal_knobs_cli_and_json() {
+        let args = Args::parse_from(
+            ["--wal-dir=/tmp/w", "--fsync=every_n:16", "--checkpoint-every=500"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.wal_dir.as_deref(), Some("/tmp/w"));
+        assert_eq!(cfg.fsync, FsyncPolicy::EveryN(16));
+        assert_eq!(cfg.checkpoint_every, 500);
+        // JSON round trip carries the durability knobs.
+        let back = GusConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.wal_dir.as_deref(), Some("/tmp/w"));
+        assert_eq!(back.fsync, FsyncPolicy::EveryN(16));
+        assert_eq!(back.checkpoint_every, 500);
+        // Defaults: durability off; when it is enabled, fsync always and
+        // auto-checkpoint every 10k mutations (a bounded WAL by default).
+        let d = GusConfig::default();
+        assert!(d.wal_dir.is_none());
+        assert_eq!(d.fsync, FsyncPolicy::Always);
+        assert_eq!(d.checkpoint_every, 10_000);
+        let args = Args::parse_from(["--fsync=bogus".to_string()]).unwrap();
         assert!(GusConfig::default().apply_args(&args).is_err());
     }
 

@@ -40,13 +40,23 @@
 //!   entry `i` equals `query(&points[i], k)` run against the same
 //!   snapshot. The batch wall time is recorded once in `query_latency`;
 //!   the `queries` counter advances by the batch length.
+//!
+//! # Durability
+//!
+//! With `wal_dir` configured, every accepted mutation is appended to a
+//! write-ahead log *before* it is applied ([`wal`]), and
+//! [`DynamicGus::checkpoint`] folds the log into an incremental snapshot
+//! ([`snapshot`]). [`wal::recover`] restores latest-checkpoint + WAL-tail
+//! after a crash; the [`wal::Checkpointer`] bounds the tail length in the
+//! background. See `docs/ARCHITECTURE.md` for the full picture.
 
 pub mod ingest;
 pub mod snapshot;
 pub mod staleness;
 pub mod store;
+pub mod wal;
 
-use std::sync::RwLock;
+use std::sync::{MutexGuard, OnceLock, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -92,6 +102,9 @@ pub struct DynamicGus {
     index: ShardedIndex,
     store: FeatureStore,
     scorer: Box<dyn PairScorer>,
+    /// Durability state; absent until [`DynamicGus::attach_wal`] (see
+    /// [`wal::init_fresh`] / [`wal::recover`]). Attached at most once.
+    wal: OnceLock<wal::WalHandle>,
     pub metrics: GusMetrics,
 }
 
@@ -128,6 +141,7 @@ impl DynamicGus {
             index: ShardedIndex::with_threads(config.n_shards, config.resolved_query_threads()),
             store: FeatureStore::new(config.n_shards.max(4)),
             scorer,
+            wal: OnceLock::new(),
             metrics: GusMetrics::default(),
         };
         for p in initial {
@@ -187,19 +201,160 @@ impl DynamicGus {
         self.store.get(id).is_some()
     }
 
+    // ---------- durability ----------
+
+    /// Attach write-ahead logging. At most once per service; normally
+    /// called through [`wal::init_fresh`] or [`wal::recover`], which also
+    /// manage the on-disk state.
+    pub fn attach_wal(&self, handle: wal::WalHandle) -> Result<()> {
+        self.wal
+            .set(handle)
+            .map_err(|_| anyhow!("WAL already attached"))
+    }
+
+    /// The attached durability state, if any.
+    pub fn wal(&self) -> Option<&wal::WalHandle> {
+        self.wal.get()
+    }
+
+    /// Mutations logged since the last checkpoint (0 when no WAL).
+    pub fn wal_pending(&self) -> u64 {
+        self.wal.get().map(|w| w.pending()).unwrap_or(0)
+    }
+
+    /// Sequence number of the most recently logged mutation (0 when no
+    /// WAL). Takes the WAL lock briefly.
+    pub fn wal_seq(&self) -> u64 {
+        self.wal.get().map(|w| w.seq()).unwrap_or(0)
+    }
+
+    /// Log one mutation record before applying it. Returns a guard that
+    /// the caller must hold until the mutation is **applied**: holding the
+    /// WAL lock across log + apply is what makes a checkpoint's
+    /// `(store, last_seq)` pair consistent (see [`wal`] module docs).
+    /// `None` (no guard, nothing logged) when durability is off.
+    fn wal_log(
+        &self,
+        payload: impl FnOnce() -> crate::util::json::Json,
+        n_mutations: u64,
+    ) -> Result<Option<MutexGuard<'_, wal::WalWriter>>> {
+        match self.wal.get() {
+            None => Ok(None),
+            Some(w) => {
+                let mut writer = w.writer.lock().unwrap();
+                writer.append(&payload())?;
+                w.add_pending(n_mutations);
+                Ok(Some(writer))
+            }
+        }
+    }
+
+    /// Incremental checkpoint: persist the corpus + tables (committed by
+    /// an atomic rename), then truncate the WAL. Blocks mutations for the
+    /// duration (they queue on the WAL lock); returns the sequence number
+    /// the checkpoint covers. Errors if no WAL is attached.
+    pub fn checkpoint(&self) -> Result<u64> {
+        let w = self
+            .wal
+            .get()
+            .ok_or_else(|| anyhow!("no WAL attached (serve with --wal-dir)"))?;
+        let mut writer = w.writer.lock().unwrap();
+        let seq = writer.seq();
+        snapshot::save_with_seq(self, w.dir(), seq)?;
+        writer.truncate()?;
+        w.reset_pending();
+        Ok(seq)
+    }
+
+    /// Apply one WAL record during recovery (no logging, no metrics —
+    /// replayed mutations were already counted by their first life).
+    /// Returns the number of mutations the record carried, weighted like
+    /// live logging (a batch record counts its items), so recovery can
+    /// seed the pending-checkpoint counter consistently. Callers
+    /// guarantee the WAL is not yet attached.
+    pub(crate) fn apply_logged(
+        &self,
+        payload: &crate::util::json::Json,
+        threads: usize,
+    ) -> Result<u64> {
+        match payload.get("op").as_str() {
+            Some("insert") => {
+                let p = Point::from_json(payload.get("point"))
+                    .ok_or_else(|| anyhow!("WAL insert record missing point"))?;
+                self.apply_insert(p)?;
+                Ok(1)
+            }
+            Some("delete") => {
+                let id = payload
+                    .get("id")
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("WAL delete record missing id"))?;
+                self.apply_delete(id);
+                Ok(1)
+            }
+            Some("insert_batch") => {
+                let points = payload
+                    .get("points")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("WAL insert_batch record missing points"))?;
+                for j in points {
+                    let p = Point::from_json(j)
+                        .ok_or_else(|| anyhow!("WAL insert_batch record: bad point"))?;
+                    self.apply_insert(p)?;
+                }
+                Ok(points.len() as u64)
+            }
+            Some("delete_batch") => {
+                let ids = payload
+                    .get("ids")
+                    .to_u64_vec()
+                    .ok_or_else(|| anyhow!("WAL delete_batch record missing ids"))?;
+                for &id in &ids {
+                    self.apply_delete(id);
+                }
+                Ok(ids.len() as u64)
+            }
+            Some("refresh_tables") => {
+                self.refresh_tables(threads)?;
+                Ok(1)
+            }
+            other => anyhow::bail!("unknown WAL op {other:?}"),
+        }
+    }
+
+    // ---------- mutation RPCs ----------
+
     fn apply_insert(&self, p: Point) -> Result<bool> {
         self.schema.validate(&p).map_err(|e| anyhow!("{e}"))?;
+        Ok(self.apply_insert_unchecked(p))
+    }
+
+    /// Embed + store + index a point the caller has already validated
+    /// (the request path validates before WAL logging, so re-validating
+    /// here would double the per-mutation schema work).
+    fn apply_insert_unchecked(&self, p: Point) -> bool {
         let embedding = { self.embedder.read().unwrap().embed(&p) };
         let id = p.id;
         self.store.put(p);
-        Ok(self.index.upsert(id, embedding))
+        self.index.upsert(id, embedding)
+    }
+
+    fn apply_delete(&self, id: PointId) -> bool {
+        let in_index = self.index.remove(id);
+        let in_store = self.store.remove(id).is_some();
+        debug_assert_eq!(in_index, in_store);
+        in_index
     }
 
     /// Mutation RPC: insert or update (§3.3.1). Returns `true` if the point
-    /// already existed (update).
+    /// already existed (update). With durability on, the mutation is
+    /// logged before it is applied: once this returns, a crash cannot
+    /// lose it.
     pub fn insert(&self, p: Point) -> Result<bool> {
         let t0 = Instant::now();
-        let existed = self.apply_insert(p)?;
+        self.schema.validate(&p).map_err(|e| anyhow!("{e}"))?;
+        let _wal = self.wal_log(|| wal::insert_payload(&p), 1)?;
+        let existed = self.apply_insert_unchecked(p);
         let dt = t0.elapsed();
         self.metrics.mutation_latency.record(dt);
         self.metrics.staleness.record_visible(dt);
@@ -213,10 +368,11 @@ impl DynamicGus {
     }
 
     /// Mutation RPC: delete (§3.3.2). Returns `true` if present.
+    /// Log-before-apply, like [`insert`](DynamicGus::insert).
     pub fn delete(&self, id: PointId) -> Result<bool> {
         let t0 = Instant::now();
-        let in_index = self.index.remove(id);
-        let in_store = self.store.remove(id).is_some();
+        let _wal = self.wal_log(|| wal::delete_payload(id), 1)?;
+        let in_index = self.apply_delete(id);
         let dt = t0.elapsed();
         self.metrics.mutation_latency.record(dt);
         self.metrics.staleness.record_visible(dt);
@@ -224,7 +380,6 @@ impl DynamicGus {
             .counters
             .deletes
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        debug_assert_eq!(in_index, in_store);
         Ok(in_index)
     }
 
@@ -341,6 +496,12 @@ impl DynamicGus {
             self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
         }
         let threads = self.index.query_threads();
+        // One WAL record for the whole (validated) batch — logged *before*
+        // embedding so the batch's position in the mutation order matches
+        // the tables it embeds under (a concurrent `refresh_tables` also
+        // serializes on the WAL lock). Embedding still parallelizes across
+        // items inside the lock.
+        let _wal = self.wal_log(|| wal::insert_batch_payload(&points), points.len() as u64)?;
         let items: Vec<(PointId, crate::sparse::SparseVec)> = {
             let guard = self.embedder.read().unwrap();
             let em = &*guard;
@@ -376,6 +537,7 @@ impl DynamicGus {
             return Ok(Vec::new());
         }
         let t0 = Instant::now();
+        let _wal = self.wal_log(|| wal::delete_batch_payload(ids), ids.len() as u64)?;
         // Index first, then store — the same order as the single delete
         // (a racing query never sees an indexed point without features).
         let existed = self.index.remove_batch(ids);
@@ -403,8 +565,12 @@ impl DynamicGus {
 
     /// Periodic reload (§4.3): recompute IDF/filter tables from the current
     /// corpus and swap them in without downtime. Re-embeds and re-indexes
-    /// all points (embeddings depend on the tables).
+    /// all points (embeddings depend on the tables). Logged to the WAL:
+    /// table derivation is deterministic in the corpus, so replay
+    /// reproduces the same tables at the same position in the mutation
+    /// stream.
     pub fn refresh_tables(&self, threads: usize) -> Result<()> {
+        let _wal = self.wal_log(wal::refresh_payload, 1)?;
         let snapshot = self.store.snapshot();
         let points: Vec<Point> = snapshot.iter().map(|a| (**a).clone()).collect();
         let bucketer = Bucketer::with_defaults(&self.schema, self.config.lsh_seed);
@@ -464,6 +630,17 @@ impl DynamicGus {
             ("mutation_latency", self.metrics.mutation_latency.summary().to_json()),
             ("query_latency", self.metrics.query_latency.summary().to_json()),
             ("staleness_p99_ms", Json::num(self.metrics.staleness.p99_ms())),
+            (
+                "wal",
+                match self.wal.get() {
+                    Some(w) => Json::obj(vec![
+                        ("dir", Json::str(w.dir().display().to_string())),
+                        ("seq", Json::u64(w.seq())),
+                        ("pending", Json::u64(w.pending())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             ("config", self.config.to_json()),
         ])
     }

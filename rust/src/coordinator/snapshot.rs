@@ -1,11 +1,24 @@
-//! Service snapshot / restore.
+//! Service checkpoint / restore.
 //!
 //! Industrial deployments restart; §4.3's "initial set of points" is, on
-//! restart, the previous incarnation's corpus. A snapshot is the service
+//! restart, the previous incarnation's corpus. A checkpoint is the service
 //! config plus the full feature store (points JSONL — same format as
-//! `data::loader`); restore replays bootstrap: preprocessing tables and the
-//! index are recomputed deterministically from the points (the LSH seed is
-//! part of the config), so the restored service answers queries identically.
+//! `data::loader`) plus the embedding tables; restore replays bootstrap:
+//! the index is recomputed deterministically from the points (the LSH seed
+//! is part of the config) and the persisted tables are swapped in, so the
+//! restored service answers queries identically.
+//!
+//! # Crash atomicity and the WAL
+//!
+//! With [`crate::coordinator::wal`] enabled, [`save_with_seq`] is the slow
+//! half of an *incremental checkpoint*: the corpus is written to a
+//! `points-<seq>.jsonl` file first, then `snapshot.json` — which names
+//! that file and records `last_seq`, the WAL sequence number the snapshot
+//! includes — is renamed into place atomically. The rename is the commit
+//! point: a crash at any earlier moment leaves the previous checkpoint
+//! (and the untruncated WAL) fully intact. Recovery replays only WAL
+//! records with `seq > last_seq`, so the checkpoint-then-truncate pair in
+//! [`DynamicGus::checkpoint`] is safe at every intermediate step.
 
 use std::path::Path;
 
@@ -17,10 +30,68 @@ use crate::data::{loader, Dataset};
 use crate::features::Schema;
 use crate::util::json::Json;
 
-/// Write `gus`'s current corpus + config under `dir/`
-/// (`snapshot.json` + `points.jsonl`).
+/// Checkpoint metadata file name (its presence commits a checkpoint).
+pub const SNAPSHOT_META: &str = "snapshot.json";
+
+/// Resolve a persisted schema name back to a [`Schema`] (shared by
+/// snapshot restore and WAL-only recovery).
+pub fn schema_by_name(name: &str, dense_dim: usize) -> Result<Schema> {
+    match name {
+        "arxiv_like" => Ok(Schema::arxiv_like(dense_dim)),
+        "products_like" => Ok(Schema::products_like(dense_dim)),
+        other => anyhow::bail!("unknown schema '{other}'"),
+    }
+}
+
+/// Force a file's contents to stable storage (any fd of the file flushes
+/// its dirty pages).
+fn fsync_path(path: &Path) -> Result<()> {
+    std::fs::File::open(path)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsync {}", path.display()))
+}
+
+/// Force directory entries (the renames) to stable storage. Best effort:
+/// not every platform can fsync a directory.
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Write `gus`'s current corpus + config + tables under `dir/`. Records
+/// the service's current WAL sequence number when a WAL is attached — on
+/// a live durable service prefer [`DynamicGus::checkpoint`], which also
+/// truncates the log under the WAL lock.
 pub fn save(gus: &DynamicGus, dir: &Path) -> Result<()> {
+    save_with_seq(gus, dir, gus.wal_seq())
+}
+
+/// Write a checkpoint declaring that every mutation with WAL sequence
+/// number ≤ `last_seq` is included. Committed by an atomic rename of
+/// `snapshot.json`; never corrupts a previous checkpoint mid-write.
+pub fn save_with_seq(gus: &DynamicGus, dir: &Path, last_seq: u64) -> Result<()> {
     std::fs::create_dir_all(dir)?;
+    // 1. Corpus, to a per-sequence file the metadata will point at.
+    //    (tmp + rename so a crash mid-write never clobbers the file a
+    //    committed snapshot.json already references).
+    let points_file = format!("points-{last_seq}.jsonl");
+    let snapshot = gus.store_snapshot();
+    let ds = Dataset {
+        schema: gus.schema().clone(),
+        points: snapshot.iter().map(|p| (**p).clone()).collect(),
+        cluster_of: Vec::new(),
+    };
+    let points_tmp = dir.join(format!("{points_file}.tmp"));
+    loader::save(&ds, &points_tmp)?;
+    // fsync before each rename: once the WAL is truncated, the snapshot
+    // is the only copy of these mutations — it must survive power loss,
+    // not just process death.
+    fsync_path(&points_tmp)?;
+    std::fs::rename(&points_tmp, dir.join(&points_file))
+        .with_context(|| format!("committing {}/{points_file}", dir.display()))?;
+
+    // 2. Metadata — the commit point.
     let (idf, filter) = gus.tables();
     let meta = Json::obj(vec![
         ("schema", Json::str(gus.schema().name.clone())),
@@ -29,30 +100,50 @@ pub fn save(gus: &DynamicGus, dir: &Path) -> Result<()> {
             Json::num(gus.schema().primary_dense_dim() as f64),
         ),
         ("config", gus.config().to_json()),
-        ("points", Json::num(gus.len() as f64)),
+        ("points", Json::num(ds.points.len() as f64)),
+        ("points_file", Json::str(points_file.clone())),
+        ("last_seq", Json::u64(last_seq)),
         // Tables are persisted, not recomputed: the restored service must
         // answer queries identically even though its corpus has drifted
         // from the bootstrap corpus the tables were derived from.
         ("idf", idf.map(|t| t.to_json()).unwrap_or(Json::Null)),
         ("filter", filter.map(|f| f.to_json()).unwrap_or(Json::Null)),
     ]);
-    std::fs::write(dir.join("snapshot.json"), meta.dump())
-        .with_context(|| format!("writing {}/snapshot.json", dir.display()))?;
-    let snapshot = gus.store_snapshot();
-    let ds = Dataset {
-        schema: gus.schema().clone(),
-        points: snapshot.iter().map(|p| (**p).clone()).collect(),
-        cluster_of: Vec::new(),
-    };
-    loader::save(&ds, &dir.join("points.jsonl"))?;
+    let meta_tmp = dir.join("snapshot.json.tmp");
+    std::fs::write(&meta_tmp, meta.dump())
+        .with_context(|| format!("writing {}", meta_tmp.display()))?;
+    fsync_path(&meta_tmp)?;
+    std::fs::rename(&meta_tmp, dir.join(SNAPSHOT_META))
+        .with_context(|| format!("committing {}/{SNAPSHOT_META}", dir.display()))?;
+    fsync_dir(dir);
+
+    // 3. Best-effort cleanup of corpus files no longer referenced.
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let stale_versioned = name.starts_with("points-")
+                && name.ends_with(".jsonl")
+                && name != points_file;
+            let stale_legacy = name == "points.jsonl";
+            if stale_versioned || stale_legacy {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
     Ok(())
 }
 
-/// Restore a service from a snapshot directory.
+/// Restore a service from a checkpoint directory.
 pub fn restore(dir: &Path, threads: usize) -> Result<DynamicGus> {
-    let meta_text = std::fs::read_to_string(dir.join("snapshot.json"))
-        .with_context(|| format!("reading {}/snapshot.json", dir.display()))?;
-    let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("snapshot.json: {e}"))?;
+    restore_with_seq(dir, threads).map(|(gus, _)| gus)
+}
+
+/// Restore a service and report the checkpoint's `last_seq` (the WAL
+/// sequence number up to which it is complete; 0 for legacy snapshots).
+pub fn restore_with_seq(dir: &Path, threads: usize) -> Result<(DynamicGus, u64)> {
+    let meta_text = std::fs::read_to_string(dir.join(SNAPSHOT_META))
+        .with_context(|| format!("reading {}/{SNAPSHOT_META}", dir.display()))?;
+    let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("{SNAPSHOT_META}: {e}"))?;
     let config = GusConfig::from_json(meta.get("config"))
         .map_err(|e| anyhow::anyhow!("snapshot config: {e}"))?;
     let schema_name = meta
@@ -63,12 +154,10 @@ pub fn restore(dir: &Path, threads: usize) -> Result<DynamicGus> {
         .get("dense_dim")
         .as_usize()
         .ok_or_else(|| anyhow::anyhow!("snapshot missing dense_dim"))?;
-    let schema = match schema_name {
-        "arxiv_like" => Schema::arxiv_like(dense_dim),
-        "products_like" => Schema::products_like(dense_dim),
-        other => anyhow::bail!("unknown schema '{other}'"),
-    };
-    let ds = loader::load(&dir.join("points.jsonl"))?;
+    let schema = schema_by_name(schema_name, dense_dim)?;
+    // Legacy (pre-WAL) snapshots stored the corpus as `points.jsonl`.
+    let points_file = meta.get("points_file").as_str().unwrap_or("points.jsonl");
+    let ds = loader::load(&dir.join(points_file))?;
     anyhow::ensure!(ds.schema == schema, "snapshot schema mismatch");
     let expect = meta.get("points").as_usize().unwrap_or(ds.points.len());
     anyhow::ensure!(
@@ -93,7 +182,8 @@ pub fn restore(dir: &Path, threads: usize) -> Result<DynamicGus> {
         ),
     };
     gus.set_tables(idf, filter)?;
-    Ok(gus)
+    let last_seq = meta.get("last_seq").as_u64().unwrap_or(0);
+    Ok((gus, last_seq))
 }
 
 #[cfg(test)]
@@ -147,14 +237,63 @@ mod tests {
     }
 
     #[test]
+    fn save_commits_atomically_and_cleans_up() {
+        let ds = SyntheticConfig::arxiv_like(60, 0x5c).generate();
+        let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 1).unwrap();
+        let dir = tmpdir("atomic");
+        save_with_seq(&gus, &dir, 3).unwrap();
+        assert!(dir.join("points-3.jsonl").exists());
+        // A second checkpoint at a later seq replaces the corpus file and
+        // removes the stale one; no tmp files survive.
+        save_with_seq(&gus, &dir, 9).unwrap();
+        assert!(dir.join("points-9.jsonl").exists());
+        assert!(!dir.join("points-3.jsonl").exists());
+        for e in std::fs::read_dir(&dir).unwrap().flatten() {
+            assert!(
+                !e.file_name().to_string_lossy().ends_with(".tmp"),
+                "tmp file left behind: {:?}",
+                e.file_name()
+            );
+        }
+        let (restored, last_seq) = restore_with_seq(&dir, 1).unwrap();
+        assert_eq!(last_seq, 9);
+        assert_eq!(restored.len(), 60);
+    }
+
+    #[test]
+    fn restore_reads_legacy_points_file() {
+        // Pre-WAL snapshots named the corpus `points.jsonl` and had no
+        // `points_file` / `last_seq` fields.
+        let ds = SyntheticConfig::arxiv_like(40, 0x5d).generate();
+        let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+        let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 1).unwrap();
+        let dir = tmpdir("legacy");
+        save(&gus, &dir).unwrap();
+        // Rewrite the dir into the legacy shape.
+        std::fs::rename(dir.join("points-0.jsonl"), dir.join("points.jsonl")).unwrap();
+        let meta_text = std::fs::read_to_string(dir.join(SNAPSHOT_META)).unwrap();
+        let meta = Json::parse(&meta_text).unwrap();
+        let mut obj = meta.as_obj().unwrap().clone();
+        obj.remove("points_file");
+        obj.remove("last_seq");
+        std::fs::write(dir.join(SNAPSHOT_META), Json::Obj(obj).dump()).unwrap();
+        let (restored, last_seq) = restore_with_seq(&dir, 1).unwrap();
+        assert_eq!(last_seq, 0);
+        assert_eq!(restored.len(), 40);
+    }
+
+    #[test]
     fn restore_detects_truncation() {
         let ds = SyntheticConfig::arxiv_like(50, 0x5b).generate();
         let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
         let gus = DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 1).unwrap();
         let dir = tmpdir("truncated");
         save(&gus, &dir).unwrap();
-        // Truncate points.jsonl.
-        let path = dir.join("points.jsonl");
+        // Truncate the corpus file named by the metadata.
+        let meta_text = std::fs::read_to_string(dir.join(SNAPSHOT_META)).unwrap();
+        let meta = Json::parse(&meta_text).unwrap();
+        let path = dir.join(meta.get("points_file").as_str().unwrap());
         let text = std::fs::read_to_string(&path).unwrap();
         let keep: Vec<&str> = text.lines().take(10).collect();
         std::fs::write(&path, keep.join("\n")).unwrap();

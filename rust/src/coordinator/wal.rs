@@ -1,0 +1,852 @@
+//! Write-ahead log: durable dynamic serving.
+//!
+//! The paper's industrial deployments treat restart as "bootstrap from the
+//! previous incarnation's corpus" (§4.3). A plain periodic snapshot makes
+//! that lossy — every mutation since the last snapshot dies with the
+//! process. This module closes the gap: when [`crate::config::GusConfig`]
+//! sets `wal_dir`, every **accepted** mutation (insert / delete, single and
+//! batch, plus table refreshes) is appended to a length-prefixed,
+//! checksummed log *before* it is applied, so a `kill -9` at any moment
+//! loses nothing the service acknowledged, and restart cost is
+//! O(checkpoint delta), not O(corpus).
+//!
+//! # On-disk layout (`wal_dir/`)
+//!
+//! ```text
+//! wal_meta.json         schema + config — lets WAL-only recovery boot an
+//!                       empty service before any checkpoint exists
+//! wal.log               the live log (record framing below)
+//! snapshot.json         latest checkpoint metadata (config, tables,
+//!                       points_file, last_seq) — renamed into place
+//!                       atomically; its presence commits a checkpoint
+//! points-<seq>.jsonl    the checkpoint's corpus (referenced by meta)
+//! ```
+//!
+//! # Record framing
+//!
+//! Each record is `[len: u32 LE][seq: u64 LE][check: u64 LE][payload]`.
+//! `seq` increases by one per record and never resets (checkpoints truncate
+//! the file but keep the counter). `check` is a stable 64-bit checksum over
+//! `(seq, payload)` (see [`crate::util::hash`]). The payload is the same
+//! JSON the RPC layer speaks (`{"op":"insert","point":{..}}`, …; see
+//! `docs/PROTOCOL.md`), so a WAL is also a replayable op trace.
+//!
+//! A **torn tail** — a record cut short by a crash mid-append, or trailing
+//! bytes whose checksum does not match — terminates the scan: everything
+//! before it is replayed, the tail is truncated away, and appends resume
+//! cleanly. A torn record was by construction never applied (log-before-
+//! apply) *and* never acknowledged, so dropping it is correct. That
+//! justification only holds at the *end* of the log: if valid records
+//! follow the bad region (a bad sector mid-file, not a crash), recovery
+//! refuses to truncate and fails loudly instead.
+//!
+//! # Checkpoints
+//!
+//! [`DynamicGus::checkpoint`] writes the corpus + tables as a snapshot
+//! committed by an atomic rename, then truncates the log. The snapshot
+//! records `last_seq`; recovery replays only records with `seq >
+//! last_seq`, which makes the snapshot-then-truncate pair crash-safe at
+//! every intermediate step. The [`Checkpointer`] runs this automatically
+//! whenever `checkpoint_every` mutations have accumulated.
+//!
+//! # Consistency
+//!
+//! Mutations hold the WAL lock across log **and** apply, so a checkpoint
+//! (which takes the same lock) always observes a store consistent with the
+//! sequence number it records, and recovery replays exactly the acknowledged
+//! suffix. Concurrent mutations to the *same* point id have no defined
+//! order (they race in the live service too); recovery preserves the WAL
+//! order.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::FsyncPolicy;
+use crate::coordinator::{snapshot, DynamicGus};
+use crate::features::{Point, PointId};
+use crate::util::hash::{hash_bytes, mix2};
+use crate::util::json::Json;
+
+/// Log file name inside the WAL directory.
+pub const WAL_FILE: &str = "wal.log";
+/// Bootstrap metadata file name inside the WAL directory.
+pub const META_FILE: &str = "wal_meta.json";
+
+/// Record header: `[len: u32][seq: u64][check: u64]`.
+const HEADER_BYTES: usize = 4 + 8 + 8;
+/// Sanity cap on a single record's payload (1 GiB) — anything larger is
+/// treated as corruption rather than an allocation request.
+const MAX_RECORD_BYTES: u32 = 1 << 30;
+
+/// Stable checksum over a record's sequence number and payload.
+#[inline]
+fn record_check(seq: u64, payload: &[u8]) -> u64 {
+    mix2(hash_bytes(payload), seq)
+}
+
+// ---------- payload encoding (the RPC wire ops; see docs/PROTOCOL.md) ----
+
+pub(crate) fn insert_payload(p: &Point) -> Json {
+    Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())])
+}
+
+pub(crate) fn delete_payload(id: PointId) -> Json {
+    Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))])
+}
+
+pub(crate) fn insert_batch_payload(points: &[Point]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("insert_batch")),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ])
+}
+
+pub(crate) fn delete_batch_payload(ids: &[PointId]) -> Json {
+    Json::obj(vec![("op", Json::str("delete_batch")), ("ids", Json::u64_arr(ids))])
+}
+
+pub(crate) fn refresh_payload() -> Json {
+    Json::obj(vec![("op", Json::str("refresh_tables"))])
+}
+
+// ---------- writer ----------
+
+/// Appender over the log file. Owned by [`WalHandle`] behind a mutex; the
+/// coordinator holds that mutex across log **and** apply (see module docs).
+pub struct WalWriter {
+    file: File,
+    path: PathBuf,
+    policy: FsyncPolicy,
+    seq: u64,
+    /// Byte length of the valid log (the rollback point for a failed
+    /// append — a partial frame followed by later valid records would
+    /// read as unrecoverable mid-file corruption).
+    offset: u64,
+    appends_since_sync: usize,
+    /// Set when a failed append could not be rolled back: the log may
+    /// end in a partial frame, so further appends must be refused (they
+    /// would land *after* the garbage and become unrecoverable).
+    poisoned: bool,
+}
+
+impl WalWriter {
+    /// Open (creating if absent) the log at `path` for appending.
+    /// `start_seq` is the sequence number of the last record already
+    /// durable anywhere (snapshot or log); new records continue from it.
+    pub fn open(path: &Path, policy: FsyncPolicy, start_seq: u64) -> Result<WalWriter> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let offset = file.metadata()?.len();
+        Ok(WalWriter {
+            file,
+            path: path.to_path_buf(),
+            policy,
+            seq: start_seq,
+            offset,
+            appends_since_sync: 0,
+            poisoned: false,
+        })
+    }
+
+    /// Sequence number of the most recently appended record.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record; returns its sequence number. The record is in
+    /// the OS page cache when this returns (a process crash cannot lose
+    /// it); the fsync policy decides when it also survives power loss.
+    ///
+    /// A failed write (ENOSPC, I/O error) is rolled back to the previous
+    /// record boundary so the log stays parseable; if even the rollback
+    /// fails the writer poisons itself and refuses further appends —
+    /// otherwise the next successful append would follow garbage bytes
+    /// and turn an I/O blip into unrecoverable mid-file corruption.
+    pub fn append(&mut self, payload: &Json) -> Result<u64> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "WAL {} is poisoned after an unrolled-back write failure; \
+             restart (recovery truncates the partial record)",
+            self.path.display()
+        );
+        let bytes = payload.dump().into_bytes();
+        anyhow::ensure!(bytes.len() as u64 <= MAX_RECORD_BYTES as u64, "WAL record too large");
+        let seq = self.seq + 1;
+        let mut frame = Vec::with_capacity(HEADER_BYTES + bytes.len());
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&seq.to_le_bytes());
+        frame.extend_from_slice(&record_check(seq, &bytes).to_le_bytes());
+        frame.extend_from_slice(&bytes);
+        if let Err(e) = self.file.write_all(&frame) {
+            // Trim any partial frame; seq stays unchanged so the next
+            // attempt reuses it (no gap in the sequence).
+            if self.file.set_len(self.offset).is_err() {
+                self.poisoned = true;
+            }
+            return Err(anyhow!(e)
+                .context(format!("appending to WAL {}", self.path.display())));
+        }
+        self.seq = seq;
+        self.offset += frame.len() as u64;
+        match self.policy {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::EveryN(n) => {
+                self.appends_since_sync += 1;
+                if self.appends_since_sync >= n {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Never => {}
+        }
+        Ok(self.seq)
+    }
+
+    /// Force everything appended so far to stable storage.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsync {}", self.path.display()))?;
+        self.appends_since_sync = 0;
+        Ok(())
+    }
+
+    /// Drop all records (after a checkpoint made them redundant). The
+    /// sequence counter is preserved — it must stay monotonic so snapshot
+    /// `last_seq` comparisons remain meaningful across checkpoints. Also
+    /// clears a poisoned state: the partial frame (if any) is gone.
+    pub fn truncate(&mut self) -> Result<()> {
+        self.file
+            .set_len(0)
+            .with_context(|| format!("truncating WAL {}", self.path.display()))?;
+        self.file.sync_all().ok();
+        self.offset = 0;
+        self.appends_since_sync = 0;
+        self.poisoned = false;
+        Ok(())
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        // Clean shutdown gets power-loss durability regardless of policy.
+        let _ = self.file.sync_data();
+    }
+}
+
+// ---------- scanning / replay ----------
+
+/// Summary of a streamed log scan.
+pub struct ScanSummary {
+    /// Number of valid records streamed to the sink.
+    pub records: usize,
+    /// Sequence number of the last valid record (0 if none).
+    pub last_seq: u64,
+    /// Byte length of the valid prefix (everything after is a torn tail).
+    pub good_bytes: u64,
+    /// Whether a torn tail was found (and excluded).
+    pub torn: bool,
+}
+
+/// Why a frame failed to decode: the file ends (or goes bad) mid-record,
+/// or the underlying read itself errored.
+enum FrameError {
+    Torn,
+    Io(std::io::Error),
+}
+
+/// Decode one frame (`(seq, payload, frame_bytes)`) from `reader`.
+/// `Ok(None)` = clean EOF at a record boundary.
+fn read_frame(
+    reader: &mut impl std::io::Read,
+) -> std::result::Result<Option<(u64, Json, u64)>, FrameError> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut filled = 0usize;
+    while filled < HEADER_BYTES {
+        match reader.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None), // clean boundary
+            Ok(0) => return Err(FrameError::Torn),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let seq = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let check = u64::from_le_bytes(header[12..20].try_into().unwrap());
+    if len > MAX_RECORD_BYTES {
+        return Err(FrameError::Torn);
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut filled = 0usize;
+    while filled < payload.len() {
+        match reader.read(&mut payload[filled..]) {
+            Ok(0) => return Err(FrameError::Torn),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    if record_check(seq, &payload) != check {
+        return Err(FrameError::Torn);
+    }
+    let json = std::str::from_utf8(&payload)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+        .ok_or(FrameError::Torn)?;
+    Ok(Some((seq, json, HEADER_BYTES as u64 + len as u64)))
+}
+
+/// Does any complete, checksum-valid record start in `data`? Used to tell
+/// a genuine torn *tail* (nothing valid follows — safe to truncate) from
+/// mid-file corruption (valid records follow — truncating would destroy
+/// acknowledged mutations, so recovery must fail loudly instead).
+fn contains_valid_record(data: &[u8]) -> bool {
+    if data.len() < HEADER_BYTES {
+        return false;
+    }
+    for pos in 0..=(data.len() - HEADER_BYTES) {
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        if len as u64 > MAX_RECORD_BYTES as u64 || data.len() - pos - HEADER_BYTES < len {
+            continue;
+        }
+        let seq = u64::from_le_bytes(data[pos + 4..pos + 12].try_into().unwrap());
+        let check = u64::from_le_bytes(data[pos + 12..pos + 20].try_into().unwrap());
+        let payload = &data[pos + HEADER_BYTES..pos + HEADER_BYTES + len];
+        if record_check(seq, payload) == check {
+            return true;
+        }
+    }
+    false
+}
+
+/// Stream a log file's records into `sink`, tolerating a torn tail.
+/// Memory use is bounded by one record, not the file. A missing file
+/// scans as empty. Errors if the log is corrupted *mid-file* (valid
+/// records follow the bad region — see [`contains_valid_record`]) or if
+/// the sink errors.
+pub fn scan_apply(
+    path: &Path,
+    mut sink: impl FnMut(u64, Json) -> Result<()>,
+) -> Result<ScanSummary> {
+    let file = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(ScanSummary { records: 0, last_seq: 0, good_bytes: 0, torn: false })
+        }
+        Err(e) => return Err(anyhow!(e).context(format!("opening WAL {}", path.display()))),
+    };
+    let file_len = file.metadata()?.len();
+    let mut reader = std::io::BufReader::new(file);
+    let mut summary = ScanSummary { records: 0, last_seq: 0, good_bytes: 0, torn: false };
+    loop {
+        match read_frame(&mut reader) {
+            Ok(None) => break,
+            Ok(Some((seq, json, frame_bytes))) => {
+                sink(seq, json)?;
+                summary.records += 1;
+                summary.last_seq = seq;
+                summary.good_bytes += frame_bytes;
+            }
+            Err(FrameError::Io(e)) => {
+                return Err(anyhow!(e).context(format!("reading WAL {}", path.display())))
+            }
+            Err(FrameError::Torn) => {
+                summary.torn = true;
+                break;
+            }
+        }
+    }
+    if summary.torn && summary.good_bytes + 1 < file_len {
+        // Distinguish a torn tail from mid-file corruption: re-read the
+        // suspect region (error path only) and look for valid records
+        // beyond it.
+        let data = std::fs::read(path)?;
+        let tail = &data[(summary.good_bytes as usize + 1).min(data.len())..];
+        if contains_valid_record(tail) {
+            bail!(
+                "WAL {} is corrupted at byte {} with valid records after the bad region; \
+                 refusing to truncate acknowledged mutations — inspect or repair the log \
+                 manually",
+                path.display(),
+                summary.good_bytes
+            );
+        }
+    }
+    Ok(summary)
+}
+
+/// Result of scanning a log file into memory (tests, tooling; prefer
+/// [`scan_apply`] for recovery-sized logs).
+pub struct WalScan {
+    /// Decoded `(seq, payload)` records in append order.
+    pub records: Vec<(u64, Json)>,
+    /// Byte length of the valid prefix (everything after is a torn tail).
+    pub good_bytes: u64,
+    /// Whether a torn tail was found (and excluded).
+    pub torn: bool,
+}
+
+/// Scan a log file, collecting all records. See [`scan_apply`].
+pub fn scan(path: &Path) -> Result<WalScan> {
+    let mut records = Vec::new();
+    let summary = scan_apply(path, |seq, json| {
+        records.push((seq, json));
+        Ok(())
+    })?;
+    Ok(WalScan { records, good_bytes: summary.good_bytes, torn: summary.torn })
+}
+
+// ---------- bootstrap metadata ----------
+
+/// Write `wal_meta.json` (schema + config + corpus size at the time) so
+/// a WAL whose checkpoint is later lost can either be recovered (empty
+/// bootstrap — the log is the full history) or refused loudly (non-empty
+/// bootstrap — the log alone cannot reconstruct it). No-op if the file
+/// already exists.
+fn ensure_meta(gus: &DynamicGus, dir: &Path) -> Result<()> {
+    let path = dir.join(META_FILE);
+    if path.exists() {
+        return Ok(());
+    }
+    let meta = Json::obj(vec![
+        ("schema", Json::str(gus.schema().name.clone())),
+        ("dense_dim", Json::num(gus.schema().primary_dense_dim() as f64)),
+        ("config", gus.config().to_json()),
+        ("points_at_init", Json::num(gus.len() as f64)),
+    ]);
+    std::fs::write(&path, meta.dump())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Boot an empty service from `wal_meta.json` (checkpoint lost). Only
+/// sound when the service started empty: WAL replay then reproduces the
+/// entire history. A non-empty bootstrap corpus cannot be reconstructed
+/// from the log, so that case is a loud error, not a silent partial
+/// recovery.
+fn boot_from_meta(dir: &Path, threads: usize) -> Result<DynamicGus> {
+    let path = dir.join(META_FILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let meta = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let points_at_init = meta.get("points_at_init").as_usize().unwrap_or(0);
+    if points_at_init > 0 {
+        bail!(
+            "checkpoint missing from {} and the service was initialized with \
+             {points_at_init} points — the WAL alone cannot reconstruct them; \
+             restore the snapshot files from backup",
+            dir.display()
+        );
+    }
+    let config = crate::config::GusConfig::from_json(meta.get("config"))
+        .map_err(|e| anyhow!("wal_meta config: {e}"))?;
+    let name = meta
+        .get("schema")
+        .as_str()
+        .ok_or_else(|| anyhow!("wal_meta missing schema"))?;
+    let dense_dim = meta
+        .get("dense_dim")
+        .as_usize()
+        .ok_or_else(|| anyhow!("wal_meta missing dense_dim"))?;
+    let schema = snapshot::schema_by_name(name, dense_dim)?;
+    DynamicGus::bootstrap(schema, config, &[], threads)
+}
+
+// ---------- handle (attached to a DynamicGus) ----------
+
+/// The durability state a [`DynamicGus`] carries once WAL logging is
+/// enabled: the writer, the directory checkpoints land in, and the count
+/// of mutations logged since the last checkpoint.
+pub struct WalHandle {
+    pub(crate) writer: Mutex<WalWriter>,
+    dir: PathBuf,
+    pending: AtomicU64,
+}
+
+impl WalHandle {
+    pub fn new(writer: WalWriter, dir: PathBuf) -> WalHandle {
+        WalHandle { writer, dir, pending: AtomicU64::new(0) }
+    }
+
+    /// Directory holding the log and checkpoints.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Mutations logged since the last checkpoint (drives the
+    /// [`Checkpointer`]).
+    pub fn pending(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn add_pending(&self, n: u64) {
+        self.pending.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn reset_pending(&self) {
+        self.pending.store(0, Ordering::Relaxed);
+    }
+
+    /// Sequence number of the most recently logged mutation.
+    pub fn seq(&self) -> u64 {
+        self.writer.lock().unwrap().seq()
+    }
+}
+
+// ---------- lifecycle: init / recover ----------
+
+/// Does `dir` hold a previous incarnation's state?
+pub fn has_state(dir: &Path) -> bool {
+    dir.join(snapshot::SNAPSHOT_META).exists()
+        || dir.join(WAL_FILE).exists()
+        || dir.join(META_FILE).exists()
+}
+
+/// Enable durability on a freshly bootstrapped service: create `dir`,
+/// attach the log, write checkpoint 0 (so the bootstrap corpus itself is
+/// never WAL-only), and only then the bootstrap metadata — so a crash
+/// mid-init leaves a directory that recovery *rejects loudly* rather
+/// than one that silently recovers as an empty corpus. Fails if `dir`
+/// already holds state — recover that instead with [`recover`].
+pub fn init_fresh(gus: &DynamicGus, dir: &Path) -> Result<()> {
+    if has_state(dir) {
+        bail!(
+            "{} already holds service state; use wal::recover instead of init_fresh \
+             (or remove the directory to start fresh)",
+            dir.display()
+        );
+    }
+    std::fs::create_dir_all(dir)?;
+    let writer = WalWriter::open(&dir.join(WAL_FILE), gus.config().fsync, 0)?;
+    gus.attach_wal(WalHandle::new(writer, dir.to_path_buf()))?;
+    gus.checkpoint()?;
+    ensure_meta(gus, dir)?;
+    Ok(())
+}
+
+/// What [`recover`] found and did.
+pub struct Recovery {
+    /// The restored, WAL-attached service.
+    pub gus: DynamicGus,
+    /// Points restored from the checkpoint (0 if recovery was WAL-only).
+    pub snapshot_points: usize,
+    /// WAL records replayed on top of the checkpoint.
+    pub replayed: usize,
+    /// Whether a torn tail was found (and truncated away).
+    pub torn_tail: bool,
+}
+
+/// Restore a durable service from `dir`: latest checkpoint + WAL replay.
+///
+/// Every acknowledged mutation survives; a torn final record (crash
+/// mid-append — necessarily unacknowledged) is dropped and truncated so
+/// the log is clean for new appends. Mid-file corruption (valid records
+/// after a bad region) is an error, never a silent truncation. The
+/// returned service has the WAL attached and continues logging where the
+/// previous incarnation stopped.
+pub fn recover(dir: &Path, threads: usize) -> Result<Recovery> {
+    recover_with(dir, threads, None)
+}
+
+/// [`recover`], optionally overriding the persisted fsync policy for the
+/// re-attached log (e.g. the operator passed `--fsync` on restart). The
+/// override applies to the new incarnation's appends only; the persisted
+/// config is otherwise authoritative.
+pub fn recover_with(
+    dir: &Path,
+    threads: usize,
+    fsync_override: Option<FsyncPolicy>,
+) -> Result<Recovery> {
+    let (gus, last_seq) = if dir.join(snapshot::SNAPSHOT_META).exists() {
+        snapshot::restore_with_seq(dir, threads)?
+    } else if dir.join(META_FILE).exists() {
+        (boot_from_meta(dir, threads)?, 0)
+    } else {
+        bail!(
+            "nothing to recover in {}: no {} or {} (crash during init? \
+             remove the directory to start fresh)",
+            dir.display(),
+            snapshot::SNAPSHOT_META,
+            META_FILE
+        );
+    };
+    let snapshot_points = gus.len();
+
+    // Stream the log tail into the service: memory stays bounded by one
+    // record no matter how long the previous incarnation ran between
+    // checkpoints. Appends are strictly sequential, so any gap in the
+    // sequence — within the file, or between the checkpoint's last_seq
+    // and the file's first record — means acknowledged history is
+    // missing, and recovery must fail rather than serve partial state.
+    let wal_path = dir.join(WAL_FILE);
+    let mut replayed = 0usize;
+    let mut pending_mutations = 0u64;
+    let mut prev_seq: Option<u64> = None;
+    let summary = scan_apply(&wal_path, |seq, payload| {
+        match prev_seq {
+            Some(p) if seq != p + 1 => bail!(
+                "WAL sequence gap: record {seq} follows record {p}; \
+                 acknowledged history is missing"
+            ),
+            None if seq > last_seq + 1 => bail!(
+                "WAL starts at record {seq} but the checkpoint only covers \
+                 up to {last_seq}; records {}..{} are missing (lost \
+                 checkpoint?)",
+                last_seq + 1,
+                seq - 1
+            ),
+            _ => {}
+        }
+        prev_seq = Some(seq);
+        if seq <= last_seq {
+            // Already folded into the checkpoint (crash landed between
+            // snapshot commit and WAL truncation).
+            return Ok(());
+        }
+        pending_mutations += gus
+            .apply_logged(&payload, threads)
+            .with_context(|| format!("replaying WAL record seq={seq}"))?;
+        replayed += 1;
+        Ok(())
+    })?;
+    let max_seq = last_seq.max(summary.last_seq);
+    if summary.torn {
+        // Drop the unacknowledged tail so new appends follow a valid record.
+        let f = OpenOptions::new()
+            .write(true)
+            .open(&wal_path)
+            .with_context(|| format!("truncating torn WAL {}", wal_path.display()))?;
+        f.set_len(summary.good_bytes)?;
+        f.sync_all().ok();
+    }
+
+    ensure_meta(&gus, dir)?;
+    let policy = fsync_override.unwrap_or_else(|| gus.config().fsync);
+    let writer = WalWriter::open(&wal_path, policy, max_seq)?;
+    let handle = WalHandle::new(writer, dir.to_path_buf());
+    // Mutations not yet folded into a checkpoint count as pending —
+    // weighted like live logging (a batch record counts its items) — so
+    // the background checkpointer compacts them promptly.
+    handle.add_pending(pending_mutations);
+    gus.attach_wal(handle)?;
+    Ok(Recovery { gus, snapshot_points, replayed, torn_tail: summary.torn })
+}
+
+// ---------- background checkpointer ----------
+
+/// Background thread that checkpoints the service whenever
+/// `checkpoint_every` mutations have accumulated in the WAL. Stops (and
+/// joins) on [`Checkpointer::stop`] or drop.
+pub struct Checkpointer {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Checkpointer {
+    /// Spawn the trigger thread. `every` must be ≥ 1 (callers gate on
+    /// `checkpoint_every > 0`); `poll` is how often the threshold is
+    /// checked — checkpoints themselves happen only when it is crossed.
+    pub fn spawn(gus: Arc<DynamicGus>, every: u64, poll: Duration) -> Checkpointer {
+        assert!(every >= 1, "checkpoint_every must be >= 1 to spawn a Checkpointer");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("gus-checkpointer".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    std::thread::sleep(poll);
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if gus.wal_pending() >= every {
+                        match gus.checkpoint() {
+                            Ok(seq) => {
+                                eprintln!("[gus] background checkpoint at seq {seq}")
+                            }
+                            Err(e) => eprintln!("[gus] background checkpoint failed: {e}"),
+                        }
+                    }
+                }
+            })
+            .expect("spawning checkpointer thread");
+        Checkpointer { stop, join: Some(join) }
+    }
+
+    /// Signal the thread and wait for it to exit.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("gus-wal-unit").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn payload(i: u64) -> Json {
+        Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(i))])
+    }
+
+    #[test]
+    fn append_scan_round_trip() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::EveryN(2), 0).unwrap();
+        for i in 0..5 {
+            assert_eq!(w.append(&payload(i)).unwrap(), i + 1);
+        }
+        drop(w);
+        let s = scan(&path).unwrap();
+        assert!(!s.torn);
+        assert_eq!(s.records.len(), 5);
+        assert_eq!(s.good_bytes, std::fs::metadata(&path).unwrap().len());
+        for (i, (seq, j)) in s.records.iter().enumerate() {
+            assert_eq!(*seq, i as u64 + 1);
+            assert_eq!(j.get("id").as_u64(), Some(i as u64));
+        }
+        // Reopen continues the sequence.
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 5).unwrap();
+        assert_eq!(w.append(&payload(99)).unwrap(), 6);
+        drop(w);
+        assert_eq!(scan(&path).unwrap().records.len(), 6);
+    }
+
+    #[test]
+    fn missing_file_scans_empty() {
+        let dir = tmpdir("missing");
+        let s = scan(&dir.join(WAL_FILE)).unwrap();
+        assert!(s.records.is_empty());
+        assert_eq!(s.good_bytes, 0);
+        assert!(!s.torn);
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_bounded() {
+        let dir = tmpdir("torn");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..3 {
+            w.append(&payload(i)).unwrap();
+        }
+        let good_two = {
+            // Length after two records, recomputed from a fresh scan.
+            let s = scan(&path).unwrap();
+            assert_eq!(s.records.len(), 3);
+            let full = std::fs::metadata(&path).unwrap().len();
+            drop(w);
+            // Chop into the middle of the third record.
+            let f = OpenOptions::new().write(true).open(&path).unwrap();
+            f.set_len(full - 5).unwrap();
+            drop(f);
+            let s = scan(&path).unwrap();
+            assert!(s.torn);
+            assert_eq!(s.records.len(), 2);
+            s.good_bytes
+        };
+        // good_bytes points at the end of record 2: truncating there and
+        // appending again yields a clean 3-record log.
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(good_two).unwrap();
+        drop(f);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Always, 2).unwrap();
+        w.append(&payload(7)).unwrap();
+        drop(w);
+        let s = scan(&path).unwrap();
+        assert!(!s.torn);
+        assert_eq!(s.records.len(), 3);
+        assert_eq!(s.records[2].0, 3);
+        assert_eq!(s.records[2].1.get("id").as_u64(), Some(7));
+    }
+
+    #[test]
+    fn corrupted_byte_stops_scan() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..3 {
+            w.append(&payload(i)).unwrap();
+        }
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte in the *last* record: indistinguishable
+        // from a torn tail, so it scans as one.
+        let n = bytes.len();
+        bytes[n - 2] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let s = scan(&path).unwrap();
+        assert!(s.torn);
+        assert_eq!(s.records.len(), 2);
+    }
+
+    #[test]
+    fn mid_file_corruption_is_an_error_not_a_truncation() {
+        let dir = tmpdir("mid-corrupt");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        let first_len = {
+            w.append(&payload(0)).unwrap();
+            std::fs::metadata(&path).unwrap().len()
+        };
+        for i in 1..4 {
+            w.append(&payload(i)).unwrap();
+        }
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte in the *first* record: valid, acknowledged
+        // records follow the bad region, so treating it as a torn tail
+        // would silently destroy them. The scan must fail loudly instead.
+        bytes[first_len as usize - 2] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = scan(&path).unwrap_err();
+        assert!(format!("{err}").contains("corrupted"), "{err}");
+    }
+
+    #[test]
+    fn truncate_keeps_sequence() {
+        let dir = tmpdir("truncate");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..4 {
+            w.append(&payload(i)).unwrap();
+        }
+        w.truncate().unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        assert_eq!(w.append(&payload(9)).unwrap(), 5, "seq must survive truncation");
+        drop(w);
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.records[0].0, 5);
+    }
+}

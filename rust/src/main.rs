@@ -4,6 +4,14 @@
 //! gus serve   --dataset arxiv_like --n 20000 --addr 127.0.0.1:7717
 //!             [--scann-nn K] [--idf-s S] [--filter-p P] [--scorer auto]
 //!             [--load data.jsonl]
+//!             [--wal-dir DIR] [--fsync always|every_n[:N]|never]
+//!             [--checkpoint-every M]
+//!             # --wal-dir makes the service durable: mutations are
+//!             # write-ahead logged, checkpoints land in DIR, and a
+//!             # restart with the same --wal-dir recovers everything.
+//! gus recover --wal-dir DIR [--addr 127.0.0.1:7717]
+//!             # restore checkpoint + WAL, compact, optionally serve
+//! gus checkpoint --addr 127.0.0.1:7717   # force a checkpoint via RPC
 //! gus query   --addr 127.0.0.1:7717 --id 42 [--k 10]
 //! gus insert  --addr 127.0.0.1:7717 --point '{"id":..,"features":[..]}'
 //! gus delete  --addr 127.0.0.1:7717 --id 42
@@ -16,18 +24,19 @@
 //! gus preprocess --dataset arxiv_like --n 20000   # table summary (§4.3)
 //! ```
 //!
-//! `serve` accepts `--snapshot-dir DIR` to restore from / periodically save
-//! to a snapshot (coordinator::snapshot).
+//! `serve` also accepts the legacy `--snapshot-dir DIR` (restore-only, no
+//! WAL); prefer `--wal-dir`, which loses nothing on a crash.
 //!
 //! `serve` boots the full stack: dataset (generated or loaded), offline
 //! preprocessing, index warm-up, scorer (XLA artifacts if present), then
-//! the TCP JSON-lines RPC server. See rust/src/server.rs for the protocol.
+//! the TCP JSON-lines RPC server. The wire protocol is specified in
+//! docs/PROTOCOL.md; the system layout in docs/ARCHITECTURE.md.
 
 use std::sync::Arc;
 
 use dynamic_gus::client::GusClient;
 use dynamic_gus::config::GusConfig;
-use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::coordinator::{wal, DynamicGus};
 use dynamic_gus::data::{loader, synthetic::SyntheticConfig};
 use dynamic_gus::features::Point;
 use dynamic_gus::server::{serve, ServerConfig};
@@ -102,6 +111,12 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "serve" => {
             if let Some(dir) = args.opt_str("snapshot-dir") {
+                if args.opt_str("wal-dir").is_some() {
+                    anyhow::bail!(
+                        "--snapshot-dir and --wal-dir are mutually exclusive; \
+                         --wal-dir supersedes it (recovers snapshots too, losslessly)"
+                    );
+                }
                 let dir = std::path::PathBuf::from(dir);
                 if dir.join("snapshot.json").exists() {
                     eprintln!("[gus] restoring from snapshot {}", dir.display());
@@ -117,7 +132,6 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     }
                 }
             }
-            let ds = load_or_generate(args)?;
             let config = GusConfig::default()
                 .apply_args(args)
                 .map_err(|e| anyhow::anyhow!(e))?;
@@ -125,22 +139,123 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 "threads",
                 dynamic_gus::util::threadpool::default_parallelism(),
             );
-            eprintln!(
-                "[gus] bootstrapping {} points ({}), config {}",
-                ds.points.len(),
-                ds.schema.name,
-                config.to_json().dump()
-            );
-            let t0 = std::time::Instant::now();
-            let gus = DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points, threads)?;
-            eprintln!("[gus] ready in {:.1}s", t0.elapsed().as_secs_f64());
+            // Durability knobs as parsed from the CLI, kept aside: on
+            // recovery the persisted config is otherwise authoritative,
+            // but knobs the operator set explicitly for this incarnation
+            // (--fsync, --checkpoint-every) must win.
+            let cli_fsync = args.opt_str("fsync").map(|_| config.fsync);
+            let cli_checkpoint_every =
+                args.opt_str("checkpoint-every").map(|_| config.checkpoint_every);
+            let gus = match config.wal_dir.clone() {
+                Some(dir) if wal::has_state(std::path::Path::new(&dir)) => {
+                    let t0 = std::time::Instant::now();
+                    let rec =
+                        wal::recover_with(std::path::Path::new(&dir), threads, cli_fsync)?;
+                    eprintln!(
+                        "[gus] recovered {} points from {dir} ({} from checkpoint, \
+                         {} WAL records replayed{}) in {:.1}s",
+                        rec.gus.len(),
+                        rec.snapshot_points,
+                        rec.replayed,
+                        if rec.torn_tail { ", torn tail truncated" } else { "" },
+                        t0.elapsed().as_secs_f64()
+                    );
+                    rec.gus
+                }
+                wal_dir => {
+                    let ds = load_or_generate(args)?;
+                    eprintln!(
+                        "[gus] bootstrapping {} points ({}), config {}",
+                        ds.points.len(),
+                        ds.schema.name,
+                        config.to_json().dump()
+                    );
+                    let t0 = std::time::Instant::now();
+                    let gus =
+                        DynamicGus::bootstrap(ds.schema.clone(), config, &ds.points, threads)?;
+                    if let Some(dir) = wal_dir {
+                        wal::init_fresh(&gus, std::path::Path::new(&dir))?;
+                        eprintln!("[gus] durability on: WAL + checkpoints in {dir}");
+                    }
+                    eprintln!("[gus] ready in {:.1}s", t0.elapsed().as_secs_f64());
+                    gus
+                }
+            };
+            let gus = Arc::new(gus);
+            // Background checkpointer: bounds WAL length (and restart
+            // cost) without stalling the mutation path on every op.
+            let every = cli_checkpoint_every.unwrap_or_else(|| gus.config().checkpoint_every);
+            let _checkpointer = (gus.wal().is_some() && every > 0).then(|| {
+                wal::Checkpointer::spawn(
+                    Arc::clone(&gus),
+                    every,
+                    std::time::Duration::from_millis(500),
+                )
+            });
             let addr = args.get_str("addr", "127.0.0.1:7717");
-            let handle = serve(Arc::new(gus), &addr, ServerConfig::default())?;
+            let handle = serve(Arc::clone(&gus), &addr, ServerConfig::default())?;
             println!("[gus] serving on {}", handle.addr);
             // Serve until killed.
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "recover" => {
+            let dir = args
+                .opt_str("wal-dir")
+                .ok_or_else(|| anyhow::anyhow!("recover needs --wal-dir DIR"))?;
+            let threads = args.get_usize(
+                "threads",
+                dynamic_gus::util::threadpool::default_parallelism(),
+            );
+            // Same CLI overrides as `serve` on a recovered service.
+            let cli_fsync = args
+                .opt_str("fsync")
+                .map(|s| dynamic_gus::config::FsyncPolicy::parse(&s))
+                .transpose()
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let cli_checkpoint_every =
+                args.opt_str("checkpoint-every").map(|s| s.parse::<u64>()).transpose()?;
+            let t0 = std::time::Instant::now();
+            let rec = wal::recover_with(std::path::Path::new(&dir), threads, cli_fsync)?;
+            println!(
+                "recovered {} points from {dir}: {} from checkpoint, {} WAL records \
+                 replayed{} ({:.2}s)",
+                rec.gus.len(),
+                rec.snapshot_points,
+                rec.replayed,
+                if rec.torn_tail { ", torn tail truncated" } else { "" },
+                t0.elapsed().as_secs_f64()
+            );
+            // Compact: fold the replayed tail into a fresh checkpoint so
+            // the next recovery replays nothing.
+            let seq = rec.gus.checkpoint()?;
+            println!("compacted: checkpoint at seq {seq}, WAL truncated");
+            if let Some(addr) = args.opt_str("addr") {
+                let gus = Arc::new(rec.gus);
+                let every =
+                    cli_checkpoint_every.unwrap_or_else(|| gus.config().checkpoint_every);
+                let _checkpointer = (every > 0).then(|| {
+                    wal::Checkpointer::spawn(
+                        Arc::clone(&gus),
+                        every,
+                        std::time::Duration::from_millis(500),
+                    )
+                });
+                let handle = serve(Arc::clone(&gus), &addr, ServerConfig::default())?;
+                println!("[gus] serving on {}", handle.addr);
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+            Ok(())
+        }
+        "checkpoint" => {
+            let addr = args.get_str("addr", "127.0.0.1:7717");
+            let mut client = GusClient::connect(&addr)?;
+            let seq = client.checkpoint()?;
+            println!("ok checkpoint seq={seq}");
+            Ok(())
         }
         "query" => {
             let addr = args.get_str("addr", "127.0.0.1:7717");
@@ -388,8 +503,9 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: gus <serve|query|insert|delete|stats|gen|preprocess> [options]\n\
-                 see rust/src/main.rs docs for details"
+                "usage: gus <serve|recover|checkpoint|query|insert|delete|stats|gen|preprocess> \
+                 [options]\n\
+                 see rust/src/main.rs docs and docs/ARCHITECTURE.md for details"
             );
             Ok(())
         }

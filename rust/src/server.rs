@@ -19,14 +19,20 @@
 //! ← {"ok":true,"existed":[true,true,false]}
 //! → {"op":"query_batch","k":10,"points":[{...},{...}]}
 //! ← {"ok":true,"results":[[{"id":4,...},...],[...]]}
+//! → {"op":"checkpoint"}
+//! ← {"ok":true,"seq":1041}
 //! → {"op":"stats"}
 //! ← {"ok":true,"stats":{...}}
 //! ```
 //!
+//! The full wire contract (field types, error shapes, durability
+//! semantics) is specified in `docs/PROTOCOL.md`.
+//!
 //! The batch ops map to [`DynamicGus::insert_batch`] /
 //! [`DynamicGus::query_batch`], which parallelize across items on the
 //! serving workers — one RPC amortizes framing, locking and scheduling
-//! over the whole batch.
+//! over the whole batch. `checkpoint` maps to [`DynamicGus::checkpoint`]
+//! (durable services only — see [`crate::coordinator::wal`]).
 //!
 //! Connections are handled by a fixed worker pool with a bounded backlog —
 //! the backpressure strategy is "refuse new connections when saturated"
@@ -229,6 +235,13 @@ fn dispatch_inner(gus: &DynamicGus, line: &str) -> Result<Json> {
                 ("results", Json::Arr(results.iter().map(|r| neighbors_json(r)).collect())),
             ]))
         }
+        "checkpoint" => {
+            let seq = gus.checkpoint()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("seq", Json::u64(seq)),
+            ]))
+        }
         "stats" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("stats", gus.stats_json()),
@@ -367,6 +380,37 @@ mod tests {
             let resp = dispatch(&gus, bad);
             assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
         }
+    }
+
+    #[test]
+    fn dispatch_checkpoint() {
+        // Without a WAL, checkpoint is a structured error.
+        let (gus, ds) = boot();
+        let resp = dispatch(&gus, r#"{"op":"checkpoint"}"#);
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert!(resp.get("error").as_str().unwrap().contains("WAL"));
+
+        // With one, it reports the sequence number it covers.
+        let dir = std::env::temp_dir().join("gus-server-tests").join("checkpoint");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = GusConfig {
+            scorer: ScorerKind::Native,
+            fsync: crate::config::FsyncPolicy::Never,
+            ..GusConfig::default()
+        };
+        let gus =
+            DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points[..50], 2).unwrap();
+        crate::coordinator::wal::init_fresh(&gus, &dir).unwrap();
+        gus.insert(ds.points[60].clone()).unwrap();
+        gus.insert(ds.points[61].clone()).unwrap();
+        let resp = dispatch(&gus, r#"{"op":"checkpoint"}"#);
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("seq").as_u64(), Some(2));
+        // The stats RPC reports the durability state.
+        let resp = dispatch(&gus, r#"{"op":"stats"}"#);
+        let wal = resp.get("stats").get("wal");
+        assert_eq!(wal.get("seq").as_u64(), Some(2));
+        assert_eq!(wal.get("pending").as_u64(), Some(0));
     }
 
     #[test]

@@ -1,0 +1,534 @@
+//! Durability integration: crash-recovery equivalence.
+//!
+//! The contract under test (ISSUE 2's acceptance criterion): a service
+//! killed mid-ingest — simulated by dropping the process handle without a
+//! checkpoint — recovers from latest-checkpoint + WAL-replay and answers a
+//! fixed query workload **byte-identically** to a service that was never
+//! interrupted. Including when the final WAL record is torn.
+
+use std::path::{Path, PathBuf};
+
+use dynamic_gus::config::{FsyncPolicy, GusConfig, ScorerKind};
+use dynamic_gus::coordinator::{snapshot, wal, DynamicGus};
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::data::Dataset;
+use dynamic_gus::features::Point;
+use dynamic_gus::testing::proptest_cases;
+use dynamic_gus::util::rng::Rng;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("gus-wal-int").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn wal_cfg() -> GusConfig {
+    GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 10.0,
+        n_shards: 2,
+        // Process crashes (the scenario under test) lose nothing at any
+        // fsync policy; Never keeps the tests fast.
+        fsync: FsyncPolicy::Never,
+        ..GusConfig::default()
+    }
+}
+
+/// Assert two services answer a fixed workload identically: single
+/// queries, a batch query, corpus size and membership.
+fn assert_equivalent(recovered: &DynamicGus, reference: &DynamicGus, ds: &Dataset, tag: &str) {
+    assert_eq!(recovered.len(), reference.len(), "{tag}: corpus size");
+    for qi in (0..ds.points.len()).step_by(17) {
+        assert_eq!(
+            recovered.query(&ds.points[qi], 10).unwrap(),
+            reference.query(&ds.points[qi], 10).unwrap(),
+            "{tag}: query {qi} diverged"
+        );
+    }
+    let probes: Vec<Point> = ds.points.iter().step_by(29).cloned().collect();
+    assert_eq!(
+        recovered.query_batch(&probes, 10).unwrap(),
+        reference.query_batch(&probes, 10).unwrap(),
+        "{tag}: query_batch diverged"
+    );
+}
+
+/// The acceptance scenario: mixed mutations through every entry point
+/// (insert, delete, insert_batch, delete_batch, refresh_tables), then a
+/// simulated `kill -9` with everything still WAL-only.
+#[test]
+fn kill_mid_ingest_recovers_identically() {
+    let ds = SyntheticConfig::arxiv_like(400, 0x4a1).generate();
+    let dir = tmpdir("kill-mid-ingest");
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..250], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    let twin =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..250], 2).unwrap();
+
+    let mutate = |gus: &DynamicGus| {
+        for p in &ds.points[250..300] {
+            gus.insert(p.clone()).unwrap();
+        }
+        gus.insert_batch(ds.points[300..360].to_vec()).unwrap();
+        for p in &ds.points[360..370] {
+            gus.delete(p.id).unwrap();
+        }
+        let victims: Vec<u64> = ds.points[5..25].iter().map(|p| p.id).collect();
+        gus.delete_batch(&victims).unwrap();
+        gus.refresh_tables(2).unwrap();
+        // An update after the refresh: moves point 30 onto 31's features.
+        let mut moved = ds.points[31].clone();
+        moved.id = ds.points[30].id;
+        gus.insert(moved).unwrap();
+        gus.insert_batch(ds.points[360..400].to_vec()).unwrap();
+    };
+    mutate(&live);
+    mutate(&twin);
+
+    // `kill -9`: drop the handle — no checkpoint, no graceful shutdown.
+    // Everything past bootstrap exists only in the WAL.
+    let logged = live.wal_pending();
+    assert!(logged > 0);
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.snapshot_points, 250, "checkpoint 0 holds the bootstrap corpus");
+    assert!(rec.replayed > 0);
+    assert!(!rec.torn_tail);
+    assert!(!rec.gus.contains(ds.points[5].id), "batch-deleted point resurrected");
+    assert!(rec.gus.contains(ds.points[399].id), "WAL-only insert lost");
+    assert_equivalent(&rec.gus, &twin, &ds, "kill-mid-ingest");
+}
+
+/// A checkpoint mid-stream bounds replay to the post-checkpoint delta and
+/// empties the log.
+#[test]
+fn checkpoint_bounds_replay_to_delta() {
+    let ds = SyntheticConfig::arxiv_like(300, 0x4a2).generate();
+    let dir = tmpdir("checkpoint-delta");
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    let twin =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+
+    for p in &ds.points[200..280] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    let wal_before = std::fs::metadata(dir.join(wal::WAL_FILE)).unwrap().len();
+    assert!(wal_before > 0);
+    let seq = live.checkpoint().unwrap();
+    assert_eq!(seq, 80);
+    assert_eq!(live.wal_pending(), 0);
+    assert_eq!(
+        std::fs::metadata(dir.join(wal::WAL_FILE)).unwrap().len(),
+        0,
+        "checkpoint must truncate the WAL"
+    );
+    // Post-checkpoint delta: the only records replay has to process.
+    for p in &ds.points[280..300] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.snapshot_points, 280, "snapshot covers everything up to the checkpoint");
+    assert_eq!(rec.replayed, 20, "replay is O(delta), not O(corpus)");
+    assert_equivalent(&rec.gus, &twin, &ds, "checkpoint-delta");
+}
+
+/// Crash window between snapshot commit and WAL truncation: the snapshot's
+/// `last_seq` makes the still-full WAL harmless (stale records are
+/// skipped, not replayed on top of newer state).
+#[test]
+fn snapshot_commit_without_truncation_is_safe() {
+    let ds = SyntheticConfig::arxiv_like(260, 0x4a3).generate();
+    let dir = tmpdir("untruncated");
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    let twin =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+
+    for p in &ds.points[200..240] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    live.delete(ds.points[0].id).unwrap();
+    twin.delete(ds.points[0].id).unwrap();
+    // Re-insert point 0 with point 1's features, so a stale replay of the
+    // delete above would visibly corrupt state.
+    let mut back = ds.points[1].clone();
+    back.id = ds.points[0].id;
+    live.insert(back.clone()).unwrap();
+    twin.insert(back).unwrap();
+
+    // Simulate a checkpoint that crashed after committing the snapshot
+    // but before truncating the log.
+    snapshot::save_with_seq(&live, &dir, live.wal_seq()).unwrap();
+    assert!(std::fs::metadata(dir.join(wal::WAL_FILE)).unwrap().len() > 0);
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.replayed, 0, "records ≤ last_seq must be skipped");
+    assert!(rec.gus.contains(ds.points[0].id));
+    assert_equivalent(&rec.gus, &twin, &ds, "untruncated-wal");
+}
+
+/// A WAL whose final record is torn (crash mid-append) recovers the
+/// complete prefix; the torn record was never acknowledged, so the result
+/// equals a service that never saw that mutation. Recovery also truncates
+/// the tail so the log keeps working.
+#[test]
+fn torn_tail_recovers_acknowledged_prefix() {
+    let ds = SyntheticConfig::arxiv_like(300, 0x4a4).generate();
+    let dir = tmpdir("torn-tail");
+    let wal_path = dir.join(wal::WAL_FILE);
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+
+    // Apply 12 single-record mutations, recording the log length after
+    // each so we can cut precisely inside the final record.
+    let ops: Vec<Point> = ds.points[200..212].to_vec();
+    let mut offsets = Vec::new();
+    for p in &ops {
+        live.insert(p.clone()).unwrap();
+        offsets.push(std::fs::metadata(&wal_path).unwrap().len());
+    }
+    drop(live);
+
+    // Tear the last record: keep 11 complete records + 7 bytes of the 12th.
+    let cut = offsets[10] + 7;
+    assert!(cut < offsets[11]);
+    let f = std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap();
+    f.set_len(cut).unwrap();
+    drop(f);
+
+    let twin =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..200], 2).unwrap();
+    for p in &ops[..11] {
+        twin.insert(p.clone()).unwrap();
+    }
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert!(rec.torn_tail);
+    assert_eq!(rec.replayed, 11);
+    assert!(!rec.gus.contains(ops[11].id));
+    assert_eq!(
+        std::fs::metadata(&wal_path).unwrap().len(),
+        offsets[10],
+        "recovery must truncate the torn tail"
+    );
+    assert_equivalent(&rec.gus, &twin, &ds, "torn-tail");
+
+    // The recovered service keeps logging where the log left off: one more
+    // mutation, another crash, another recovery.
+    rec.gus.insert(ops[11].clone()).unwrap();
+    twin.insert(ops[11].clone()).unwrap();
+    drop(rec);
+    let rec2 = wal::recover(&dir, 2).unwrap();
+    assert!(!rec2.torn_tail);
+    assert_eq!(rec2.replayed, 12);
+    assert_equivalent(&rec2.gus, &twin, &ds, "torn-tail-continued");
+}
+
+/// WAL-only recovery (no usable checkpoint): `wal_meta.json` boots an
+/// empty service and the log replays the entire history.
+#[test]
+fn recovers_from_wal_alone_when_checkpoint_is_lost() {
+    let ds = SyntheticConfig::arxiv_like(150, 0x4a5).generate();
+    let dir = tmpdir("wal-only");
+    let live = DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &[], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    let twin = DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &[], 2).unwrap();
+    for p in &ds.points[..120] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    live.delete_batch(&[ds.points[3].id, ds.points[4].id]).unwrap();
+    twin.delete_batch(&[ds.points[3].id, ds.points[4].id]).unwrap();
+    drop(live);
+
+    // Lose the checkpoint (e.g. a corrupted volume restore kept only the
+    // log): snapshot.json + its corpus file are gone.
+    std::fs::remove_file(dir.join(snapshot::SNAPSHOT_META)).unwrap();
+    for e in std::fs::read_dir(&dir).unwrap().flatten() {
+        if e.file_name().to_string_lossy().starts_with("points-") {
+            std::fs::remove_file(e.path()).unwrap();
+        }
+    }
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.snapshot_points, 0);
+    assert_eq!(rec.replayed, 121, "120 inserts + 1 delete_batch record");
+    assert_eq!(rec.gus.len(), 118);
+    assert_equivalent(&rec.gus, &twin, &ds, "wal-only");
+}
+
+/// Lost-checkpoint recovery must *refuse* when the WAL alone cannot
+/// reconstruct the acknowledged state — never silently serve a partial
+/// corpus.
+#[test]
+fn lost_checkpoint_with_unreconstructible_history_is_refused() {
+    // Case A: non-empty bootstrap corpus. The WAL never contained those
+    // points, so with the checkpoint gone they are unrecoverable.
+    let ds = SyntheticConfig::arxiv_like(120, 0x4a8).generate();
+    let dir = tmpdir("lost-nonempty");
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..50], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    live.insert(ds.points[60].clone()).unwrap();
+    drop(live);
+    std::fs::remove_file(dir.join(snapshot::SNAPSHOT_META)).unwrap();
+    let err = wal::recover(&dir, 2).unwrap_err();
+    assert!(format!("{err}").contains("cannot reconstruct"), "{err}");
+
+    // Case B: empty bootstrap, but a checkpoint truncated the log before
+    // being lost — the WAL's first surviving record exposes the gap.
+    let dir = tmpdir("lost-truncated");
+    let live = DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &[], 2).unwrap();
+    wal::init_fresh(&live, &dir).unwrap();
+    for p in &ds.points[..10] {
+        live.insert(p.clone()).unwrap();
+    }
+    live.checkpoint().unwrap();
+    for p in &ds.points[10..15] {
+        live.insert(p.clone()).unwrap();
+    }
+    drop(live);
+    std::fs::remove_file(dir.join(snapshot::SNAPSHOT_META)).unwrap();
+    for e in std::fs::read_dir(&dir).unwrap().flatten() {
+        if e.file_name().to_string_lossy().starts_with("points-") {
+            std::fs::remove_file(e.path()).unwrap();
+        }
+    }
+    let err = wal::recover(&dir, 2).unwrap_err();
+    assert!(format!("{err}").contains("missing"), "{err}");
+}
+
+/// The background checkpointer folds the WAL into snapshots once
+/// `checkpoint_every` mutations accumulate.
+#[test]
+fn background_checkpointer_compacts() {
+    use std::sync::Arc;
+    use std::time::Duration;
+    let ds = SyntheticConfig::arxiv_like(200, 0x4a6).generate();
+    let dir = tmpdir("checkpointer");
+    let gus = Arc::new(
+        DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..100], 2).unwrap(),
+    );
+    wal::init_fresh(&gus, &dir).unwrap();
+    let ckpt = wal::Checkpointer::spawn(Arc::clone(&gus), 10, Duration::from_millis(10));
+    for p in &ds.points[100..150] {
+        gus.insert(p.clone()).unwrap();
+    }
+    // Wait (bounded) for the trigger to fire at least once.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while gus.wal_pending() >= 10 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    ckpt.stop();
+    assert!(gus.wal_pending() < 10, "checkpointer never fired");
+    // The checkpoint it wrote is a valid restore point.
+    let (restored, last_seq) = snapshot::restore_with_seq(&dir, 2).unwrap();
+    assert!(last_seq > 0);
+    assert!(restored.len() >= 100);
+}
+
+/// `init_fresh` refuses a directory that already holds state (that state
+/// must be recovered, not silently overwritten).
+#[test]
+fn init_fresh_refuses_existing_state() {
+    let ds = SyntheticConfig::arxiv_like(60, 0x4a7).generate();
+    let dir = tmpdir("refuse");
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points, 2).unwrap();
+    wal::init_fresh(&gus, &dir).unwrap();
+    let gus2 = DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points, 2).unwrap();
+    let err = wal::init_fresh(&gus2, &dir).unwrap_err();
+    assert!(format!("{err}").contains("recover"), "{err}");
+    assert!(wal::recover(&dir, 2).is_ok());
+}
+
+/// Property: for a random mutation stream crashed at a random point —
+/// possibly mid-record — recovery answers `query`/`query_batch`
+/// byte-identically to an uninterrupted service that executed exactly the
+/// acknowledged prefix. Covers all four mutation entry points, updates,
+/// table refreshes and random checkpoint placement.
+#[test]
+fn prop_crash_recovery_equals_uninterrupted() {
+    #[derive(Clone)]
+    enum MutOp {
+        Insert(Point),
+        Delete(u64),
+        InsertBatch(Vec<Point>),
+        DeleteBatch(Vec<u64>),
+        Refresh,
+        Checkpoint,
+    }
+
+    fn apply(gus: &DynamicGus, op: &MutOp, durable: bool) {
+        match op {
+            MutOp::Insert(p) => {
+                gus.insert(p.clone()).unwrap();
+            }
+            MutOp::Delete(id) => {
+                gus.delete(*id).unwrap();
+            }
+            MutOp::InsertBatch(ps) => {
+                gus.insert_batch(ps.clone()).unwrap();
+            }
+            MutOp::DeleteBatch(ids) => {
+                gus.delete_batch(ids).unwrap();
+            }
+            MutOp::Refresh => gus.refresh_tables(2).unwrap(),
+            MutOp::Checkpoint => {
+                // Only meaningful (and only possible) on the durable side.
+                if durable {
+                    gus.checkpoint().unwrap();
+                }
+            }
+        }
+    }
+
+    proptest_cases(6, |rng: &mut Rng| {
+        let tag = rng.next_u64();
+        let ds = SyntheticConfig::arxiv_like(120, tag ^ 0x9e37).generate();
+        let dir = tmpdir(&format!("prop-{tag:016x}"));
+        let wal_path = dir.join(wal::WAL_FILE);
+
+        // Generate the op stream up front (it is data, so the surviving
+        // prefix can be re-executed on a fresh twin).
+        let mut next_id = 500_000u64;
+        let mut live_ids: Vec<u64> = ds.points[..80].iter().map(|p| p.id).collect();
+        let n_ops = 15 + rng.below_usize(20);
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let roll = rng.f64();
+            let op = if roll < 0.40 {
+                // Insert a fresh point or update an existing one.
+                let mut p = rng.choose(&ds.points).clone();
+                if rng.chance(0.3) && !live_ids.is_empty() {
+                    p.id = *rng.choose(&live_ids);
+                } else {
+                    next_id += 1;
+                    p.id = next_id;
+                    live_ids.push(p.id);
+                }
+                MutOp::Insert(p)
+            } else if roll < 0.55 {
+                let n = 2 + rng.below_usize(4);
+                let mut ps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut p = rng.choose(&ds.points).clone();
+                    next_id += 1;
+                    p.id = next_id;
+                    live_ids.push(p.id);
+                    ps.push(p);
+                }
+                MutOp::InsertBatch(ps)
+            } else if roll < 0.70 {
+                // Sometimes a no-op delete of an unknown id.
+                let id = if rng.chance(0.8) && !live_ids.is_empty() {
+                    *rng.choose(&live_ids)
+                } else {
+                    999_999_999
+                };
+                MutOp::Delete(id)
+            } else if roll < 0.82 {
+                let n = 1 + rng.below_usize(4);
+                let ids = (0..n)
+                    .map(|_| {
+                        if live_ids.is_empty() {
+                            999_999_998
+                        } else {
+                            *rng.choose(&live_ids)
+                        }
+                    })
+                    .collect();
+                MutOp::DeleteBatch(ids)
+            } else if roll < 0.90 {
+                MutOp::Refresh
+            } else {
+                MutOp::Checkpoint
+            };
+            ops.push(op);
+        }
+
+        // Durable service: bootstrap + WAL, run the whole stream,
+        // recording the log length after every op.
+        let live =
+            DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..80], 2).unwrap();
+        wal::init_fresh(&live, &dir).unwrap();
+        let mut offsets = Vec::with_capacity(ops.len());
+        for op in &ops {
+            apply(&live, op, true);
+            offsets.push(std::fs::metadata(&wal_path).unwrap().len());
+        }
+        drop(live); // crash: no final checkpoint
+
+        // Crash point: after op `cut` — and, half the time, with a torn
+        // fragment of op `cut`'s record left behind. The snapshot on disk
+        // covers everything up to the *last* Checkpoint op (which also
+        // truncated the log, resetting offsets), so the earliest valid
+        // cut keeps that checkpoint inside the surviving prefix; later
+        // ops each appended exactly one record, making per-op offsets an
+        // exact map from cut position to file length.
+        let lo = ops
+            .iter()
+            .rposition(|o| matches!(o, MutOp::Checkpoint))
+            .map(|k| k + 1)
+            .unwrap_or(0);
+        let mut cut = ops.len();
+        if rng.chance(0.5) && lo < ops.len() {
+            cut = lo + rng.below_usize(ops.len() - lo);
+            let base = if cut == 0 { 0 } else { offsets[cut - 1] };
+            let next = offsets[cut];
+            assert!(next > base, "op {cut} appended no record?");
+            // Leave 1..(record_len) bytes of the next record: a torn tail.
+            let torn = base + 1 + rng.below(next - base - 1);
+            let f = std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap();
+            f.set_len(torn).unwrap();
+            drop(f);
+        }
+
+        // Uninterrupted twin: executes exactly the surviving prefix.
+        let twin =
+            DynamicGus::bootstrap(ds.schema.clone(), wal_cfg(), &ds.points[..80], 2).unwrap();
+        for op in &ops[..cut] {
+            apply(&twin, op, false);
+        }
+
+        let rec = wal::recover(&dir, 2).unwrap();
+        assert_eq!(rec.gus.len(), twin.len(), "corpus size diverged (cut={cut})");
+        for qi in (0..ds.points.len()).step_by(13) {
+            assert_eq!(
+                rec.gus.query(&ds.points[qi], 8).unwrap(),
+                twin.query(&ds.points[qi], 8).unwrap(),
+                "query {qi} diverged (cut={cut}/{})",
+                ops.len()
+            );
+        }
+        let probes: Vec<Point> = ds.points.iter().step_by(23).cloned().collect();
+        assert_eq!(
+            rec.gus.query_batch(&probes, 8).unwrap(),
+            twin.query_batch(&probes, 8).unwrap(),
+            "query_batch diverged (cut={cut})"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// Restores must fail loudly, not silently serve partial state, when the
+/// directory has nothing to recover.
+#[test]
+fn recover_empty_dir_errors() {
+    let dir = tmpdir("empty");
+    let err = wal::recover(&dir, 1).unwrap_err();
+    assert!(format!("{err}").contains("nothing to recover"), "{err}");
+    assert!(wal::recover(Path::new("/nonexistent/gus-wal"), 1).is_err());
+}

@@ -1,0 +1,113 @@
+//! RPC transport throughput/latency: serial vs pipelined vs multi-conn.
+//!
+//! This is the measurement behind the protocol-v1 redesign: a real
+//! server and real sockets, comparing three ways to push the same
+//! `query_id` workload through the RPC layer:
+//!
+//! - `serial/1conn` — the pre-envelope model: one connection, one
+//!   request in flight (submit → wait → submit …);
+//! - `pipelined/1conn/depth=D` — one connection, D requests in flight
+//!   (the envelope's multiplexing win), D ∈ {1, 8, 64};
+//! - `parallel/{N}conn` — N connections, each serial (the old way to
+//!   get concurrency: more sockets).
+//!
+//! All rows report **per-request** stats (pipelined rows divide by the
+//! depth), so the multiplexing win over the serial baseline is measured,
+//! not asserted. `depth=1` should track `serial/1conn`; `depth=64` on a
+//! multi-core box should approach `parallel/Nconn` with one socket.
+
+use std::sync::Arc;
+
+use dynamic_gus::bench::{fmt_ns, Bencher};
+use dynamic_gus::client::GusClient;
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::protocol::Request;
+use dynamic_gus::server::{serve, ServerConfig};
+
+fn main() {
+    let n = 5_000usize;
+    let k = 10usize;
+    let ds = SyntheticConfig::arxiv_like(n, 0x9c9).generate();
+    let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+    let gus =
+        Arc::new(DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 4).unwrap());
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = handle.addr.to_string();
+    let ids: Vec<u64> = ds.points.iter().map(|p| p.id).collect();
+
+    let mut b = Bencher::new();
+
+    // Serial baseline: one request in flight at a time.
+    {
+        let mut client = GusClient::connect(&addr).unwrap();
+        let mut i = 0usize;
+        b.bench("rpc/serial/1conn", || {
+            i = (i + 7919) % ids.len();
+            client.query_id(ids[i], k).unwrap()
+        });
+    }
+
+    // Pipelined: one connection, `depth` requests in flight per batch.
+    for &depth in &[1usize, 8, 64] {
+        let mut client = GusClient::connect(&addr).unwrap();
+        let mut i = 0usize;
+        b.bench_batch(&format!("rpc/pipelined/1conn/depth={depth}"), depth, || {
+            let reqs: Vec<u64> = (0..depth)
+                .map(|_| {
+                    i = (i + 7919) % ids.len();
+                    client.submit(Request::QueryId { id: ids[i], k: Some(k) }).unwrap()
+                })
+                .collect();
+            let mut total = 0usize;
+            for rid in reqs {
+                total += client.wait_neighbors(rid).unwrap().len();
+            }
+            total
+        });
+    }
+
+    // N serial connections in parallel (custom measurement: the Bencher
+    // times one closure, but this row needs concurrent wall-clock).
+    for &conns in &[4usize, 8] {
+        let per_conn = 400usize;
+        let t0 = std::time::Instant::now();
+        let mut samples: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..conns)
+                .map(|t| {
+                    let addr = addr.clone();
+                    let ids = &ids;
+                    s.spawn(move || {
+                        let mut client = GusClient::connect(&addr).unwrap();
+                        let mut local = Vec::with_capacity(per_conn);
+                        for j in 0..per_conn {
+                            let id = ids[(t * 37 + j * 7919) % ids.len()];
+                            let q0 = std::time::Instant::now();
+                            client.query_id(id, k).unwrap();
+                            local.push(q0.elapsed().as_nanos() as f64);
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+        let total = conns * per_conn;
+        println!(
+            "{:<58} {:>10}/req   (p50 {:>10}, p99 {:>10}, {:.0} req/s over {} conns)",
+            format!("rpc/parallel/{conns}conn"),
+            fmt_ns(samples.iter().sum::<f64>() / samples.len() as f64),
+            fmt_ns(pct(0.50)),
+            fmt_ns(pct(0.99)),
+            total as f64 / wall.as_secs_f64(),
+            conns
+        );
+    }
+
+    b.dump_json("rpc_pipeline");
+    handle.shutdown();
+}

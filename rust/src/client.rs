@@ -1,8 +1,45 @@
-//! Blocking TCP client for the Dynamic GUS RPC protocol.
+//! Pipelined TCP client for the Dynamic GUS RPC protocol.
 //!
-//! One connection, pipelined line-at-a-time; see [`crate::server`] for the
-//! wire format.
+//! Speaks protocol **v1** ([`crate::protocol`]): every request goes out
+//! in an envelope with a client-assigned correlation id, so many
+//! requests can be in flight on one connection and responses may return
+//! out of order — one socket keeps every server core busy.
+//!
+//! Two API layers:
+//!
+//! - **Pipelined**: [`GusClient::submit`] writes a request and returns
+//!   its id immediately; [`GusClient::wait`] blocks until *that* id's
+//!   response arrives (responses for other ids are parked, not lost).
+//!   Typed variants ([`GusClient::wait_existed`],
+//!   [`GusClient::wait_neighbors`], …) decode the payload.
+//! - **Blocking one-shots** ([`GusClient::query`],
+//!   [`GusClient::insert`], …): submit + wait in one call — the
+//!   pre-envelope API, now wrappers over the pipelined core.
+//!
+//! ```no_run
+//! use dynamic_gus::client::GusClient;
+//! use dynamic_gus::protocol::Request;
+//! # use dynamic_gus::features::Point;
+//! # fn points() -> Vec<Point> { vec![] }
+//! let mut c = GusClient::connect("127.0.0.1:7717").unwrap();
+//! c.set_deadline_ms(Some(50)); // per-request deadline for what follows
+//! // Fill the pipe…
+//! let ids: Vec<u64> = points()
+//!     .iter()
+//!     .map(|p| c.submit(Request::Query { point: p.clone(), k: Some(10) }).unwrap())
+//!     .collect();
+//! // …then drain it (any order works; responses are matched by id).
+//! for id in ids {
+//!     let neighbors = c.wait_neighbors(id).unwrap();
+//!     println!("{} neighbors", neighbors.len());
+//! }
+//! ```
+//!
+//! Mutations submitted on one connection are applied by the server in
+//! submission order; queries may overtake mutations. See
+//! `docs/PROTOCOL.md` for the ordering and error-code contract.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
@@ -10,12 +47,19 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::ScoredNeighbor;
 use crate::features::Point;
+use crate::protocol::{self, wire, Request, Response};
 use crate::util::json::Json;
 
 /// A connected client.
 pub struct GusClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Next correlation id (monotonically increasing per connection).
+    next_id: u64,
+    /// Responses that arrived while waiting for a different id.
+    parked: HashMap<u64, Response>,
+    /// Deadline attached to subsequently submitted requests.
+    deadline_ms: Option<u64>,
 }
 
 impl GusClient {
@@ -25,33 +69,145 @@ impl GusClient {
         Ok(GusClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            next_id: 1,
+            parked: HashMap::new(),
+            deadline_ms: None,
         })
     }
 
-    fn call(&mut self, req: &Json) -> Result<Json> {
-        self.writer.write_all(req.dump().as_bytes())?;
+    /// Set the relative deadline (milliseconds from server receipt)
+    /// attached to every subsequently submitted request; `None` disables.
+    /// Expired requests are answered `DEADLINE_EXCEEDED` without
+    /// executing.
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
+    }
+
+    // ---------- pipelined core ----------
+
+    /// Write one enveloped request and return its correlation id without
+    /// reading anything back. Pair with [`GusClient::wait`].
+    pub fn submit(&mut self, request: Request) -> Result<u64> {
+        self.submit_op(request.to_wire())
+    }
+
+    /// Envelope + write an already-encoded op object. The one-shot
+    /// wrappers go through here with the borrowing `protocol::wire`
+    /// encoders, so they never deep-clone their inputs just to build a
+    /// [`Request`] that is immediately serialized.
+    fn submit_op(&mut self, op: Json) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let env = protocol::envelope_to_wire(id, self.deadline_ms, op);
+        self.writer.write_all(env.dump().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            bail!("server closed connection (backpressure refusal?)");
-        }
-        let resp = Json::parse(line.trim())
-            .map_err(|e| anyhow!("bad response: {e}: {line}"))?;
-        if resp.get("ok").as_bool() != Some(true) {
-            bail!(
-                "rpc error: {}",
-                resp.get("error").as_str().unwrap_or("<unknown>")
-            );
-        }
-        Ok(resp)
+        Ok(id)
     }
+
+    /// Block until the response for `id` arrives; responses for other
+    /// in-flight ids encountered along the way are parked for their own
+    /// `wait` calls. An error *response* becomes an `Err` carrying the
+    /// server's code and message.
+    pub fn wait(&mut self, id: u64) -> Result<Response> {
+        if let Some(resp) = self.parked.remove(&id) {
+            return Self::into_result(resp);
+        }
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                bail!("server closed connection (backpressure refusal?)");
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(trimmed)
+                .map_err(|e| anyhow!("bad response: {e}: {line}"))?;
+            let (rid, resp) = Response::from_wire(&parsed)
+                .map_err(|e| anyhow!("bad response: {e}: {line}"))?;
+            match rid {
+                Some(rid) if rid == id => return Self::into_result(resp),
+                Some(rid) => {
+                    self.parked.insert(rid, resp);
+                }
+                None => {
+                    // Connection-level response (e.g. an admission-control
+                    // refusal before the server read our request).
+                    return Self::into_result(resp);
+                }
+            }
+        }
+    }
+
+    fn into_result(resp: Response) -> Result<Response> {
+        match resp {
+            Response::Error { code, message } => bail!("rpc error [{code}]: {message}"),
+            other => Ok(other),
+        }
+    }
+
+    // ---------- typed waits (pipelined decoding) ----------
+
+    /// Wait for an `insert`/`delete` ack.
+    pub fn wait_existed(&mut self, id: u64) -> Result<bool> {
+        match self.wait(id)? {
+            Response::Existed { existed } => Ok(existed),
+            other => bail!("unexpected response {other:?} (wanted 'existed')"),
+        }
+    }
+
+    /// Wait for a batch-mutation ack, checking the per-item count.
+    pub fn wait_existed_batch(&mut self, id: u64, expected_len: usize) -> Result<Vec<bool>> {
+        match self.wait(id)? {
+            Response::ExistedBatch { existed } => {
+                if existed.len() != expected_len {
+                    bail!("existed length {} != batch length {expected_len}", existed.len());
+                }
+                Ok(existed)
+            }
+            other => bail!("unexpected response {other:?} (wanted batch 'existed')"),
+        }
+    }
+
+    /// Wait for a `query`/`query_id` neighborhood.
+    pub fn wait_neighbors(&mut self, id: u64) -> Result<Vec<ScoredNeighbor>> {
+        match self.wait(id)? {
+            Response::Neighbors { neighbors } => Ok(neighbors),
+            other => bail!("unexpected response {other:?} (wanted 'neighbors')"),
+        }
+    }
+
+    /// Wait for a `query_batch` result set, checking the per-item count.
+    pub fn wait_results(
+        &mut self,
+        id: u64,
+        expected_len: usize,
+    ) -> Result<Vec<Vec<ScoredNeighbor>>> {
+        match self.wait(id)? {
+            Response::Results { results } => {
+                if results.len() != expected_len {
+                    bail!("results length {} != batch length {expected_len}", results.len());
+                }
+                Ok(results)
+            }
+            other => bail!("unexpected response {other:?} (wanted 'results')"),
+        }
+    }
+
+    // ---------- blocking one-shots (wrappers) ----------
 
     /// Insert or update a point; returns true if it existed.
     pub fn insert(&mut self, p: &Point) -> Result<bool> {
-        let req = Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())]);
-        Ok(self.call(&req)?.get("existed").as_bool().unwrap_or(false))
+        let id = self.submit_op(wire::insert(p))?;
+        self.wait_existed(id)
+    }
+
+    /// Delete a point; returns true if it existed.
+    pub fn delete(&mut self, id: u64) -> Result<bool> {
+        let rid = self.submit_op(wire::delete(id))?;
+        self.wait_existed(rid)
     }
 
     /// Insert or update a batch of points in one RPC; returns, per input
@@ -59,121 +215,55 @@ impl GusClient {
     /// through the parallel mutation path (one shard-lock acquisition per
     /// shard), so this is the high-throughput ingestion call.
     pub fn insert_batch(&mut self, points: &[Point]) -> Result<Vec<bool>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("insert_batch")),
-            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
-        ]);
-        let resp = self.call(&req)?;
-        Self::parse_existed(&resp, points.len())
+        let id = self.submit_op(wire::insert_batch(points))?;
+        self.wait_existed_batch(id, points.len())
     }
 
     /// Delete a batch of points in one RPC; returns, per input position,
     /// whether the point was present.
     pub fn delete_batch(&mut self, ids: &[u64]) -> Result<Vec<bool>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("delete_batch")),
-            ("ids", Json::u64_arr(ids)),
-        ]);
-        let resp = self.call(&req)?;
-        Self::parse_existed(&resp, ids.len())
+        let id = self.submit_op(wire::delete_batch(ids))?;
+        self.wait_existed_batch(id, ids.len())
     }
 
-    /// Decode a batch response's `existed` array, checking its length
-    /// against the request batch.
-    fn parse_existed(resp: &Json, expected_len: usize) -> Result<Vec<bool>> {
-        let arr = resp
-            .get("existed")
-            .as_arr()
-            .ok_or_else(|| anyhow!("missing 'existed'"))?;
-        if arr.len() != expected_len {
-            bail!("existed length {} != batch length {expected_len}", arr.len());
-        }
-        arr.iter()
-            .map(|j| j.as_bool().ok_or_else(|| anyhow!("bad 'existed' entry")))
-            .collect()
+    /// Neighborhood of a (new or known) point.
+    pub fn query(&mut self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let id = self.submit_op(wire::query(p, Some(k)))?;
+        self.wait_neighbors(id)
+    }
+
+    /// Neighborhood of a known point by id.
+    pub fn query_id(&mut self, id: u64, k: usize) -> Result<Vec<ScoredNeighbor>> {
+        let rid = self.submit_op(wire::query_id(id, Some(k)))?;
+        self.wait_neighbors(rid)
     }
 
     /// Neighborhoods of a batch of points in one RPC; result `i`
     /// corresponds to `points[i]` and matches what [`GusClient::query`]
     /// would return for it.
     pub fn query_batch(&mut self, points: &[Point], k: usize) -> Result<Vec<Vec<ScoredNeighbor>>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("query_batch")),
-            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
-            ("k", Json::num(k as f64)),
-        ]);
-        let resp = self.call(&req)?;
-        let results = resp
-            .get("results")
-            .as_arr()
-            .ok_or_else(|| anyhow!("missing 'results'"))?;
-        if results.len() != points.len() {
-            bail!("results length {} != batch length {}", results.len(), points.len());
-        }
-        results.iter().map(Self::parse_neighbor_list).collect()
-    }
-
-    /// Delete a point; returns true if it existed.
-    pub fn delete(&mut self, id: u64) -> Result<bool> {
-        let req = Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))]);
-        Ok(self.call(&req)?.get("existed").as_bool().unwrap_or(false))
-    }
-
-    /// Neighborhood of a (new or known) point.
-    pub fn query(&mut self, p: &Point, k: usize) -> Result<Vec<ScoredNeighbor>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("query")),
-            ("point", p.to_json()),
-            ("k", Json::num(k as f64)),
-        ]);
-        Self::parse_neighbors(&self.call(&req)?)
-    }
-
-    /// Neighborhood of a known point by id.
-    pub fn query_id(&mut self, id: u64, k: usize) -> Result<Vec<ScoredNeighbor>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("query_id")),
-            ("id", Json::u64(id)),
-            ("k", Json::num(k as f64)),
-        ]);
-        Self::parse_neighbors(&self.call(&req)?)
+        let id = self.submit_op(wire::query_batch(points, Some(k)))?;
+        self.wait_results(id, points.len())
     }
 
     /// Service stats.
     pub fn stats(&mut self) -> Result<Json> {
-        let req = Json::obj(vec![("op", Json::str("stats"))]);
-        Ok(self.call(&req)?.get("stats").clone())
+        let id = self.submit(Request::Stats)?;
+        match self.wait(id)? {
+            Response::Stats { stats } => Ok(stats),
+            other => bail!("unexpected response {other:?} (wanted 'stats')"),
+        }
     }
 
     /// Force an incremental checkpoint on a durable server (snapshot +
     /// WAL truncation); returns the WAL sequence number it covers.
     /// Errors if the server runs without `--wal-dir`.
     pub fn checkpoint(&mut self) -> Result<u64> {
-        let req = Json::obj(vec![("op", Json::str("checkpoint"))]);
-        self.call(&req)?
-            .get("seq")
-            .as_u64()
-            .ok_or_else(|| anyhow!("checkpoint response missing 'seq'"))
-    }
-
-    fn parse_neighbors(resp: &Json) -> Result<Vec<ScoredNeighbor>> {
-        Self::parse_neighbor_list(resp.get("neighbors"))
-    }
-
-    /// Decode one JSON neighbor array (shared by the single and batch
-    /// query paths).
-    fn parse_neighbor_list(arr: &Json) -> Result<Vec<ScoredNeighbor>> {
-        arr.as_arr()
-            .ok_or_else(|| anyhow!("missing neighbors"))?
-            .iter()
-            .map(|n| {
-                Ok(ScoredNeighbor {
-                    id: n.get("id").as_u64().ok_or_else(|| anyhow!("bad id"))?,
-                    score: n.get("score").as_f32().unwrap_or(0.0),
-                    dot: n.get("dot").as_f32().unwrap_or(0.0),
-                })
-            })
-            .collect()
+        let id = self.submit(Request::Checkpoint)?;
+        match self.wait(id)? {
+            Response::Checkpoint { seq } => Ok(seq),
+            other => bail!("unexpected response {other:?} (wanted 'seq')"),
+        }
     }
 }
 

@@ -124,6 +124,19 @@ pub struct GusConfig {
     /// the restart replay cost. 0 disables automatic checkpoints (manual
     /// `checkpoint` RPC / CLI only). Irrelevant while `wal_dir` is unset.
     pub checkpoint_every: u64,
+    /// RPC server: connections admitted concurrently; excess connections
+    /// get a final `OVERLOADED` response and are closed (clients retry).
+    pub max_connections: usize,
+    /// RPC server: worker threads executing enveloped (v1) requests.
+    /// 0 = auto (available cores). A few pipelined connections can keep
+    /// all workers busy; legacy requests run on their connection's
+    /// reader thread and are unaffected.
+    pub rpc_workers: usize,
+    /// RPC server: bounded run-queue capacity. When the queue is full,
+    /// requests are shed immediately with `OVERLOADED` instead of
+    /// building unbounded backlog — admission control at the API
+    /// boundary keeps admitted requests' tail latency flat.
+    pub rpc_queue: usize,
 }
 
 impl Default for GusConfig {
@@ -141,6 +154,9 @@ impl Default for GusConfig {
             wal_dir: None,
             fsync: FsyncPolicy::Always,
             checkpoint_every: 10_000,
+            max_connections: 64,
+            rpc_workers: 0,
+            rpc_queue: 256,
         }
     }
 }
@@ -166,6 +182,9 @@ impl GusConfig {
             self.fsync = FsyncPolicy::parse(&s)?;
         }
         self.checkpoint_every = args.get_u64("checkpoint-every", self.checkpoint_every);
+        self.max_connections = args.get_usize("max-connections", self.max_connections);
+        self.rpc_workers = args.get_usize("rpc-workers", self.rpc_workers);
+        self.rpc_queue = args.get_usize("rpc-queue", self.rpc_queue);
         self.validate()?;
         Ok(self)
     }
@@ -182,6 +201,12 @@ impl GusConfig {
         }
         if self.batch_size == 0 {
             return Err("batch-size must be >= 1".into());
+        }
+        if self.max_connections == 0 {
+            return Err("max-connections must be >= 1".into());
+        }
+        if self.rpc_queue == 0 {
+            return Err("rpc-queue must be >= 1".into());
         }
         Ok(())
     }
@@ -223,6 +248,9 @@ impl GusConfig {
             ),
             ("fsync", Json::str(self.fsync.to_str())),
             ("checkpoint_every", Json::u64(self.checkpoint_every)),
+            ("max_connections", Json::num(self.max_connections as f64)),
+            ("rpc_workers", Json::num(self.rpc_workers as f64)),
+            ("rpc_queue", Json::num(self.rpc_queue as f64)),
         ])
     }
 
@@ -247,6 +275,9 @@ impl GusConfig {
                 None => d.fsync,
             },
             checkpoint_every: j.get("checkpoint_every").as_u64().unwrap_or(d.checkpoint_every),
+            max_connections: j.get("max_connections").as_usize().unwrap_or(d.max_connections),
+            rpc_workers: j.get("rpc_workers").as_usize().unwrap_or(d.rpc_workers),
+            rpc_queue: j.get("rpc_queue").as_usize().unwrap_or(d.rpc_queue),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -355,6 +386,34 @@ mod tests {
         assert_eq!(d.checkpoint_every, 10_000);
         let args = Args::parse_from(["--fsync=bogus".to_string()]).unwrap();
         assert!(GusConfig::default().apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn rpc_knobs_cli_and_json() {
+        let args = Args::parse_from(
+            ["--max-connections=128", "--rpc-workers=8", "--rpc-queue=512"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.max_connections, 128);
+        assert_eq!(cfg.rpc_workers, 8);
+        assert_eq!(cfg.rpc_queue, 512);
+        let back = GusConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.max_connections, 128);
+        assert_eq!(back.rpc_workers, 8);
+        assert_eq!(back.rpc_queue, 512);
+        // Old configs (no rpc fields) fall back to defaults.
+        let old = GusConfig::from_json(&Json::parse(r#"{"scann_nn":7}"#).unwrap()).unwrap();
+        assert_eq!(old.max_connections, 64);
+        assert_eq!(old.rpc_workers, 0);
+        assert_eq!(old.rpc_queue, 256);
+        // Degenerate values are rejected.
+        for bad in ["--max-connections=0", "--rpc-queue=0"] {
+            let args = Args::parse_from([bad.to_string()]).unwrap();
+            assert!(GusConfig::default().apply_args(&args).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -272,53 +272,44 @@ impl DynamicGus {
     /// live logging (a batch record counts its items), so recovery can
     /// seed the pending-checkpoint counter consistently. Callers
     /// guarantee the WAL is not yet attached.
+    ///
+    /// Payloads decode through the typed protocol module — the same
+    /// [`crate::protocol::Request::from_wire`] path the server speaks —
+    /// so the wire format and the log format cannot drift apart.
     pub(crate) fn apply_logged(
         &self,
         payload: &crate::util::json::Json,
         threads: usize,
     ) -> Result<u64> {
-        match payload.get("op").as_str() {
-            Some("insert") => {
-                let p = Point::from_json(payload.get("point"))
-                    .ok_or_else(|| anyhow!("WAL insert record missing point"))?;
-                self.apply_insert(p)?;
+        use crate::protocol::Request;
+        let req = Request::from_wire(payload).map_err(|e| anyhow!("WAL record: {e}"))?;
+        match req {
+            Request::Insert { point } => {
+                self.apply_insert(point)?;
                 Ok(1)
             }
-            Some("delete") => {
-                let id = payload
-                    .get("id")
-                    .as_u64()
-                    .ok_or_else(|| anyhow!("WAL delete record missing id"))?;
+            Request::Delete { id } => {
                 self.apply_delete(id);
                 Ok(1)
             }
-            Some("insert_batch") => {
-                let points = payload
-                    .get("points")
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("WAL insert_batch record missing points"))?;
-                for j in points {
-                    let p = Point::from_json(j)
-                        .ok_or_else(|| anyhow!("WAL insert_batch record: bad point"))?;
+            Request::InsertBatch { points } => {
+                let n = points.len() as u64;
+                for p in points {
                     self.apply_insert(p)?;
                 }
-                Ok(points.len() as u64)
+                Ok(n)
             }
-            Some("delete_batch") => {
-                let ids = payload
-                    .get("ids")
-                    .to_u64_vec()
-                    .ok_or_else(|| anyhow!("WAL delete_batch record missing ids"))?;
+            Request::DeleteBatch { ids } => {
                 for &id in &ids {
                     self.apply_delete(id);
                 }
                 Ok(ids.len() as u64)
             }
-            Some("refresh_tables") => {
+            Request::RefreshTables => {
                 self.refresh_tables(threads)?;
                 Ok(1)
             }
-            other => anyhow::bail!("unknown WAL op {other:?}"),
+            other => anyhow::bail!("non-mutation op '{}' in WAL", other.op_name()),
         }
     }
 

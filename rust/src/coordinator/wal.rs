@@ -90,29 +90,31 @@ fn record_check(seq: u64, payload: &[u8]) -> u64 {
     mix2(hash_bytes(payload), seq)
 }
 
-// ---------- payload encoding (the RPC wire ops; see docs/PROTOCOL.md) ----
+// ---------- payload encoding ----------
+//
+// WAL payloads ARE the typed protocol's op objects (`crate::protocol`),
+// byte-for-byte: the same `wire::*` encoders serve the RPC layer, so a
+// WAL doubles as a replayable op trace and recovery decodes through the
+// same `Request::from_wire` path as the server (see `apply_logged`).
 
 pub(crate) fn insert_payload(p: &Point) -> Json {
-    Json::obj(vec![("op", Json::str("insert")), ("point", p.to_json())])
+    crate::protocol::wire::insert(p)
 }
 
 pub(crate) fn delete_payload(id: PointId) -> Json {
-    Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))])
+    crate::protocol::wire::delete(id)
 }
 
 pub(crate) fn insert_batch_payload(points: &[Point]) -> Json {
-    Json::obj(vec![
-        ("op", Json::str("insert_batch")),
-        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
-    ])
+    crate::protocol::wire::insert_batch(points)
 }
 
 pub(crate) fn delete_batch_payload(ids: &[PointId]) -> Json {
-    Json::obj(vec![("op", Json::str("delete_batch")), ("ids", Json::u64_arr(ids))])
+    crate::protocol::wire::delete_batch(ids)
 }
 
 pub(crate) fn refresh_payload() -> Json {
-    Json::obj(vec![("op", Json::str("refresh_tables"))])
+    crate::protocol::wire::refresh_tables()
 }
 
 // ---------- writer ----------

@@ -36,6 +36,7 @@ pub mod grale;
 pub mod graph;
 pub mod index;
 pub mod preprocess;
+pub mod protocol;
 pub mod runtime;
 pub mod scorer;
 pub mod server;

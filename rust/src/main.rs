@@ -6,6 +6,10 @@
 //!             [--load data.jsonl]
 //!             [--wal-dir DIR] [--fsync always|every_n[:N]|never]
 //!             [--checkpoint-every M]
+//!             [--max-connections C] [--rpc-workers W] [--rpc-queue Q]
+//!             # RPC scheduling: W workers (0 = auto) execute enveloped
+//!             # v1 requests from a bounded queue of Q; saturation sheds
+//!             # with OVERLOADED. See docs/PROTOCOL.md.
 //!             # --wal-dir makes the service durable: mutations are
 //!             # write-ahead logged, checkpoints land in DIR, and a
 //!             # restart with the same --wal-dir recovers everything.
@@ -110,6 +114,14 @@ fn infer_schema(points: &[Point]) -> anyhow::Result<dynamic_gus::features::Schem
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "serve" => {
+            let config = GusConfig::default()
+                .apply_args(args)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            // RPC scheduling knobs are per-incarnation operational
+            // settings: the command line (or its defaults) wins even when
+            // the service state is recovered from a snapshot or WAL
+            // directory.
+            let server_cfg = ServerConfig::from_gus(&config);
             if let Some(dir) = args.opt_str("snapshot-dir") {
                 if args.opt_str("wal-dir").is_some() {
                     anyhow::bail!(
@@ -125,16 +137,13 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                         dynamic_gus::util::threadpool::default_parallelism(),
                     )?;
                     let addr = args.get_str("addr", "127.0.0.1:7717");
-                    let handle = serve(Arc::new(gus), &addr, ServerConfig::default())?;
+                    let handle = serve(Arc::new(gus), &addr, server_cfg)?;
                     println!("[gus] serving restored snapshot on {}", handle.addr);
                     loop {
                         std::thread::sleep(std::time::Duration::from_secs(3600));
                     }
                 }
             }
-            let config = GusConfig::default()
-                .apply_args(args)
-                .map_err(|e| anyhow::anyhow!(e))?;
             let threads = args.get_usize(
                 "threads",
                 dynamic_gus::util::threadpool::default_parallelism(),
@@ -193,7 +202,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 )
             });
             let addr = args.get_str("addr", "127.0.0.1:7717");
-            let handle = serve(Arc::clone(&gus), &addr, ServerConfig::default())?;
+            let handle = serve(Arc::clone(&gus), &addr, server_cfg)?;
             println!("[gus] serving on {}", handle.addr);
             // Serve until killed.
             loop {
@@ -242,7 +251,16 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                         std::time::Duration::from_millis(500),
                     )
                 });
-                let handle = serve(Arc::clone(&gus), &addr, ServerConfig::default())?;
+                // RPC scheduling knobs: explicit CLI flags win over the
+                // recovered incarnation's persisted values, validated the
+                // same way as on the `serve` path.
+                let mut rpc_cfg = gus.config().clone();
+                rpc_cfg.max_connections =
+                    args.get_usize("max-connections", rpc_cfg.max_connections);
+                rpc_cfg.rpc_workers = args.get_usize("rpc-workers", rpc_cfg.rpc_workers);
+                rpc_cfg.rpc_queue = args.get_usize("rpc-queue", rpc_cfg.rpc_queue);
+                rpc_cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+                let handle = serve(Arc::clone(&gus), &addr, ServerConfig::from_gus(&rpc_cfg))?;
                 println!("[gus] serving on {}", handle.addr);
                 loop {
                     std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -169,6 +169,13 @@ pub struct Counters {
     pub errors: AtomicU64,
     pub candidates_retrieved: AtomicU64,
     pub pairs_scored: AtomicU64,
+    /// Connections refused at the concurrency cap (each gets a final
+    /// `OVERLOADED` response before the socket closes).
+    pub refused: AtomicU64,
+    /// Requests shed because the server's run queue was full.
+    pub overloaded: AtomicU64,
+    /// Requests rejected because their deadline expired before execution.
+    pub deadline_exceeded: AtomicU64,
 }
 
 impl Counters {
@@ -182,6 +189,9 @@ impl Counters {
             ("errors", g(&self.errors)),
             ("candidates_retrieved", g(&self.candidates_retrieved)),
             ("pairs_scored", g(&self.pairs_scored)),
+            ("refused", g(&self.refused)),
+            ("overloaded", g(&self.overloaded)),
+            ("deadline_exceeded", g(&self.deadline_exceeded)),
         ])
     }
 }

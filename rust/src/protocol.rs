@@ -1,0 +1,789 @@
+//! Typed wire protocol — the one source of truth for what goes over the
+//! socket and into the write-ahead log.
+//!
+//! Every byte the server reads or writes, every WAL payload, and every
+//! request `gus replay` re-executes decodes and encodes through this
+//! module: [`Request`] / [`Response`] enums with a single
+//! [`Request::from_wire`] / [`Request::to_wire`] path, a versioned
+//! envelope ([`Envelope`]) for pipelined multiplexed serving, and
+//! machine-readable error codes ([`ErrorCode`]).
+//!
+//! # Two dialects, one decoder
+//!
+//! **Legacy** (protocol v0, still fully served): a bare op object per
+//! line, answered strictly in order with un-enveloped responses:
+//!
+//! ```text
+//! → {"op":"query_id","id":3,"k":5}
+//! ← {"ok":true,"neighbors":[...]}
+//! ```
+//!
+//! **v1**: the same op object nested under `req`, wrapped in an envelope
+//! carrying a client-chosen correlation `id` and an optional relative
+//! deadline. Responses echo `id` and may arrive out of order:
+//!
+//! ```text
+//! → {"v":1,"id":7,"deadline_ms":50,"req":{"op":"query_id","id":3,"k":5}}
+//! ← {"v":1,"id":7,"ok":true,"neighbors":[...]}
+//! ```
+//!
+//! The op object is *byte-identical* across the two dialects and the WAL
+//! (the envelope nests it verbatim rather than inlining its fields —
+//! `delete`/`query_id` already use `"id"` for the point id, so inlining
+//! would collide with the envelope's correlation id). Dialect detection
+//! is the presence of the `"v"` key.
+//!
+//! # Error codes
+//!
+//! | code                | meaning                                          |
+//! |---------------------|--------------------------------------------------|
+//! | `BAD_REQUEST`       | malformed line, unknown op, bad field, schema violation |
+//! | `NOT_FOUND`         | `query_id` of an absent point                    |
+//! | `UNAVAILABLE`       | op unsupported in this server state (e.g. `checkpoint` without a WAL), or server shutting down |
+//! | `DEADLINE_EXCEEDED` | the request's deadline expired before execution  |
+//! | `OVERLOADED`        | shed by admission control (queue or connection cap) |
+//!
+//! Validation happens at decode time: `k = 0` or `k >` [`MAX_K`] is a
+//! `BAD_REQUEST` before the index is ever touched.
+
+use std::fmt;
+
+use crate::coordinator::ScoredNeighbor;
+use crate::features::Point;
+use crate::util::json::Json;
+
+/// The protocol version this build speaks (and the only one it accepts
+/// in an envelope).
+pub const VERSION: u64 = 1;
+
+/// Upper bound on `k` accepted by the query ops. Requests beyond it are
+/// rejected at decode time with `BAD_REQUEST` — a `k` in the billions is
+/// a client bug (or an attack), not a neighborhood size, and would
+/// otherwise size retrieval buffers.
+pub const MAX_K: usize = 65_536;
+
+// ---------- error codes ----------
+
+/// Machine-readable failure classification carried by every error
+/// response (`{"ok":false,"code":...,"error":...}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    NotFound,
+    Unavailable,
+    DeadlineExceeded,
+    Overloaded,
+}
+
+impl ErrorCode {
+    /// The wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::NotFound => "NOT_FOUND",
+            ErrorCode::Unavailable => "UNAVAILABLE",
+            ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            ErrorCode::Overloaded => "OVERLOADED",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`].
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        match s {
+            "BAD_REQUEST" => Some(ErrorCode::BadRequest),
+            "NOT_FOUND" => Some(ErrorCode::NotFound),
+            "UNAVAILABLE" => Some(ErrorCode::Unavailable),
+            "DEADLINE_EXCEEDED" => Some(ErrorCode::DeadlineExceeded),
+            "OVERLOADED" => Some(ErrorCode::Overloaded),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed protocol failure: code + human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtocolError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ProtocolError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ProtocolError {
+        ProtocolError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ProtocolError {
+        ProtocolError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+// ---------- op-object encoders (shared by requests and WAL payloads) ----
+
+/// Borrowing encoders for the op objects. [`Request::to_wire`] and the
+/// WAL payload builders both call these, so a mutation's log record is
+/// byte-identical to its wire request by construction.
+pub mod wire {
+    use super::*;
+
+    pub fn insert(point: &Point) -> Json {
+        Json::obj(vec![("op", Json::str("insert")), ("point", point.to_json())])
+    }
+
+    pub fn delete(id: u64) -> Json {
+        Json::obj(vec![("op", Json::str("delete")), ("id", Json::u64(id))])
+    }
+
+    pub fn insert_batch(points: &[Point]) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("insert_batch")),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+
+    pub fn delete_batch(ids: &[u64]) -> Json {
+        Json::obj(vec![("op", Json::str("delete_batch")), ("ids", Json::u64_arr(ids))])
+    }
+
+    pub fn query(point: &Point, k: Option<usize>) -> Json {
+        let mut pairs = vec![("op", Json::str("query")), ("point", point.to_json())];
+        if let Some(k) = k {
+            pairs.push(("k", Json::num(k as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn query_id(id: u64, k: Option<usize>) -> Json {
+        let mut pairs = vec![("op", Json::str("query_id")), ("id", Json::u64(id))];
+        if let Some(k) = k {
+            pairs.push(("k", Json::num(k as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn query_batch(points: &[Point], k: Option<usize>) -> Json {
+        let mut pairs = vec![
+            ("op", Json::str("query_batch")),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ];
+        if let Some(k) = k {
+            pairs.push(("k", Json::num(k as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn checkpoint() -> Json {
+        Json::obj(vec![("op", Json::str("checkpoint"))])
+    }
+
+    pub fn stats() -> Json {
+        Json::obj(vec![("op", Json::str("stats"))])
+    }
+
+    pub fn refresh_tables() -> Json {
+        Json::obj(vec![("op", Json::str("refresh_tables"))])
+    }
+}
+
+// ---------- requests ----------
+
+/// A decoded RPC request. `k: None` means "use the server's ScaNN-NN
+/// default".
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Insert { point: Point },
+    Delete { id: u64 },
+    Query { point: Point, k: Option<usize> },
+    QueryId { id: u64, k: Option<usize> },
+    InsertBatch { points: Vec<Point> },
+    DeleteBatch { ids: Vec<u64> },
+    QueryBatch { points: Vec<Point>, k: Option<usize> },
+    Checkpoint,
+    Stats,
+    /// WAL-internal marker for a periodic table reload (§4.3). Never
+    /// accepted from the network; decoded only during WAL replay.
+    RefreshTables,
+}
+
+impl Request {
+    /// The wire op name (also the WAL payload op).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Insert { .. } => "insert",
+            Request::Delete { .. } => "delete",
+            Request::Query { .. } => "query",
+            Request::QueryId { .. } => "query_id",
+            Request::InsertBatch { .. } => "insert_batch",
+            Request::DeleteBatch { .. } => "delete_batch",
+            Request::QueryBatch { .. } => "query_batch",
+            Request::Checkpoint => "checkpoint",
+            Request::Stats => "stats",
+            Request::RefreshTables => "refresh_tables",
+        }
+    }
+
+    /// Does this op mutate service state? Mutations on one connection
+    /// apply in submission order (the server's ordering guarantee).
+    pub fn is_mutation(&self) -> bool {
+        matches!(
+            self,
+            Request::Insert { .. }
+                | Request::Delete { .. }
+                | Request::InsertBatch { .. }
+                | Request::DeleteBatch { .. }
+                | Request::RefreshTables
+        )
+    }
+
+    /// Does this op take a per-connection ordering slot? Mutations, plus
+    /// `checkpoint`: a checkpoint pipelined after a mutation on the same
+    /// connection must cover that mutation, so it shares the mutation
+    /// ordering (queries never do).
+    pub fn is_ordered(&self) -> bool {
+        self.is_mutation() || matches!(self, Request::Checkpoint)
+    }
+
+    /// Encode as the bare op object (the legacy request shape, the
+    /// envelope's `req` value, and the WAL payload — all identical).
+    /// `update` decodes to [`Request::Insert`] and re-encodes as
+    /// `insert`; everything else round-trips exactly.
+    pub fn to_wire(&self) -> Json {
+        match self {
+            Request::Insert { point } => wire::insert(point),
+            Request::Delete { id } => wire::delete(*id),
+            Request::Query { point, k } => wire::query(point, *k),
+            Request::QueryId { id, k } => wire::query_id(*id, *k),
+            Request::InsertBatch { points } => wire::insert_batch(points),
+            Request::DeleteBatch { ids } => wire::delete_batch(ids),
+            Request::QueryBatch { points, k } => wire::query_batch(points, *k),
+            Request::Checkpoint => wire::checkpoint(),
+            Request::Stats => wire::stats(),
+            Request::RefreshTables => wire::refresh_tables(),
+        }
+    }
+
+    /// Decode a bare op object (legacy line, envelope `req`, WAL
+    /// payload). Field validation — including the `k` bounds — happens
+    /// here, before anything touches the service.
+    pub fn from_wire(j: &Json) -> Result<Request, ProtocolError> {
+        if j.as_obj().is_none() {
+            return Err(ProtocolError::bad_request("request must be a JSON object"));
+        }
+        let op = j
+            .get("op")
+            .as_str()
+            .ok_or_else(|| ProtocolError::bad_request("missing 'op'"))?;
+        match op {
+            "insert" | "update" => Ok(Request::Insert { point: decode_point(j.get("point"), "point")? }),
+            "delete" => Ok(Request::Delete { id: decode_id(j.get("id"), "id")? }),
+            "query" => Ok(Request::Query {
+                point: decode_point(j.get("point"), "point")?,
+                k: decode_k(j)?,
+            }),
+            "query_id" => Ok(Request::QueryId {
+                id: decode_id(j.get("id"), "id")?,
+                k: decode_k(j)?,
+            }),
+            "insert_batch" => Ok(Request::InsertBatch { points: decode_points(j)? }),
+            "delete_batch" => {
+                let ids = j
+                    .get("ids")
+                    .as_arr()
+                    .ok_or_else(|| ProtocolError::bad_request("missing/bad 'ids'"))?
+                    .iter()
+                    .map(|x| decode_id(x, "ids"))
+                    .collect::<Result<Vec<u64>, ProtocolError>>()?;
+                Ok(Request::DeleteBatch { ids })
+            }
+            "query_batch" => Ok(Request::QueryBatch { points: decode_points(j)?, k: decode_k(j)? }),
+            "checkpoint" => Ok(Request::Checkpoint),
+            "stats" => Ok(Request::Stats),
+            "refresh_tables" => Ok(Request::RefreshTables),
+            other => Err(ProtocolError::bad_request(format!("unknown op '{other}'"))),
+        }
+    }
+}
+
+fn decode_point(j: &Json, field: &str) -> Result<Point, ProtocolError> {
+    Point::from_json(j).ok_or_else(|| ProtocolError::bad_request(format!("missing/bad '{field}'")))
+}
+
+fn decode_points(j: &Json) -> Result<Vec<Point>, ProtocolError> {
+    j.get("points")
+        .as_arr()
+        .ok_or_else(|| ProtocolError::bad_request("missing/bad 'points'"))?
+        .iter()
+        .map(|p| {
+            Point::from_json(p)
+                .ok_or_else(|| ProtocolError::bad_request("bad point in 'points'"))
+        })
+        .collect()
+}
+
+fn decode_id(j: &Json, field: &str) -> Result<u64, ProtocolError> {
+    j.as_u64()
+        .ok_or_else(|| ProtocolError::bad_request(format!("missing/bad '{field}'")))
+}
+
+/// Decode and validate the optional `k` field: absent means "server
+/// default"; present must be an integer in `[1, MAX_K]`.
+fn decode_k(j: &Json) -> Result<Option<usize>, ProtocolError> {
+    let kj = j.get("k");
+    if kj.is_null() {
+        return Ok(None);
+    }
+    let k = kj
+        .as_usize()
+        .ok_or_else(|| ProtocolError::bad_request("'k' must be a non-negative integer"))?;
+    if k == 0 {
+        return Err(ProtocolError::bad_request("'k' must be >= 1"));
+    }
+    if k > MAX_K {
+        return Err(ProtocolError::bad_request(format!("'k' {k} exceeds maximum {MAX_K}")));
+    }
+    Ok(Some(k))
+}
+
+// ---------- envelope ----------
+
+/// A v1 request envelope: client-chosen correlation `id` (echoed by the
+/// response), optional relative deadline in milliseconds (measured from
+/// server receipt; `0` is already expired), and the op object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub id: u64,
+    pub deadline_ms: Option<u64>,
+    pub request: Request,
+}
+
+impl Envelope {
+    pub fn to_wire(&self) -> Json {
+        envelope_to_wire(self.id, self.deadline_ms, self.request.to_wire())
+    }
+}
+
+/// Encode a v1 envelope around an already-encoded op object — the
+/// zero-copy submission path for callers that used the borrowing
+/// [`wire`] encoders ([`Envelope::to_wire`] goes through here too).
+pub fn envelope_to_wire(id: u64, deadline_ms: Option<u64>, req: Json) -> Json {
+    let mut pairs = vec![("v", Json::u64(VERSION)), ("id", Json::u64(id)), ("req", req)];
+    if let Some(d) = deadline_ms {
+        pairs.push(("deadline_ms", Json::u64(d)));
+    }
+    Json::obj(pairs)
+}
+
+/// One decoded request line: either a v1 envelope or a legacy bare op.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Incoming {
+    V1(Envelope),
+    Legacy(Request),
+}
+
+/// A request-decode failure. `v1` records whether the line was
+/// envelope-shaped (it had a `"v"` key); `id` is the correlation id when
+/// the header was readable. The server echoes `id` when present so a
+/// pipelined client can match the failure to its request; with no
+/// readable id the error is necessarily connection-level and goes out in
+/// the legacy (header-less) shape regardless of `v1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeError {
+    pub id: Option<u64>,
+    pub v1: bool,
+    pub error: ProtocolError,
+}
+
+impl DecodeError {
+    fn legacy(error: ProtocolError) -> DecodeError {
+        DecodeError { id: None, v1: false, error }
+    }
+}
+
+/// Decode one request line in either dialect (the `"v"` key selects v1).
+pub fn decode_request(line: &str) -> Result<Incoming, DecodeError> {
+    let j = Json::parse(line)
+        .map_err(|e| DecodeError::legacy(ProtocolError::bad_request(format!("bad json: {e}"))))?;
+    decode_request_json(&j)
+}
+
+/// [`decode_request`] over an already-parsed value.
+pub fn decode_request_json(j: &Json) -> Result<Incoming, DecodeError> {
+    if j.get("v").is_null() {
+        return match Request::from_wire(j) {
+            Ok(r) => Ok(Incoming::Legacy(r)),
+            Err(e) => Err(DecodeError::legacy(e)),
+        };
+    }
+    // v1 envelope. Recover the correlation id even on errors, so the
+    // client can match the failure to the request it pipelined.
+    let id = j.get("id").as_u64();
+    let fail = |id: Option<u64>, error: ProtocolError| DecodeError { id, v1: true, error };
+    match j.get("v").as_u64() {
+        Some(v) if v == VERSION => {}
+        Some(v) => {
+            return Err(fail(
+                id,
+                ProtocolError::bad_request(format!(
+                    "unsupported protocol version {v} (this server speaks v{VERSION})"
+                )),
+            ))
+        }
+        None => {
+            return Err(fail(id, ProtocolError::bad_request("'v' must be an integer")));
+        }
+    }
+    let Some(id) = id else {
+        return Err(fail(
+            None,
+            ProtocolError::bad_request("envelope missing 'id' (u64 correlation id)"),
+        ));
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        Json::Null => None,
+        d => Some(d.as_u64().ok_or_else(|| {
+            fail(Some(id), ProtocolError::bad_request("'deadline_ms' must be a non-negative integer"))
+        })?),
+    };
+    let req = j.get("req");
+    if req.is_null() {
+        return Err(fail(
+            Some(id),
+            ProtocolError::bad_request("envelope missing 'req' (the op object)"),
+        ));
+    }
+    let request = Request::from_wire(req).map_err(|e| fail(Some(id), e))?;
+    Ok(Incoming::V1(Envelope { id, deadline_ms, request }))
+}
+
+// ---------- responses ----------
+
+/// A typed RPC response. Success variants map one-to-one onto the ops
+/// that produce them; [`Response::Error`] covers every failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// `insert` / `delete` ack: did the point exist?
+    Existed { existed: bool },
+    /// `insert_batch` / `delete_batch` ack, per input position.
+    ExistedBatch { existed: Vec<bool> },
+    /// `query` / `query_id` neighborhood.
+    Neighbors { neighbors: Vec<ScoredNeighbor> },
+    /// `query_batch` neighborhoods, per input position.
+    Results { results: Vec<Vec<ScoredNeighbor>> },
+    /// `checkpoint` ack: the WAL sequence number covered.
+    Checkpoint { seq: u64 },
+    /// `stats` payload.
+    Stats { stats: Json },
+    /// Any failure.
+    Error { code: ErrorCode, message: String },
+}
+
+impl Response {
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into() }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error { .. })
+    }
+
+    /// Encode. `id: None` produces the legacy shape; `Some` adds the v1
+    /// header (`v` + echoed `id`). Error responses carry `code` in both
+    /// dialects (additive for legacy clients, which only look at
+    /// `ok`/`error`).
+    pub fn to_wire(&self, id: Option<u64>) -> Json {
+        let mut pairs = match self {
+            Response::Existed { existed } => {
+                vec![("ok", Json::Bool(true)), ("existed", Json::Bool(*existed))]
+            }
+            Response::ExistedBatch { existed } => vec![
+                ("ok", Json::Bool(true)),
+                ("existed", Json::Arr(existed.iter().map(|&e| Json::Bool(e)).collect())),
+            ],
+            Response::Neighbors { neighbors } => {
+                vec![("ok", Json::Bool(true)), ("neighbors", neighbors_to_json(neighbors))]
+            }
+            Response::Results { results } => vec![
+                ("ok", Json::Bool(true)),
+                ("results", Json::Arr(results.iter().map(|r| neighbors_to_json(r)).collect())),
+            ],
+            Response::Checkpoint { seq } => {
+                vec![("ok", Json::Bool(true)), ("seq", Json::u64(*seq))]
+            }
+            Response::Stats { stats } => {
+                vec![("ok", Json::Bool(true)), ("stats", stats.clone())]
+            }
+            Response::Error { code, message } => vec![
+                ("ok", Json::Bool(false)),
+                ("code", Json::str(code.as_str())),
+                ("error", Json::str(message.clone())),
+            ],
+        };
+        if let Some(id) = id {
+            pairs.push(("v", Json::u64(VERSION)));
+            pairs.push(("id", Json::u64(id)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Decode a response body. Returns the echoed correlation id (`None`
+    /// for legacy / connection-level responses) and the typed response.
+    pub fn from_wire(j: &Json) -> Result<(Option<u64>, Response), ProtocolError> {
+        if j.as_obj().is_none() {
+            return Err(ProtocolError::bad_request("response must be a JSON object"));
+        }
+        let id = if j.get("v").is_null() { None } else { j.get("id").as_u64() };
+        let ok = j
+            .get("ok")
+            .as_bool()
+            .ok_or_else(|| ProtocolError::bad_request("response missing 'ok'"))?;
+        if !ok {
+            let message = j.get("error").as_str().unwrap_or("<unknown>").to_string();
+            let code = j
+                .get("code")
+                .as_str()
+                .and_then(ErrorCode::parse)
+                .unwrap_or(ErrorCode::BadRequest);
+            return Ok((id, Response::Error { code, message }));
+        }
+        let resp = if let Some(b) = j.get("existed").as_bool() {
+            Response::Existed { existed: b }
+        } else if let Some(arr) = j.get("existed").as_arr() {
+            let existed = arr
+                .iter()
+                .map(|x| {
+                    x.as_bool()
+                        .ok_or_else(|| ProtocolError::bad_request("bad 'existed' entry"))
+                })
+                .collect::<Result<Vec<bool>, ProtocolError>>()?;
+            Response::ExistedBatch { existed }
+        } else if !j.get("neighbors").is_null() {
+            Response::Neighbors { neighbors: neighbors_from_json(j.get("neighbors"))? }
+        } else if let Some(arr) = j.get("results").as_arr() {
+            let results = arr
+                .iter()
+                .map(neighbors_from_json)
+                .collect::<Result<Vec<_>, ProtocolError>>()?;
+            Response::Results { results }
+        } else if let Some(seq) = j.get("seq").as_u64() {
+            Response::Checkpoint { seq }
+        } else if !j.get("stats").is_null() {
+            Response::Stats { stats: j.get("stats").clone() }
+        } else {
+            return Err(ProtocolError::bad_request("unrecognized response shape"));
+        };
+        Ok((id, resp))
+    }
+}
+
+/// Encode a scored-neighbor list.
+pub fn neighbors_to_json(neighbors: &[ScoredNeighbor]) -> Json {
+    Json::Arr(
+        neighbors
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("id", Json::u64(n.id)),
+                    ("score", Json::num(n.score as f64)),
+                    ("dot", Json::num(n.dot as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Decode a scored-neighbor list. `id` is required; missing scores decode
+/// as 0.0 (matching the historical client behavior).
+pub fn neighbors_from_json(j: &Json) -> Result<Vec<ScoredNeighbor>, ProtocolError> {
+    j.as_arr()
+        .ok_or_else(|| ProtocolError::bad_request("missing/bad neighbor list"))?
+        .iter()
+        .map(|n| {
+            Ok(ScoredNeighbor {
+                id: n
+                    .get("id")
+                    .as_u64()
+                    .ok_or_else(|| ProtocolError::bad_request("neighbor missing 'id'"))?,
+                score: n.get("score").as_f32().unwrap_or(0.0),
+                dot: n.get("dot").as_f32().unwrap_or(0.0),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::FeatureValue;
+
+    fn point(id: u64) -> Point {
+        Point::new(
+            id,
+            vec![FeatureValue::Dense(vec![0.5, -1.5]), FeatureValue::Scalar(2021.0)],
+        )
+    }
+
+    #[test]
+    fn request_round_trip_all_variants() {
+        let reqs = vec![
+            Request::Insert { point: point(1) },
+            Request::Delete { id: 42 },
+            Request::Query { point: point(2), k: Some(5) },
+            Request::Query { point: point(2), k: None },
+            Request::QueryId { id: 7, k: Some(3) },
+            Request::QueryId { id: 7, k: None },
+            Request::InsertBatch { points: vec![point(1), point(2)] },
+            Request::DeleteBatch { ids: vec![1, 2, 3] },
+            Request::QueryBatch { points: vec![point(9)], k: Some(2) },
+            Request::Checkpoint,
+            Request::Stats,
+            Request::RefreshTables,
+        ];
+        for r in reqs {
+            let wire = r.to_wire();
+            let back = Request::from_wire(&wire).unwrap();
+            assert_eq!(back, r, "{}", wire.dump());
+            // Re-encoding is byte-stable.
+            assert_eq!(back.to_wire().dump(), wire.dump());
+        }
+    }
+
+    #[test]
+    fn update_aliases_insert() {
+        let wire = Json::parse(r#"{"op":"update","point":{"features":[{"scalar":1}],"id":5}}"#)
+            .unwrap();
+        let r = Request::from_wire(&wire).unwrap();
+        assert!(matches!(r, Request::Insert { .. }));
+        assert_eq!(r.op_name(), "insert");
+    }
+
+    #[test]
+    fn k_is_validated_at_decode() {
+        for (line, want) in [
+            (r#"{"op":"query_id","id":1,"k":0}"#, "'k' must be >= 1"),
+            (r#"{"op":"query_id","id":1,"k":9007199254740}"#, "exceeds maximum"),
+            (r#"{"op":"query_id","id":1,"k":-3}"#, "non-negative"),
+            (r#"{"op":"query_id","id":1,"k":1.5}"#, "non-negative"),
+            (r#"{"op":"query_id","id":1,"k":"ten"}"#, "non-negative"),
+        ] {
+            let j = Json::parse(line).unwrap();
+            let err = Request::from_wire(&j).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{line}");
+            assert!(err.message.contains(want), "{line}: {}", err.message);
+        }
+        // Boundary values pass.
+        for k in [1usize, MAX_K] {
+            let j = Json::parse(&format!(r#"{{"op":"query_id","id":1,"k":{k}}}"#)).unwrap();
+            assert_eq!(Request::from_wire(&j).unwrap(), Request::QueryId { id: 1, k: Some(k) });
+        }
+    }
+
+    #[test]
+    fn envelope_round_trip_and_dialect_detection() {
+        let env = Envelope { id: 7, deadline_ms: Some(50), request: Request::QueryId { id: 3, k: Some(5) } };
+        let wire = env.to_wire();
+        match decode_request(&wire.dump()).unwrap() {
+            Incoming::V1(back) => assert_eq!(back, env),
+            other => panic!("not v1: {other:?}"),
+        }
+        // The same op object, bare, is legacy.
+        match decode_request(&env.request.to_wire().dump()).unwrap() {
+            Incoming::Legacy(r) => assert_eq!(r, env.request),
+            other => panic!("not legacy: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn envelope_header_errors() {
+        // Unknown version: error echoes the id and answers in v1 shape.
+        let e = decode_request(r#"{"v":2,"id":9,"req":{"op":"stats"}}"#).unwrap_err();
+        assert!(e.v1);
+        assert_eq!(e.id, Some(9));
+        assert!(e.error.message.contains("unsupported protocol version 2"));
+        // Missing id.
+        let e = decode_request(r#"{"v":1,"req":{"op":"stats"}}"#).unwrap_err();
+        assert!(e.v1);
+        assert_eq!(e.id, None);
+        assert!(e.error.message.contains("missing 'id'"));
+        // Missing req.
+        let e = decode_request(r#"{"v":1,"id":4}"#).unwrap_err();
+        assert_eq!(e.id, Some(4));
+        assert!(e.error.message.contains("missing 'req'"));
+        // Bad deadline.
+        let e = decode_request(r#"{"v":1,"id":4,"deadline_ms":"soon","req":{"op":"stats"}}"#)
+            .unwrap_err();
+        assert_eq!(e.id, Some(4));
+        assert!(e.error.message.contains("deadline_ms"));
+        // Bad op inside a valid envelope still echoes the id.
+        let e = decode_request(r#"{"v":1,"id":11,"req":{"op":"nope"}}"#).unwrap_err();
+        assert!(e.v1);
+        assert_eq!(e.id, Some(11));
+        assert!(e.error.message.contains("unknown op"));
+        // Unparseable json is a legacy-shaped BAD_REQUEST.
+        let e = decode_request("{not json").unwrap_err();
+        assert!(!e.v1);
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn response_round_trip_all_variants() {
+        let n = |id, score: f32, dot: f32| ScoredNeighbor { id, score, dot };
+        let resps = vec![
+            Response::Existed { existed: true },
+            Response::ExistedBatch { existed: vec![true, false] },
+            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)] },
+            Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]] },
+            Response::Checkpoint { seq: 1041 },
+            Response::Stats { stats: Json::obj(vec![("points", Json::num(10.0))]) },
+            Response::error(ErrorCode::NotFound, "unknown point 3"),
+            Response::error(ErrorCode::Overloaded, "run queue full"),
+        ];
+        for r in resps {
+            // Legacy shape.
+            let (id, back) = Response::from_wire(&r.to_wire(None)).unwrap();
+            assert_eq!(id, None);
+            assert_eq!(back, r);
+            // v1 shape echoes the id.
+            let (id, back) = Response::from_wire(&r.to_wire(Some(7))).unwrap();
+            assert_eq!(id, Some(7));
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for c in [
+            ErrorCode::BadRequest,
+            ErrorCode::NotFound,
+            ErrorCode::Unavailable,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Overloaded,
+        ] {
+            assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(ErrorCode::parse("TEAPOT"), None);
+    }
+
+    #[test]
+    fn empty_batches_round_trip() {
+        for r in [
+            Request::InsertBatch { points: vec![] },
+            Request::DeleteBatch { ids: vec![] },
+            Request::QueryBatch { points: vec![], k: None },
+        ] {
+            assert_eq!(Request::from_wire(&r.to_wire()).unwrap(), r);
+        }
+    }
+}

@@ -1,63 +1,100 @@
-//! TCP JSON-lines RPC server.
+//! TCP JSON-lines RPC server: pipelined, multiplexed, deadline-aware.
 //!
 //! The paper's system is an RPC service (§3.1: Mutation RPCs and the
-//! Neighborhood RPC). This server exposes both over a newline-delimited
-//! JSON protocol (the offline build has no gRPC stack; the RPC *semantics*
-//! are the same):
+//! Neighborhood RPC) answering in tens of milliseconds under heavy
+//! dynamic traffic. This server carries that contract over a
+//! newline-delimited JSON protocol (the offline build has no gRPC stack;
+//! the RPC *semantics* are the same). All request/response shapes are
+//! owned by [`crate::protocol`] — this module only schedules and
+//! executes; `docs/PROTOCOL.md` is the full wire spec.
+//!
+//! # Execution model
 //!
 //! ```text
-//! → {"op":"insert","point":{"id":1,"features":[...]}}
-//! ← {"ok":true,"existed":false}
-//! → {"op":"delete","id":1}
-//! ← {"ok":true,"existed":true}
-//! → {"op":"query","k":10,"point":{...}}        # new or known point
-//! → {"op":"query_id","k":10,"id":1}            # known point by id
-//! ← {"ok":true,"neighbors":[{"id":4,"score":0.93,"dot":3.0},...]}
-//! → {"op":"insert_batch","points":[{...},{...}]}
-//! ← {"ok":true,"existed":[false,true]}
-//! → {"op":"delete_batch","ids":[1,2,3]}
-//! ← {"ok":true,"existed":[true,true,false]}
-//! → {"op":"query_batch","k":10,"points":[{...},{...}]}
-//! ← {"ok":true,"results":[[{"id":4,...},...],[...]]}
-//! → {"op":"checkpoint"}
-//! ← {"ok":true,"seq":1041}
-//! → {"op":"stats"}
-//! ← {"ok":true,"stats":{...}}
+//!                    ┌────────────┐   bounded run queue   ┌─────────┐
+//! conn A ──reader──▶ │  decode    │ ──▶ [ job | job | … ] ─▶ worker 1 │──┐
+//! conn B ──reader──▶ │ (protocol) │          │              worker …  │──┼─▶ per-conn
+//! conn C ──reader──▶ │            │          ▼              worker W  │──┘   writer
+//!                    └────────────┘   full → OVERLOADED   └─────────┘   (id-matched)
 //! ```
 //!
-//! The full wire contract (field types, error shapes, durability
-//! semantics) is specified in `docs/PROTOCOL.md`.
-//!
-//! The batch ops map to [`DynamicGus::insert_batch`] /
-//! [`DynamicGus::query_batch`], which parallelize across items on the
-//! serving workers — one RPC amortizes framing, locking and scheduling
-//! over the whole batch. `checkpoint` maps to [`DynamicGus::checkpoint`]
-//! (durable services only — see [`crate::coordinator::wal`]).
-//!
-//! Connections are handled by a fixed worker pool with a bounded backlog —
-//! the backpressure strategy is "refuse new connections when saturated"
-//! (clients retry), keeping tail latency of admitted requests flat.
+//! - One lightweight **reader** thread per connection decodes lines and
+//!   enqueues v1 requests onto a server-wide **fixed worker pool** with a
+//!   **bounded run queue** — a few connections can keep every core busy.
+//! - Workers execute concurrently and complete **out of order**; each
+//!   response is written under the connection's writer lock and matched
+//!   to its request by the envelope `id`.
+//! - **Mutations (and `checkpoint`) on one connection still apply in
+//!   submission order**: a per-connection ticket gate parks
+//!   not-yet-runnable *jobs*, never worker threads, and the finisher of
+//!   each turn chain-executes parked successors; queries overtake freely.
+//! - A request whose **deadline** already expired is answered
+//!   `DEADLINE_EXCEEDED` *before* touching the index.
+//! - When the run queue is full, the request is shed immediately with an
+//!   `OVERLOADED` response — admitted work keeps its flat tail latency.
+//! - A client that stops reading responses is bounded by a socket write
+//!   timeout: the connection is marked dead and dropped rather than
+//!   stalling the shared workers.
+//! - **Legacy** (un-enveloped) requests execute inline on the reader,
+//!   strictly serially and in order, with legacy-shaped responses —
+//!   exactly the pre-envelope behavior, on the same port, detectable per
+//!   line (so one connection may even mix dialects).
+//! - Connections beyond the concurrency cap receive one final
+//!   `OVERLOADED` response before the socket closes (counted in the
+//!   `refused` stat) instead of a silent drop.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::DynamicGus;
-use crate::features::Point;
+use crate::protocol::{decode_request, Envelope, ErrorCode, Incoming, Request, Response};
 use crate::util::json::Json;
 
 /// Server tuning.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Connections admitted concurrently; excess connections get a final
+    /// `OVERLOADED` response and are closed (clients retry).
     pub max_concurrent_connections: usize,
+    /// Worker threads executing requests (0 = auto: available cores).
+    pub worker_threads: usize,
+    /// Bounded run-queue capacity; when full, new requests are shed with
+    /// `OVERLOADED` instead of queueing unboundedly.
+    pub queue_capacity: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_concurrent_connections: 64 }
+        ServerConfig {
+            max_concurrent_connections: 64,
+            worker_threads: 0,
+            queue_capacity: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Derive the server knobs from a service config (the CLI path).
+    pub fn from_gus(cfg: &crate::config::GusConfig) -> ServerConfig {
+        ServerConfig {
+            max_concurrent_connections: cfg.max_connections,
+            worker_threads: cfg.rpc_workers,
+            queue_capacity: cfg.rpc_queue,
+        }
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.worker_threads == 0 {
+            crate::util::threadpool::default_parallelism()
+        } else {
+            self.worker_threads
+        }
     }
 }
 
@@ -65,30 +102,214 @@ impl Default for ServerConfig {
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    queue: Arc<RunQueue>,
     join: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and wait for the accept loop to exit.
+    /// Request shutdown and wait for the accept loop and workers to exit.
     pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so accept() returns.
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        self.queue.stop();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        self.shutdown_inner();
+    }
+}
+
+// ---------- run queue + jobs ----------
+
+/// One unit of work: a decoded v1 request bound to its connection.
+struct Job {
+    conn: Arc<ConnShared>,
+    envelope: Envelope,
+    /// When the request was read off the socket (deadlines are relative
+    /// to this instant).
+    received: Instant,
+    /// Per-connection ordering ticket (mutations + checkpoint).
+    order_ticket: Option<u64>,
+}
+
+/// Bounded MPMC run queue shared by every connection reader and worker.
+struct RunQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    stopped: bool,
+}
+
+/// Why a push was rejected.
+enum PushRefusal {
+    /// Queue at capacity: shed with `OVERLOADED`.
+    Full,
+    /// Server shutting down: shed with `UNAVAILABLE`.
+    Stopped,
+}
+
+impl RunQueue {
+    fn new(capacity: usize) -> RunQueue {
+        RunQueue {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), stopped: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking admission: enqueue or refuse immediately — shedding
+    /// at the door is what keeps admitted requests' tail latency flat.
+    fn try_push(&self, job: Job) -> std::result::Result<(), (Job, PushRefusal)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.stopped {
+            return Err((job, PushRefusal::Stopped));
+        }
+        if g.jobs.len() >= self.capacity {
+            return Err((job, PushRefusal::Full));
+        }
+        g.jobs.push_back(job);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once stopped *and* drained (workers finish
+    /// accepted work before exiting).
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = g.jobs.pop_front() {
+                return Some(job);
+            }
+            if g.stopped {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn stop(&self) {
+        self.inner.lock().unwrap().stopped = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Per-connection state shared between its reader and the workers.
+struct ConnShared {
+    gus: Arc<DynamicGus>,
+    writer: Mutex<BufWriter<TcpStream>>,
+    gate: OrderGate,
+    /// Set after a write failure (client gone, or a non-reading client
+    /// whose socket timed out): further responses to this connection are
+    /// dropped instead of stalling shared workers on a dead socket.
+    dead: AtomicBool,
+}
+
+/// Ticket gate serializing one connection's ordered ops (mutations +
+/// checkpoint) in submission order — **without parking worker threads**.
+/// Tickets are handed out by the (single) reader thread in read order
+/// and only for admitted requests, so they are dense. A worker whose
+/// job's turn has not yet come *parks the job* (not itself) and moves
+/// on; whoever finishes the current turn chains parked successors.
+struct OrderGate {
+    inner: Mutex<GateInner>,
+    /// Wakes the legacy inline path, which (alone) blocks for its turn.
+    cv: Condvar,
+}
+
+struct GateInner {
+    /// The ticket whose turn it is now.
+    next: u64,
+    /// Jobs dequeued before their turn, keyed by ticket.
+    parked: std::collections::BTreeMap<u64, Job>,
+}
+
+impl OrderGate {
+    fn new() -> OrderGate {
+        OrderGate {
+            inner: Mutex::new(GateInner { next: 0, parked: std::collections::BTreeMap::new() }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking turn claim: hands the job back if it is `ticket`'s
+    /// turn right now, otherwise parks it for the current turn holder to
+    /// chain (see [`OrderGate::advance`]) and returns `None`.
+    fn claim_or_park(&self, ticket: u64, job: Job) -> Option<Job> {
+        let mut g = self.inner.lock().unwrap();
+        if g.next == ticket {
+            Some(job)
+        } else {
+            g.parked.insert(ticket, job);
+            None
+        }
+    }
+
+    /// Block until `ticket`'s turn (legacy inline path only — the reader
+    /// thread may block, shared workers never do).
+    fn wait_turn(&self, ticket: u64) {
+        let mut g = self.inner.lock().unwrap();
+        while g.next != ticket {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Finish the current turn: advance, wake a blocked legacy reader,
+    /// and hand back the successor's job if it was already parked — the
+    /// caller chain-executes it so no ordered op is ever orphaned.
+    fn advance(&self) -> Option<Job> {
+        let mut g = self.inner.lock().unwrap();
+        g.next += 1;
+        let turn = g.next;
+        let chained = g.parked.remove(&turn);
+        drop(g);
+        self.cv.notify_all();
+        chained
+    }
+}
+
+impl ConnShared {
+    /// Serialize + write one response line. Failures (client gone, or a
+    /// non-reading client hitting the socket write timeout) mark the
+    /// connection dead so shared workers stop paying for it; the reader
+    /// then observes EOF/error and winds the connection down.
+    fn send(&self, wire: &Json) {
+        if self.dead.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut w = self.writer.lock().unwrap();
+        if self.dead.load(Ordering::Relaxed) {
+            return;
+        }
+        let ok = w
+            .write_all(wire.dump().as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush());
+        if ok.is_err() {
+            self.dead.store(true, Ordering::Relaxed);
         }
     }
 }
+
+// ---------- serving ----------
 
 /// Start serving `gus` on `addr` (e.g. "127.0.0.1:0" for an ephemeral
 /// port). Returns immediately with a handle.
@@ -96,7 +317,23 @@ pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<S
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let queue = Arc::new(RunQueue::new(config.queue_capacity));
+
+    let workers = (0..config.resolved_workers())
+        .map(|i| {
+            let queue = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name(format!("gus-server-worker-{i}"))
+                .spawn(move || {
+                    while let Some(job) = queue.pop() {
+                        run_job(job);
+                    }
+                })
+        })
+        .collect::<std::io::Result<Vec<_>>>()?;
+
     let stop2 = Arc::clone(&stop);
+    let queue2 = Arc::clone(&queue);
     let active = Arc::new(AtomicUsize::new(0));
     let join = std::thread::Builder::new()
         .name("gus-server-accept".into())
@@ -107,173 +344,280 @@ pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<S
                 }
                 let Ok(stream) = conn else { continue };
                 if active.load(Ordering::SeqCst) >= config.max_concurrent_connections {
-                    // Backpressure: refuse (client sees EOF and retries).
-                    drop(stream);
+                    refuse_connection(&gus, stream);
                     continue;
                 }
                 active.fetch_add(1, Ordering::SeqCst);
                 let gus = Arc::clone(&gus);
                 let active = Arc::clone(&active);
+                let queue = Arc::clone(&queue2);
                 let _ = std::thread::Builder::new()
                     .name("gus-server-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(&gus, stream);
+                        let _ = handle_connection(gus, queue, stream);
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
             }
         })?;
-    Ok(ServerHandle { addr: local, stop, join: Some(join) })
+    Ok(ServerHandle { addr: local, stop, queue, join: Some(join), workers })
 }
 
-fn handle_connection(gus: &DynamicGus, stream: TcpStream) -> Result<()> {
+/// Over the connection cap: answer with one final `OVERLOADED` error
+/// (connection-level, so no `id`) and close — a structured refusal the
+/// client can distinguish from a network failure — and count it.
+fn refuse_connection(gus: &DynamicGus, stream: TcpStream) {
+    gus.metrics.counters.refused.fetch_add(1, Ordering::Relaxed);
+    let resp = Response::error(
+        ErrorCode::Overloaded,
+        "connection refused: server at max_concurrent_connections; retry",
+    );
+    let mut w = BufWriter::new(stream);
+    let _ = w.write_all(resp.to_wire(None).dump().as_bytes());
+    let _ = w.write_all(b"\n");
+    let _ = w.flush();
+    // Dropping `w` closes the socket.
+}
+
+/// Per-connection reader loop: decode each line, execute legacy requests
+/// inline (serial, in order), enqueue v1 requests on the worker pool.
+fn handle_connection(
+    gus: Arc<DynamicGus>,
+    queue: Arc<RunQueue>,
+    stream: TcpStream,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Response writes happen on shared workers; a client that stops
+    // reading must cost at most one bounded stall, not a wedged pool —
+    // the first timed-out write marks the connection dead (see
+    // [`ConnShared::send`]).
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
     let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let conn = Arc::new(ConnShared {
+        gus: Arc::clone(&gus),
+        writer: Mutex::new(BufWriter::new(stream)),
+        gate: OrderGate::new(),
+        dead: AtomicBool::new(false),
+    });
+    // Next mutation ticket; only the reader assigns tickets, and only
+    // for admitted requests, so the gate sequence has no holes.
+    let mut next_ticket = 0u64;
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let response = dispatch(gus, &line);
-        writer.write_all(response.dump().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let received = Instant::now();
+        match decode_request(&line) {
+            Err(e) => {
+                // When the envelope header was readable, echo its id so a
+                // pipelined client can match the failure; otherwise the
+                // error is connection-level (legacy-shaped).
+                gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                let resp = Response::Error { code: e.error.code, message: e.error.message };
+                conn.send(&resp.to_wire(e.id));
+            }
+            Ok(Incoming::Legacy(request)) => {
+                // Legacy dialect: strictly serial, in-order, on this
+                // thread — byte-compatible with the pre-envelope server.
+                // Ordered ops still take a gate ticket so their order
+                // holds even against pipelined v1 mutations. The reader
+                // (alone) may block for its turn; it then also chains
+                // any parked v1 successors.
+                let ticket = request.is_ordered().then(|| {
+                    let t = next_ticket;
+                    next_ticket += 1;
+                    t
+                });
+                if let Some(t) = ticket {
+                    conn.gate.wait_turn(t);
+                }
+                let resp = execute(&gus, request);
+                conn.send(&resp.to_wire(None));
+                if ticket.is_some() {
+                    finish_ordered_turn(&conn);
+                }
+            }
+            Ok(Incoming::V1(envelope)) => {
+                let id = envelope.id;
+                let order_ticket = envelope.request.is_ordered().then_some(next_ticket);
+                let job = Job { conn: Arc::clone(&conn), envelope, received, order_ticket };
+                match queue.try_push(job) {
+                    Ok(()) => {
+                        if order_ticket.is_some() {
+                            next_ticket += 1;
+                        }
+                    }
+                    Err((job, refusal)) => {
+                        // Refused jobs never took a ticket, so the gate
+                        // sequence stays dense.
+                        let (code, msg) = match refusal {
+                            PushRefusal::Full => {
+                                gus.metrics
+                                    .counters
+                                    .overloaded
+                                    .fetch_add(1, Ordering::Relaxed);
+                                (ErrorCode::Overloaded, "run queue full; retry (server saturated)")
+                            }
+                            PushRefusal::Stopped => {
+                                (ErrorCode::Unavailable, "server shutting down")
+                            }
+                        };
+                        gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        job.conn.send(&Response::error(code, msg).to_wire(Some(id)));
+                    }
+                }
+            }
+        }
     }
     Ok(())
 }
 
-/// Decode one request line, execute, encode the response.
-pub fn dispatch(gus: &DynamicGus, line: &str) -> Json {
-    match dispatch_inner(gus, line) {
-        Ok(j) => j,
+/// Run one admitted v1 job on a worker. Unordered ops execute
+/// immediately; ordered ops (mutations + checkpoint) execute when their
+/// per-connection turn arrives — a job whose turn is pending is parked
+/// on the gate (the worker moves on to other work) and chain-executed by
+/// whoever finishes the preceding turn.
+fn run_job(job: Job) {
+    let Some(ticket) = job.order_ticket else {
+        execute_and_send(job);
+        return;
+    };
+    let conn = Arc::clone(&job.conn);
+    let Some(job) = conn.gate.claim_or_park(ticket, job) else { return };
+    execute_and_send(job);
+    finish_ordered_turn(&conn);
+}
+
+/// Finish an ordered op's turn on `conn`: advance the gate and
+/// chain-execute any parked successors whose turns arrive.
+fn finish_ordered_turn(conn: &ConnShared) {
+    let mut chained = conn.gate.advance();
+    while let Some(job) = chained {
+        execute_and_send(job);
+        chained = conn.gate.advance();
+    }
+}
+
+/// Deadline-check, execute, and answer one v1 job (no gate logic).
+fn execute_and_send(job: Job) {
+    let gus = &job.conn.gus;
+    // `checked_add`: an absurd deadline_ms must saturate to "never
+    // expires", not panic the worker.
+    let expired = match job.envelope.deadline_ms {
+        None => false,
+        Some(ms) => job
+            .received
+            .checked_add(Duration::from_millis(ms))
+            .is_some_and(|deadline| Instant::now() >= deadline),
+    };
+    let resp = if expired {
+        gus.metrics.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+        Response::error(
+            ErrorCode::DeadlineExceeded,
+            format!(
+                "deadline of {}ms expired before execution",
+                job.envelope.deadline_ms.unwrap_or(0)
+            ),
+        )
+    } else {
+        execute(gus, job.envelope.request)
+    };
+    job.conn.send(&resp.to_wire(Some(job.envelope.id)));
+}
+
+// ---------- typed dispatch ----------
+
+/// Execute one decoded request against the service. Every failure is a
+/// structured [`Response::Error`]; the `errors` counter advances once
+/// per failure.
+pub fn execute(gus: &DynamicGus, req: Request) -> Response {
+    let resp = match execute_inner(gus, req) {
+        Ok(resp) => resp,
         Err(e) => {
-            gus.metrics
-                .counters
-                .errors
-                .fetch_add(1, Ordering::Relaxed);
-            Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(format!("{e}"))),
-            ])
+            let msg = format!("{e}");
+            Response::Error { code: classify_error(&msg), message: msg }
+        }
+    };
+    if resp.is_error() {
+        gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    resp
+}
+
+fn execute_inner(gus: &DynamicGus, req: Request) -> Result<Response> {
+    let default_k = gus.config().scann_nn;
+    match req {
+        Request::Insert { point } => {
+            Ok(Response::Existed { existed: gus.insert(point)? })
+        }
+        Request::Delete { id } => Ok(Response::Existed { existed: gus.delete(id)? }),
+        Request::Query { point, k } => Ok(Response::Neighbors {
+            neighbors: gus.query(&point, k.unwrap_or(default_k))?,
+        }),
+        Request::QueryId { id, k } => Ok(Response::Neighbors {
+            neighbors: gus.query_by_id(id, k.unwrap_or(default_k))?,
+        }),
+        Request::InsertBatch { points } => {
+            Ok(Response::ExistedBatch { existed: gus.insert_batch(points)? })
+        }
+        Request::DeleteBatch { ids } => {
+            Ok(Response::ExistedBatch { existed: gus.delete_batch(&ids)? })
+        }
+        Request::QueryBatch { points, k } => Ok(Response::Results {
+            results: gus.query_batch(&points, k.unwrap_or(default_k))?,
+        }),
+        // Checkpoint failures are the server's state/fault (no WAL
+        // attached, disk full, I/O error) — always UNAVAILABLE, never
+        // left to message-based classification.
+        Request::Checkpoint => Ok(match gus.checkpoint() {
+            Ok(seq) => Response::Checkpoint { seq },
+            Err(e) => Response::error(ErrorCode::Unavailable, format!("{e}")),
+        }),
+        Request::Stats => Ok(Response::Stats { stats: gus.stats_json() }),
+        Request::RefreshTables => {
+            anyhow::bail!("'refresh_tables' is WAL-internal, not a wire op")
         }
     }
 }
 
-fn dispatch_inner(gus: &DynamicGus, line: &str) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let op = req
-        .get("op")
-        .as_str()
-        .ok_or_else(|| anyhow::anyhow!("missing 'op'"))?;
-    match op {
-        "insert" | "update" => {
-            let p = Point::from_json(req.get("point"))
-                .ok_or_else(|| anyhow::anyhow!("missing/bad 'point'"))?;
-            let existed = gus.insert(p)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("existed", Json::Bool(existed)),
-            ]))
+/// Map a coordinator error message onto a protocol error code. The
+/// vendored `anyhow` has no downcasting, so classification keys on the
+/// two stable message markers; everything else — schema violations,
+/// malformed fields — is the caller's fault.
+fn classify_error(msg: &str) -> ErrorCode {
+    if msg.contains("unknown point") {
+        ErrorCode::NotFound
+    } else if msg.contains("WAL") {
+        ErrorCode::Unavailable
+    } else {
+        ErrorCode::BadRequest
+    }
+}
+
+/// Decode one request line in either dialect, execute it, and encode the
+/// response in the matching dialect. This is the serial reference path
+/// (unit tests, tools); the served path adds scheduling around the same
+/// `decode → execute → encode` pipeline.
+pub fn dispatch(gus: &DynamicGus, line: &str) -> Json {
+    match decode_request(line) {
+        Err(e) => {
+            gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+            Response::Error { code: e.error.code, message: e.error.message }.to_wire(e.id)
         }
-        "delete" => {
-            let id = req
-                .get("id")
-                .as_u64()
-                .ok_or_else(|| anyhow::anyhow!("missing 'id'"))?;
-            let existed = gus.delete(id)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("existed", Json::Bool(existed)),
-            ]))
-        }
-        "query" | "query_id" => {
-            let k = req.get("k").as_usize().unwrap_or(gus.config().scann_nn);
-            let neighbors = if op == "query" {
-                let p = Point::from_json(req.get("point"))
-                    .ok_or_else(|| anyhow::anyhow!("missing/bad 'point'"))?;
-                gus.query(&p, k)?
+        Ok(Incoming::Legacy(request)) => execute(gus, request).to_wire(None),
+        Ok(Incoming::V1(envelope)) => {
+            let expired = envelope.deadline_ms == Some(0);
+            let resp = if expired {
+                gus.metrics.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                Response::error(ErrorCode::DeadlineExceeded, "deadline of 0ms expired")
             } else {
-                let id = req
-                    .get("id")
-                    .as_u64()
-                    .ok_or_else(|| anyhow::anyhow!("missing 'id'"))?;
-                gus.query_by_id(id, k)?
+                execute(gus, envelope.request)
             };
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("neighbors", neighbors_json(&neighbors)),
-            ]))
+            resp.to_wire(Some(envelope.id))
         }
-        "insert_batch" => {
-            let points = parse_points(&req)?;
-            let existed = gus.insert_batch(points)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("existed", Json::Arr(existed.into_iter().map(Json::Bool).collect())),
-            ]))
-        }
-        "delete_batch" => {
-            let ids = req
-                .get("ids")
-                .as_arr()
-                .ok_or_else(|| anyhow::anyhow!("missing/bad 'ids'"))?
-                .iter()
-                .map(|j| j.as_u64().ok_or_else(|| anyhow::anyhow!("bad id in 'ids'")))
-                .collect::<Result<Vec<u64>>>()?;
-            let existed = gus.delete_batch(&ids)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("existed", Json::Arr(existed.into_iter().map(Json::Bool).collect())),
-            ]))
-        }
-        "query_batch" => {
-            let k = req.get("k").as_usize().unwrap_or(gus.config().scann_nn);
-            let points = parse_points(&req)?;
-            let results = gus.query_batch(&points, k)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("results", Json::Arr(results.iter().map(|r| neighbors_json(r)).collect())),
-            ]))
-        }
-        "checkpoint" => {
-            let seq = gus.checkpoint()?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("seq", Json::u64(seq)),
-            ]))
-        }
-        "stats" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("stats", gus.stats_json()),
-        ])),
-        other => anyhow::bail!("unknown op '{other}'"),
     }
-}
-
-/// Decode the `points` array of a batch request.
-fn parse_points(req: &Json) -> Result<Vec<Point>> {
-    req.get("points")
-        .as_arr()
-        .ok_or_else(|| anyhow::anyhow!("missing/bad 'points'"))?
-        .iter()
-        .map(|j| Point::from_json(j).ok_or_else(|| anyhow::anyhow!("bad point in 'points'")))
-        .collect()
-}
-
-/// Encode a scored-neighbor list.
-fn neighbors_json(neighbors: &[crate::coordinator::ScoredNeighbor]) -> Json {
-    Json::Arr(
-        neighbors
-            .iter()
-            .map(|n| {
-                Json::obj(vec![
-                    ("id", Json::u64(n.id)),
-                    ("score", Json::num(n.score as f64)),
-                    ("dot", Json::num(n.dot as f64)),
-                ])
-            })
-            .collect(),
-    )
 }
 
 #[cfg(test)]
@@ -309,6 +653,24 @@ mod tests {
         // Stats.
         let resp = dispatch(&gus, r#"{"op":"stats"}"#);
         assert_eq!(resp.get("stats").get("points").as_usize(), Some(150));
+        // Legacy responses never carry the v1 header.
+        assert!(resp.get("v").is_null());
+        assert!(resp.get("id").is_null());
+    }
+
+    #[test]
+    fn dispatch_v1_envelope_echoes_id() {
+        let (gus, _ds) = boot();
+        let resp = dispatch(&gus, r#"{"v":1,"id":7,"req":{"op":"query_id","id":3,"k":5}}"#);
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("v").as_u64(), Some(1));
+        assert_eq!(resp.get("id").as_u64(), Some(7));
+        assert!(!resp.get("neighbors").as_arr().unwrap().is_empty());
+        // Errors echo the id too, with a machine-readable code.
+        let resp = dispatch(&gus, r#"{"v":1,"id":8,"req":{"op":"query_id","id":987654321}}"#);
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert_eq!(resp.get("id").as_u64(), Some(8));
+        assert_eq!(resp.get("code").as_str(), Some("NOT_FOUND"));
     }
 
     #[test]
@@ -379,6 +741,7 @@ mod tests {
         ] {
             let resp = dispatch(&gus, bad);
             assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+            assert_eq!(resp.get("code").as_str(), Some("BAD_REQUEST"), "{bad}");
         }
     }
 
@@ -389,6 +752,7 @@ mod tests {
         let resp = dispatch(&gus, r#"{"op":"checkpoint"}"#);
         assert_eq!(resp.get("ok").as_bool(), Some(false));
         assert!(resp.get("error").as_str().unwrap().contains("WAL"));
+        assert_eq!(resp.get("code").as_str(), Some("UNAVAILABLE"));
 
         // With one, it reports the sequence number it covers.
         let dir = std::env::temp_dir().join("gus-server-tests").join("checkpoint");
@@ -426,7 +790,45 @@ mod tests {
             let resp = dispatch(&gus, bad);
             assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
             assert!(resp.get("error").as_str().is_some());
+            assert!(resp.get("code").as_str().is_some(), "{bad}");
         }
         assert!(gus.metrics.counters.errors.load(Ordering::Relaxed) >= 5);
+    }
+
+    #[test]
+    fn dispatch_k_bounds_are_rejected() {
+        let (gus, _) = boot();
+        for bad in [
+            r#"{"op":"query_id","id":3,"k":0}"#,
+            r#"{"op":"query_id","id":3,"k":100000000}"#,
+            r#"{"v":1,"id":2,"req":{"op":"query_id","id":3,"k":0}}"#,
+        ] {
+            let resp = dispatch(&gus, bad);
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+            assert_eq!(resp.get("code").as_str(), Some("BAD_REQUEST"), "{bad}");
+        }
+        // The index was never touched: no queries counted.
+        assert_eq!(gus.metrics.counters.queries.load(Ordering::Relaxed), 0);
+        // refresh_tables is WAL-internal, not a wire op.
+        let resp = dispatch(&gus, r#"{"op":"refresh_tables"}"#);
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn dispatch_expired_deadline_skips_execution() {
+        let (gus, ds) = boot();
+        let mut p = ds.points[0].clone();
+        p.id = 70_000;
+        let req = Envelope {
+            id: 5,
+            deadline_ms: Some(0),
+            request: Request::Insert { point: p },
+        };
+        let resp = dispatch(&gus, &req.to_wire().dump());
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert_eq!(resp.get("code").as_str(), Some("DEADLINE_EXCEEDED"));
+        assert_eq!(resp.get("id").as_u64(), Some(5));
+        assert_eq!(gus.len(), 150, "expired mutation touched the index");
+        assert_eq!(gus.metrics.counters.deadline_exceeded.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,0 +1,336 @@
+//! Protocol-layer conformance: golden wire fixtures, encode↔decode
+//! round-trip properties, and malformed-input behavior.
+//!
+//! The golden fixtures in `tests/fixtures/` pin the wire format byte for
+//! byte — an accidental change to field names, key order, or number
+//! formatting fails here loudly instead of silently breaking clients,
+//! WAL replay, and cross-version compatibility.
+
+use dynamic_gus::coordinator::ScoredNeighbor;
+use dynamic_gus::features::{FeatureValue, Point};
+use dynamic_gus::protocol::{
+    decode_request, Envelope, ErrorCode, Incoming, Request, Response, MAX_K,
+};
+use dynamic_gus::util::json::Json;
+use dynamic_gus::util::rng::Rng;
+
+const REQUEST_FIXTURES: &str = include_str!("fixtures/protocol_v1_requests.txt");
+const RESPONSE_FIXTURES: &str = include_str!("fixtures/protocol_v1_responses.txt");
+
+fn fixture_point(id: u64) -> Point {
+    Point::new(
+        id,
+        vec![FeatureValue::Dense(vec![0.5, -1.5]), FeatureValue::Scalar(2021.0)],
+    )
+}
+
+/// The typed values corresponding, line for line, to
+/// `fixtures/protocol_v1_requests.txt`.
+fn request_fixture_values() -> Vec<Incoming> {
+    vec![
+        Incoming::Legacy(Request::Insert { point: fixture_point(1) }),
+        Incoming::Legacy(Request::Delete { id: 42 }),
+        Incoming::Legacy(Request::Query { point: fixture_point(1), k: Some(5) }),
+        Incoming::Legacy(Request::QueryId { id: 7, k: None }),
+        Incoming::Legacy(Request::InsertBatch {
+            points: vec![fixture_point(1), fixture_point(2)],
+        }),
+        Incoming::Legacy(Request::DeleteBatch { ids: vec![1, 2, 3] }),
+        Incoming::Legacy(Request::QueryBatch { points: vec![fixture_point(9)], k: Some(2) }),
+        Incoming::Legacy(Request::Checkpoint),
+        Incoming::Legacy(Request::Stats),
+        Incoming::Legacy(Request::RefreshTables),
+        Incoming::V1(Envelope {
+            id: 7,
+            deadline_ms: Some(50),
+            request: Request::QueryId { id: 3, k: Some(5) },
+        }),
+        Incoming::V1(Envelope {
+            id: 9,
+            deadline_ms: None,
+            request: Request::Insert { point: fixture_point(1) },
+        }),
+    ]
+}
+
+/// The typed values corresponding, line for line, to
+/// `fixtures/protocol_v1_responses.txt` (`None` id = legacy shape).
+fn response_fixture_values() -> Vec<(Option<u64>, Response)> {
+    let n = |id, score: f32, dot: f32| ScoredNeighbor { id, score, dot };
+    vec![
+        (None, Response::Existed { existed: false }),
+        (None, Response::ExistedBatch { existed: vec![true, false] }),
+        (
+            None,
+            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)] },
+        ),
+        (None, Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]] }),
+        (None, Response::Checkpoint { seq: 1041 }),
+        (
+            None,
+            Response::Stats { stats: Json::obj(vec![("points", Json::num(10.0))]) },
+        ),
+        (None, Response::error(ErrorCode::NotFound, "unknown point 3")),
+        (Some(7), Response::Existed { existed: true }),
+        (
+            Some(9),
+            Response::error(ErrorCode::DeadlineExceeded, "deadline of 50ms expired before execution"),
+        ),
+        (None, Response::error(ErrorCode::Overloaded, "run queue full; retry (server saturated)")),
+    ]
+}
+
+fn encode_incoming(inc: &Incoming) -> String {
+    match inc {
+        Incoming::Legacy(r) => r.to_wire().dump(),
+        Incoming::V1(e) => e.to_wire().dump(),
+    }
+}
+
+#[test]
+fn golden_request_fixtures_are_byte_stable() {
+    let lines: Vec<&str> = REQUEST_FIXTURES.lines().filter(|l| !l.is_empty()).collect();
+    let values = request_fixture_values();
+    assert_eq!(lines.len(), values.len(), "fixture/value count mismatch");
+    for (line, value) in lines.iter().zip(&values) {
+        // Encoding is byte-identical to the checked-in fixture.
+        assert_eq!(&encode_incoming(value), line, "encode drifted for {line}");
+        // The fixture decodes back to the same typed value.
+        let decoded = decode_request(line).unwrap_or_else(|e| panic!("{line}: {e:?}"));
+        assert_eq!(&decoded, value, "decode drifted for {line}");
+    }
+}
+
+#[test]
+fn golden_response_fixtures_are_byte_stable() {
+    let lines: Vec<&str> = RESPONSE_FIXTURES.lines().filter(|l| !l.is_empty()).collect();
+    let values = response_fixture_values();
+    assert_eq!(lines.len(), values.len(), "fixture/value count mismatch");
+    for (line, (id, value)) in lines.iter().zip(&values) {
+        assert_eq!(&value.to_wire(*id).dump(), line, "encode drifted for {line}");
+        let parsed = Json::parse(line).unwrap();
+        let (rid, decoded) = Response::from_wire(&parsed).unwrap();
+        assert_eq!(rid, *id, "{line}");
+        assert_eq!(&decoded, value, "decode drifted for {line}");
+    }
+}
+
+// ---------- round-trip properties ----------
+
+/// Eighth-grid floats survive the f32 → JSON → f32 round trip exactly.
+fn grid_f32(rng: &mut Rng) -> f32 {
+    (rng.below(2001) as f32 - 1000.0) / 8.0
+}
+
+fn random_point(rng: &mut Rng) -> Point {
+    let nf = 1 + rng.below(3) as usize;
+    let features = (0..nf)
+        .map(|_| match rng.below(3) {
+            0 => FeatureValue::Dense((0..rng.below(5)).map(|_| grid_f32(rng)).collect()),
+            1 => FeatureValue::Tokens((0..rng.below(5)).map(|_| rng.below(1 << 60)).collect()),
+            _ => FeatureValue::Scalar(grid_f32(rng)),
+        })
+        .collect();
+    // Ids above 2^53 exercise the string-encoded u64 wire path.
+    Point::new(rng.below(1 << 60), features)
+}
+
+fn random_k(rng: &mut Rng) -> Option<usize> {
+    match rng.below(3) {
+        0 => None,
+        _ => Some(1 + rng.below(MAX_K as u64 - 1) as usize),
+    }
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.below(10) {
+        0 => Request::Insert { point: random_point(rng) },
+        1 => Request::Delete { id: rng.below(1 << 60) },
+        2 => Request::Query { point: random_point(rng), k: random_k(rng) },
+        3 => Request::QueryId { id: rng.below(1 << 60), k: random_k(rng) },
+        4 => Request::InsertBatch {
+            points: (0..rng.below(4)).map(|_| random_point(rng)).collect(),
+        },
+        5 => Request::DeleteBatch {
+            ids: (0..rng.below(6)).map(|_| rng.below(1 << 60)).collect(),
+        },
+        6 => Request::QueryBatch {
+            points: (0..rng.below(4)).map(|_| random_point(rng)).collect(),
+            k: random_k(rng),
+        },
+        7 => Request::Checkpoint,
+        8 => Request::Stats,
+        _ => Request::RefreshTables,
+    }
+}
+
+fn random_neighbors(rng: &mut Rng) -> Vec<ScoredNeighbor> {
+    (0..rng.below(5))
+        .map(|_| ScoredNeighbor {
+            id: rng.below(1 << 60),
+            score: grid_f32(rng),
+            dot: grid_f32(rng),
+        })
+        .collect()
+}
+
+fn random_response(rng: &mut Rng) -> Response {
+    let codes = [
+        ErrorCode::BadRequest,
+        ErrorCode::NotFound,
+        ErrorCode::Unavailable,
+        ErrorCode::DeadlineExceeded,
+        ErrorCode::Overloaded,
+    ];
+    match rng.below(7) {
+        0 => Response::Existed { existed: rng.below(2) == 0 },
+        1 => Response::ExistedBatch {
+            existed: (0..rng.below(6)).map(|_| rng.below(2) == 0).collect(),
+        },
+        2 => Response::Neighbors { neighbors: random_neighbors(rng) },
+        3 => Response::Results {
+            results: (0..rng.below(4)).map(|_| random_neighbors(rng)).collect(),
+        },
+        4 => Response::Checkpoint { seq: rng.below(1 << 60) },
+        5 => Response::Stats {
+            stats: Json::obj(vec![
+                ("points", Json::num(rng.below(100_000) as f64)),
+                ("label", Json::str(format!("s{}", rng.below(10)))),
+            ]),
+        },
+        _ => Response::error(
+            codes[rng.below(codes.len() as u64) as usize],
+            format!("message {}", rng.below(100)),
+        ),
+    }
+}
+
+#[test]
+fn prop_every_request_variant_round_trips() {
+    let mut rng = Rng::seeded(0x7031);
+    for i in 0..500 {
+        let req = random_request(&mut rng);
+        let wire = req.to_wire();
+        let back = Request::from_wire(&wire)
+            .unwrap_or_else(|e| panic!("iter {i}: {e} for {}", wire.dump()));
+        assert_eq!(back, req, "iter {i}: {}", wire.dump());
+        // Dump → parse → decode is the full socket path.
+        let reparsed = Json::parse(&wire.dump()).unwrap();
+        assert_eq!(Request::from_wire(&reparsed).unwrap(), req, "iter {i}");
+    }
+}
+
+#[test]
+fn prop_every_envelope_round_trips() {
+    let mut rng = Rng::seeded(0x7032);
+    for i in 0..300 {
+        let env = Envelope {
+            id: rng.below(1 << 60),
+            deadline_ms: if rng.below(2) == 0 { None } else { Some(rng.below(100_000)) },
+            request: random_request(&mut rng),
+        };
+        match decode_request(&env.to_wire().dump()) {
+            Ok(Incoming::V1(back)) => assert_eq!(back, env, "iter {i}"),
+            other => panic!("iter {i}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_every_response_variant_round_trips() {
+    let mut rng = Rng::seeded(0x7033);
+    for i in 0..500 {
+        let resp = random_response(&mut rng);
+        let id = if rng.below(2) == 0 { None } else { Some(rng.below(1 << 60)) };
+        let wire = resp.to_wire(id).dump();
+        let parsed = Json::parse(&wire).unwrap();
+        let (rid, back) = Response::from_wire(&parsed)
+            .unwrap_or_else(|e| panic!("iter {i}: {e} for {wire}"));
+        assert_eq!(rid, id, "iter {i}: {wire}");
+        assert_eq!(back, resp, "iter {i}: {wire}");
+    }
+}
+
+// ---------- malformed inputs ----------
+
+#[test]
+fn malformed_requests_are_typed_errors() {
+    // (line, is_v1_shaped, message fragment)
+    let cases: &[(&str, bool, &str)] = &[
+        // Truncated / not JSON.
+        ("{\"v\":1", false, "bad json"),
+        ("", false, "bad json"),
+        ("[1,2,3]", false, "request must be a JSON object"),
+        ("\"insert\"", false, "request must be a JSON object"),
+        // Legacy shape errors.
+        (r#"{"op":"teleport"}"#, false, "unknown op"),
+        (r#"{"op":"insert"}"#, false, "missing/bad 'point'"),
+        (r#"{"op":"insert","point":{"id":1}}"#, false, "missing/bad 'point'"),
+        (r#"{"op":"delete","id":"abc"}"#, false, "missing/bad 'id'"),
+        (r#"{"op":"delete_batch","ids":[1,null]}"#, false, "missing/bad 'ids'"),
+        (r#"{"op":"query_batch","points":{}}"#, false, "missing/bad 'points'"),
+        // k bounds (the regression the redesign fixes).
+        (r#"{"op":"query_id","id":1,"k":0}"#, false, "'k' must be >= 1"),
+        (r#"{"op":"query","point":{"features":[],"id":1},"k":0}"#, false, "'k' must be >= 1"),
+        (r#"{"op":"query_id","id":1,"k":70000}"#, false, "exceeds maximum"),
+        (r#"{"op":"query_id","id":1,"k":true}"#, false, "non-negative integer"),
+        // Envelope header errors.
+        (r#"{"v":2,"id":1,"req":{"op":"stats"}}"#, true, "unsupported protocol version 2"),
+        (r#"{"v":"one","id":1,"req":{"op":"stats"}}"#, true, "'v' must be an integer"),
+        (r#"{"v":1,"req":{"op":"stats"}}"#, true, "missing 'id'"),
+        (r#"{"v":1,"id":true,"req":{"op":"stats"}}"#, true, "missing 'id'"),
+        (r#"{"v":1,"id":3}"#, true, "missing 'req'"),
+        (r#"{"v":1,"id":3,"req":17}"#, true, "request must be a JSON object"),
+        (r#"{"v":1,"id":3,"deadline_ms":-1,"req":{"op":"stats"}}"#, true, "deadline_ms"),
+        (r#"{"v":1,"id":3,"deadline_ms":1.5,"req":{"op":"stats"}}"#, true, "deadline_ms"),
+        (r#"{"v":1,"id":3,"req":{"op":"warp"}}"#, true, "unknown op"),
+    ];
+    for (line, v1, fragment) in cases {
+        let err = decode_request(line).expect_err(line);
+        assert_eq!(err.v1, *v1, "{line}");
+        assert_eq!(err.error.code, ErrorCode::BadRequest, "{line}");
+        assert!(
+            err.error.message.contains(fragment),
+            "{line}: got '{}', wanted '{fragment}'",
+            err.error.message
+        );
+    }
+}
+
+#[test]
+fn envelope_errors_echo_the_correlation_id_when_readable() {
+    let err = decode_request(r#"{"v":1,"id":77,"req":{"op":"warp"}}"#).unwrap_err();
+    assert_eq!(err.id, Some(77));
+    let err = decode_request(r#"{"v":2,"id":78,"req":{"op":"stats"}}"#).unwrap_err();
+    assert_eq!(err.id, Some(78));
+    // Unreadable header: no id to echo.
+    let err = decode_request(r#"{"v":1,"req":{"op":"stats"}}"#).unwrap_err();
+    assert_eq!(err.id, None);
+}
+
+#[test]
+fn truncated_lines_never_panic() {
+    for line in REQUEST_FIXTURES.lines().chain(RESPONSE_FIXTURES.lines()) {
+        for cut in 0..line.len() {
+            // Any prefix must produce a Result, never a panic.
+            let _ = decode_request(&line[..cut]);
+            if let Ok(j) = Json::parse(&line[..cut]) {
+                let _ = Response::from_wire(&j);
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_responses_are_errors() {
+    for line in [
+        r#"{"neighbors":[{"score":1}],"ok":true}"#, // neighbor missing id
+        r#"{"ok":true}"#,                           // no recognizable payload
+        r#"{"existed":[1,2],"ok":true}"#,           // wrong-typed entries
+        r#"{"ok":"yes"}"#,                          // wrong-typed ok
+        "[]",                                       // not an object
+    ] {
+        let j = Json::parse(line).unwrap();
+        assert!(Response::from_wire(&j).is_err(), "{line}");
+    }
+}

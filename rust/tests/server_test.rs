@@ -1,4 +1,13 @@
 //! End-to-end RPC tests: real TCP server + client over the wire protocol.
+//!
+//! The pre-envelope tests (everything up to
+//! `backpressure_refuses_excess_connections`) are behaviorally unchanged
+//! from before the protocol-v1 redesign — they prove legacy clients and
+//! the one-shot client API keep working against the reworked server.
+//! (One mechanical edit: a `ServerConfig` literal gained
+//! `..ServerConfig::default()` for the new scheduling fields.) The v1
+//! tests after them cover pipelining, deadlines, overload shedding, and
+//! mixed-dialect connections.
 
 use std::sync::Arc;
 
@@ -6,6 +15,7 @@ use dynamic_gus::client::GusClient;
 use dynamic_gus::config::{GusConfig, ScorerKind};
 use dynamic_gus::coordinator::DynamicGus;
 use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::protocol::Request;
 use dynamic_gus::server::{serve, ServerConfig};
 
 fn boot_server(
@@ -170,7 +180,7 @@ fn backpressure_refuses_excess_connections() {
     let handle = serve(
         Arc::clone(&gus),
         "127.0.0.1:0",
-        ServerConfig { max_concurrent_connections: 1 },
+        ServerConfig { max_concurrent_connections: 1, ..ServerConfig::default() },
     )
     .unwrap();
     let addr = handle.addr.to_string();
@@ -191,5 +201,282 @@ fn backpressure_refuses_excess_connections() {
     assert!(refused > 0, "backpressure never engaged");
     // The admitted connection still works.
     assert!(c1.stats().is_ok());
+    handle.shutdown();
+}
+
+// ---------- protocol v1: pipelining, deadlines, overload ----------
+
+/// Acceptance: one v1 connection, pipeline depth 64, mixed insert/query
+/// workload. Responses complete out of order on the worker pool and are
+/// matched back by correlation id; mutations apply in submission order
+/// (proved by the deterministic existed-flag sequence on a reused id).
+#[test]
+fn pipelined_v1_depth64_mixed_workload() {
+    let (handle, gus, ds) = boot_server(300);
+    let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();
+
+    #[derive(Debug)]
+    enum Want {
+        Existed(bool),
+        Neighbors,
+    }
+    let mut expected: Vec<(u64, Want)> = Vec::new();
+
+    // Fill the pipe with 64 requests before reading anything back:
+    // 4 rounds of (insert fresh → insert again → delete → delete again)
+    // interleaved with 48 queries. The submission-order guarantee makes
+    // every existed flag deterministic even though workers run
+    // concurrently.
+    for round in 0..4u64 {
+        let mut fresh = ds.points[round as usize].clone();
+        fresh.id = 90_000 + round;
+        let id = client.submit(Request::Insert { point: fresh.clone() }).unwrap();
+        expected.push((id, Want::Existed(false)));
+        for q in 0..6 {
+            let id = client
+                .submit(Request::QueryId { id: ds.points[(round as usize) * 7 + q].id, k: Some(5) })
+                .unwrap();
+            expected.push((id, Want::Neighbors));
+        }
+        let id = client.submit(Request::Insert { point: fresh.clone() }).unwrap();
+        expected.push((id, Want::Existed(true))); // second insert = update
+        for q in 6..12 {
+            let id = client
+                .submit(Request::QueryId { id: ds.points[(round as usize) * 7 + q].id, k: Some(5) })
+                .unwrap();
+            expected.push((id, Want::Neighbors));
+        }
+        let id = client.submit(Request::Delete { id: fresh.id }).unwrap();
+        expected.push((id, Want::Existed(true))); // was present
+        let id = client.submit(Request::Delete { id: fresh.id }).unwrap();
+        expected.push((id, Want::Existed(false))); // already gone
+    }
+    assert_eq!(expected.len(), 64);
+
+    // Drain in an order unrelated to submission (largest id first, then
+    // the evens, then the rest) — the parking buffer must hand every
+    // response to the wait() that asked for its id.
+    expected.reverse();
+    let (evens, odds): (Vec<_>, Vec<_>) = expected.into_iter().partition(|(id, _)| id % 2 == 0);
+    for (id, want) in evens.into_iter().chain(odds) {
+        match want {
+            Want::Existed(want) => {
+                let got = client.wait_existed(id).unwrap();
+                assert_eq!(got, want, "request {id}");
+            }
+            Want::Neighbors => {
+                let ns = client.wait_neighbors(id).unwrap();
+                assert!(ns.len() <= 5);
+                assert!(!ns.is_empty(), "request {id}");
+            }
+        }
+    }
+    // All mutations net out: corpus back to its boot size.
+    assert_eq!(gus.len(), 300);
+    handle.shutdown();
+}
+
+/// Legacy (un-enveloped) and v1 requests interleave on one socket:
+/// legacy lines get legacy-shaped responses in order, v1 lines get
+/// id-echoing envelope responses.
+#[test]
+fn mixed_legacy_and_v1_on_one_connection() {
+    use std::io::{BufRead, BufReader, Write};
+    let (handle, _gus, _ds) = boot_server(100);
+    let stream = std::net::TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let read_json = |reader: &mut BufReader<std::net::TcpStream>| {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        dynamic_gus::util::json::Json::parse(line.trim()).unwrap()
+    };
+
+    // Legacy request → legacy response (no v/id header).
+    writeln!(w, r#"{{"op":"query_id","id":3,"k":4}}"#).unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j:?}");
+    assert!(j.get("v").is_null());
+    assert!(j.get("id").is_null());
+
+    // v1 request on the same socket → envelope response echoing the id.
+    writeln!(w, r#"{{"v":1,"id":501,"req":{{"op":"query_id","id":3,"k":4}}}}"#).unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j:?}");
+    assert_eq!(j.get("v").as_u64(), Some(1));
+    assert_eq!(j.get("id").as_u64(), Some(501));
+
+    // Back to legacy: still served, still un-enveloped.
+    writeln!(w, r#"{{"op":"stats"}}"#).unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    assert!(j.get("v").is_null());
+    assert_eq!(j.get("stats").get("points").as_usize(), Some(100));
+
+    // v1 error: unknown op inside a valid envelope echoes the id with a
+    // machine-readable code.
+    writeln!(w, r#"{{"v":1,"id":502,"req":{{"op":"warp"}}}}"#).unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("ok").as_bool(), Some(false));
+    assert_eq!(j.get("id").as_u64(), Some(502));
+    assert_eq!(j.get("code").as_str(), Some("BAD_REQUEST"));
+    handle.shutdown();
+}
+
+/// An already-expired deadline is answered DEADLINE_EXCEEDED without
+/// touching the index, and the rejection is visible in `stats`.
+#[test]
+fn expired_deadline_is_rejected_before_execution() {
+    let (handle, gus, ds) = boot_server(100);
+    let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();
+
+    client.set_deadline_ms(Some(0)); // expired on arrival
+    let mut fresh = ds.points[0].clone();
+    fresh.id = 91_000;
+    let id = client.submit(Request::Insert { point: fresh }).unwrap();
+    let err = client.wait(id).unwrap_err();
+    assert!(format!("{err}").contains("DEADLINE_EXCEEDED"), "{err}");
+    assert_eq!(gus.len(), 100, "expired mutation reached the index");
+    assert!(!gus.contains(91_000));
+
+    // A generous deadline passes.
+    client.set_deadline_ms(Some(60_000));
+    let ns = client.query_id(ds.points[1].id, 5).unwrap();
+    assert!(!ns.is_empty());
+
+    // The rejection is observable as a counter in stats.
+    client.set_deadline_ms(None);
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("counters").get("deadline_exceeded").as_u64(),
+        Some(1),
+        "{stats:?}"
+    );
+    handle.shutdown();
+}
+
+/// With a single worker and a single queue slot, a pipelined burst must
+/// be shed with structured OVERLOADED responses (never a dropped
+/// connection), while admitted requests still complete.
+#[test]
+fn saturation_sheds_with_overloaded_response() {
+    let ds = SyntheticConfig::arxiv_like(500, 0x53).generate();
+    let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap());
+    let handle = serve(
+        Arc::clone(&gus),
+        "127.0.0.1:0",
+        ServerConfig {
+            max_concurrent_connections: 4,
+            worker_threads: 1,
+            queue_capacity: 1,
+        },
+    )
+    .unwrap();
+    let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();
+
+    let n = 200usize;
+    let ids: Vec<u64> = (0..n)
+        .map(|i| {
+            client
+                .submit(Request::QueryId { id: ds.points[i % 500].id, k: Some(20) })
+                .unwrap()
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut overloaded = 0usize;
+    for id in ids {
+        match client.wait_neighbors(id) {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                let msg = format!("{e}");
+                assert!(msg.contains("OVERLOADED"), "unexpected error: {msg}");
+                overloaded += 1;
+            }
+        }
+    }
+    assert_eq!(ok + overloaded, n);
+    assert!(ok >= 1, "nothing was admitted");
+    assert!(overloaded >= 1, "nothing was shed: queue never saturated");
+    // The shed count is observable in stats (the connection is still
+    // perfectly usable after 200 mixed outcomes).
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("counters").get("overloaded").as_u64(),
+        Some(overloaded as u64),
+        "{stats:?}"
+    );
+    handle.shutdown();
+}
+
+/// Connections beyond the cap receive one final OVERLOADED error
+/// response before the socket closes — a structured refusal, not a
+/// silent drop — and are counted in the `refused` stat.
+#[test]
+fn refused_connection_gets_final_overloaded_response() {
+    use std::io::{BufRead, BufReader};
+    let ds = SyntheticConfig::arxiv_like(50, 0x54).generate();
+    let cfg = GusConfig { scorer: ScorerKind::Native, ..GusConfig::default() };
+    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 1).unwrap());
+    let handle = serve(
+        Arc::clone(&gus),
+        "127.0.0.1:0",
+        ServerConfig { max_concurrent_connections: 1, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    // Hold the only slot.
+    let mut c1 = GusClient::connect(&addr).unwrap();
+    assert!(c1.stats().is_ok());
+    // Refused connections read a structured OVERLOADED line, then EOF.
+    let mut saw_refusal = false;
+    for _ in 0..10 {
+        let stream = std::net::TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            // Raced an accept; not a refusal.
+            continue;
+        }
+        let j = dynamic_gus::util::json::Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false), "{line}");
+        assert_eq!(j.get("code").as_str(), Some("OVERLOADED"), "{line}");
+        // EOF follows the refusal line.
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "socket stayed open");
+        saw_refusal = true;
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(saw_refusal, "backpressure never engaged");
+    let stats = c1.stats().unwrap();
+    assert!(
+        stats.get("counters").get("refused").as_u64().unwrap() >= 1,
+        "{stats:?}"
+    );
+    handle.shutdown();
+}
+
+/// k bounds are enforced at decode time over the wire: k=0 and absurd k
+/// are BAD_REQUEST; the connection stays usable and the index is never
+/// queried.
+#[test]
+fn k_bounds_are_rejected_over_the_wire() {
+    let (handle, gus, ds) = boot_server(100);
+    let mut client = GusClient::connect(&handle.addr.to_string()).unwrap();
+    for bad_k in [0usize, dynamic_gus::protocol::MAX_K + 1, 1 << 40] {
+        let id = client
+            .submit(Request::QueryId { id: ds.points[0].id, k: Some(bad_k) })
+            .unwrap();
+        let err = client.wait(id).unwrap_err();
+        assert!(format!("{err}").contains("BAD_REQUEST"), "k={bad_k}: {err}");
+        let id = client
+            .submit(Request::QueryBatch { points: vec![ds.points[0].clone()], k: Some(bad_k) })
+            .unwrap();
+        assert!(client.wait(id).is_err(), "k={bad_k}");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(gus.metrics.counters.queries.load(Ordering::Relaxed), 0);
+    // Valid k still answers on the same connection.
+    assert!(!client.query_id(ds.points[0].id, 5).unwrap().is_empty());
     handle.shutdown();
 }

@@ -1,0 +1,112 @@
+//! Scan-kernel microbench: `SparseAnn::scan_postings` in isolation.
+//!
+//! Every `top_k`/`threshold`/`query_batch` RPC bottoms out in this loop,
+//! so its postings/sec IS the serving ceiling. The grid isolates the two
+//! effects the SoA refactor targets:
+//!
+//! - **tombstone density** (1% / 25% / 75% dead postings): validation cost
+//!   is one 4-byte compare against the dense generation array, so skipping
+//!   tombstones should stay cheap as density grows (pre-SoA it was a
+//!   ~64-byte `Slot` dereference — a likely cache miss — per posting);
+//! - **budget + dim order**: budgeted rows compare selectivity order
+//!   against the seed's query order on identical scan volume.
+//!
+//! Results land in `results/bench/hot_path.json` and are merged into the
+//! repo-root `BENCH_index.json` perf-trajectory file together with
+//! derived postings/sec figures. Regenerate with:
+//!
+//! ```text
+//! cd rust && cargo bench --bench hot_path
+//! ```
+
+use std::collections::BTreeMap;
+
+use dynamic_gus::bench::Bencher;
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::embed::EmbeddingGenerator;
+use dynamic_gus::index::{DimOrder, QueryParams, QueryScratch, SparseAnn};
+use dynamic_gus::lsh::Bucketer;
+use dynamic_gus::sparse::SparseVec;
+use dynamic_gus::util::json::Json;
+
+/// Build an index with ~`dead_fraction` of its postings tombstoned. The
+/// compaction threshold is raised to 0.99 so the density holds instead of
+/// being compacted away; returns the index plus surviving-point query
+/// embeddings.
+fn build(n: usize, dead_fraction: f64, seed: u64) -> (SparseAnn, Vec<SparseVec>) {
+    let ds = SyntheticConfig::arxiv_like(n, seed).generate();
+    let generator = EmbeddingGenerator::plain(Bucketer::with_defaults(&ds.schema, 0xb0a7));
+    let mut index = SparseAnn::with_compact_threshold(0.99);
+    let mut queries = Vec::new();
+    let cut = (dead_fraction * 10_000.0) as u64;
+    for (i, p) in ds.points.iter().enumerate() {
+        let e = generator.embed(p);
+        index.upsert(p.id, e.clone());
+        // Deterministic pseudo-random victim selection at the target rate.
+        if (i as u64).wrapping_mul(7919) % 10_000 < cut {
+            index.remove(p.id);
+        } else if queries.len() < 256 {
+            queries.push(e);
+        }
+    }
+    (index, queries)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut throughput: BTreeMap<String, Json> = BTreeMap::new();
+    let n = 20_000usize;
+    for &(dname, frac) in &[("1pct", 0.01), ("25pct", 0.25), ("75pct", 0.75)] {
+        let (index, queries) = build(n, frac, 0xb2);
+        let st = index.stats();
+        let total_entries = st.live_postings + st.dead_postings;
+        let density = st.dead_postings as f64 / total_entries.max(1) as f64;
+        let budget = (st.live_postings / 20).max(1);
+        let mut scratch = QueryScratch::default();
+        let configs = [
+            ("exact", 0usize, DimOrder::Selectivity),
+            ("budget5pct/selectivity", budget, DimOrder::Selectivity),
+            ("budget5pct/query-order", budget, DimOrder::QueryOrder),
+        ];
+        for &(label, max_postings, order) in &configs {
+            let params = QueryParams { exclude: None, max_postings };
+            // Mean valid postings scored per query over the same rotation
+            // the timed loop uses (the scan is deterministic).
+            let total: usize = queries
+                .iter()
+                .map(|q| index.scan_postings(q, params, order, &mut scratch))
+                .sum();
+            let per_query = total as f64 / queries.len().max(1) as f64;
+            let name = format!("hot_path/scan/dead={dname}/{label}");
+            let mut qi = 0usize;
+            b.bench(&name, || {
+                qi = (qi + 1) % queries.len();
+                index.scan_postings(&queries[qi], params, order, &mut scratch)
+            });
+            // `bench` skips names not matching a CLI filter: only attach
+            // derived figures when this config actually ran.
+            if let Some(r) = b.results().last().filter(|r| r.name == name) {
+                let pps = if r.mean_ns > 0.0 { per_query * 1e9 / r.mean_ns } else { 0.0 };
+                println!(
+                    "    -> {per_query:.0} valid postings/query @ dead={:.1}%  ({:.1} M postings/s)",
+                    density * 100.0,
+                    pps / 1e6
+                );
+                let mut entry = BTreeMap::new();
+                entry.insert("dead_density".to_string(), Json::num(density));
+                entry.insert("postings_per_query".to_string(), Json::num(per_query));
+                entry.insert("postings_per_sec".to_string(), Json::num(pps));
+                entry.insert("mean_ns_per_scan".to_string(), Json::num(r.mean_ns));
+                throughput.insert(name, Json::Obj(entry));
+            }
+        }
+    }
+    b.dump_json("hot_path");
+    b.dump_repo_summary(
+        "hot_path",
+        vec![
+            ("corpus_points".to_string(), Json::num(n as f64)),
+            ("throughput".to_string(), Json::Obj(throughput)),
+        ],
+    );
+}

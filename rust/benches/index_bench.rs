@@ -61,4 +61,5 @@ fn main() {
         });
     }
     b.dump_json("index_bench");
+    b.dump_repo_summary("index_bench", Vec::new());
 }

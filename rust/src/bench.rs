@@ -160,6 +160,60 @@ impl Bencher {
             println!("[bench] wrote {path}");
         }
     }
+
+    /// Merge this target's results into the repo-root `BENCH_index.json`
+    /// — the cross-PR perf-trajectory file (one key per bench target;
+    /// other targets' recorded entries are preserved). `extra` carries
+    /// target-specific derived figures (e.g. postings/sec). Best effort:
+    /// a malformed or missing file is replaced.
+    pub fn dump_repo_summary(&self, target: &str, extra: Vec<(String, Json)>) {
+        let path = repo_root().join("BENCH_index.json");
+        let existing = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok());
+        let doc = merged_summary(existing, target, self.results(), extra);
+        if std::fs::write(&path, doc.dump()).is_ok() {
+            println!("[bench] updated {}", path.display());
+        }
+    }
+}
+
+/// The repo root: `BENCH_index.json` lives one level above the package
+/// root. Resolved at compile time so running a bench binary directly
+/// (outside `cargo bench`, where `CARGO_MANIFEST_DIR` is unset at
+/// runtime) still targets the repo, not the current directory's parent.
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Pure merge step behind [`Bencher::dump_repo_summary`]: replace
+/// `target`'s entry in the (possibly absent/malformed) existing summary,
+/// preserving every other key.
+fn merged_summary(
+    existing: Option<Json>,
+    target: &str,
+    results: &[BenchResult],
+    extra: Vec<(String, Json)>,
+) -> Json {
+    let mut map = match existing {
+        Some(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    let mut entry = std::collections::BTreeMap::new();
+    entry.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    entry.insert("recorded_unix_s".to_string(), Json::u64(unix_s));
+    for (k, v) in extra {
+        entry.insert(k, v);
+    }
+    map.insert(target.to_string(), Json::Obj(entry));
+    Json::Obj(map)
 }
 
 #[cfg(test)]
@@ -203,6 +257,30 @@ mod tests {
         b.bench("yes-match", || 0);
         assert_eq!(b.results().len(), 1);
         assert_eq!(b.results()[0].name, "yes-match");
+    }
+
+    #[test]
+    fn repo_summary_merges_and_preserves_other_targets() {
+        let prior = Json::parse(r#"{"other":{"results":[]},"hot_path":{"stale":true}}"#).unwrap();
+        let results = vec![BenchResult::from_samples("scan", vec![10.0, 20.0, 30.0])];
+        let merged = merged_summary(
+            Some(prior),
+            "hot_path",
+            &results,
+            vec![("postings_per_sec".to_string(), Json::num(1e8))],
+        );
+        assert!(!merged.get("other").is_null(), "unrelated target dropped");
+        let entry = merged.get("hot_path");
+        assert!(entry.get("stale").is_null(), "old entry not replaced");
+        assert_eq!(entry.get("postings_per_sec").as_f64(), Some(1e8));
+        let rows = entry.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").as_str(), Some("scan"));
+        // Malformed/missing existing summaries are replaced, not fatal.
+        let fresh = merged_summary(None, "t", &results, Vec::new());
+        assert!(!fresh.get("t").get("results").is_null());
+        let clobbered = merged_summary(Some(Json::Arr(vec![])), "t", &results, Vec::new());
+        assert!(!clobbered.get("t").is_null());
     }
 
     #[test]

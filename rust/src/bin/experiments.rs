@@ -308,8 +308,10 @@ fn ablation(ctx: &Ctx) -> i32 {
     for (name, n) in &ctx.datasets {
         let ds = ctx.load(name, *n);
         let budgets = [0usize, 1_000, 10_000, 100_000];
-        let rows = dynamic_gus::eval::offline::ablation_max_postings(
-            &ds, 10, &budgets, ctx.threads,
+        // One embed+index pass shared by both budget sweeps.
+        let (index, embeddings) = offline::ablation_setup(&ds, ctx.threads);
+        let rows = offline::ablation_max_postings(
+            &index, &embeddings, &ds, 10, &budgets, ctx.threads,
         );
         let table: Vec<Vec<String>> = rows
             .iter()
@@ -326,6 +328,39 @@ fn ablation(ctx: &Ctx) -> i32 {
             .unwrap();
         let md = format!(
             "## Ablation — {name}: posting-scan budget (ScaNN approximation dial)\n\n{}",
+            report::markdown_table(&hdr, &table)
+        );
+        println!("{md}\n[ablation] wrote {}", p.display());
+        report::append_summary(&md).ok();
+
+        // Dim-order ablation: how the budget is spent (selectivity order
+        // vs the seed's query order) at the same scan volume.
+        let rows = offline::ablation_dim_order(
+            &index, &embeddings, &ds, 10, &budgets, ctx.threads,
+        );
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    if r.budget == 0 { "exact".to_string() } else { r.budget.to_string() },
+                    format!("{:.4}", r.recall_selectivity),
+                    format!("{:.4}", r.recall_query_order),
+                    format!("{:.1}", r.scanned_selectivity),
+                    format!("{:.1}", r.scanned_query_order),
+                ]
+            })
+            .collect();
+        let hdr = [
+            "max_postings",
+            "recall@10 selectivity",
+            "recall@10 query-order",
+            "scanned/query sel",
+            "scanned/query qo",
+        ];
+        let p = report::write_rows_csv(&format!("ablation_dim_order_{name}"), &hdr, &table)
+            .unwrap();
+        let md = format!(
+            "## Ablation — {name}: budgeted-scan dim order (recall per scanned posting)\n\n{}",
             report::markdown_table(&hdr, &table)
         );
         println!("{md}\n[ablation] wrote {}", p.display());

@@ -607,13 +607,19 @@ impl DynamicGus {
         Ok(())
     }
 
-    /// Service stats as JSON (the `stats` RPC).
+    /// Service stats as JSON (the `stats` RPC). Cheap to serve per
+    /// request: the index snapshot is O(shards) — every per-shard figure,
+    /// including the byte estimate, is an incrementally-maintained counter
+    /// (the old implementation walked every slot and posting list here).
     pub fn stats_json(&self) -> Json {
         let ix = self.index.stats();
         Json::obj(vec![
             ("points", Json::num(ix.live_points as f64)),
             ("live_postings", Json::num(ix.live_postings as f64)),
             ("dead_postings", Json::num(ix.dead_postings as f64)),
+            ("distinct_dims", Json::num(ix.distinct_dims as f64)),
+            ("slot_capacity", Json::num(ix.slot_capacity as f64)),
+            ("postings_scanned", Json::u64(ix.postings_scanned)),
             ("index_bytes", Json::num(ix.approx_bytes as f64)),
             ("rss_bytes", Json::num(crate::metrics::current_rss_bytes() as f64)),
             ("peak_rss_bytes", Json::num(crate::metrics::peak_rss_bytes() as f64)),
@@ -765,6 +771,17 @@ mod tests {
         assert_eq!(gus.metrics.query_latency.count(), 2);
         let js = gus.stats_json();
         assert_eq!(js.get("points").as_usize(), Some(101));
+    }
+
+    #[test]
+    fn stats_expose_scan_counter() {
+        let (gus, ds) = boot(150);
+        let before = gus.stats_json().get("postings_scanned").as_u64().unwrap();
+        let _ = gus.query(&ds.points[0], 5).unwrap();
+        let after = gus.stats_json().get("postings_scanned").as_u64().unwrap();
+        assert!(after > before, "scan counter did not advance: {before} -> {after}");
+        assert!(gus.stats_json().get("distinct_dims").as_u64().unwrap() > 0);
+        assert!(gus.stats_json().get("slot_capacity").as_u64().unwrap() >= 150);
     }
 
     #[test]

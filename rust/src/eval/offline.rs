@@ -14,7 +14,7 @@ use crate::coordinator::DynamicGus;
 use crate::data::Dataset;
 use crate::grale::{GraleBuilder, GraleConfig};
 use crate::graph::WeightHistogram;
-use crate::index::{QueryParams, QueryScratch, SparseAnn};
+use crate::index::{DimOrder, QueryParams, QueryScratch, SparseAnn};
 use crate::lsh::Bucketer;
 use crate::preprocess;
 use crate::scorer::PairScorer;
@@ -255,27 +255,21 @@ pub fn fig7(ds: &Dataset, sizes: &[usize], threads: usize) -> Vec<Series> {
 /// budget and reports quality (mean retrieved-edge weight) + mean scan cost
 /// — the recall/latency trade the paper's exact-at-our-scale substitute
 /// otherwise hides. Returns rows (max_postings, mean_weight, directed_edges).
+/// `(index, embeddings)` come from [`ablation_setup`], shared with
+/// [`ablation_dim_order`] so the expensive embed+index phase runs once.
 pub fn ablation_max_postings(
+    index: &SparseAnn,
+    embeddings: &[crate::sparse::SparseVec],
     ds: &Dataset,
     nn: usize,
     budgets: &[usize],
     threads: usize,
 ) -> Vec<(usize, f64, u64)> {
-    let bucketer = Bucketer::with_defaults(&ds.schema, EVAL_LSH_SEED);
-    let cfg = GusConfig { filter_p: 10.0, ..GusConfig::default() };
-    let pre = preprocess::preprocess(&bucketer, &ds.points, &cfg, threads);
-    let generator = preprocess::build_generator(bucketer, &pre);
     let n = ds.points.len();
-    let embeddings: Vec<crate::sparse::SparseVec> =
-        parallel_map(n, threads, |i| generator.embed(&ds.points[i]));
-    let mut index = SparseAnn::new();
-    for (i, e) in embeddings.iter().enumerate() {
-        index.upsert(ds.points[i].id, e.clone());
-    }
     let scorer = DynamicGus::make_scorer(&ds.schema, ScorerKind::Native)
         .expect("native scorer");
     let scorer_ref: &dyn PairScorer = &*scorer;
-    let index_ref = &index;
+    let index_ref = index;
     budgets
         .iter()
         .map(|&budget| {
@@ -310,6 +304,142 @@ pub fn ablation_max_postings(
             (budget, if cnt == 0 { 0.0 } else { sum / cnt as f64 }, cnt)
         })
         .collect()
+}
+
+/// Embed + index a dataset with the best-performing offline params
+/// (Filter-P=10) — the shared setup for the posting-budget ablations
+/// (build once, pass to both sweeps).
+pub fn ablation_setup(
+    ds: &Dataset,
+    threads: usize,
+) -> (SparseAnn, Vec<crate::sparse::SparseVec>) {
+    let bucketer = Bucketer::with_defaults(&ds.schema, EVAL_LSH_SEED);
+    let cfg = GusConfig { filter_p: 10.0, ..GusConfig::default() };
+    let pre = preprocess::preprocess(&bucketer, &ds.points, &cfg, threads);
+    let generator = preprocess::build_generator(bucketer, &pre);
+    let n = ds.points.len();
+    let embeddings: Vec<crate::sparse::SparseVec> =
+        parallel_map(n, threads, |i| generator.embed(&ds.points[i]));
+    let mut index = SparseAnn::new();
+    for (i, e) in embeddings.iter().enumerate() {
+        index.upsert(ds.points[i].id, e.clone());
+    }
+    (index, embeddings)
+}
+
+/// One row of [`ablation_dim_order`].
+#[derive(Debug, Clone, Copy)]
+pub struct DimOrderRow {
+    pub budget: usize,
+    /// Recall@nn vs the exact scan, dims visited shortest-list-first.
+    pub recall_selectivity: f64,
+    /// Recall@nn vs the exact scan, dims visited in query (dim-id) order —
+    /// the seed scan's order, kept as the baseline.
+    pub recall_query_order: f64,
+    /// Mean valid postings scored per query (selectivity order).
+    pub scanned_selectivity: f64,
+    /// Mean valid postings scored per query (query order).
+    pub scanned_query_order: f64,
+}
+
+/// Ablation for the budgeted scan's dim ordering: at each posting budget,
+/// recall@nn against the exact scan for [`DimOrder::Selectivity`] vs
+/// [`DimOrder::QueryOrder`], plus mean postings actually scored per query
+/// (from the index's scan counter) — recall **per scanned posting** is
+/// the figure of merit. Unbudgeted (`budget == 0`) rows are sanity
+/// anchors: both orders are exact there by construction.
+/// `(index, embeddings)` come from [`ablation_setup`].
+pub fn ablation_dim_order(
+    index: &SparseAnn,
+    embeddings: &[crate::sparse::SparseVec],
+    ds: &Dataset,
+    nn: usize,
+    budgets: &[usize],
+    threads: usize,
+) -> Vec<DimOrderRow> {
+    let n = ds.points.len();
+    let index_ref = index;
+    let exact = topk_ids_pass(index_ref, embeddings, ds, nn, 0, DimOrder::Selectivity, threads);
+    budgets
+        .iter()
+        .map(|&budget| {
+            let run = |order: DimOrder| {
+                let before = index_ref.stats().postings_scanned;
+                let got = topk_ids_pass(index_ref, embeddings, ds, nn, budget, order, threads);
+                let scanned =
+                    (index_ref.stats().postings_scanned - before) as f64 / n.max(1) as f64;
+                (recall_vs(&exact, &got), scanned)
+            };
+            let (recall_selectivity, scanned_selectivity) = run(DimOrder::Selectivity);
+            let (recall_query_order, scanned_query_order) = run(DimOrder::QueryOrder);
+            DimOrderRow {
+                budget,
+                recall_selectivity,
+                recall_query_order,
+                scanned_selectivity,
+                scanned_query_order,
+            }
+        })
+        .collect()
+}
+
+/// Retrieve the top-`nn` neighbor ids of every point under one
+/// (budget, order) configuration; per-thread stride loop with a reused
+/// scratch, results indexed by query position.
+fn topk_ids_pass(
+    index: &SparseAnn,
+    embeddings: &[crate::sparse::SparseVec],
+    ds: &Dataset,
+    nn: usize,
+    budget: usize,
+    order: DimOrder,
+    threads: usize,
+) -> Vec<Vec<u64>> {
+    let n = embeddings.len();
+    let threads = threads.max(1);
+    let per_thread: Vec<Vec<(usize, Vec<u64>)>> = parallel_map(threads, threads, |t| {
+        let mut scratch = QueryScratch::default();
+        let mut out = Vec::new();
+        let mut qi = t;
+        while qi < n {
+            let params = QueryParams {
+                exclude: Some(ds.points[qi].id),
+                max_postings: budget,
+            };
+            let ids: Vec<u64> = index
+                .top_k_ordered(&embeddings[qi], nn, params, order, &mut scratch)
+                .iter()
+                .map(|nb| nb.id)
+                .collect();
+            out.push((qi, ids));
+            qi += threads;
+        }
+        out
+    });
+    let mut all = vec![Vec::new(); n];
+    for (qi, ids) in per_thread.into_iter().flatten() {
+        all[qi] = ids;
+    }
+    all
+}
+
+/// Mean per-query recall of `got` against `exact`, over queries whose
+/// exact neighborhood is non-empty.
+fn recall_vs(exact: &[Vec<u64>], got: &[Vec<u64>]) -> f64 {
+    let (mut sum, mut cnt) = (0.0f64, 0usize);
+    for (e, g) in exact.iter().zip(got) {
+        if e.is_empty() {
+            continue;
+        }
+        let hits = g.iter().filter(|id| e.contains(id)).count();
+        sum += hits as f64 / e.len() as f64;
+        cnt += 1;
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        sum / cnt as f64
+    }
 }
 
 #[cfg(test)]
@@ -394,6 +524,30 @@ mod tests {
             grale_full.scored_pairs,
             gus.total_edges
         );
+    }
+
+    #[test]
+    fn dim_order_ablation_exact_anchor_and_budget_bounds() {
+        let ds = small_ds();
+        let (index, embeddings) = ablation_setup(&ds, 2);
+        let rows = ablation_dim_order(&index, &embeddings, &ds, 10, &[0, 500], 2);
+        assert_eq!(rows.len(), 2);
+        let r0 = &rows[0];
+        assert_eq!(r0.budget, 0);
+        // Unbudgeted, both orders ARE the exact scan: recall exactly 1,
+        // identical scan volume.
+        assert_eq!(r0.recall_selectivity, 1.0);
+        assert_eq!(r0.recall_query_order, 1.0);
+        assert_eq!(r0.scanned_selectivity, r0.scanned_query_order);
+        assert!(r0.scanned_selectivity > 0.0);
+        let r1 = &rows[1];
+        for recall in [r1.recall_selectivity, r1.recall_query_order] {
+            assert!((0.0..=1.0).contains(&recall), "recall out of range: {recall}");
+        }
+        // The budget caps the mean scored postings per query.
+        assert!(r1.scanned_selectivity <= 500.0);
+        assert!(r1.scanned_query_order <= 500.0);
+        assert!(r1.scanned_selectivity <= r0.scanned_selectivity);
     }
 
     #[test]

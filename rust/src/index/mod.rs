@@ -15,10 +15,34 @@
 //! - optional posting-budget approximation ([`QueryParams::max_postings`])
 //!   to emulate ScaNN's accuracy/latency knob for ablations.
 //!
+//! # Memory layout (the scan hot path)
+//!
+//! Every retrieval bottoms out in [`SparseAnn::scan_postings`], which walks
+//! posting lists and accumulates partial dots. The layout is
+//! struct-of-arrays so that loop stays cache-resident:
+//!
+//! - **Postings** are contiguous 12-byte `(slot, generation, weight)`
+//!   entries scanned linearly.
+//! - **Liveness** lives in a dense `Vec<u32>` generation array, with the
+//!   alive/dead bit folded into the generation's low bit (even = alive,
+//!   odd = dead; bumped on every transition). Validating a posting is one
+//!   4-byte compare against that hot array — the scan never dereferences
+//!   the ~64-byte cold `Slot` (id + stored embedding), which previously
+//!   cost a likely cache miss per posting.
+//! - **Budget** ([`QueryParams::max_postings`]) is enforced by pre-slicing
+//!   each list to the remaining budget instead of branching per posting;
+//!   under a binding budget, query dims are visited shortest-list-first
+//!   ([`DimOrder::Selectivity`]) so the budget is spent on the most
+//!   selective dims (best recall per scanned posting — see
+//!   `eval::offline::ablation_dim_order`). Unbudgeted scans visit dims in
+//!   query order and are bit-identical to the pre-SoA scan.
+//!
 //! [`sharded::ShardedIndex`] wraps the core in N independently-locked
 //! shards for concurrent serving.
 
 pub mod sharded;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::features::PointId;
 use crate::sparse::SparseVec;
@@ -55,12 +79,38 @@ impl Default for QueryParams {
     }
 }
 
+/// Order in which a budgeted scan visits the query's dimensions.
+///
+/// Only consulted when [`QueryParams::max_postings`] is nonzero: an
+/// unbudgeted scan visits every posting either way (in query-dim order, so
+/// results are bit-identical regardless of this knob). Under a binding
+/// budget the order decides which postings the budget is spent on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DimOrder {
+    /// Shortest posting lists first: the budget goes to the most selective
+    /// dims, which buys measurably more recall per scanned posting (see
+    /// `eval::offline::ablation_dim_order`). The serving default.
+    #[default]
+    Selectivity,
+    /// Ascending dim id (the query's storage order) — the original scan
+    /// order, kept as the ablation baseline.
+    QueryOrder,
+}
+
+/// One inverted-list entry: 12 contiguous bytes scanned linearly by the
+/// hot loop. Validation compares `generation` against the dense
+/// `SparseAnn::generations` array — never against `Slot`.
 #[derive(Debug, Clone, Copy)]
+#[repr(C)]
 struct Posting {
     slot: u32,
     generation: u32,
     weight: f32,
 }
+
+// The scan kernel's working set is `entries.len() * 12` bytes per list;
+// keep the entry exactly 12 bytes (no padding).
+const _: () = assert!(std::mem::size_of::<Posting>() == 12);
 
 #[derive(Debug, Default)]
 struct PostingList {
@@ -68,11 +118,14 @@ struct PostingList {
     dead: u32,
 }
 
+/// Cold per-point storage: external id + stored embedding. Deliberately
+/// holds no liveness/generation state — that lives in the dense
+/// `SparseAnn::generations` array so posting validation never touches
+/// this struct (one `Slot` is ~64 bytes; a dereference per posting was a
+/// likely cache miss each).
 #[derive(Debug)]
 struct Slot {
     id: PointId,
-    generation: u32,
-    alive: bool,
     vec: SparseVec,
 }
 
@@ -95,17 +148,37 @@ pub struct QueryScratch {
     epoch: u32,
     touched: Vec<u32>,
     heap: Vec<(f32, PointId)>,
+    /// Budgeted-scan plan: `(list length, query-dim position)` per
+    /// non-empty query dim, sorted shortest-first under
+    /// [`DimOrder::Selectivity`]. Pooled here so planning allocates
+    /// nothing in steady state.
+    plan: Vec<(u32, u32)>,
 }
 
 /// Single-shard dynamic sparse ANN index.
 pub struct SparseAnn {
     slots: Vec<Slot>,
+    /// Per-slot generation with liveness folded into the low bit (even =
+    /// alive, odd = dead; bumped on every transition, so a slot's
+    /// generation is even exactly while it holds a live point). Postings
+    /// record the (even) generation at insert time; a posting is valid
+    /// iff `generations[p.slot] == p.generation` — one 4-byte compare
+    /// against this dense, hot array. Kept out of `Slot` on purpose: the
+    /// scan must not touch cold per-point state.
+    generations: Vec<u32>,
     free: Vec<u32>,
     id_to_slot: FxHashMap<PointId, u32>,
     postings: FxHashMap<u64, PostingList>,
     live_points: usize,
     live_postings: usize,
     dead_postings: usize,
+    /// Heap bytes held by stored embeddings, maintained incrementally on
+    /// upsert/remove so [`SparseAnn::stats`] is O(1).
+    vec_heap_bytes: usize,
+    /// Total valid postings scored by queries since construction
+    /// (observability counter; relaxed — queries run under a shared read
+    /// lock).
+    postings_scanned: AtomicU64,
     /// Compact a posting list when dead entries exceed this fraction.
     compact_threshold: f32,
 }
@@ -118,15 +191,26 @@ impl Default for SparseAnn {
 
 impl SparseAnn {
     pub fn new() -> SparseAnn {
+        Self::with_compact_threshold(0.5)
+    }
+
+    /// An index that compacts a posting list once more than
+    /// `compact_threshold` of its entries are tombstones. The default is
+    /// 0.5; benches raise it to hold a target tombstone density steady.
+    pub fn with_compact_threshold(compact_threshold: f32) -> SparseAnn {
+        assert!(compact_threshold > 0.0, "threshold must be positive");
         SparseAnn {
             slots: Vec::new(),
+            generations: Vec::new(),
             free: Vec::new(),
             id_to_slot: FxHashMap::default(),
             postings: FxHashMap::default(),
             live_points: 0,
             live_postings: 0,
             dead_postings: 0,
-            compact_threshold: 0.5,
+            vec_heap_bytes: 0,
+            postings_scanned: AtomicU64::new(0),
+            compact_threshold,
         }
     }
 
@@ -155,38 +239,34 @@ impl SparseAnn {
         let existed = self.remove(id);
         let slot = match self.free.pop() {
             Some(s) => {
-                let sl = &mut self.slots[s as usize];
-                sl.id = id;
-                sl.generation = sl.generation.wrapping_add(1);
-                sl.alive = true;
-                sl.vec = vec;
+                let g = &mut self.generations[s as usize];
+                debug_assert_eq!(*g & 1, 1, "free slot must be dead");
+                *g = g.wrapping_add(1); // odd (dead) → even (alive)
+                self.slots[s as usize].id = id;
                 s
             }
             None => {
                 let s = self.slots.len() as u32;
-                self.slots.push(Slot {
-                    id,
-                    generation: 0,
-                    alive: true,
-                    vec,
-                });
+                self.slots.push(Slot { id, vec: SparseVec::empty() });
+                self.generations.push(0);
                 s
             }
         };
-        let generation = self.slots[slot as usize].generation;
-        // The borrow checker: read dims/weights through a clone-free split.
-        let nnz = self.slots[slot as usize].vec.nnz();
-        for i in 0..nnz {
-            let (dim, w) = {
-                let v = &self.slots[slot as usize].vec;
-                (v.dims()[i], v.weights()[i])
-            };
-            self.postings.entry(dim).or_default().entries.push(Posting {
-                slot,
-                generation,
-                weight: w,
-            });
+        let generation = self.generations[slot as usize];
+        // Insert postings from the still-owned `vec` (its slices bound
+        // once), then move it into the slot — no per-nonzero re-indexing
+        // of `self.slots` to appease the borrow checker.
+        let nnz = vec.nnz();
+        self.postings.reserve(nnz);
+        for (&dim, &weight) in vec.dims().iter().zip(vec.weights()) {
+            self.postings
+                .entry(dim)
+                .or_default()
+                .entries
+                .push(Posting { slot, generation, weight });
         }
+        self.vec_heap_bytes += vec.heap_bytes();
+        self.slots[slot as usize].vec = vec;
         self.live_postings += nnz;
         self.id_to_slot.insert(id, slot);
         self.live_points += 1;
@@ -200,19 +280,24 @@ impl SparseAnn {
         let Some(slot) = self.id_to_slot.remove(&id) else {
             return false;
         };
-        let sl = &mut self.slots[slot as usize];
-        sl.alive = false;
-        let nnz = sl.vec.nnz();
+        let s = slot as usize;
+        debug_assert_eq!(self.generations[s] & 1, 0, "mapped slot must be live");
+        self.generations[s] = self.generations[s].wrapping_add(1); // alive → dead
+        // Take the embedding out of the slot: its heap memory is released
+        // now instead of lingering until slot reuse, and owning it lets us
+        // iterate dims while mutating `postings` — no cloned dim vector.
+        let vec = std::mem::take(&mut self.slots[s].vec);
+        let nnz = vec.nnz();
         self.live_points -= 1;
         self.live_postings -= nnz;
         self.dead_postings += nnz;
+        self.vec_heap_bytes -= vec.heap_bytes();
         // Account the dead entries on their lists so compaction can trigger.
-        let dims: Vec<u64> = sl.vec.dims().to_vec();
-        for d in dims {
+        for &d in vec.dims() {
             if let Some(list) = self.postings.get_mut(&d) {
                 list.dead += 1;
                 if list.dead as f32 > list.entries.len() as f32 * self.compact_threshold {
-                    Self::compact_list(&self.slots, list, &mut self.dead_postings);
+                    Self::compact_list(&self.generations, list, &mut self.dead_postings);
                     if list.entries.is_empty() {
                         self.postings.remove(&d);
                     }
@@ -223,12 +308,12 @@ impl SparseAnn {
         true
     }
 
-    fn compact_list(slots: &[Slot], list: &mut PostingList, dead_total: &mut usize) {
+    fn compact_list(generations: &[u32], list: &mut PostingList, dead_total: &mut usize) {
         let before = list.entries.len();
-        list.entries.retain(|p| {
-            let sl = &slots[p.slot as usize];
-            sl.alive && sl.generation == p.generation
-        });
+        // Valid ⇔ the slot's current generation equals the posting's
+        // (postings are recorded with an even generation, so a dead slot —
+        // odd generation — can never match).
+        list.entries.retain(|p| generations[p.slot as usize] == p.generation);
         let removed = before - list.entries.len();
         *dead_total = dead_total.saturating_sub(removed);
         list.dead = 0;
@@ -236,21 +321,37 @@ impl SparseAnn {
 
     /// Force-compact every posting list (periodic maintenance).
     pub fn compact_all(&mut self) {
-        let slots = std::mem::take(&mut self.slots);
+        let generations = std::mem::take(&mut self.generations);
         self.postings.retain(|_, list| {
-            Self::compact_list(&slots, list, &mut self.dead_postings);
+            Self::compact_list(&generations, list, &mut self.dead_postings);
             !list.entries.is_empty()
         });
-        self.slots = slots;
+        self.generations = generations;
         self.dead_postings = 0;
     }
 
-    /// Score all points sharing ≥ 1 dimension with `query` into the scratch
-    /// accumulator; returns number of postings scanned.
-    fn accumulate(
+    /// The scan kernel: score all points sharing ≥ 1 dimension with
+    /// `query` into the scratch accumulator. Returns the number of
+    /// **valid** (live) postings scored — tombstones skipped by the
+    /// generation check never count against the budget, exactly as in the
+    /// original per-posting check.
+    ///
+    /// Layout discipline (see module docs): posting validation is one
+    /// 4-byte compare against the dense generation array (never a `Slot`
+    /// dereference), and the `max_postings` budget is enforced by
+    /// pre-slicing each list to the remaining budget instead of branching
+    /// per posting — a chunk is re-sliced only when tombstones inside it
+    /// left budget unspent, so budget semantics are unchanged.
+    ///
+    /// With a nonzero budget, `order` decides which dims the budget is
+    /// spent on (see [`DimOrder`]); unbudgeted scans visit dims in query
+    /// order and are bit-identical for both orders. Public so benches and
+    /// ablations can isolate the kernel from candidate selection.
+    pub fn scan_postings(
         &self,
         query: &SparseVec,
-        params: &QueryParams,
+        params: QueryParams,
+        order: DimOrder,
         scratch: &mut QueryScratch,
     ) -> usize {
         if scratch.acc.len() < self.slots.len() {
@@ -265,30 +366,53 @@ impl SparseAnn {
         }
         let epoch = scratch.epoch;
         scratch.touched.clear();
-        let mut scanned = 0usize;
-        'outer: for (dim, qw) in query.iter() {
-            let Some(list) = self.postings.get(&dim) else {
-                continue;
-            };
-            for p in &list.entries {
-                let sl = &self.slots[p.slot as usize];
-                if !sl.alive || sl.generation != p.generation {
-                    continue;
-                }
-                scanned += 1;
-                let s = p.slot as usize;
-                if scratch.visited[s] != epoch {
-                    scratch.visited[s] = epoch;
-                    scratch.acc[s] = 0.0;
-                    scratch.touched.push(p.slot);
-                }
-                scratch.acc[s] += qw * p.weight;
-                if params.max_postings != 0 && scanned >= params.max_postings {
-                    break 'outer;
+        let gens: &[u32] = &self.generations;
+        let budget = params.max_postings;
+        let mut scored = 0usize;
+        if budget == 0 {
+            for (dim, qw) in query.iter() {
+                if let Some(list) = self.postings.get(&dim) {
+                    scored += scan_chunk(gens, &list.entries, qw, epoch, scratch);
                 }
             }
+        } else {
+            let dims = query.dims();
+            let weights = query.weights();
+            // Plan the scan: (list length, query-dim position) per dim
+            // with a non-empty list. Taken out of the scratch so the plan
+            // buffer can be iterated while the scratch is mutated.
+            let mut plan = std::mem::take(&mut scratch.plan);
+            plan.clear();
+            for (i, dim) in dims.iter().enumerate() {
+                if let Some(list) = self.postings.get(dim) {
+                    let len = list.entries.len().min(u32::MAX as usize) as u32;
+                    plan.push((len, i as u32));
+                }
+            }
+            if order == DimOrder::Selectivity {
+                // Shortest (most selective) lists first; ties break by
+                // query-dim position for determinism.
+                plan.sort_unstable();
+            }
+            'dims: for &(_, i) in &plan {
+                let i = i as usize;
+                let entries: &[Posting] = &self.postings[&dims[i]].entries;
+                let qw = weights[i];
+                let mut offset = 0usize;
+                while offset < entries.len() {
+                    let remaining = budget - scored;
+                    if remaining == 0 {
+                        break 'dims;
+                    }
+                    let take = remaining.min(entries.len() - offset);
+                    scored += scan_chunk(gens, &entries[offset..offset + take], qw, epoch, scratch);
+                    offset += take;
+                }
+            }
+            scratch.plan = plan;
         }
-        scanned
+        self.postings_scanned.fetch_add(scored as u64, Ordering::Relaxed);
+        scored
     }
 
     /// Top-k nearest (highest dot / lowest dist). Deterministic: ties in dot
@@ -303,10 +427,24 @@ impl SparseAnn {
         params: QueryParams,
         scratch: &mut QueryScratch,
     ) -> Vec<Neighbor> {
+        self.top_k_ordered(query, k, params, DimOrder::Selectivity, scratch)
+    }
+
+    /// [`top_k`](SparseAnn::top_k) with an explicit budgeted-scan dim
+    /// order (ablations; the order only matters under a binding
+    /// `max_postings` budget).
+    pub fn top_k_ordered(
+        &self,
+        query: &SparseVec,
+        k: usize,
+        params: QueryParams,
+        order: DimOrder,
+        scratch: &mut QueryScratch,
+    ) -> Vec<Neighbor> {
         if k == 0 || self.live_points == 0 {
             return Vec::new();
         }
-        self.accumulate(query, &params, scratch);
+        self.scan_postings(query, params, order, scratch);
         // Select top-k by (dot desc, id asc) with a bounded min-heap
         // materialized as a sorted insertion buffer (k is small: 10–1000).
         let heap = &mut scratch.heap;
@@ -358,7 +496,20 @@ impl SparseAnn {
         params: QueryParams,
         scratch: &mut QueryScratch,
     ) -> Vec<Neighbor> {
-        self.accumulate(query, &params, scratch);
+        self.threshold_ordered(query, tau, params, DimOrder::Selectivity, scratch)
+    }
+
+    /// [`threshold`](SparseAnn::threshold) with an explicit budgeted-scan
+    /// dim order (see [`top_k_ordered`](SparseAnn::top_k_ordered)).
+    pub fn threshold_ordered(
+        &self,
+        query: &SparseVec,
+        tau: f32,
+        params: QueryParams,
+        order: DimOrder,
+        scratch: &mut QueryScratch,
+    ) -> Vec<Neighbor> {
+        self.scan_postings(query, params, order, scratch);
         let min_dot = -tau;
         let mut out = Vec::new();
         for &slot in &scratch.touched {
@@ -376,7 +527,10 @@ impl SparseAnn {
         out
     }
 
-    /// Index statistics (Fig. 10 memory accounting + ops).
+    /// Index statistics (Fig. 10 memory accounting + ops). O(1): every
+    /// component is a counter maintained incrementally by the mutation
+    /// path — the `stats` RPC no longer walks every slot and posting list
+    /// per request.
     pub fn stats(&self) -> IndexStats {
         IndexStats {
             live_points: self.live_points,
@@ -385,30 +539,62 @@ impl SparseAnn {
             distinct_dims: self.postings.len(),
             slot_capacity: self.slots.len(),
             approx_bytes: self.approx_bytes(),
+            postings_scanned: self.postings_scanned.load(Ordering::Relaxed),
         }
     }
 
+    /// O(1) byte estimate from the incremental counters. Posting storage
+    /// is estimated from entry counts (live + dead ≡ total entries across
+    /// lists) rather than the exact `Vec` capacities the old walk summed —
+    /// an under-estimate of at most the growth slack, acceptable for an
+    /// `approx_bytes` figure that used to cost a full index walk.
     fn approx_bytes(&self) -> usize {
-        let posting_bytes: usize = self
-            .postings
-            .values()
-            .map(|l| l.entries.capacity() * std::mem::size_of::<Posting>() + 48)
-            .sum();
-        let slot_bytes: usize = self
-            .slots
-            .iter()
-            .map(|s| s.vec.heap_bytes() + std::mem::size_of::<Slot>())
-            .sum();
-        posting_bytes + slot_bytes + self.id_to_slot.len() * 24
+        let entries = self.live_postings + self.dead_postings;
+        entries * std::mem::size_of::<Posting>()
+            + self.postings.len() * 48
+            + self.vec_heap_bytes
+            + self.slots.len() * std::mem::size_of::<Slot>()
+            + self.generations.len() * std::mem::size_of::<u32>()
+            + self.id_to_slot.len() * 24
     }
 
     /// Iterate live `(id, embedding)` pairs (offline experiments).
     pub fn iter_live(&self) -> impl Iterator<Item = (PointId, &SparseVec)> + '_ {
         self.slots
             .iter()
-            .filter(|s| s.alive)
-            .map(|s| (s.id, &s.vec))
+            .zip(&self.generations)
+            .filter(|&(_, &g)| g & 1 == 0)
+            .map(|(s, _)| (s.id, &s.vec))
     }
+}
+
+/// The tight inner loop: score one contiguous run of 12-byte postings.
+/// Per posting it reads 4 bytes of the dense generation array and the
+/// posting itself — no `Slot` dereference, no budget branch (the caller
+/// pre-slices `entries` to the remaining budget).
+#[inline]
+fn scan_chunk(
+    gens: &[u32],
+    entries: &[Posting],
+    qw: f32,
+    epoch: u32,
+    scratch: &mut QueryScratch,
+) -> usize {
+    let mut scored = 0usize;
+    for p in entries {
+        let s = p.slot as usize;
+        if gens[s] != p.generation {
+            continue;
+        }
+        scored += 1;
+        if scratch.visited[s] != epoch {
+            scratch.visited[s] = epoch;
+            scratch.acc[s] = 0.0;
+            scratch.touched.push(p.slot);
+        }
+        scratch.acc[s] += qw * p.weight;
+    }
+    scored
 }
 
 /// Heap ordering: worst candidate first = (dot asc, id desc).
@@ -452,6 +638,9 @@ pub struct IndexStats {
     pub distinct_dims: usize,
     pub slot_capacity: usize,
     pub approx_bytes: usize,
+    /// Valid postings scored by queries since construction (monotonic
+    /// counter — recall-per-posting observability, not a size).
+    pub postings_scanned: u64,
 }
 
 #[cfg(test)]
@@ -815,5 +1004,252 @@ mod tests {
         SparseVec::from_pairs(
             (0..n).map(|_| (rng.below(20), 0.1 + rng.f32())).collect(),
         )
+    }
+
+    /// Signed half-integral weights: exact mid-accumulation cancellation
+    /// is likely, which is the hard case for bitwise comparisons.
+    fn signed_vec(rng: &mut Rng) -> SparseVec {
+        let n = 1 + rng.below_usize(6);
+        SparseVec::from_pairs(
+            (0..n)
+                .map(|_| (rng.below(16), (rng.below(9) as f32 - 4.0) * 0.5))
+                .collect(),
+        )
+    }
+
+    /// Random op stream (upserts, removes, occasional full compaction)
+    /// applied to both the index and a brute-force oracle map.
+    fn churn(
+        rng: &mut Rng,
+        ix: &mut SparseAnn,
+        live: &mut std::collections::BTreeMap<u64, SparseVec>,
+        ops: usize,
+        mk: fn(&mut Rng) -> SparseVec,
+    ) {
+        for _ in 0..ops {
+            let id = rng.below(30);
+            match rng.below(12) {
+                0..=7 => {
+                    let v = mk(rng);
+                    ix.upsert(id, v.clone());
+                    live.insert(id, v);
+                }
+                8..=10 => {
+                    ix.remove(id);
+                    live.remove(&id);
+                }
+                _ => ix.compact_all(),
+            }
+        }
+    }
+
+    /// Internal accounting invariants the incremental O(1) stats rely on.
+    fn check_accounting(ix: &SparseAnn) {
+        let entries: usize = ix.postings.values().map(|l| l.entries.len()).sum();
+        assert_eq!(
+            entries,
+            ix.live_postings + ix.dead_postings,
+            "entry count drifted from live+dead counters"
+        );
+        let heap: usize = ix.slots.iter().map(|s| s.vec.heap_bytes()).sum();
+        assert_eq!(heap, ix.vec_heap_bytes, "incremental heap-bytes drifted");
+        for (&id, &s) in &ix.id_to_slot {
+            assert_eq!(
+                ix.generations[s as usize] & 1,
+                0,
+                "live slot {s} (id {id}) has a dead (odd) generation"
+            );
+        }
+        for &s in &ix.free {
+            assert_eq!(
+                ix.generations[s as usize] & 1,
+                1,
+                "free slot {s} has a live (even) generation"
+            );
+        }
+        for list in ix.postings.values() {
+            for p in &list.entries {
+                assert_eq!(p.generation & 1, 0, "posting recorded with odd generation");
+            }
+        }
+    }
+
+    /// Property: the SoA scan's unbudgeted results are bit-identical to
+    /// the seed scan. `SparseVec::dot` merges shared dims in ascending
+    /// dim order — the exact accumulation order of the original
+    /// per-posting scan — so comparing result dots to the oracle's bits
+    /// proves the refactor changed the layout, not the arithmetic.
+    #[test]
+    fn prop_unbudgeted_scan_bitwise_matches_seed_oracle() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live = std::collections::BTreeMap::new();
+            churn(rng, &mut ix, &mut live, 70, signed_vec);
+            let q = signed_vec(rng);
+            let mut scratch = QueryScratch::default();
+            let got = ix.threshold(&q, f32::MAX, QueryParams::default(), &mut scratch);
+            let want_ids: std::collections::BTreeSet<u64> = live
+                .iter()
+                .filter(|(_, v)| q.dot(v) != 0.0)
+                .map(|(&id, _)| id)
+                .collect();
+            let got_ids: std::collections::BTreeSet<u64> =
+                got.iter().map(|n| n.id).collect();
+            assert_eq!(got_ids, want_ids);
+            for n in &got {
+                assert_eq!(
+                    n.dot.to_bits(),
+                    q.dot(&live[&n.id]).to_bits(),
+                    "dot bits diverged from the seed accumulation order for id {}",
+                    n.id
+                );
+            }
+            let top = ix.top_k(&q, 8, QueryParams::default(), &mut scratch);
+            for n in &top {
+                assert_eq!(n.dot.to_bits(), q.dot(&live[&n.id]).to_bits());
+            }
+            check_accounting(&ix);
+        });
+    }
+
+    /// Property: a budgeted scan never scores (or returns) more postings
+    /// than the budget, for either dim order, across interleaved
+    /// upsert/remove/compaction; and a non-binding budget reproduces the
+    /// exact result set — bit-identically in `QueryOrder` (same visit
+    /// order as unbudgeted, so the chunked slicing must not change the
+    /// arithmetic).
+    #[test]
+    fn prop_budgeted_scan_respects_budget_any_order() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live = std::collections::BTreeMap::new();
+            churn(rng, &mut ix, &mut live, 60, random_vec);
+            let q = random_vec(rng);
+            let mut scratch = QueryScratch::default();
+            let exact = ix.top_k(&q, 1000, QueryParams::default(), &mut scratch);
+            let st = ix.stats();
+            let total_entries = (st.live_postings + st.dead_postings).max(1);
+            for order in [DimOrder::Selectivity, DimOrder::QueryOrder] {
+                let budget = 1 + rng.below_usize(30);
+                let params = QueryParams { exclude: None, max_postings: budget };
+                let scanned = ix.scan_postings(&q, params, order, &mut scratch);
+                assert!(scanned <= budget, "scored {scanned} > budget {budget}");
+                let r = ix.top_k_ordered(&q, 1000, params, order, &mut scratch);
+                assert!(r.len() <= budget, "{} results > budget {budget}", r.len());
+                for n in &r {
+                    assert!(live.contains_key(&n.id), "budgeted scan surfaced dead id");
+                }
+                // A budget ≥ total entries cannot bind: exact results.
+                let nb = QueryParams { exclude: None, max_postings: total_entries };
+                let r2 = ix.top_k_ordered(&q, 1000, nb, order, &mut scratch);
+                assert_eq!(r2.len(), exact.len(), "non-binding budget changed results");
+                for (x, y) in r2.iter().zip(&exact) {
+                    assert_eq!(x.id, y.id);
+                    if order == DimOrder::QueryOrder {
+                        assert_eq!(x.dot.to_bits(), y.dot.to_bits());
+                    } else {
+                        assert!((x.dot - y.dot).abs() < 1e-4);
+                    }
+                }
+            }
+        });
+    }
+
+    /// A binding budget spent shortest-list-first finds the high-value
+    /// neighbors hiding behind a short list; the seed's dim-id order
+    /// burns the whole budget on the long, low-value list in front of it.
+    #[test]
+    fn selectivity_order_spends_budget_on_short_lists_first() {
+        let mut ix = SparseAnn::new();
+        // Long list on the smaller dim id: 100 weak matches.
+        for i in 0..100u64 {
+            ix.upsert(i, sv(&[(1, 0.1)]));
+        }
+        // Short list on the larger dim id: the 5 true nearest.
+        for i in 100..105u64 {
+            ix.upsert(i, sv(&[(2, 5.0)]));
+        }
+        let q = sv(&[(1, 1.0), (2, 1.0)]);
+        let params = QueryParams { exclude: None, max_postings: 5 };
+        let mut scratch = QueryScratch::default();
+        let sel = ix.top_k_ordered(&q, 5, params, DimOrder::Selectivity, &mut scratch);
+        assert_eq!(sel.len(), 5);
+        assert!(
+            sel.iter().all(|n| n.id >= 100 && n.dot == 5.0),
+            "selectivity order missed the short list: {sel:?}"
+        );
+        let qo = ix.top_k_ordered(&q, 5, params, DimOrder::QueryOrder, &mut scratch);
+        assert!(
+            qo.iter().all(|n| n.id < 100 && n.dot < 1.0),
+            "query order unexpectedly escaped the long list: {qo:?}"
+        );
+        // Unbudgeted, the orders are bit-identical.
+        let none = QueryParams::default();
+        let a = ix.top_k_ordered(&q, 10, none, DimOrder::Selectivity, &mut scratch);
+        let b = ix.top_k_ordered(&q, 10, none, DimOrder::QueryOrder, &mut scratch);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.dot.to_bits()), (y.id, y.dot.to_bits()));
+        }
+    }
+
+    /// The scan counter counts valid postings only — tombstones skipped
+    /// by the generation check don't inflate it.
+    #[test]
+    fn postings_scanned_counts_valid_postings_only() {
+        let mut ix = SparseAnn::with_compact_threshold(0.99);
+        for i in 0..10u64 {
+            ix.upsert(i, sv(&[(7, 1.0)]));
+        }
+        for i in 0..4u64 {
+            ix.remove(i);
+        }
+        let st = ix.stats();
+        assert_eq!(st.dead_postings, 4, "compaction fired unexpectedly");
+        let before = st.postings_scanned;
+        let mut scratch = QueryScratch::default();
+        let r = ix.top_k(&sv(&[(7, 1.0)]), 100, QueryParams::default(), &mut scratch);
+        assert_eq!(r.len(), 6);
+        assert_eq!(ix.stats().postings_scanned - before, 6);
+    }
+
+    /// Generation parity across repeated slot reuse: stale postings from
+    /// two lives ago must stay dead, and accounting must hold throughout.
+    #[test]
+    fn repeated_slot_reuse_keeps_generations_sound() {
+        let mut ix = SparseAnn::new();
+        for cycle in 0..5u64 {
+            ix.upsert(1, sv(&[(10 + cycle, 1.0)]));
+            check_accounting(&ix);
+            // Only the current life's dim surfaces the point.
+            for d in 10..10 + cycle {
+                let r = ix.top_k(
+                    &sv(&[(d, 1.0)]),
+                    10,
+                    QueryParams::default(),
+                    &mut QueryScratch::default(),
+                );
+                assert!(r.is_empty(), "stale dim {d} resurrected on cycle {cycle}: {r:?}");
+            }
+            ix.remove(1);
+            check_accounting(&ix);
+        }
+        assert!(ix.is_empty());
+    }
+
+    /// Property: the incremental byte/entry accounting never drifts from
+    /// a full recount under interleaved upsert/remove/compaction.
+    #[test]
+    fn prop_incremental_accounting_matches_recount() {
+        proptest(|rng| {
+            let mut ix = SparseAnn::new();
+            let mut live = std::collections::BTreeMap::new();
+            churn(rng, &mut ix, &mut live, 80, random_vec);
+            check_accounting(&ix);
+            assert_eq!(ix.len(), live.len());
+            assert!(ix.stats().approx_bytes > 0 || live.is_empty());
+            let live_from_iter: usize = ix.iter_live().count();
+            assert_eq!(live_from_iter, live.len(), "iter_live diverged");
+        });
     }
 }

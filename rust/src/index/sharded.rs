@@ -290,7 +290,8 @@ impl ShardedIndex {
         all
     }
 
-    /// Aggregate stats over shards.
+    /// Aggregate stats over shards. O(shards): each per-shard snapshot is
+    /// O(1) now that `SparseAnn` maintains its byte estimate incrementally.
     pub fn stats(&self) -> super::IndexStats {
         let mut agg = super::IndexStats {
             live_points: 0,
@@ -299,6 +300,7 @@ impl ShardedIndex {
             distinct_dims: 0,
             slot_capacity: 0,
             approx_bytes: 0,
+            postings_scanned: 0,
         };
         for s in &self.shards {
             let st = s.read().unwrap().stats();
@@ -308,6 +310,7 @@ impl ShardedIndex {
             agg.distinct_dims += st.distinct_dims; // upper bound (dims span shards)
             agg.slot_capacity += st.slot_capacity;
             agg.approx_bytes += st.approx_bytes;
+            agg.postings_scanned += st.postings_scanned;
         }
         agg
     }
@@ -504,6 +507,44 @@ mod tests {
                 b.iter().map(|n| n.id).collect::<Vec<_>>()
             );
         });
+    }
+
+    /// Unbudgeted, the shards collectively score exactly the valid
+    /// postings a 1-shard index would — sharding moves postings around
+    /// but the scan volume (and the `postings_scanned` stat) is
+    /// identical. Tombstones must not count.
+    #[test]
+    fn postings_scanned_stat_matches_single_shard() {
+        let multi = ShardedIndex::with_threads(4, 2);
+        let single = ShardedIndex::new(1);
+        for i in 0..60u64 {
+            let v = sv(&[(i % 5, 1.0), (7, 0.5)]);
+            multi.upsert(i, v.clone());
+            single.upsert(i, v);
+        }
+        for i in 0..20u64 {
+            multi.remove(i);
+            single.remove(i);
+        }
+        assert_eq!(multi.stats().postings_scanned, 0);
+        let q = sv(&[(2, 1.0), (7, 1.0)]);
+        let a = multi.top_k(&q, 10, QueryParams::default());
+        let b = single.top_k(&q, 10, QueryParams::default());
+        assert_eq!(
+            a.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+        let (ms, ss) = (multi.stats(), single.stats());
+        assert!(ms.postings_scanned > 0);
+        assert_eq!(ms.postings_scanned, ss.postings_scanned);
+        // A binding global budget caps the total scan volume across shards.
+        let budget = 8usize;
+        let _ = multi.top_k(&q, 10, QueryParams { exclude: None, max_postings: budget });
+        let scanned = multi.stats().postings_scanned - ms.postings_scanned;
+        assert!(
+            scanned as usize <= budget + multi.n_shards() - 1,
+            "budgeted fan-out scanned {scanned} > {budget} + rounding"
+        );
     }
 
     #[test]

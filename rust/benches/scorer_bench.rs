@@ -1,14 +1,31 @@
-//! Similarity-scorer benchmarks: native vs XLA/PJRT path, across candidate
-//! batch sizes (the ScaNN-NN axis). The XLA rows exist only after
-//! `make artifacts`.
+//! Similarity-scorer benchmarks.
+//!
+//! Two families:
+//!
+//! - `scorer/native|xla/...` — the end-to-end scorer paths across candidate
+//!   batch sizes (the ScaNN-NN axis). The XLA rows exist only after
+//!   `make artifacts`.
+//! - `scorer/pairs/...` — the kernel comparison the packed-tile work is
+//!   judged by: scalar oracle vs packed tile kernel vs packed + scoped
+//!   worker threads, at dense dim d ∈ {8, 64, 256}, 1024 pairs per call.
+//!   `bench_batch` reports **per-pair** stats, and the derived pairs/sec
+//!   figures are merged into the repo-root `BENCH_index.json` trajectory.
 
 use dynamic_gus::bench::Bencher;
 use dynamic_gus::data::synthetic::SyntheticConfig;
-use dynamic_gus::features::Point;
+use dynamic_gus::features::{FeatureValue, Point, Schema};
 use dynamic_gus::runtime::artifacts_dir;
 use dynamic_gus::scorer::{
-    MlpWeights, NativeScorer, PairFeaturizer, PairScorer, XlaScorer,
+    score_into_parallel, MlpWeights, NativeScorer, PairFeaturizer, PairScorer, ScorerScratch,
+    ScratchPool, XlaScorer, HIDDEN,
 };
+use dynamic_gus::util::json::Json;
+use dynamic_gus::util::rng::Rng;
+use dynamic_gus::util::threadpool::default_parallelism;
+
+/// Pairs per kernel-cell iteration (large enough that the parallel split
+/// engages: > SCORE_PAR_MIN).
+const N_PAIRS: usize = 1024;
 
 fn main() {
     let mut b = Bencher::new();
@@ -21,14 +38,18 @@ fn main() {
         let weights = if weights_path.exists() {
             MlpWeights::load(&weights_path).unwrap()
         } else {
-            MlpWeights::random(featurizer.input_dim(), dynamic_gus::scorer::HIDDEN, 1)
+            MlpWeights::random(featurizer.input_dim(), HIDDEN, 1)
         };
         let native = NativeScorer::new(featurizer.clone(), weights.clone());
         let q = &ds.points[0];
         for &nn in &[10usize, 100, 1000] {
             let cands: Vec<&Point> = ds.points[1..=nn].iter().collect();
+            let mut scratch = ScorerScratch::default();
+            let mut out = Vec::with_capacity(nn);
             b.bench(&format!("scorer/native/{name}/batch={nn}"), || {
-                native.score_batch(q, &cands)
+                out.clear();
+                native.score_into(q, &cands, &mut scratch, &mut out);
+                out.len()
             });
         }
         if XlaScorer::artifacts_available(&artifacts_dir(), &ds.schema.name) {
@@ -43,5 +64,65 @@ fn main() {
             eprintln!("[scorer_bench] no artifacts for {name}: skipping XLA rows");
         }
     }
+
+    // --- kernel cells: scalar vs packed vs packed+threads, per dense dim ---
+    let threads = default_parallelism();
+    for &d in &[8usize, 64, 256] {
+        let schema = Schema::arxiv_like(d);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), HIDDEN, 0xd0 + d as u64);
+        let scorer = NativeScorer::new(f, w);
+        let mut rng = Rng::seeded(0x9a17 + d as u64);
+        let pts: Vec<Point> = (0..=N_PAIRS as u64)
+            .map(|i| {
+                Point::new(
+                    i,
+                    vec![
+                        FeatureValue::Dense(rng.normal_vec_f32(d)),
+                        FeatureValue::Scalar(2000.0 + rng.below(25) as f32),
+                    ],
+                )
+            })
+            .collect();
+        let q = &pts[0];
+        let cands: Vec<&Point> = pts[1..].iter().collect();
+
+        b.bench_batch(&format!("scorer/pairs/scalar/d={d}"), cands.len(), || {
+            scorer.score_batch_scalar(q, &cands)
+        });
+
+        let mut scratch = ScorerScratch::default();
+        let mut out = Vec::with_capacity(cands.len());
+        b.bench_batch(&format!("scorer/pairs/packed/d={d}"), cands.len(), || {
+            out.clear();
+            scorer.score_into(q, &cands, &mut scratch, &mut out);
+            out.len()
+        });
+
+        let pool = ScratchPool::new();
+        let mut pout = Vec::with_capacity(cands.len());
+        b.bench_batch(
+            &format!("scorer/pairs/packed+threads={threads}/d={d}"),
+            cands.len(),
+            || {
+                pout.clear();
+                score_into_parallel(&scorer, q, &cands, &pool, threads, &mut pout);
+                pout.len()
+            },
+        );
+    }
+
     b.dump_json("scorer_bench");
+    // Derived pairs/sec for the perf trajectory (bench_batch stats are
+    // per pair, so the rate is just the inverse of the mean).
+    let extra: Vec<(String, Json)> = b
+        .results()
+        .iter()
+        .filter(|r| r.name.starts_with("scorer/pairs/"))
+        .map(|r| {
+            let key = format!("pairs_per_sec/{}", &r.name["scorer/pairs/".len()..]);
+            (key, Json::num(1e9 / r.mean_ns))
+        })
+        .collect();
+    b.dump_repo_summary("scorer_bench", extra);
 }

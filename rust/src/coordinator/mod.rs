@@ -26,7 +26,11 @@
 //! across shards in parallel, and the batch RPCs parallelize across items
 //! (embedding, retrieval and scoring all run on the scoped worker pool,
 //! drawing reusable query scratches from the index's pool — the hot path
-//! is allocation-free). Thread count never changes results.
+//! is allocation-free). Scoring runs the packed tile kernel
+//! ([`crate::scorer`]): candidate features are fetched with one
+//! [`FeatureStore::get_many`], every buffer is pooled per worker, and a
+//! single query's large candidate list splits across the same workers
+//! ([`score_into_parallel`]). Thread count never changes results.
 //!
 //! - [`DynamicGus::insert_batch`] embeds points in parallel and groups
 //!   index upserts by shard so each shard's write lock is taken once per
@@ -56,7 +60,7 @@ pub mod staleness;
 pub mod store;
 pub mod wal;
 
-use std::sync::{MutexGuard, OnceLock, RwLock};
+use std::sync::{Arc, MutexGuard, OnceLock, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -69,7 +73,10 @@ use crate::index::QueryParams;
 use crate::lsh::Bucketer;
 use crate::metrics::{Counters, LatencyHistogram};
 use crate::preprocess;
-use crate::scorer::{MlpWeights, NativeScorer, PairFeaturizer, PairScorer, XlaScorer, HIDDEN};
+use crate::scorer::{
+    score_into_parallel, CandRefs, MlpWeights, NativeScorer, PairFeaturizer, PairScorer,
+    ScratchPool, XlaScorer, HIDDEN,
+};
 use crate::util::json::Json;
 
 pub use ingest::{IngestPipeline, Mutation};
@@ -90,8 +97,31 @@ pub struct ScoredNeighbor {
 pub struct GusMetrics {
     pub mutation_latency: LatencyHistogram,
     pub query_latency: LatencyHistogram,
+    /// The scoring phase of each Neighborhood RPC (feature fetch + pair
+    /// scoring + result sort) — subtract from `query_latency` to get
+    /// retrieval time; the pure `score_into` span accumulates in
+    /// `counters.pairs_scored_ns`.
+    pub scoring_latency: LatencyHistogram,
     pub counters: Counters,
     pub staleness: StalenessTracker,
+}
+
+/// Reusable buffers for one `score_neighbors` call: candidate ids, fetched
+/// features, the surviving `(neighbor, features)` pairs, the borrowed
+/// candidate-ref list and the score output. Pooled per worker
+/// ([`crate::util::pool::Pool`]) so the Neighborhood RPC's scoring phase
+/// allocates nothing in steady state beyond the returned
+/// `Vec<ScoredNeighbor>` and `get_many`'s small per-call shard-guard
+/// table. `Arc<Point>` payloads are cleared
+/// before a scratch returns to the pool, so an idle pool never pins
+/// feature data of (possibly deleted) candidates.
+#[derive(Default)]
+struct NeighborScratch {
+    ids: Vec<PointId>,
+    arcs: Vec<Option<Arc<Point>>>,
+    kept: Vec<(crate::index::Neighbor, Arc<Point>)>,
+    refs: CandRefs,
+    scores: Vec<f32>,
 }
 
 /// The Dynamic GUS service.
@@ -102,6 +132,10 @@ pub struct DynamicGus {
     index: ShardedIndex,
     store: FeatureStore,
     scorer: Box<dyn PairScorer>,
+    /// Per-worker scorer scratches (φ tiles, extras staging, query prep).
+    scorer_scratch: ScratchPool,
+    /// Per-worker `score_neighbors` buffers.
+    neighbor_scratch: crate::util::pool::Pool<NeighborScratch>,
     /// Durability state; absent until [`DynamicGus::attach_wal`] (see
     /// [`wal::init_fresh`] / [`wal::recover`]). Attached at most once.
     wal: OnceLock<wal::WalHandle>,
@@ -141,6 +175,8 @@ impl DynamicGus {
             index: ShardedIndex::with_threads(config.n_shards, config.resolved_query_threads()),
             store: FeatureStore::new(config.n_shards.max(4)),
             scorer,
+            scorer_scratch: ScratchPool::new(),
+            neighbor_scratch: crate::util::pool::Pool::new(),
             wal: OnceLock::new(),
             metrics: GusMetrics::default(),
         };
@@ -383,42 +419,80 @@ impl DynamicGus {
     }
 
     /// Score retrieved candidates against the query point and sort by
-    /// model score desc (id asc on ties). Neighbors whose features are
-    /// gone by scoring time (concurrently deleted) are dropped — they are
-    /// filtered *before* scoring so every neighbor is paired with its own
-    /// score (zipping raw neighbors against the filtered candidates used
-    /// to misalign the pairs whenever a delete raced a query).
+    /// model score desc (id asc on ties; `total_cmp`, so a NaN score — a
+    /// pathological weight vector can produce one through inf−inf — sorts
+    /// deterministically instead of panicking). Neighbors whose features
+    /// are gone by scoring time (concurrently deleted) are dropped — they
+    /// are filtered *before* scoring so every neighbor is paired with its
+    /// own score (zipping raw neighbors against the filtered candidates
+    /// used to misalign the pairs whenever a delete raced a query).
+    ///
+    /// Allocation-free in steady state: candidate features come from one
+    /// [`FeatureStore::get_many`] (each store shard locked once), all
+    /// intermediate buffers are pooled per worker, and with `par_threads >
+    /// 1` a large candidate list is split across the scoped worker pool
+    /// ([`score_into_parallel`]) — a single query's scoring parallelizes
+    /// the way `query_batch` parallelizes across queries. The batch path
+    /// passes `par_threads = 1` (it is already one-query-per-worker; nested
+    /// fan-out would oversubscribe the pool).
     fn score_neighbors(
         &self,
         p: &Point,
         neighbors: &[crate::index::Neighbor],
+        par_threads: usize,
     ) -> Vec<ScoredNeighbor> {
         use std::sync::atomic::Ordering::Relaxed;
-        self.metrics
-            .counters
+        let counters = &self.metrics.counters;
+        counters
             .candidates_retrieved
             .fetch_add(neighbors.len() as u64, Relaxed);
-        let kept: Vec<(&crate::index::Neighbor, std::sync::Arc<Point>)> = neighbors
-            .iter()
-            .filter_map(|n| self.store.get(n.id).map(|p| (n, p)))
-            .collect();
-        let cand_refs: Vec<&Point> = kept.iter().map(|(_, a)| a.as_ref()).collect();
-        let scores = self.scorer.score_batch(p, &cand_refs);
-        self.metrics
-            .counters
-            .pairs_scored
-            .fetch_add(scores.len() as u64, Relaxed);
-        let mut out: Vec<ScoredNeighbor> = kept
-            .iter()
-            .zip(&scores)
-            .map(|((n, _), &score)| ScoredNeighbor { id: n.id, score, dot: n.dot })
-            .collect();
-        out.sort_unstable_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        if neighbors.is_empty() {
+            return Vec::new();
+        }
+        let t_phase = Instant::now();
+        let mut s = self.neighbor_scratch.take();
+        s.ids.clear();
+        s.ids.extend(neighbors.iter().map(|n| n.id));
+        self.store.get_many(&s.ids, &mut s.arcs);
+        s.kept.clear();
+        for (n, arc) in neighbors.iter().zip(s.arcs.drain(..)) {
+            if let Some(a) = arc {
+                s.kept.push((*n, a));
+            }
+        }
+        let mut refs = s.refs.take();
+        refs.extend(s.kept.iter().map(|(_, a)| a.as_ref()));
+        s.scores.clear();
+        let t_score = Instant::now();
+        score_into_parallel(
+            &*self.scorer,
+            p,
+            &refs,
+            &self.scorer_scratch,
+            par_threads,
+            &mut s.scores,
+        );
+        counters
+            .pairs_scored_ns
+            .fetch_add(t_score.elapsed().as_nanos() as u64, Relaxed);
+        counters.pairs_scored.fetch_add(s.scores.len() as u64, Relaxed);
+        debug_assert_eq!(s.scores.len(), s.kept.len());
+        let mut out: Vec<ScoredNeighbor> = Vec::with_capacity(neighbors.len());
+        out.extend(
+            s.kept
+                .iter()
+                .zip(&s.scores)
+                .map(|((n, _), &score)| ScoredNeighbor { id: n.id, score, dot: n.dot }),
+        );
+        out.sort_unstable_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
+        s.refs.put(refs);
+        // Drop the Arc<Point> payloads before pooling: a scratch parked in
+        // the pool must not keep candidate features (possibly deleted by
+        // now) alive. Capacity is what we recycle, not contents.
+        s.kept.clear();
+        s.scores.clear();
+        self.neighbor_scratch.put(s);
+        self.metrics.scoring_latency.record(t_phase.elapsed());
         out
     }
 
@@ -429,7 +503,7 @@ impl DynamicGus {
         self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
         let embedding = { self.embedder.read().unwrap().embed(p) };
         let neighbors = self.index.top_k(&embedding, k, self.query_params(p));
-        let out = self.score_neighbors(p, &neighbors);
+        let out = self.score_neighbors(p, &neighbors, self.index.query_threads());
         self.metrics.query_latency.record(t0.elapsed());
         self.metrics
             .counters
@@ -462,7 +536,8 @@ impl DynamicGus {
         };
         let neighbor_lists = self.index.query_batch(&queries, k);
         let out = crate::util::threadpool::parallel_map(points.len(), threads, |i| {
-            self.score_neighbors(&points[i], &neighbor_lists[i])
+            // One query per worker: no nested scoring fan-out.
+            self.score_neighbors(&points[i], &neighbor_lists[i], 1)
         });
         self.metrics.query_latency.record(t0.elapsed());
         self.metrics
@@ -626,6 +701,7 @@ impl DynamicGus {
             ("counters", self.metrics.counters.to_json()),
             ("mutation_latency", self.metrics.mutation_latency.summary().to_json()),
             ("query_latency", self.metrics.query_latency.summary().to_json()),
+            ("scoring_latency", self.metrics.scoring_latency.summary().to_json()),
             ("staleness_p99_ms", Json::num(self.metrics.staleness.p99_ms())),
             (
                 "wal",
@@ -771,6 +847,28 @@ mod tests {
         assert_eq!(gus.metrics.query_latency.count(), 2);
         let js = gus.stats_json();
         assert_eq!(js.get("points").as_usize(), Some(101));
+    }
+
+    #[test]
+    fn stats_expose_scoring_metrics() {
+        let (gus, ds) = boot(200);
+        let _ = gus.query(&ds.points[0], 10).unwrap();
+        let _ = gus.query_batch(&ds.points[1..4], 10).unwrap();
+        // One histogram entry per scored neighborhood (1 single + 3 batched).
+        assert_eq!(gus.metrics.scoring_latency.count(), 4);
+        use std::sync::atomic::Ordering::Relaxed;
+        let pairs = gus.metrics.counters.pairs_scored.load(Relaxed);
+        assert!(pairs > 0);
+        let js = gus.stats_json();
+        assert_eq!(
+            js.get("scoring_latency").get("count").as_u64(),
+            Some(4),
+            "scoring_latency missing from stats"
+        );
+        assert!(
+            js.get("counters").get("pairs_scored_ns").as_u64().unwrap() > 0,
+            "pairs_scored_ns did not accumulate"
+        );
     }
 
     #[test]

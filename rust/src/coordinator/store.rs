@@ -48,6 +48,28 @@ impl FeatureStore {
             .cloned()
     }
 
+    /// Fetch many ids at once: `out[i]` corresponds to `ids[i]`. One pass
+    /// over `ids` (each id hashed once), with each shard's read lock
+    /// acquired lazily and held until the end of the call — at most one
+    /// acquisition per shard (the per-candidate `get` path locks once per
+    /// id). Holding several read guards is deadlock-free: every writer
+    /// ([`put`]/[`remove`]) takes exactly one shard lock, so no
+    /// hold-and-wait cycle exists. `out` is cleared and refilled — reuse
+    /// it across calls.
+    ///
+    /// [`put`]: FeatureStore::put
+    /// [`remove`]: FeatureStore::remove
+    pub fn get_many(&self, ids: &[PointId], out: &mut Vec<Option<Arc<Point>>>) {
+        out.clear();
+        out.reserve(ids.len());
+        let mut guards: Vec<Option<_>> = (0..self.shards.len()).map(|_| None).collect();
+        for &id in ids {
+            let si = self.shard_of(id);
+            let g = guards[si].get_or_insert_with(|| self.shards[si].read().unwrap());
+            out.push(g.get(&id).cloned());
+        }
+    }
+
     pub fn remove(&self, id: PointId) -> Option<Arc<Point>> {
         self.shards[self.shard_of(id)].write().unwrap().remove(&id)
     }
@@ -93,6 +115,31 @@ mod tests {
         assert_eq!(s.remove(1).unwrap().id, 1);
         assert!(s.get(1).is_none());
         assert!(s.remove(1).is_none());
+    }
+
+    #[test]
+    fn get_many_matches_get() {
+        let s = FeatureStore::new(4);
+        for id in 0..50u64 {
+            s.put(pt(id));
+        }
+        // Mix of present, absent and duplicate ids; buffer reused.
+        let mut out = Vec::new();
+        for ids in [
+            vec![3u64, 999, 7, 7, 0, 49, 1234],
+            vec![],
+            vec![48, 2, 2, 100],
+        ] {
+            s.get_many(&ids, &mut out);
+            assert_eq!(out.len(), ids.len());
+            for (i, &id) in ids.iter().enumerate() {
+                assert_eq!(
+                    out[i].as_ref().map(|p| p.id),
+                    s.get(id).map(|p| p.id),
+                    "id {id}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -142,7 +142,12 @@ impl<'a> GraleBuilder<'a> {
                     kept: FxHashMap::default(),
                     edges: Vec::new(),
                 };
+                // Reused across every point in this worker's range: the
+                // scoring pass is allocation-free in steady state.
                 let mut cands: Vec<u32> = Vec::new();
+                let mut cand_pts: Vec<&Point> = Vec::new();
+                let mut scores: Vec<f32> = Vec::new();
+                let mut scratch = crate::scorer::ScorerScratch::default();
                 for p in range {
                     cands.clear();
                     for &bi in &memberships[p] {
@@ -157,9 +162,11 @@ impl<'a> GraleBuilder<'a> {
                     if cands.is_empty() {
                         continue;
                     }
-                    let cand_pts: Vec<&Point> =
-                        cands.iter().map(|&q| &points[q as usize]).collect();
-                    let scores = self.scorer.score_batch(&points[p], &cand_pts);
+                    cand_pts.clear();
+                    cand_pts.extend(cands.iter().map(|&q| &points[q as usize]));
+                    scores.clear();
+                    self.scorer
+                        .score_into(&points[p], &cand_pts, &mut scratch, &mut scores);
                     local.pairs += cands.len() as u64;
                     for (&q, &w) in cands.iter().zip(&scores) {
                         match top_k {
@@ -261,7 +268,8 @@ fn push_topk(list: &mut Vec<(f32, u32)>, k: usize, w: f32, other: u32) {
     if list.len() < k {
         list.push((w, other));
         if list.len() == k {
-            list.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            // total_cmp: a NaN weight must not panic the offline build.
+            list.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         }
         return;
     }

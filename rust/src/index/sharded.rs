@@ -61,33 +61,14 @@ use super::{Neighbor, QueryParams, QueryScratch, SparseAnn};
 use crate::features::PointId;
 use crate::sparse::SparseVec;
 use crate::util::hash::mix64;
+use crate::util::pool::Pool;
 use crate::util::threadpool::parallel_map;
-
-/// Free-list of [`QueryScratch`] buffers shared by query workers. `take`
-/// falls back to a fresh scratch when the pool is empty, so it never
-/// blocks; the pool size converges to the peak worker concurrency.
-struct ScratchPool {
-    pool: Mutex<Vec<QueryScratch>>,
-}
-
-impl ScratchPool {
-    fn new() -> ScratchPool {
-        ScratchPool { pool: Mutex::new(Vec::new()) }
-    }
-
-    fn take(&self) -> QueryScratch {
-        self.pool.lock().unwrap().pop().unwrap_or_default()
-    }
-
-    fn put(&self, scratch: QueryScratch) {
-        self.pool.lock().unwrap().push(scratch);
-    }
-}
 
 /// Sharded dynamic sparse ANN index with a parallel serving path.
 pub struct ShardedIndex {
     shards: Vec<RwLock<SparseAnn>>,
-    scratch: ScratchPool,
+    /// Free-list of [`QueryScratch`] buffers shared by query workers.
+    scratch: Pool<QueryScratch>,
     query_threads: usize,
 }
 
@@ -108,7 +89,7 @@ impl ShardedIndex {
         assert!(n_shards >= 1);
         ShardedIndex {
             shards: (0..n_shards).map(|_| RwLock::new(SparseAnn::new())).collect(),
-            scratch: ScratchPool::new(),
+            scratch: Pool::new(),
             query_threads: query_threads.max(1),
         }
     }

@@ -169,6 +169,11 @@ pub struct Counters {
     pub errors: AtomicU64,
     pub candidates_retrieved: AtomicU64,
     pub pairs_scored: AtomicU64,
+    /// Wall-clock nanoseconds spent inside pair scoring (the
+    /// `PairScorer::score_into` span, excluding feature fetch and the
+    /// result sort). `pairs_scored / (pairs_scored_ns / 1e9)` is the
+    /// served pairs/sec figure `scorer_bench` tracks offline.
+    pub pairs_scored_ns: AtomicU64,
     /// Connections refused at the concurrency cap (each gets a final
     /// `OVERLOADED` response before the socket closes).
     pub refused: AtomicU64,
@@ -189,6 +194,7 @@ impl Counters {
             ("errors", g(&self.errors)),
             ("candidates_retrieved", g(&self.candidates_retrieved)),
             ("pairs_scored", g(&self.pairs_scored)),
+            ("pairs_scored_ns", Json::u64(self.pairs_scored_ns.load(Ordering::Relaxed))),
             ("refused", g(&self.refused)),
             ("overloaded", g(&self.overloaded)),
             ("deadline_exceeded", g(&self.deadline_exceeded)),

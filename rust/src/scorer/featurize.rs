@@ -116,6 +116,123 @@ impl PairFeaturizer {
         out
     }
 
+    /// Precompute the query side of the extras for `q`: sorted/deduped
+    /// token sets and dense squared norms are computed once per query here
+    /// instead of once per pair inside [`extras_into`]. `prep`'s buffers
+    /// are recycled across queries (and across schemas: the layout is
+    /// rebuilt in place when it does not match).
+    ///
+    /// [`extras_into`]: PairFeaturizer::extras_into
+    pub fn prepare(&self, q: &Point, prep: &mut QueryPrep) {
+        let mut ei = 0usize;
+        for (i, _ch) in self.schema.channels.iter().enumerate() {
+            if i == self.primary_dense {
+                continue;
+            }
+            match &q.features[i] {
+                FeatureValue::Tokens(t) => {
+                    // Two steps (probe, then reuse) so the slot's Vec
+                    // allocation is recycled without borrowing `entries`
+                    // across the insert.
+                    if !matches!(prep.entries.get(ei), Some(PrepEntry::Tokens(_))) {
+                        set_entry(&mut prep.entries, ei, PrepEntry::Tokens(Vec::new()));
+                    }
+                    if let Some(PrepEntry::Tokens(set)) = prep.entries.get_mut(ei) {
+                        set.clear();
+                        set.extend_from_slice(t);
+                        set.sort_unstable();
+                        set.dedup();
+                    }
+                }
+                FeatureValue::Scalar(x) => set_entry(&mut prep.entries, ei, PrepEntry::Scalar(*x)),
+                FeatureValue::Dense(v) => {
+                    // Same accumulation order as `cosine`'s `na`, so the
+                    // prepped path is bit-identical to the per-pair one.
+                    let mut na = 0.0f32;
+                    for &x in v {
+                        na += x * x;
+                    }
+                    set_entry(&mut prep.entries, ei, PrepEntry::Dense(na));
+                }
+            }
+            ei += 1;
+        }
+        prep.entries.truncate(ei);
+    }
+
+    /// [`extras_into`], but with the query side taken from a [`QueryPrep`]
+    /// built by [`prepare`] for the same `q`. Produces bit-identical values
+    /// (pinned by tests) while skipping the per-pair query-side work.
+    ///
+    /// [`extras_into`]: PairFeaturizer::extras_into
+    /// [`prepare`]: PairFeaturizer::prepare
+    pub fn extras_into_prepped(
+        &self,
+        prep: &mut QueryPrep,
+        q: &Point,
+        c: &Point,
+        out: &mut Vec<f32>,
+    ) {
+        let QueryPrep { entries, tok_buf } = prep;
+        let mut ei = 0usize;
+        for (i, ch) in self.schema.channels.iter().enumerate() {
+            if i == self.primary_dense {
+                continue;
+            }
+            match (&entries[ei], &c.features[i]) {
+                (PrepEntry::Tokens(qset), FeatureValue::Tokens(b)) => {
+                    // Candidate side still sorts per pair; the query side is
+                    // already a set. Merge-count like `set_overlap`.
+                    tok_buf.clear();
+                    tok_buf.extend_from_slice(b);
+                    tok_buf.sort_unstable();
+                    tok_buf.dedup();
+                    let (mut x, mut y, mut inter) = (0usize, 0usize, 0usize);
+                    while x < qset.len() && y < tok_buf.len() {
+                        match qset[x].cmp(&tok_buf[y]) {
+                            std::cmp::Ordering::Less => x += 1,
+                            std::cmp::Ordering::Greater => y += 1,
+                            std::cmp::Ordering::Equal => {
+                                inter += 1;
+                                x += 1;
+                                y += 1;
+                            }
+                        }
+                    }
+                    let union = qset.len() + tok_buf.len() - inter;
+                    let jaccard = if union == 0 {
+                        0.0
+                    } else {
+                        inter as f32 / union as f32
+                    };
+                    out.push(jaccard);
+                    out.push((1.0 + inter as f32).ln());
+                }
+                (PrepEntry::Scalar(a), FeatureValue::Scalar(b)) => {
+                    out.push((a - b).abs() / SCALAR_SCALE);
+                }
+                (PrepEntry::Dense(na), FeatureValue::Dense(bv)) => {
+                    let av = match &q.features[i] {
+                        FeatureValue::Dense(v) => v,
+                        _ => unreachable!("prep entry built from a dense channel"),
+                    };
+                    let (mut dot, mut nb) = (0.0f32, 0.0f32);
+                    for (x, y) in av.iter().zip(bv) {
+                        dot += x * y;
+                        nb += y * y;
+                    }
+                    out.push(if *na == 0.0 || nb == 0.0 {
+                        0.0
+                    } else {
+                        dot / (na.sqrt() * nb.sqrt())
+                    });
+                }
+                _ => panic!("channel {i} ({}): mismatched kinds", ch.name),
+            }
+            ei += 1;
+        }
+    }
+
     /// The full φ(q, c) — used by the native scorer and tests. The XLA path
     /// never materializes this (dense blocks are fused in the kernel).
     pub fn full_into(&self, q: &Point, c: &Point, out: &mut Vec<f32>) {
@@ -136,6 +253,39 @@ impl PairFeaturizer {
         let mut out = Vec::with_capacity(self.input_dim());
         self.full_into(q, c, &mut out);
         out
+    }
+}
+
+/// Query-side extras precomputation: what [`PairFeaturizer::extras_into`]
+/// would otherwise redo for every candidate of the same query (sorting the
+/// query's token sets, squaring its dense norms). Built by
+/// [`PairFeaturizer::prepare`]; consumed by
+/// [`PairFeaturizer::extras_into_prepped`]. All buffers are recycled across
+/// queries, so steady-state preparation is allocation-free.
+#[derive(Debug, Default, Clone)]
+pub struct QueryPrep {
+    /// One entry per non-primary channel, in schema order.
+    entries: Vec<PrepEntry>,
+    /// Candidate-side token scratch (sorted + deduped per pair).
+    tok_buf: Vec<u64>,
+}
+
+#[derive(Debug, Clone)]
+enum PrepEntry {
+    /// Sorted, deduplicated token set of the query channel.
+    Tokens(Vec<u64>),
+    /// Query scalar value.
+    Scalar(f32),
+    /// Query-side squared norm of a non-primary dense channel.
+    Dense(f32),
+}
+
+/// Overwrite `entries[ei]` (or push when extending), reusing the slot.
+fn set_entry(entries: &mut Vec<PrepEntry>, ei: usize, e: PrepEntry) {
+    if ei < entries.len() {
+        entries[ei] = e;
+    } else {
+        entries.push(e);
     }
 }
 
@@ -286,6 +436,101 @@ mod tests {
         let full = f.full(&q, &c);
         let extras = f.extras(&q, &c);
         assert_eq!(&full[full.len() - extras.len()..], extras.as_slice());
+    }
+
+    #[test]
+    fn prepped_extras_bit_identical() {
+        // Every channel kind, including edge cases: duplicate tokens,
+        // empty token sets, zero-norm dense extras.
+        let schema = Schema {
+            name: "mixed".to_string(),
+            channels: vec![
+                crate::features::ChannelSchema {
+                    name: "emb".into(),
+                    kind: crate::features::FeatureKind::Dense,
+                    dim: 3,
+                },
+                crate::features::ChannelSchema {
+                    name: "tags".into(),
+                    kind: crate::features::FeatureKind::Tokens,
+                    dim: 0,
+                },
+                crate::features::ChannelSchema {
+                    name: "year".into(),
+                    kind: crate::features::FeatureKind::Scalar,
+                    dim: 1,
+                },
+                crate::features::ChannelSchema {
+                    name: "aux".into(),
+                    kind: crate::features::FeatureKind::Dense,
+                    dim: 2,
+                },
+            ],
+        };
+        let f = PairFeaturizer::new(&schema);
+        let mk = |toks: Vec<u64>, year: f32, aux: Vec<f32>| {
+            Point::new(
+                0,
+                vec![
+                    FeatureValue::Dense(vec![0.3, -1.2, 4.0]),
+                    FeatureValue::Tokens(toks),
+                    FeatureValue::Scalar(year),
+                    FeatureValue::Dense(aux),
+                ],
+            )
+        };
+        let q = mk(vec![7, 7, 3, 9], 2020.0, vec![0.5, -0.25]);
+        let cands = [
+            mk(vec![3, 11], 2004.0, vec![1.0, 1.0]),
+            mk(vec![], 2020.0, vec![0.0, 0.0]),
+            mk(vec![9, 3, 7], 1999.5, vec![-0.5, 0.25]),
+        ];
+        let mut prep = QueryPrep::default();
+        // Prepare twice to exercise buffer reuse.
+        f.prepare(&q, &mut prep);
+        f.prepare(&q, &mut prep);
+        let mut got = Vec::new();
+        for c in &cands {
+            got.clear();
+            f.extras_into_prepped(&mut prep, &q, c, &mut got);
+            let want = f.extras(&q, c);
+            assert_eq!(got, want, "prepped extras diverged");
+        }
+    }
+
+    #[test]
+    fn prep_relayout_across_schemas() {
+        // The same QueryPrep reused across schemas with different extras
+        // layouts must rebuild in place.
+        let s1 = Schema::products_like(2);
+        let s2 = Schema::arxiv_like(2);
+        let f1 = PairFeaturizer::new(&s1);
+        let f2 = PairFeaturizer::new(&s2);
+        let p1 = Point::new(
+            1,
+            vec![FeatureValue::Dense(vec![1.0, 0.0]), FeatureValue::Tokens(vec![4, 2])],
+        );
+        let c1 = Point::new(
+            2,
+            vec![FeatureValue::Dense(vec![0.0, 1.0]), FeatureValue::Tokens(vec![2])],
+        );
+        let p2 = Point::new(
+            3,
+            vec![FeatureValue::Dense(vec![1.0, 1.0]), FeatureValue::Scalar(2001.0)],
+        );
+        let c2 = Point::new(
+            4,
+            vec![FeatureValue::Dense(vec![1.0, -1.0]), FeatureValue::Scalar(2011.0)],
+        );
+        let mut prep = QueryPrep::default();
+        let mut out = Vec::new();
+        f1.prepare(&p1, &mut prep);
+        f1.extras_into_prepped(&mut prep, &p1, &c1, &mut out);
+        assert_eq!(out, f1.extras(&p1, &c1));
+        out.clear();
+        f2.prepare(&p2, &mut prep);
+        f2.extras_into_prepped(&mut prep, &p2, &c2, &mut out);
+        assert_eq!(out, f2.extras(&p2, &c2));
     }
 
     #[test]

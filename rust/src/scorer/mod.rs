@@ -20,28 +20,171 @@
 
 pub mod featurize;
 pub mod native;
+pub mod packed;
 pub mod xla;
 
 use crate::features::Point;
 use crate::util::json::Json;
 
-pub use featurize::PairFeaturizer;
+pub use featurize::{PairFeaturizer, QueryPrep};
 pub use native::NativeScorer;
+pub use packed::{PackedWeights, TILE};
 pub use xla::XlaScorer;
 
 /// Hidden width of the paper's model (§5 "Model training": two layers, 10
 /// hidden units per layer).
 pub const HIDDEN: usize = 10;
 
+/// Reusable per-worker scoring state. Everything the allocation-free entry
+/// point [`PairScorer::score_into`] needs between calls lives here: the
+/// lane-major φ tile, the per-pair extras staging buffer, the query-side
+/// precomputation ([`QueryPrep`]) and the chunk output buffer the parallel
+/// splitter uses. `Default` is an empty scratch; buffers grow to the
+/// high-water mark and stay.
+#[derive(Debug, Default)]
+pub struct ScorerScratch {
+    /// Lane-major φ tile (`phi[feature * B + lane]`).
+    pub(crate) phi: Vec<f32>,
+    /// Per-candidate extras staging (written by the featurizer, scattered
+    /// into the tile).
+    pub(crate) extras: Vec<f32>,
+    /// Query-side precomputation, rebuilt per query.
+    pub(crate) prep: QueryPrep,
+    /// Per-chunk score buffer for [`score_into_parallel`] workers.
+    pub(crate) chunk_out: Vec<f32>,
+}
+
 /// A pairwise similarity scorer: query point vs a batch of candidates,
-/// returning one score in [0, 1] per candidate.
+/// one score in [0, 1] per candidate.
 pub trait PairScorer: Send + Sync {
-    /// Score `q` against each candidate.
-    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32>;
+    /// Allocation-free entry point: score `q` against each candidate,
+    /// **appending** `cands.len()` scores to `out` in candidate order.
+    /// `scratch` is reused across calls (pool it per worker); a scratch
+    /// carries no query state between calls, so any scratch works with any
+    /// query of any schema.
+    fn score_into(
+        &self,
+        q: &Point,
+        cands: &[&Point],
+        scratch: &mut ScorerScratch,
+        out: &mut Vec<f32>,
+    );
+
+    /// Compatibility wrapper over [`score_into`](PairScorer::score_into)
+    /// with a throwaway scratch. Prefer `score_into` on hot paths.
+    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
+        let mut scratch = ScorerScratch::default();
+        let mut out = Vec::with_capacity(cands.len());
+        self.score_into(q, cands, &mut scratch, &mut out);
+        out
+    }
 
     /// Convenience: single pair.
     fn score(&self, q: &Point, c: &Point) -> f32 {
         self.score_batch(q, &[c])[0]
+    }
+
+    /// Whether [`score_into_parallel`] may split one candidate list across
+    /// workers for this scorer. The native tile kernel scales linearly
+    /// with chunks; a scorer that serializes internally (the XLA actor)
+    /// gains nothing from a split and only pays extra batch padding and
+    /// queueing, so it opts out.
+    fn parallel_chunking(&self) -> bool {
+        true
+    }
+}
+
+/// Free-list pool of [`ScorerScratch`]es (see [`crate::util::pool::Pool`]:
+/// `take` never blocks, the pool converges to peak worker concurrency).
+pub type ScratchPool = crate::util::pool::Pool<ScorerScratch>;
+
+/// Candidate lists below this size are scored serially: tiling already
+/// saturates one core's vector units, and forking scoped workers costs more
+/// than it buys until the list is a few hundred pairs.
+pub const SCORE_PAR_MIN: usize = 512;
+
+/// Target pairs per parallel chunk (bounds the worker count for mid-size
+/// lists so each chunk amortizes its spawn).
+pub const SCORE_PAR_CHUNK: usize = 256;
+
+/// Score a candidate list, splitting it across up to `threads` scoped
+/// workers when it is large enough ([`SCORE_PAR_MIN`]) — a single query's
+/// scoring then parallelizes the way `query_batch` already parallelizes
+/// across queries. Appends to `out` in candidate order; results are
+/// identical to the serial path (the tile kernel's per-lane math is
+/// independent of how the list is chunked). Scratches come from `pool`,
+/// one per worker.
+pub fn score_into_parallel(
+    scorer: &dyn PairScorer,
+    q: &Point,
+    cands: &[&Point],
+    pool: &ScratchPool,
+    threads: usize,
+    out: &mut Vec<f32>,
+) {
+    let n_chunks = if threads <= 1 || cands.len() < SCORE_PAR_MIN || !scorer.parallel_chunking() {
+        1
+    } else {
+        threads.min(cands.len().div_ceil(SCORE_PAR_CHUNK))
+    };
+    if n_chunks <= 1 {
+        let mut scratch = pool.take();
+        scorer.score_into(q, cands, &mut scratch, out);
+        pool.put(scratch);
+        return;
+    }
+    let chunk = cands.len().div_ceil(n_chunks);
+    let parts = crate::util::threadpool::parallel_map(n_chunks, threads, |ci| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(cands.len());
+        let mut scratch = pool.take();
+        let mut local = std::mem::take(&mut scratch.chunk_out);
+        local.clear();
+        scorer.score_into(q, &cands[lo..hi], &mut scratch, &mut local);
+        (scratch, local)
+    });
+    out.reserve(cands.len());
+    for (mut scratch, local) in parts {
+        out.extend_from_slice(&local);
+        scratch.chunk_out = local;
+        pool.put(scratch);
+    }
+}
+
+/// A recyclable allocation for `Vec<&Point>` candidate lists: the capacity
+/// survives across calls while the borrows inside never outlive one call.
+/// Backed by `Vec<usize>` (same size/alignment as `&Point`, and `Send`, so
+/// scratch holding one can sit in a shared pool).
+#[derive(Debug, Default)]
+pub struct CandRefs {
+    spare: Vec<usize>,
+}
+
+// The recycling cast below is only sound while these hold.
+const _: () = assert!(
+    std::mem::size_of::<&Point>() == std::mem::size_of::<usize>()
+        && std::mem::align_of::<&Point>() == std::mem::align_of::<usize>()
+);
+
+impl CandRefs {
+    /// Take the (empty) buffer as a `Vec<&Point>` for this call's lifetime.
+    pub fn take<'a>(&mut self) -> Vec<&'a Point> {
+        let v = std::mem::take(&mut self.spare);
+        debug_assert!(v.is_empty());
+        let mut v = std::mem::ManuallyDrop::new(v);
+        // SAFETY: `v` is empty (len 0) and `usize` and `&Point` have
+        // identical size and alignment (asserted above), so the allocation
+        // layout is unchanged and no element is ever reinterpreted.
+        unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut &'a Point, 0, v.capacity()) }
+    }
+
+    /// Return the buffer, clearing it (dropping only `&` refs) and keeping
+    /// the capacity for the next call.
+    pub fn put(&mut self, mut v: Vec<&Point>) {
+        v.clear();
+        let mut v = std::mem::ManuallyDrop::new(v);
+        // SAFETY: cleared above; layouts match as in `take`.
+        self.spare = unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut usize, 0, v.capacity()) };
     }
 }
 
@@ -192,5 +335,37 @@ mod tests {
     #[test]
     fn load_missing_file_errors() {
         assert!(MlpWeights::load(std::path::Path::new("/nonexistent/w.json")).is_err());
+    }
+
+    #[test]
+    fn cand_refs_recycles_capacity() {
+        let p1 = Point::new(1, vec![]);
+        let p2 = Point::new(2, vec![]);
+        let mut cr = CandRefs::default();
+        let mut v = cr.take();
+        v.push(&p1);
+        v.push(&p2);
+        assert_eq!(v[1].id, 2);
+        let cap = v.capacity();
+        cr.put(v);
+        // A fresh point with a different lifetime reuses the allocation.
+        let p3 = Point::new(3, vec![]);
+        let mut v = cr.take();
+        assert!(v.is_empty());
+        assert_eq!(v.capacity(), cap, "allocation not recycled");
+        v.push(&p3);
+        assert_eq!(v[0].id, 3);
+        cr.put(v);
+    }
+
+    #[test]
+    fn scratch_pool_recycles() {
+        let pool = ScratchPool::new();
+        let mut s = pool.take();
+        s.phi.resize(64, 0.0);
+        pool.put(s);
+        let s = pool.take();
+        assert_eq!(s.phi.len(), 64, "pooled scratch not returned");
+        assert!(pool.take().phi.is_empty(), "empty pool must hand out fresh scratch");
     }
 }

@@ -3,17 +3,31 @@
 //! Serves three roles: (1) numeric oracle for the XLA/Pallas path (parity
 //! asserted in `rust/tests/runtime_parity.rs`), (2) the scorer inside the
 //! offline Grale baseline, (3) fallback when `artifacts/` has not been
-//! built. The hot loop is written blockwise over W1's three row-blocks so
-//! φ is never materialized — mirroring the Pallas kernel's structure.
+//! built.
+//!
+//! Two paths implement the same math:
+//!
+//! - [`NativeScorer::score_batch_scalar`] — the scalar **oracle**: one pair
+//!   at a time, blockwise over W1's three row-blocks in φ order (product
+//!   block, |difference| block, extras), φ never materialized.
+//! - [`PairScorer::score_into`] — the **hot path**: candidates scored in
+//!   [`TILE`]-wide lane-parallel tiles against [`PackedWeights`]
+//!   (unit-major W1), with query-side extras precomputation and zero
+//!   steady-state allocation. Per-lane accumulation order matches the
+//!   oracle exactly, so the two paths are bit-identical (pinned by
+//!   `rust/tests/scorer_parity.rs`; the acceptance bound is 1e-5, bitwise
+//!   at tile width 1).
 
 use super::featurize::PairFeaturizer;
-use super::{MlpWeights, PairScorer};
+use super::packed::{PackedWeights, TILE};
+use super::{MlpWeights, PairScorer, ScorerScratch};
 use crate::features::Point;
 
 /// Native (CPU, pure Rust) pairwise scorer.
 pub struct NativeScorer {
     featurizer: PairFeaturizer,
     weights: MlpWeights,
+    packed: PackedWeights,
 }
 
 impl NativeScorer {
@@ -25,7 +39,8 @@ impl NativeScorer {
             weights.input_dim,
             featurizer.input_dim()
         );
-        NativeScorer { featurizer, weights }
+        let packed = PackedWeights::pack(&weights, featurizer.dense_dim(), featurizer.extra_dim());
+        NativeScorer { featurizer, weights, packed }
     }
 
     pub fn featurizer(&self) -> &PairFeaturizer {
@@ -36,23 +51,35 @@ impl NativeScorer {
         &self.weights
     }
 
-    /// Score one candidate given the query's dense slice + extras buffer.
-    fn score_one(&self, qd: &[f32], cd: &[f32], extras: &[f32]) -> f32 {
+    /// The tile-kernel weights (benches, diagnostics).
+    pub fn packed(&self) -> &PackedWeights {
+        &self.packed
+    }
+
+    /// Scalar oracle: score one candidate given the query's dense slice +
+    /// extras buffer. Accumulates in φ order (product block, then
+    /// |difference| block, then extras) — the exact order the packed tile
+    /// kernel uses per lane, which is what makes the two paths bit-exact.
+    fn score_one_scalar(&self, qd: &[f32], cd: &[f32], extras: &[f32]) -> f32 {
         let w = &self.weights;
         let h = w.hidden;
         let d = qd.len();
-        // z1 = relu( (q*c)·W1p + |q-c|·W1d + e·W1e + b1 ), blockwise:
         let mut z1 = [0.0f32; 64];
         debug_assert!(h <= 64);
         let z1 = &mut z1[..h];
         z1.copy_from_slice(&w.b1);
         for (j, (&a, &b)) in qd.iter().zip(cd).enumerate() {
             let prod = a * b;
-            let diff = (a - b).abs();
             let row_p = &w.w1[j * h..(j + 1) * h];
+            for k in 0..h {
+                z1[k] += prod * row_p[k];
+            }
+        }
+        for (j, (&a, &b)) in qd.iter().zip(cd).enumerate() {
+            let diff = (a - b).abs();
             let row_d = &w.w1[(d + j) * h..(d + j + 1) * h];
             for k in 0..h {
-                z1[k] += prod * row_p[k] + diff * row_d[k];
+                z1[k] += diff * row_d[k];
             }
         }
         for (j, &e) in extras.iter().enumerate() {
@@ -83,15 +110,11 @@ impl NativeScorer {
         }
         sigmoid(logit)
     }
-}
 
-#[inline]
-pub(crate) fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-impl PairScorer for NativeScorer {
-    fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
+    /// Scalar reference path: the pre-tile implementation, kept as the
+    /// numeric oracle for parity tests and as the baseline `scorer_bench`
+    /// compares the packed kernel against.
+    pub fn score_batch_scalar(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
         let ch = self.featurizer.primary_dense_channel();
         let qd = q.dense(ch);
         let mut extras = Vec::with_capacity(self.featurizer.extra_dim());
@@ -100,9 +123,90 @@ impl PairScorer for NativeScorer {
             .map(|c| {
                 extras.clear();
                 self.featurizer.extras_into(q, c, &mut extras);
-                self.score_one(qd, c.dense(ch), &extras)
+                self.score_one_scalar(qd, c.dense(ch), &extras)
             })
             .collect()
+    }
+
+    /// Materialize the lane-major φ tile for `tile` (≤ `B` candidates) in
+    /// `phi`. Pad lanes of a partial tile are zeroed.
+    fn fill_tile<const B: usize>(
+        &self,
+        qd: &[f32],
+        q: &Point,
+        tile: &[&Point],
+        scratch: &mut ScorerScratch,
+    ) {
+        let d = qd.len();
+        let ke = self.featurizer.extra_dim();
+        let ch = self.featurizer.primary_dense_channel();
+        let need = (2 * d + ke) * B;
+        if scratch.phi.len() < need {
+            scratch.phi.resize(need, 0.0);
+        }
+        let phi = &mut scratch.phi[..need];
+        if tile.len() < B {
+            phi.fill(0.0);
+        }
+        for (l, c) in tile.iter().enumerate() {
+            let cd = c.dense(ch);
+            for j in 0..d {
+                let a = qd[j];
+                let b = cd[j];
+                phi[j * B + l] = a * b;
+                phi[(d + j) * B + l] = (a - b).abs();
+            }
+            scratch.extras.clear();
+            let (prep, extras) = (&mut scratch.prep, &mut scratch.extras);
+            self.featurizer.extras_into_prepped(prep, q, c, extras);
+            for (j, &e) in scratch.extras.iter().enumerate() {
+                phi[(2 * d + j) * B + l] = e;
+            }
+        }
+    }
+
+    /// [`PairScorer::score_into`] with an explicit tile width `B` (1 ≤ B ≤
+    /// [`TILE`]). The default entry point uses `B = TILE`; `B = 1` exists
+    /// for the bit-exactness pin in the parity suite and for benchmarks.
+    /// Results are identical at every width (per-lane math does not depend
+    /// on how the list is tiled).
+    pub fn score_into_tiled<const B: usize>(
+        &self,
+        q: &Point,
+        cands: &[&Point],
+        scratch: &mut ScorerScratch,
+        out: &mut Vec<f32>,
+    ) {
+        if cands.is_empty() {
+            return;
+        }
+        let ch = self.featurizer.primary_dense_channel();
+        let qd = q.dense(ch);
+        self.featurizer.prepare(q, &mut scratch.prep);
+        out.reserve(cands.len());
+        let mut tile_out = [0.0f32; TILE];
+        for tile in cands.chunks(B) {
+            self.fill_tile::<B>(qd, q, tile, scratch);
+            self.packed.score_tile::<B>(&scratch.phi, &mut tile_out);
+            out.extend_from_slice(&tile_out[..tile.len()]);
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl PairScorer for NativeScorer {
+    fn score_into(
+        &self,
+        q: &Point,
+        cands: &[&Point],
+        scratch: &mut ScorerScratch,
+        out: &mut Vec<f32>,
+    ) {
+        self.score_into_tiled::<TILE>(q, cands, scratch, out)
     }
 }
 
@@ -161,19 +265,42 @@ mod tests {
     }
 
     #[test]
-    fn blockwise_matches_naive() {
+    fn packed_matches_naive() {
         let (scorer, pts) = setup();
         for q in &pts {
             let cands: Vec<&Point> = pts.iter().collect();
             let got = scorer.score_batch(q, &cands);
             for (c, g) in pts.iter().zip(&got) {
                 let want = naive_score(&scorer, q, c);
-                assert!(
-                    (g - want).abs() < 1e-5,
-                    "blockwise {g} vs naive {want}"
-                );
+                assert!((g - want).abs() < 1e-5, "packed {g} vs naive {want}");
             }
         }
+    }
+
+    #[test]
+    fn scalar_oracle_matches_naive() {
+        let (scorer, pts) = setup();
+        let cands: Vec<&Point> = pts.iter().collect();
+        let got = scorer.score_batch_scalar(&pts[3], &cands);
+        for (c, g) in pts.iter().zip(&got) {
+            let want = naive_score(&scorer, &pts[3], c);
+            // Both accumulate in φ order: bit-identical.
+            assert_eq!(*g, want, "scalar oracle diverged from naive");
+        }
+    }
+
+    #[test]
+    fn packed_bit_exact_vs_scalar() {
+        let (scorer, pts) = setup();
+        let cands: Vec<&Point> = pts.iter().collect();
+        let mut scratch = ScorerScratch::default();
+        let mut got = Vec::new();
+        scorer.score_into(&pts[0], &cands, &mut scratch, &mut got);
+        assert_eq!(got, scorer.score_batch_scalar(&pts[0], &cands));
+        // Width 1: the acceptance criterion's bit-exactness pin.
+        got.clear();
+        scorer.score_into_tiled::<1>(&pts[0], &cands, &mut scratch, &mut got);
+        assert_eq!(got, scorer.score_batch_scalar(&pts[0], &cands));
     }
 
     #[test]
@@ -218,6 +345,19 @@ mod tests {
     fn empty_batch() {
         let (scorer, pts) = setup();
         assert!(scorer.score_batch(&pts[0], &[]).is_empty());
+    }
+
+    #[test]
+    fn partial_tiles_match_full() {
+        // Every batch size around the tile boundary agrees with the oracle.
+        let (scorer, pts) = setup();
+        let mut scratch = ScorerScratch::default();
+        for n in 0..pts.len() {
+            let cands: Vec<&Point> = pts[..n].iter().collect();
+            let mut got = Vec::new();
+            scorer.score_into(&pts[9], &cands, &mut scratch, &mut got);
+            assert_eq!(got, scorer.score_batch_scalar(&pts[9], &cands), "n={n}");
+        }
     }
 
     #[test]

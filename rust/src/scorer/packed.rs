@@ -1,0 +1,224 @@
+//! Blocked, SIMD-friendly scoring kernel: packed weights + candidate tiles.
+//!
+//! [`MlpWeights`] stores `W1` row-major `[input_dim][hidden]` — the natural
+//! export layout from training, but a scalar walk of it computes each
+//! hidden unit's pre-activation with a stride-`hidden` gather the compiler
+//! cannot vectorize. [`PackedWeights`] transposes `W1` to **unit-major**
+//! `[hidden][input_dim]` (each hidden unit's weights contiguous, in φ
+//! order: product block, |difference| block, extras) with rows padded to a
+//! [`TILE`]-float boundary, and transposes `W2` the same way.
+//!
+//! [`PackedWeights::score_tile`] then scores a tile of up to [`TILE`]
+//! candidates at once against a **lane-major** φ buffer
+//! (`phi[feature * B + lane]`): every inner loop is `B` independent
+//! per-lane accumulators updated with one broadcast weight — the shape
+//! LLVM auto-vectorizes without any float reassociation. Because each
+//! lane's additions happen in exactly the order the scalar oracle
+//! (`NativeScorer::score_batch_scalar`) uses, the packed kernel is
+//! bit-exact to the scalar path at every tile width — pinned by the
+//! parity suite in `rust/tests/scorer_parity.rs` (bitwise at tile width
+//! 1, ≤ 1e-5 everywhere by the acceptance criteria).
+
+use super::native::sigmoid;
+use super::MlpWeights;
+
+/// Candidate tile width of the packed kernel: 8 lanes fill a 256-bit
+/// vector register with f32s, and the remainder tile is zero-padded (pad
+/// lanes cost nothing extra and their outputs are discarded).
+pub const TILE: usize = 8;
+
+/// Maximum supported hidden width (the paper's model uses 10; stack
+/// scratch in the kernel is sized for this bound).
+pub const MAX_HIDDEN: usize = 64;
+
+/// [`MlpWeights`] repacked for the tile kernel. Construction is O(|W|)
+/// and done once per scorer; see the module docs for the layout.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    d: usize,
+    ke: usize,
+    hidden: usize,
+    /// Padded unit-row length: `2·d + ke` rounded up to a [`TILE`] multiple
+    /// so every unit's row starts 32-byte aligned relative to the buffer.
+    stride: usize,
+    /// `[hidden][stride]`; row `k` = `[W1p[:,k] | W1d[:,k] | W1e[:,k] | 0-pad]`.
+    w1t: Vec<f32>,
+    b1: Vec<f32>,
+    /// `[hidden][hidden]` transposed: `w2t[k2*h + k1] = w2[k1*h + k2]`.
+    w2t: Vec<f32>,
+    b2: Vec<f32>,
+    w3: Vec<f32>,
+    b3: f32,
+}
+
+impl PackedWeights {
+    /// Pack `w` for a featurizer with dense dim `d` and `ke` extras.
+    /// Panics if the dimensions disagree or `hidden > MAX_HIDDEN` (the
+    /// same contract `NativeScorer::new` enforces).
+    pub fn pack(w: &MlpWeights, d: usize, ke: usize) -> PackedWeights {
+        assert_eq!(w.input_dim, 2 * d + ke, "weights/featurizer dim mismatch");
+        assert!(
+            w.hidden <= MAX_HIDDEN,
+            "hidden {} exceeds kernel bound {MAX_HIDDEN}",
+            w.hidden
+        );
+        assert_eq!(w.w1.len(), w.input_dim * w.hidden, "w1 size");
+        let h = w.hidden;
+        let input_dim = 2 * d + ke;
+        let stride = input_dim.div_ceil(TILE) * TILE;
+        let mut w1t = vec![0.0f32; h * stride];
+        for k in 0..h {
+            let row = &mut w1t[k * stride..k * stride + input_dim];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = w.w1[j * h + k];
+            }
+        }
+        let mut w2t = vec![0.0f32; h * h];
+        for k2 in 0..h {
+            for k1 in 0..h {
+                w2t[k2 * h + k1] = w.w2[k1 * h + k2];
+            }
+        }
+        PackedWeights {
+            d,
+            ke,
+            hidden: h,
+            stride,
+            w1t,
+            b1: w.b1.clone(),
+            w2t,
+            b2: w.b2.clone(),
+            w3: w.w3.clone(),
+            b3: w.b3,
+        }
+    }
+
+    /// φ dimension (`2·d + ke`).
+    pub fn input_dim(&self) -> usize {
+        2 * self.d + self.ke
+    }
+
+    /// Padded unit-row length.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Lane-major φ buffer length one tile of width `B` needs.
+    pub fn tile_len(&self, b: usize) -> usize {
+        self.input_dim() * b
+    }
+
+    /// Score one tile of `B ≤ TILE` candidates. `phi` is lane-major
+    /// (`phi[j*B + lane]`, `j` in φ order) of length ≥ [`tile_len`]`(B)`;
+    /// `out[..B]` receives the scores. Pad lanes (zero φ) produce garbage
+    /// scores the caller discards.
+    ///
+    /// [`tile_len`]: PackedWeights::tile_len
+    pub fn score_tile<const B: usize>(&self, phi: &[f32], out: &mut [f32; TILE]) {
+        assert!(B >= 1 && B <= TILE, "tile width {B} out of range");
+        let h = self.hidden;
+        let input_dim = self.input_dim();
+        debug_assert!(phi.len() >= input_dim * B);
+        // Layer 1: z1[k][lane] = relu(b1[k] + Σ_j φ[j][lane] · w1t[k][j]).
+        // Per-lane accumulation order is φ order — identical to the scalar
+        // oracle's, so each lane is bit-exact to `score_one_scalar`.
+        let mut z1 = [0.0f32; MAX_HIDDEN * TILE];
+        for k in 0..h {
+            let row = &self.w1t[k * self.stride..k * self.stride + input_dim];
+            let mut acc = [self.b1[k]; B];
+            for (j, &w) in row.iter().enumerate() {
+                let lanes = &phi[j * B..j * B + B];
+                for l in 0..B {
+                    acc[l] += lanes[l] * w;
+                }
+            }
+            for l in 0..B {
+                z1[k * B + l] = acc[l].max(0.0);
+            }
+        }
+        // Layer 2: z2[k2][lane] = relu(b2[k2] + Σ_k1 z1[k1][lane] · w2[k1][k2]).
+        let mut z2 = [0.0f32; MAX_HIDDEN * TILE];
+        for k2 in 0..h {
+            let row = &self.w2t[k2 * h..(k2 + 1) * h];
+            let mut acc = [self.b2[k2]; B];
+            for (k1, &w) in row.iter().enumerate() {
+                let lanes = &z1[k1 * B..k1 * B + B];
+                for l in 0..B {
+                    acc[l] += lanes[l] * w;
+                }
+            }
+            for l in 0..B {
+                z2[k2 * B + l] = acc[l].max(0.0);
+            }
+        }
+        // Output: σ(z2 · w3 + b3) per lane.
+        for l in 0..B {
+            let mut logit = self.b3;
+            for k in 0..h {
+                logit += z2[k * B + l] * self.w3[k];
+            }
+            out[l] = sigmoid(logit);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_layout_golden() {
+        // d=2, ke=1, h=2: input_dim 5, stride rounds to 8.
+        let w = MlpWeights {
+            input_dim: 5,
+            hidden: 2,
+            // w1 row-major [input][hidden]: row j = [j*10, j*10+1].
+            w1: (0..5).flat_map(|j| [j as f32 * 10.0, j as f32 * 10.0 + 1.0]).collect(),
+            b1: vec![0.5, -0.5],
+            w2: vec![1.0, 2.0, 3.0, 4.0],
+            b2: vec![0.0, 0.0],
+            w3: vec![1.0, 1.0],
+            b3: 0.0,
+        };
+        let p = PackedWeights::pack(&w, 2, 1);
+        assert_eq!(p.input_dim(), 5);
+        assert_eq!(p.stride(), 8);
+        // Unit 0's row: column 0 of w1 across all 5 inputs, then zero pad.
+        assert_eq!(&p.w1t[..8], &[0.0, 10.0, 20.0, 30.0, 40.0, 0.0, 0.0, 0.0]);
+        // Unit 1's row: column 1.
+        assert_eq!(&p.w1t[8..16], &[1.0, 11.0, 21.0, 31.0, 41.0, 0.0, 0.0, 0.0]);
+        // w2 transposed: w2t[k2*h+k1] == w2[k1*h+k2].
+        assert_eq!(p.w2t, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn tile_widths_agree() {
+        // The per-lane math is tile-width independent: B=1 and B=8 must
+        // produce identical bits for the same φ columns.
+        let w = MlpWeights::random(7, 10, 3);
+        let p = PackedWeights::pack(&w, 3, 1);
+        let mut rng = crate::util::rng::Rng::seeded(9);
+        let phis: Vec<Vec<f32>> = (0..TILE).map(|_| rng.normal_vec_f32(7)).collect();
+        // Lane-major tile of all 8 φs.
+        let mut tile = vec![0.0f32; 7 * TILE];
+        for (l, phi) in phis.iter().enumerate() {
+            for j in 0..7 {
+                tile[j * TILE + l] = phi[j];
+            }
+        }
+        let mut out8 = [0.0f32; TILE];
+        p.score_tile::<TILE>(&tile, &mut out8);
+        for (l, phi) in phis.iter().enumerate() {
+            let mut out1 = [0.0f32; TILE];
+            p.score_tile::<1>(phi, &mut out1);
+            assert_eq!(out1[0], out8[l], "lane {l} diverged between widths");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_dim_mismatch() {
+        let w = MlpWeights::random(7, 4, 1);
+        let _ = PackedWeights::pack(&w, 4, 1); // 2*4+1 != 7
+    }
+}

@@ -179,8 +179,29 @@ impl XlaScorer {
 }
 
 impl PairScorer for XlaScorer {
+    /// The XLA path keeps its own pipeline (the actor thread needs owned
+    /// buffers shipped over a channel, so the shared scratch is unused) but
+    /// speaks the same allocation-aware entry point as the native scorer.
+    fn score_into(
+        &self,
+        q: &Point,
+        cands: &[&Point],
+        _scratch: &mut crate::scorer::ScorerScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let scores = self.try_score_batch(q, cands).expect("xla scorer failed");
+        out.extend_from_slice(&scores);
+    }
+
     fn score_batch(&self, q: &Point, cands: &[&Point]) -> Vec<f32> {
         self.try_score_batch(q, cands).expect("xla scorer failed")
+    }
+
+    /// All calls serialize on the single actor thread, and each chunk
+    /// would be padded to a compiled batch variant separately — splitting
+    /// a list across workers only adds overhead here.
+    fn parallel_chunking(&self) -> bool {
+        false
     }
 }
 

@@ -5,5 +5,6 @@
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod threadpool;

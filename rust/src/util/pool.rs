@@ -1,0 +1,66 @@
+//! A tiny free-list object pool.
+//!
+//! Shared by every hot-path scratch type (index query scratches, scorer
+//! scratches, coordinator neighbor scratches): `take` never blocks — an
+//! empty pool hands out `T::default()` — so the pool's size converges to
+//! the peak number of concurrent workers and steady state allocates
+//! nothing.
+
+use std::sync::Mutex;
+
+/// Free-list pool of `T`s. `Default` is an empty pool.
+#[derive(Debug, Default)]
+pub struct Pool<T> {
+    items: Mutex<Vec<T>>,
+}
+
+impl<T: Default> Pool<T> {
+    pub fn new() -> Pool<T> {
+        Pool { items: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a pooled item, or a fresh `T::default()` when empty.
+    pub fn take(&self) -> T {
+        self.items.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return an item to the pool. The caller is responsible for dropping
+    /// any payload that should not outlive the call (pools hold returned
+    /// items indefinitely).
+    pub fn put(&self, item: T) {
+        self.items.lock().unwrap().push(item);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_and_falls_back() {
+        let pool: Pool<Vec<u8>> = Pool::new();
+        let mut v = pool.take();
+        assert!(v.is_empty());
+        v.reserve(100);
+        let cap = v.capacity();
+        pool.put(v);
+        assert!(pool.take().capacity() >= cap, "pooled item not recycled");
+        assert_eq!(pool.take().capacity(), 0, "empty pool must hand out fresh items");
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let pool: Pool<Vec<u64>> = Pool::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for i in 0..50u64 {
+                        let mut v = pool.take();
+                        v.push(i);
+                        pool.put(v);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,316 @@
+//! Packed-kernel parity suite: the tile kernel vs the scalar oracle.
+//!
+//! The packed scoring path (`PairScorer::score_into`, lane-parallel tiles
+//! over `PackedWeights`) must match the scalar reference
+//! (`NativeScorer::score_batch_scalar`) within 1e-5 on every schema shape —
+//! and bit-exactly at tile width 1, where the accumulation order is
+//! unchanged by construction. Also covers: `score_batch` ≡ `score_into`,
+//! parallel-split scoring ≡ serial, scratch reuse across schemas, and the
+//! NaN-score regression in the coordinator's result sort.
+
+use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::features::{ChannelSchema, FeatureKind, FeatureValue, Point, Schema};
+use dynamic_gus::scorer::{
+    score_into_parallel, MlpWeights, NativeScorer, PairFeaturizer, PairScorer, ScorerScratch,
+    ScratchPool, HIDDEN,
+};
+use dynamic_gus::testing::{gen_usize, proptest};
+use dynamic_gus::util::rng::Rng;
+
+/// A random schema: dense primary channel plus 0..=3 extra channels of
+/// random kinds, in random positions relative to the primary.
+fn random_schema(rng: &mut Rng) -> Schema {
+    let d = gen_usize(rng, 1, 48);
+    let n_extras = gen_usize(rng, 0, 4);
+    let mut channels = Vec::new();
+    // The primary dense channel is the first *dense* channel; placing
+    // scalar/token channels before it exercises non-zero primary indices.
+    let primary_at = gen_usize(rng, 0, n_extras + 1);
+    let extra_kind = |rng: &mut Rng, i: usize| {
+        let kind = match rng.below(3) {
+            0 => FeatureKind::Tokens,
+            1 => FeatureKind::Scalar,
+            _ => FeatureKind::Dense,
+        };
+        ChannelSchema {
+            name: format!("x{i}"),
+            kind,
+            dim: if kind == FeatureKind::Dense { gen_usize(rng, 1, 6) } else { 1 },
+        }
+    };
+    for i in 0..n_extras + 1 {
+        if i == primary_at {
+            channels.push(ChannelSchema {
+                name: "emb".into(),
+                kind: FeatureKind::Dense,
+                dim: d,
+            });
+        } else {
+            let mut c = extra_kind(rng, i);
+            // A dense channel before the primary would *become* the
+            // primary; keep pre-primary extras non-dense.
+            if i < primary_at && c.kind == FeatureKind::Dense {
+                c.kind = FeatureKind::Scalar;
+                c.dim = 1;
+            }
+            channels.push(c);
+        }
+    }
+    Schema { name: "rand".into(), channels }
+}
+
+fn random_point(rng: &mut Rng, schema: &Schema, id: u64) -> Point {
+    let features = schema
+        .channels
+        .iter()
+        .map(|c| match c.kind {
+            FeatureKind::Dense => FeatureValue::Dense(rng.normal_vec_f32(c.dim)),
+            FeatureKind::Scalar => FeatureValue::Scalar(rng.below(4000) as f32 / 2.0),
+            FeatureKind::Tokens => {
+                // Duplicates on purpose: set semantics must hold.
+                let n = rng.below_usize(8);
+                FeatureValue::Tokens((0..n).map(|_| rng.below(12)).collect())
+            }
+        })
+        .collect();
+    Point::new(id, features)
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{ctx}: pair {i}: packed {g} vs scalar {w}"
+        );
+    }
+}
+
+fn parity_over_schema(schema: &Schema, seed: u64) {
+    let f = PairFeaturizer::new(schema);
+    let w = MlpWeights::random(f.input_dim(), HIDDEN, seed);
+    let scorer = NativeScorer::new(f, w);
+    let mut rng = Rng::seeded(seed ^ 0xabcd);
+    let pts: Vec<Point> = (0..21).map(|i| random_point(&mut rng, schema, i)).collect();
+    let q = &pts[0];
+    let mut scratch = ScorerScratch::default();
+    // Batch sizes straddling every tile boundary, including empty.
+    for n in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 20] {
+        let cands: Vec<&Point> = pts[..n].iter().collect();
+        let want = scorer.score_batch_scalar(q, &cands);
+        let mut got = Vec::new();
+        scorer.score_into(q, &cands, &mut scratch, &mut got);
+        assert_close(&got, &want, 1e-5, &format!("{} n={n}", schema.name));
+        // Tile width 1: bit-exact, same accumulation order.
+        let mut got1 = Vec::new();
+        scorer.score_into_tiled::<1>(q, &cands, &mut scratch, &mut got1);
+        assert_eq!(got1, want, "{} n={n}: width-1 not bit-exact", schema.name);
+    }
+}
+
+#[test]
+fn golden_parity_arxiv_like() {
+    parity_over_schema(&Schema::arxiv_like(8), 71);
+    parity_over_schema(&Schema::arxiv_like(128), 72);
+}
+
+#[test]
+fn golden_parity_products_like() {
+    // Tokens-only extras.
+    parity_over_schema(&Schema::products_like(16), 73);
+}
+
+#[test]
+fn golden_parity_zero_extras() {
+    // A single dense channel: ke = 0, φ = [prod | diff].
+    let schema = Schema {
+        name: "dense_only".into(),
+        channels: vec![ChannelSchema {
+            name: "emb".into(),
+            kind: FeatureKind::Dense,
+            dim: 5,
+        }],
+    };
+    parity_over_schema(&schema, 74);
+}
+
+#[test]
+fn golden_parity_tokens_only_extras() {
+    // Two token channels (4 extras), no scalar/dense extras.
+    let schema = Schema {
+        name: "tokens_heavy".into(),
+        channels: vec![
+            ChannelSchema { name: "emb".into(), kind: FeatureKind::Dense, dim: 6 },
+            ChannelSchema { name: "t1".into(), kind: FeatureKind::Tokens, dim: 0 },
+            ChannelSchema { name: "t2".into(), kind: FeatureKind::Tokens, dim: 0 },
+        ],
+    };
+    parity_over_schema(&schema, 75);
+}
+
+#[test]
+fn prop_packed_matches_scalar_on_random_schemas() {
+    proptest(|rng| {
+        let schema = random_schema(rng);
+        let f = PairFeaturizer::new(&schema);
+        let hidden = gen_usize(rng, 1, 13);
+        let w = MlpWeights::random(f.input_dim(), hidden, rng.below(1 << 40));
+        let scorer = NativeScorer::new(f, w);
+        let n = gen_usize(rng, 1, 24);
+        let pts: Vec<Point> =
+            (0..n as u64 + 1).map(|i| random_point(rng, &schema, i)).collect();
+        let q = &pts[n];
+        let cands: Vec<&Point> = pts[..n].iter().collect();
+        let want = scorer.score_batch_scalar(q, &cands);
+        let mut scratch = ScorerScratch::default();
+        let mut got = Vec::new();
+        scorer.score_into(q, &cands, &mut scratch, &mut got);
+        assert_close(&got, &want, 1e-5, "random schema");
+        let mut got1 = Vec::new();
+        scorer.score_into_tiled::<1>(q, &cands, &mut scratch, &mut got1);
+        assert_eq!(got1, want, "width-1 not bit-exact on random schema");
+    });
+}
+
+#[test]
+fn prop_score_batch_equals_score_into() {
+    proptest(|rng| {
+        let schema = random_schema(rng);
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), HIDDEN, rng.below(1 << 40));
+        let scorer = NativeScorer::new(f, w);
+        let n = gen_usize(rng, 0, 30);
+        let pts: Vec<Point> =
+            (0..n as u64 + 1).map(|i| random_point(rng, &schema, i)).collect();
+        let q = &pts[n];
+        let cands: Vec<&Point> = pts[..n].iter().collect();
+        // The compatibility wrapper and the scratch-reusing entry point
+        // must agree bitwise (same kernel, fresh vs pooled scratch).
+        let batch = scorer.score_batch(q, &cands);
+        let mut scratch = ScorerScratch::default();
+        let mut into = Vec::new();
+        scorer.score_into(q, &cands, &mut scratch, &mut into);
+        assert_eq!(batch, into);
+        // And `score_into` appends without clobbering what's in `out`.
+        let mut appended = vec![-1.0f32];
+        scorer.score_into(q, &cands, &mut scratch, &mut appended);
+        assert_eq!(appended[0], -1.0);
+        assert_eq!(&appended[1..], batch.as_slice());
+    });
+}
+
+#[test]
+fn parallel_split_equals_serial() {
+    let schema = Schema::arxiv_like(24);
+    let f = PairFeaturizer::new(&schema);
+    let w = MlpWeights::random(f.input_dim(), HIDDEN, 99);
+    let scorer = NativeScorer::new(f, w);
+    let mut rng = Rng::seeded(17);
+    // Large enough to cross SCORE_PAR_MIN and split into several chunks.
+    let pts: Vec<Point> = (0..1501).map(|i| random_point(&mut rng, &schema, i)).collect();
+    let q = &pts[0];
+    let cands: Vec<&Point> = pts[1..].iter().collect();
+    let mut scratch = ScorerScratch::default();
+    let mut serial = Vec::new();
+    scorer.score_into(q, &cands, &mut scratch, &mut serial);
+    let pool = ScratchPool::new();
+    for threads in [1usize, 2, 4, 16] {
+        let mut par = Vec::new();
+        score_into_parallel(&scorer, q, &cands, &pool, threads, &mut par);
+        assert_eq!(par, serial, "threads={threads} changed scores");
+    }
+}
+
+#[test]
+fn scratch_survives_schema_changes() {
+    // One scratch used against scorers of different schemas must relayout
+    // its query prep in place and stay correct.
+    let mut scratch = ScorerScratch::default();
+    let mut rng = Rng::seeded(23);
+    for schema in [
+        Schema::products_like(4),
+        Schema::arxiv_like(8),
+        Schema::products_like(3),
+    ] {
+        let f = PairFeaturizer::new(&schema);
+        let w = MlpWeights::random(f.input_dim(), HIDDEN, 5);
+        let scorer = NativeScorer::new(f, w);
+        let pts: Vec<Point> = (0..10).map(|i| random_point(&mut rng, &schema, i)).collect();
+        let cands: Vec<&Point> = pts[1..].iter().collect();
+        let want = scorer.score_batch_scalar(&pts[0], &cands);
+        let mut got = Vec::new();
+        scorer.score_into(&pts[0], &cands, &mut scratch, &mut got);
+        assert_eq!(got, want, "schema {}", schema.name);
+    }
+}
+
+/// Weights engineered so scoring produces NaN on large inputs. ReLU
+/// (`f32::max`) launders a mid-network NaN to 0, so the NaN must appear at
+/// the final logit: every hidden unit saturates to +inf (product weights
+/// all +1 against an overflowing product block) and the alternating-sign
+/// output layer sums inf − inf = NaN.
+fn nan_prone_scorer(schema: &Schema) -> NativeScorer {
+    let f = PairFeaturizer::new(schema);
+    let d = f.dense_dim();
+    let (input_dim, hidden) = (f.input_dim(), 4);
+    let mut w1 = vec![0.0f32; input_dim * hidden];
+    for j in 0..d {
+        // Product block rows only; |diff| and extras rows stay 0 (their φ
+        // values are finite here, so 0-weights stay exact zeros).
+        for k in 0..hidden {
+            w1[j * hidden + k] = 1.0;
+        }
+    }
+    let weights = MlpWeights {
+        input_dim,
+        hidden,
+        w1,
+        b1: vec![0.0; hidden],
+        w2: vec![0.1; hidden * hidden],
+        b2: vec![0.0; hidden],
+        w3: vec![1.0, -1.0, 1.0, -1.0],
+        b3: 0.0,
+    };
+    NativeScorer::new(f, weights)
+}
+
+#[test]
+fn nan_scores_sort_without_panicking() {
+    // Regression: `score_neighbors` used `partial_cmp(..).unwrap()`, which
+    // panicked the Neighborhood RPC whenever a score came out NaN. Huge
+    // (but finite, so schema-valid) feature values overflow the product
+    // block to inf and the cancelling weights produce inf−inf = NaN.
+    let schema = Schema::arxiv_like(2);
+    let scorer = Box::new(nan_prone_scorer(&schema));
+    let mut points = Vec::new();
+    for i in 0..8u64 {
+        // Identical huge embeddings: all land in the same LSH buckets, so
+        // every query retrieves them; 1e30 * 1e30 overflows f32.
+        points.push(Point::new(
+            i,
+            vec![
+                FeatureValue::Dense(vec![1e30, 1e30]),
+                FeatureValue::Scalar(2020.0),
+            ],
+        ));
+    }
+    let config = GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 0.0,
+        ..GusConfig::default()
+    };
+    let gus = DynamicGus::bootstrap_with_scorer(schema, config, &points, 2, scorer).unwrap();
+    let a = gus.query(&points[0], 5).expect("query must not panic on NaN scores");
+    assert!(!a.is_empty(), "huge twins should be retrieved");
+    assert!(
+        a.iter().any(|n| n.score.is_nan()),
+        "test vector no longer produces NaN — tighten it: {a:?}"
+    );
+    // Deterministic order on repeat (total_cmp is a total order).
+    let b = gus.query(&points[0], 5).unwrap();
+    let ids = |v: &[dynamic_gus::coordinator::ScoredNeighbor]| {
+        v.iter().map(|n| n.id).collect::<Vec<_>>()
+    };
+    assert_eq!(ids(&a), ids(&b));
+}

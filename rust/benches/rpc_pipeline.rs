@@ -94,7 +94,7 @@ fn main() {
             handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
         });
         let wall = t0.elapsed();
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let pct = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
         let total = conns * per_conn;
         println!(

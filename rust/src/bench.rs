@@ -27,7 +27,7 @@ pub struct BenchResult {
 
 impl BenchResult {
     fn from_samples(name: &str, mut ns: Vec<f64>) -> BenchResult {
-        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ns.sort_by(|a, b| a.total_cmp(b));
         let n = ns.len().max(1);
         let pct = |p: f64| ns[((p * (n - 1) as f64).round() as usize).min(n - 1)];
         BenchResult {

@@ -37,59 +37,70 @@ impl Mutation {
     }
 }
 
+/// Queue contents and the closed flag live under ONE mutex: keeping
+/// `closed` under its own lock (as an earlier revision did) loses wakeups —
+/// `close` can set the flag and notify between `pop`'s closed-check and its
+/// wait, leaving the popper asleep forever. The condvar predicate must be
+/// guarded by the mutex the wait releases.
+struct QueueState {
+    buf: std::collections::VecDeque<Mutation>,
+    closed: bool,
+}
+
 struct Queue {
-    buf: Mutex<std::collections::VecDeque<Mutation>>,
+    state: Mutex<QueueState>,
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
-    closed: Mutex<bool>,
 }
 
 impl Queue {
     fn new(capacity: usize) -> Queue {
         Queue {
-            buf: Mutex::new(std::collections::VecDeque::with_capacity(capacity)),
+            state: Mutex::new(QueueState {
+                buf: std::collections::VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
-            closed: Mutex::new(false),
         }
     }
 
     /// Blocking push (backpressure).
     fn push(&self, m: Mutation) {
-        let mut buf = self.buf.lock().unwrap();
-        while buf.len() >= self.capacity {
-            buf = self.not_full.wait(buf).unwrap();
+        let mut st = self.state.lock().unwrap();
+        while st.buf.len() >= self.capacity {
+            st = self.not_full.wait(st).unwrap();
         }
-        buf.push_back(m);
-        drop(buf);
+        st.buf.push_back(m);
+        drop(st);
         self.not_empty.notify_one();
     }
 
     /// Blocking pop; `None` once closed and drained.
     fn pop(&self) -> Option<Mutation> {
-        let mut buf = self.buf.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(m) = buf.pop_front() {
-                drop(buf);
+            if let Some(m) = st.buf.pop_front() {
+                drop(st);
                 self.not_full.notify_one();
                 return Some(m);
             }
-            if *self.closed.lock().unwrap() {
+            if st.closed {
                 return None;
             }
-            buf = self.not_empty.wait(buf).unwrap();
+            st = self.not_empty.wait(st).unwrap();
         }
     }
 
     fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.state.lock().unwrap().closed = true;
         self.not_empty.notify_all();
     }
 
     fn len(&self) -> usize {
-        self.buf.lock().unwrap().len()
+        self.state.lock().unwrap().buf.len()
     }
 }
 

@@ -187,7 +187,7 @@ impl Graph {
         let mut keep: std::collections::BTreeSet<(PointId, PointId)> = Default::default();
         for (&node, edges) in &self.adj {
             let mut es = edges.clone();
-            es.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            es.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             for &(nbr, _) in es.iter().take(k) {
                 keep.insert((node.min(nbr), node.max(nbr)));
             }
@@ -272,7 +272,7 @@ impl Graph {
                 }
                 if let Some((&l, _)) = votes
                     .iter()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(a.0)))
+                    .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(a.0)))
                 {
                     next.insert(node, l);
                 }
@@ -416,5 +416,32 @@ mod tests {
         seeds.insert(3u64, 2u32);
         let out = g.label_propagation(&seeds, 5);
         assert_eq!(out[&0], 2);
+    }
+
+    #[test]
+    fn nan_edge_weights_do_not_panic() {
+        // Regression: `top_k_prune` and `label_propagation` sorted edge
+        // weights with `partial_cmp(..).unwrap()`, which panics the moment
+        // a NaN weight reaches a comparison (the relu-NaN `inf - inf` bug
+        // class fixed in the scorer). Both must survive NaN weights.
+        let mut g = Graph::new();
+        g.add_edge(1, 2, f32::NAN);
+        g.add_edge(1, 3, 0.9);
+        g.add_edge(1, 4, 0.5);
+        g.add_edge(2, 3, 0.4);
+        let pruned = g.top_k_prune(1);
+        // Under `total_cmp` NaN sorts above every finite weight, so the
+        // NaN edge wins node 1's single slot; the prune must still emit a
+        // well-formed graph containing each survivor exactly once.
+        assert!(pruned.n_edges() >= 1);
+        for n in pruned.nodes() {
+            assert!(pruned.neighbors(n).iter().all(|&(m, _)| m != n));
+        }
+        let mut seeds = FxHashMap::default();
+        seeds.insert(3u64, 1u32);
+        seeds.insert(4u64, 2u32);
+        let out = g.label_propagation(&seeds, 5);
+        assert_eq!(out[&3], 1);
+        assert_eq!(out[&4], 2);
     }
 }

@@ -477,12 +477,7 @@ impl SparseAnn {
         }
         let mut out: Vec<Neighbor> =
             heap.iter().map(|&(dot, id)| Neighbor { id, dot }).collect();
-        out.sort_unstable_by(|a, b| {
-            b.dot
-                .partial_cmp(&a.dot)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        out.sort_unstable_by(|a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)));
         out
     }
 
@@ -523,7 +518,7 @@ impl SparseAnn {
                 }
             }
         }
-        out.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        out.sort_unstable_by(|a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)));
         out
     }
 
@@ -600,7 +595,7 @@ fn scan_chunk(
 /// Heap ordering: worst candidate first = (dot asc, id desc).
 #[inline]
 fn cmp_heap(a: &(f32, PointId), b: &(f32, PointId)) -> std::cmp::Ordering {
-    a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1))
+    a.0.total_cmp(&b.0).then(b.1.cmp(&a.1))
 }
 
 /// Does candidate (dot, id) beat the heap's worst `w`?
@@ -962,7 +957,7 @@ mod tests {
                 .map(|(&id, v)| Neighbor { id, dot: q.dot(v) })
                 .filter(|n| n.dot > 0.0)
                 .collect();
-            want.sort_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+            want.sort_by(|a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)));
             want.truncate(k);
             assert_eq!(got.len(), want.len(), "count mismatch");
             for (g, w) in got.iter().zip(&want) {

@@ -267,7 +267,7 @@ impl ShardedIndex {
     /// Merge per-shard results into the global (dot desc, id asc) order.
     fn merge(per_shard: Vec<Vec<Neighbor>>) -> Vec<Neighbor> {
         let mut all: Vec<Neighbor> = per_shard.into_iter().flatten().collect();
-        all.sort_unstable_by(|a, b| b.dot.partial_cmp(&a.dot).unwrap().then(a.id.cmp(&b.id)));
+        all.sort_unstable_by(|a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)));
         all
     }
 
@@ -610,5 +610,25 @@ mod tests {
         }
         // Per thread: 10 chunks × 50 inserts, 25 of each chunk removed.
         assert_eq!(ix.len(), 4 * 10 * 25);
+    }
+
+    #[test]
+    fn nan_dot_does_not_panic() {
+        // Regression for the NaN-poisoned sort class: stored weights are
+        // all finite (so `SparseVec`'s debug_assert passes), but the dot
+        // accumulator overflows to `inf + (-inf) = NaN` — the same shape
+        // as the shipped relu-NaN scorer bug. The query path must not
+        // panic and must still return the finite-dot points.
+        let ix = ShardedIndex::new(2);
+        ix.upsert(1, sv(&[(1, f32::MAX), (2, -f32::MAX)]));
+        ix.upsert(2, sv(&[(1, 1.0)]));
+        ix.upsert(3, sv(&[(2, 2.0)]));
+        let q = sv(&[(1, f32::MAX), (2, f32::MAX)]);
+        let r = ix.top_k(&q, 3, QueryParams::default());
+        assert!(r.iter().any(|n| n.id == 2));
+        assert!(r.iter().any(|n| n.id == 3));
+        // Threshold path shares the comparator; exercise it too.
+        let t = ix.threshold(&q, 0.0, QueryParams::default());
+        assert!(t.iter().any(|n| n.id == 2));
     }
 }

@@ -100,6 +100,8 @@ impl LatencyHistogram {
         let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
+            // RELAXED: quantiles over a live histogram are approximate by
+            // design; torn cross-bucket snapshots only shift an estimate.
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
                 return bucket_lower_bound(i);
@@ -124,6 +126,9 @@ impl LatencyHistogram {
     /// Reset all counters.
     pub fn reset(&self) {
         for b in &self.buckets {
+            // RELAXED: reset racing concurrent recorders is inherently
+            // best-effort; each cell is independent and monotonicity is
+            // not assumed by any reader.
             b.store(0, Ordering::Relaxed);
         }
         self.count.store(0, Ordering::Relaxed);
@@ -185,6 +190,8 @@ pub struct Counters {
 
 impl Counters {
     pub fn to_json(&self) -> Json {
+        // RELAXED: stats snapshots read independent counters; slight skew
+        // between fields is acceptable in a monitoring endpoint.
         let g = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
             ("inserts", g(&self.inserts)),

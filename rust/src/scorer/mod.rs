@@ -171,6 +171,8 @@ impl CandRefs {
     pub fn take<'a>(&mut self) -> Vec<&'a Point> {
         let v = std::mem::take(&mut self.spare);
         debug_assert!(v.is_empty());
+        debug_assert_eq!(std::mem::size_of::<&Point>(), std::mem::size_of::<usize>());
+        debug_assert_eq!(std::mem::align_of::<&Point>(), std::mem::align_of::<usize>());
         let mut v = std::mem::ManuallyDrop::new(v);
         // SAFETY: `v` is empty (len 0) and `usize` and `&Point` have
         // identical size and alignment (asserted above), so the allocation
@@ -182,6 +184,8 @@ impl CandRefs {
     /// the capacity for the next call.
     pub fn put(&mut self, mut v: Vec<&Point>) {
         v.clear();
+        debug_assert_eq!(std::mem::size_of::<&Point>(), std::mem::size_of::<usize>());
+        debug_assert_eq!(std::mem::align_of::<&Point>(), std::mem::align_of::<usize>());
         let mut v = std::mem::ManuallyDrop::new(v);
         // SAFETY: cleared above; layouts match as in `take`.
         self.spare = unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut usize, 0, v.capacity()) };

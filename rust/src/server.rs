@@ -292,10 +292,15 @@ impl ConnShared {
     /// connection dead so shared workers stop paying for it; the reader
     /// then observes EOF/error and winds the connection down.
     fn send(&self, wire: &Json) {
+        // RELAXED: `dead` is an advisory flag — the writer mutex orders
+        // the flagging store with the failed write; a stale read costs at
+        // most one extra write attempt, never a correctness violation.
         if self.dead.load(Ordering::Relaxed) {
             return;
         }
         let mut w = self.writer.lock().unwrap();
+        // RELAXED: re-check under the writer lock; the mutex acquire
+        // synchronizes with the store made by whichever sender failed.
         if self.dead.load(Ordering::Relaxed) {
             return;
         }
@@ -304,6 +309,8 @@ impl ConnShared {
             .and_then(|()| w.write_all(b"\n"))
             .and_then(|()| w.flush());
         if ok.is_err() {
+            // RELAXED: published under the writer lock held above; later
+            // senders observe it via the lock or via the advisory fast path.
             self.dead.store(true, Ordering::Relaxed);
         }
     }

@@ -144,9 +144,11 @@ where
     out.into_iter().map(|x| x.expect("all slots written")).collect()
 }
 
-// Helper carrying a raw pointer across the Sync boundary; sound because
-// chunk ranges are disjoint.
+// Helper carrying a raw pointer across the Sync boundary.
 struct SyncSlice<T>(usize, std::marker::PhantomData<T>);
+// SAFETY: the pointer is only ever dereferenced inside `parallel_map`,
+// where each index is written by exactly one chunk/thread (chunk ranges
+// are disjoint), so shared access never aliases a write.
 unsafe impl<T> Sync for SyncSlice<T> {}
 impl<T> Clone for SyncSlice<T> {
     fn clone(&self) -> Self {
@@ -206,6 +208,8 @@ mod tests {
                 hits[i].fetch_add(1, Ordering::Relaxed);
             }
         });
+        // RELAXED: the scope join above orders every fetch_add before
+        // these loads; only the per-cell counts matter, not ordering.
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 

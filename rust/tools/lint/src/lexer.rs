@@ -1,0 +1,339 @@
+//! A minimal hand-rolled Rust lexer: just enough token structure for the
+//! lint rules, with no dependencies.
+//!
+//! Produces a flat token stream (identifiers, single-char punctuation,
+//! literals, lifetimes) plus per-line comment metadata used to attach
+//! `// SAFETY:` / `// RELAXED:` / `// lint:allow(..)` comments to code.
+//! Handles line and nested block comments, regular/raw/byte strings,
+//! char-vs-lifetime disambiguation, and numeric literals with exponents.
+//! It is deliberately not a full lexer: anything exotic degrades to
+//! punctuation tokens, which is sound for every rule built on top.
+
+/// Token class. Punctuation is always a single character (`::` is two
+/// `:` tokens, `..` two `.` tokens); rules match multi-char operators
+/// positionally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Lit,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+/// Per-line metadata: concatenated comment text (line + block comments
+/// starting on that line) and whether any non-comment token starts there.
+#[derive(Debug, Clone, Default)]
+pub struct LineInfo {
+    pub comment: String,
+    pub has_code: bool,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `r"..."` / `r#"..."#` / `b"..."` / `br#"..."#` prefix at `i`
+/// (where `chars[i]` is `r` or `b`): returns (quote index, hash count,
+/// is_raw), or None when this is just an identifier starting with r/b.
+fn string_prefix(chars: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    let h0 = j;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    let hashes = j - h0;
+    if chars.get(j) == Some(&'"') && (raw || hashes == 0) {
+        Some((j, hashes, raw))
+    } else {
+        None
+    }
+}
+
+/// Scan past a non-raw string body starting after the opening quote at
+/// `start`; returns the index one past the closing quote.
+fn scan_escaped_string(chars: &[char], start: usize) -> usize {
+    let n = chars.len();
+    let mut k = start + 1;
+    while k < n && chars[k] != '"' {
+        if chars[k] == '\\' {
+            k += 2;
+        } else {
+            k += 1;
+        }
+    }
+    (k + 1).min(n)
+}
+
+/// Lex `src` into a token stream plus per-line comment info. `lines` is
+/// indexed by 1-based line number and sized to cover the whole file.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<LineInfo>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let nlines = src.matches('\n').count() + 2;
+    let mut lines = vec![LineInfo::default(); nlines + 1];
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            lines[line].comment.push_str(&text);
+            lines[line].comment.push(' ');
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested; text accrues to each line it spans.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else {
+                    lines[line].comment.push(chars[j]);
+                    j += 1;
+                }
+            }
+            lines[line].comment.push(' ');
+            i = j;
+            continue;
+        }
+        // Raw / byte strings: r".." r#".."# b".." br".." etc.
+        if c == 'r' || c == 'b' {
+            if let Some((quote, hashes, raw)) = string_prefix(&chars, i) {
+                let end = if raw {
+                    // Find `"` followed by `hashes` `#`s.
+                    let mut k = quote + 1;
+                    loop {
+                        if k >= n {
+                            break n;
+                        }
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && chars.get(k + 1 + h) == Some(&'#') {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                break k + 1 + hashes;
+                            }
+                        }
+                        k += 1;
+                    }
+                } else {
+                    scan_escaped_string(&chars, quote)
+                };
+                let text: String = chars[i..end].iter().collect();
+                let newlines = text.matches('\n').count();
+                toks.push(Token { kind: Kind::Lit, text, line });
+                lines[line].has_code = true;
+                line += newlines;
+                i = end;
+                continue;
+            }
+        }
+        // Plain string.
+        if c == '"' {
+            let end = scan_escaped_string(&chars, i);
+            let text: String = chars[i..end].iter().collect();
+            let newlines = text.matches('\n').count();
+            toks.push(Token { kind: Kind::Lit, text, line });
+            lines[line].has_code = true;
+            line += newlines;
+            i = end;
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            if chars.get(i + 1).copied().is_some_and(is_ident_start) {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'\'') {
+                    // 'a' — a char literal.
+                    let text: String = chars[i..=j].iter().collect();
+                    toks.push(Token { kind: Kind::Lit, text, line });
+                    lines[line].has_code = true;
+                    i = j + 1;
+                } else {
+                    // 'a / 'static — a lifetime.
+                    let text: String = chars[i..j].iter().collect();
+                    toks.push(Token { kind: Kind::Lifetime, text, line });
+                    lines[line].has_code = true;
+                    i = j;
+                }
+                continue;
+            }
+            // '\n', '\'', 'x', or similar.
+            let mut j = i + 1;
+            if chars.get(j) == Some(&'\\') {
+                j += 2;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+            } else {
+                j += 1;
+            }
+            j += 1;
+            let end = j.min(n);
+            let text: String = chars[i..end].iter().collect();
+            toks.push(Token { kind: Kind::Lit, text, line });
+            lines[line].has_code = true;
+            i = end;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            toks.push(Token { kind: Kind::Ident, text, line });
+            lines[line].has_code = true;
+            i = j;
+            continue;
+        }
+        // Numeric literal (suffixes, exponents, and `1.5` but not `1.`).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let ch = chars[j];
+                if is_ident_continue(ch) {
+                    j += 1;
+                } else if ch == '.' && chars.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    j += 1;
+                } else if (ch == '+' || ch == '-')
+                    && j > i
+                    && matches!(chars[j - 1], 'e' | 'E')
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = chars[i..j].iter().collect();
+            toks.push(Token { kind: Kind::Lit, text, line });
+            lines[line].has_code = true;
+            i = j;
+            continue;
+        }
+        toks.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+        lines[line].has_code = true;
+        i += 1;
+    }
+    (toks, lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let ts = kinds("let x = 1.5e-3f32;");
+        assert_eq!(
+            ts,
+            vec![
+                (Kind::Ident, "let".into()),
+                (Kind::Ident, "x".into()),
+                (Kind::Punct, "=".into()),
+                (Kind::Lit, "1.5e-3f32".into()),
+                (Kind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_attach_to_lines() {
+        let (toks, lines) = lex("// SAFETY: fine\nunsafe { x() }\n");
+        assert!(lines[1].comment.contains("SAFETY:"));
+        assert!(!lines[1].has_code);
+        assert!(lines[2].has_code);
+        assert_eq!(toks[0].text, "unsafe");
+        assert_eq!(toks[0].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let (toks, lines) = lex("/* a /* b */ c */ fn f() {}\n");
+        assert_eq!(toks[0].text, "fn");
+        assert!(lines[1].comment.contains('a'));
+        assert!(lines[1].comment.contains('c'));
+    }
+
+    #[test]
+    fn strings_are_single_tokens() {
+        let ts = kinds(r#"let s = "a // not a comment";"#);
+        assert_eq!(ts[3].0, Kind::Lit);
+        assert!(ts[3].1.contains("not a comment"));
+        let ts = kinds("let s = r#\"raw \\ body\"#;");
+        assert_eq!(ts[3].0, Kind::Lit);
+        assert!(ts[3].1.contains("raw"));
+        let ts = kinds(r#"let b = b"bytes";"#);
+        assert_eq!(ts[3].0, Kind::Lit);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ts = kinds("fn f<'a>(x: &'a u8) { let c = 'x'; let nl = '\\n'; }");
+        assert!(ts.iter().any(|t| t.0 == Kind::Lifetime && t.1 == "'a"));
+        assert!(ts.iter().any(|t| t.0 == Kind::Lit && t.1 == "'x'"));
+        assert!(ts.iter().any(|t| t.0 == Kind::Lit && t.1 == "'\\n'"));
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let (toks, _) = lex("let s = \"a\nb\";\nfn f() {}\n");
+        let f = toks.iter().find(|t| t.text == "fn").unwrap();
+        assert_eq!(f.line, 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! gus-lint: repo-native static analysis for `dynamic_gus`.
+//!
+//! Six rules, each born from a bug class this repo has shipped or
+//! audited (docs/LINTS.md has the full history):
+//!
+//! - `float-sort-safety` — no `partial_cmp(..).unwrap()` and no
+//!   `partial_cmp` comparators in sorts; NaN panics a serving thread.
+//! - `undocumented-unsafe` — every `unsafe` carries a `// SAFETY:`
+//!   comment.
+//! - `relaxed-ordering-audit` — `Ordering::Relaxed` only on allowlisted
+//!   counters or with a `// RELAXED:` justification.
+//! - `multi-lock-inventory` — functions lexically holding ≥2 lock guards
+//!   are flagged unless allowlisted as audited.
+//! - `replay-determinism` — no wall clocks or hash-order iteration in
+//!   WAL-replay-critical files.
+//! - `repr-c-size-assert` — every `#[repr(C)]` type has a compile-time
+//!   size assertion.
+//!
+//! Suppress a finding with `// lint:allow(rule-id)` (or
+//! `lint:allow(all)`) on the offending line or the comment block above.
+//!
+//! std-only by design: the lexer is hand-rolled (no `syn`, no
+//! proc-macro), matching the repo's vendored-deps discipline.
+
+#![forbid(unsafe_code)]
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::Finding;
+
+use std::path::{Path, PathBuf};
+
+/// Directories never linted: build output, lint fixtures (deliberately
+/// dirty), and vendored stubs (not this repo's code).
+pub const SKIP_DIRS: &[&str] = &["target", "fixtures", "vendor"];
+
+/// All rule IDs, for `--help` and the self-tests.
+pub const RULE_IDS: &[&str] = &[
+    "float-sort-safety",
+    "undocumented-unsafe",
+    "relaxed-ordering-audit",
+    "multi-lock-inventory",
+    "replay-determinism",
+    "repr-c-size-assert",
+];
+
+/// Lint one file's source text. `path` is used for diagnostics and for
+/// the path-scoped replay-determinism rule.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let (toks, lines) = lexer::lex(src);
+    rules::run_all(path, &toks, &lines)
+        .into_iter()
+        .filter(|f| !rules::suppressed(&lines, f.line, f.rule))
+        .collect()
+}
+
+/// Collect `.rs` files under `p` (or `p` itself when it is a file),
+/// skipping [`SKIP_DIRS`], in sorted order.
+pub fn collect_rs_files(p: &Path) -> Vec<PathBuf> {
+    let mut acc = Vec::new();
+    if p.is_file() {
+        if p.extension().is_some_and(|e| e == "rs") {
+            acc.push(p.to_path_buf());
+        }
+        return acc;
+    }
+    let mut stack = vec![p.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&dir) else {
+            continue;
+        };
+        let mut entries: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for e in entries {
+            if e.is_dir() {
+                let skip = e
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| SKIP_DIRS.contains(&n));
+                if !skip {
+                    stack.push(e);
+                }
+            } else if e.extension().is_some_and(|x| x == "rs") {
+                acc.push(e);
+            }
+        }
+    }
+    acc.sort();
+    acc
+}
+
+/// Lint every `.rs` file under the given paths. Returns the sorted
+/// findings and the number of files examined. Unreadable files are
+/// reported as an `io-error` finding rather than silently skipped.
+pub fn lint_paths(paths: &[PathBuf]) -> (Vec<Finding>, usize) {
+    let mut files = Vec::new();
+    for p in paths {
+        files.extend(collect_rs_files(p));
+    }
+    let mut findings = Vec::new();
+    for f in &files {
+        let shown = f.display().to_string();
+        match std::fs::read_to_string(f) {
+            Ok(src) => findings.extend(lint_source(&shown, &src)),
+            Err(e) => findings.push(Finding {
+                path: shown,
+                line: 0,
+                rule: "io-error",
+                msg: format!("cannot read file: {e}"),
+            }),
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.msg).cmp(&(&b.path, b.line, b.rule, &b.msg))
+    });
+    (findings, files.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_comment_is_honored() {
+        let bad = "fn f(v: &mut Vec<f32>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        assert_eq!(lint_source("x.rs", bad).len(), 1);
+        let ok = format!("// lint:allow(float-sort-safety)\n{bad}");
+        assert!(lint_source("x.rs", &ok).is_empty());
+        let all = format!("// lint:allow(all)\n{bad}");
+        assert!(lint_source("x.rs", &all).is_empty());
+        // Suppressing a different rule does not hide the finding.
+        let other = format!("// lint:allow(undocumented-unsafe)\n{bad}");
+        assert_eq!(lint_source("x.rs", &other).len(), 1);
+    }
+
+    #[test]
+    fn findings_carry_path_line_rule() {
+        let bad = "fn f() {\n    let x = a.partial_cmp(&b).unwrap();\n}\n";
+        let fs = lint_source("src/foo.rs", bad);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].path, "src/foo.rs");
+        assert_eq!(fs[0].line, 2);
+        assert_eq!(fs[0].rule, "float-sort-safety");
+    }
+}

@@ -1,0 +1,25 @@
+//! CLI: `gus-lint PATH...` lints every `.rs` file under the given paths
+//! and exits non-zero when there are findings.
+//!
+//! From `rust/`: `cargo run -q -p gus-lint -- src tests benches`
+
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("usage: gus-lint PATH...");
+        eprintln!();
+        eprintln!("Lints .rs files under each PATH (skipping {:?}).", gus_lint::SKIP_DIRS);
+        eprintln!("Rules: {}", gus_lint::RULE_IDS.join(", "));
+        eprintln!("Suppress one finding with `// lint:allow(rule-id)` on or above the line.");
+        std::process::exit(if args.is_empty() { 2 } else { 0 });
+    }
+    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    let (findings, n_files) = gus_lint::lint_paths(&paths);
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    eprintln!("{} finding(s) in {} file(s)", findings.len(), n_files);
+    std::process::exit(if findings.is_empty() { 0 } else { 1 });
+}

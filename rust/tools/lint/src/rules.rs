@@ -1,0 +1,811 @@
+//! The lint rules. Each rule walks the token stream produced by
+//! [`crate::lexer::lex`] and appends findings; suppression filtering
+//! (`// lint:allow(rule)`) happens once in [`crate::lint_source`].
+//!
+//! Every rule is derived from a bug class this repo has actually shipped
+//! or audited — see docs/LINTS.md for the history and the exact
+//! semantics of each heuristic.
+
+use crate::lexer::{Kind, LineInfo, Token};
+
+/// One diagnostic: `path:line: [rule] msg`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+// ---------- token helpers ----------
+
+fn pch(t: &Token) -> Option<char> {
+    if t.kind == Kind::Punct {
+        t.text.chars().next()
+    } else {
+        None
+    }
+}
+
+fn is_p(t: &Token, ch: char) -> bool {
+    pch(t) == Some(ch)
+}
+
+fn is_id(t: &Token, s: &str) -> bool {
+    t.kind == Kind::Ident && t.text == s
+}
+
+fn is_open(c: char) -> bool {
+    matches!(c, '(' | '[' | '{')
+}
+
+fn is_close(c: char) -> bool {
+    matches!(c, ')' | ']' | '}')
+}
+
+fn close_of(c: char) -> char {
+    match c {
+        '(' => ')',
+        '[' => ']',
+        _ => '}',
+    }
+}
+
+fn open_of(c: char) -> char {
+    match c {
+        ')' => '(',
+        ']' => '[',
+        _ => '{',
+    }
+}
+
+/// `toks[i]` is an open bracket; index of the matching close (or the last
+/// token when unbalanced — rules treat that as "rest of file").
+fn match_fwd(toks: &[Token], i: usize) -> usize {
+    let want = pch(&toks[i]).unwrap_or('(');
+    let mut depth = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(i) {
+        if let Some(c) = pch(t) {
+            if c == want {
+                depth += 1;
+            } else if c == close_of(want) {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+/// `toks[i]` is a close bracket; index of the matching open (or 0).
+fn match_back(toks: &[Token], i: usize) -> usize {
+    let want = pch(&toks[i]).unwrap_or(')');
+    let mut depth = 0i64;
+    let mut j = i as i64;
+    while j >= 0 {
+        if let Some(c) = pch(&toks[j as usize]) {
+            if c == want {
+                depth += 1;
+            } else if c == open_of(want) {
+                depth -= 1;
+                if depth == 0 {
+                    return j as usize;
+                }
+            }
+        }
+        j -= 1;
+    }
+    0
+}
+
+// ---------- comment attachment ----------
+
+/// Does `needle` appear in a comment on `line` or in the contiguous block
+/// of comment-only lines directly above it?
+pub(crate) fn block_has(lines: &[LineInfo], line: usize, needle: &str) -> bool {
+    if lines[line].comment.contains(needle) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let li = &lines[l];
+        if li.has_code || li.comment.is_empty() {
+            break;
+        }
+        if li.comment.contains(needle) {
+            return true;
+        }
+    }
+    false
+}
+
+fn allow_hits(text: &str, rule: &str) -> bool {
+    let mut rest = text;
+    while let Some(p) = rest.find("lint:allow(") {
+        let after = &rest[p + "lint:allow(".len()..];
+        let Some(close) = after.find(')') else {
+            return false;
+        };
+        let names = &after[..close];
+        if names.split(',').any(|s| {
+            let s = s.trim();
+            s == rule || s == "all"
+        }) {
+            return true;
+        }
+        rest = &after[close + 1..];
+    }
+    false
+}
+
+/// Is `rule` suppressed at `line` via `// lint:allow(rule)` on the same
+/// line or the contiguous comment block above?
+pub(crate) fn suppressed(lines: &[LineInfo], line: usize, rule: &str) -> bool {
+    if allow_hits(&lines[line].comment, rule) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let li = &lines[l];
+        if li.has_code || li.comment.is_empty() {
+            break;
+        }
+        if allow_hits(&li.comment, rule) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------- rule: float-sort-safety ----------
+
+const SORT_FAMILY: &[&str] =
+    &["sort_by", "sort_unstable_by", "max_by", "min_by", "binary_search_by"];
+
+/// `partial_cmp(..).unwrap()` (or `.expect`) and `partial_cmp` inside a
+/// sort-family comparator both panic or misorder the moment a NaN reaches
+/// them; `total_cmp` is the NaN-total replacement.
+fn rule_float_sort(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let mut flagged: std::collections::BTreeSet<(usize, String)> = Default::default();
+    for (i, t) in toks.iter().enumerate() {
+        if is_id(t, "partial_cmp") {
+            if i > 0 && is_id(&toks[i - 1], "fn") {
+                continue; // defining partial_cmp, not calling it
+            }
+            if i + 1 < toks.len() && is_p(&toks[i + 1], '(') {
+                let j = match_fwd(toks, i + 1);
+                if j + 2 < toks.len()
+                    && is_p(&toks[j + 1], '.')
+                    && matches!(toks[j + 2].text.as_str(), "unwrap" | "expect")
+                    && toks[j + 2].kind == Kind::Ident
+                {
+                    flagged.insert((
+                        t.line,
+                        format!(
+                            "partial_cmp(..).{}() panics on NaN; use total_cmp",
+                            toks[j + 2].text
+                        ),
+                    ));
+                }
+            }
+        }
+        if t.kind == Kind::Ident
+            && SORT_FAMILY.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && is_p(&toks[i + 1], '(')
+        {
+            let j = match_fwd(toks, i + 1);
+            for inner in toks.iter().take(j).skip(i + 2) {
+                if is_id(inner, "partial_cmp") {
+                    flagged.insert((
+                        inner.line,
+                        format!(
+                            "partial_cmp comparator in {}(..) panics or misorders on NaN; \
+                             use total_cmp",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for (line, msg) in flagged {
+        out.push(Finding { path: path.to_string(), line, rule: "float-sort-safety", msg });
+    }
+}
+
+// ---------- rule: undocumented-unsafe ----------
+
+/// Every `unsafe` keyword (block, fn, impl) must carry a `// SAFETY:`
+/// comment on the same line or the comment block directly above.
+fn rule_unsafe(path: &str, toks: &[Token], lines: &[LineInfo], out: &mut Vec<Finding>) {
+    for t in toks {
+        if is_id(t, "unsafe") && !block_has(lines, t.line, "SAFETY:") {
+            out.push(Finding {
+                path: path.to_string(),
+                line: t.line,
+                rule: "undocumented-unsafe",
+                msg: "`unsafe` without a `// SAFETY:` comment documenting the invariant"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------- rule: relaxed-ordering-audit ----------
+
+/// Idents on which `Ordering::Relaxed` is pre-audited: monotonic counters
+/// whose readers tolerate staleness, plus latency-histogram cells.
+const RELAXED_COUNTERS: &[&str] = &[
+    // monotonic service/ingest counters
+    "inserts",
+    "updates",
+    "deletes",
+    "queries",
+    "errors",
+    "refused",
+    "overloaded",
+    "deadline_exceeded",
+    "candidates_retrieved",
+    "pairs_scored",
+    "pairs_scored_ns",
+    "applied",
+    "submitted",
+    "pending",
+    "postings_scanned",
+    // latency-histogram cells (independent; snapshots are best-effort)
+    "buckets",
+    "count",
+    "sum_ns",
+    "max_ns",
+    "min_ns",
+    // test-only hit counters
+    "hits",
+];
+
+/// Token ranges covered by `use ...;` items (a `use atomic::Ordering::
+/// Relaxed;` is not an atomic operation).
+fn use_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut rs = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_id(&toks[i], "use") {
+            let mut j = i;
+            while j < toks.len() && !is_p(&toks[j], ';') {
+                j += 1;
+            }
+            rs.push((i, j));
+            i = j;
+        }
+        i += 1;
+    }
+    rs
+}
+
+/// `toks[i]` is `Relaxed` inside a call's argument list; walk back to the
+/// receiver of the atomic method call: `recv.load(Ordering::Relaxed)` or
+/// `arr[k].fetch_add(1, Relaxed)` yield `recv` / `arr`.
+fn receiver_of(toks: &[Token], i: usize) -> Option<String> {
+    let mut depth = 0i64;
+    let mut j = i as i64 - 1;
+    let mut open = None;
+    while j > 0 {
+        if let Some(c) = pch(&toks[j as usize]) {
+            if is_close(c) {
+                depth += 1;
+            } else if is_open(c) {
+                if depth == 0 {
+                    open = Some(j as usize);
+                    break;
+                }
+                depth -= 1;
+            }
+        }
+        j -= 1;
+    }
+    let j = open?;
+    if !is_p(&toks[j], '(') || j < 1 {
+        return None;
+    }
+    let m = j - 1;
+    if m < 1 || toks[m].kind != Kind::Ident {
+        return None;
+    }
+    let d = m - 1;
+    if d < 1 || !is_p(&toks[d], '.') {
+        return None;
+    }
+    let r = d - 1;
+    if toks[r].kind == Kind::Ident {
+        return Some(toks[r].text.clone());
+    }
+    if pch(&toks[r]).is_some_and(is_close) {
+        let o = match_back(toks, r);
+        if o >= 1 && toks[o - 1].kind == Kind::Ident {
+            return Some(toks[o - 1].text.clone());
+        }
+    }
+    None
+}
+
+/// `Ordering::Relaxed` must target an allowlisted counter or carry a
+/// `// RELAXED:` justification.
+fn rule_relaxed(path: &str, toks: &[Token], lines: &[LineInfo], out: &mut Vec<Finding>) {
+    let uses = use_ranges(toks);
+    for (i, t) in toks.iter().enumerate() {
+        if !is_id(t, "Relaxed") {
+            continue;
+        }
+        if uses.iter().any(|&(a, b)| (a..=b).contains(&i)) {
+            continue;
+        }
+        let recv = receiver_of(toks, i);
+        if recv.as_deref().is_some_and(|r| RELAXED_COUNTERS.contains(&r)) {
+            continue;
+        }
+        if block_has(lines, t.line, "RELAXED:") {
+            continue;
+        }
+        let who = match &recv {
+            Some(r) => format!("`{r}`"),
+            None => "this site".to_string(),
+        };
+        out.push(Finding {
+            path: path.to_string(),
+            line: t.line,
+            rule: "relaxed-ordering-audit",
+            msg: format!(
+                "Ordering::Relaxed on {who} is neither an allowlisted counter nor justified \
+                 by a `// RELAXED:` comment"
+            ),
+        });
+    }
+}
+
+// ---------- rule: multi-lock-inventory ----------
+
+const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
+
+/// Functions audited to legitimately hold several guards (documented in
+/// docs/LINTS.md; extend deliberately, with a review).
+const MULTI_LOCK_FNS: &[&str] = &["get_many"];
+
+/// `(method_ident_idx, close_paren_idx)` for every `.lock()` / `.read()`
+/// / `.write()` call in `toks[lo..hi]`.
+fn lock_sites_in(toks: &[Token], lo: usize, hi: usize) -> Vec<(usize, usize)> {
+    let mut sites = Vec::new();
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        if t.kind == Kind::Ident
+            && LOCK_METHODS.contains(&t.text.as_str())
+            && i >= 1
+            && is_p(&toks[i - 1], '.')
+            && i + 2 < toks.len()
+            && is_p(&toks[i + 1], '(')
+            && is_p(&toks[i + 2], ')')
+        {
+            sites.push((i, i + 2));
+        }
+        i += 1;
+    }
+    sites
+}
+
+/// From the `)` of a lock call, consume `.unwrap()` / `.expect(..)` / `?`;
+/// index of the first token after the chain.
+fn chain_tail(toks: &[Token], close_idx: usize) -> usize {
+    let mut j = close_idx + 1;
+    while j < toks.len() {
+        if is_p(&toks[j], '?') {
+            j += 1;
+            continue;
+        }
+        if is_p(&toks[j], '.')
+            && j + 2 < toks.len()
+            && toks[j + 1].kind == Kind::Ident
+            && matches!(toks[j + 1].text.as_str(), "unwrap" | "expect")
+            && is_p(&toks[j + 2], '(')
+        {
+            j = match_fwd(toks, j + 2) + 1;
+            continue;
+        }
+        break;
+    }
+    j
+}
+
+/// Walk back from the lock method ident to the start of its receiver
+/// chain (`self.shards[si].read` starts at `self`).
+fn chain_start(toks: &[Token], site_idx: usize) -> usize {
+    let mut j = site_idx as i64 - 2; // skip the `.` before the method
+    while j >= 0 {
+        let t = &toks[j as usize];
+        match t.kind {
+            Kind::Ident | Kind::Lit => j -= 1,
+            Kind::Punct => {
+                let c = pch(t).unwrap_or(' ');
+                if is_close(c) {
+                    j = match_back(toks, j as usize) as i64 - 1;
+                } else if matches!(c, '.' | '*' | '&' | ':') {
+                    j -= 1;
+                } else {
+                    break;
+                }
+            }
+            Kind::Lifetime => break,
+        }
+    }
+    (j + 1) as usize
+}
+
+/// `(name, body_open_idx, body_close_idx)` for every `fn` with a body.
+/// Nested fns are re-discovered when the scan resumes inside the body.
+fn functions(toks: &[Token]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_id(&toks[i], "fn") && i + 1 < toks.len() && toks[i + 1].kind == Kind::Ident {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            let mut pd = 0i64;
+            let mut body = None;
+            while j < toks.len() {
+                if let Some(c) = pch(&toks[j]) {
+                    match c {
+                        '(' | '[' => pd += 1,
+                        ')' | ']' => pd -= 1,
+                        '{' if pd == 0 => {
+                            body = Some(j);
+                            break;
+                        }
+                        ';' if pd == 0 => break, // bodyless signature
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if let Some(b) = body {
+                let end = match_fwd(toks, b);
+                out.push((name, b, end));
+                i = b;
+            } else {
+                i = j;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `depth[i - lo]` = brace depth of token `i` relative to the fn body.
+fn brace_depths(toks: &[Token], lo: usize, hi: usize) -> Vec<i64> {
+    let mut depth = Vec::with_capacity(hi - lo + 1);
+    let mut d = 0i64;
+    for t in toks.iter().take(hi + 1).skip(lo) {
+        if is_p(t, '{') {
+            d += 1;
+        }
+        depth.push(d);
+        if is_p(t, '}') {
+            d -= 1;
+        }
+    }
+    depth
+}
+
+/// A lexically-detected live guard: `let g = x.lock().unwrap();` (or the
+/// if/while-let form). `term` is the statement terminator token, `end`
+/// the last token of the guard's scope.
+struct Guard {
+    let_idx: usize,
+    line: usize,
+    term: usize,
+    end: usize,
+    name: String,
+}
+
+/// Flag functions that (a) hold two lexically-live guards at once,
+/// (b) take a lock while another guard is live, or (c) return a guard out
+/// of a closure (guards can then accumulate across iterations). Audited
+/// functions are allowlisted by name.
+fn rule_multi_lock(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    for (name, lo, hi) in functions(toks) {
+        let sites = lock_sites_in(toks, lo + 1, hi);
+        if sites.is_empty() {
+            continue;
+        }
+        if MULTI_LOCK_FNS.contains(&name.as_str()) {
+            continue;
+        }
+        let depth = brace_depths(toks, lo, hi);
+        let depth_at = |k: usize| -> i64 {
+            if (lo..=hi).contains(&k) {
+                depth[k - lo]
+            } else {
+                0
+            }
+        };
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut i = lo + 1;
+        while i < hi {
+            if !is_id(&toks[i], "let") {
+                i += 1;
+                continue;
+            }
+            let iflet = i >= 1 && matches!(toks[i - 1].text.as_str(), "if" | "while");
+            // Find the `=` introducing the initializer.
+            let mut j = i + 1;
+            let mut pd = 0i64;
+            let mut eq = None;
+            while j < hi {
+                if let Some(c) = pch(&toks[j]) {
+                    match c {
+                        '(' | '[' | '{' | '<' => pd += 1,
+                        ')' | ']' | '}' | '>' => pd -= 1,
+                        '=' if pd == 0 && !matches!(toks.get(j + 1), Some(t) if is_p(t, '=')) => {
+                            eq = Some(j);
+                            break;
+                        }
+                        ';' => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            let Some(eq) = eq else {
+                i += 1;
+                continue;
+            };
+            // Find the initializer's terminator: `;` for plain lets, the
+            // body `{` for if/while-let.
+            let mut j = eq + 1;
+            let mut pd = 0i64;
+            let mut term = None;
+            while j <= hi {
+                if let Some(c) = pch(&toks[j]) {
+                    match c {
+                        '(' | '[' => pd += 1,
+                        ')' | ']' => pd -= 1,
+                        ';' if pd == 0 && !iflet => {
+                            term = Some(j);
+                            break;
+                        }
+                        '{' if pd == 0 && iflet => {
+                            term = Some(j);
+                            break;
+                        }
+                        '{' if pd == 0 && !iflet => {
+                            // Struct-literal / block initializer: skip it.
+                            j = match_fwd(toks, j);
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            let Some(term) = term else {
+                i += 1;
+                continue;
+            };
+            for &(si, sc) in &lock_sites_in(toks, eq + 1, term) {
+                // A guard binding must have no unmatched open paren before
+                // the lock site: `mem::take(&mut *m.lock().unwrap())` is a
+                // temporary inside a call, not a live guard.
+                let mut unmatched = 0i64;
+                for t in toks.iter().take(si).skip(eq + 1) {
+                    match pch(t) {
+                        Some('(') => unmatched += 1,
+                        Some(')') => unmatched -= 1,
+                        _ => {}
+                    }
+                }
+                if unmatched != 0 {
+                    continue;
+                }
+                if chain_tail(toks, sc) != term {
+                    continue;
+                }
+                // Scope end: where brace depth drops below the `let`'s.
+                let dlet = depth_at(i);
+                let mut end = hi;
+                let mut k = term;
+                while k <= hi {
+                    if depth_at(k) < dlet {
+                        end = k;
+                        break;
+                    }
+                    k += 1;
+                }
+                if iflet {
+                    end = match_fwd(toks, term);
+                }
+                let gname = if toks[eq - 1].kind == Kind::Ident {
+                    toks[eq - 1].text.clone()
+                } else {
+                    "_".to_string()
+                };
+                guards.push(Guard { let_idx: i, line: toks[i].line, term, end, name: gname });
+                break;
+            }
+            i += 1;
+        }
+        let mut findings: std::collections::BTreeSet<(usize, String)> = Default::default();
+        // (a) overlapping guards and (b) lock sites under a live guard.
+        for (gi, g) in guards.iter().enumerate() {
+            for h in &guards[gi + 1..] {
+                if h.let_idx < g.end {
+                    findings.insert((
+                        h.line,
+                        format!(
+                            "fn `{}` holds lock guards `{}` (line {}) and `{}` at once",
+                            name, g.name, g.line, h.name
+                        ),
+                    ));
+                }
+            }
+            for &(si, _sc) in &sites {
+                if g.term < si && si <= g.end {
+                    findings.insert((
+                        toks[si].line,
+                        format!(
+                            "fn `{}` takes another lock while guard `{}` (line {}) is held",
+                            name, g.name, g.line
+                        ),
+                    ));
+                }
+            }
+        }
+        // (c) a closure whose body is just a lock chain returns the guard.
+        for &(si, sc) in &sites {
+            let after = chain_tail(toks, sc);
+            if after < toks.len() && matches!(pch(&toks[after]), Some(')') | Some(',')) {
+                let cs = chain_start(toks, si);
+                if cs >= 1 && is_p(&toks[cs - 1], '|') {
+                    findings.insert((
+                        toks[si].line,
+                        format!(
+                            "fn `{name}`: closure returns a lock guard (guards may \
+                             accumulate across iterations)"
+                        ),
+                    ));
+                }
+            }
+        }
+        for (line, msg) in findings {
+            out.push(Finding { path: path.to_string(), line, rule: "multi-lock-inventory", msg });
+        }
+    }
+}
+
+// ---------- rule: replay-determinism ----------
+
+/// Files on the WAL-replay path: recovery must be byte-identical, so no
+/// wall clocks and no nondeterministic iteration order.
+const REPLAY_FILES: &[&str] = &["coordinator/wal.rs", "coordinator/snapshot.rs", "protocol.rs"];
+
+const REPLAY_BANNED_CALLS: &[(&str, &str)] = &[("Instant", "now"), ("SystemTime", "now")];
+
+const REPLAY_BANNED_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+fn rule_replay(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let p = path.replace('\\', "/");
+    if !REPLAY_FILES.iter().any(|s| p.ends_with(s)) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        for &(ty, meth) in REPLAY_BANNED_CALLS {
+            if t.text == ty
+                && i + 3 < toks.len()
+                && is_p(&toks[i + 1], ':')
+                && is_p(&toks[i + 2], ':')
+                && is_id(&toks[i + 3], meth)
+            {
+                out.push(Finding {
+                    path: path.to_string(),
+                    line: t.line,
+                    rule: "replay-determinism",
+                    msg: format!(
+                        "{ty}::{meth} in a replay-critical file (WAL replay must be \
+                         deterministic)"
+                    ),
+                });
+            }
+        }
+        if REPLAY_BANNED_TYPES.contains(&t.text.as_str()) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: t.line,
+                rule: "replay-determinism",
+                msg: format!(
+                    "{} iteration order is nondeterministic; use BTreeMap/FxHashMap in \
+                     replay-critical files",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------- rule: repr-c-size-assert ----------
+
+/// Every `#[repr(C)]` type must have a compile-time size assertion
+/// (`const _: () = assert!(size_of::<T>() == ..)`) somewhere in the file,
+/// so layout drift fails the build instead of corrupting casts.
+fn rule_repr_c(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_p(&toks[i], '#')
+            && i + 2 < toks.len()
+            && is_p(&toks[i + 1], '[')
+            && is_id(&toks[i + 2], "repr")
+        {
+            let close = match_fwd(toks, i + 1);
+            let is_c = toks[i + 3..close].iter().any(|t| is_id(t, "C"));
+            let mut j = close + 1;
+            // Skip further attributes and visibility to the item keyword.
+            while j + 1 < toks.len() && is_p(&toks[j], '#') && is_p(&toks[j + 1], '[') {
+                j = match_fwd(toks, j + 1) + 1;
+            }
+            if j < toks.len() && is_id(&toks[j], "pub") {
+                j += 1;
+                if j < toks.len() && is_p(&toks[j], '(') {
+                    j = match_fwd(toks, j) + 1;
+                }
+            }
+            if is_c
+                && j + 1 < toks.len()
+                && toks[j].kind == Kind::Ident
+                && matches!(toks[j].text.as_str(), "struct" | "enum" | "union")
+                && toks[j + 1].kind == Kind::Ident
+            {
+                let tname = toks[j + 1].text.clone();
+                let mut ok = false;
+                for k in 0..toks.len().saturating_sub(4) {
+                    if is_id(&toks[k], "size_of") {
+                        let mut m = k + 1;
+                        if is_p(&toks[m], ':') && is_p(&toks[m + 1], ':') {
+                            m += 2;
+                        }
+                        if is_p(&toks[m], '<') && is_id(&toks[m + 1], &tname) {
+                            ok = true;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    out.push(Finding {
+                        path: path.to_string(),
+                        line: toks[i].line,
+                        rule: "repr-c-size-assert",
+                        msg: format!(
+                            "#[repr(C)] type `{tname}` has no compile-time size assertion \
+                             (const _: () = assert!(size_of::<{tname}>() == ..))"
+                        ),
+                    });
+                }
+            }
+            i = j;
+        }
+        i += 1;
+    }
+}
+
+/// Run every rule over one file's token stream.
+pub fn run_all(path: &str, toks: &[Token], lines: &[LineInfo]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rule_float_sort(path, toks, &mut out);
+    rule_unsafe(path, toks, lines, &mut out);
+    rule_relaxed(path, toks, lines, &mut out);
+    rule_multi_lock(path, toks, &mut out);
+    rule_replay(path, toks, &mut out);
+    rule_repr_c(path, toks, &mut out);
+    out
+}

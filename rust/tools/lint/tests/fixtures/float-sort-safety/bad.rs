@@ -1,0 +1,9 @@
+// Fixture: NaN-unsafe float comparisons. Every partial_cmp below must be
+// flagged (these files are lexed, never compiled).
+fn sorts(v: &mut Vec<f32>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap().then(std::cmp::Ordering::Equal));
+    let _m = v.iter().max_by(|a, b| a.partial_cmp(b).unwrap());
+    let _c = 1.0f32.partial_cmp(&2.0).unwrap();
+    let _e = 1.0f32.partial_cmp(&2.0).expect("cmp");
+}

@@ -1,0 +1,10 @@
+// Fixture: NaN-total comparisons — the rule must stay quiet.
+fn sorts(v: &mut Vec<f32>) {
+    v.sort_by(|a, b| a.total_cmp(b));
+    v.sort_unstable_by(|a, b| b.total_cmp(a).then(std::cmp::Ordering::Equal));
+    let _m = v.iter().max_by(|a, b| a.total_cmp(b));
+    // partial_cmp without unwrap/expect is fine outside sort closures:
+    let _o = 1.0f32.partial_cmp(&2.0);
+}
+// Defining a fn named partial_cmp is not a call site.
+fn partial_cmp() {}

@@ -1,0 +1,11 @@
+// Fixture: functions holding two live guards or leaking guards out of
+// closures — both fns must be flagged.
+use std::sync::Mutex;
+fn two_guards(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    *ga + *gb
+}
+fn guard_escapes(items: &[Mutex<u32>]) -> u32 {
+    items.iter().map(|m| m.lock().unwrap()).map(|g| *g).sum()
+}

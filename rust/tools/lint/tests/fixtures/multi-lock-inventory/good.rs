@@ -1,0 +1,19 @@
+// Fixture: lock use the rule must stay quiet on.
+use std::sync::Mutex;
+fn sequential(a: &Mutex<Vec<u32>>, b: &Mutex<Vec<u32>>) -> u32 {
+    // Temporaries: the chain continues past unwrap, so no guard is live
+    // when the second lock is taken.
+    let x: u32 = a.lock().unwrap().iter().sum();
+    let y: u32 = b.lock().unwrap().iter().sum();
+    x + y
+}
+fn one_at_a_time(a: &Mutex<u32>) -> u32 {
+    let g = a.lock().unwrap();
+    *g + 1
+}
+fn get_many(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    // Allowlisted audited fn: holding two guards here is deliberate.
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    *ga + *gb
+}

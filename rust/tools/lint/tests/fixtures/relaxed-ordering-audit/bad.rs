@@ -1,0 +1,7 @@
+// Fixture: unjustified Ordering::Relaxed on a non-allowlisted ident —
+// both atomic operations must be flagged.
+use std::sync::atomic::{AtomicU64, Ordering};
+fn toggle(flag: &AtomicU64) -> u64 {
+    flag.store(1, Ordering::Relaxed);
+    flag.load(Ordering::Relaxed)
+}

@@ -1,0 +1,10 @@
+// Fixture: audited Relaxed uses — the rule must stay quiet.
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering::Relaxed;
+fn bump(queries: &AtomicU64, flag: &AtomicU64) -> u64 {
+    // `queries` is an allowlisted monotonic counter.
+    queries.fetch_add(1, Ordering::Relaxed);
+    // RELAXED: advisory flag; readers tolerate staleness.
+    flag.store(1, Ordering::Relaxed);
+    flag.load(Relaxed) // RELAXED: same justification as the store above.
+}

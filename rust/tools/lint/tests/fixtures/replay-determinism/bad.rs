@@ -1,0 +1,12 @@
+// Fixture: nondeterminism in a replay-critical file. The self-test lints
+// this source under the path `coordinator/wal.rs`; every HashMap mention
+// and the Instant::now call must be flagged there (and none of them under
+// a non-replay path).
+use std::collections::HashMap;
+use std::time::Instant;
+fn replay() -> u64 {
+    let t0 = Instant::now();
+    let mut m: HashMap<u64, u64> = HashMap::new();
+    m.insert(1, 2);
+    t0.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,7 @@
+// Fixture: deterministic replay code — ordered maps, no wall clock.
+use std::collections::BTreeMap;
+fn replay(ticks: u64) -> u64 {
+    let mut m: BTreeMap<u64, u64> = BTreeMap::new();
+    m.insert(1, ticks);
+    m.values().sum()
+}

@@ -1,0 +1,6 @@
+// Fixture: #[repr(C)] type without a compile-time size assertion.
+#[repr(C)]
+pub struct Posting {
+    pub id: u64,
+    pub weight: f32,
+}

@@ -1,0 +1,12 @@
+// Fixture: asserted #[repr(C)] layout, plus a non-C repr that needs no
+// assertion — the rule must stay quiet.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct Posting {
+    pub id: u64,
+    pub weight: f32,
+}
+const _: () = assert!(std::mem::size_of::<Posting>() == 12);
+
+#[repr(align(64))]
+struct Padded(u8);

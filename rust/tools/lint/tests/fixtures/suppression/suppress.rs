@@ -1,0 +1,18 @@
+// Fixture: `// lint:allow(rule)` silences a finding on the same line or
+// via the comment block directly above. Everything here must be clean.
+
+fn sorts(v: &mut Vec<f32>) {
+    // lint:allow(float-sort-safety)
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn deref(p: *const u8) -> u8 {
+    unsafe { *p } // lint:allow(undocumented-unsafe)
+}
+
+use std::sync::atomic::{AtomicU64, Ordering};
+fn toggle(flag: &AtomicU64) {
+    // A multi-rule allow list also works:
+    // lint:allow(relaxed-ordering-audit, repr-c-size-assert)
+    flag.store(1, Ordering::Relaxed);
+}

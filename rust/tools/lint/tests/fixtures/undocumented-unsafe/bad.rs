@@ -1,0 +1,6 @@
+// Fixture: unsafe without SAFETY comments — both sites must be flagged.
+fn deref(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+struct W(usize);
+unsafe impl Sync for W {}

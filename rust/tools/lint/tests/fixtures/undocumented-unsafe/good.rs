@@ -1,0 +1,11 @@
+// Fixture: documented unsafe — the rule must stay quiet.
+fn deref(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+struct W(usize);
+// SAFETY: W is a plain integer; sharing it across threads cannot race.
+unsafe impl Sync for W {}
+fn same_line(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: same-line comments attach too.
+}

@@ -1,0 +1,116 @@
+//! Fixture-driven self-tests for gus-lint, plus a self-run asserting the
+//! real tree is lint-clean at HEAD.
+//!
+//! Fixtures live under `tests/fixtures/<rule>/{good,bad}.rs`; they are
+//! lexed by the linter but never compiled (and the `fixtures` directory
+//! is on the linter's own skip list, so tree-wide runs ignore them).
+
+use std::path::{Path, PathBuf};
+
+fn fixture(rel: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// Lint a fixture, using its relative path as the diagnostic path.
+fn lint_fixture(rel: &str) -> Vec<gus_lint::Finding> {
+    gus_lint::lint_source(rel, &fixture(rel))
+}
+
+fn assert_all_rule(findings: &[gus_lint::Finding], rule: &str) {
+    assert!(
+        findings.iter().all(|f| f.rule == rule),
+        "expected only [{rule}] findings, got {findings:?}"
+    );
+}
+
+#[test]
+fn float_sort_safety_fixtures() {
+    let bad = lint_fixture("float-sort-safety/bad.rs");
+    assert!(bad.len() >= 5, "missed NaN-unsafe sorts: {bad:?}");
+    assert_all_rule(&bad, "float-sort-safety");
+    let good = lint_fixture("float-sort-safety/good.rs");
+    assert!(good.is_empty(), "false positives: {good:?}");
+}
+
+#[test]
+fn undocumented_unsafe_fixtures() {
+    let bad = lint_fixture("undocumented-unsafe/bad.rs");
+    assert_eq!(bad.len(), 2, "expected both undocumented sites: {bad:?}");
+    assert_all_rule(&bad, "undocumented-unsafe");
+    let good = lint_fixture("undocumented-unsafe/good.rs");
+    assert!(good.is_empty(), "false positives: {good:?}");
+}
+
+#[test]
+fn relaxed_ordering_fixtures() {
+    let bad = lint_fixture("relaxed-ordering-audit/bad.rs");
+    assert_eq!(bad.len(), 2, "expected both unjustified sites: {bad:?}");
+    assert_all_rule(&bad, "relaxed-ordering-audit");
+    let good = lint_fixture("relaxed-ordering-audit/good.rs");
+    assert!(good.is_empty(), "false positives: {good:?}");
+}
+
+#[test]
+fn multi_lock_fixtures() {
+    let bad = lint_fixture("multi-lock-inventory/bad.rs");
+    assert!(bad.len() >= 2, "missed multi-lock holds: {bad:?}");
+    assert_all_rule(&bad, "multi-lock-inventory");
+    assert!(
+        bad.iter().any(|f| f.msg.contains("closure returns a lock guard")),
+        "missed the guard-escaping-closure case: {bad:?}"
+    );
+    // good.rs includes an allowlisted `get_many` holding two guards.
+    let good = lint_fixture("multi-lock-inventory/good.rs");
+    assert!(good.is_empty(), "false positives: {good:?}");
+}
+
+#[test]
+fn replay_determinism_is_path_scoped() {
+    let src = fixture("replay-determinism/bad.rs");
+    let in_wal = gus_lint::lint_source("coordinator/wal.rs", &src);
+    assert!(in_wal.len() >= 3, "missed nondeterminism: {in_wal:?}");
+    assert_all_rule(&in_wal, "replay-determinism");
+    // The same source outside the replay-critical set is not flagged.
+    let elsewhere = gus_lint::lint_source("src/server.rs", &src);
+    assert!(elsewhere.is_empty(), "rule leaked outside replay files: {elsewhere:?}");
+    let good = fixture("replay-determinism/good.rs");
+    let good_fs = gus_lint::lint_source("coordinator/wal.rs", &good);
+    assert!(good_fs.is_empty(), "false positives: {good_fs:?}");
+}
+
+#[test]
+fn repr_c_fixtures() {
+    let bad = lint_fixture("repr-c-size-assert/bad.rs");
+    assert_eq!(bad.len(), 1, "expected the missing-assert finding: {bad:?}");
+    assert_all_rule(&bad, "repr-c-size-assert");
+    let good = lint_fixture("repr-c-size-assert/good.rs");
+    assert!(good.is_empty(), "false positives: {good:?}");
+}
+
+#[test]
+fn suppression_fixture_is_clean() {
+    let fs = lint_fixture("suppression/suppress.rs");
+    assert!(fs.is_empty(), "lint:allow must silence these: {fs:?}");
+}
+
+/// The acceptance gate: the repo's own Rust tree must be clean. Runs the
+/// library directly (same code path as the `gus-lint` binary) over
+/// `rust/{src,tests,benches,tools}`.
+#[test]
+fn tree_is_clean_at_head() {
+    let rust_root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("tools/lint sits two levels under rust/")
+        .to_path_buf();
+    let paths: Vec<PathBuf> =
+        ["src", "tests", "benches", "tools"].iter().map(|d| rust_root.join(d)).collect();
+    let (findings, n_files) = gus_lint::lint_paths(&paths);
+    assert!(n_files > 50, "expected to lint the whole tree, saw only {n_files} files");
+    let report: Vec<String> = findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg))
+        .collect();
+    assert!(findings.is_empty(), "gus-lint must be clean at HEAD:\n{}", report.join("\n"));
+}

@@ -20,9 +20,8 @@
 //!
 //! Run: cargo run --release --example android_security -- [--n 15000]
 
-use dynamic_gus::config::{GusConfig, ScorerKind};
 use dynamic_gus::coordinator::DynamicGus;
-use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::loadgen::scenario::CorpusSpec;
 use dynamic_gus::util::cli::Args;
 use dynamic_gus::util::rng::Rng;
 
@@ -36,8 +35,10 @@ fn main() -> anyhow::Result<()> {
 
     println!("== Android Security: dynamic PHA detection ==");
     // App store: products_like (embedding = code/behavior vector, tokens =
-    // permissions/API calls). Latent clusters = app families.
-    let ds = SyntheticConfig::products_like(n, 0x5ec).generate();
+    // permissions/API calls). Latent clusters = app families. Same corpus
+    // spec as the `android_security` load scenario (`gus loadgen`).
+    let corpus_spec = CorpusSpec::new("products_like", n, 0x5ec, k);
+    let ds = corpus_spec.generate()?;
     let n_clusters = ds.cluster_of.iter().copied().max().unwrap_or(0) as usize + 1;
 
     // Seed ~10% of families as malware families; known apps in those
@@ -60,13 +61,7 @@ fn main() -> anyhow::Result<()> {
         stream.len()
     );
 
-    let config = GusConfig {
-        scann_nn: k,
-        filter_p: 10.0,
-        scorer: ScorerKind::Auto,
-        ..GusConfig::default()
-    };
-    let gus = DynamicGus::bootstrap(ds.schema.clone(), config, corpus, 8)?;
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), corpus_spec.gus_config(), corpus, 8)?;
 
     // Known verdicts: every corpus app in a malware family.
     let verdict = |idx: usize| is_malware_family[ds.cluster_of[idx] as usize];
@@ -114,7 +109,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nresults over {} uploads:", stream.len());
     println!("  kNN-vote detection: precision {precision:.3}, recall {recall:.3} (tp={tp} fp={fp} fn={fn_} tn={tn})");
     if !improvements_min.is_empty() {
-        improvements_min.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        improvements_min.sort_by(|a, b| a.total_cmp(b));
         let med = improvements_min[improvements_min.len() / 2];
         let mean: f64 =
             improvements_min.iter().sum::<f64>() / improvements_min.len() as f64;

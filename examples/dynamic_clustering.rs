@@ -15,10 +15,9 @@
 //!
 //! Run: cargo run --release --example dynamic_clustering -- [--n 8000]
 
-use dynamic_gus::config::{GusConfig, ScorerKind};
 use dynamic_gus::coordinator::DynamicGus;
-use dynamic_gus::data::synthetic::SyntheticConfig;
 use dynamic_gus::data::Dataset;
+use dynamic_gus::loadgen::scenario::CorpusSpec;
 use dynamic_gus::graph::Graph;
 use dynamic_gus::util::cli::Args;
 use dynamic_gus::util::hash::FxHashMap;
@@ -94,18 +93,15 @@ fn main() -> anyhow::Result<()> {
     let tau = args.get_f64("tau", 0.7) as f32;
 
     println!("== Dynamic graph mining: clustering + label propagation ==");
-    let ds = SyntheticConfig::arxiv_like(n, 0xc1).generate();
+    // Same corpus spec as the `dynamic_clustering` load scenario
+    // (`gus loadgen`).
+    let corpus_spec = CorpusSpec::new("arxiv_like", n, 0xc1, k);
+    let ds = corpus_spec.generate()?;
     let burst = n / 10;
     let corpus_ids: Vec<u64> = (0..(n - burst) as u64).collect();
-    let config = GusConfig {
-        scann_nn: k,
-        filter_p: 10.0,
-        scorer: ScorerKind::Auto,
-        ..GusConfig::default()
-    };
     let gus = DynamicGus::bootstrap(
         ds.schema.clone(),
-        config,
+        corpus_spec.gus_config(),
         &ds.points[..n - burst],
         8,
     )?;

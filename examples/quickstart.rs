@@ -11,16 +11,20 @@
 //!    neighborhood queries) through the real coordinator;
 //! 4. report: query latency percentiles (paper: median 10–20 ms at this
 //!    scale class), insertion latency (paper: 0.29–0.42 ms median),
-//!    staleness p99, neighborhood quality vs the latent clusters.
+//!    staleness p99, neighborhood quality vs the latent clusters;
+//! 5. round-trip the same service over the v1 wire protocol (TCP server +
+//!    `GusClient` envelopes) to show the RPC path end to end.
 //!
 //! Run:  cargo run --release --example quickstart -- [--n 20000] [--ops 5000]
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use dynamic_gus::config::{GusConfig, ScorerKind};
+use dynamic_gus::client::GusClient;
 use dynamic_gus::coordinator::DynamicGus;
-use dynamic_gus::data::synthetic::SyntheticConfig;
 use dynamic_gus::data::trace::{Op, TraceConfig};
+use dynamic_gus::loadgen::scenario::CorpusSpec;
+use dynamic_gus::server::{serve, ServerConfig};
 use dynamic_gus::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -30,17 +34,14 @@ fn main() -> anyhow::Result<()> {
     let k = args.get_usize("k", 10);
 
     println!("== Dynamic GUS quickstart ==");
-    println!("[1/4] generating arxiv_like dataset (n={n})...");
-    let ds = SyntheticConfig::arxiv_like(n, 0xa1).generate();
+    println!("[1/5] generating arxiv_like dataset (n={n})...");
+    // The shared corpus helper the load scenarios use (`gus loadgen`).
+    let mut corpus = CorpusSpec::new("arxiv_like", n, 0xa1, k);
+    corpus.idf_s = Some(0);
+    let ds = corpus.generate()?;
 
-    println!("[2/4] bootstrapping service (preprocess + index + scorer)...");
-    let config = GusConfig {
-        scann_nn: k,
-        filter_p: 10.0,
-        idf_s: 0,
-        scorer: ScorerKind::Auto,
-        ..GusConfig::default()
-    };
+    println!("[2/5] bootstrapping service (preprocess + index + scorer)...");
+    let config = corpus.gus_config();
     let t0 = Instant::now();
     // Hold out 20% of points to drive inserts from the stream.
     let trace = TraceConfig {
@@ -68,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         }
     );
 
-    println!("[3/4] running {} mixed operations...", trace.ops.len());
+    println!("[3/5] running {} mixed operations...", trace.ops.len());
     let mut cluster_hits = 0u64;
     let mut cluster_total = 0u64;
     let t1 = Instant::now();
@@ -97,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t1.elapsed();
 
-    println!("[4/4] results");
+    println!("[4/5] results");
     let (ins, upd, del, q) = trace_mix(&trace.ops);
     println!("  ops: {ins} inserts, {upd} updates, {del} deletes, {q} queries");
     println!(
@@ -131,6 +132,28 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("  service stats: {}", gus.stats_json().dump());
+
+    // --- the same service over the wire: v1 pipelined envelopes ---
+    println!("[5/5] v1 wire protocol round trip...");
+    let gus = Arc::new(gus);
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::from_gus(gus.config()))?;
+    let addr = handle.addr.to_string();
+    let mut client = GusClient::connect(&addr)?;
+    client.set_deadline_ms(Some(1_000));
+    let sampler = corpus.sampler()?;
+    let mut srng = dynamic_gus::util::rng::Rng::seeded(0xa1a1);
+    let fresh = sampler.sample(ds.points.len() as u64 + 1, &mut srng);
+    let t2 = Instant::now();
+    anyhow::ensure!(client.insert(&fresh)?, "RPC insert of a fresh point must report created");
+    let shelf = client.query_id(fresh.id, k)?;
+    let rpc_ms = t2.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "  served on {addr}: insert + query_id round trip {:.2} ms, {} neighbors via JSON envelopes",
+        rpc_ms,
+        shelf.len()
+    );
+    println!("  server-side stats over RPC: {}", client.stats()?.dump());
+    handle.shutdown();
     Ok(())
 }
 

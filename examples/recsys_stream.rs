@@ -19,9 +19,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use dynamic_gus::client::GusClient;
-use dynamic_gus::config::{GusConfig, ScorerKind};
 use dynamic_gus::coordinator::DynamicGus;
-use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::loadgen::scenario::CorpusSpec;
 use dynamic_gus::metrics::LatencyHistogram;
 use dynamic_gus::server::{serve, ServerConfig};
 use dynamic_gus::util::cli::Args;
@@ -34,17 +33,14 @@ fn main() -> anyhow::Result<()> {
     let k = args.get_usize("k", 10);
 
     println!("== RecSys stream over the RPC server ==");
-    let ds = SyntheticConfig::products_like(n, 0x0ec).generate();
+    // Same corpus spec as the `recsys_stream` load scenario (`gus loadgen`).
+    let corpus_spec = CorpusSpec::new("products_like", n, 0x0ec, k);
+    let ds = corpus_spec.generate()?;
     let held_out = n_clients * per_client;
     let corpus = &ds.points[..n - held_out];
 
-    let config = GusConfig {
-        scann_nn: k,
-        filter_p: 10.0,
-        scorer: ScorerKind::Auto,
-        ..GusConfig::default()
-    };
-    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), config, corpus, 8)?);
+    let gus =
+        Arc::new(DynamicGus::bootstrap(ds.schema.clone(), corpus_spec.gus_config(), corpus, 8)?);
     let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::default())?;
     let addr = handle.addr.to_string();
     println!("serving {} products on {addr}", corpus.len());

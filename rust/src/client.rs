@@ -110,8 +110,17 @@ impl GusClient {
     /// `wait` calls. An error *response* becomes an `Err` carrying the
     /// server's code and message.
     pub fn wait(&mut self, id: u64) -> Result<Response> {
+        Self::into_result(self.wait_response(id)?)
+    }
+
+    /// Like [`GusClient::wait`], but error *responses* come back as
+    /// `Ok(Response::Error { .. })` so callers can branch on the error
+    /// code (e.g. loadgen verification treats `NOT_FOUND` from a
+    /// `query_id` probe as "point absent", not as a failure). `Err` is
+    /// reserved for transport/protocol breakage.
+    pub fn wait_response(&mut self, id: u64) -> Result<Response> {
         if let Some(resp) = self.parked.remove(&id) {
-            return Self::into_result(resp);
+            return Ok(resp);
         }
         loop {
             let mut line = String::new();
@@ -128,14 +137,14 @@ impl GusClient {
             let (rid, resp) = Response::from_wire(&parsed)
                 .map_err(|e| anyhow!("bad response: {e}: {line}"))?;
             match rid {
-                Some(rid) if rid == id => return Self::into_result(resp),
+                Some(rid) if rid == id => return Ok(resp),
                 Some(rid) => {
                     self.parked.insert(rid, resp);
                 }
                 None => {
                     // Connection-level response (e.g. an admission-control
                     // refusal before the server read our request).
-                    return Self::into_result(resp);
+                    return Ok(resp);
                 }
             }
         }

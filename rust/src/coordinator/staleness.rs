@@ -70,4 +70,60 @@ mod tests {
         assert!(t.within_slo(Duration::from_secs(5)));
         assert!(!t.within_slo(Duration::from_micros(1)));
     }
+
+    /// Property: the tracker's p50/p99 agree with a naive sort oracle up
+    /// to the histogram's bucket resolution. The histogram uses 8
+    /// sub-buckets per octave and quantiles return the bucket *lower*
+    /// bound, so the estimate never exceeds the true order statistic and
+    /// the true value never exceeds the estimate's bucket ceiling
+    /// (`est + est/8`).
+    #[test]
+    fn quantiles_track_sort_oracle() {
+        use crate::testing::{gen_usize, proptest};
+        proptest(|rng| {
+            let t = StalenessTracker::new();
+            let n = gen_usize(rng, 1, 400);
+            // Durations spanning many octaves, 1 ns .. ~8 s.
+            let mut ns: Vec<u64> = (0..n)
+                .map(|_| rng.below(1u64 << gen_usize(rng, 1, 34)) + 1)
+                .collect();
+            for &v in &ns {
+                t.record_visible(Duration::from_nanos(v));
+            }
+            ns.sort_unstable();
+            for (q, est_ms) in [(0.50, t.p50_ms()), (0.99, t.p99_ms())] {
+                let est = (est_ms * 1e6).round() as u64;
+                let target = ((q * n as f64).ceil() as usize).max(1);
+                let oracle = ns[target - 1];
+                crate::prop_assert!(
+                    est <= oracle,
+                    "q{q}: estimate {est} ns above oracle {oracle} ns (n={n})"
+                );
+                crate::prop_assert!(
+                    oracle <= est + (est >> 3),
+                    "q{q}: oracle {oracle} ns above bucket ceiling of estimate {est} ns (n={n})"
+                );
+            }
+        });
+    }
+
+    /// Property: `within_slo` is inclusive exactly at the reported p99
+    /// and fails one nanosecond below it.
+    #[test]
+    fn within_slo_boundary_is_inclusive() {
+        use crate::testing::{gen_usize, proptest_cases};
+        proptest_cases(32, |rng| {
+            let t = StalenessTracker::new();
+            let n = gen_usize(rng, 1, 100);
+            for _ in 0..n {
+                t.record_visible(Duration::from_nanos(rng.below(1u64 << 30) + 1));
+            }
+            let p99_ns = (t.p99_ms() * 1e6).round() as u64;
+            crate::prop_assert!(t.within_slo(Duration::from_nanos(p99_ns)));
+            crate::prop_assert!(
+                p99_ns == 0 || !t.within_slo(Duration::from_nanos(p99_ns - 1)),
+                "SLO passed 1 ns below the reported p99 ({p99_ns} ns)"
+            );
+        });
+    }
 }

@@ -81,15 +81,61 @@ impl SyntheticConfig {
         }
     }
 
+    /// The cluster-level parameters of the generative model, drawn from
+    /// `self.seed` in the exact order [`SyntheticConfig::generate`] draws
+    /// them — so a [`PointSampler`] built from the same config samples
+    /// from the *same* latent clusters as the materialized corpus.
+    fn cluster_model(&self, rng: &mut Rng) -> ClusterModel {
+        let d = self.dense_dim;
+        let k = self.n_clusters.max(1);
+        let weights: Vec<f64> = (0..k).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let n_parents = (k / 5).max(1);
+        let parents: Vec<Vec<f32>> = (0..n_parents).map(|_| rng.normal_vec_f32(d)).collect();
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|c| {
+                parents[c % n_parents]
+                    .iter()
+                    .map(|&x| x + 0.6 * rng.normal() as f32)
+                    .collect()
+            })
+            .collect();
+        let base_years: Vec<f32> = (0..k).map(|_| 1995.0 + rng.below(29) as f32).collect();
+        let token_pools: Vec<Vec<u64>> = (0..k)
+            .map(|c| (0..40u64).map(|t| 1_000_000 + c as u64 * 1000 + t).collect())
+            .collect();
+        ClusterModel { weights, centers, base_years, token_pools }
+    }
+
+    /// A streaming per-point generator over the same latent cluster model
+    /// as [`SyntheticConfig::generate`]. Holds only the cluster
+    /// parameters (O(clusters × dim) memory), so the load generator can
+    /// draw fresh inserts and query points against a ≥10M-point corpus
+    /// without ever materializing the corpus on the client side.
+    pub fn sampler(&self) -> PointSampler {
+        let mut rng = Rng::seeded(self.seed);
+        let model = self.cluster_model(&mut rng);
+        let wsum: f64 = model.weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf: Vec<f64> = model
+            .weights
+            .iter()
+            .map(|w| {
+                acc += w / wsum;
+                acc
+            })
+            .collect();
+        PointSampler { kind: self.kind, noise: self.noise, model, cdf }
+    }
+
     /// Generate the dataset.
     pub fn generate(&self) -> Dataset {
         let mut rng = Rng::seeded(self.seed);
         let schema = self.schema();
-        let d = self.dense_dim;
         let k = self.n_clusters.max(1);
+        let model = self.cluster_model(&mut rng);
 
         // Cluster sizes: lognormal weights normalized to n_points.
-        let weights: Vec<f64> = (0..k).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let weights = &model.weights;
         let wsum: f64 = weights.iter().sum();
         let mut sizes: Vec<usize> = weights
             .iter()
@@ -104,62 +150,12 @@ impl SyntheticConfig {
             ci += 1;
         }
 
-        // Cluster parameters: hierarchical centers (see module docs).
-        let n_parents = (k / 5).max(1);
-        let parents: Vec<Vec<f32>> = (0..n_parents).map(|_| rng.normal_vec_f32(d)).collect();
-        let centers: Vec<Vec<f32>> = (0..k)
-            .map(|c| {
-                parents[c % n_parents]
-                    .iter()
-                    .map(|&x| x + 0.6 * rng.normal() as f32)
-                    .collect()
-            })
-            .collect();
-        let base_years: Vec<f32> =
-            (0..k).map(|_| 1995.0 + rng.below(29) as f32).collect();
-        let token_pools: Vec<Vec<u64>> = (0..k)
-            .map(|c| (0..40u64).map(|t| 1_000_000 + c as u64 * 1000 + t).collect())
-            .collect();
-        // Global popular tokens: ids 1..=2000, sampled by Zipf rank.
-        const GLOBAL_POOL: u64 = 2000;
-        const ZIPF_S: f64 = 1.1;
-
         let mut points = Vec::with_capacity(self.n_points);
         let mut cluster_of = Vec::with_capacity(self.n_points);
         let mut next_id = 0u64;
         for (c, &size) in sizes.iter().enumerate() {
             for _ in 0..size {
-                let mut x: Vec<f32> = centers[c]
-                    .iter()
-                    .map(|&m| m + (self.noise * rng.normal()) as f32)
-                    .collect();
-                let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
-                for v in &mut x {
-                    *v /= norm;
-                }
-                let features = match self.kind {
-                    SyntheticDataset::ArxivLike => {
-                        let year = (base_years[c] + (3.0 * rng.normal()) as f32)
-                            .clamp(1995.0, 2023.0);
-                        vec![FeatureValue::Dense(x), FeatureValue::Scalar(year)]
-                    }
-                    SyntheticDataset::ProductsLike => {
-                        let n_tok = 3 + rng.below_usize(10);
-                        let mut toks: Vec<u64> = rng
-                            .sample_indices(token_pools[c].len(), n_tok.min(40))
-                            .into_iter()
-                            .map(|i| token_pools[c][i])
-                            .collect();
-                        let n_pop = 2 + rng.below_usize(7);
-                        for _ in 0..n_pop {
-                            toks.push(1 + rng.zipf(GLOBAL_POOL, ZIPF_S));
-                        }
-                        toks.sort_unstable();
-                        toks.dedup();
-                        vec![FeatureValue::Dense(x), FeatureValue::Tokens(toks)]
-                    }
-                };
-                points.push(Point::new(next_id, features));
+                points.push(emit_point(self.kind, self.noise, &model, c, next_id, &mut rng));
                 cluster_of.push(c as u32);
                 next_id += 1;
             }
@@ -186,6 +182,94 @@ impl SyntheticConfig {
             points: points_final,
             cluster_of: clusters_shuffled,
         }
+    }
+}
+
+// Global popular tokens: ids 1..=2000, sampled by Zipf rank.
+const GLOBAL_POOL: u64 = 2000;
+const ZIPF_S: f64 = 1.1;
+
+/// The per-cluster parameters both [`SyntheticConfig::generate`] and
+/// [`PointSampler`] draw points from.
+struct ClusterModel {
+    weights: Vec<f64>,
+    centers: Vec<Vec<f32>>,
+    base_years: Vec<f32>,
+    token_pools: Vec<Vec<u64>>,
+}
+
+/// Draw one point of cluster `c`. Consumes `rng` in a fixed order, so
+/// `generate()`'s output for a given seed is stable across refactors.
+fn emit_point(
+    kind: SyntheticDataset,
+    noise: f64,
+    model: &ClusterModel,
+    c: usize,
+    id: u64,
+    rng: &mut Rng,
+) -> Point {
+    let mut x: Vec<f32> = model.centers[c]
+        .iter()
+        .map(|&m| m + (noise * rng.normal()) as f32)
+        .collect();
+    let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+    for v in &mut x {
+        *v /= norm;
+    }
+    let features = match kind {
+        SyntheticDataset::ArxivLike => {
+            let year =
+                (model.base_years[c] + (3.0 * rng.normal()) as f32).clamp(1995.0, 2023.0);
+            vec![FeatureValue::Dense(x), FeatureValue::Scalar(year)]
+        }
+        SyntheticDataset::ProductsLike => {
+            let pool = &model.token_pools[c];
+            let n_tok = 3 + rng.below_usize(10);
+            let mut toks: Vec<u64> = rng
+                .sample_indices(pool.len(), n_tok.min(40))
+                .into_iter()
+                .map(|i| pool[i])
+                .collect();
+            let n_pop = 2 + rng.below_usize(7);
+            for _ in 0..n_pop {
+                toks.push(1 + rng.zipf(GLOBAL_POOL, ZIPF_S));
+            }
+            toks.sort_unstable();
+            toks.dedup();
+            vec![FeatureValue::Dense(x), FeatureValue::Tokens(toks)]
+        }
+    };
+    Point::new(id, features)
+}
+
+/// Streaming point generator over a [`SyntheticConfig`]'s cluster model
+/// (see [`SyntheticConfig::sampler`]). `Sync`: callers bring their own
+/// [`Rng`], so one sampler can feed many load-generator workers.
+pub struct PointSampler {
+    kind: SyntheticDataset,
+    noise: f64,
+    model: ClusterModel,
+    /// Cumulative cluster-pick distribution (∝ the corpus's lognormal
+    /// cluster sizes, so streamed points land in clusters at the same
+    /// rate the materialized corpus populates them).
+    cdf: Vec<f64>,
+}
+
+impl PointSampler {
+    pub fn n_clusters(&self) -> usize {
+        self.model.centers.len()
+    }
+
+    /// Sample one fresh point with the caller-chosen id.
+    pub fn sample(&self, id: u64, rng: &mut Rng) -> Point {
+        let u = rng.f64();
+        let c = self.cdf.partition_point(|&acc| acc < u).min(self.cdf.len() - 1);
+        self.sample_cluster(c, id, rng)
+    }
+
+    /// Sample one fresh point from a specific cluster.
+    pub fn sample_cluster(&self, c: usize, id: u64, rng: &mut Rng) -> Point {
+        emit_point(self.kind, self.noise, &self.model, c, id, rng)
     }
 }
 
@@ -266,6 +350,65 @@ mod tests {
                 inter / nx as f64
             );
         }
+    }
+
+    #[test]
+    fn sampler_points_match_schema_and_are_deterministic() {
+        for cfg in [
+            SyntheticConfig::arxiv_like(2_000, 11),
+            SyntheticConfig::products_like(2_000, 11),
+        ] {
+            let schema = cfg.schema();
+            let sampler = cfg.sampler();
+            let mut rng = Rng::seeded(99);
+            for i in 0..50u64 {
+                let p = sampler.sample(1_000_000 + i, &mut rng);
+                assert_eq!(p.id, 1_000_000 + i);
+                schema.validate(&p).unwrap();
+                let n: f32 = p.dense(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!((n - 1.0).abs() < 1e-4, "norm {n}");
+            }
+            // Same rng stream → same points (replayable load schedules).
+            let mut a = Rng::seeded(5);
+            let mut b = Rng::seeded(5);
+            assert_eq!(sampler.sample(7, &mut a), sampler.sample(7, &mut b));
+        }
+    }
+
+    #[test]
+    fn sampler_shares_the_corpus_cluster_model() {
+        // A streamed point must be substantially closer to its own
+        // cluster's corpus points than to the rest — i.e. the sampler
+        // really drew from the same latent centers `generate()` used.
+        let cfg = SyntheticConfig::arxiv_like(1_000, 21);
+        let ds = cfg.generate();
+        let sampler = cfg.sampler();
+        let mut rng = Rng::seeded(3);
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum()
+        };
+        let (mut intra, mut inter, mut ni, mut nx) = (0.0f64, 0.0f64, 0u32, 0u32);
+        for _ in 0..30 {
+            let c = rng.below_usize(sampler.n_clusters());
+            let p = sampler.sample_cluster(c, u64::MAX, &mut rng);
+            for (q, &qc) in ds.points.iter().zip(&ds.cluster_of).take(300) {
+                let d = dot(p.dense(0), q.dense(0));
+                if qc as usize == c {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(ni > 0 && nx > 0, "no same-cluster corpus points sampled");
+        assert!(
+            intra / ni as f64 > inter / nx as f64 + 0.2,
+            "sampler decoupled from corpus clusters: intra={} inter={}",
+            intra / ni as f64,
+            inter / nx as f64
+        );
     }
 
     #[test]

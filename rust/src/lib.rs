@@ -35,6 +35,7 @@ pub mod eval;
 pub mod grale;
 pub mod graph;
 pub mod index;
+pub mod loadgen;
 pub mod preprocess;
 pub mod protocol;
 pub mod runtime;

@@ -1,0 +1,212 @@
+//! Operation-mixture specs for the load generator.
+//!
+//! A mixture assigns a non-negative weight to each request kind the
+//! generator can issue; each scheduled arrival samples one kind with
+//! probability proportional to its weight. The CLI spelling is
+//! `insert=10,delete=2,query=80,query_batch=8` — omitted kinds get
+//! weight 0, and at least one weight must be positive.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The request kinds the open-loop generator can issue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Insert,
+    Delete,
+    Query,
+    QueryBatch,
+}
+
+/// All kinds, in the canonical order used for per-kind accounting.
+pub const OP_KINDS: [OpKind; 4] =
+    [OpKind::Insert, OpKind::Delete, OpKind::Query, OpKind::QueryBatch];
+
+impl OpKind {
+    /// Stable index into per-kind accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            OpKind::Insert => 0,
+            OpKind::Delete => 1,
+            OpKind::Query => 2,
+            OpKind::QueryBatch => 3,
+        }
+    }
+
+    /// The wire op name (matches `protocol::Request::op_name`).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Insert => "insert",
+            OpKind::Delete => "delete",
+            OpKind::Query => "query",
+            OpKind::QueryBatch => "query_batch",
+        }
+    }
+
+    pub fn is_mutation(self) -> bool {
+        matches!(self, OpKind::Insert | OpKind::Delete)
+    }
+
+    fn parse(s: &str) -> Option<OpKind> {
+        match s {
+            "insert" => Some(OpKind::Insert),
+            "delete" => Some(OpKind::Delete),
+            "query" => Some(OpKind::Query),
+            "query_batch" => Some(OpKind::QueryBatch),
+            _ => None,
+        }
+    }
+}
+
+/// A normalized operation mixture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mix {
+    /// Weights by [`OpKind::index`]; at least one is positive.
+    weights: [f64; 4],
+}
+
+impl Mix {
+    /// Build from per-kind weights (need not sum to anything particular).
+    pub fn new(insert: f64, delete: f64, query: f64, query_batch: f64) -> Result<Mix, String> {
+        let weights = [insert, delete, query, query_batch];
+        for (w, kind) in weights.iter().zip(OP_KINDS) {
+            if !w.is_finite() || *w < 0.0 {
+                return Err(format!("mix weight for {} must be finite and >= 0", kind.name()));
+            }
+        }
+        if weights.iter().sum::<f64>() <= 0.0 {
+            return Err("mix needs at least one positive weight".into());
+        }
+        Ok(Mix { weights })
+    }
+
+    /// The ISSUE-default mixed workload: read-heavy with a steady
+    /// mutation stream (`insert=10,delete=2,query=80,query_batch=8`).
+    pub fn default_mixed() -> Mix {
+        Mix { weights: [10.0, 2.0, 80.0, 8.0] }
+    }
+
+    /// Queries only (used by post-recovery SLO re-checks).
+    pub fn query_only() -> Mix {
+        Mix { weights: [0.0, 0.0, 1.0, 0.0] }
+    }
+
+    /// Parse the CLI spelling: comma-separated `kind=weight` pairs.
+    pub fn parse(spec: &str) -> Result<Mix, String> {
+        let mut weights = [0.0f64; 4];
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad mix component '{part}' (want kind=weight)"))?;
+            let kind = OpKind::parse(name.trim())
+                .ok_or_else(|| format!("unknown op kind '{}' in mix", name.trim()))?;
+            let w: f64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad weight '{}' for {}", value.trim(), kind.name()))?;
+            weights[kind.index()] += w;
+        }
+        Mix::new(weights[0], weights[1], weights[2], weights[3])
+    }
+
+    /// Fraction of arrivals of `kind` (weights normalized).
+    pub fn fraction(&self, kind: OpKind) -> f64 {
+        self.weights[kind.index()] / self.weights.iter().sum::<f64>()
+    }
+
+    /// Does the mixture issue any mutations at all?
+    pub fn has_mutations(&self) -> bool {
+        self.weights[OpKind::Insert.index()] > 0.0 || self.weights[OpKind::Delete.index()] > 0.0
+    }
+
+    /// Sample one kind (inverse-CDF over the weights).
+    pub fn sample(&self, rng: &mut Rng) -> OpKind {
+        let total: f64 = self.weights.iter().sum();
+        let mut u = rng.f64() * total;
+        for kind in OP_KINDS {
+            u -= self.weights[kind.index()];
+            if u < 0.0 {
+                return kind;
+            }
+        }
+        // Float edge (u == total): the last kind with positive weight.
+        *OP_KINDS
+            .iter()
+            .rev()
+            .find(|k| self.weights[k.index()] > 0.0)
+            .expect("Mix invariant: at least one positive weight")
+    }
+
+    /// The canonical spelling (round-trips through [`Mix::parse`]).
+    pub fn spec_string(&self) -> String {
+        OP_KINDS
+            .iter()
+            .map(|k| format!("{}={}", k.name(), self.weights[k.index()]))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            OP_KINDS
+                .iter()
+                .map(|k| (k.name().to_string(), Json::num(self.weights[k.index()])))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_spelling() {
+        let m = Mix::parse("insert=10,delete=2,query=80,query_batch=8").unwrap();
+        assert_eq!(m, Mix::default_mixed());
+        assert!((m.fraction(OpKind::Query) - 0.8).abs() < 1e-12);
+        assert!(m.has_mutations());
+    }
+
+    #[test]
+    fn omitted_kinds_get_zero_weight() {
+        let m = Mix::parse("query=1").unwrap();
+        assert_eq!(m.fraction(OpKind::Query), 1.0);
+        assert_eq!(m.fraction(OpKind::Insert), 0.0);
+        assert!(!m.has_mutations());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Mix::parse("").is_err(), "all-zero mix");
+        assert!(Mix::parse("query").is_err(), "missing =weight");
+        assert!(Mix::parse("frobnicate=3").is_err(), "unknown kind");
+        assert!(Mix::parse("query=-1").is_err(), "negative weight");
+        assert!(Mix::parse("query=NaN").is_err(), "non-finite weight");
+        assert!(Mix::new(0.0, 0.0, 0.0, 0.0).is_err(), "no positive weight");
+    }
+
+    #[test]
+    fn round_trips_through_spec_string() {
+        let m = Mix::parse("insert=3,query=7").unwrap();
+        assert_eq!(Mix::parse(&m.spec_string()).unwrap(), m);
+    }
+
+    #[test]
+    fn sampling_tracks_weights() {
+        let m = Mix::parse("insert=25,query=75").unwrap();
+        let mut rng = Rng::seeded(7);
+        let mut counts = [0u32; 4];
+        for _ in 0..20_000 {
+            counts[m.sample(&mut rng).index()] += 1;
+        }
+        assert_eq!(counts[OpKind::Delete.index()], 0);
+        assert_eq!(counts[OpKind::QueryBatch.index()], 0);
+        let ins = counts[OpKind::Insert.index()] as f64 / 20_000.0;
+        assert!((0.22..0.28).contains(&ins), "insert fraction {ins}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Open-loop load harness + replayable scenario suite.
+//!
+//! `gus loadgen` drives a live server over the v1 pipelined wire
+//! protocol with Poisson arrivals at a configured offered rate — the
+//! open-loop discipline where sends are *never* gated on completions,
+//! so server slowdowns surface as latency/queueing instead of silently
+//! throttling the generator.
+//!
+//! Module map:
+//!
+//! - [`mix`] — operation mixtures (`insert=10,delete=2,query=80,...`);
+//! - [`scenario`] — replayable declarative workloads with SLO
+//!   thresholds; the three built-ins promote the `examples/` workloads,
+//!   and [`scenario::CorpusSpec`] is the shared corpus-setup helper the
+//!   examples themselves now use;
+//! - [`runner`] — the per-connection writer/reader engine, mutation
+//!   ledgers, and staleness recording;
+//! - [`report`] — quantiles, per-error-code counts, SLO gating, and the
+//!   `BENCH_index.json` merge;
+//! - [`verify`] — "no acked mutation lost" proofs: determinate final
+//!   state, in-process and over-the-wire survival checks, and
+//!   applied-prefix search for crash/recovery twins.
+//!
+//! See `docs/LOADGEN.md` for the CLI surface and scenario semantics.
+
+pub mod mix;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+pub mod verify;
+
+pub use mix::{Mix, OpKind};
+pub use report::LoadReport;
+pub use runner::{run_load, ConnectionLedger, LoadOptions, LoadOutcome};
+pub use scenario::{builtin, CorpusSpec, Scenario, SloSpec, SCENARIO_NAMES};

@@ -1,0 +1,289 @@
+//! Load-run reports: latency/staleness quantiles, per-error-code counts,
+//! SLO gating, and the `BENCH_index.json` merge.
+
+use std::collections::BTreeMap;
+
+use crate::bench::Bencher;
+use crate::loadgen::mix::OP_KINDS;
+use crate::loadgen::scenario::SloSpec;
+use crate::metrics::LatencySummary;
+use crate::util::json::Json;
+
+/// Per-request-kind accounting.
+#[derive(Debug, Clone)]
+pub struct KindStats {
+    pub kind: &'static str,
+    pub sent: u64,
+    pub ok: u64,
+    pub latency: LatencySummary,
+}
+
+/// Everything one load run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Offered (scheduled) arrival rate, req/s.
+    pub offered_rate: f64,
+    /// Configured send window, seconds.
+    pub duration_s: f64,
+    /// Measured wall time including the response drain, seconds.
+    pub wall_s: f64,
+    pub connections: usize,
+    pub sent: u64,
+    pub ok: u64,
+    /// Per-error-code response counts (wire code → count), plus the
+    /// pseudo-code `TRANSPORT` for unparseable response lines.
+    pub errors: BTreeMap<String, u64>,
+    /// Requests submitted but never answered (connection died).
+    pub transport_lost: u64,
+    /// Request latency over every matched response.
+    pub latency: LatencySummary,
+    pub per_kind: Vec<KindStats>,
+    /// Client-observed visible-staleness (mutation submit → ack; the
+    /// server applies mutations before acking, so this bounds when the
+    /// mutation is query-visible).
+    pub staleness_count: u64,
+    pub staleness_p50_ms: f64,
+    pub staleness_p99_ms: f64,
+    /// The server's own `stats` payload at end of run, when reachable.
+    pub server_stats: Option<Json>,
+    /// Acked mutations whose effect was missing after verification
+    /// (`None` = no verification pass ran).
+    pub lost_acked_mutations: Option<u64>,
+}
+
+impl LoadReport {
+    /// Total protocol-level error responses (all codes).
+    pub fn error_total(&self) -> u64 {
+        self.errors.values().sum()
+    }
+
+    /// Acked throughput, req/s over the send window.
+    pub fn achieved_rate(&self) -> f64 {
+        if self.duration_s > 0.0 {
+            self.ok as f64 / self.duration_s
+        } else {
+            0.0
+        }
+    }
+
+    /// SLO check: human-readable violations (empty = within SLO).
+    /// Latency/staleness only — error and lost-mutation gates are
+    /// decided by the caller because their severity is mode-dependent
+    /// (a crash run *expects* transport errors).
+    pub fn slo_violations(&self, slo: &SloSpec) -> Vec<String> {
+        let mut v = Vec::new();
+        let p50 = self.latency.p50_ns as f64 / 1e6;
+        let p99 = self.latency.p99_ns as f64 / 1e6;
+        if p50 > slo.p50_ms {
+            v.push(format!("p50 {:.2} ms > SLO {:.2} ms", p50, slo.p50_ms));
+        }
+        if p99 > slo.p99_ms {
+            v.push(format!("p99 {:.2} ms > SLO {:.2} ms", p99, slo.p99_ms));
+        }
+        if self.staleness_count > 0 && self.staleness_p99_ms > slo.staleness_p99_ms {
+            v.push(format!(
+                "staleness p99 {:.2} ms > SLO {:.2} ms",
+                self.staleness_p99_ms, slo.staleness_p99_ms
+            ));
+        }
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let errors = Json::Obj(
+            self.errors.iter().map(|(k, &v)| (k.clone(), Json::u64(v))).collect(),
+        );
+        let per_kind = Json::Arr(
+            self.per_kind
+                .iter()
+                .map(|k| {
+                    Json::obj(vec![
+                        ("kind", Json::str(k.kind)),
+                        ("sent", Json::u64(k.sent)),
+                        ("ok", Json::u64(k.ok)),
+                        ("latency", k.latency.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("offered_rate", Json::num(self.offered_rate)),
+            ("achieved_rate", Json::num(self.achieved_rate())),
+            ("duration_s", Json::num(self.duration_s)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("connections", Json::num(self.connections as f64)),
+            ("sent", Json::u64(self.sent)),
+            ("ok", Json::u64(self.ok)),
+            ("errors", errors),
+            ("transport_lost", Json::u64(self.transport_lost)),
+            ("latency", self.latency.to_json()),
+            ("per_kind", per_kind),
+            (
+                "staleness",
+                Json::obj(vec![
+                    ("count", Json::u64(self.staleness_count)),
+                    ("p50_ms", Json::num(self.staleness_p50_ms)),
+                    ("p99_ms", Json::num(self.staleness_p99_ms)),
+                ]),
+            ),
+            (
+                "server_stats",
+                self.server_stats.clone().unwrap_or(Json::Null),
+            ),
+            (
+                "lost_acked_mutations",
+                self.lost_acked_mutations.map(Json::u64).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Print the human summary.
+    pub fn print(&self) {
+        println!(
+            "offered {:.0} req/s for {:.1}s on {} connection(s): {} sent, {} ok, {} errors, {} unanswered ({:.0} req/s acked)",
+            self.offered_rate,
+            self.duration_s,
+            self.connections,
+            self.sent,
+            self.ok,
+            self.error_total(),
+            self.transport_lost,
+            self.achieved_rate(),
+        );
+        println!(
+            "latency: p50 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+            self.latency.p50_ns as f64 / 1e6,
+            self.latency.p99_ns as f64 / 1e6,
+            self.latency.max_ns as f64 / 1e6
+        );
+        for k in &self.per_kind {
+            if k.sent == 0 {
+                continue;
+            }
+            println!(
+                "  {:<12} sent {:>8}  ok {:>8}  p50 {:.2} ms  p99 {:.2} ms",
+                k.kind,
+                k.sent,
+                k.ok,
+                k.latency.p50_ns as f64 / 1e6,
+                k.latency.p99_ns as f64 / 1e6
+            );
+        }
+        if self.staleness_count > 0 {
+            println!(
+                "visible staleness (submit→ack): p50 {:.2} ms  p99 {:.2} ms over {} mutations",
+                self.staleness_p50_ms, self.staleness_p99_ms, self.staleness_count
+            );
+        }
+        if !self.errors.is_empty() {
+            println!("error codes: {:?}", self.errors);
+        }
+    }
+
+    /// Merge this run into the repo-root `BENCH_index.json` under the
+    /// key `loadgen/<name>` (via the shared [`Bencher`] merge path, so
+    /// other targets' cells are preserved). Headline figures are lifted
+    /// to top-level entry keys for cheap cross-PR diffing.
+    pub fn dump_bench_index(&self, name: &str) {
+        let bencher = Bencher::new();
+        bencher.dump_repo_summary(
+            &format!("loadgen/{name}"),
+            vec![
+                ("p50_ms".to_string(), Json::num(self.latency.p50_ns as f64 / 1e6)),
+                ("p99_ms".to_string(), Json::num(self.latency.p99_ns as f64 / 1e6)),
+                ("achieved_rate".to_string(), Json::num(self.achieved_rate())),
+                ("staleness_p99_ms".to_string(), Json::num(self.staleness_p99_ms)),
+                ("error_total".to_string(), Json::u64(self.error_total())),
+                ("report".to_string(), self.to_json()),
+            ],
+        );
+    }
+}
+
+/// An empty report skeleton the runner fills in (keeps field-order
+/// noise out of the runner).
+pub fn empty_report(offered_rate: f64, duration_s: f64, connections: usize) -> LoadReport {
+    LoadReport {
+        offered_rate,
+        duration_s,
+        wall_s: 0.0,
+        connections,
+        sent: 0,
+        ok: 0,
+        errors: BTreeMap::new(),
+        transport_lost: 0,
+        latency: zero_summary(),
+        per_kind: OP_KINDS
+            .iter()
+            .map(|k| KindStats { kind: k.name(), sent: 0, ok: 0, latency: zero_summary() })
+            .collect(),
+        staleness_count: 0,
+        staleness_p50_ms: 0.0,
+        staleness_p99_ms: 0.0,
+        server_stats: None,
+        lost_acked_mutations: None,
+    }
+}
+
+fn zero_summary() -> LatencySummary {
+    LatencySummary {
+        count: 0,
+        mean_ns: 0.0,
+        p50_ns: 0,
+        p90_ns: 0,
+        p95_ns: 0,
+        p99_ns: 0,
+        max_ns: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(p50_ms: f64, p99_ms: f64, stale_p99: f64) -> LoadReport {
+        let mut r = empty_report(100.0, 2.0, 1);
+        r.latency.p50_ns = (p50_ms * 1e6) as u64;
+        r.latency.p99_ns = (p99_ms * 1e6) as u64;
+        r.staleness_count = 10;
+        r.staleness_p99_ms = stale_p99;
+        r.sent = 200;
+        r.ok = 200;
+        r
+    }
+
+    #[test]
+    fn slo_gate_flags_each_dimension() {
+        let slo = SloSpec { p50_ms: 25.0, p99_ms: 100.0, staleness_p99_ms: 1000.0 };
+        assert!(report_with(10.0, 50.0, 100.0).slo_violations(&slo).is_empty());
+        assert_eq!(report_with(30.0, 50.0, 100.0).slo_violations(&slo).len(), 1);
+        assert_eq!(report_with(30.0, 500.0, 2000.0).slo_violations(&slo).len(), 3);
+        // No recorded mutations → staleness gate is vacuous.
+        let mut r = report_with(1.0, 1.0, 9999.0);
+        r.staleness_count = 0;
+        assert!(r.slo_violations(&slo).is_empty());
+    }
+
+    #[test]
+    fn json_report_has_machine_keys() {
+        let mut r = report_with(10.0, 50.0, 100.0);
+        r.errors.insert("OVERLOADED".into(), 3);
+        let j = r.to_json();
+        assert_eq!(j.get("sent").as_u64(), Some(200));
+        assert_eq!(j.get("errors").get("OVERLOADED").as_u64(), Some(3));
+        assert_eq!(j.get("staleness").get("count").as_u64(), Some(10));
+        assert!(j.get("lost_acked_mutations").is_null());
+        assert_eq!(j.get("achieved_rate").as_f64(), Some(100.0));
+        // Round-trips through the serializer.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn achieved_rate_counts_only_acked() {
+        let mut r = empty_report(500.0, 4.0, 2);
+        r.sent = 2_000;
+        r.ok = 1_000;
+        assert_eq!(r.achieved_rate(), 250.0);
+        assert_eq!(r.error_total(), 0);
+    }
+}

@@ -1,0 +1,465 @@
+//! The open-loop traffic generator.
+//!
+//! Requests are dispatched on a fixed arrival schedule (Poisson arrivals
+//! at the offered rate) **regardless of completions** — the correct
+//! methodology for tail-latency measurement: a slow server does not slow
+//! the generator down, it just accumulates in-flight requests, so queue
+//! growth and overload shedding show up in the numbers instead of being
+//! hidden by generator back-off (closed-loop coordination omission).
+//!
+//! Each connection runs two threads over one TCP socket speaking
+//! protocol v1:
+//!
+//! - the **writer** sleeps until the next scheduled arrival, samples an
+//!   op kind from the [`Mix`], builds the op via the borrowing
+//!   `protocol::wire` encoders, and pipelines it out;
+//! - the **reader** drains responses (arriving in any order), matches
+//!   them to in-flight requests by correlation id, and records latency,
+//!   error codes, visible-staleness, and mutation acks.
+//!
+//! Every mutation is recorded in a per-connection [`ConnectionLedger`]
+//! (submission order — which, by the server's per-connection ordering
+//! guarantee, is also its apply order), so a verification pass can prove
+//! "no acknowledged mutation was lost" after a crash, and a twin service
+//! can replay the exact applied prefix.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::client::GusClient;
+use crate::coordinator::staleness::StalenessTracker;
+use crate::data::synthetic::PointSampler;
+use crate::features::Point;
+use crate::loadgen::mix::{Mix, OpKind, OP_KINDS};
+use crate::loadgen::report::{empty_report, LoadReport};
+use crate::loadgen::scenario::Scenario;
+use crate::metrics::LatencyHistogram;
+use crate::protocol::{self, wire, Response};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Fresh ids minted by the generator start here, far above any corpus
+/// id, so generated inserts never collide with corpus points.
+pub const FRESH_ID_BASE: u64 = 1 << 40;
+
+/// Fallback ids for deletes drawn while the acked-insert pool is empty
+/// (a no-op delete the server still acks). A separate id space keeps the
+/// main fresh-id stream — and with it the whole offered workload —
+/// deterministic under replay: which inserts have been *acked* by a
+/// given arrival depends on server timing, but the ids, points, kinds,
+/// and schedule the generator offers must not.
+pub const DELETE_FALLBACK_BASE: u64 = 1 << 41;
+
+/// Safety-net read timeout: if a server neither answers nor closes the
+/// connection for this long after the send window, the drain gives up
+/// and the remaining in-flight requests count as `transport_lost`.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One load run's knobs (the ad-hoc CLI surface; scenarios compile down
+/// to this plus a corpus).
+#[derive(Debug, Clone)]
+pub struct LoadOptions {
+    /// Offered arrival rate, requests/second across all connections.
+    pub rate: f64,
+    /// Send window (the drain afterwards is extra).
+    pub duration: Duration,
+    pub mix: Mix,
+    pub connections: usize,
+    /// `k` for query ops.
+    pub k: usize,
+    /// Points per `query_batch`.
+    pub batch: usize,
+    pub deadline_ms: Option<u64>,
+    /// Arrival-schedule + op-sampling seed (runs are replayable modulo
+    /// server timing).
+    pub seed: u64,
+    /// Keep a clone of every inserted point in the ledger so a twin
+    /// service can replay the run (crash tests). Off for pure
+    /// throughput runs — it pins every insert in client memory.
+    pub record_points: bool,
+}
+
+impl LoadOptions {
+    pub fn from_scenario(sc: &Scenario) -> LoadOptions {
+        LoadOptions {
+            rate: sc.rate,
+            duration: Duration::from_secs_f64(sc.duration_s),
+            mix: sc.mix.clone(),
+            connections: sc.connections,
+            k: sc.corpus.k,
+            batch: sc.batch,
+            deadline_ms: sc.deadline_ms,
+            seed: sc.load_seed,
+            record_points: false,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.rate > 0.0 && self.rate.is_finite(), "rate must be positive");
+        anyhow::ensure!(self.connections > 0, "need at least one connection");
+        anyhow::ensure!(self.batch > 0, "batch must be positive");
+        anyhow::ensure!(self.k > 0, "k must be positive");
+        Ok(())
+    }
+}
+
+/// A mutation the generator submitted, in submission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutKind {
+    Insert,
+    Delete,
+}
+
+#[derive(Debug, Clone)]
+pub struct MutationRecord {
+    pub kind: MutKind,
+    /// The point id the mutation targets.
+    pub id: u64,
+    /// Did a success response come back?
+    pub acked: bool,
+    /// Index into [`ConnectionLedger::points`] when `record_points`.
+    pub point: Option<usize>,
+}
+
+/// Submission-ordered mutation log of one connection.
+#[derive(Debug, Default)]
+pub struct ConnectionLedger {
+    pub records: Vec<MutationRecord>,
+    /// Inserted points (only populated under `record_points`).
+    pub points: Vec<Point>,
+}
+
+/// A finished run: the measured report plus per-connection ledgers for
+/// verification.
+pub struct LoadOutcome {
+    pub report: LoadReport,
+    pub ledgers: Vec<ConnectionLedger>,
+}
+
+// ---------- shared aggregation ----------
+
+struct Shared {
+    overall: LatencyHistogram,
+    per_kind: [LatencyHistogram; 4],
+    staleness: StalenessTracker,
+    errors: Mutex<BTreeMap<String, u64>>,
+    sent: [AtomicU64; 4],
+    ok: [AtomicU64; 4],
+    transport_lost: AtomicU64,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            overall: LatencyHistogram::new(),
+            per_kind: std::array::from_fn(|_| LatencyHistogram::new()),
+            staleness: StalenessTracker::new(),
+            errors: Mutex::new(BTreeMap::new()),
+            sent: std::array::from_fn(|_| AtomicU64::new(0)),
+            ok: std::array::from_fn(|_| AtomicU64::new(0)),
+            transport_lost: AtomicU64::new(0),
+        }
+    }
+
+    fn bump_error(&self, code: &str) {
+        *self.errors.lock().unwrap().entry(code.to_string()).or_insert(0) += 1;
+    }
+}
+
+/// One in-flight request.
+struct Pending {
+    kind: OpKind,
+    sent_at: Instant,
+    /// Ledger record index (mutations only).
+    record: Option<usize>,
+    /// Insert target id — acked inserts become delete candidates.
+    target: u64,
+}
+
+struct ConnShared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    ledger: Mutex<ConnectionLedger>,
+    /// Acked fresh inserts available as delete targets.
+    delete_pool: Mutex<Vec<u64>>,
+}
+
+// ---------- the runner ----------
+
+/// Drive `addr` with the configured open-loop workload. Fresh insert and
+/// query points are drawn from `sampler` (the corpus's cluster model),
+/// so the client never materializes the corpus.
+pub fn run_load(addr: &str, opts: &LoadOptions, sampler: &PointSampler) -> Result<LoadOutcome> {
+    opts.validate()?;
+    let shared = Shared::new();
+    let t0 = Instant::now();
+    let ledgers: Vec<ConnectionLedger> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.connections)
+            .map(|w| {
+                let shared = &shared;
+                s.spawn(move || drive_connection(addr, w, opts, sampler, shared))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen connection thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut report = empty_report(opts.rate, opts.duration.as_secs_f64(), opts.connections);
+    report.wall_s = wall_s;
+    for kind in OP_KINDS {
+        let i = kind.index();
+        let st = &mut report.per_kind[i];
+        st.sent = shared.sent[i].load(Ordering::SeqCst);
+        st.ok = shared.ok[i].load(Ordering::SeqCst);
+        st.latency = shared.per_kind[i].summary();
+        report.sent += st.sent;
+        report.ok += st.ok;
+    }
+    report.latency = shared.overall.summary();
+    report.errors = shared.errors.into_inner().unwrap();
+    report.transport_lost = shared.transport_lost.load(Ordering::SeqCst);
+    report.staleness_count = shared.staleness.count();
+    report.staleness_p50_ms = shared.staleness.p50_ms();
+    report.staleness_p99_ms = shared.staleness.p99_ms();
+    Ok(LoadOutcome { report, ledgers })
+}
+
+/// Best-effort: fetch the server's `stats` payload into the report (the
+/// server-side staleness/overload counters complement the client view).
+pub fn attach_server_stats(report: &mut LoadReport, addr: &str) {
+    if let Ok(mut client) = GusClient::connect(addr) {
+        if let Ok(stats) = client.stats() {
+            report.server_stats = Some(stats);
+        }
+    }
+}
+
+fn drive_connection(
+    addr: &str,
+    w: usize,
+    opts: &LoadOptions,
+    sampler: &PointSampler,
+    shared: &Shared,
+) -> Result<ConnectionLedger> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let read_stream = stream.try_clone().context("clone stream")?;
+    read_stream.set_read_timeout(Some(DRAIN_TIMEOUT)).ok();
+
+    let conn = Arc::new(ConnShared {
+        pending: Mutex::new(HashMap::new()),
+        ledger: Mutex::new(ConnectionLedger::default()),
+        delete_pool: Mutex::new(Vec::new()),
+    });
+
+    let outcome = std::thread::scope(|s| {
+        let reader_conn = Arc::clone(&conn);
+        let reader = s.spawn(move || reader_loop(read_stream, &reader_conn, shared));
+        writer_loop(&stream, w, opts, sampler, &conn, shared);
+        // Half-close: the server sees EOF, finishes the in-flight
+        // requests, writes their responses, and closes — which ends the
+        // reader's drain with no timeout needed.
+        let _ = stream.shutdown(Shutdown::Write);
+        reader.join().expect("loadgen reader thread panicked");
+    });
+    drop(outcome);
+
+    let conn = Arc::into_inner(conn).expect("connection threads joined");
+    Ok(conn.ledger.into_inner().unwrap())
+}
+
+/// Exponential inter-arrival draw (Poisson process at `rate`/s).
+fn interarrival_s(rng: &mut Rng, rate: f64) -> f64 {
+    // f64() is in [0,1); 1-u is in (0,1], so ln is finite.
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+fn writer_loop(
+    stream: &TcpStream,
+    w: usize,
+    opts: &LoadOptions,
+    sampler: &PointSampler,
+    conn: &ConnShared,
+    shared: &Shared,
+) {
+    let mut writer = BufWriter::new(stream.try_clone().expect("clone stream"));
+    let mut rng = Rng::seeded(opts.seed).fork(w as u64);
+    let per_rate = opts.rate / opts.connections as f64;
+    let dur_s = opts.duration.as_secs_f64();
+    // Workers mint fresh ids in disjoint ranges.
+    let mut fresh_counter: u64 = 0;
+    let mut fresh = move || {
+        let id = FRESH_ID_BASE + ((w as u64) << 28) + fresh_counter;
+        fresh_counter += 1;
+        id
+    };
+    let mut fallback_counter: u64 = 0;
+    let mut fallback = move || {
+        let id = DELETE_FALLBACK_BASE + ((w as u64) << 28) + fallback_counter;
+        fallback_counter += 1;
+        id
+    };
+    let start = Instant::now();
+    let mut next_arrival = interarrival_s(&mut rng, per_rate);
+    let mut next_rid: u64 = 1;
+
+    while next_arrival < dur_s {
+        let target = start + Duration::from_secs_f64(next_arrival);
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        // Open-loop: when behind schedule, send immediately — never skip.
+        let kind = opts.mix.sample(&mut rng);
+        let (op, record, target_id) =
+            build_op(kind, opts, sampler, conn, &mut rng, &mut fresh, &mut fallback);
+        let rid = next_rid;
+        next_rid += 1;
+        shared.sent[kind.index()].fetch_add(1, Ordering::SeqCst);
+        conn.pending.lock().unwrap().insert(
+            rid,
+            Pending { kind, sent_at: Instant::now(), record, target: target_id },
+        );
+        let env = protocol::envelope_to_wire(rid, opts.deadline_ms, op);
+        let sent = writer
+            .write_all(env.dump().as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if sent.is_err() {
+            // Connection died under us (crash injection, server kill):
+            // the request may or may not have reached the server — leave
+            // the ledger record unacked (indeterminate) but stop
+            // counting it as in-flight.
+            conn.pending.lock().unwrap().remove(&rid);
+            shared.transport_lost.fetch_add(1, Ordering::SeqCst);
+            break;
+        }
+        next_arrival += interarrival_s(&mut rng, per_rate);
+    }
+}
+
+/// Build one request's wire op + ledger bookkeeping.
+#[allow(clippy::too_many_arguments)]
+fn build_op(
+    kind: OpKind,
+    opts: &LoadOptions,
+    sampler: &PointSampler,
+    conn: &ConnShared,
+    rng: &mut Rng,
+    fresh: &mut impl FnMut() -> u64,
+    fallback: &mut impl FnMut() -> u64,
+) -> (Json, Option<usize>, u64) {
+    match kind {
+        OpKind::Insert => {
+            let id = fresh();
+            let p = sampler.sample(id, rng);
+            let op = wire::insert(&p);
+            let mut ledger = conn.ledger.lock().unwrap();
+            let point = opts.record_points.then(|| {
+                ledger.points.push(p.clone());
+                ledger.points.len() - 1
+            });
+            ledger.records.push(MutationRecord { kind: MutKind::Insert, id, acked: false, point });
+            (op, Some(ledger.records.len() - 1), id)
+        }
+        OpKind::Delete => {
+            // Prefer deleting something this connection inserted and got
+            // acked (a meaningful state change); fall back to a no-op
+            // delete of a never-inserted id. Exactly one RNG draw either
+            // way, so the replayed RNG stream never depends on ack
+            // timing.
+            let u = rng.f64();
+            let id = {
+                let mut pool = conn.delete_pool.lock().unwrap();
+                if pool.is_empty() {
+                    None
+                } else {
+                    let i = ((u * pool.len() as f64) as usize).min(pool.len() - 1);
+                    Some(pool.swap_remove(i))
+                }
+            }
+            .unwrap_or_else(|| fallback());
+            let op = wire::delete(id);
+            let mut ledger = conn.ledger.lock().unwrap();
+            ledger
+                .records
+                .push(MutationRecord { kind: MutKind::Delete, id, acked: false, point: None });
+            (op, Some(ledger.records.len() - 1), id)
+        }
+        OpKind::Query => {
+            let p = sampler.sample(fresh(), rng);
+            (wire::query(&p, Some(opts.k)), None, 0)
+        }
+        OpKind::QueryBatch => {
+            let pts: Vec<Point> = (0..opts.batch).map(|_| sampler.sample(fresh(), rng)).collect();
+            (wire::query_batch(&pts, Some(opts.k)), None, 0)
+        }
+    }
+}
+
+fn reader_loop(read_stream: TcpStream, conn: &ConnShared, shared: &Shared) {
+    let mut reader = BufReader::new(read_stream);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,          // clean EOF: server finished and closed
+            Ok(_) => {}
+            Err(_) => break,         // reset / drain timeout
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(parsed) = Json::parse(trimmed) else {
+            shared.bump_error("TRANSPORT");
+            continue;
+        };
+        let Ok((rid, resp)) = Response::from_wire(&parsed) else {
+            shared.bump_error("TRANSPORT");
+            continue;
+        };
+        let entry = rid.and_then(|rid| conn.pending.lock().unwrap().remove(&rid));
+        let Some(entry) = entry else {
+            // Connection-level refusal (admission control answers before
+            // reading any request, with no correlation id).
+            if let Response::Error { code, .. } = resp {
+                shared.bump_error(code.as_str());
+            } else {
+                shared.bump_error("UNMATCHED");
+            }
+            continue;
+        };
+        let latency = entry.sent_at.elapsed();
+        shared.overall.record(latency);
+        shared.per_kind[entry.kind.index()].record(latency);
+        match resp {
+            Response::Error { code, .. } => shared.bump_error(code.as_str()),
+            _ => {
+                shared.ok[entry.kind.index()].fetch_add(1, Ordering::SeqCst);
+                if entry.kind.is_mutation() {
+                    // Mutations are applied before the ack, so submit→ack
+                    // bounds when the mutation is visible to queries.
+                    shared.staleness.record_visible(latency);
+                    if let Some(ri) = entry.record {
+                        conn.ledger.lock().unwrap().records[ri].acked = true;
+                    }
+                    if entry.kind == OpKind::Insert {
+                        conn.delete_pool.lock().unwrap().push(entry.target);
+                    }
+                }
+            }
+        }
+    }
+    // Whatever is still pending will never be answered.
+    let left = conn.pending.lock().unwrap().len() as u64;
+    if left > 0 {
+        shared.transport_lost.fetch_add(left, Ordering::SeqCst);
+    }
+}

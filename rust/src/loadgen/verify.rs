@@ -1,0 +1,240 @@
+//! Post-run verification: did every acknowledged mutation survive?
+//!
+//! The runner's [`ConnectionLedger`]s record every mutation in
+//! submission order. The server guarantees that, per connection,
+//! mutations apply and ack in submission order (queries may overtake
+//! mutations, but mutations never reorder against each other). The
+//! generator only ever deletes ids *it* inserted on the *same*
+//! connection, so the full op history of any fresh id lives on one
+//! ledger and is totally ordered.
+//!
+//! Two subtleties make "assert every acked mutation survived" less
+//! trivial than it sounds:
+//!
+//! 1. **Indeterminate ids.** If an id's trailing ops were submitted but
+//!    never acked (the crash window), its final state is genuinely
+//!    unknown — the server may or may not have applied them before
+//!    dying, and either outcome is correct. Only *determinate* ids
+//!    (every op acked) have a forced final state.
+//! 2. **Applied prefixes.** Per connection, the recovered state must
+//!    correspond to *some* prefix of the submission order that covers at
+//!    least the acked ops — durability would also be satisfied by a
+//!    longer prefix (ops applied + logged just before the ack was
+//!    written). [`find_applied_prefix`] searches for that prefix, which
+//!    is what lets a twin service replay the run exactly.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::client::GusClient;
+use crate::coordinator::DynamicGus;
+use crate::loadgen::runner::{ConnectionLedger, MutKind};
+use crate::protocol::{ErrorCode, Request, Response};
+
+/// The forced final state of every determinate id: `(id, must_exist)`.
+/// `must_exist` is decided by the id's last acked op (insert → present,
+/// delete → absent). Ids with any unacked op are skipped — their state
+/// is legitimately either way after a crash.
+pub fn determinate_final_state(ledgers: &[ConnectionLedger]) -> Vec<(u64, bool)> {
+    let mut out = Vec::new();
+    for ledger in ledgers {
+        // Per-id fold in submission order. Fresh-id spaces are disjoint
+        // across connections, so no cross-ledger merging is needed.
+        let mut last: HashMap<u64, (bool, bool)> = HashMap::new(); // id -> (all_acked, last_is_insert)
+        for r in &ledger.records {
+            let e = last.entry(r.id).or_insert((true, false));
+            e.0 &= r.acked;
+            e.1 = r.kind == MutKind::Insert;
+        }
+        out.extend(
+            last.iter()
+                .filter(|(_, (all_acked, _))| *all_acked)
+                .map(|(&id, &(_, is_insert))| (id, is_insert)),
+        );
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Check the determinate final state against an in-process service.
+/// Returns the violating `(id, must_exist)` pairs (empty = all good).
+pub fn check_survival_inproc(
+    gus: &DynamicGus,
+    expected: &[(u64, bool)],
+) -> Vec<(u64, bool)> {
+    expected
+        .iter()
+        .copied()
+        .filter(|&(id, must_exist)| gus.contains(id) != must_exist)
+        .collect()
+}
+
+/// Check the determinate final state over the wire, by probing
+/// `query_id` for each id (pipelined in chunks): a neighbor list means
+/// present, a `NOT_FOUND` error response means absent, anything else is
+/// a verification failure in its own right.
+pub fn check_survival_rpc(
+    client: &mut GusClient,
+    expected: &[(u64, bool)],
+) -> Result<Vec<(u64, bool)>> {
+    const CHUNK: usize = 256;
+    let mut violations = Vec::new();
+    for chunk in expected.chunks(CHUNK) {
+        let mut rids = Vec::with_capacity(chunk.len());
+        for &(id, _) in chunk {
+            rids.push(
+                client.submit(Request::QueryId { id, k: Some(1) }).context("probe submit")?,
+            );
+        }
+        for (rid, &(id, must_exist)) in rids.into_iter().zip(chunk) {
+            let exists = match client.wait_response(rid).context("probe wait")? {
+                Response::Neighbors { .. } => true,
+                Response::Error { code: ErrorCode::NotFound, .. } => false,
+                other => bail!("probe for id {id} got unexpected response {other:?}"),
+            };
+            if exists != must_exist {
+                violations.push((id, must_exist));
+            }
+        }
+    }
+    Ok(violations)
+}
+
+/// Find the applied prefix length `m` of one connection's submission
+/// order such that applying exactly `records[0..m]` reproduces the
+/// recovered presence of every id the ledger touches. Durability
+/// requires `m >=` the acked prefix; unacked trailing ops may or may
+/// not be included. Returns `None` when no prefix explains the state —
+/// i.e. an acked mutation was lost or ops were applied out of order.
+///
+/// O(records² ) in the worst case — meant for test-scale ledgers.
+pub fn find_applied_prefix(
+    ledger: &ConnectionLedger,
+    applied_contains: impl Fn(u64) -> bool,
+) -> Option<usize> {
+    // The smallest admissible prefix covers every acked record.
+    let min_m = ledger
+        .records
+        .iter()
+        .rposition(|r| r.acked)
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let touched: HashSet<u64> = ledger.records.iter().map(|r| r.id).collect();
+
+    // Presence after applying records[0..m], grown incrementally.
+    let mut present: HashSet<u64> = HashSet::new();
+    for r in &ledger.records[..min_m] {
+        match r.kind {
+            MutKind::Insert => present.insert(r.id),
+            MutKind::Delete => present.remove(&r.id),
+        };
+    }
+    for m in min_m..=ledger.records.len() {
+        if m > min_m {
+            let r = &ledger.records[m - 1];
+            match r.kind {
+                MutKind::Insert => present.insert(r.id),
+                MutKind::Delete => present.remove(&r.id),
+            };
+        }
+        if touched.iter().all(|&id| present.contains(&id) == applied_contains(id)) {
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Replay the first `m` records of a ledger into a twin service (the
+/// ledger must have been recorded with `record_points`, so inserts carry
+/// their points). After this, the twin's state matches the crashed
+/// service's recovered state for every id the ledger touches — which is
+/// what makes byte-identical query comparison meaningful.
+pub fn replay_prefix(gus: &DynamicGus, ledger: &ConnectionLedger, m: usize) -> Result<()> {
+    for r in &ledger.records[..m] {
+        match r.kind {
+            MutKind::Insert => {
+                let idx = r
+                    .point
+                    .context("replay_prefix needs a ledger recorded with record_points")?;
+                gus.insert(ledger.points[idx].clone())?;
+            }
+            MutKind::Delete => {
+                gus.delete(r.id)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::runner::MutationRecord;
+
+    fn rec(kind: MutKind, id: u64, acked: bool) -> MutationRecord {
+        MutationRecord { kind, id, acked, point: None }
+    }
+
+    fn ledger(records: Vec<MutationRecord>) -> ConnectionLedger {
+        ConnectionLedger { records, points: Vec::new() }
+    }
+
+    #[test]
+    fn determinate_state_follows_last_acked_op() {
+        let l = ledger(vec![
+            rec(MutKind::Insert, 1, true),
+            rec(MutKind::Insert, 2, true),
+            rec(MutKind::Delete, 2, true),
+            rec(MutKind::Insert, 3, true),
+            rec(MutKind::Delete, 3, false), // trailing unacked → id 3 indeterminate
+            rec(MutKind::Insert, 4, false), // never acked → indeterminate
+        ]);
+        let state = determinate_final_state(&[l]);
+        assert_eq!(state, vec![(1, true), (2, false)]);
+    }
+
+    #[test]
+    fn applied_prefix_covers_acked_and_tolerates_unacked_tail() {
+        let l = ledger(vec![
+            rec(MutKind::Insert, 1, true),
+            rec(MutKind::Insert, 2, true),
+            rec(MutKind::Insert, 3, false),
+            rec(MutKind::Insert, 4, false),
+        ]);
+        // Recovered state applied 1,2,3 but not 4: a valid prefix (m=3).
+        let applied = |id: u64| matches!(id, 1 | 2 | 3);
+        assert_eq!(find_applied_prefix(&l, applied), Some(3));
+        // Acked-only prefix also valid when nothing extra was applied.
+        let acked_only = |id: u64| matches!(id, 1 | 2);
+        assert_eq!(find_applied_prefix(&l, acked_only), Some(2));
+        // Acked mutation missing → no prefix explains it.
+        let lost = |id: u64| id == 2;
+        assert_eq!(find_applied_prefix(&l, lost), None);
+        // Out-of-order apply (4 without 3) → no prefix explains it.
+        let holey = |id: u64| matches!(id, 1 | 2 | 4);
+        assert_eq!(find_applied_prefix(&l, holey), None);
+    }
+
+    #[test]
+    fn applied_prefix_handles_delete_chains() {
+        let l = ledger(vec![
+            rec(MutKind::Insert, 7, true),
+            rec(MutKind::Delete, 7, true),
+            rec(MutKind::Insert, 8, false),
+        ]);
+        // Acked prefix (m=2): 7 absent, 8 absent.
+        assert_eq!(find_applied_prefix(&l, |_| false), Some(2));
+        // Full prefix (m=3): 8 present.
+        assert_eq!(find_applied_prefix(&l, |id| id == 8), Some(3));
+        // 7 present contradicts its acked delete.
+        assert_eq!(find_applied_prefix(&l, |id| id == 7), None);
+    }
+
+    #[test]
+    fn empty_ledger_is_trivially_explained() {
+        let l = ledger(vec![]);
+        assert_eq!(find_applied_prefix(&l, |_| false), Some(0));
+        assert!(determinate_final_state(&[l]).is_empty());
+    }
+}

@@ -26,6 +26,24 @@
 //!             # replay a workload; `batch` drives the insert_batch /
 //!             # query_batch RPCs in --batch-size chunks
 //! gus preprocess --dataset arxiv_like --n 20000   # table summary (§4.3)
+//! gus loadgen [--scenario android_security|recsys_stream|dynamic_clustering]
+//!             [--smoke]                 # shrink a scenario to CI scale
+//!             [--rate R] [--duration S] [--mix insert=10,delete=2,query=80,query_batch=8]
+//!             [--connections C] [--k K] [--batch B] [--deadline-ms D] [--seed S]
+//!             [--dataset arxiv_like --n N --corpus-seed S2]   # ad-hoc corpus
+//!             [--addr HOST:PORT]        # drive an external server instead of self-hosting
+//!             [--wal-dir DIR]           # durable self-hosted server
+//!             [--crash-at T]            # SIGKILL the server T seconds into the load,
+//!                                       # recover, prove no acked mutation lost,
+//!                                       # then re-check query SLOs (needs --wal-dir)
+//!             [--gate-latency] [--no-gate] [--bench-out NAME]
+//!             # open-loop load harness: Poisson arrivals at R req/s over C
+//!             # pipelined v1 connections; never gates sends on completions.
+//!             # Reports p50/p99 latency, per-error-code counts, and
+//!             # visible staleness into BENCH_index.json (loadgen/NAME).
+//!             # Error responses and lost acked mutations always fail the
+//!             # run (unless --no-gate); latency/staleness SLOs are
+//!             # advisory unless --gate-latency. See docs/LOADGEN.md.
 //! ```
 //!
 //! `serve` also accepts the legacy `--snapshot-dir DIR` (restore-only, no
@@ -519,13 +537,353 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             println!("top-10 bucket cardinalities: {top:?}");
             Ok(())
         }
+        "loadgen" => loadgen_cmd(args),
         _ => {
             eprintln!(
-                "usage: gus <serve|recover|checkpoint|query|insert|delete|stats|gen|preprocess> \
-                 [options]\n\
+                "usage: gus <serve|recover|checkpoint|query|insert|delete|stats|gen|preprocess|\
+                 loadgen> [options]\n\
                  see rust/src/main.rs docs and docs/ARCHITECTURE.md for details"
             );
             Ok(())
         }
     }
+}
+
+// ---------- gus loadgen ----------
+
+/// One finished load run plus mode-specific verdicts the central gate
+/// folds in (crash mode has extra checks a plain run doesn't).
+struct LoadRun {
+    report: dynamic_gus::loadgen::LoadReport,
+    /// Hard failures found by the mode itself (lost acked mutations are
+    /// reported via `report.lost_acked_mutations`, this is for the rest).
+    extra_failures: Vec<String>,
+    /// Latency findings gated only under `--gate-latency`.
+    extra_slo: Vec<String>,
+    crash_mode: bool,
+}
+
+/// Resolve the workload spec: a built-in scenario (optionally shrunk to
+/// `--smoke` scale) or an ad-hoc spec from flags, with rate/duration/…
+/// flags overriding either.
+fn resolve_scenario(args: &Args) -> anyhow::Result<dynamic_gus::loadgen::Scenario> {
+    use dynamic_gus::loadgen::{scenario, Mix, Scenario, SloSpec};
+    let mut sc: Scenario = match args.opt_str("scenario") {
+        Some(name) => {
+            let sc = scenario::builtin(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{name}' (one of {:?})",
+                    scenario::SCENARIO_NAMES
+                )
+            })?;
+            if args.get_bool("smoke", false) {
+                sc.smoke()
+            } else {
+                sc
+            }
+        }
+        None => Scenario {
+            name: "adhoc".to_string(),
+            corpus: scenario::CorpusSpec::new(
+                &args.get_str("dataset", "arxiv_like"),
+                args.get_usize("n", 20_000),
+                args.get_u64("corpus-seed", 0xa1),
+                args.get_usize("k", 10),
+            ),
+            rate: 500.0,
+            duration_s: 10.0,
+            connections: 4,
+            mix: Mix::default_mixed(),
+            batch: 16,
+            deadline_ms: None,
+            load_seed: 0x10ad,
+            slo: SloSpec {
+                p50_ms: args.get_f64("slo-p50-ms", 25.0),
+                p99_ms: args.get_f64("slo-p99-ms", 150.0),
+                staleness_p99_ms: args.get_f64("slo-staleness-p99-ms", 1_000.0),
+            },
+        },
+    };
+    sc.rate = args.get_f64("rate", sc.rate);
+    sc.duration_s = args.get_f64("duration", sc.duration_s);
+    sc.connections = args.get_usize("connections", sc.connections);
+    sc.batch = args.get_usize("batch", sc.batch);
+    if let Some(spec) = args.opt_str("mix") {
+        sc.mix = dynamic_gus::loadgen::Mix::parse(&spec).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(d) = args.opt_str("deadline-ms") {
+        sc.deadline_ms = Some(d.parse()?);
+    }
+    sc.load_seed = args.get_u64("seed", sc.load_seed);
+    Ok(sc)
+}
+
+fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
+    use dynamic_gus::loadgen::runner::LoadOptions;
+    let sc = resolve_scenario(args)?;
+    let crash_at = args.opt_str("crash-at").map(|s| s.parse::<f64>()).transpose()?;
+    let gate_latency = args.get_bool("gate-latency", false);
+    let no_gate = args.get_bool("no-gate", false);
+    let bench_name = args.get_str("bench-out", &sc.name);
+    let opts = LoadOptions::from_scenario(&sc);
+    let sampler = sc.corpus.sampler()?;
+    eprintln!("[loadgen] spec: {}", sc.to_json().dump());
+
+    let run = if let Some(t) = crash_at {
+        loadgen_crash(args, &sc, &opts, &sampler, t)?
+    } else if let Some(addr) = args.opt_str("addr") {
+        loadgen_external(&addr, &opts, &sampler)?
+    } else {
+        loadgen_selfhost(args, &sc, &opts, &sampler)?
+    };
+
+    let report = &run.report;
+    report.print();
+    report.dump_bench_index(&bench_name);
+    println!("[loadgen] wrote BENCH_index.json entry loadgen/{bench_name}");
+
+    // The hard gates: error responses and lost acked mutations always
+    // fail (crash mode exempts transport-level breakage — that's the
+    // point of the crash). Latency/staleness SLOs gate only under
+    // --gate-latency: they depend on the host, the correctness gates
+    // don't.
+    let mut failures = run.extra_failures;
+    let hard_errors: u64 = report
+        .errors
+        .iter()
+        .filter(|(code, _)| !(run.crash_mode && code.as_str() == "TRANSPORT"))
+        .map(|(_, &n)| n)
+        .sum();
+    if hard_errors > 0 {
+        failures.push(format!("{hard_errors} error responses ({:?})", report.errors));
+    }
+    if !run.crash_mode && report.transport_lost > 0 {
+        failures.push(format!("{} requests never answered", report.transport_lost));
+    }
+    if let Some(lost) = report.lost_acked_mutations {
+        if lost > 0 {
+            failures.push(format!("{lost} acknowledged mutations lost"));
+        }
+    }
+    let mut slo = report.slo_violations(&sc.slo);
+    slo.extend(run.extra_slo);
+    if gate_latency {
+        failures.extend(slo);
+    } else {
+        for v in &slo {
+            println!("[loadgen] SLO (advisory): {v}");
+        }
+    }
+    if failures.is_empty() {
+        println!("[loadgen] PASS");
+        return Ok(());
+    }
+    if no_gate {
+        println!("[loadgen] --no-gate: ignoring {} failure(s): {failures:?}", failures.len());
+        return Ok(());
+    }
+    anyhow::bail!("loadgen gate failed: {failures:?}")
+}
+
+/// Drive an already-running server. Acked-mutation survival is verified
+/// over the wire with `query_id` probes; the corpus flags must match
+/// whatever the server was booted with (only the schema actually
+/// matters — fresh ids never collide with the corpus).
+fn loadgen_external(
+    addr: &str,
+    opts: &dynamic_gus::loadgen::LoadOptions,
+    sampler: &dynamic_gus::data::synthetic::PointSampler,
+) -> anyhow::Result<LoadRun> {
+    use dynamic_gus::loadgen::{runner, verify};
+    let outcome = runner::run_load(addr, opts, sampler)?;
+    let mut report = outcome.report;
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    let mut client = GusClient::connect(addr)?;
+    let violations = verify::check_survival_rpc(&mut client, &expected)?;
+    report.lost_acked_mutations = Some(violations.len() as u64);
+    runner::attach_server_stats(&mut report, addr);
+    Ok(LoadRun { report, extra_failures: Vec::new(), extra_slo: Vec::new(), crash_mode: false })
+}
+
+/// Boot the scenario's corpus in-process, serve it on a loopback port,
+/// and drive it. `--wal-dir` makes the hosted server durable (so the
+/// measured mutation path includes the WAL append + fsync policy).
+fn loadgen_selfhost(
+    args: &Args,
+    sc: &dynamic_gus::loadgen::Scenario,
+    opts: &dynamic_gus::loadgen::LoadOptions,
+    sampler: &dynamic_gus::data::synthetic::PointSampler,
+) -> anyhow::Result<LoadRun> {
+    use dynamic_gus::loadgen::{runner, verify};
+    let ds = sc.corpus.generate()?;
+    let threads = dynamic_gus::util::threadpool::default_parallelism();
+    eprintln!("[loadgen] bootstrapping {} points ({})", ds.points.len(), ds.schema.name);
+    let gus = DynamicGus::bootstrap(ds.schema.clone(), sc.corpus.gus_config(), &ds.points, threads)?;
+    if let Some(dir) = args.opt_str("wal-dir") {
+        wal::init_fresh(&gus, std::path::Path::new(&dir))?;
+        eprintln!("[loadgen] durability on: WAL in {dir}");
+    }
+    let gus = Arc::new(gus);
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::from_gus(gus.config()))?;
+    let addr = handle.addr.to_string();
+    let outcome = runner::run_load(&addr, opts, sampler)?;
+    let mut report = outcome.report;
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    let violations = verify::check_survival_inproc(&gus, &expected);
+    report.lost_acked_mutations = Some(violations.len() as u64);
+    runner::attach_server_stats(&mut report, &addr);
+    handle.shutdown();
+    Ok(LoadRun { report, extra_failures: Vec::new(), extra_slo: Vec::new(), crash_mode: false })
+}
+
+/// Crash/recovery injection: spawn a real `gus serve` child (fsync
+/// always, durable), SIGKILL it mid-load, recover from its WAL, prove
+/// every acknowledged mutation survived and that each connection's
+/// recovered state is an applied prefix of its submission order, then
+/// re-serve the recovered state and check queries against the same SLO.
+fn loadgen_crash(
+    args: &Args,
+    sc: &dynamic_gus::loadgen::Scenario,
+    opts: &dynamic_gus::loadgen::LoadOptions,
+    sampler: &dynamic_gus::data::synthetic::PointSampler,
+    crash_at: f64,
+) -> anyhow::Result<LoadRun> {
+    use dynamic_gus::loadgen::{runner, verify, Mix};
+    use std::io::BufRead;
+    anyhow::ensure!(crash_at >= 0.0 && crash_at.is_finite(), "--crash-at must be >= 0");
+    let dir = args.opt_str("wal-dir").ok_or_else(|| {
+        anyhow::anyhow!("--crash-at needs --wal-dir DIR (durability is what's under test)")
+    })?;
+    anyhow::ensure!(
+        !wal::has_state(std::path::Path::new(&dir)),
+        "--wal-dir {dir} already has WAL state; crash runs need a fresh directory"
+    );
+
+    // A real child process, so the kill is a genuine process death (no
+    // in-process cleanup can soften it).
+    let exe = std::env::current_exe()?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("serve")
+        .arg("--dataset")
+        .arg(&sc.corpus.dataset)
+        .arg("--n")
+        .arg(sc.corpus.n.to_string())
+        .arg("--seed")
+        .arg(sc.corpus.seed.to_string())
+        .arg("--scann-nn")
+        .arg(sc.corpus.k.to_string())
+        .arg("--filter-p")
+        .arg(sc.corpus.filter_p.to_string())
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--wal-dir")
+        .arg(&dir)
+        .arg("--fsync")
+        .arg("always")
+        .arg("--checkpoint-every")
+        .arg("0")
+        .stdout(std::process::Stdio::piped());
+    if let Some(s) = sc.corpus.idf_s {
+        cmd.arg("--idf-s").arg(s.to_string());
+    }
+    let mut child = cmd.spawn()?;
+    // Bootstrap progress goes to the child's inherited stderr; stdout
+    // carries the one line we need.
+    let child_out = child.stdout.take().expect("child stdout piped");
+    let mut lines = std::io::BufReader::new(child_out).lines();
+    let mut addr = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        if let Some(rest) = line.strip_prefix("[gus] serving on ") {
+            addr = Some(rest.trim().to_string());
+            break;
+        }
+    }
+    let addr = addr.ok_or_else(|| anyhow::anyhow!("child server exited before serving"))?;
+    // Keep draining so the child never blocks on a full stdout pipe.
+    std::thread::spawn(move || for _ in lines {});
+    eprintln!("[loadgen] child serving on {addr}; killing at t={crash_at:.1}s");
+
+    let child = std::sync::Mutex::new(child);
+    let report = std::thread::scope(|s| -> anyhow::Result<_> {
+        let killer = s.spawn(|| {
+            std::thread::sleep(std::time::Duration::from_secs_f64(crash_at));
+            let mut c = child.lock().unwrap();
+            let _ = c.kill(); // SIGKILL: no flush, no goodbye
+            let _ = c.wait();
+        });
+        let outcome = runner::run_load(&addr, opts, sampler)?;
+        killer.join().expect("killer thread panicked");
+        Ok(outcome)
+    })?;
+    let outcome = report;
+
+    eprintln!("[loadgen] server killed; recovering from {dir}");
+    let threads = dynamic_gus::util::threadpool::default_parallelism();
+    let t0 = std::time::Instant::now();
+    let rec = wal::recover(std::path::Path::new(&dir), threads)?;
+    eprintln!(
+        "[loadgen] recovered {} points ({} WAL records replayed{}) in {:.2}s",
+        rec.gus.len(),
+        rec.replayed,
+        if rec.torn_tail { ", torn tail truncated" } else { "" },
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut extra_failures = Vec::new();
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    let violations = verify::check_survival_inproc(&rec.gus, &expected);
+    eprintln!(
+        "[loadgen] acked-mutation survival: {} determinate ids checked, {} violations",
+        expected.len(),
+        violations.len()
+    );
+    for (i, ledger) in outcome.ledgers.iter().enumerate() {
+        match verify::find_applied_prefix(ledger, |id| rec.gus.contains(id)) {
+            Some(m) => eprintln!(
+                "[loadgen] conn {i}: recovered state = applied prefix {m}/{} mutations",
+                ledger.records.len()
+            ),
+            None => extra_failures.push(format!(
+                "conn {i}: no applied prefix of the submission order explains the \
+                 recovered state"
+            )),
+        }
+    }
+
+    // Re-serve the recovered state; queries must meet the same SLO.
+    let gus = Arc::new(rec.gus);
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::from_gus(gus.config()))?;
+    let post_opts = dynamic_gus::loadgen::LoadOptions {
+        mix: Mix::query_only(),
+        duration: std::time::Duration::from_secs_f64(opts.duration.as_secs_f64().min(5.0)),
+        record_points: false,
+        ..opts.clone()
+    };
+    let post = runner::run_load(&handle.addr.to_string(), &post_opts, sampler)?;
+    eprintln!(
+        "[loadgen] post-recovery queries: {} ok, {} errors, p50 {:.2} ms  p99 {:.2} ms",
+        post.report.ok,
+        post.report.error_total(),
+        post.report.latency.p50_ns as f64 / 1e6,
+        post.report.latency.p99_ns as f64 / 1e6
+    );
+    if post.report.error_total() > 0 || post.report.transport_lost > 0 {
+        extra_failures.push(format!(
+            "post-recovery run had {} errors / {} unanswered",
+            post.report.error_total(),
+            post.report.transport_lost
+        ));
+    }
+    let extra_slo = post
+        .report
+        .slo_violations(&sc.slo)
+        .into_iter()
+        .map(|v| format!("post-recovery {v}"))
+        .collect();
+    handle.shutdown();
+
+    let mut report = outcome.report;
+    report.lost_acked_mutations = Some(violations.len() as u64);
+    Ok(LoadRun { report, extra_failures, extra_slo, crash_mode: true })
 }

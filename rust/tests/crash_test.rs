@@ -1,0 +1,197 @@
+//! Socket-level crash/recovery acceptance: open-loop loadgen traffic
+//! against a real served socket, the server killed at a random point
+//! mid-load, recovery from the WAL — then prove that
+//!
+//! 1. every *acknowledged* mutation survived (the durability contract:
+//!    ack ⇒ logged ⇒ recovered),
+//! 2. the recovered state is an *applied prefix* of each connection's
+//!    submission order (unacked in-flight ops may or may not have landed,
+//!    but never out of order, and never beyond what was submitted),
+//! 3. a twin service that replays exactly that prefix answers a fixed
+//!    query workload **byte-identically** to the recovered service.
+//!
+//! The kill is `ServerHandle::shutdown` at a random instant: the accept
+//! loop dies, connection sockets drop, and the generator sees resets
+//! mid-flight — producing a genuine unacked tail. (File-level torn-tail
+//! and `kill -9` process-death crashes are covered by `wal_test.rs` and
+//! `gus loadgen --crash-at`; this test targets the socket/ledger layer.)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynamic_gus::config::ScorerKind;
+use dynamic_gus::coordinator::{wal, DynamicGus};
+use dynamic_gus::loadgen::runner::{run_load, LoadOptions, LoadOutcome};
+use dynamic_gus::loadgen::scenario::CorpusSpec;
+use dynamic_gus::loadgen::{verify, Mix};
+use dynamic_gus::prop_assert;
+use dynamic_gus::server::{serve, ServerConfig, ServerHandle};
+use dynamic_gus::testing::proptest_cases;
+use dynamic_gus::util::rng::Rng;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("gus-crash-int").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+struct CrashRig {
+    corpus: CorpusSpec,
+    ds: dynamic_gus::data::Dataset,
+    dir: PathBuf,
+}
+
+impl CrashRig {
+    fn new(rng: &mut Rng, tag: &str) -> CrashRig {
+        let n = 250 + rng.below_usize(100);
+        let seed = rng.below(1 << 32);
+        let corpus = CorpusSpec::new("arxiv_like", n, seed, 10);
+        let ds = corpus.generate().unwrap();
+        let dir = tmpdir(&format!("{tag}-{seed:x}-{n}"));
+        CrashRig { corpus, ds, dir }
+    }
+
+    /// Bootstrap the corpus (Native scorer, fixed thread count so the
+    /// twin is built identically).
+    fn bootstrap(&self) -> DynamicGus {
+        let mut cfg = self.corpus.gus_config();
+        cfg.scorer = ScorerKind::Native;
+        cfg.n_shards = 2;
+        DynamicGus::bootstrap(self.ds.schema.clone(), cfg, &self.ds.points, 2).unwrap()
+    }
+
+    /// Boot a WAL-backed server on a loopback port.
+    fn serve_live(&self) -> (ServerHandle, Arc<DynamicGus>) {
+        let live = self.bootstrap();
+        wal::init_fresh(&live, &self.dir).unwrap();
+        let live = Arc::new(live);
+        let handle =
+            serve(Arc::clone(&live), "127.0.0.1:0", ServerConfig::from_gus(live.config()))
+                .unwrap();
+        (handle, live)
+    }
+
+    /// Drive the open-loop generator while a killer thread shuts the
+    /// server down `kill_after` into the run. Returns once both the
+    /// generator and the shutdown (including the queue drain — so no WAL
+    /// appends race recovery) have finished.
+    fn load_and_kill(
+        &self,
+        opts: &LoadOptions,
+        handle: ServerHandle,
+        kill_after: Duration,
+    ) -> LoadOutcome {
+        let addr = handle.addr.to_string();
+        let sampler = self.corpus.sampler().unwrap();
+        std::thread::scope(|s| {
+            let killer = s.spawn(move || {
+                std::thread::sleep(kill_after);
+                handle.shutdown();
+            });
+            let outcome = run_load(&addr, opts, &sampler).unwrap();
+            killer.join().unwrap();
+            outcome
+        })
+    }
+}
+
+fn crash_opts(rng: &mut Rng, connections: usize) -> LoadOptions {
+    LoadOptions {
+        rate: 150.0 + rng.below(150) as f64,
+        duration: Duration::from_millis(600),
+        mix: Mix::parse("insert=35,delete=10,query=50,query_batch=5").unwrap(),
+        connections,
+        k: 10,
+        batch: 8,
+        deadline_ms: None,
+        seed: rng.below(1 << 32),
+        record_points: true,
+    }
+}
+
+/// Durability across a random-point kill, multi-connection: every acked
+/// mutation survives recovery, and each connection's recovered state is
+/// an applied prefix of its submission order.
+#[test]
+fn prop_socket_crash_preserves_acked_mutations() {
+    proptest_cases(3, |rng: &mut Rng| {
+        let rig = CrashRig::new(rng, "acked");
+        let (handle, _live) = rig.serve_live();
+        let opts = crash_opts(rng, 2);
+        let kill_after = Duration::from_millis(30 + rng.below(450));
+        let outcome = rig.load_and_kill(&opts, handle, kill_after);
+
+        let acked: usize =
+            outcome.ledgers.iter().flat_map(|l| &l.records).filter(|r| r.acked).count();
+        let rec = wal::recover(&rig.dir, 2).unwrap();
+
+        let expected = verify::determinate_final_state(&outcome.ledgers);
+        let violations = verify::check_survival_inproc(&rec.gus, &expected);
+        prop_assert!(
+            violations.is_empty(),
+            "acked mutations lost after crash at {kill_after:?} ({acked} acked): {violations:?}"
+        );
+        for (i, ledger) in outcome.ledgers.iter().enumerate() {
+            let m = verify::find_applied_prefix(ledger, |id| rec.gus.contains(id));
+            prop_assert!(
+                m.is_some(),
+                "conn {i}: no applied prefix of {} records explains the recovered state",
+                ledger.records.len()
+            );
+        }
+    });
+}
+
+/// Byte-identical twin equivalence, single connection (one total
+/// mutation order, so the twin can replay it exactly): recover, find the
+/// applied prefix, replay it into an uninterrupted twin, and require
+/// identical answers on a fixed query workload — corpus probes and the
+/// run's own surviving inserts.
+#[test]
+fn prop_crash_twin_answers_byte_identically() {
+    proptest_cases(3, |rng: &mut Rng| {
+        let rig = CrashRig::new(rng, "twin");
+        let (handle, _live) = rig.serve_live();
+        let opts = crash_opts(rng, 1);
+        let kill_after = Duration::from_millis(30 + rng.below(450));
+        let outcome = rig.load_and_kill(&opts, handle, kill_after);
+
+        let rec = wal::recover(&rig.dir, 2).unwrap();
+        let ledger = &outcome.ledgers[0];
+        let m = verify::find_applied_prefix(ledger, |id| rec.gus.contains(id))
+            .expect("no applied prefix explains the recovered state");
+        let last_acked = ledger.records.iter().rposition(|r| r.acked).map_or(0, |i| i + 1);
+        prop_assert!(
+            m >= last_acked,
+            "applied prefix {m} fails to cover the acked prefix {last_acked}"
+        );
+
+        // The uninterrupted twin: same bootstrap, then exactly the
+        // applied prefix of the generator's mutation stream.
+        let twin = rig.bootstrap();
+        verify::replay_prefix(&twin, ledger, m).unwrap();
+
+        assert_eq!(rec.gus.len(), twin.len(), "corpus size diverged");
+        for qi in (0..rig.ds.points.len()).step_by(13) {
+            assert_eq!(
+                rec.gus.query(&rig.ds.points[qi], 10).unwrap(),
+                twin.query(&rig.ds.points[qi], 10).unwrap(),
+                "query {qi} diverged after crash/recovery"
+            );
+        }
+        // Probe the run's own surviving inserts too (the points the
+        // crash actually put at risk), by id on both sides.
+        for r in ledger.records.iter().take(m) {
+            if rec.gus.contains(r.id) {
+                assert_eq!(
+                    rec.gus.query_by_id(r.id, 10).unwrap(),
+                    twin.query_by_id(r.id, 10).unwrap(),
+                    "query_by_id {} diverged after crash/recovery",
+                    r.id
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,189 @@
+//! Open-loop load-harness integration: the runner against a real served
+//! socket, and the three built-in scenarios at smoke scale.
+//!
+//! Smoke gates are deliberately correctness-only (no error responses, no
+//! unanswered requests, every determinate mutation's effect present,
+//! staleness finite) — latency SLOs are checked at full scale by
+//! `gus loadgen`, where the hardware is known.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynamic_gus::config::ScorerKind;
+use dynamic_gus::coordinator::DynamicGus;
+use dynamic_gus::loadgen::runner::{run_load, LoadOptions};
+use dynamic_gus::loadgen::scenario::{builtin, Scenario};
+use dynamic_gus::loadgen::{verify, Mix};
+use dynamic_gus::server::{serve, ServerConfig};
+
+/// Boot a scenario's corpus in-process with the Native scorer (hermetic:
+/// no XLA artifacts in the test environment).
+fn boot(sc: &Scenario) -> (dynamic_gus::server::ServerHandle, Arc<DynamicGus>) {
+    let ds = sc.corpus.generate().unwrap();
+    let mut cfg = sc.corpus.gus_config();
+    cfg.scorer = ScorerKind::Native;
+    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, 2).unwrap());
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::from_gus(gus.config())).unwrap();
+    (handle, gus)
+}
+
+/// The smoke contract every scenario must meet on any hardware.
+fn assert_smoke_clean(sc: &Scenario) {
+    let (handle, gus) = boot(sc);
+    let opts = LoadOptions::from_scenario(sc);
+    let sampler = sc.corpus.sampler().unwrap();
+    let outcome = run_load(&handle.addr.to_string(), &opts, &sampler).unwrap();
+    let r = &outcome.report;
+
+    assert!(r.sent > 0, "{}: generator sent nothing", sc.name);
+    assert!(
+        r.errors.is_empty(),
+        "{}: error responses under smoke load: {:?}",
+        sc.name,
+        r.errors
+    );
+    assert_eq!(r.transport_lost, 0, "{}: requests never answered", sc.name);
+    assert_eq!(r.ok, r.sent, "{}: ok ({}) != sent ({})", sc.name, r.ok, r.sent);
+
+    // Every determinate mutation's effect is present in the live service.
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    let violations = verify::check_survival_inproc(&gus, &expected);
+    assert!(
+        violations.is_empty(),
+        "{}: acked mutations missing: {violations:?}",
+        sc.name
+    );
+    // No crash happened, so *every* mutation was acked (determinate).
+    let mutations: usize = outcome.ledgers.iter().map(|l| l.records.len()).sum();
+    assert!(
+        sc.mix.has_mutations() == (mutations > 0),
+        "{}: mutation ledger does not reflect the mix",
+        sc.name
+    );
+
+    // Staleness: recorded for every acked mutation, finite, and visible
+    // in the report.
+    if sc.mix.has_mutations() {
+        assert_eq!(r.staleness_count as usize, mutations, "{}: staleness count", sc.name);
+        assert!(
+            r.staleness_p99_ms.is_finite() && r.staleness_p99_ms >= 0.0,
+            "{}: staleness p99 {} not finite",
+            sc.name,
+            r.staleness_p99_ms
+        );
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn scenario_smoke_android_security() {
+    assert_smoke_clean(&builtin("android_security").unwrap().smoke());
+}
+
+#[test]
+fn scenario_smoke_recsys_stream() {
+    assert_smoke_clean(&builtin("recsys_stream").unwrap().smoke());
+}
+
+#[test]
+fn scenario_smoke_dynamic_clustering() {
+    assert_smoke_clean(&builtin("dynamic_clustering").unwrap().smoke());
+}
+
+/// The runner itself, decoupled from the scenario layer: a mixed
+/// workload where inserts/deletes are verified against the service and
+/// per-kind accounting adds up.
+#[test]
+fn runner_accounts_for_every_request() {
+    let mut sc = builtin("dynamic_clustering").unwrap().smoke();
+    sc.corpus.n = 600;
+    sc.rate = 150.0;
+    sc.duration_s = 0.5;
+    sc.connections = 2;
+    sc.mix = Mix::parse("insert=30,delete=10,query=50,query_batch=10").unwrap();
+    let (handle, gus) = boot(&sc);
+
+    let mut opts = LoadOptions::from_scenario(&sc);
+    opts.record_points = true;
+    opts.duration = Duration::from_millis(500);
+    let sampler = sc.corpus.sampler().unwrap();
+    let outcome = run_load(&handle.addr.to_string(), &opts, &sampler).unwrap();
+    let r = &outcome.report;
+
+    assert!(r.errors.is_empty(), "errors: {:?}", r.errors);
+    assert_eq!(r.transport_lost, 0);
+    // Per-kind tallies sum to the totals, and latency was recorded for
+    // every acked request.
+    assert_eq!(r.per_kind.iter().map(|k| k.sent).sum::<u64>(), r.sent);
+    assert_eq!(r.per_kind.iter().map(|k| k.ok).sum::<u64>(), r.ok);
+    assert_eq!(r.latency.count, r.ok);
+    assert_eq!(outcome.ledgers.len(), 2);
+
+    // record_points captured every insert, so a twin could replay.
+    for ledger in &outcome.ledgers {
+        for rec in &ledger.records {
+            assert!(rec.acked, "no crash, so every mutation acked");
+            if rec.kind == dynamic_gus::loadgen::runner::MutKind::Insert {
+                let idx = rec.point.expect("insert with record_points carries its point");
+                assert_eq!(ledger.points[idx].id, rec.id);
+            }
+        }
+    }
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    assert!(verify::check_survival_inproc(&gus, &expected).is_empty());
+
+    // The same ledgers also verify over the wire (the external-server
+    // path `gus loadgen --addr` uses).
+    let mut client = dynamic_gus::client::GusClient::connect(&handle.addr.to_string()).unwrap();
+    let rpc_violations = verify::check_survival_rpc(&mut client, &expected).unwrap();
+    assert!(rpc_violations.is_empty(), "RPC probe disagreed: {rpc_violations:?}");
+
+    handle.shutdown();
+}
+
+/// Deterministic replay: the same seed offers the same workload — same
+/// arrival count, same per-kind counts, same mutation-kind sequence,
+/// same inserted ids — even though wall-clock timing differs run to run.
+/// (Delete *targets* are excluded by design: which acked insert a delete
+/// picks depends on server ack timing.)
+#[test]
+fn same_seed_replays_the_same_workload() {
+    let mut sc = builtin("recsys_stream").unwrap().smoke();
+    sc.corpus.n = 400;
+    sc.rate = 120.0;
+    sc.duration_s = 0.4;
+    sc.connections = 2;
+    sc.mix = Mix::parse("insert=30,delete=10,query=55,query_batch=5").unwrap();
+    let sampler = sc.corpus.sampler().unwrap();
+    let opts = LoadOptions::from_scenario(&sc);
+
+    // Per connection: the mutation-kind sequence, with insert ids pinned.
+    let offered = |outcome: &dynamic_gus::loadgen::LoadOutcome| -> Vec<Vec<(bool, u64)>> {
+        use dynamic_gus::loadgen::runner::MutKind;
+        outcome
+            .ledgers
+            .iter()
+            .map(|l| {
+                l.records
+                    .iter()
+                    .map(|r| match r.kind {
+                        MutKind::Insert => (true, r.id),
+                        MutKind::Delete => (false, 0),
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let (handle_a, _gus_a) = boot(&sc);
+    let a = run_load(&handle_a.addr.to_string(), &opts, &sampler).unwrap();
+    handle_a.shutdown();
+    let (handle_b, _gus_b) = boot(&sc);
+    let b = run_load(&handle_b.addr.to_string(), &opts, &sampler).unwrap();
+    handle_b.shutdown();
+
+    assert_eq!(a.report.sent, b.report.sent, "same schedule, same arrivals");
+    for (ka, kb) in a.report.per_kind.iter().zip(&b.report.per_kind) {
+        assert_eq!(ka.sent, kb.sent, "kind {} diverged across replays", ka.kind);
+    }
+    assert_eq!(offered(&a), offered(&b), "offered mutation stream diverged across replays");
+}

@@ -65,6 +65,23 @@ pub struct GusClient {
 impl GusClient {
     pub fn connect(addr: &str) -> Result<GusClient> {
         let stream = TcpStream::connect(addr)?;
+        Self::from_stream(stream)
+    }
+
+    /// [`GusClient::connect`] with a bounded connection attempt — the
+    /// replication router and health monitor use this so a dead node
+    /// costs `timeout`, not the OS connect default.
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<GusClient> {
+        use std::net::ToSocketAddrs;
+        let sa = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)?;
+        Self::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<GusClient> {
         stream.set_nodelay(true).ok();
         Ok(GusClient {
             reader: BufReader::new(stream.try_clone()?),
@@ -73,6 +90,15 @@ impl GusClient {
             parked: HashMap::new(),
             deadline_ms: None,
         })
+    }
+
+    /// Bound every subsequent blocking read on this connection; a wait
+    /// exceeding `timeout` surfaces as a transport error (the connection
+    /// should be discarded — a late response would desynchronize the
+    /// reply stream). `None` restores unbounded reads.
+    pub fn set_read_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     /// Set the relative deadline (milliseconds from server receipt)
@@ -269,6 +295,17 @@ impl GusClient {
     /// Errors if the server runs without `--wal-dir`.
     pub fn checkpoint(&mut self) -> Result<u64> {
         let id = self.submit(Request::Checkpoint)?;
+        match self.wait(id)? {
+            Response::Checkpoint { seq } => Ok(seq),
+            other => bail!("unexpected response {other:?} (wanted 'seq')"),
+        }
+    }
+
+    /// Promote a replicating follower to leader (failover); returns its
+    /// durable WAL sequence number. Idempotent against a leader. Errors
+    /// on a server running without `--replicate`.
+    pub fn promote(&mut self) -> Result<u64> {
+        let id = self.submit(Request::Promote)?;
         match self.wait(id)? {
             Response::Checkpoint { seq } => Ok(seq),
             other => bail!("unexpected response {other:?} (wanted 'seq')"),

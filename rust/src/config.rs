@@ -124,6 +124,13 @@ pub struct GusConfig {
     /// the restart replay cost. 0 disables automatic checkpoints (manual
     /// `checkpoint` RPC / CLI only). Irrelevant while `wal_dir` is unset.
     pub checkpoint_every: u64,
+    /// WAL retention: number of most-recent records kept in the log past
+    /// a checkpoint (instead of truncating to empty). A bounded tail lets
+    /// replication followers that fall behind by less than `wal_retain`
+    /// records resume streaming instead of re-bootstrapping from a
+    /// snapshot. 0 (the default) truncates fully at checkpoint, exactly
+    /// the pre-replication behavior. Irrelevant while `wal_dir` is unset.
+    pub wal_retain: u64,
     /// RPC server: connections admitted concurrently; excess connections
     /// get a final `OVERLOADED` response and are closed (clients retry).
     pub max_connections: usize,
@@ -154,6 +161,7 @@ impl Default for GusConfig {
             wal_dir: None,
             fsync: FsyncPolicy::Always,
             checkpoint_every: 10_000,
+            wal_retain: 0,
             max_connections: 64,
             rpc_workers: 0,
             rpc_queue: 256,
@@ -182,6 +190,7 @@ impl GusConfig {
             self.fsync = FsyncPolicy::parse(&s)?;
         }
         self.checkpoint_every = args.get_u64("checkpoint-every", self.checkpoint_every);
+        self.wal_retain = args.get_u64("wal-retain", self.wal_retain);
         self.max_connections = args.get_usize("max-connections", self.max_connections);
         self.rpc_workers = args.get_usize("rpc-workers", self.rpc_workers);
         self.rpc_queue = args.get_usize("rpc-queue", self.rpc_queue);
@@ -248,6 +257,7 @@ impl GusConfig {
             ),
             ("fsync", Json::str(self.fsync.to_str())),
             ("checkpoint_every", Json::u64(self.checkpoint_every)),
+            ("wal_retain", Json::u64(self.wal_retain)),
             ("max_connections", Json::num(self.max_connections as f64)),
             ("rpc_workers", Json::num(self.rpc_workers as f64)),
             ("rpc_queue", Json::num(self.rpc_queue as f64)),
@@ -275,6 +285,7 @@ impl GusConfig {
                 None => d.fsync,
             },
             checkpoint_every: j.get("checkpoint_every").as_u64().unwrap_or(d.checkpoint_every),
+            wal_retain: j.get("wal_retain").as_u64().unwrap_or(d.wal_retain),
             max_connections: j.get("max_connections").as_usize().unwrap_or(d.max_connections),
             rpc_workers: j.get("rpc_workers").as_usize().unwrap_or(d.rpc_workers),
             rpc_queue: j.get("rpc_queue").as_usize().unwrap_or(d.rpc_queue),
@@ -386,6 +397,20 @@ mod tests {
         assert_eq!(d.checkpoint_every, 10_000);
         let args = Args::parse_from(["--fsync=bogus".to_string()]).unwrap();
         assert!(GusConfig::default().apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn wal_retain_cli_and_json() {
+        // Default keeps the pre-replication behavior: truncate fully.
+        assert_eq!(GusConfig::default().wal_retain, 0);
+        let args = Args::parse_from(["--wal-retain=5000".to_string()]).unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.wal_retain, 5000);
+        let back = GusConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.wal_retain, 5000);
+        // Old configs (no wal_retain field) fall back to 0.
+        let old = GusConfig::from_json(&Json::parse(r#"{"scann_nn":7}"#).unwrap()).unwrap();
+        assert_eq!(old.wal_retain, 0);
     }
 
     #[test]

@@ -71,7 +71,7 @@ use crate::features::{Point, PointId, Schema};
 use crate::index::sharded::ShardedIndex;
 use crate::index::QueryParams;
 use crate::lsh::Bucketer;
-use crate::metrics::{Counters, LatencyHistogram};
+use crate::metrics::{Counters, LatencyHistogram, ReplicationGauges};
 use crate::preprocess;
 use crate::scorer::{
     score_into_parallel, CandRefs, MlpWeights, NativeScorer, PairFeaturizer, PairScorer,
@@ -104,6 +104,9 @@ pub struct GusMetrics {
     pub scoring_latency: LatencyHistogram,
     pub counters: Counters,
     pub staleness: StalenessTracker,
+    /// Replication health (role, stream lag, apply staleness). Zeroed
+    /// with role `single` when replication is off.
+    pub replication: ReplicationGauges,
 }
 
 /// Reusable buffers for one `score_neighbors` call: candidate ids, fetched
@@ -286,7 +289,10 @@ impl DynamicGus {
     }
 
     /// Incremental checkpoint: persist the corpus + tables (committed by
-    /// an atomic rename), then truncate the WAL. Blocks mutations for the
+    /// an atomic rename), then truncate the WAL — keeping the last
+    /// [`GusConfig::wal_retain`] records as a bounded tail so replication
+    /// followers lagging by less than that can keep streaming instead of
+    /// re-bootstrapping from the snapshot. Blocks mutations for the
     /// duration (they queue on the WAL lock); returns the sequence number
     /// the checkpoint covers. Errors if no WAL is attached.
     pub fn checkpoint(&self) -> Result<u64> {
@@ -297,7 +303,7 @@ impl DynamicGus {
         let mut writer = w.writer.lock().unwrap();
         let seq = writer.seq();
         snapshot::save_with_seq(self, w.dir(), seq)?;
-        writer.truncate()?;
+        writer.truncate_retaining(self.config.wal_retain)?;
         w.reset_pending();
         Ok(seq)
     }
@@ -703,6 +709,7 @@ impl DynamicGus {
             ("query_latency", self.metrics.query_latency.summary().to_json()),
             ("scoring_latency", self.metrics.scoring_latency.summary().to_json()),
             ("staleness_p99_ms", Json::num(self.metrics.staleness.p99_ms())),
+            ("replication", self.metrics.replication.to_json(self.wal_seq())),
             (
                 "wal",
                 match self.wal.get() {
@@ -869,6 +876,17 @@ mod tests {
             js.get("counters").get("pairs_scored_ns").as_u64().unwrap() > 0,
             "pairs_scored_ns did not accumulate"
         );
+    }
+
+    #[test]
+    fn stats_expose_replication_section() {
+        let (gus, _) = boot(100);
+        let js = gus.stats_json();
+        let rep = js.get("replication");
+        assert_eq!(rep.get("role").as_str(), Some("single"));
+        assert_eq!(rep.get("wal_last_seq").as_u64(), Some(0));
+        assert_eq!(rep.get("replication_lag_records").as_u64(), Some(0));
+        assert!(rep.get("leader").is_null());
     }
 
     #[test]

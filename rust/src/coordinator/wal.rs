@@ -59,10 +59,10 @@
 //! order.
 
 use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -88,6 +88,19 @@ const MAX_RECORD_BYTES: u32 = 1 << 30;
 #[inline]
 fn record_check(seq: u64, payload: &[u8]) -> u64 {
     mix2(hash_bytes(payload), seq)
+}
+
+/// Encode one record frame (`[len][seq][check][payload]`). The single
+/// framing encoder: the writer's appends and the replication stream both
+/// go through here, so a shipped frame is byte-identical to the on-disk
+/// record by construction.
+pub fn encode_frame(seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(HEADER_BYTES + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&seq.to_le_bytes());
+    frame.extend_from_slice(&record_check(seq, payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    frame
 }
 
 // ---------- payload encoding ----------
@@ -117,6 +130,69 @@ pub(crate) fn refresh_payload() -> Json {
     crate::protocol::wire::refresh_tables()
 }
 
+// ---------- tail signal (replication subscribers) ----------
+
+/// What a log-tail observer can see of the writer's progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TailState {
+    /// Sequence number of the most recently appended record.
+    pub last_seq: u64,
+    /// Sequence number of the last record *not* in the file: the file
+    /// holds exactly `floor_seq + 1 ..= last_seq`. A subscriber asking to
+    /// resume at `from_seq <= floor_seq` needs a snapshot bootstrap.
+    pub floor_seq: u64,
+    /// Bumped whenever the file is rewritten (checkpoint truncation), so
+    /// tailing readers know to reopen and rescan.
+    pub generation: u64,
+}
+
+/// Condvar-backed progress signal for WAL tailers (the replication
+/// leader's subscription streams). The writer notifies on every append
+/// and rewrite; tailers block in [`TailSignal::wait_change`].
+pub struct TailSignal {
+    state: Mutex<TailState>,
+    cond: Condvar,
+}
+
+impl TailSignal {
+    fn new(last_seq: u64, floor_seq: u64) -> TailSignal {
+        TailSignal {
+            state: Mutex::new(TailState { last_seq, floor_seq, generation: 0 }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Current progress snapshot.
+    pub fn snapshot(&self) -> TailState {
+        *self.state.lock().unwrap()
+    }
+
+    fn note_append(&self, seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.last_seq = seq;
+        self.cond.notify_all();
+    }
+
+    fn note_rewrite(&self, floor_seq: u64, last_seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.floor_seq = floor_seq;
+        st.last_seq = last_seq;
+        st.generation += 1;
+        self.cond.notify_all();
+    }
+
+    /// Block until the state differs from `seen` (new append or rewrite)
+    /// or `timeout` elapses; returns the latest state either way.
+    pub fn wait_change(&self, seen: TailState, timeout: Duration) -> TailState {
+        let guard = self.state.lock().unwrap();
+        let (st, _timed_out) = self
+            .cond
+            .wait_timeout_while(guard, timeout, |st| *st == seen)
+            .unwrap();
+        *st
+    }
+}
+
 // ---------- writer ----------
 
 /// Appender over the log file. Owned by [`WalHandle`] behind a mutex; the
@@ -126,6 +202,8 @@ pub struct WalWriter {
     path: PathBuf,
     policy: FsyncPolicy,
     seq: u64,
+    /// Progress signal shared with tailing readers (see [`TailSignal`]).
+    signal: Arc<TailSignal>,
     /// Byte length of the valid log (the rollback point for a failed
     /// append — a partial frame followed by later valid records would
     /// read as unrecoverable mid-file corruption).
@@ -141,7 +219,22 @@ impl WalWriter {
     /// Open (creating if absent) the log at `path` for appending.
     /// `start_seq` is the sequence number of the last record already
     /// durable anywhere (snapshot or log); new records continue from it.
+    /// The tail floor is assumed equal to `start_seq` (empty/truncated
+    /// file); use [`WalWriter::open_with_floor`] when reopening a log
+    /// that still holds records.
     pub fn open(path: &Path, policy: FsyncPolicy, start_seq: u64) -> Result<WalWriter> {
+        Self::open_with_floor(path, policy, start_seq, start_seq)
+    }
+
+    /// [`WalWriter::open`] with an explicit tail floor: the file holds
+    /// records `floor_seq + 1 ..= start_seq` (recovery computes this from
+    /// its scan).
+    pub fn open_with_floor(
+        path: &Path,
+        policy: FsyncPolicy,
+        start_seq: u64,
+        floor_seq: u64,
+    ) -> Result<WalWriter> {
         let file = OpenOptions::new()
             .create(true)
             .append(true)
@@ -153,6 +246,7 @@ impl WalWriter {
             path: path.to_path_buf(),
             policy,
             seq: start_seq,
+            signal: Arc::new(TailSignal::new(start_seq, floor_seq)),
             offset,
             appends_since_sync: 0,
             poisoned: false,
@@ -168,6 +262,11 @@ impl WalWriter {
         &self.path
     }
 
+    /// The progress signal tailing readers wait on.
+    pub fn signal(&self) -> &Arc<TailSignal> {
+        &self.signal
+    }
+
     /// Append one record; returns its sequence number. The record is in
     /// the OS page cache when this returns (a process crash cannot lose
     /// it); the fsync policy decides when it also survives power loss.
@@ -178,20 +277,32 @@ impl WalWriter {
     /// otherwise the next successful append would follow garbage bytes
     /// and turn an I/O blip into unrecoverable mid-file corruption.
     pub fn append(&mut self, payload: &Json) -> Result<u64> {
+        let bytes = payload.dump().into_bytes();
+        self.append_frame(self.seq + 1, &bytes)
+    }
+
+    /// Append a record whose payload bytes (and sequence number) were
+    /// produced elsewhere — the replication follower's path: it persists
+    /// the leader's frames verbatim, so its log stays byte-identical to
+    /// the stream. `seq` must continue the sequence exactly.
+    pub fn append_raw(&mut self, seq: u64, payload: &[u8]) -> Result<u64> {
+        anyhow::ensure!(
+            seq == self.seq + 1,
+            "replication stream gap: record {seq} follows local seq {}",
+            self.seq
+        );
+        self.append_frame(seq, payload)
+    }
+
+    fn append_frame(&mut self, seq: u64, payload: &[u8]) -> Result<u64> {
         anyhow::ensure!(
             !self.poisoned,
             "WAL {} is poisoned after an unrolled-back write failure; \
              restart (recovery truncates the partial record)",
             self.path.display()
         );
-        let bytes = payload.dump().into_bytes();
-        anyhow::ensure!(bytes.len() as u64 <= MAX_RECORD_BYTES as u64, "WAL record too large");
-        let seq = self.seq + 1;
-        let mut frame = Vec::with_capacity(HEADER_BYTES + bytes.len());
-        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&seq.to_le_bytes());
-        frame.extend_from_slice(&record_check(seq, &bytes).to_le_bytes());
-        frame.extend_from_slice(&bytes);
+        anyhow::ensure!(payload.len() as u64 <= MAX_RECORD_BYTES as u64, "WAL record too large");
+        let frame = encode_frame(seq, payload);
         if let Err(e) = self.file.write_all(&frame) {
             // Trim any partial frame; seq stays unchanged so the next
             // attempt reuses it (no gap in the sequence).
@@ -213,6 +324,7 @@ impl WalWriter {
             }
             FsyncPolicy::Never => {}
         }
+        self.signal.note_append(self.seq);
         Ok(self.seq)
     }
 
@@ -230,13 +342,81 @@ impl WalWriter {
     /// `last_seq` comparisons remain meaningful across checkpoints. Also
     /// clears a poisoned state: the partial frame (if any) is gone.
     pub fn truncate(&mut self) -> Result<()> {
-        self.file
-            .set_len(0)
-            .with_context(|| format!("truncating WAL {}", self.path.display()))?;
-        self.file.sync_all().ok();
-        self.offset = 0;
+        self.truncate_retaining(0)
+    }
+
+    /// Post-checkpoint truncation keeping a bounded tail: the most recent
+    /// `retain` records stay in the file so replication followers lagging
+    /// by less than `retain` records can resume from the log instead of
+    /// re-bootstrapping from a snapshot. `retain == 0` drops everything
+    /// (the classic behavior). The kept tail is copied byte-for-byte into
+    /// a temp file and renamed into place, so concurrently tailing
+    /// readers (which hold the old inode) never observe a torn file —
+    /// they reopen on the generation bump.
+    pub fn truncate_retaining(&mut self, retain: u64) -> Result<()> {
+        let cut_seq = self.seq.saturating_sub(retain);
+        let floor = self.signal.snapshot().floor_seq;
+        if retain > 0 && cut_seq <= floor {
+            // Fewer than `retain` records in the file: nothing to drop.
+            // (Also covers poisoned/torn tails conservatively: a rewrite
+            // below copies only checksum-valid frames anyway.)
+            if !self.poisoned {
+                return Ok(());
+            }
+        }
+        if retain == 0 || self.offset == 0 {
+            self.file
+                .set_len(0)
+                .with_context(|| format!("truncating WAL {}", self.path.display()))?;
+            self.file.sync_all().ok();
+            self.offset = 0;
+            self.appends_since_sync = 0;
+            self.poisoned = false;
+            self.signal.note_rewrite(self.seq, self.seq);
+            return Ok(());
+        }
+        // Walk the valid prefix collecting the byte range of the retained
+        // tail (frames with seq > cut_seq), then rewrite via tmp + rename.
+        let mut reader = std::io::BufReader::new(
+            File::open(&self.path)
+                .with_context(|| format!("reopening WAL {}", self.path.display()))?,
+        );
+        let mut cut_offset = 0u64;
+        let mut walked = 0u64;
+        loop {
+            match read_frame_raw(&mut reader) {
+                Ok(Some((seq, frame))) => {
+                    walked += frame.len() as u64;
+                    if seq <= cut_seq {
+                        cut_offset = walked;
+                    }
+                    if walked >= self.offset {
+                        break;
+                    }
+                }
+                Ok(None) => break,
+                Err(FrameError::Torn) => break,
+                Err(FrameError::Io(e)) => {
+                    return Err(anyhow!(e)
+                        .context(format!("scanning WAL {} for retention", self.path.display())))
+                }
+            }
+        }
+        let data = std::fs::read(&self.path)?;
+        let keep = &data[cut_offset as usize..(self.offset as usize).min(data.len())];
+        let tmp = self.path.with_extension("log.tmp");
+        std::fs::write(&tmp, keep).with_context(|| format!("writing {}", tmp.display()))?;
+        File::open(&tmp).and_then(|f| f.sync_all()).ok();
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("committing retained WAL tail {}", self.path.display()))?;
+        self.file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening WAL {}", self.path.display()))?;
+        self.offset = keep.len() as u64;
         self.appends_since_sync = 0;
         self.poisoned = false;
+        self.signal.note_rewrite(cut_seq, self.seq);
         Ok(())
     }
 }
@@ -264,16 +444,18 @@ pub struct ScanSummary {
 
 /// Why a frame failed to decode: the file ends (or goes bad) mid-record,
 /// or the underlying read itself errored.
-enum FrameError {
+pub(crate) enum FrameError {
     Torn,
     Io(std::io::Error),
 }
 
-/// Decode one frame (`(seq, payload, frame_bytes)`) from `reader`.
+/// Read one checksum-validated frame from `reader`, returning `(seq,
+/// frame_bytes)` — the *complete* frame, header included, exactly as it
+/// sits in the file (the replication stream ships these verbatim).
 /// `Ok(None)` = clean EOF at a record boundary.
-fn read_frame(
-    reader: &mut impl std::io::Read,
-) -> std::result::Result<Option<(u64, Json, u64)>, FrameError> {
+pub(crate) fn read_frame_raw(
+    reader: &mut impl Read,
+) -> std::result::Result<Option<(u64, Vec<u8>)>, FrameError> {
     let mut header = [0u8; HEADER_BYTES];
     let mut filled = 0usize;
     while filled < HEADER_BYTES {
@@ -291,24 +473,42 @@ fn read_frame(
     if len > MAX_RECORD_BYTES {
         return Err(FrameError::Torn);
     }
-    let mut payload = vec![0u8; len as usize];
-    let mut filled = 0usize;
-    while filled < payload.len() {
-        match reader.read(&mut payload[filled..]) {
+    let mut frame = vec![0u8; HEADER_BYTES + len as usize];
+    frame[..HEADER_BYTES].copy_from_slice(&header);
+    let mut filled = HEADER_BYTES;
+    while filled < frame.len() {
+        match reader.read(&mut frame[filled..]) {
             Ok(0) => return Err(FrameError::Torn),
             Ok(n) => filled += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(FrameError::Io(e)),
         }
     }
-    if record_check(seq, &payload) != check {
+    if record_check(seq, &frame[HEADER_BYTES..]) != check {
         return Err(FrameError::Torn);
     }
-    let json = std::str::from_utf8(&payload)
+    Ok(Some((seq, frame)))
+}
+
+/// Split a raw frame (from [`read_frame_raw`] or the replication stream)
+/// into its payload byte range.
+pub(crate) fn frame_payload(frame: &[u8]) -> &[u8] {
+    &frame[HEADER_BYTES..]
+}
+
+/// Decode one frame (`(seq, payload, frame_bytes)`) from `reader`.
+/// `Ok(None)` = clean EOF at a record boundary.
+fn read_frame(
+    reader: &mut impl std::io::Read,
+) -> std::result::Result<Option<(u64, Json, u64)>, FrameError> {
+    let Some((seq, frame)) = read_frame_raw(reader)? else {
+        return Ok(None);
+    };
+    let json = std::str::from_utf8(frame_payload(&frame))
         .ok()
         .and_then(|t| Json::parse(t).ok())
         .ok_or(FrameError::Torn)?;
-    Ok(Some((seq, json, HEADER_BYTES as u64 + len as u64)))
+    Ok(Some((seq, json, frame.len() as u64)))
 }
 
 /// Does any complete, checksum-valid record start in `data`? Used to tell
@@ -411,6 +611,113 @@ pub fn scan(path: &Path) -> Result<WalScan> {
     Ok(WalScan { records, good_bytes: summary.good_bytes, torn: summary.torn })
 }
 
+// ---------- tailing reader (replication streaming) ----------
+
+/// A cursor over a live, growing (and occasionally rewritten) log file,
+/// yielding raw frames with `seq >= next_seq` in order. The replication
+/// leader runs one per subscriber.
+///
+/// Concurrency contract: appends are whole-frame `write_all`s, so a read
+/// that lands mid-append parses as a torn tail — the tailer simply does
+/// not advance and retries after the writer's [`TailSignal`] fires.
+/// Checkpoint rewrites replace the file via rename; this handle keeps
+/// reading its (stable, no-longer-growing) old inode until the
+/// generation bump tells it to reopen the path.
+pub struct WalTailer {
+    path: PathBuf,
+    file: Option<File>,
+    /// Byte offset of the next unread frame in the *current* inode.
+    offset: u64,
+    /// Sequence number the next yielded frame must have.
+    next_seq: u64,
+    /// Generation of the inode `file` points at.
+    generation: u64,
+}
+
+impl WalTailer {
+    /// Tail `dir/wal.log` starting at sequence number `next_seq`, against
+    /// the writer's current `state` (from [`TailSignal::snapshot`]).
+    /// Errors if the log no longer holds `next_seq` (`<= floor_seq`) —
+    /// the caller must fall back to a snapshot bootstrap.
+    pub fn new(dir: &Path, next_seq: u64, state: TailState) -> Result<WalTailer> {
+        anyhow::ensure!(
+            next_seq > state.floor_seq,
+            "WAL tail starts at seq {} but {} was requested; snapshot bootstrap required",
+            state.floor_seq + 1,
+            next_seq
+        );
+        Ok(WalTailer {
+            path: dir.join(WAL_FILE),
+            file: None,
+            offset: 0,
+            next_seq,
+            generation: state.generation,
+        })
+    }
+
+    /// Sequence number of the next frame [`WalTailer::fill`] will yield.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Append available frames (`seq >= next_seq`, in order, raw bytes)
+    /// to `buf`, up to ~`max_bytes` per call. Returns the number of
+    /// frames appended; `0` means "caught up — wait on the signal".
+    /// `state` must be a fresh [`TailSignal::snapshot`].
+    pub fn fill(&mut self, state: TailState, buf: &mut Vec<u8>, max_bytes: usize) -> Result<usize> {
+        if state.generation != self.generation || self.file.is_none() {
+            // The file was rewritten under us (or this is the first
+            // read): reopen the path and rescan from the top, skipping
+            // frames already delivered. If the rewrite dropped our
+            // position, the stream cannot continue.
+            anyhow::ensure!(
+                self.next_seq > state.floor_seq,
+                "WAL retention passed this subscriber (needs seq {}, floor is {}); \
+                 snapshot bootstrap required",
+                self.next_seq,
+                state.floor_seq
+            );
+            self.file = Some(
+                File::open(&self.path)
+                    .with_context(|| format!("reopening WAL {}", self.path.display()))?,
+            );
+            self.offset = 0;
+            self.generation = state.generation;
+        }
+        let file = self.file.as_mut().unwrap();
+        file.seek(SeekFrom::Start(self.offset))?;
+        let mut reader = std::io::BufReader::new(file);
+        let mut appended = 0usize;
+        while buf.len() < max_bytes {
+            match read_frame_raw(&mut reader) {
+                Ok(Some((seq, frame))) => {
+                    self.offset += frame.len() as u64;
+                    if seq < self.next_seq {
+                        continue; // retained tail we already have
+                    }
+                    anyhow::ensure!(
+                        seq == self.next_seq,
+                        "WAL tail gap: expected seq {}, found {seq}",
+                        self.next_seq
+                    );
+                    self.next_seq = seq + 1;
+                    buf.extend_from_slice(&frame);
+                    appended += 1;
+                }
+                // Clean EOF or a mid-append partial frame: caught up for
+                // now (do not advance past it — the writer will finish
+                // the frame and the signal will fire).
+                Ok(None) | Err(FrameError::Torn) => break,
+                Err(FrameError::Io(e)) => {
+                    return Err(anyhow!(e)
+                        .context(format!("tailing WAL {}", self.path.display())))
+                }
+            }
+        }
+        Ok(appended)
+    }
+}
+
 // ---------- bootstrap metadata ----------
 
 /// Write `wal_meta.json` (schema + config + corpus size at the time) so
@@ -505,6 +812,18 @@ impl WalHandle {
     /// Sequence number of the most recently logged mutation.
     pub fn seq(&self) -> u64 {
         self.writer.lock().unwrap().seq()
+    }
+
+    /// The writer's tail-progress signal (replication subscribers wait on
+    /// this; cloned out so waiting never touches the writer mutex).
+    pub fn tail_signal(&self) -> Arc<TailSignal> {
+        Arc::clone(self.writer.lock().unwrap().signal())
+    }
+
+    /// Lock the writer — the replication follower's append+apply critical
+    /// section (mirrors the coordinator's own log-before-apply locking).
+    pub fn lock_writer(&self) -> std::sync::MutexGuard<'_, WalWriter> {
+        self.writer.lock().unwrap()
     }
 }
 
@@ -637,7 +956,14 @@ pub fn recover_with(
 
     ensure_meta(&gus, dir)?;
     let policy = fsync_override.unwrap_or_else(|| gus.config().fsync);
-    let writer = WalWriter::open(&wal_path, policy, max_seq)?;
+    // The (possibly retained) file holds `floor + 1 ..= last_seq`; tell
+    // the writer so replication subscribers see the correct tail floor.
+    let floor = if summary.records == 0 {
+        max_seq
+    } else {
+        summary.last_seq - summary.records as u64
+    };
+    let writer = WalWriter::open_with_floor(&wal_path, policy, max_seq, floor)?;
     let handle = WalHandle::new(writer, dir.to_path_buf());
     // Mutations not yet folded into a checkpoint count as pending —
     // weighted like live logging (a batch record counts its items) — so
@@ -833,6 +1159,109 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = scan(&path).unwrap_err();
         assert!(format!("{err}").contains("corrupted"), "{err}");
+    }
+
+    /// Drain a tailer into (seq, payload-json) pairs, non-blocking.
+    fn drain_tailer(t: &mut WalTailer, sig: &TailSignal) -> Vec<(u64, Json)> {
+        let mut buf = Vec::new();
+        while t.fill(sig.snapshot(), &mut buf, usize::MAX).unwrap() > 0 {}
+        let mut out = Vec::new();
+        let mut reader = std::io::Cursor::new(buf);
+        while let Ok(Some((seq, frame))) = read_frame_raw(&mut reader) {
+            let j = Json::parse(std::str::from_utf8(frame_payload(&frame)).unwrap()).unwrap();
+            out.push((seq, j));
+        }
+        out
+    }
+
+    #[test]
+    fn truncate_retaining_keeps_bounded_tail() {
+        let dir = tmpdir("retain");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..10 {
+            w.append(&payload(i)).unwrap();
+        }
+        w.truncate_retaining(3).unwrap();
+        let st = w.signal().snapshot();
+        assert_eq!(st.floor_seq, 7, "file should hold 8..=10");
+        assert_eq!(st.last_seq, 10);
+        assert_eq!(st.generation, 1);
+        let s = scan(&path).unwrap();
+        assert!(!s.torn);
+        assert_eq!(
+            s.records.iter().map(|(seq, _)| *seq).collect::<Vec<_>>(),
+            vec![8, 9, 10]
+        );
+        // Appends continue the sequence on the rewritten file.
+        assert_eq!(w.append(&payload(99)).unwrap(), 11);
+        drop(w);
+        assert_eq!(scan(&path).unwrap().records.len(), 4);
+    }
+
+    #[test]
+    fn truncate_retaining_more_than_present_is_a_no_op() {
+        let dir = tmpdir("retain-noop");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..4 {
+            w.append(&payload(i)).unwrap();
+        }
+        let len = std::fs::metadata(&path).unwrap().len();
+        w.truncate_retaining(100).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), len);
+        assert_eq!(w.signal().snapshot().generation, 0, "no rewrite happened");
+    }
+
+    #[test]
+    fn append_raw_enforces_continuity_and_matches_append_bytes() {
+        let dir = tmpdir("raw");
+        let a = dir.join("a.log");
+        let b = dir.join("b.log");
+        let mut wa = WalWriter::open(&a, FsyncPolicy::Never, 0).unwrap();
+        let mut wb = WalWriter::open(&b, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..3 {
+            let p = payload(i);
+            let seq = wa.append(&p).unwrap();
+            wb.append_raw(seq, p.dump().as_bytes()).unwrap();
+        }
+        assert!(wb.append_raw(7, b"x").is_err(), "gap must be rejected");
+        drop(wa);
+        drop(wb);
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    }
+
+    #[test]
+    fn tailer_follows_appends_and_rewrites() {
+        let dir = tmpdir("tailer");
+        let path = dir.join(WAL_FILE);
+        let mut w = WalWriter::open(&path, FsyncPolicy::Never, 0).unwrap();
+        for i in 0..5 {
+            w.append(&payload(i)).unwrap();
+        }
+        let sig = Arc::clone(w.signal());
+        let mut t = WalTailer::new(&dir, 3, sig.snapshot()).unwrap();
+        let got = drain_tailer(&mut t, &sig);
+        assert_eq!(got.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![3, 4, 5]);
+        // Rewrite under the tailer (checkpoint with retention), then more
+        // appends: the tailer reopens and resumes without gaps or dupes.
+        w.truncate_retaining(2).unwrap();
+        for i in 5..8 {
+            w.append(&payload(i)).unwrap();
+        }
+        let got = drain_tailer(&mut t, &sig);
+        assert_eq!(got.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![6, 7, 8]);
+        // A tailer whose position was dropped by retention must error.
+        w.truncate_retaining(1).unwrap();
+        let behind = WalTailer::new(&dir, 1, sig.snapshot());
+        assert!(behind.is_err(), "below-floor tail must demand a snapshot");
+        let mut stale = WalTailer::new(&dir, 9, sig.snapshot()).unwrap();
+        w.truncate_retaining(0).unwrap();
+        let mut buf = Vec::new();
+        assert!(
+            stale.fill(sig.snapshot(), &mut buf, usize::MAX).is_ok(),
+            "at-floor tailer (needs only future records) keeps working"
+        );
     }
 
     #[test]

@@ -266,9 +266,7 @@ impl ShardedIndex {
 
     /// Merge per-shard results into the global (dot desc, id asc) order.
     fn merge(per_shard: Vec<Vec<Neighbor>>) -> Vec<Neighbor> {
-        let mut all: Vec<Neighbor> = per_shard.into_iter().flatten().collect();
-        all.sort_unstable_by(|a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)));
-        all
+        merge_ranked(per_shard, |a, b| b.dot.total_cmp(&a.dot).then(a.id.cmp(&b.id)))
     }
 
     /// Aggregate stats over shards. O(shards): each per-shard snapshot is
@@ -302,6 +300,19 @@ impl ShardedIndex {
             s.write().unwrap().compact_all();
         }
     }
+}
+
+/// Merge independently ranked result lists into one globally ranked list
+/// under `cmp` (descending relevance first). Shared by the per-shard
+/// fan-out merge above and the replication router's scatter/gather merge
+/// ([`crate::replication::router`]) — same contract, different sort key.
+pub fn merge_ranked<T>(
+    lists: Vec<Vec<T>>,
+    cmp: impl FnMut(&T, &T) -> std::cmp::Ordering,
+) -> Vec<T> {
+    let mut all: Vec<T> = lists.into_iter().flatten().collect();
+    all.sort_unstable_by(cmp);
+    all
 }
 
 #[cfg(test)]

@@ -38,6 +38,7 @@ pub mod index;
 pub mod loadgen;
 pub mod preprocess;
 pub mod protocol;
+pub mod replication;
 pub mod runtime;
 pub mod scorer;
 pub mod server;

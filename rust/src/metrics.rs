@@ -209,6 +209,181 @@ impl Counters {
     }
 }
 
+/// The node's replication role, as exposed in `stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicationRole {
+    /// Replication not enabled (single-node serving).
+    Single,
+    /// Accepts mutations and streams its WAL to subscribed followers.
+    Leader,
+    /// Applies the leader's stream; mutations answered with `NOT_LEADER`.
+    Follower,
+}
+
+impl ReplicationRole {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicationRole::Single => "single",
+            ReplicationRole::Leader => "leader",
+            ReplicationRole::Follower => "follower",
+        }
+    }
+}
+
+/// Nanoseconds on a process-local monotonic clock (first call is 0).
+/// Replication code reads time exclusively through [`ReplicationGauges`]
+/// so `replication/*.rs` stays free of `Instant::now` — the
+/// replay-determinism lint covers those files.
+fn monotonic_ns() -> u64 {
+    use std::sync::OnceLock;
+    static START: OnceLock<std::time::Instant> = OnceLock::new();
+    START.get_or_init(std::time::Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Replication health gauges: what the `stats` RPC reports under
+/// `"replication"` and what the router's failover logic reads. All
+/// fields are plain gauges updated by the replication subsystem; a
+/// single-node server reports role `single` with zeroed gauges.
+#[derive(Default)]
+pub struct ReplicationGauges {
+    /// 0 = single, 1 = leader, 2 = follower (see [`ReplicationRole`]).
+    role: AtomicU64,
+    /// Leader address hint served with `NOT_LEADER` errors (follower only).
+    leader_hint: std::sync::Mutex<Option<String>>,
+    /// Highest WAL seq received from the leader's stream (follower).
+    last_received_seq: AtomicU64,
+    /// Highest WAL seq durably appended + applied locally (follower).
+    last_applied_seq: AtomicU64,
+    /// Monotonic timestamp of the last applied record (0 = never).
+    last_apply_ns: AtomicU64,
+    /// WAL records shipped to followers (leader, cumulative).
+    records_shipped: AtomicU64,
+    /// Mutation acks gated on replication that timed out (leader).
+    ack_timeouts: AtomicU64,
+    /// Live `wal_subscribe` streams (leader).
+    subscribers: AtomicU64,
+}
+
+impl ReplicationGauges {
+    pub fn set_role(&self, role: ReplicationRole) {
+        let v = match role {
+            ReplicationRole::Single => 0,
+            ReplicationRole::Leader => 1,
+            ReplicationRole::Follower => 2,
+        };
+        self.role.store(v, Ordering::Relaxed);
+    }
+
+    pub fn role(&self) -> ReplicationRole {
+        // RELAXED: role transitions are rare and monitoring/denial paths
+        // tolerate reading the old role for one request.
+        match self.role.load(Ordering::Relaxed) {
+            1 => ReplicationRole::Leader,
+            2 => ReplicationRole::Follower,
+            _ => ReplicationRole::Single,
+        }
+    }
+
+    pub fn set_leader_hint(&self, addr: Option<String>) {
+        *self.leader_hint.lock().unwrap() = addr;
+    }
+
+    pub fn leader_hint(&self) -> Option<String> {
+        self.leader_hint.lock().unwrap().clone()
+    }
+
+    /// Follower: a frame arrived off the wire (not yet durable/applied).
+    pub fn note_received(&self, seq: u64) {
+        self.last_received_seq.fetch_max(seq, Ordering::Relaxed);
+    }
+
+    /// Follower: a record is durably appended and applied. Stamps the
+    /// apply-staleness clock.
+    pub fn note_applied(&self, seq: u64) {
+        self.last_applied_seq.fetch_max(seq, Ordering::Relaxed);
+        self.last_apply_ns.store(monotonic_ns().max(1), Ordering::Relaxed);
+    }
+
+    pub fn last_received_seq(&self) -> u64 {
+        self.last_received_seq.load(Ordering::Relaxed)
+    }
+
+    pub fn last_applied_seq(&self) -> u64 {
+        self.last_applied_seq.load(Ordering::Relaxed)
+    }
+
+    /// Records received but not yet applied (follower catch-up distance).
+    pub fn lag_records(&self) -> u64 {
+        self.last_received_seq().saturating_sub(self.last_applied_seq())
+    }
+
+    /// Milliseconds since the last applied record (0 = nothing applied
+    /// yet). On an idle stream this grows, which is exactly what a
+    /// dashboard wants to see: "how stale could this follower be".
+    pub fn apply_staleness_ms(&self) -> f64 {
+        let at = self.last_apply_ns.load(Ordering::Relaxed);
+        if at == 0 {
+            return 0.0;
+        }
+        monotonic_ns().saturating_sub(at) as f64 / 1e6
+    }
+
+    /// Leader: `n` WAL records went out to some subscriber.
+    pub fn note_shipped(&self, n: u64) {
+        self.records_shipped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Leader: a replication-gated mutation ack timed out.
+    pub fn note_ack_timeout(&self) {
+        self.ack_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn subscriber_connected(&self) {
+        self.subscribers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn subscriber_disconnected(&self) {
+        self.subscribers.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn subscribers(&self) -> u64 {
+        self.subscribers.load(Ordering::Relaxed)
+    }
+
+    /// The `"replication"` section of `stats`. `wal_last_seq` is passed in
+    /// by the coordinator (it owns the WAL); `replication_lag_records` is
+    /// the distance from the newest record this node knows about to what
+    /// it has applied — on a follower that is stream-lag, on a leader 0.
+    pub fn to_json(&self, wal_last_seq: u64) -> Json {
+        // RELAXED: stats snapshots read independent gauges; slight skew
+        // between fields is acceptable in a monitoring endpoint.
+        let lag = match self.role() {
+            ReplicationRole::Follower => {
+                wal_last_seq.max(self.last_received_seq()).saturating_sub(self.last_applied_seq())
+            }
+            _ => 0,
+        };
+        Json::obj(vec![
+            ("role", Json::str(self.role().as_str())),
+            (
+                "leader",
+                match self.leader_hint() {
+                    Some(a) => Json::str(a),
+                    None => Json::Null,
+                },
+            ),
+            ("wal_last_seq", Json::u64(wal_last_seq)),
+            ("last_received_seq", Json::u64(self.last_received_seq())),
+            ("last_applied_seq", Json::u64(self.last_applied_seq())),
+            ("replication_lag_records", Json::u64(lag)),
+            ("apply_staleness_ms", Json::num(self.apply_staleness_ms())),
+            ("records_shipped", Json::u64(self.records_shipped.load(Ordering::Relaxed))),
+            ("ack_timeouts", Json::u64(self.ack_timeouts.load(Ordering::Relaxed))),
+            ("subscribers", Json::u64(self.subscribers())),
+        ])
+    }
+}
+
 /// Current resident set size in bytes (Linux `/proc/self/status`), and the
 /// peak (`VmHWM`). Returns 0 if unavailable (non-Linux).
 pub fn current_rss_bytes() -> u64 {
@@ -327,6 +502,41 @@ mod tests {
         h.reset();
         assert_eq!(h.count(), 0);
         assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn replication_gauges_track_lag_and_role() {
+        let g = ReplicationGauges::default();
+        assert_eq!(g.role(), ReplicationRole::Single);
+        assert_eq!(g.apply_staleness_ms(), 0.0, "staleness before any apply");
+        g.set_role(ReplicationRole::Follower);
+        g.set_leader_hint(Some("127.0.0.1:7777".into()));
+        g.note_received(5);
+        g.note_received(8);
+        g.note_applied(5);
+        assert_eq!(g.last_received_seq(), 8);
+        assert_eq!(g.last_applied_seq(), 5);
+        assert_eq!(g.lag_records(), 3);
+        assert!(g.apply_staleness_ms() >= 0.0);
+        let j = g.to_json(10);
+        assert_eq!(j.get("role").as_str(), Some("follower"));
+        assert_eq!(j.get("leader").as_str(), Some("127.0.0.1:7777"));
+        assert_eq!(j.get("wal_last_seq").as_u64(), Some(10));
+        // Lag vs the freshest known seq: max(wal 10, received 8) - applied 5.
+        assert_eq!(j.get("replication_lag_records").as_u64(), Some(5));
+        // Stale gauges never go backwards.
+        g.note_applied(4);
+        assert_eq!(g.last_applied_seq(), 5);
+        // Leaders report zero lag regardless of gauges.
+        g.set_role(ReplicationRole::Leader);
+        g.note_shipped(7);
+        g.subscriber_connected();
+        let j = g.to_json(12);
+        assert_eq!(j.get("replication_lag_records").as_u64(), Some(0));
+        assert_eq!(j.get("records_shipped").as_u64(), Some(7));
+        assert_eq!(j.get("subscribers").as_u64(), Some(1));
+        g.subscriber_disconnected();
+        assert_eq!(g.subscribers(), 0);
     }
 
     #[test]

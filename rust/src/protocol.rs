@@ -42,6 +42,7 @@
 //! | `UNAVAILABLE`       | op unsupported in this server state (e.g. `checkpoint` without a WAL), or server shutting down |
 //! | `DEADLINE_EXCEEDED` | the request's deadline expired before execution  |
 //! | `OVERLOADED`        | shed by admission control (queue or connection cap) |
+//! | `NOT_LEADER`        | mutation sent to a read-only replica; the message carries a `leader=<addr>` hint |
 //!
 //! Validation happens at decode time: `k = 0` or `k >` [`MAX_K`] is a
 //! `BAD_REQUEST` before the index is ever touched.
@@ -73,6 +74,7 @@ pub enum ErrorCode {
     Unavailable,
     DeadlineExceeded,
     Overloaded,
+    NotLeader,
 }
 
 impl ErrorCode {
@@ -84,6 +86,7 @@ impl ErrorCode {
             ErrorCode::Unavailable => "UNAVAILABLE",
             ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
             ErrorCode::Overloaded => "OVERLOADED",
+            ErrorCode::NotLeader => "NOT_LEADER",
         }
     }
 
@@ -95,6 +98,7 @@ impl ErrorCode {
             "UNAVAILABLE" => Some(ErrorCode::Unavailable),
             "DEADLINE_EXCEEDED" => Some(ErrorCode::DeadlineExceeded),
             "OVERLOADED" => Some(ErrorCode::Overloaded),
+            "NOT_LEADER" => Some(ErrorCode::NotLeader),
             _ => None,
         }
     }
@@ -196,6 +200,17 @@ pub mod wire {
     pub fn refresh_tables() -> Json {
         Json::obj(vec![("op", Json::str("refresh_tables"))])
     }
+
+    pub fn wal_subscribe(from_seq: u64) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("wal_subscribe")),
+            ("from_seq", Json::u64(from_seq)),
+        ])
+    }
+
+    pub fn promote() -> Json {
+        Json::obj(vec![("op", Json::str("promote"))])
+    }
 }
 
 // ---------- requests ----------
@@ -216,6 +231,15 @@ pub enum Request {
     /// WAL-internal marker for a periodic table reload (§4.3). Never
     /// accepted from the network; decoded only during WAL replay.
     RefreshTables,
+    /// Replication: subscribe to the leader's committed WAL stream
+    /// starting at `from_seq` (`0` = "I have nothing, bootstrap me").
+    /// Takes over the connection — after the header response the socket
+    /// carries raw WAL frames (see docs/REPLICATION.md), so no further
+    /// requests are read from it.
+    WalSubscribe { from_seq: u64 },
+    /// Replication: promote a follower to leader (failover). Answered
+    /// with the node's durable WAL seq in the `checkpoint` shape.
+    Promote,
 }
 
 impl Request {
@@ -232,6 +256,8 @@ impl Request {
             Request::Checkpoint => "checkpoint",
             Request::Stats => "stats",
             Request::RefreshTables => "refresh_tables",
+            Request::WalSubscribe { .. } => "wal_subscribe",
+            Request::Promote => "promote",
         }
     }
 
@@ -272,6 +298,8 @@ impl Request {
             Request::Checkpoint => wire::checkpoint(),
             Request::Stats => wire::stats(),
             Request::RefreshTables => wire::refresh_tables(),
+            Request::WalSubscribe { from_seq } => wire::wal_subscribe(*from_seq),
+            Request::Promote => wire::promote(),
         }
     }
 
@@ -312,6 +340,10 @@ impl Request {
             "checkpoint" => Ok(Request::Checkpoint),
             "stats" => Ok(Request::Stats),
             "refresh_tables" => Ok(Request::RefreshTables),
+            "wal_subscribe" => Ok(Request::WalSubscribe {
+                from_seq: decode_id(j.get("from_seq"), "from_seq")?,
+            }),
+            "promote" => Ok(Request::Promote),
             other => Err(ProtocolError::bad_request(format!("unknown op '{other}'"))),
         }
     }
@@ -650,6 +682,9 @@ mod tests {
             Request::Checkpoint,
             Request::Stats,
             Request::RefreshTables,
+            Request::WalSubscribe { from_seq: 0 },
+            Request::WalSubscribe { from_seq: 917 },
+            Request::Promote,
         ];
         for r in reqs {
             let wire = r.to_wire();
@@ -770,6 +805,7 @@ mod tests {
             ErrorCode::Unavailable,
             ErrorCode::DeadlineExceeded,
             ErrorCode::Overloaded,
+            ErrorCode::NotLeader,
         ] {
             assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
         }

@@ -1,0 +1,449 @@
+//! Follower side: bootstrap or recover local state, tail the leader's
+//! WAL stream, apply + ack each record, reconnect on failure, and stop
+//! cleanly when promoted.
+//!
+//! A follower is a durable node like any other: it persists the leader's
+//! frames verbatim into its own `--wal-dir` (so its log is byte-identical
+//! to the leader's prefix), applies them through the crash-recovery
+//! replay path, and runs its own checkpointer. Restart is plain
+//! [`wal::recover`] followed by "subscribe at my last seq + 1".
+//!
+//! The apply loop mirrors the coordinator's own log-before-apply
+//! critical section: the WAL writer lock is held across append + apply,
+//! so a checkpoint taken concurrently always records a `(store, seq)`
+//! pair that is actually consistent.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::wal::{self, FrameError};
+use crate::coordinator::DynamicGus;
+use crate::protocol::{wire, ErrorCode, Response};
+use crate::util::json::Json;
+
+use super::NodeReplication;
+
+/// How a follower node is started (see `gus follow`).
+pub struct FollowerOpts {
+    /// Leader address to subscribe to first.
+    pub leader: String,
+    /// Other node addresses, cycled to rediscover the leader after a
+    /// failover (the current hint is always tried first).
+    pub peers: Vec<String>,
+    /// This follower's own durability directory.
+    pub wal_dir: PathBuf,
+    /// Apply/query thread count.
+    pub threads: usize,
+    /// Followers that must ack this node's own mutations if it is ever
+    /// promoted (semi-sync; 0 = async).
+    pub ack_replicas: usize,
+}
+
+/// Socket read timeout while tailing. The leader heartbeats every
+/// [`super::leader::HEARTBEAT`], so this only fires when the leader is
+/// dead or the link has stalled — either way, reconnect.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Pause between reconnect cycles over the peer list.
+const RECONNECT_PAUSE: Duration = Duration::from_secs(1);
+
+/// Connect timeout per subscription attempt.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Reconnect cycles during initial bootstrap before giving up (the
+/// leader may still be starting); one cycle per second.
+const BOOTSTRAP_CYCLES: usize = 60;
+
+/// One established subscription stream, positioned at the first byte
+/// after the header line.
+struct Stream {
+    /// Read side (header already consumed; files/frames follow).
+    reader: BufReader<TcpStream>,
+    /// Write side (acks go here).
+    sock: TcpStream,
+    /// First WAL seq the frame stream will carry.
+    resume_seq: u64,
+    /// `(name, bytes)` files to receive before the frames (snapshot
+    /// bootstrap); empty in tail mode.
+    files: Vec<(String, u64)>,
+    snapshot: bool,
+}
+
+/// Outcome of one `wal_subscribe` attempt against one address.
+enum Attempt {
+    Stream(Stream),
+    /// The node answered `NOT_LEADER`, possibly with a better address.
+    NotLeader(Option<String>),
+    /// Connect/handshake failure (node down, timeout, bad header).
+    Failed(String),
+}
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+    let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    Ok(stream)
+}
+
+/// Extract the leader hint from a `not leader; leader=<addr>` message.
+fn leader_hint(message: &str) -> Option<String> {
+    let (_, addr) = message.split_once("leader=")?;
+    let addr = addr.trim();
+    (!addr.is_empty()).then(|| addr.to_string())
+}
+
+/// Try one `wal_subscribe {from_seq}` handshake against `addr`.
+fn try_subscribe(addr: &str, from_seq: u64) -> Attempt {
+    let mut sock = match connect(addr) {
+        Ok(s) => s,
+        Err(e) => return Attempt::Failed(format!("{e:#}")),
+    };
+    let mut reader = match sock.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => return Attempt::Failed(format!("cloning socket: {e}")),
+    };
+    let mut line = wire::wal_subscribe(from_seq).dump();
+    line.push('\n');
+    if let Err(e) = sock.write_all(line.as_bytes()) {
+        return Attempt::Failed(format!("sending wal_subscribe: {e}"));
+    }
+    let mut header = String::new();
+    match reader.read_line(&mut header) {
+        Ok(0) => return Attempt::Failed("connection closed before header".into()),
+        Ok(_) => {}
+        Err(e) => return Attempt::Failed(format!("reading header: {e}")),
+    }
+    let j = match Json::parse(header.trim()) {
+        Ok(j) => j,
+        Err(e) => return Attempt::Failed(format!("bad subscription header: {e}")),
+    };
+    if !j.get("error").is_null() {
+        return match Response::from_wire(&j) {
+            Ok((_, Response::Error { code: ErrorCode::NotLeader, message })) => {
+                Attempt::NotLeader(leader_hint(&message))
+            }
+            Ok((_, Response::Error { code, message })) => {
+                Attempt::Failed(format!("subscription refused [{code}]: {message}"))
+            }
+            _ => Attempt::Failed("unintelligible subscription refusal".into()),
+        };
+    }
+    let mode = j.get("mode").as_str().unwrap_or("").to_string();
+    let Some(resume_seq) = j.get("resume_seq").as_u64() else {
+        return Attempt::Failed("subscription header missing resume_seq".into());
+    };
+    let mut files = Vec::new();
+    if let Json::Arr(listed) = j.get("files") {
+        for f in listed {
+            let name = f.get("name").as_str().unwrap_or("").to_string();
+            let Some(bytes) = f.get("bytes").as_u64() else {
+                return Attempt::Failed("subscription header file missing byte count".into());
+            };
+            // The names land in our local state directory: refuse
+            // anything that could escape it.
+            if name.is_empty() || name.contains('/') || name.contains('\\') || name.contains("..")
+            {
+                return Attempt::Failed(format!("unsafe snapshot file name {name:?}"));
+            }
+            files.push((name, bytes));
+        }
+    }
+    Attempt::Stream(Stream {
+        reader,
+        sock,
+        resume_seq,
+        files,
+        snapshot: mode == "snapshot",
+    })
+}
+
+/// One full cycle over the candidate addresses (current hint first, then
+/// the configured peers, following any fresher hints the nodes return).
+/// `from_seq` is re-evaluated per attempt via the closure so reconnects
+/// always resume at the current durable seq.
+fn subscribe_cycle(
+    hint: &mut Option<String>,
+    primary: &str,
+    peers: &[String],
+    from_seq: impl Fn() -> u64,
+) -> Result<(String, Stream), String> {
+    let mut queue: Vec<String> = Vec::new();
+    if let Some(h) = hint.clone() {
+        queue.push(h);
+    }
+    queue.push(primary.to_string());
+    queue.extend(peers.iter().cloned());
+    let mut tried: Vec<String> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    while let Some(addr) = queue.iter().find(|a| !tried.contains(a)).cloned() {
+        tried.push(addr.clone());
+        match try_subscribe(&addr, from_seq()) {
+            Attempt::Stream(s) => {
+                *hint = Some(addr.clone());
+                return Ok((addr, s));
+            }
+            Attempt::NotLeader(h) => {
+                failures.push(format!("{addr}: not leader"));
+                if let Some(h) = h {
+                    // Fresher knowledge than our static list: try it next.
+                    queue.insert(0, h);
+                }
+            }
+            Attempt::Failed(e) => failures.push(format!("{addr}: {e}")),
+        }
+    }
+    Err(failures.join("; "))
+}
+
+/// Receive the bootstrap files into `dir` (created if needed), in listed
+/// order — the leader lists the corpus before `snapshot.json`, so a
+/// crash mid-bootstrap leaves nothing recovery would mistake for state.
+fn receive_files(reader: &mut BufReader<TcpStream>, dir: &Path, files: &[(String, u64)]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for (name, bytes) in files {
+        let mut data = vec![
+            0u8;
+            usize::try_from(*bytes).map_err(|_| anyhow!("snapshot file {name} too large"))?
+        ];
+        reader
+            .read_exact(&mut data)
+            .with_context(|| format!("receiving snapshot file {name} ({bytes} bytes)"))?;
+        std::fs::write(dir.join(name), data)
+            .with_context(|| format!("writing snapshot file {name}"))?;
+    }
+    Ok(())
+}
+
+/// Remove every piece of service state in `dir` (before a re-bootstrap).
+fn wipe_state(dir: &Path) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(anyhow!(e).context(format!("listing {}", dir.display()))),
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let stale = name == wal::WAL_FILE
+            || name == wal::META_FILE
+            || name == crate::coordinator::snapshot::SNAPSHOT_META
+            || name == "points.jsonl"
+            || (name.starts_with("points-") && name.ends_with(".jsonl"))
+            || name.ends_with(".tmp");
+        if stale {
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("removing {}", entry.path().display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Start a follower: bootstrap (or recover) local state from the leader,
+/// spawn the follow thread, and return the service + replication hooks
+/// for the caller to serve with. Blocks until the node has a consistent
+/// local corpus and a live subscription.
+pub fn start_follower(opts: FollowerOpts) -> Result<(Arc<DynamicGus>, Arc<NodeReplication>)> {
+    // Recover whatever the previous incarnation left.
+    let mut local: Option<DynamicGus> = if wal::has_state(&opts.wal_dir) {
+        let rec = wal::recover(&opts.wal_dir, opts.threads)?;
+        eprintln!(
+            "[gus] follower recovered {} points (+{} WAL records) from {}",
+            rec.snapshot_points,
+            rec.replayed,
+            opts.wal_dir.display()
+        );
+        Some(rec.gus)
+    } else {
+        None
+    };
+
+    // First subscription; may bootstrap from a snapshot. Retries while
+    // the leader is still starting up.
+    let mut hint: Option<String> = None;
+    let mut established: Option<(String, Stream)> = None;
+    for cycle in 0..BOOTSTRAP_CYCLES {
+        if cycle > 0 {
+            std::thread::sleep(RECONNECT_PAUSE);
+        }
+        let from = || local.as_ref().map(|g| g.wal_seq() + 1).unwrap_or(0);
+        match subscribe_cycle(&mut hint, &opts.leader, &opts.peers, from) {
+            Ok(ok) => {
+                established = Some(ok);
+                break;
+            }
+            Err(why) => eprintln!("[gus] follower cannot subscribe yet: {why}"),
+        }
+    }
+    let Some((leader_addr, mut stream)) = established else {
+        bail!(
+            "could not subscribe to a leader at {} after {BOOTSTRAP_CYCLES} attempts",
+            opts.leader
+        );
+    };
+
+    if stream.snapshot {
+        // (Re-)bootstrap: replace whatever we had with the leader's
+        // checkpoint. Only possible before the server starts — the
+        // service object is rebuilt from disk.
+        drop(local.take());
+        wipe_state(&opts.wal_dir)?;
+        receive_files(&mut stream.reader, &opts.wal_dir, &stream.files)?;
+        let rec = wal::recover(&opts.wal_dir, opts.threads)
+            .context("recovering from the shipped snapshot")?;
+        eprintln!(
+            "[gus] follower bootstrapped {} points from {leader_addr}",
+            rec.snapshot_points
+        );
+        local = Some(rec.gus);
+    }
+    let gus = Arc::new(local.ok_or_else(|| {
+        anyhow!("leader answered tail mode but this follower has no local state")
+    })?);
+    // Seed the stream gauges with the durable seq: everything up to here
+    // is already applied (via snapshot or recovery), so `stats` reports
+    // lag 0 instead of a bogus backlog until the first frame arrives.
+    let durable = gus.wal_seq();
+    gus.metrics.replication.note_received(durable);
+    gus.metrics.replication.note_applied(durable);
+    let expect = durable + 1;
+    if stream.resume_seq != expect {
+        bail!(
+            "subscription resumes at seq {} but local state expects {expect}",
+            stream.resume_seq
+        );
+    }
+
+    let rep = NodeReplication::follower(Arc::clone(&gus), leader_addr.clone(), opts.ack_replicas);
+    let thread_rep = Arc::clone(&rep);
+    let primary = opts.leader.clone();
+    let peers = opts.peers.clone();
+    let threads = opts.threads;
+    std::thread::Builder::new()
+        .name("gus-follower".into())
+        .spawn(move || follow_loop(thread_rep, stream, primary, peers, threads))
+        .context("spawning follow loop")?;
+    Ok((gus, rep))
+}
+
+/// Why the apply loop stopped.
+enum StreamEnd {
+    /// Promotion requested: stop applying for good.
+    Stop,
+    /// Connection lost / stream ended: reconnect and resume.
+    Disconnect,
+}
+
+/// Tail + apply until promoted, reconnecting (and re-resolving the
+/// leader) whenever the stream drops.
+fn follow_loop(
+    rep: Arc<NodeReplication>,
+    stream: Stream,
+    primary: String,
+    peers: Vec<String>,
+    threads: usize,
+) {
+    let mut hint: Option<String> = rep.gus().metrics.replication.leader_hint();
+    let mut conn = Some(stream);
+    while !rep.stop_requested() {
+        let stream = match conn.take() {
+            Some(s) => s,
+            None => {
+                let from = {
+                    let gus = Arc::clone(rep.gus());
+                    move || gus.wal_seq() + 1
+                };
+                match subscribe_cycle(&mut hint, &primary, &peers, from) {
+                    Ok((addr, s)) => {
+                        if s.snapshot {
+                            // Mid-life re-bootstrap is impossible: the
+                            // service object is shared with the server.
+                            // Keep serving stale reads, keep retrying, and
+                            // tell the operator what to do.
+                            eprintln!(
+                                "[gus] leader retention passed this follower; it can no \
+                                 longer catch up from the log — stop it, remove its \
+                                 --wal-dir, and restart to re-bootstrap"
+                            );
+                            std::thread::sleep(RECONNECT_PAUSE);
+                            continue;
+                        }
+                        rep.note_leader(&addr);
+                        eprintln!("[gus] follower resumed from {addr} at seq {}", s.resume_seq);
+                        s
+                    }
+                    Err(why) => {
+                        eprintln!("[gus] follower reconnect failed: {why}");
+                        std::thread::sleep(RECONNECT_PAUSE);
+                        continue;
+                    }
+                }
+            }
+        };
+        rep.set_streaming(true);
+        let end = apply_stream(&rep, stream, threads);
+        rep.set_streaming(false);
+        match end {
+            Ok(StreamEnd::Stop) => break,
+            Ok(StreamEnd::Disconnect) => {}
+            Err(e) => eprintln!("[gus] follower stream error: {e:#}"),
+        }
+    }
+    // A no-op unless a promotion is waiting on the flag.
+    rep.set_streaming(false);
+    eprintln!("[gus] follower stream stopped");
+}
+
+/// Apply one subscription stream: for each frame, append the leader's
+/// bytes verbatim, apply through the recovery path, then ack. Heartbeats
+/// (seq 0) are progress markers only.
+fn apply_stream(rep: &NodeReplication, stream: Stream, threads: usize) -> Result<StreamEnd> {
+    let gus = rep.gus();
+    let handle = gus
+        .wal()
+        .ok_or_else(|| anyhow!("follower service has no WAL attached"))?;
+    let Stream { mut reader, mut sock, .. } = stream;
+    loop {
+        if rep.stop_requested() {
+            return Ok(StreamEnd::Stop);
+        }
+        match wal::read_frame_raw(&mut reader) {
+            Ok(Some((0, _))) => continue, // heartbeat
+            Ok(Some((seq, frame))) => {
+                let payload = wal::frame_payload(&frame);
+                let text = std::str::from_utf8(payload)
+                    .map_err(|_| anyhow!("non-UTF-8 WAL payload at seq {seq}"))?;
+                let json = Json::parse(text)
+                    .map_err(|e| anyhow!("undecodable WAL payload at seq {seq}: {e}"))?;
+                gus.metrics.replication.note_received(seq);
+                {
+                    // Log-before-apply under the writer lock, exactly like
+                    // the leader's own mutation path: checkpoints see a
+                    // consistent (store, seq) pair.
+                    let mut writer = handle.lock_writer();
+                    writer.append_raw(seq, payload)?;
+                    gus.apply_logged(&json, threads)
+                        .with_context(|| format!("applying replicated record seq={seq}"))
+                        .map(|n| handle.add_pending(n))?;
+                }
+                gus.metrics.replication.note_applied(seq);
+                let ack = format!("{{\"ack\":{seq}}}\n");
+                if sock.write_all(ack.as_bytes()).is_err() {
+                    return Ok(StreamEnd::Disconnect);
+                }
+            }
+            Ok(None) | Err(FrameError::Torn) => return Ok(StreamEnd::Disconnect),
+            Err(FrameError::Io(_)) => return Ok(StreamEnd::Disconnect),
+        }
+    }
+}

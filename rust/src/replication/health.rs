@@ -1,0 +1,161 @@
+//! Router-side health monitor and automatic failover.
+//!
+//! A single thread probes every target's `stats` each interval and
+//! reads the `replication` section ([`crate::metrics::ReplicationGauges`]):
+//! whichever live node reports role `leader` (or `single` — a
+//! non-replicating node behind the router still serves everything) is
+//! adopted as the forwarding target. After [`RouterOpts::fail_threshold`]
+//! consecutive leaderless rounds, the monitor promotes the live
+//! follower with the highest durable `wal_last_seq` — by the prefix
+//! property of in-order WAL shipping, that follower holds every record
+//! any follower acked, so no acknowledged mutation is lost.
+//!
+//! [`RouterOpts::fail_threshold`]: super::router::RouterOpts
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::client::GusClient;
+
+use super::router::RouterState;
+
+/// Bounded connect per probe: a dead node costs this, not a TCP
+/// handshake timeout.
+const PROBE_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// A probe that takes longer than this is counted as down.
+const PROBE_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Deadline attached to probe `stats` calls (server-side shedding).
+const PROBE_DEADLINE_MS: u64 = 1_000;
+
+/// Promotion waits for the follower to drain its in-flight stream
+/// (bounded by the node's own 15s promote handshake timeout).
+const PROMOTE_READ_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// One probe round's view of a target.
+struct Probe {
+    addr: String,
+    role: String,
+    wal_last_seq: u64,
+}
+
+/// Start the monitor thread. It never exits — the router owns it for
+/// the life of the process.
+pub(crate) fn spawn_monitor(state: Arc<RouterState>, interval: Duration, threshold: u32) {
+    std::thread::Builder::new()
+        .name("gus-router-health".into())
+        .spawn(move || monitor_loop(&state, interval, threshold))
+        .expect("spawning router health monitor");
+}
+
+fn monitor_loop(state: &RouterState, interval: Duration, threshold: u32) {
+    let mut leaderless_rounds: u32 = 0;
+    loop {
+        std::thread::sleep(interval);
+        let probes: Vec<Probe> =
+            state.targets.iter().filter_map(|addr| probe_target(addr)).collect();
+        if let Some(leader) = live_leader(state, &probes) {
+            state.set_leader(&leader);
+            leaderless_rounds = 0;
+            continue;
+        }
+        leaderless_rounds += 1;
+        if leaderless_rounds < threshold {
+            continue;
+        }
+        // The cluster has been leaderless for `threshold` rounds: fail
+        // over. Reset the counter either way so a failed promotion is
+        // retried only after another full threshold of rounds (promotion
+        // is idempotent, but hammering a struggling node helps nothing).
+        leaderless_rounds = 0;
+        state.clear_leader();
+        let Some(best) = best_follower(&probes) else {
+            eprintln!("[gus-router] no leader and no live follower to promote");
+            continue;
+        };
+        eprintln!(
+            "[gus-router] no leader for {threshold} rounds; promoting {} (wal_last_seq={})",
+            best.addr, best.wal_last_seq
+        );
+        match promote(&best.addr) {
+            Ok(seq) => {
+                eprintln!("[gus-router] promoted {} at seq {seq}", best.addr);
+                state.set_leader(&best.addr);
+            }
+            Err(e) => eprintln!("[gus-router] promoting {} failed: {e}", best.addr),
+        }
+    }
+}
+
+/// The live leader this round, preferring the currently adopted one
+/// (avoids flapping between two nodes that both claim leadership during
+/// a handover window).
+fn live_leader(state: &RouterState, probes: &[Probe]) -> Option<String> {
+    let leads = |p: &Probe| p.role == "leader" || p.role == "single";
+    if let Some(cur) = state.leader() {
+        if probes.iter().any(|p| p.addr == cur && leads(p)) {
+            return Some(cur);
+        }
+    }
+    probes.iter().find(|p| leads(p)).map(|p| p.addr.clone())
+}
+
+/// The promotion candidate: the live follower with the most durable WAL
+/// (ties broken toward the lexicographically smallest address, so
+/// concurrent monitors would pick the same node).
+fn best_follower(probes: &[Probe]) -> Option<&Probe> {
+    probes
+        .iter()
+        .filter(|p| p.role == "follower")
+        .max_by_key(|p| (p.wal_last_seq, std::cmp::Reverse(p.addr.clone())))
+}
+
+/// One bounded `stats` probe. `None` means down (connect/read failed or
+/// the response was not parseable).
+fn probe_target(addr: &str) -> Option<Probe> {
+    let mut c = GusClient::connect_timeout(addr, PROBE_CONNECT_TIMEOUT).ok()?;
+    c.set_read_timeout(Some(PROBE_READ_TIMEOUT)).ok()?;
+    c.set_deadline_ms(Some(PROBE_DEADLINE_MS));
+    let stats = c.stats().ok()?;
+    let rep = stats.get("replication");
+    Some(Probe {
+        addr: addr.to_string(),
+        role: rep.get("role").as_str().unwrap_or("").to_string(),
+        wal_last_seq: rep.get("wal_last_seq").as_u64().unwrap_or(0),
+    })
+}
+
+/// Promote a follower (its own read path waits out the stream-drain
+/// handshake, so this read timeout is generous).
+fn promote(addr: &str) -> anyhow::Result<u64> {
+    let mut c = GusClient::connect_timeout(addr, PROBE_CONNECT_TIMEOUT)?;
+    c.set_read_timeout(Some(PROMOTE_READ_TIMEOUT))?;
+    c.promote()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(addr: &str, role: &str, seq: u64) -> Probe {
+        Probe { addr: addr.to_string(), role: role.to_string(), wal_last_seq: seq }
+    }
+
+    #[test]
+    fn best_follower_prefers_highest_seq_then_lowest_addr() {
+        let probes = vec![
+            probe("c:1", "follower", 10),
+            probe("a:1", "follower", 12),
+            probe("b:1", "follower", 12),
+        ];
+        assert_eq!(best_follower(&probes).unwrap().addr, "a:1");
+    }
+
+    #[test]
+    fn best_follower_ignores_non_followers() {
+        let probes = vec![probe("a:1", "leader", 99), probe("b:1", "follower", 1)];
+        assert_eq!(best_follower(&probes).unwrap().addr, "b:1");
+        assert!(best_follower(&[probe("a:1", "single", 5)]).is_none());
+    }
+}

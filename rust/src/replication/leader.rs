@@ -1,0 +1,289 @@
+//! Leader side of WAL shipping: serve one `wal_subscribe` stream.
+//!
+//! A subscription takes over its TCP connection. The leader answers with
+//! one JSON header line, then raw bytes:
+//!
+//! ```text
+//! {"mode":"tail","resume_seq":S,"files":[]}\n
+//! <WAL frames, byte-identical to the on-disk log, from seq S>
+//! ```
+//!
+//! or, when `from_seq` predates the retained log tail (or is 0 — a fresh
+//! follower), a snapshot bootstrap:
+//!
+//! ```text
+//! {"mode":"snapshot","resume_seq":S,"files":[{"name":..,"bytes":N},..]}\n
+//! <each file's N raw bytes, in listed order>
+//! <WAL frames from seq S>
+//! ```
+//!
+//! The follower writes `{"ack":seq}` lines back on the same socket after
+//! each durable append + apply; a reader thread feeds them into the
+//! leader's ack table (the semi-sync gate,
+//! [`super::NodeReplication::ack_gate`]).
+//!
+//! When the stream is idle the leader ships a heartbeat frame (seq 0)
+//! every [`HEARTBEAT`], so a follower can tell "leader idle" from
+//! "leader dead" with nothing but a socket read timeout.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::snapshot::SNAPSHOT_META;
+use crate::coordinator::wal::{self, TailSignal, WalHandle, WalTailer};
+use crate::coordinator::DynamicGus;
+use crate::protocol::{ErrorCode, Response};
+use crate::util::json::Json;
+
+use super::NodeReplication;
+
+/// Idle-stream heartbeat cadence (a seq-0 frame; never appended by the
+/// follower). Keeps the binary stream self-delimiting — no JSON can be
+/// injected mid-stream.
+pub(crate) const HEARTBEAT: Duration = Duration::from_millis(500);
+
+/// Ship at most this many bytes per write (bounds per-iteration memory).
+const MAX_CHUNK_BYTES: usize = 1 << 20;
+
+/// A stalled follower is cut off after this long; it reconnects and
+/// resumes from its own durable seq, so nothing is lost.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Attempts to pair a snapshot read with a tail start before giving up
+/// (each retry observes a newer checkpoint).
+const SNAPSHOT_RETRIES: usize = 10;
+
+/// The heartbeat frame: seq 0 is below every real record (records start
+/// at 1), so followers recognize and skip it.
+pub(crate) fn heartbeat_frame() -> Vec<u8> {
+    wal::encode_frame(0, b"hb")
+}
+
+fn write_json_line(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    let mut line = j.dump();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+/// Answer a `wal_subscribe` that landed on a follower: `NOT_LEADER` with
+/// the hint, then hang up (followers do not chain-replicate).
+pub(crate) fn refuse_not_leader(mut stream: TcpStream, id: Option<u64>, hint: &str) {
+    let resp = Response::error(ErrorCode::NotLeader, format!("not leader; leader={hint}"));
+    let _ = write_json_line(&mut stream, &resp.to_wire(id));
+}
+
+/// The subscription header line. `files` ship before the WAL frames, in
+/// listed order, as raw bytes of the listed lengths.
+fn header_json(mode: &str, resume_seq: u64, files: &[(String, Vec<u8>)]) -> Json {
+    let listed = files
+        .iter()
+        .map(|(name, bytes)| {
+            Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("bytes", Json::u64(bytes.len() as u64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("resume_seq", Json::u64(resume_seq)),
+        ("files", Json::arr(listed)),
+    ])
+}
+
+/// Pick the snapshot files + the tail start for a bootstrap. Retries
+/// around concurrent checkpoints: a checkpoint can replace the points
+/// file or raise the log floor between our reads, in which case the next
+/// attempt simply reads the newer (strictly more complete) checkpoint.
+fn snapshot_bootstrap(
+    gus: &DynamicGus,
+    handle: &WalHandle,
+    signal: &TailSignal,
+) -> Result<(Json, Vec<(String, Vec<u8>)>, WalTailer)> {
+    let dir = handle.dir();
+    for attempt in 0..SNAPSHOT_RETRIES {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        if !dir.join(SNAPSHOT_META).exists() {
+            // WAL-only incarnation (recovered without a checkpoint):
+            // force one so there is a corpus to ship.
+            gus.checkpoint().context("forcing a checkpoint for snapshot bootstrap")?;
+        }
+        let Ok(meta_bytes) = std::fs::read(dir.join(SNAPSHOT_META)) else {
+            continue;
+        };
+        let Ok(meta_text) = std::str::from_utf8(&meta_bytes).map(str::to_owned) else {
+            continue;
+        };
+        let Ok(meta) = Json::parse(&meta_text) else {
+            continue;
+        };
+        let last_seq = meta.get("last_seq").as_u64().unwrap_or(0);
+        let points_file = meta
+            .get("points_file")
+            .as_str()
+            .unwrap_or("points.jsonl")
+            .to_string();
+        let Ok(points_bytes) = std::fs::read(dir.join(&points_file)) else {
+            continue; // replaced by a newer checkpoint mid-read
+        };
+        let state = signal.snapshot();
+        let Ok(tailer) = WalTailer::new(dir, last_seq + 1, state) else {
+            continue; // a newer checkpoint raised the floor past this one
+        };
+        // Points before metadata: a follower crash mid-bootstrap leaves
+        // no snapshot.json, which recovery treats as "nothing here" and
+        // the next start re-bootstraps cleanly.
+        let files = vec![(points_file, points_bytes), (SNAPSHOT_META.to_string(), meta_bytes)];
+        let header = header_json("snapshot", last_seq + 1, &files);
+        return Ok((header, files, tailer));
+    }
+    bail!("snapshot bootstrap kept racing checkpoints ({SNAPSHOT_RETRIES} attempts)")
+}
+
+/// Serve one subscription stream until the connection drops. Runs on the
+/// connection's reader thread (handed over by the server); spawns one
+/// ack-reader thread for the back-channel.
+pub(crate) fn serve_subscription(
+    rep: &NodeReplication,
+    from_seq: u64,
+    id: Option<u64>,
+    reader: BufReader<TcpStream>,
+    mut stream: TcpStream,
+) -> Result<()> {
+    let gus = rep.gus().as_ref();
+    let Some(handle) = gus.wal() else {
+        let resp = Response::error(
+            ErrorCode::BadRequest,
+            "replication requires durability (serve with --wal-dir)",
+        );
+        let _ = write_json_line(&mut stream, &resp.to_wire(id));
+        return Ok(());
+    };
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    if from_seq > handle.seq() + 1 {
+        // A subscriber ahead of its leader means diverged history (e.g. a
+        // deposed leader trying to follow without re-bootstrapping).
+        let resp = Response::error(
+            ErrorCode::BadRequest,
+            format!(
+                "subscriber resumes at seq {from_seq} but this leader is at seq {}; \
+                 diverged history — re-bootstrap the follower (wipe its --wal-dir)",
+                handle.seq()
+            ),
+        );
+        let _ = write_json_line(&mut stream, &resp.to_wire(id));
+        return Ok(());
+    }
+    let signal = handle.tail_signal();
+    let state = signal.snapshot();
+    let (mut header, files, mut tailer) = if from_seq == 0 || from_seq <= state.floor_seq {
+        snapshot_bootstrap(gus, handle, &signal)?
+    } else {
+        let tailer = WalTailer::new(handle.dir(), from_seq, state)?;
+        (header_json("tail", from_seq, &[]), Vec::new(), tailer)
+    };
+    if let Some(id) = id {
+        // Echo the envelope so pipelined clients can correlate.
+        header = crate::protocol::envelope_to_wire(id, None, header);
+    }
+    write_json_line(&mut stream, &header)?;
+    for (_name, bytes) in &files {
+        stream.write_all(bytes)?;
+    }
+    drop(files);
+
+    // Back-channel: `{"ack":seq}` lines from the follower feed the
+    // semi-sync gate. A scoped reader thread borrows `rep`; when the
+    // shipping loop ends we shut the socket down so the reader unblocks
+    // and the scope can join it.
+    let sub = rep.register_subscriber();
+    let _unreg = SubscriberGuard { rep, sub };
+    let hb = heartbeat_frame();
+    std::thread::scope(|s| -> Result<()> {
+        let acks = std::thread::Builder::new()
+            .name("gus-repl-acks".into())
+            .spawn_scoped(s, move || ack_reader(rep, sub, reader))
+            .context("spawning replication ack reader")?;
+        let shipped = ship_frames(gus, &signal, &mut tailer, &mut stream, &hb);
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+        let _ = acks.join();
+        shipped
+    })
+}
+
+/// Ship frames until the connection drops (the only exit); heartbeat
+/// when idle so the follower's read timeout only fires on a dead leader.
+fn ship_frames(
+    gus: &DynamicGus,
+    signal: &TailSignal,
+    tailer: &mut WalTailer,
+    stream: &mut TcpStream,
+    hb: &[u8],
+) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::with_capacity(MAX_CHUNK_BYTES);
+    loop {
+        let state = signal.snapshot();
+        buf.clear();
+        let shipped = tailer.fill(state, &mut buf, MAX_CHUNK_BYTES)?;
+        if shipped == 0 {
+            let newer = signal.wait_change(state, HEARTBEAT);
+            if newer == state {
+                stream.write_all(hb)?;
+            }
+            continue;
+        }
+        stream.write_all(&buf)?;
+        gus.metrics.replication.note_shipped(shipped as u64);
+    }
+}
+
+/// Removes the subscription from the ack table when the stream ends,
+/// however it ends.
+struct SubscriberGuard<'a> {
+    rep: &'a NodeReplication,
+    sub: u64,
+}
+
+impl Drop for SubscriberGuard<'_> {
+    fn drop(&mut self) {
+        self.rep.unregister_subscriber(self.sub);
+    }
+}
+
+/// Read `{"ack":seq}` lines until the socket closes, feeding the ack
+/// table. Tolerates read timeouts (the server may have armed one on the
+/// connection) by retrying; everything else ends the thread.
+fn ack_reader(rep: &NodeReplication, sub: u64, mut reader: BufReader<TcpStream>) {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(trimmed) else {
+            return; // garbage on the back-channel: drop the stream's acks
+        };
+        if let Some(seq) = j.get("ack").as_u64() {
+            rep.record_ack(sub, seq);
+        }
+    }
+}

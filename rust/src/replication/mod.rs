@@ -1,0 +1,382 @@
+//! Multi-node serving: WAL-shipping replication and failover.
+//!
+//! One leader accepts mutations and streams its write-ahead log to any
+//! number of followers; followers persist the stream verbatim, apply it
+//! through the same replay path as crash recovery, and serve read-only
+//! queries. A scatter/gather router ([`router`]) in front of the nodes
+//! forwards mutations to the leader, fans reads out across replicas, and
+//! promotes the most caught-up follower when the leader dies.
+//!
+//! # Design
+//!
+//! The replication stream *is* the WAL: the leader ships the exact
+//! `[len][seq][check][payload]` frames it appended
+//! ([`crate::coordinator::wal`]), so a follower's log is byte-identical
+//! to the leader's by construction, follower apply is the
+//! crash-recovery replay path (no second apply implementation to drift),
+//! and catch-up after a disconnect is just "resume at my last seq + 1".
+//!
+//! Frames are shipped strictly in order, so a follower's log is always a
+//! *prefix* of the leader's. That prefix property is what makes failover
+//! sound: the follower with the highest durable seq holds a superset of
+//! every other follower's state, and promoting it loses nothing any
+//! replica acknowledged.
+//!
+//! Durability of *client*-acknowledged mutations across failover is the
+//! ack gate ([`NodeReplication::ack_gate`], wired through
+//! [`crate::server::Replication`]): with `--ack-replicas N`, a mutation's
+//! response is held until N followers have durably appended and applied
+//! its WAL record (they report `{"ack":seq}` on the subscription socket).
+//! A gate timeout turns the response into `UNAVAILABLE` — the client must
+//! treat the mutation as unacknowledged (it may still survive; mutations
+//! are idempotent upserts, so retrying is safe).
+//!
+//! The subscription wire protocol, bootstrap-by-snapshot path, and
+//! failover rules are documented in `docs/REPLICATION.md`.
+//!
+//! # Module map
+//!
+//! - [`leader`] — serves `wal_subscribe` streams (snapshot bootstrap or
+//!   log tail), reads follower acks.
+//! - [`follower`] — bootstraps/recovers local state, tails the leader,
+//!   applies + acks, reconnects, and stops cleanly on promotion.
+//! - [`router`] — stateless proxy: mutations to the leader, scatter
+//!   reads, merged top-k, read retries.
+//! - [`health`] — the router's failure detector + automatic promotion.
+
+pub mod follower;
+pub mod health;
+pub mod leader;
+pub mod router;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::DynamicGus;
+use crate::metrics::ReplicationRole;
+use crate::server::Replication;
+
+pub use follower::{start_follower, FollowerOpts};
+pub use router::{run_router, RouterOpts};
+
+/// How long a leader holds a mutation's ack waiting for follower acks
+/// before answering `UNAVAILABLE` (semi-sync gate).
+pub const ACK_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long [`NodeReplication::promote`] waits for the follow loop to
+/// stop streaming before giving up. Covers the follower's socket read
+/// timeout plus scheduling slack.
+const PROMOTE_TIMEOUT: Duration = Duration::from_secs(15);
+
+/// What this node currently is. A follower becomes a leader exactly once
+/// (promotion); a leader never demotes in-process — a deposed leader
+/// rejoins by restarting as a fresh follower (see `docs/REPLICATION.md`).
+enum RoleState {
+    Leader,
+    Follower {
+        /// Where mutations should go instead (the `NOT_LEADER` hint).
+        leader: String,
+        /// True while the follow loop is applying the leader's stream.
+        /// Promotion waits for this to drop so no frame is applied after
+        /// the node starts accepting writes of its own.
+        streaming: bool,
+        /// Set by [`NodeReplication::promote`]; the follow loop polls it
+        /// between frames and exits.
+        promote: bool,
+    },
+}
+
+/// Replication state for one serving node (leader or follower); the
+/// concrete [`crate::server::Replication`] implementation.
+pub struct NodeReplication {
+    gus: Arc<DynamicGus>,
+    /// Followers that must durably ack a mutation before the leader acks
+    /// the client (0 = fully asynchronous replication).
+    ack_replicas: usize,
+    ack_timeout: Duration,
+    role: Mutex<RoleState>,
+    role_cond: Condvar,
+    /// Per-subscriber highest acked seq, keyed by subscription id.
+    acks: Mutex<BTreeMap<u64, u64>>,
+    acks_cond: Condvar,
+    next_sub: Mutex<u64>,
+}
+
+impl NodeReplication {
+    /// Replication state for a node starting as the leader.
+    pub fn leader(gus: Arc<DynamicGus>, ack_replicas: usize) -> Arc<NodeReplication> {
+        gus.metrics.replication.set_role(ReplicationRole::Leader);
+        Arc::new(NodeReplication {
+            gus,
+            ack_replicas,
+            ack_timeout: ACK_TIMEOUT,
+            role: Mutex::new(RoleState::Leader),
+            role_cond: Condvar::new(),
+            acks: Mutex::new(BTreeMap::new()),
+            acks_cond: Condvar::new(),
+            next_sub: Mutex::new(0),
+        })
+    }
+
+    /// Replication state for a node starting as a follower of `leader`.
+    /// `ack_replicas` only matters after a promotion.
+    pub fn follower(
+        gus: Arc<DynamicGus>,
+        leader: String,
+        ack_replicas: usize,
+    ) -> Arc<NodeReplication> {
+        gus.metrics.replication.set_role(ReplicationRole::Follower);
+        gus.metrics.replication.set_leader_hint(Some(leader.clone()));
+        Arc::new(NodeReplication {
+            gus,
+            ack_replicas,
+            ack_timeout: ACK_TIMEOUT,
+            role: Mutex::new(RoleState::Follower {
+                leader,
+                streaming: false,
+                promote: false,
+            }),
+            role_cond: Condvar::new(),
+            acks: Mutex::new(BTreeMap::new()),
+            acks_cond: Condvar::new(),
+            next_sub: Mutex::new(0),
+        })
+    }
+
+    /// The service this node replicates.
+    pub fn gus(&self) -> &Arc<DynamicGus> {
+        &self.gus
+    }
+
+    /// Is this node currently the leader?
+    pub fn is_leader(&self) -> bool {
+        matches!(*self.role.lock().unwrap(), RoleState::Leader)
+    }
+
+    // ---------- follow-loop coordination (follower role) ----------
+
+    /// True once the follow loop must stop (promotion requested or
+    /// already promoted). Polled between frames.
+    pub(crate) fn stop_requested(&self) -> bool {
+        match &*self.role.lock().unwrap() {
+            RoleState::Leader => true,
+            RoleState::Follower { promote, .. } => *promote,
+        }
+    }
+
+    /// The follow loop entered/left its apply loop. Leaving notifies a
+    /// pending [`NodeReplication::promote`].
+    pub(crate) fn set_streaming(&self, on: bool) {
+        if let RoleState::Follower { streaming, .. } = &mut *self.role.lock().unwrap() {
+            *streaming = on;
+        }
+        if !on {
+            self.role_cond.notify_all();
+        }
+    }
+
+    /// The follow loop (re)connected to `addr`: update the hint embedded
+    /// in `NOT_LEADER` answers and in `stats`.
+    pub(crate) fn note_leader(&self, addr: &str) {
+        if let RoleState::Follower { leader, .. } = &mut *self.role.lock().unwrap() {
+            addr.clone_into(leader);
+        }
+        self.gus.metrics.replication.set_leader_hint(Some(addr.to_string()));
+    }
+
+    // ---------- subscriber ack table (leader role) ----------
+
+    /// Register a new subscription stream; returns its id for
+    /// [`NodeReplication::record_ack`] / `unregister_subscriber`.
+    pub(crate) fn register_subscriber(&self) -> u64 {
+        let id = {
+            let mut next = self.next_sub.lock().unwrap();
+            *next += 1;
+            *next
+        };
+        self.acks.lock().unwrap().insert(id, 0);
+        self.gus.metrics.replication.subscriber_connected();
+        id
+    }
+
+    pub(crate) fn unregister_subscriber(&self, id: u64) {
+        self.acks.lock().unwrap().remove(&id);
+        // Wake gate waiters so they recount against the shrunk table.
+        self.acks_cond.notify_all();
+        self.gus.metrics.replication.subscriber_disconnected();
+    }
+
+    /// A follower durably appended + applied through `seq`.
+    pub(crate) fn record_ack(&self, id: u64, seq: u64) {
+        let mut acks = self.acks.lock().unwrap();
+        if let Some(entry) = acks.get_mut(&id) {
+            if seq > *entry {
+                *entry = seq;
+            }
+        }
+        self.acks_cond.notify_all();
+    }
+
+    fn acked_replicas(acks: &BTreeMap<u64, u64>, seq: u64) -> usize {
+        acks.values().filter(|&&a| a >= seq).count()
+    }
+}
+
+impl Replication for NodeReplication {
+    fn deny_mutations(&self) -> Option<String> {
+        match &*self.role.lock().unwrap() {
+            RoleState::Leader => None,
+            RoleState::Follower { leader, .. } => Some(leader.clone()),
+        }
+    }
+
+    fn ack_gate(&self, wal_seq: u64) -> std::result::Result<(), String> {
+        if self.ack_replicas == 0 {
+            return Ok(());
+        }
+        if !self.is_leader() {
+            // Followers never reach here for mutations (denied above);
+            // nothing to gate.
+            return Ok(());
+        }
+        let need = self.ack_replicas;
+        let guard = self.acks.lock().unwrap();
+        let (acks, _timed_out) = self
+            .acks_cond
+            .wait_timeout_while(guard, self.ack_timeout, |acks| {
+                Self::acked_replicas(acks, wal_seq) < need
+            })
+            .unwrap();
+        let have = Self::acked_replicas(&acks, wal_seq);
+        if have < need {
+            drop(acks);
+            self.gus.metrics.replication.note_ack_timeout();
+            return Err(format!(
+                "replication ack timeout at seq {wal_seq}: {have}/{need} replicas acked"
+            ));
+        }
+        Ok(())
+    }
+
+    fn promote(&self) -> Result<u64> {
+        let mut role = self.role.lock().unwrap();
+        if matches!(*role, RoleState::Leader) {
+            return Ok(self.gus.wal_seq());
+        }
+        if let RoleState::Follower { promote, .. } = &mut *role {
+            *promote = true;
+        }
+        self.role_cond.notify_all();
+        // Wait for the follow loop to observe the flag and stop applying;
+        // no frame may land after this node starts taking writes.
+        let (mut role, _timed_out) = self
+            .role_cond
+            .wait_timeout_while(role, PROMOTE_TIMEOUT, |r| {
+                matches!(r, RoleState::Follower { streaming: true, .. })
+            })
+            .unwrap();
+        if matches!(*role, RoleState::Follower { streaming: true, .. }) {
+            bail!("promotion timed out waiting for the replication stream to stop");
+        }
+        *role = RoleState::Leader;
+        drop(role);
+        self.gus.metrics.replication.set_role(ReplicationRole::Leader);
+        self.gus.metrics.replication.set_leader_hint(None);
+        let seq = self.gus.wal_seq();
+        eprintln!("[gus] promoted to leader at seq {seq}");
+        Ok(seq)
+    }
+
+    fn subscribe(
+        &self,
+        from_seq: u64,
+        id: Option<u64>,
+        reader: BufReader<TcpStream>,
+        stream: TcpStream,
+    ) -> Result<()> {
+        if let Some(hint) = self.deny_mutations() {
+            // Followers do not re-replicate (no chained replication):
+            // point the would-be subscriber at the leader and hang up.
+            leader::refuse_not_leader(stream, id, &hint);
+            return Ok(());
+        }
+        leader::serve_subscription(self, from_seq, id, reader, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GusConfig;
+    use crate::features::Schema;
+
+    fn test_gus() -> Arc<DynamicGus> {
+        let schema = Schema::arxiv_like(4);
+        let config = GusConfig::default();
+        Arc::new(DynamicGus::bootstrap(schema, config, &[], 1).unwrap())
+    }
+
+    #[test]
+    fn ack_gate_counts_replica_acks() {
+        let rep = NodeReplication::leader(test_gus(), 1);
+        // With no subscribers the gate must time out, not panic. Use a
+        // short timeout via a direct wait: rely on the configured one
+        // being bounded — here we only check the error shape by acking
+        // first from a registered subscriber.
+        let sub = rep.register_subscriber();
+        rep.record_ack(sub, 9);
+        assert!(rep.ack_gate(9).is_ok());
+        assert!(rep.ack_gate(3).is_ok(), "acks are cumulative");
+        rep.unregister_subscriber(sub);
+        assert_eq!(rep.gus().metrics.replication.subscribers(), 0);
+    }
+
+    #[test]
+    fn ack_gate_is_disabled_at_zero_replicas() {
+        let rep = NodeReplication::leader(test_gus(), 0);
+        assert!(rep.ack_gate(u64::MAX).is_ok());
+    }
+
+    #[test]
+    fn follower_denies_and_promotes() {
+        let rep = NodeReplication::follower(test_gus(), "10.1.2.3:7".into(), 0);
+        assert_eq!(rep.deny_mutations(), Some("10.1.2.3:7".into()));
+        assert!(!rep.is_leader());
+        rep.note_leader("10.9.9.9:7");
+        assert_eq!(rep.deny_mutations(), Some("10.9.9.9:7".into()));
+        // Not streaming, so promotion completes immediately.
+        let seq = rep.promote().unwrap();
+        assert_eq!(seq, 0);
+        assert!(rep.is_leader());
+        assert_eq!(rep.deny_mutations(), None);
+        assert_eq!(
+            rep.gus().metrics.replication.role(),
+            ReplicationRole::Leader
+        );
+        // Idempotent.
+        assert!(rep.promote().is_ok());
+    }
+
+    #[test]
+    fn promote_waits_for_streaming_to_stop() {
+        let rep = NodeReplication::follower(test_gus(), "a:1".into(), 0);
+        rep.set_streaming(true);
+        let rep2 = Arc::clone(&rep);
+        let handle = std::thread::spawn(move || {
+            // Simulate the follow loop: poll the stop flag, then stop.
+            while !rep2.stop_requested() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            rep2.set_streaming(false);
+        });
+        let seq = rep.promote().unwrap();
+        assert_eq!(seq, 0);
+        assert!(rep.is_leader());
+        handle.join().unwrap();
+    }
+}

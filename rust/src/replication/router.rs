@@ -1,0 +1,467 @@
+//! Scatter/gather router: the single address clients talk to in a
+//! multi-node deployment.
+//!
+//! The router speaks the same line protocol as a node (`gus serve`), so
+//! every existing client — including `gus loadgen` — points at it
+//! unchanged. Per request:
+//!
+//! - **Mutations** (and the other leader-only ops: `checkpoint`,
+//!   `promote`, `query_id`, `stats`) are forwarded to the current
+//!   leader. A `NOT_LEADER` refusal carries the node's leader hint,
+//!   which the router chases before falling back to probing every
+//!   target. A transport error *after* a mutation was written leaves
+//!   its outcome unknown, so the client gets `UNAVAILABLE` rather than
+//!   a silent retry — mutations are idempotent upserts, so the client
+//!   retries safely.
+//! - **Queries** (`query`, `query_batch`) scatter to every live
+//!   replica and gather: per-query lists are merged by score (reusing
+//!   the sharded-index merge), deduped by id, and truncated to `k`.
+//!   Reads are idempotent, so each replica gets a bounded retry; one
+//!   live replica is enough to answer.
+//!
+//! Failover is driven by [`super::health`]: a monitor thread probes
+//! each target's `stats`, adopts whichever node reports itself leader,
+//! and after enough consecutive leaderless probes promotes the live
+//! follower with the highest durable WAL seq. In-order WAL shipping
+//! makes that follower's log a superset of every acked record (see
+//! [`super`] — the prefix property), so promotion loses nothing the
+//! leader acknowledged.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::client::GusClient;
+use crate::coordinator::ScoredNeighbor;
+use crate::index::sharded::merge_ranked;
+use crate::protocol::{decode_request, ErrorCode, Incoming, Request, Response};
+
+/// Configuration for [`run_router`].
+#[derive(Debug, Clone)]
+pub struct RouterOpts {
+    /// Address to listen on.
+    pub listen: String,
+    /// Node addresses (leader + followers, discovered by probing).
+    pub targets: Vec<String>,
+    /// Health-probe cadence.
+    pub health_interval: Duration,
+    /// Consecutive leaderless probe rounds before promoting a follower.
+    pub fail_threshold: u32,
+    /// Deadline attached to scattered queries, per target.
+    pub deadline_ms: u64,
+}
+
+/// Bounded connect to a backend node.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Read timeout on backend connections: a node that stops answering is
+/// treated as down (the request is retried elsewhere or refused), never
+/// waited on indefinitely.
+const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Attempts per replica for an idempotent read (1 retry, reconnecting).
+const READ_ATTEMPTS: usize = 2;
+
+/// Shared router state: the target list is fixed at startup; the leader
+/// is whatever the health monitor (or a successful forward) last
+/// observed.
+pub(crate) struct RouterState {
+    pub(crate) targets: Vec<String>,
+    leader: Mutex<Option<String>>,
+    pub(crate) deadline_ms: u64,
+}
+
+impl RouterState {
+    pub(crate) fn leader(&self) -> Option<String> {
+        self.leader.lock().unwrap().clone()
+    }
+
+    /// Record a leader observation, logging transitions (the router's
+    /// operator log is the failover audit trail).
+    pub(crate) fn set_leader(&self, addr: &str) {
+        let mut cur = self.leader.lock().unwrap();
+        if cur.as_deref() != Some(addr) {
+            eprintln!("[gus-router] leader -> {addr}");
+            *cur = Some(addr.to_string());
+        }
+    }
+
+    pub(crate) fn clear_leader(&self) {
+        let mut cur = self.leader.lock().unwrap();
+        if cur.is_some() {
+            eprintln!("[gus-router] leader lost");
+            *cur = None;
+        }
+    }
+}
+
+/// Run the router: bind, start the health monitor, serve connections
+/// until the process dies. Each client connection gets a thread with its
+/// own backend connections (the backend protocol is pipelined per
+/// connection, so sharing one would serialize unrelated clients).
+pub fn run_router(opts: RouterOpts) -> Result<()> {
+    if opts.targets.is_empty() {
+        anyhow::bail!("router needs at least one --targets address");
+    }
+    let state = Arc::new(RouterState {
+        targets: opts.targets.clone(),
+        leader: Mutex::new(None),
+        deadline_ms: opts.deadline_ms,
+    });
+    let listener =
+        TcpListener::bind(&opts.listen).with_context(|| format!("binding {}", opts.listen))?;
+    // Stdout, matching `gus serve` — harnesses parse this line.
+    println!("[gus] serving on {}", listener.local_addr()?);
+    super::health::spawn_monitor(Arc::clone(&state), opts.health_interval, opts.fail_threshold);
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        let state = Arc::clone(&state);
+        std::thread::Builder::new()
+            .name("gus-router-conn".into())
+            .spawn(move || handle_conn(&state, stream))
+            .context("spawning router connection thread")?;
+    }
+    Ok(())
+}
+
+/// Per-client-connection backend pool. Leader-forwarding connections are
+/// keyed by address (the leader can move mid-connection); scatter
+/// connections align with the target list.
+struct Backends {
+    forward: BTreeMap<String, GusClient>,
+    scatter: Vec<Option<GusClient>>,
+}
+
+fn connect_backend(addr: &str, deadline_ms: Option<u64>) -> Option<GusClient> {
+    let mut c = GusClient::connect_timeout(addr, CONNECT_TIMEOUT).ok()?;
+    c.set_read_timeout(Some(BACKEND_READ_TIMEOUT)).ok()?;
+    c.set_deadline_ms(deadline_ms);
+    Some(c)
+}
+
+fn handle_conn(state: &RouterState, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut writer = std::io::BufWriter::new(write_half);
+    let mut backends = Backends {
+        forward: BTreeMap::new(),
+        scatter: state.targets.iter().map(|_| None).collect(),
+    };
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (id, request) = match decode_request(trimmed) {
+            Ok(Incoming::V1(env)) => (Some(env.id), env.request),
+            Ok(Incoming::Legacy(req)) => (None, req),
+            Err(de) => {
+                let id = if de.v1 { de.id } else { None };
+                let resp = Response::error(de.error.code, de.error.message);
+                if write_response(&mut writer, &resp, id).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let resp = dispatch(state, &mut backends, request);
+        if write_response(&mut writer, &resp, id).is_err() {
+            return;
+        }
+    }
+}
+
+fn write_response(
+    writer: &mut impl Write,
+    resp: &Response,
+    id: Option<u64>,
+) -> std::io::Result<()> {
+    let mut out = resp.to_wire(id).dump();
+    out.push('\n');
+    writer.write_all(out.as_bytes())?;
+    writer.flush()
+}
+
+fn dispatch(state: &RouterState, backends: &mut Backends, request: Request) -> Response {
+    match request {
+        Request::Query { point, k } => {
+            match scatter_query_batch(state, backends, &[point], k) {
+                Ok(mut results) => Response::Neighbors { neighbors: results.remove(0) },
+                Err(resp) => resp,
+            }
+        }
+        Request::QueryBatch { points, k } => {
+            match scatter_query_batch(state, backends, &points, k) {
+                Ok(results) => Response::Results { results },
+                Err(resp) => resp,
+            }
+        }
+        Request::WalSubscribe { .. } => Response::error(
+            ErrorCode::BadRequest,
+            "wal_subscribe must target a node directly, not the router",
+        ),
+        other => forward_to_leader(state, backends, other),
+    }
+}
+
+// ---------- leader forwarding ----------
+
+/// Forward a leader-only op, chasing `NOT_LEADER` hints. Transport
+/// errors are retried on the next candidate for reads; for mutations a
+/// failure after the request was written leaves the outcome unknown, so
+/// the client gets `UNAVAILABLE` and decides (mutations are idempotent
+/// upserts, so retrying is always safe).
+fn forward_to_leader(state: &RouterState, backends: &mut Backends, request: Request) -> Response {
+    let mutation = request.is_mutation();
+    // The op itself tells us whether success proves we found the
+    // leader: followers refuse mutations/checkpoint, but answer stats
+    // and query_id happily, and promote succeeding *makes* a leader.
+    let proves_leader = mutation || matches!(request, Request::Checkpoint | Request::Promote);
+    let mut candidates: Vec<String> = Vec::new();
+    if let Some(l) = state.leader() {
+        candidates.push(l);
+    }
+    for t in &state.targets {
+        if !candidates.contains(t) {
+            candidates.push(t.clone());
+        }
+    }
+    let mut tried: Vec<String> = Vec::new();
+    let mut last_failure = String::from("no targets configured");
+    while let Some(addr) = candidates.first().cloned() {
+        candidates.remove(0);
+        if tried.contains(&addr) {
+            continue;
+        }
+        tried.push(addr.clone());
+        if !backends.forward.contains_key(&addr) {
+            match connect_backend(&addr, None) {
+                Some(c) => {
+                    backends.forward.insert(addr.clone(), c);
+                }
+                None => {
+                    last_failure = format!("{addr}: connect failed");
+                    continue;
+                }
+            }
+        }
+        let conn = backends.forward.get_mut(&addr).expect("just inserted");
+        let outcome = conn
+            .submit(request.clone())
+            .and_then(|rid| conn.wait_response(rid));
+        match outcome {
+            Ok(Response::Error { code: ErrorCode::NotLeader, message }) => {
+                if let Some(hint) = leader_hint(&message) {
+                    if !tried.contains(&hint) {
+                        candidates.insert(0, hint);
+                    }
+                }
+                last_failure = format!("{addr}: {message}");
+            }
+            Ok(resp) => {
+                if proves_leader && !resp.is_error() {
+                    state.set_leader(&addr);
+                }
+                return resp;
+            }
+            Err(e) => {
+                // The connection is desynchronized (or dead): drop it.
+                backends.forward.remove(&addr);
+                if mutation {
+                    return Response::error(
+                        ErrorCode::Unavailable,
+                        format!(
+                            "leader connection failed mid-request ({addr}: {e}); \
+                             mutation outcome unknown — retry"
+                        ),
+                    );
+                }
+                last_failure = format!("{addr}: {e}");
+            }
+        }
+    }
+    Response::error(ErrorCode::Unavailable, format!("no leader reachable ({last_failure})"))
+}
+
+/// Extract the leader address from a `not leader; leader=ADDR` message.
+fn leader_hint(message: &str) -> Option<String> {
+    let (_, hint) = message.split_once("leader=")?;
+    let hint = hint.trim();
+    if hint.is_empty() || hint == "unknown" {
+        None
+    } else {
+        Some(hint.to_string())
+    }
+}
+
+// ---------- scatter/gather ----------
+
+/// Scatter a query batch to every replica, gather per-query, merge by
+/// score. Succeeds if at least one replica answers the full batch.
+fn scatter_query_batch(
+    state: &RouterState,
+    backends: &mut Backends,
+    points: &[crate::features::Point],
+    k: Option<usize>,
+) -> std::result::Result<Vec<Vec<ScoredNeighbor>>, Response> {
+    let deadline = state.deadline_ms;
+    let per_replica: Vec<Option<Vec<Vec<ScoredNeighbor>>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = backends
+            .scatter
+            .iter_mut()
+            .zip(&state.targets)
+            .map(|(slot, addr)| {
+                s.spawn(move || replica_query(slot, addr, points, k, deadline))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+    });
+    let answered = per_replica.iter().flatten().count();
+    if answered == 0 {
+        return Err(Response::error(
+            ErrorCode::Unavailable,
+            format!("no replica answered ({} targets tried)", state.targets.len()),
+        ));
+    }
+    // Transpose and merge: query i gathers each replica's list i.
+    let merged = (0..points.len())
+        .map(|i| {
+            let lists: Vec<Vec<ScoredNeighbor>> = per_replica
+                .iter()
+                .flatten()
+                .map(|results| results[i].clone())
+                .collect();
+            merge_replica_lists(lists, k)
+        })
+        .collect();
+    Ok(merged)
+}
+
+/// One replica's attempt at the batch: bounded retry (reads are
+/// idempotent), reconnecting on transport error. `None` drops this
+/// replica from the gather.
+fn replica_query(
+    slot: &mut Option<GusClient>,
+    addr: &str,
+    points: &[crate::features::Point],
+    k: Option<usize>,
+    deadline_ms: u64,
+) -> Option<Vec<Vec<ScoredNeighbor>>> {
+    for _ in 0..READ_ATTEMPTS {
+        if slot.is_none() {
+            *slot = connect_backend(addr, Some(deadline_ms));
+        }
+        let Some(conn) = slot.as_mut() else { continue };
+        let outcome = conn
+            .submit(Request::QueryBatch { points: points.to_vec(), k })
+            .and_then(|rid| conn.wait_response(rid));
+        match outcome {
+            Ok(Response::Results { results }) if results.len() == points.len() => {
+                return Some(results)
+            }
+            Ok(Response::Error {
+                code: ErrorCode::Unavailable | ErrorCode::DeadlineExceeded,
+                ..
+            }) => continue, // transient: same connection, one more try
+            Ok(_) => return None, // wrong shape or hard refusal: drop replica
+            Err(_) => {
+                *slot = None; // desynchronized: reconnect and retry
+            }
+        }
+    }
+    None
+}
+
+/// Merge per-replica neighbor lists for one query: best score first,
+/// first occurrence of an id wins (it sorted highest), truncated to `k`.
+/// Replicas at different WAL positions can disagree transiently; the
+/// merge favors whichever replica scored a point higher, which is the
+/// same contract a single node's sharded index already provides.
+fn merge_replica_lists(lists: Vec<Vec<ScoredNeighbor>>, k: Option<usize>) -> Vec<ScoredNeighbor> {
+    let limit = k.unwrap_or_else(|| lists.iter().map(Vec::len).max().unwrap_or(0));
+    let merged = merge_ranked(lists, |a, b| {
+        b.score.total_cmp(&a.score).then(a.id.cmp(&b.id))
+    });
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut out = Vec::with_capacity(limit.min(merged.len()));
+    for n in merged {
+        if out.len() >= limit {
+            break;
+        }
+        if seen.insert(n.id) {
+            out.push(n);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(id: u64, score: f32) -> ScoredNeighbor {
+        ScoredNeighbor { id, score, dot: score }
+    }
+
+    #[test]
+    fn merge_dedupes_and_ranks_across_replicas() {
+        let a = vec![n(1, 0.9), n(2, 0.5)];
+        let b = vec![n(2, 0.7), n(3, 0.6)];
+        let merged = merge_replica_lists(vec![a, b], Some(3));
+        let ids: Vec<u64> = merged.iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        // Id 2 keeps its best score across replicas.
+        assert!((merged[1].score - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_truncates_to_k() {
+        let a = vec![n(1, 0.9), n(2, 0.8), n(3, 0.7)];
+        let merged = merge_replica_lists(vec![a], Some(2));
+        assert_eq!(merged.len(), 2);
+    }
+
+    #[test]
+    fn merge_default_k_is_widest_replica() {
+        let a = vec![n(1, 0.9), n(2, 0.8)];
+        let b = vec![n(3, 0.7)];
+        let merged = merge_replica_lists(vec![a, b], None);
+        assert_eq!(merged.len(), 2);
+    }
+
+    #[test]
+    fn leader_hint_parses_server_message() {
+        assert_eq!(
+            leader_hint("not leader; leader=127.0.0.1:7717"),
+            Some("127.0.0.1:7717".to_string())
+        );
+        assert_eq!(leader_hint("not leader; leader=unknown"), None);
+        assert_eq!(leader_hint("some other error"), None);
+    }
+
+    #[test]
+    fn router_state_tracks_leader_transitions() {
+        let state = RouterState {
+            targets: vec!["a".into(), "b".into()],
+            leader: Mutex::new(None),
+            deadline_ms: 1000,
+        };
+        assert_eq!(state.leader(), None);
+        state.set_leader("a");
+        assert_eq!(state.leader(), Some("a".to_string()));
+        state.clear_leader();
+        assert_eq!(state.leader(), None);
+    }
+}

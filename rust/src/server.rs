@@ -56,8 +56,43 @@ use crate::coordinator::DynamicGus;
 use crate::protocol::{decode_request, Envelope, ErrorCode, Incoming, Request, Response};
 use crate::util::json::Json;
 
+/// Hooks the replication subsystem installs into the server. Defined
+/// here (not under `replication/`) so the server stays ignorant of the
+/// subsystem's internals; [`crate::replication`] provides the
+/// implementations for leader and follower roles.
+pub trait Replication: Send + Sync {
+    /// `Some(leader_hint)` when this node must refuse mutations (it is a
+    /// follower): ordered ops are answered `NOT_LEADER` with the hint
+    /// embedded as `not leader; leader=<hint>` so routers/clients can
+    /// redirect. `None` on a leader (mutations proceed).
+    fn deny_mutations(&self) -> Option<String>;
+
+    /// Gate one executed mutation's ack on replication (semi-sync):
+    /// blocks until the mutation's WAL seq is durably acknowledged by
+    /// the configured number of followers, or a bounded wait expires.
+    /// `Err(message)` turns the (already applied) mutation's response
+    /// into `UNAVAILABLE` — the client must treat it as unacknowledged.
+    fn ack_gate(&self, wal_seq: u64) -> std::result::Result<(), String>;
+
+    /// Promote this node to leader (failover). Idempotent on a leader.
+    /// Returns the node's durable WAL seq (the promotion criterion).
+    fn promote(&self) -> Result<u64>;
+
+    /// Serve one `wal_subscribe` stream. Takes over the connection: the
+    /// implementation writes the header response (echoing `id` when the
+    /// request was enveloped) followed by raw WAL frames on `stream`,
+    /// and reads `{"ack":seq}` lines from `reader` until disconnect.
+    fn subscribe(
+        &self,
+        from_seq: u64,
+        id: Option<u64>,
+        reader: BufReader<TcpStream>,
+        stream: TcpStream,
+    ) -> Result<()>;
+}
+
 /// Server tuning.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct ServerConfig {
     /// Connections admitted concurrently; excess connections get a final
     /// `OVERLOADED` response and are closed (clients retry).
@@ -67,6 +102,21 @@ pub struct ServerConfig {
     /// Bounded run-queue capacity; when full, new requests are shed with
     /// `OVERLOADED` instead of queueing unboundedly.
     pub queue_capacity: usize,
+    /// Replication hooks (leader or follower role). `None` = single-node
+    /// serving: `wal_subscribe`/`promote` answer `BAD_REQUEST` and
+    /// mutations are never denied or gated.
+    pub replication: Option<Arc<dyn Replication>>,
+}
+
+impl std::fmt::Debug for ServerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerConfig")
+            .field("max_concurrent_connections", &self.max_concurrent_connections)
+            .field("worker_threads", &self.worker_threads)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("replication", &self.replication.is_some())
+            .finish()
+    }
 }
 
 impl Default for ServerConfig {
@@ -75,6 +125,7 @@ impl Default for ServerConfig {
             max_concurrent_connections: 64,
             worker_threads: 0,
             queue_capacity: 256,
+            replication: None,
         }
     }
 }
@@ -86,6 +137,7 @@ impl ServerConfig {
             max_concurrent_connections: cfg.max_connections,
             worker_threads: cfg.rpc_workers,
             queue_capacity: cfg.rpc_queue,
+            replication: None,
         }
     }
 
@@ -215,6 +267,8 @@ impl RunQueue {
 /// Per-connection state shared between its reader and the workers.
 struct ConnShared {
     gus: Arc<DynamicGus>,
+    /// Replication hooks (from [`ServerConfig::replication`]).
+    replication: Option<Arc<dyn Replication>>,
     writer: Mutex<BufWriter<TcpStream>>,
     gate: OrderGate,
     /// Set after a write failure (client gone, or a non-reading client
@@ -358,10 +412,11 @@ pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<S
                 let gus = Arc::clone(&gus);
                 let active = Arc::clone(&active);
                 let queue = Arc::clone(&queue2);
+                let replication = config.replication.clone();
                 let _ = std::thread::Builder::new()
                     .name("gus-server-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(gus, queue, stream);
+                        let _ = handle_connection(gus, replication, queue, stream);
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
             }
@@ -387,8 +442,11 @@ fn refuse_connection(gus: &DynamicGus, stream: TcpStream) {
 
 /// Per-connection reader loop: decode each line, execute legacy requests
 /// inline (serial, in order), enqueue v1 requests on the worker pool.
+/// A `wal_subscribe` request hands the whole connection (reader + raw
+/// socket) to the replication subsystem and ends this loop.
 fn handle_connection(
     gus: Arc<DynamicGus>,
+    replication: Option<Arc<dyn Replication>>,
     queue: Arc<RunQueue>,
     stream: TcpStream,
 ) -> Result<()> {
@@ -398,9 +456,10 @@ fn handle_connection(
     // the first timed-out write marks the connection dead (see
     // [`ConnShared::send`]).
     stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let conn = Arc::new(ConnShared {
         gus: Arc::clone(&gus),
+        replication,
         writer: Mutex::new(BufWriter::new(stream)),
         gate: OrderGate::new(),
         dead: AtomicBool::new(false),
@@ -408,13 +467,18 @@ fn handle_connection(
     // Next mutation ticket; only the reader assigns tickets, and only
     // for admitted requests, so the gate sequence has no holes.
     let mut next_ticket = 0u64;
-    for line in reader.lines() {
-        let line = line?;
+    let mut linebuf = String::new();
+    loop {
+        linebuf.clear();
+        if reader.read_line(&mut linebuf)? == 0 {
+            break; // EOF
+        }
+        let line = linebuf.trim_end_matches(['\n', '\r']);
         if line.trim().is_empty() {
             continue;
         }
         let received = Instant::now();
-        match decode_request(&line) {
+        let incoming = match decode_request(line) {
             Err(e) => {
                 // When the envelope header was readable, echo its id so a
                 // pipelined client can match the failure; otherwise the
@@ -422,8 +486,40 @@ fn handle_connection(
                 gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
                 let resp = Response::Error { code: e.error.code, message: e.error.message };
                 conn.send(&resp.to_wire(e.id));
+                continue;
             }
-            Ok(Incoming::Legacy(request)) => {
+            Ok(incoming) => incoming,
+        };
+        // `wal_subscribe` (either dialect) switches the connection to
+        // streaming mode: the replication subsystem owns the socket from
+        // here and no further request lines are read.
+        let subscribe = match &incoming {
+            Incoming::Legacy(Request::WalSubscribe { from_seq }) => Some((*from_seq, None)),
+            Incoming::V1(env) => match env.request {
+                Request::WalSubscribe { from_seq } => Some((from_seq, Some(env.id))),
+                _ => None,
+            },
+            _ => None,
+        };
+        if let Some((from_seq, id)) = subscribe {
+            match conn.replication.as_ref() {
+                Some(rep) => {
+                    let raw = conn.writer.lock().unwrap().get_ref().try_clone()?;
+                    return Arc::clone(rep).subscribe(from_seq, id, reader, raw);
+                }
+                None => {
+                    gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response::error(
+                        ErrorCode::BadRequest,
+                        "replication not enabled on this server (serve with --replicate)",
+                    );
+                    conn.send(&resp.to_wire(id));
+                    continue;
+                }
+            }
+        }
+        match incoming {
+            Incoming::Legacy(request) => {
                 // Legacy dialect: strictly serial, in-order, on this
                 // thread — byte-compatible with the pre-envelope server.
                 // Ordered ops still take a gate ticket so their order
@@ -438,13 +534,13 @@ fn handle_connection(
                 if let Some(t) = ticket {
                     conn.gate.wait_turn(t);
                 }
-                let resp = execute(&gus, request);
+                let resp = execute_replicated(&gus, conn.replication.as_deref(), request);
                 conn.send(&resp.to_wire(None));
                 if ticket.is_some() {
                     finish_ordered_turn(&conn);
                 }
             }
-            Ok(Incoming::V1(envelope)) => {
+            Incoming::V1(envelope) => {
                 let id = envelope.id;
                 let order_ticket = envelope.request.is_ordered().then_some(next_ticket);
                 let job = Job { conn: Arc::clone(&conn), envelope, received, order_ticket };
@@ -528,12 +624,55 @@ fn execute_and_send(job: Job) {
             ),
         )
     } else {
-        execute(gus, job.envelope.request)
+        execute_replicated(gus, job.conn.replication.as_deref(), job.envelope.request)
     };
     job.conn.send(&resp.to_wire(Some(job.envelope.id)));
 }
 
 // ---------- typed dispatch ----------
+
+/// Execute one request with the replication hooks applied around it:
+/// followers deny ordered ops with `NOT_LEADER` + a leader hint,
+/// `promote` dispatches to the subsystem, and a leader's mutation acks
+/// are gated on replication (semi-sync). With no hooks this is exactly
+/// [`execute`].
+fn execute_replicated(gus: &DynamicGus, rep: Option<&dyn Replication>, req: Request) -> Response {
+    let Some(rep) = rep else { return execute(gus, req) };
+    // Ordered ops (mutations + checkpoint) only run on the leader. The
+    // `leader=<addr>` marker is a stable format routers parse.
+    if req.is_ordered() {
+        if let Some(hint) = rep.deny_mutations() {
+            gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+            return Response::error(
+                ErrorCode::NotLeader,
+                format!("not leader; leader={hint}"),
+            );
+        }
+    }
+    if matches!(req, Request::Promote) {
+        return match rep.promote() {
+            Ok(seq) => Response::Checkpoint { seq },
+            Err(e) => {
+                gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                Response::error(ErrorCode::Unavailable, format!("promote failed: {e}"))
+            }
+        };
+    }
+    let gate = req.is_mutation();
+    let resp = execute(gus, req);
+    if gate && !resp.is_error() {
+        // The mutation is applied and logged locally; hold its ack until
+        // enough followers have it durably. On timeout the client gets
+        // UNAVAILABLE and must treat the mutation as unacknowledged
+        // (it may still survive — at-least-once, like any retried RPC).
+        if let Err(msg) = rep.ack_gate(gus.wal_seq()) {
+            gus.metrics.replication.note_ack_timeout();
+            gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+            return Response::error(ErrorCode::Unavailable, msg);
+        }
+    }
+    resp
+}
 
 /// Execute one decoded request against the service. Every failure is a
 /// structured [`Response::Error`]; the `errors` counter advances once
@@ -585,6 +724,19 @@ fn execute_inner(gus: &DynamicGus, req: Request) -> Result<Response> {
         Request::RefreshTables => {
             anyhow::bail!("'refresh_tables' is WAL-internal, not a wire op")
         }
+        // Replication ops reaching plain dispatch mean the node has no
+        // replication hooks installed (structured refusal, client's
+        // fault): on a served socket with hooks, `wal_subscribe` is
+        // intercepted by the reader and `promote` by
+        // [`execute_replicated`] before this point.
+        Request::WalSubscribe { .. } => Ok(Response::error(
+            ErrorCode::BadRequest,
+            "replication not enabled on this server (serve with --replicate)",
+        )),
+        Request::Promote => Ok(Response::error(
+            ErrorCode::BadRequest,
+            "replication not enabled on this server (serve with --replicate)",
+        )),
     }
 }
 
@@ -819,6 +971,114 @@ mod tests {
         // refresh_tables is WAL-internal, not a wire op.
         let resp = dispatch(&gus, r#"{"op":"refresh_tables"}"#);
         assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn replication_ops_without_hooks_are_refused() {
+        let (gus, _) = boot();
+        for bad in [r#"{"op":"promote"}"#, r#"{"op":"wal_subscribe","from_seq":0}"#] {
+            let resp = dispatch(&gus, bad);
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+            assert_eq!(resp.get("code").as_str(), Some("BAD_REQUEST"), "{bad}");
+            assert!(resp.get("error").as_str().unwrap().contains("--replicate"));
+        }
+    }
+
+    #[test]
+    fn follower_hooks_deny_ordered_ops_with_leader_hint() {
+        struct Deny;
+        impl Replication for Deny {
+            fn deny_mutations(&self) -> Option<String> {
+                Some("10.0.0.1:4242".into())
+            }
+            fn ack_gate(&self, _seq: u64) -> std::result::Result<(), String> {
+                Ok(())
+            }
+            fn promote(&self) -> Result<u64> {
+                Ok(7)
+            }
+            fn subscribe(
+                &self,
+                _from_seq: u64,
+                _id: Option<u64>,
+                _reader: BufReader<TcpStream>,
+                _stream: TcpStream,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let (gus, ds) = boot();
+        let rep = Deny;
+        // Mutations and checkpoint bounce with the parseable leader hint.
+        let mut p = ds.points[0].clone();
+        p.id = 90_000;
+        for req in [Request::Insert { point: p }, Request::Delete { id: 3 }, Request::Checkpoint] {
+            let resp = execute_replicated(&gus, Some(&rep), req);
+            match resp {
+                Response::Error { code, message } => {
+                    assert_eq!(code, ErrorCode::NotLeader);
+                    assert!(message.contains("leader=10.0.0.1:4242"), "{message}");
+                }
+                other => panic!("expected NOT_LEADER, got {other:?}"),
+            }
+        }
+        assert!(!gus.contains(90_000), "denied mutation touched the index");
+        // Reads are still served locally.
+        let resp =
+            execute_replicated(&gus, Some(&rep), Request::QueryId { id: ds.points[1].id, k: Some(5) });
+        assert!(!resp.is_error(), "{resp:?}");
+        let resp = execute_replicated(&gus, Some(&rep), Request::Stats);
+        assert!(!resp.is_error());
+        // Promote dispatches to the hooks and answers in checkpoint shape.
+        match execute_replicated(&gus, Some(&rep), Request::Promote) {
+            Response::Checkpoint { seq } => assert_eq!(seq, 7),
+            other => panic!("expected checkpoint shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn leader_ack_gate_failure_turns_ack_into_unavailable() {
+        struct SlowReplicas;
+        impl Replication for SlowReplicas {
+            fn deny_mutations(&self) -> Option<String> {
+                None
+            }
+            fn ack_gate(&self, seq: u64) -> std::result::Result<(), String> {
+                Err(format!("replication ack timeout at seq {seq}"))
+            }
+            fn promote(&self) -> Result<u64> {
+                Ok(0)
+            }
+            fn subscribe(
+                &self,
+                _from_seq: u64,
+                _id: Option<u64>,
+                _reader: BufReader<TcpStream>,
+                _stream: TcpStream,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let (gus, ds) = boot();
+        let rep = SlowReplicas;
+        let mut p = ds.points[0].clone();
+        p.id = 91_000;
+        let resp = execute_replicated(&gus, Some(&rep), Request::Insert { point: p });
+        match resp {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::Unavailable);
+                assert!(message.contains("ack timeout"), "{message}");
+            }
+            other => panic!("expected UNAVAILABLE, got {other:?}"),
+        }
+        // The mutation applied locally (at-least-once semantics) but the
+        // client was told it is unacknowledged; the gauge counted it.
+        assert!(gus.contains(91_000));
+        let j = gus.stats_json();
+        assert_eq!(j.get("replication").get("ack_timeouts").as_u64(), Some(1));
+        // Queries are not gated.
+        let resp = execute_replicated(&gus, Some(&rep), Request::QueryId { id: 91_000, k: Some(3) });
+        assert!(!resp.is_error());
     }
 
     #[test]

@@ -685,8 +685,19 @@ fn rule_multi_lock(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
 // ---------- rule: replay-determinism ----------
 
 /// Files on the WAL-replay path: recovery must be byte-identical, so no
-/// wall clocks and no nondeterministic iteration order.
-const REPLAY_FILES: &[&str] = &["coordinator/wal.rs", "coordinator/snapshot.rs", "protocol.rs"];
+/// wall clocks and no nondeterministic iteration order. The replication
+/// subsystem ships and re-applies those same records (a follower is a
+/// continuous replay), so all of `replication/` is held to the same bar.
+const REPLAY_FILES: &[&str] = &[
+    "coordinator/wal.rs",
+    "coordinator/snapshot.rs",
+    "protocol.rs",
+    "replication/mod.rs",
+    "replication/leader.rs",
+    "replication/follower.rs",
+    "replication/router.rs",
+    "replication/health.rs",
+];
 
 const REPLAY_BANNED_CALLS: &[(&str, &str)] = &[("Instant", "now"), ("SystemTime", "now")];
 

@@ -144,6 +144,15 @@ pub struct GusConfig {
     /// building unbounded backlog — admission control at the API
     /// boundary keeps admitted requests' tail latency flat.
     pub rpc_queue: usize,
+    /// Disk fault-injection plan (`--fault-plan` flag or `GUS_FAULT_PLAN`
+    /// env var), e.g. `wal_append:enospc@seq=1200;fsync:err@nth=3` — see
+    /// [`crate::fault::FaultPlan`] for the grammar. Armed once per
+    /// process at serve/follow startup; `None` (the default, and the
+    /// only value a production deployment should ever see) injects
+    /// nothing. Deliberately **not** persisted to config JSON: a fault
+    /// plan is a per-run drill parameter, and writing it to disk would
+    /// let one drill leak into every later restart from the same config.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for GusConfig {
@@ -165,6 +174,7 @@ impl Default for GusConfig {
             max_connections: 64,
             rpc_workers: 0,
             rpc_queue: 256,
+            fault_plan: None,
         }
     }
 }
@@ -194,6 +204,17 @@ impl GusConfig {
         self.max_connections = args.get_usize("max-connections", self.max_connections);
         self.rpc_workers = args.get_usize("rpc-workers", self.rpc_workers);
         self.rpc_queue = args.get_usize("rpc-queue", self.rpc_queue);
+        // Flag beats env var beats nothing; an empty value means "off"
+        // either way (lets a wrapper script unconditionally forward
+        // GUS_FAULT_PLAN="").
+        let plan = args
+            .opt_str("fault-plan")
+            .or_else(|| std::env::var("GUS_FAULT_PLAN").ok())
+            .filter(|s| !s.trim().is_empty());
+        if let Some(spec) = plan {
+            crate::fault::FaultPlan::parse(&spec).map_err(|e| format!("--fault-plan: {e:#}"))?;
+            self.fault_plan = Some(spec);
+        }
         self.validate()?;
         Ok(self)
     }
@@ -289,6 +310,9 @@ impl GusConfig {
             max_connections: j.get("max_connections").as_usize().unwrap_or(d.max_connections),
             rpc_workers: j.get("rpc_workers").as_usize().unwrap_or(d.rpc_workers),
             rpc_queue: j.get("rpc_queue").as_usize().unwrap_or(d.rpc_queue),
+            // Never read from config JSON (see the field doc); even a
+            // hand-edited "fault_plan" key is ignored.
+            fault_plan: None,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -436,6 +460,35 @@ mod tests {
         assert_eq!(old.rpc_queue, 256);
         // Degenerate values are rejected.
         for bad in ["--max-connections=0", "--rpc-queue=0"] {
+            let args = Args::parse_from([bad.to_string()]).unwrap();
+            assert!(GusConfig::default().apply_args(&args).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fault_plan_cli_validates_and_is_not_serialized() {
+        assert!(GusConfig::default().fault_plan.is_none());
+        let args = Args::parse_from(
+            ["--fault-plan=wal_append:enospc@seq=1200;fsync:err@nth=3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(
+            cfg.fault_plan.as_deref(),
+            Some("wal_append:enospc@seq=1200;fsync:err@nth=3")
+        );
+        // A per-run drill parameter: never written to config JSON, and a
+        // hand-planted key in a config file is ignored on load.
+        assert!(cfg.to_json().get("fault_plan").is_null());
+        let back = GusConfig::from_json(
+            &Json::parse(r#"{"fault_plan":"fsync:crash"}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(back.fault_plan.is_none());
+        // Bad specs are rejected at flag-parse time, not at first injection.
+        for bad in ["--fault-plan=wal_append:bogus", "--fault-plan=fsync:torn"] {
             let args = Args::parse_from([bad.to_string()]).unwrap();
             assert!(GusConfig::default().apply_args(&args).is_err(), "{bad}");
         }

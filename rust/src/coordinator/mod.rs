@@ -302,7 +302,9 @@ impl DynamicGus {
             .ok_or_else(|| anyhow!("no WAL attached (serve with --wal-dir)"))?;
         let mut writer = w.writer.lock().unwrap();
         let seq = writer.seq();
-        snapshot::save_with_seq(self, w.dir(), seq)?;
+        // Pass the writer's captured injector so `checkpoint_rename`
+        // fault rules fire against the same plan as the WAL sites.
+        snapshot::save_with_seq_injected(self, w.dir(), seq, writer.fault_injector().as_deref())?;
         writer.truncate_retaining(self.config.wal_retain)?;
         w.reset_pending();
         Ok(seq)
@@ -710,6 +712,7 @@ impl DynamicGus {
             ("scoring_latency", self.metrics.scoring_latency.summary().to_json()),
             ("staleness_p99_ms", Json::num(self.metrics.staleness.p99_ms())),
             ("replication", self.metrics.replication.to_json(self.wal_seq())),
+            ("faults", crate::metrics::faults().to_json()),
             (
                 "wal",
                 match self.wal.get() {
@@ -887,6 +890,21 @@ mod tests {
         assert_eq!(rep.get("wal_last_seq").as_u64(), Some(0));
         assert_eq!(rep.get("replication_lag_records").as_u64(), Some(0));
         assert!(rep.get("leader").is_null());
+    }
+
+    #[test]
+    fn stats_expose_faults_section() {
+        let (gus, _) = boot(100);
+        let js = gus.stats_json();
+        let f = js.get("faults");
+        // Counters are process-global and other tests may bump them; the
+        // section's shape is what this test pins down.
+        assert!(f.get("injected").get("enospc").as_u64().is_some());
+        assert!(f.get("injected").get("err").as_u64().is_some());
+        assert!(f.get("injected").get("torn").as_u64().is_some());
+        assert!(f.get("injected").get("crash").as_u64().is_some());
+        assert!(f.get("backoff_retries").as_u64().is_some());
+        assert!(f.get("circuit_open_windows").as_u64().is_some());
     }
 
     #[test]

@@ -27,6 +27,8 @@ use anyhow::{Context, Result};
 use crate::config::GusConfig;
 use crate::coordinator::DynamicGus;
 use crate::data::{loader, Dataset};
+use crate::fault::injector::{enact_crash, injected_error};
+use crate::fault::{FaultInjector, FaultKind, FaultSite};
 use crate::features::Schema;
 use crate::util::json::Json;
 
@@ -70,7 +72,22 @@ pub fn save(gus: &DynamicGus, dir: &Path) -> Result<()> {
 /// Write a checkpoint declaring that every mutation with WAL sequence
 /// number ≤ `last_seq` is included. Committed by an atomic rename of
 /// `snapshot.json`; never corrupts a previous checkpoint mid-write.
+/// Consults the process-global fault injector (if armed) at the commit
+/// rename — `checkpoint_rename` plan rules fire here.
 pub fn save_with_seq(gus: &DynamicGus, dir: &Path, last_seq: u64) -> Result<()> {
+    save_with_seq_injected(gus, dir, last_seq, crate::fault::global().as_deref())
+}
+
+/// [`save_with_seq`] with an explicit fault injector for the
+/// `checkpoint_rename` site. [`DynamicGus::checkpoint`] passes its WAL
+/// writer's captured injector so tests can target one service without
+/// arming the once-per-process global plan.
+pub fn save_with_seq_injected(
+    gus: &DynamicGus,
+    dir: &Path,
+    last_seq: u64,
+    faults: Option<&FaultInjector>,
+) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     // 1. Corpus, to a per-sequence file the metadata will point at.
     //    (tmp + rename so a crash mid-write never clobbers the file a
@@ -113,6 +130,17 @@ pub fn save_with_seq(gus: &DynamicGus, dir: &Path, last_seq: u64) -> Result<()> 
     std::fs::write(&meta_tmp, meta.dump())
         .with_context(|| format!("writing {}", meta_tmp.display()))?;
     fsync_path(&meta_tmp)?;
+    // The rename below is the checkpoint's commit point, so this is the
+    // sharpest place to fail: everything is written and fsynced, only
+    // the commit is missing. A crash/error here must leave the previous
+    // checkpoint (and the untruncated WAL) authoritative.
+    if let Some(kind) = faults.and_then(|f| f.check(FaultSite::CheckpointRename, last_seq)) {
+        if kind == FaultKind::Crash {
+            enact_crash(FaultSite::CheckpointRename);
+        }
+        return Err(injected_error(FaultSite::CheckpointRename, kind)
+            .context(format!("committing {}/{SNAPSHOT_META}", dir.display())));
+    }
     std::fs::rename(&meta_tmp, dir.join(SNAPSHOT_META))
         .with_context(|| format!("committing {}/{SNAPSHOT_META}", dir.display()))?;
     fsync_dir(dir);

@@ -69,6 +69,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::FsyncPolicy;
 use crate::coordinator::{snapshot, DynamicGus};
+use crate::fault::injector::{enact_crash, injected_error};
+use crate::fault::{FaultInjector, FaultKind, FaultSite};
 use crate::features::{Point, PointId};
 use crate::util::hash::{hash_bytes, mix2};
 use crate::util::json::Json;
@@ -209,10 +211,16 @@ pub struct WalWriter {
     /// read as unrecoverable mid-file corruption).
     offset: u64,
     appends_since_sync: usize,
-    /// Set when a failed append could not be rolled back: the log may
-    /// end in a partial frame, so further appends must be refused (they
-    /// would land *after* the garbage and become unrecoverable).
+    /// Set when a failed append could not be rolled back (the log may end
+    /// in a partial frame) or an fsync failed (the kernel's dirty-page
+    /// state is unknowable after a failed fsync — fsyncgate): further
+    /// appends must be refused, loudly, until a restart re-scans the log.
     poisoned: bool,
+    /// Fault injector captured once at open time (`None` = passthrough —
+    /// the hot path pays one `Option` test). Tests hand a private
+    /// injector to one writer via [`WalWriter::set_fault_injector`] so
+    /// parallel `cargo test` processes never share firing state.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl WalWriter {
@@ -250,7 +258,22 @@ impl WalWriter {
             offset,
             appends_since_sync: 0,
             poisoned: false,
+            faults: crate::fault::global(),
         })
+    }
+
+    /// Replace the fault injector this writer consults (`None` disables
+    /// injection). Tests use this to target one writer without arming the
+    /// process-global plan.
+    pub fn set_fault_injector(&mut self, faults: Option<Arc<FaultInjector>>) {
+        self.faults = faults;
+    }
+
+    /// The injector this writer consults, if any — the checkpoint path
+    /// passes it along to the snapshot commit site so
+    /// `checkpoint_rename` rules fire against the right injector.
+    pub fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.faults.clone()
     }
 
     /// Sequence number of the most recently appended record.
@@ -297,15 +320,37 @@ impl WalWriter {
     fn append_frame(&mut self, seq: u64, payload: &[u8]) -> Result<u64> {
         anyhow::ensure!(
             !self.poisoned,
-            "WAL {} is poisoned after an unrolled-back write failure; \
-             restart (recovery truncates the partial record)",
+            "WAL {} is poisoned after an unsafe write or fsync failure; \
+             restart (recovery truncates any partial record)",
             self.path.display()
         );
         anyhow::ensure!(payload.len() as u64 <= MAX_RECORD_BYTES as u64, "WAL record too large");
         let frame = encode_frame(seq, payload);
+        if let Some(kind) = self.faults.as_ref().and_then(|f| f.check(FaultSite::WalAppend, seq)) {
+            if kind == FaultKind::Crash {
+                enact_crash(FaultSite::WalAppend);
+            }
+            // Model the failure faithfully: enospc/torn leave a partial
+            // frame on disk before the error surfaces (a short write),
+            // `err` writes nothing. Either way the rollback path below
+            // must restore the record boundary.
+            let partial = match kind {
+                FaultKind::Enospc | FaultKind::Torn => frame.len() / 2,
+                _ => 0,
+            };
+            if partial > 0 {
+                let _ = self.file.write_all(&frame[..partial]);
+            }
+            if self.file.set_len(self.offset).is_err() {
+                self.poisoned = true;
+            }
+            return Err(injected_error(FaultSite::WalAppend, kind)
+                .context(format!("appending to WAL {}", self.path.display())));
+        }
         if let Err(e) = self.file.write_all(&frame) {
             // Trim any partial frame; seq stays unchanged so the next
-            // attempt reuses it (no gap in the sequence).
+            // attempt reuses it (no gap in the sequence). The file is in
+            // append mode, so the next write lands at the restored EOF.
             if self.file.set_len(self.offset).is_err() {
                 self.poisoned = true;
             }
@@ -329,10 +374,26 @@ impl WalWriter {
     }
 
     /// Force everything appended so far to stable storage.
+    ///
+    /// A failed fsync **poisons the writer**: after fsync returns an
+    /// error, the kernel may have dropped the dirty pages it could not
+    /// write, so "retry the fsync" silently loses data (fsyncgate). The
+    /// only honest reaction is to refuse further appends and force a
+    /// restart, which re-scans the log and recovers the true durable
+    /// prefix.
     pub fn sync(&mut self) -> Result<()> {
-        self.file
-            .sync_data()
-            .with_context(|| format!("fsync {}", self.path.display()))?;
+        if let Some(kind) = self.faults.as_ref().and_then(|f| f.check(FaultSite::Fsync, self.seq)) {
+            if kind == FaultKind::Crash {
+                enact_crash(FaultSite::Fsync);
+            }
+            self.poisoned = true;
+            return Err(injected_error(FaultSite::Fsync, kind)
+                .context(format!("fsync {}", self.path.display())));
+        }
+        if let Err(e) = self.file.sync_data() {
+            self.poisoned = true;
+            return Err(anyhow!(e).context(format!("fsync {}", self.path.display())));
+        }
         self.appends_since_sync = 0;
         Ok(())
     }
@@ -354,6 +415,21 @@ impl WalWriter {
     /// readers (which hold the old inode) never observe a torn file —
     /// they reopen on the generation bump.
     pub fn truncate_retaining(&mut self, retain: u64) -> Result<()> {
+        if let Some(kind) =
+            self.faults.as_ref().and_then(|f| f.check(FaultSite::WalTruncate, self.seq))
+        {
+            // The crash-between-checkpoint-commit-and-truncate window:
+            // the snapshot rename has already committed when the
+            // coordinator calls this, so dying (or erroring) here leaves
+            // a committed checkpoint plus a stale log — recovery must
+            // replay only `seq > last_seq` and end up in exactly the
+            // checkpointed state.
+            if kind == FaultKind::Crash {
+                enact_crash(FaultSite::WalTruncate);
+            }
+            return Err(injected_error(FaultSite::WalTruncate, kind)
+                .context(format!("truncating WAL {}", self.path.display())));
+        }
         let cut_seq = self.seq.saturating_sub(retain);
         let floor = self.signal.snapshot().floor_seq;
         if retain > 0 && cut_seq <= floor {
@@ -812,6 +888,12 @@ impl WalHandle {
     /// Sequence number of the most recently logged mutation.
     pub fn seq(&self) -> u64 {
         self.writer.lock().unwrap().seq()
+    }
+
+    /// Swap the writer's fault injector (tests and drills; `None`
+    /// restores passthrough). Takes the WAL lock briefly.
+    pub fn set_fault_injector(&self, faults: Option<Arc<FaultInjector>>) {
+        self.writer.lock().unwrap().set_fault_injector(faults);
     }
 
     /// The writer's tail-progress signal (replication subscribers wait on

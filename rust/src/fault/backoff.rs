@@ -1,0 +1,133 @@
+//! Bounded exponential backoff with deterministic seeded jitter.
+//!
+//! The replication reconnect paths used a fixed 1-second pause, which
+//! makes every follower (and the router) hammer a dead leader in
+//! lockstep. [`Backoff`] replaces that: delays double from a base up to
+//! a cap, and each delay is scaled by a jitter factor in `[0.5, 1.0)`
+//! drawn from a seeded [`Rng`] — so two nodes seeded differently
+//! desynchronize, while the same seed replays the same delay sequence
+//! bit-for-bit (the module is covered by the `replay-determinism` lint).
+//!
+//! The struct is pure: it computes delays, the caller sleeps. Every
+//! computed delay counts as a retry in
+//! [`crate::metrics::FaultGauges`]; the first time a streak reaches the
+//! cap it is counted as a circuit-open window (the remote is considered
+//! down, retries are at maximum spacing) until [`Backoff::reset`].
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Exponential backoff state for one retry loop.
+#[derive(Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    saturated: bool,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// `base` is the first delay, `cap` the largest (pre-jitter); `seed`
+    /// fixes the jitter stream. Seed from something stable and per-node
+    /// (an address, a WAL dir) so distinct nodes desynchronize but the
+    /// same node replays the same sequence.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        let base_ms = (base.as_millis() as u64).max(1);
+        Backoff {
+            base_ms,
+            cap_ms: (cap.as_millis() as u64).max(base_ms),
+            attempt: 0,
+            saturated: false,
+            rng: Rng::seeded(seed),
+        }
+    }
+
+    /// The next delay to sleep before retrying: `min(cap, base << n)`
+    /// scaled by a jitter factor in `[0.5, 1.0)`.
+    pub fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(20);
+        let exp_ms = self.cap_ms.min(self.base_ms.saturating_mul(1u64 << shift));
+        if exp_ms >= self.cap_ms && !self.saturated {
+            self.saturated = true;
+            crate::metrics::faults().note_circuit_open();
+        }
+        self.attempt = self.attempt.saturating_add(1);
+        crate::metrics::faults().note_backoff_retry();
+        let jitter = 0.5 + 0.5 * self.rng.f64();
+        Duration::from_millis(((exp_ms as f64 * jitter) as u64).max(1))
+    }
+
+    /// The remote answered: start the next streak from the base delay.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+        self.saturated = false;
+    }
+
+    /// Retries in the current streak.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delays(seed: u64, n: usize) -> Vec<Duration> {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5), seed);
+        (0..n).map(|_| b.next_delay()).collect()
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_sequence() {
+        assert_eq!(delays(7, 12), delays(7, 12));
+        assert_ne!(delays(7, 12), delays(8, 12));
+    }
+
+    #[test]
+    fn delays_grow_exponentially_within_jitter_bounds() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5), 42);
+        for i in 0..10u32 {
+            let exp_ms = 5_000u64.min(100u64 << i.min(20));
+            let d = b.next_delay().as_millis() as u64;
+            assert!(
+                d >= exp_ms / 2 && d <= exp_ms,
+                "attempt {i}: delay {d} ms outside [{}, {exp_ms}]",
+                exp_ms / 2
+            );
+        }
+    }
+
+    #[test]
+    fn cap_bounds_every_delay_and_reset_restarts() {
+        let mut b = Backoff::new(Duration::from_millis(200), Duration::from_secs(2), 3);
+        for _ in 0..32 {
+            assert!(b.next_delay() <= Duration::from_secs(2));
+        }
+        assert!(b.attempt() >= 32);
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        // Post-reset the first delay is base-scale again.
+        assert!(b.next_delay() <= Duration::from_millis(200));
+    }
+
+    #[test]
+    fn retries_and_circuit_opens_are_counted() {
+        let f = crate::metrics::faults();
+        let retries0 = f.backoff_retries();
+        let circuits0 = f.circuit_open_windows();
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(4), 1);
+        for _ in 0..8 {
+            b.next_delay();
+        }
+        b.reset();
+        for _ in 0..8 {
+            b.next_delay();
+        }
+        assert!(f.backoff_retries() >= retries0 + 16);
+        // One circuit-open window per saturated streak.
+        assert!(f.circuit_open_windows() >= circuits0 + 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! The runtime half of a fault plan: seeded, exactly-once rule firing.
+//!
+//! A [`FaultInjector`] is built from a parsed [`FaultPlan`] and consulted
+//! at the injection sites in the WAL/checkpoint path via
+//! [`FaultInjector::check`]. Each `WalWriter` captures the process-global
+//! injector (installed from `--fault-plan` / `GUS_FAULT_PLAN` via
+//! [`install_global`]) once at open time, so tests can instead hand a
+//! private injector to one writer without any cross-test bleed under
+//! parallel `cargo test`.
+//!
+//! Firing is deterministic: `@nth` rules count visits to their site,
+//! `@seq` rules compare the seq the site passes in, and both fire exactly
+//! once. Every fired fault is counted in
+//! [`crate::metrics::FaultGauges`] so a drill can assert the plan
+//! actually executed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::fault::plan::{FaultKind, FaultPlan, FaultRule, FaultSite, Trigger};
+
+/// One rule plus its firing state.
+struct RuleState {
+    rule: FaultRule,
+    /// Visits to this rule's site (drives `@nth`).
+    visits: AtomicU64,
+    /// Times this rule has fired (caps `@nth`/`@seq` at one).
+    fired: AtomicU64,
+}
+
+/// A live fault plan. Cheap to consult: rule lists are tiny and the
+/// no-plan case never constructs one at all.
+pub struct FaultInjector {
+    rules: Vec<RuleState>,
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        let rules = plan
+            .rules
+            .iter()
+            .map(|&rule| RuleState {
+                rule,
+                visits: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+            })
+            .collect();
+        Arc::new(FaultInjector { rules, plan })
+    }
+
+    /// The plan this injector executes (for logging).
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Consult the plan at `site`; `seq` is the record/checkpoint seq the
+    /// site is operating on. Returns the fault to inject, if any fires.
+    pub fn check(&self, site: FaultSite, seq: u64) -> Option<FaultKind> {
+        let mut hit = None;
+        for r in &self.rules {
+            if r.rule.site != site {
+                continue;
+            }
+            let fires = match r.rule.trigger {
+                Trigger::Always => {
+                    r.fired.fetch_add(1, Ordering::SeqCst);
+                    true
+                }
+                Trigger::Nth(n) => {
+                    let visit = r.visits.fetch_add(1, Ordering::SeqCst) + 1;
+                    if visit == n {
+                        r.fired.fetch_add(1, Ordering::SeqCst);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Trigger::Seq(s) => {
+                    seq == s
+                        && r.fired
+                            .compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst)
+                            .is_ok()
+                }
+            };
+            if fires {
+                hit = hit.or(Some(r.rule.kind));
+            }
+        }
+        if let Some(kind) = hit {
+            crate::metrics::faults().note_injected(kind.name());
+        }
+        hit
+    }
+
+    /// Total faults this injector has fired (all rules).
+    pub fn fired_total(&self) -> u64 {
+        self.rules.iter().map(|r| r.fired.load(Ordering::SeqCst)).sum()
+    }
+}
+
+/// The process-global injector `--fault-plan` / `GUS_FAULT_PLAN` arms.
+static GLOBAL: OnceLock<Arc<FaultInjector>> = OnceLock::new();
+
+/// Arm the process-global fault plan. Fails if one is already armed
+/// (plans are process-scoped and never silently replaced).
+pub fn install_global(injector: Arc<FaultInjector>) -> Result<()> {
+    let plan = injector.plan().to_string();
+    if GLOBAL.set(injector).is_err() {
+        bail!("a fault plan is already armed in this process (wanted '{plan}')");
+    }
+    Ok(())
+}
+
+/// The armed process-global injector, if any. Captured once per
+/// `WalWriter` at open time.
+pub fn global() -> Option<Arc<FaultInjector>> {
+    GLOBAL.get().cloned()
+}
+
+/// Consult the global injector directly (sites without a captured copy).
+pub fn check_global(site: FaultSite, seq: u64) -> Option<FaultKind> {
+    GLOBAL.get().and_then(|inj| inj.check(site, seq))
+}
+
+/// Enact an injected `crash` fault: abort the process at the site, the
+/// way a power cut would — no unwinding, no destructors, no flush. Only
+/// meaningful for child processes under a drill.
+pub fn enact_crash(site: FaultSite) -> ! {
+    eprintln!("[fault] injected crash at {}", site.name());
+    std::process::abort()
+}
+
+/// The error an injected non-crash fault surfaces as. The message
+/// carries a stable `injected fault` marker (the server maps it to
+/// `UNAVAILABLE`, and tests key on it).
+pub fn injected_error(site: FaultSite, kind: FaultKind) -> anyhow::Error {
+    let detail = match kind {
+        FaultKind::Enospc => "No space left on device (os error 28)",
+        FaultKind::Torn => "short write (torn frame)",
+        _ => "input/output error",
+    };
+    anyhow::anyhow!("injected fault at {}: {detail}", site.name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn injector(spec: &str) -> Arc<FaultInjector> {
+        FaultInjector::new(FaultPlan::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn nth_fires_on_exactly_the_nth_visit() {
+        let inj = injector("fsync:err@nth=3");
+        assert_eq!(inj.check(FaultSite::Fsync, 0), None);
+        assert_eq!(inj.check(FaultSite::Fsync, 0), None);
+        assert_eq!(inj.check(FaultSite::Fsync, 0), Some(FaultKind::Err));
+        assert_eq!(inj.check(FaultSite::Fsync, 0), None);
+        assert_eq!(inj.fired_total(), 1);
+    }
+
+    #[test]
+    fn seq_fires_once_at_the_target_seq() {
+        let inj = injector("wal_append:enospc@seq=5");
+        assert_eq!(inj.check(FaultSite::WalAppend, 4), None);
+        assert_eq!(inj.check(FaultSite::WalAppend, 5), Some(FaultKind::Enospc));
+        // A retry of the same seq succeeds: the rule is spent.
+        assert_eq!(inj.check(FaultSite::WalAppend, 5), None);
+        assert_eq!(inj.check(FaultSite::WalAppend, 6), None);
+    }
+
+    #[test]
+    fn always_fires_every_time_and_sites_do_not_cross() {
+        let inj = injector("wal_truncate:err");
+        for _ in 0..3 {
+            assert_eq!(inj.check(FaultSite::WalTruncate, 9), Some(FaultKind::Err));
+        }
+        assert_eq!(inj.check(FaultSite::WalAppend, 9), None);
+        assert_eq!(inj.check(FaultSite::Fsync, 9), None);
+        assert_eq!(inj.fired_total(), 3);
+    }
+
+    #[test]
+    fn visits_only_count_matching_sites() {
+        let inj = injector("fsync:err@nth=2;wal_append:err@nth=1");
+        assert_eq!(inj.check(FaultSite::WalAppend, 1), Some(FaultKind::Err));
+        // The wal_append visit must not have advanced the fsync counter.
+        assert_eq!(inj.check(FaultSite::Fsync, 1), None);
+        assert_eq!(inj.check(FaultSite::Fsync, 2), Some(FaultKind::Err));
+    }
+
+    #[test]
+    fn injected_errors_carry_the_marker() {
+        let e = injected_error(FaultSite::WalAppend, FaultKind::Enospc);
+        let msg = format!("{e}");
+        assert!(msg.contains("injected fault"), "{msg}");
+        assert!(msg.contains("wal_append"), "{msg}");
+        assert!(msg.contains("No space left"), "{msg}");
+    }
+}

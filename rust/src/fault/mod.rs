@@ -1,0 +1,45 @@
+//! Deterministic fault injection: disk faults, network faults, backoff.
+//!
+//! The paper's serving story is "correct and low-latency while the data
+//! evolves continuously" — which in production means serving *through*
+//! partial failure, not just restarting after a clean crash. This module
+//! is the seeded, replay-deterministic fault layer that drives the
+//! durability and replication machinery through exactly those failures:
+//!
+//! - [`plan`] — the `--fault-plan` / `GUS_FAULT_PLAN` grammar
+//!   (`wal_append:enospc@seq=1200;fsync:err@nth=3`): *where* a disk
+//!   fault fires, *what* it looks like, and *when*.
+//! - [`injector`] — the runtime half of a plan: each WAL writer captures
+//!   the process-global [`injector::FaultInjector`] at open time and
+//!   consults it at the injection sites in
+//!   [`crate::coordinator::wal`] / [`crate::coordinator::snapshot`].
+//!   The default (no plan) is a `None` field — one branch on the hot
+//!   path, no allocation, no locking.
+//! - [`backoff`] — bounded exponential backoff with deterministic seeded
+//!   jitter, used by the replication reconnect paths so a dead leader
+//!   doesn't make every follower hammer in lockstep.
+//! - [`schedule`] — a seeded generator of network-fault windows
+//!   (partitions, one-way blackholes, added latency, bandwidth caps,
+//!   mid-frame truncation). Same seed ⇒ bit-identical schedule; that is
+//!   the replay contract the chaos drill's determinism gate asserts.
+//! - [`proxy`] — `gus chaosproxy`: a hand-rolled TCP relay that executes
+//!   a [`schedule::Schedule`] between router, followers and leader. The
+//!   schedule *executor* necessarily reads the wall clock, so `proxy.rs`
+//!   is the one file here exempt from the `replay-determinism` lint.
+//!
+//! Injected faults and backoff activity are counted in
+//! [`crate::metrics::FaultGauges`], surfaced as the `"faults"` stats
+//! section — drills assert faults actually fired rather than silently
+//! passing. See `docs/CHAOS.md` for the full grammar and the drill's
+//! invariant gates.
+
+pub mod backoff;
+pub mod injector;
+pub mod plan;
+pub mod proxy;
+pub mod schedule;
+
+pub use backoff::Backoff;
+pub use injector::{check_global, global, install_global, FaultInjector};
+pub use plan::{FaultKind, FaultPlan, FaultSite, Trigger};
+pub use schedule::{NetFault, Schedule, Window};

@@ -1,0 +1,282 @@
+//! The fault-plan grammar: which disk fault fires where, and when.
+//!
+//! A plan is a `;`-separated list of rules, each
+//! `site:kind[@trigger]`:
+//!
+//! ```text
+//! wal_append:enospc@seq=1200 ; fsync:err@nth=3 ; checkpoint_rename:crash
+//! ```
+//!
+//! - **site** — `wal_append` (the record write in
+//!   `WalWriter::append_frame`), `fsync` (`WalWriter::sync`),
+//!   `wal_truncate` (entry of `WalWriter::truncate_retaining` — the
+//!   crash-between-checkpoint-commit-and-truncate window), or
+//!   `checkpoint_rename` (the `snapshot.json` rename that commits a
+//!   checkpoint).
+//! - **kind** — `enospc` (a short write then "no space": exercises the
+//!   rollback-to-record-boundary path), `err` (a plain I/O error with
+//!   nothing written), `crash` (the process aborts at the site, as a real
+//!   power cut would — for child-process drills only), or `torn` (a
+//!   partial frame hits the disk before the error; `wal_append` only).
+//! - **trigger** — `@seq=N` (fire when the record/checkpoint seq is N),
+//!   `@nth=N` (fire on the N-th time this site is reached, 1-based), or
+//!   omitted (fire every time). `seq`/`nth` rules fire exactly once.
+//!
+//! Parsing is pure and order-preserving: the same spec always produces
+//! the same plan, and [`std::fmt::Display`] round-trips it.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// A file-I/O point the WAL/checkpoint path routes through the injector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The frame write in `WalWriter::append_frame`.
+    WalAppend,
+    /// `WalWriter::sync` (the fsync the durability policy ordered).
+    Fsync,
+    /// Entry of `WalWriter::truncate_retaining` — between a committed
+    /// checkpoint and the log truncation that depends on it.
+    WalTruncate,
+    /// The `snapshot.json` rename that commits a checkpoint
+    /// (`snapshot::save_with_seq`).
+    CheckpointRename,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WalAppend => "wal_append",
+            FaultSite::Fsync => "fsync",
+            FaultSite::WalTruncate => "wal_truncate",
+            FaultSite::CheckpointRename => "checkpoint_rename",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        Ok(match s {
+            "wal_append" => FaultSite::WalAppend,
+            "fsync" => FaultSite::Fsync,
+            "wal_truncate" => FaultSite::WalTruncate,
+            "checkpoint_rename" => FaultSite::CheckpointRename,
+            other => bail!(
+                "unknown fault site '{other}' \
+                 (wal_append|fsync|wal_truncate|checkpoint_rename)"
+            ),
+        })
+    }
+}
+
+/// What the injected failure looks like to the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A short write followed by "no space left on device".
+    Enospc,
+    /// A plain I/O error with nothing written.
+    Err,
+    /// Abort the process at the site (a power cut, not an error return).
+    Crash,
+    /// A partial frame reaches the file before the error (`wal_append`
+    /// only — models a torn write).
+    Torn,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Enospc => "enospc",
+            FaultKind::Err => "err",
+            FaultKind::Crash => "crash",
+            FaultKind::Torn => "torn",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "enospc" => FaultKind::Enospc,
+            "err" => FaultKind::Err,
+            "crash" => FaultKind::Crash,
+            "torn" => FaultKind::Torn,
+            other => bail!("unknown fault kind '{other}' (enospc|err|crash|torn)"),
+        })
+    }
+}
+
+/// When a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Every time the site is reached.
+    Always,
+    /// The N-th time the site is reached (1-based); fires once.
+    Nth(u64),
+    /// When the seq passed at the site equals N; fires once.
+    Seq(u64),
+}
+
+impl Trigger {
+    fn parse(s: &str) -> Result<Trigger> {
+        let Some((key, val)) = s.split_once('=') else {
+            bail!("bad fault trigger '{s}' (want seq=N or nth=N)");
+        };
+        let n: u64 = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad fault trigger count '{val}'"))?;
+        match key.trim() {
+            "seq" => Ok(Trigger::Seq(n)),
+            "nth" => {
+                if n == 0 {
+                    bail!("fault trigger nth=0 (counts are 1-based)");
+                }
+                Ok(Trigger::Nth(n))
+            }
+            other => bail!("unknown fault trigger '{other}' (seq|nth)"),
+        }
+    }
+}
+
+impl fmt::Display for Trigger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Trigger::Always => Ok(()),
+            Trigger::Nth(n) => write!(f, "@nth={n}"),
+            Trigger::Seq(n) => write!(f, "@seq={n}"),
+        }
+    }
+}
+
+/// One `site:kind[@trigger]` rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}{}", self.site.name(), self.kind.name(), self.trigger)
+    }
+}
+
+/// A parsed fault plan: an ordered list of rules.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a spec like `wal_append:enospc@seq=1200;fsync:err@nth=3`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((site, rest)) = part.split_once(':') else {
+                bail!("bad fault rule '{part}' (want site:kind[@trigger])");
+            };
+            let (kind, trigger) = match rest.split_once('@') {
+                Some((k, t)) => (k, Trigger::parse(t.trim())?),
+                None => (rest, Trigger::Always),
+            };
+            let rule = FaultRule {
+                site: FaultSite::parse(site.trim())?,
+                kind: FaultKind::parse(kind.trim())?,
+                trigger,
+            };
+            if rule.kind == FaultKind::Torn && rule.site != FaultSite::WalAppend {
+                bail!("fault kind 'torn' only applies to wal_append (got {})", rule);
+            }
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            bail!("empty fault plan");
+        }
+        Ok(FaultPlan { rules })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            write!(f, "{r}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_examples() {
+        let p = FaultPlan::parse(
+            "wal_append:enospc@seq=1200; fsync:err@nth=3 ;checkpoint_rename:crash",
+        )
+        .unwrap();
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(
+            p.rules[0],
+            FaultRule {
+                site: FaultSite::WalAppend,
+                kind: FaultKind::Enospc,
+                trigger: Trigger::Seq(1200),
+            }
+        );
+        assert_eq!(
+            p.rules[1],
+            FaultRule {
+                site: FaultSite::Fsync,
+                kind: FaultKind::Err,
+                trigger: Trigger::Nth(3),
+            }
+        );
+        assert_eq!(
+            p.rules[2],
+            FaultRule {
+                site: FaultSite::CheckpointRename,
+                kind: FaultKind::Crash,
+                trigger: Trigger::Always,
+            }
+        );
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for spec in [
+            "wal_append:enospc@seq=1200",
+            "fsync:err@nth=3",
+            "checkpoint_rename:crash",
+            "wal_truncate:err@nth=1;wal_append:torn@seq=7",
+        ] {
+            let p = FaultPlan::parse(spec).unwrap();
+            assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p, "{spec}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            " ; ",
+            "wal_append",
+            "wal_append:explode",
+            "nowhere:err",
+            "fsync:err@3",
+            "fsync:err@nth=zero",
+            "fsync:err@nth=0",
+            "fsync:err@at=3",
+            "fsync:torn",           // torn is wal_append-only
+            "wal_truncate:torn@nth=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! `gus chaosproxy`: a TCP relay that executes a fault [`Schedule`].
+//!
+//! The proxy sits between cluster members (router → follower, follower →
+//! leader) and relays bytes verbatim until its schedule says otherwise:
+//! partitions cut existing connections and refuse new ones, one-way
+//! blackholes silently swallow bytes in one direction, latency/bandwidth
+//! windows shape the relay, and truncate windows cut a connection after
+//! forwarding half a chunk (a mid-frame tear on the replication stream).
+//!
+//! The schedule itself is deterministic from its seed
+//! ([`Schedule::generate`]); this module is the *executor* and
+//! necessarily reads the wall clock — it is deliberately excluded from
+//! the `replay-determinism` lint (see `tools/lint`). The clock starts at
+//! [`ChaosProxy::arm`], not at bind time, so a drill can boot its
+//! topology through quiescent proxies and start the fault timeline
+//! exactly when load starts.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::fault::schedule::{NetFault, Schedule};
+
+/// How long the proxy waits for the upstream when a client connects.
+const UPSTREAM_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Pump read timeout: bounds how stale a pump's view of the schedule can
+/// get on an idle connection (a partition must cut idle streams too).
+const PUMP_POLL: Duration = Duration::from_millis(100);
+
+/// Relay chunk size. Small enough that latency/bandwidth shaping and
+/// truncation act mid-frame on the replication stream.
+const CHUNK: usize = 8 * 1024;
+
+/// Relay direction, for one-way faults.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    /// client → upstream
+    Up,
+    /// upstream → client
+    Down,
+}
+
+struct Shared {
+    upstream: String,
+    schedule: Schedule,
+    /// Fault-timeline origin; `None` = not armed yet (pure passthrough).
+    t0: Mutex<Option<Instant>>,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// The fault active right now, if the timeline is armed.
+    fn active(&self) -> Option<NetFault> {
+        let t0 = (*self.t0.lock().unwrap())?;
+        self.schedule.active(t0.elapsed().as_millis() as u64)
+    }
+}
+
+/// A running chaosproxy; dropping it stops the relay.
+pub struct ChaosProxy {
+    shared: Arc<Shared>,
+    addr: String,
+}
+
+impl ChaosProxy {
+    /// The address the proxy listens on.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Start the fault timeline (before this the proxy is passthrough).
+    pub fn arm(&self) {
+        *self.shared.t0.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// Stop relaying and release the listener.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop out of its blocking accept.
+        let _ = TcpStream::connect(&self.addr);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind `listen` and relay every connection to `upstream` under
+/// `schedule`. Returns immediately; the relay runs on detached threads.
+pub fn start(listen: &str, upstream: &str, schedule: Schedule) -> Result<ChaosProxy> {
+    let listener = TcpListener::bind(listen).with_context(|| format!("chaosproxy bind {listen}"))?;
+    let addr = listener.local_addr()?.to_string();
+    let shared = Arc::new(Shared {
+        upstream: upstream.to_string(),
+        schedule,
+        t0: Mutex::new(None),
+        stop: AtomicBool::new(false),
+    });
+    let accept_shared = Arc::clone(&shared);
+    std::thread::Builder::new()
+        .name("gus-chaosproxy".into())
+        .spawn(move || accept_loop(listener, accept_shared))
+        .context("spawning chaosproxy accept loop")?;
+    Ok(ChaosProxy { shared, addr })
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(client) = stream else { continue };
+        if matches!(shared.active(), Some(NetFault::Partition)) {
+            // Partitioned: accept-and-drop looks like a dead host.
+            drop(client);
+            continue;
+        }
+        let up = match upstream_connect(&shared.upstream) {
+            Ok(s) => s,
+            Err(_) => {
+                drop(client);
+                continue;
+            }
+        };
+        client.set_nodelay(true).ok();
+        up.set_nodelay(true).ok();
+        spawn_pump(&shared, &client, &up, Dir::Up);
+        spawn_pump(&shared, &up, &client, Dir::Down);
+    }
+}
+
+fn upstream_connect(addr: &str) -> Result<TcpStream> {
+    let sock: std::net::SocketAddr = addr.parse().with_context(|| format!("upstream {addr}"))?;
+    TcpStream::connect_timeout(&sock, UPSTREAM_CONNECT_TIMEOUT)
+        .with_context(|| format!("chaosproxy connect upstream {addr}"))
+}
+
+fn spawn_pump(shared: &Arc<Shared>, src: &TcpStream, dst: &TcpStream, dir: Dir) {
+    let (Ok(src), Ok(dst)) = (src.try_clone(), dst.try_clone()) else {
+        let _ = src.shutdown(Shutdown::Both);
+        return;
+    };
+    let shared = Arc::clone(shared);
+    let _ = std::thread::Builder::new()
+        .name("gus-chaospump".into())
+        .spawn(move || pump(shared, src, dst, dir));
+}
+
+/// Relay one direction until the connection dies, the proxy stops, or a
+/// partition/truncate window cuts it.
+fn pump(shared: Arc<Shared>, mut src: TcpStream, mut dst: TcpStream, dir: Dir) {
+    src.set_read_timeout(Some(PUMP_POLL)).ok();
+    let mut buf = [0u8; CHUNK];
+    loop {
+        if shared.stop.load(Ordering::SeqCst)
+            || matches!(shared.active(), Some(NetFault::Partition))
+        {
+            break;
+        }
+        let n = match src.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        match shared.active() {
+            Some(NetFault::Partition) => break,
+            Some(NetFault::Truncate) => {
+                // Mid-frame tear: half the chunk arrives, then the wire dies.
+                let _ = dst.write_all(&buf[..n / 2]);
+                break;
+            }
+            Some(NetFault::BlackholeUp) if dir == Dir::Up => continue,
+            Some(NetFault::BlackholeDown) if dir == Dir::Down => continue,
+            Some(NetFault::Latency { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            Some(NetFault::Bandwidth { bytes_per_s }) => {
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+                let pace_ms = (n as u64 * 1_000) / bytes_per_s.max(1);
+                std::thread::sleep(Duration::from_millis(pace_ms));
+            }
+            _ => {
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}

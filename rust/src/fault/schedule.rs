@@ -1,0 +1,231 @@
+//! Seeded network-fault schedules: the chaos drill's replay contract.
+//!
+//! A [`Schedule`] is a list of non-overlapping fault windows over a drill
+//! span, generated deterministically from a seed: the same seed always
+//! produces the bit-identical schedule (windows, kinds, parameters), so
+//! `gus loadgen --chaos <seed>` replays the same fault sequence
+//! bit-for-bit. [`Schedule::digest`] hashes the canonical description,
+//! giving drills and CI a one-number replay check.
+//!
+//! Generation leaves the tail of the span fault-free so the cluster has
+//! a clean window to reconverge in before the drill's invariant gates
+//! run. The schedule *executor* is [`crate::fault::proxy`] — this module
+//! stays clock-free (covered by the `replay-determinism` lint).
+
+use crate::util::hash::{hash_bytes, mix2};
+use crate::util::rng::Rng;
+
+/// One network fault a chaosproxy can execute. Directions are relative
+/// to the proxied client: *up* is client→upstream, *down* is
+/// upstream→client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFault {
+    /// Full partition: existing connections are cut, new ones dropped.
+    Partition,
+    /// One-way blackhole: client→upstream bytes vanish silently.
+    BlackholeUp,
+    /// One-way blackhole: upstream→client bytes vanish silently.
+    BlackholeDown,
+    /// Added per-chunk latency, both directions.
+    Latency { ms: u64 },
+    /// Bandwidth cap, both directions.
+    Bandwidth { bytes_per_s: u64 },
+    /// Forward half of the next chunk, then cut the connection mid-frame.
+    Truncate,
+}
+
+impl NetFault {
+    pub fn name(self) -> &'static str {
+        match self {
+            NetFault::Partition => "partition",
+            NetFault::BlackholeUp => "blackhole_up",
+            NetFault::BlackholeDown => "blackhole_down",
+            NetFault::Latency { .. } => "latency",
+            NetFault::Bandwidth { .. } => "bandwidth",
+            NetFault::Truncate => "truncate",
+        }
+    }
+
+    fn describe(self) -> String {
+        match self {
+            NetFault::Latency { ms } => format!("latency({ms}ms)"),
+            NetFault::Bandwidth { bytes_per_s } => format!("bandwidth({bytes_per_s}B/s)"),
+            other => other.name().to_string(),
+        }
+    }
+}
+
+/// One fault window: `fault` is active for `[start_ms, end_ms)` of
+/// elapsed drill time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub start_ms: u64,
+    pub end_ms: u64,
+    pub fault: NetFault,
+}
+
+/// A deterministic, non-overlapping sequence of fault windows.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schedule {
+    pub windows: Vec<Window>,
+}
+
+impl Schedule {
+    /// A schedule that never injects anything (plain relay).
+    pub fn passthrough() -> Schedule {
+        Schedule { windows: Vec::new() }
+    }
+
+    /// Generate the schedule for one proxy: alternating quiet gaps and
+    /// fault windows over `span_ms`, with the last ~fifth of the span
+    /// kept fault-free for reconvergence. `ensure_partition` guarantees
+    /// at least one partition window (the drill's leader proxy wants one
+    /// so the reconnect/backoff machinery is provably exercised); the
+    /// rewrite is itself deterministic, so the replay contract holds.
+    pub fn generate(seed: u64, span_ms: u64, ensure_partition: bool) -> Schedule {
+        let mut rng = Rng::seeded(mix2(seed, 0xc4a0_5eed));
+        let tail_quiet = span_ms / 5 + 200;
+        let mut windows = Vec::new();
+        let mut t = 0u64;
+        loop {
+            t += 300 + rng.below(900);
+            let dur = 400 + rng.below(400);
+            if t + dur + tail_quiet > span_ms {
+                break;
+            }
+            let fault = match rng.below(6) {
+                0 => NetFault::Partition,
+                1 => NetFault::BlackholeUp,
+                2 => NetFault::BlackholeDown,
+                3 => NetFault::Latency { ms: 20 + rng.below(80) },
+                4 => NetFault::Bandwidth { bytes_per_s: 16_384 + rng.below(49_152) },
+                _ => NetFault::Truncate,
+            };
+            windows.push(Window { start_ms: t, end_ms: t + dur, fault });
+            t += dur;
+        }
+        if ensure_partition && !windows.iter().any(|w| w.fault == NetFault::Partition) {
+            match windows.first_mut() {
+                Some(w) => w.fault = NetFault::Partition,
+                None => {
+                    // Span too short to have generated anything: synthesize
+                    // one early window, still leaving the quiet tail.
+                    let start = span_ms / 4;
+                    let end = (start + 400).min(span_ms.saturating_sub(tail_quiet)).max(start + 1);
+                    windows.push(Window { start_ms: start, end_ms: end, fault: NetFault::Partition });
+                }
+            }
+        }
+        Schedule { windows }
+    }
+
+    /// The fault active at `elapsed_ms` of drill time, if any.
+    pub fn active(&self, elapsed_ms: u64) -> Option<NetFault> {
+        self.windows
+            .iter()
+            .find(|w| w.start_ms <= elapsed_ms && elapsed_ms < w.end_ms)
+            .map(|w| w.fault)
+    }
+
+    /// Canonical human/machine description, e.g.
+    /// `partition@300..800;latency(45ms)@1200..1700`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .windows
+            .iter()
+            .map(|w| format!("{}@{}..{}", w.fault.describe(), w.start_ms, w.end_ms))
+            .collect();
+        parts.join(";")
+    }
+
+    /// Replay digest: a stable hash of the canonical description. Two
+    /// schedules are the same iff their digests match (modulo hash
+    /// collisions), which is what the drill prints and CI compares.
+    pub fn digest(&self) -> u64 {
+        hash_bytes(self.describe().as_bytes())
+    }
+
+    /// `(kind name, window count)` pairs, in first-seen order.
+    pub fn windows_by_kind(&self) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = Vec::new();
+        for w in &self.windows {
+            match out.iter_mut().find(|(name, _)| *name == w.fault.name()) {
+                Some((_, n)) => *n += 1,
+                None => out.push((w.fault.name(), 1)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_is_bit_identical_different_seed_is_not() {
+        let a = Schedule::generate(0xfeed, 10_000, true);
+        let b = Schedule::generate(0xfeed, 10_000, true);
+        let c = Schedule::generate(0xfeee, 10_000, true);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert!(!a.windows.is_empty());
+        assert_ne!(a.digest(), c.digest(), "distinct seeds should diverge");
+    }
+
+    #[test]
+    fn windows_are_ordered_disjoint_and_leave_a_quiet_tail() {
+        for seed in 0..50u64 {
+            let span = 8_000;
+            let sc = Schedule::generate(seed, span, false);
+            let mut prev_end = 0;
+            for w in &sc.windows {
+                assert!(w.start_ms >= prev_end, "overlap at seed {seed}");
+                assert!(w.end_ms > w.start_ms);
+                assert!(
+                    w.end_ms + span / 5 <= span,
+                    "seed {seed}: window {}..{} intrudes on the quiet tail",
+                    w.start_ms,
+                    w.end_ms
+                );
+                prev_end = w.end_ms;
+            }
+        }
+    }
+
+    #[test]
+    fn active_lookup_matches_windows() {
+        let sc = Schedule::generate(3, 12_000, false);
+        assert!(!sc.windows.is_empty());
+        let w = sc.windows[0];
+        assert_eq!(sc.active(w.start_ms), Some(w.fault));
+        assert_eq!(sc.active(w.end_ms - 1), Some(w.fault));
+        assert_eq!(sc.active(w.start_ms.saturating_sub(1)), None);
+        assert_eq!(Schedule::passthrough().active(500), None);
+    }
+
+    #[test]
+    fn ensure_partition_guarantees_one_even_on_short_spans() {
+        for seed in 0..50u64 {
+            for span in [2_000u64, 6_000] {
+                let sc = Schedule::generate(seed, span, true);
+                assert!(
+                    sc.windows.iter().any(|w| w.fault == NetFault::Partition),
+                    "seed {seed} span {span}: no partition window"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn digest_tracks_content() {
+        let mut sc = Schedule::generate(9, 10_000, false);
+        let d0 = sc.digest();
+        if let Some(w) = sc.windows.first_mut() {
+            w.end_ms += 1;
+        }
+        assert_ne!(sc.digest(), d0);
+        let kinds: u64 = sc.windows_by_kind().iter().map(|&(_, n)| n).sum();
+        assert_eq!(kinds as usize, sc.windows.len());
+    }
+}

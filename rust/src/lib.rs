@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod data;
 pub mod embed;
 pub mod eval;
+pub mod fault;
 pub mod grale;
 pub mod graph;
 pub mod index;

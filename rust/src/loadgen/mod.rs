@@ -10,9 +10,9 @@
 //!
 //! - [`mix`] — operation mixtures (`insert=10,delete=2,query=80,...`);
 //! - [`scenario`] — replayable declarative workloads with SLO
-//!   thresholds; the three built-ins promote the `examples/` workloads,
-//!   and [`scenario::CorpusSpec`] is the shared corpus-setup helper the
-//!   examples themselves now use;
+//!   thresholds; three built-ins promote the `examples/` workloads, a
+//!   fourth is the chaos-drill default, and [`scenario::CorpusSpec`] is
+//!   the shared corpus-setup helper the examples themselves now use;
 //! - [`runner`] — the per-connection writer/reader engine, mutation
 //!   ledgers, and staleness recording;
 //! - [`report`] — quantiles, per-error-code counts, SLO gating, and the
@@ -30,6 +30,6 @@ pub mod scenario;
 pub mod verify;
 
 pub use mix::{Mix, OpKind};
-pub use report::LoadReport;
+pub use report::{ChaosProxyReport, ChaosSummary, LoadReport};
 pub use runner::{run_load, ConnectionLedger, LoadOptions, LoadOutcome};
 pub use scenario::{builtin, CorpusSpec, Scenario, SloSpec, SCENARIO_NAMES};

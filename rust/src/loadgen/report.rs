@@ -18,6 +18,66 @@ pub struct KindStats {
     pub latency: LatencySummary,
 }
 
+/// One proxy's executed fault schedule in a chaos drill.
+#[derive(Debug, Clone)]
+pub struct ChaosProxyReport {
+    /// Which link the proxy fronted (`leader`, `follower-1`, …).
+    pub label: String,
+    /// [`crate::fault::Schedule::digest`] — the replay check number.
+    pub digest: u64,
+    /// `(fault kind, window count)` pairs.
+    pub by_kind: Vec<(&'static str, u64)>,
+    /// Canonical schedule description (`partition@300..800;…`).
+    pub schedule: String,
+}
+
+/// Chaos-drill accounting (`gus loadgen --chaos`); `None` in every
+/// other mode.
+#[derive(Debug, Clone)]
+pub struct ChaosSummary {
+    pub seed: u64,
+    pub proxies: Vec<ChaosProxyReport>,
+    /// Drill end → every follower caught up to the leader's WAL seq
+    /// (`None` = the cluster never reconverged, which fails the gate).
+    pub reconverge_ms: Option<u64>,
+    /// Summed follower/leader `faults.backoff_retries` after the run —
+    /// proof the injected faults actually bit the reconnect machinery.
+    pub backoff_retries: u64,
+}
+
+impl ChaosSummary {
+    pub fn to_json(&self) -> Json {
+        let proxies = Json::Arr(
+            self.proxies
+                .iter()
+                .map(|p| {
+                    let by_kind = Json::Obj(
+                        p.by_kind
+                            .iter()
+                            .map(|&(k, n)| (k.to_string(), Json::u64(n)))
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("label", Json::str(p.label.clone())),
+                        ("digest", Json::str(format!("{:016x}", p.digest))),
+                        ("windows_by_kind", by_kind),
+                        ("schedule", Json::str(p.schedule.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("seed", Json::u64(self.seed)),
+            ("proxies", proxies),
+            (
+                "reconverge_ms",
+                self.reconverge_ms.map(Json::u64).unwrap_or(Json::Null),
+            ),
+            ("backoff_retries", Json::u64(self.backoff_retries)),
+        ])
+    }
+}
+
 /// Everything one load run measured.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
@@ -49,6 +109,8 @@ pub struct LoadReport {
     /// Acked mutations whose effect was missing after verification
     /// (`None` = no verification pass ran).
     pub lost_acked_mutations: Option<u64>,
+    /// Chaos-drill summary (`gus loadgen --chaos` only).
+    pub chaos: Option<ChaosSummary>,
 }
 
 impl LoadReport {
@@ -134,6 +196,10 @@ impl LoadReport {
                 "lost_acked_mutations",
                 self.lost_acked_mutations.map(Json::u64).unwrap_or(Json::Null),
             ),
+            (
+                "chaos",
+                self.chaos.as_ref().map(ChaosSummary::to_json).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -177,6 +243,26 @@ impl LoadReport {
         }
         if !self.errors.is_empty() {
             println!("error codes: {:?}", self.errors);
+        }
+        if let Some(chaos) = &self.chaos {
+            for p in &chaos.proxies {
+                println!(
+                    "chaos {:<12} digest {:016x}  {}",
+                    p.label,
+                    p.digest,
+                    if p.schedule.is_empty() { "(passthrough)" } else { &p.schedule }
+                );
+            }
+            match chaos.reconverge_ms {
+                Some(ms) => println!(
+                    "chaos seed {:#x}: reconverged in {ms} ms, {} backoff retries observed",
+                    chaos.seed, chaos.backoff_retries
+                ),
+                None => println!(
+                    "chaos seed {:#x}: cluster did NOT reconverge",
+                    chaos.seed
+                ),
+            }
         }
     }
 
@@ -222,6 +308,7 @@ pub fn empty_report(offered_rate: f64, duration_s: f64, connections: usize) -> L
         staleness_p99_ms: 0.0,
         server_stats: None,
         lost_acked_mutations: None,
+        chaos: None,
     }
 }
 
@@ -275,6 +362,35 @@ mod tests {
         assert!(j.get("lost_acked_mutations").is_null());
         assert_eq!(j.get("achieved_rate").as_f64(), Some(100.0));
         // Round-trips through the serializer.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn chaos_summary_serializes() {
+        let mut r = report_with(1.0, 2.0, 3.0);
+        r.chaos = Some(ChaosSummary {
+            seed: 7,
+            proxies: vec![ChaosProxyReport {
+                label: "leader".into(),
+                digest: 0xabc,
+                by_kind: vec![("partition", 2), ("latency", 1)],
+                schedule: "partition@300..800".into(),
+            }],
+            reconverge_ms: Some(1234),
+            backoff_retries: 3,
+        });
+        let j = r.to_json();
+        let chaos = j.get("chaos");
+        assert_eq!(chaos.get("seed").as_u64(), Some(7));
+        assert_eq!(chaos.get("reconverge_ms").as_u64(), Some(1234));
+        assert_eq!(chaos.get("backoff_retries").as_u64(), Some(3));
+        let proxies = chaos.get("proxies").as_arr().unwrap();
+        assert_eq!(proxies.len(), 1);
+        assert_eq!(proxies[0].get("digest").as_str(), Some("0000000000000abc"));
+        assert_eq!(
+            proxies[0].get("windows_by_kind").get("partition").as_u64(),
+            Some(2)
+        );
         assert_eq!(Json::parse(&j.dump()).unwrap(), j);
     }
 

@@ -235,7 +235,11 @@ pub fn run_load(addr: &str, opts: &LoadOptions, sampler: &PointSampler) -> Resul
 /// Best-effort: fetch the server's `stats` payload into the report (the
 /// server-side staleness/overload counters complement the client view).
 pub fn attach_server_stats(report: &mut LoadReport, addr: &str) {
-    if let Ok(mut client) = GusClient::connect(addr) {
+    // Bounded connect: a wedged or partitioned node (chaos drills leave
+    // those behind on purpose) must not hang the report.
+    let timeout = std::time::Duration::from_secs(1);
+    if let Ok(mut client) = GusClient::connect_timeout(addr, timeout) {
+        let _ = client.set_read_timeout(Some(std::time::Duration::from_secs(2)));
         if let Ok(stats) = client.stats() {
             report.server_stats = Some(stats);
         }

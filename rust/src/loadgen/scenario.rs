@@ -3,9 +3,11 @@
 //! A [`Scenario`] is a declarative spec — corpus + arrival rate +
 //! operation mixture + connection count + SLO thresholds — that the
 //! open-loop runner ([`crate::loadgen::runner`]) can replay bit-for-bit
-//! from its seeds. The three built-ins promote the `examples/` workloads
+//! from its seeds. Three built-ins promote the `examples/` workloads
 //! (android_security, recsys_stream, dynamic_clustering) into specs that
-//! `gus loadgen --scenario <name>` drives over the v1 wire protocol; the
+//! `gus loadgen --scenario <name>` drives over the v1 wire protocol, and
+//! a fourth (chaos_drill) is the default workload for the network-fault
+//! drill (`gus loadgen --chaos`); the
 //! [`CorpusSpec`] half is also the shared corpus-setup helper those
 //! examples use directly (they used to copy-paste it).
 
@@ -133,9 +135,10 @@ pub struct Scenario {
     pub slo: SloSpec,
 }
 
-/// Names of the built-in scenarios (the promoted `examples/` workloads).
-pub const SCENARIO_NAMES: [&str; 3] =
-    ["android_security", "recsys_stream", "dynamic_clustering"];
+/// Names of the built-in scenarios: the promoted `examples/` workloads
+/// plus the chaos-drill workload (`gus loadgen --chaos`'s default).
+pub const SCENARIO_NAMES: [&str; 4] =
+    ["android_security", "recsys_stream", "dynamic_clustering", "chaos_drill"];
 
 /// Look up a built-in scenario.
 ///
@@ -147,6 +150,10 @@ pub const SCENARIO_NAMES: [&str; 3] =
 ///   connections, with batch queries for shelf refreshes.
 /// - `dynamic_clustering` — graph mining under churn: query-dominated
 ///   neighborhood harvesting with a steady trickle of inserts.
+/// - `chaos_drill` — the network-fault drill workload: a moderate mixed
+///   load (inserts, deletes, queries) long enough for several fault
+///   windows plus the reconvergence tail, with per-request deadlines so
+///   blackholed requests fail fast instead of wedging a connection.
 pub fn builtin(name: &str) -> Option<Scenario> {
     let mix = |spec: &str| Mix::parse(spec).expect("builtin mix spec");
     match name {
@@ -185,6 +192,20 @@ pub fn builtin(name: &str) -> Option<Scenario> {
             deadline_ms: Some(1_000),
             load_seed: 0x5eed,
             slo: SloSpec { p50_ms: 25.0, p99_ms: 100.0, staleness_p99_ms: 2_000.0 },
+        }),
+        "chaos_drill" => Some(Scenario {
+            name: name.to_string(),
+            corpus: CorpusSpec::new("arxiv_like", 6_000, 0xc405, 10),
+            rate: 300.0,
+            duration_s: 10.0,
+            connections: 4,
+            mix: mix("insert=20,delete=5,query=75"),
+            batch: 16,
+            deadline_ms: Some(1_000),
+            load_seed: 0xd311,
+            // Latency under injected partitions/latency windows is not
+            // the drill's subject; thresholds stay loose and advisory.
+            slo: SloSpec { p50_ms: 100.0, p99_ms: 1_500.0, staleness_p99_ms: 5_000.0 },
         }),
         _ => None,
     }

@@ -20,6 +20,10 @@
 //!             # followers hold it durably (semi-sync). --wal-retain
 //!             # keeps N records past each checkpoint so lagging
 //!             # followers can stream instead of re-bootstrapping.
+//!             [--fault-plan 'wal_append:enospc@seq=1200;fsync:err@nth=3']
+//!             # deterministic disk-fault injection (flag or the
+//!             # GUS_FAULT_PLAN env var; `follow` accepts it too) — for
+//!             # drills and tests only. Grammar in docs/CHAOS.md.
 //! gus follow  --leader HOST:PORT --wal-dir DIR [--addr 127.0.0.1:7718]
 //!             [--peers HOST:PORT,..] [--ack-replicas R]
 //!             # replicating follower: bootstraps from the leader
@@ -33,6 +37,13 @@
 //!             # leader, fans queries out across all replicas and
 //!             # merges top-k; promotes the most-durable follower after
 //!             # --fail-threshold leaderless health rounds.
+//! gus chaosproxy --upstream HOST:PORT [--listen 127.0.0.1:0]
+//!             [--seed S] [--span-ms MS] [--ensure-partition] [--passthrough]
+//!             # deterministic TCP fault relay: executes the seeded
+//!             # schedule of partitions, one-way blackholes, latency,
+//!             # bandwidth caps and mid-frame truncation between cluster
+//!             # members. Same seed, same schedule, bit-for-bit; the
+//!             # fault timeline arms at startup. See docs/CHAOS.md.
 //! gus promote --addr 127.0.0.1:7718   # manually promote a follower
 //! gus recover --wal-dir DIR [--addr 127.0.0.1:7717]
 //!             # restore checkpoint + WAL, compact, optionally serve
@@ -63,6 +74,14 @@
 //!                                       # leader at T seconds, and prove a follower
 //!                                       # was promoted with zero acked-mutation loss
 //!                                       # (needs --wal-dir as a scratch base)
+//!             [--chaos SEED]            # deterministic network-fault drill: same
+//!                                       # four-process topology, but every inter-node
+//!                                       # link runs through a chaosproxy executing a
+//!                                       # seeded fault schedule. Gates: zero acked
+//!                                       # loss, follower WALs stay byte prefixes of
+//!                                       # the leader's, the cluster reconverges, and
+//!                                       # the same seed replays the same schedule
+//!                                       # (needs --wal-dir; see docs/CHAOS.md)
 //!             [--gate-latency] [--no-gate] [--bench-out NAME]
 //!             # open-loop load harness: Poisson arrivals at R req/s over C
 //!             # pipelined v1 connections; never gates sends on completions.
@@ -156,12 +175,25 @@ fn infer_schema(points: &[Point]) -> anyhow::Result<dynamic_gus::features::Schem
     })
 }
 
+/// Arm the process-global disk-fault injector (no-op when `spec` is
+/// `None`). Must run before any WAL is opened: writers capture the
+/// injector once at open. `serve` resolves the spec via
+/// [`GusConfig::apply_args`]; `follow` reads the flag/env directly.
+fn arm_fault_plan(spec: Option<String>) -> anyhow::Result<()> {
+    let Some(spec) = spec else { return Ok(()) };
+    let plan = dynamic_gus::fault::FaultPlan::parse(&spec)?;
+    dynamic_gus::fault::install_global(dynamic_gus::fault::FaultInjector::new(plan))?;
+    eprintln!("[gus] fault plan armed: {spec}");
+    Ok(())
+}
+
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "serve" => {
             let mut config = GusConfig::default()
                 .apply_args(args)
                 .map_err(|e| anyhow::anyhow!(e))?;
+            arm_fault_plan(config.fault_plan.clone())?;
             let replicate = args.get_bool("replicate", false);
             let ack_replicas = args.get_usize("ack-replicas", 0);
             if replicate && config.wal_dir.is_none() {
@@ -292,6 +324,11 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 "threads",
                 dynamic_gus::util::threadpool::default_parallelism(),
             );
+            arm_fault_plan(
+                args.opt_str("fault-plan")
+                    .or_else(|| std::env::var("GUS_FAULT_PLAN").ok())
+                    .filter(|s| !s.trim().is_empty()),
+            )?;
             let (gus, rep) = dynamic_gus::replication::start_follower(
                 dynamic_gus::replication::FollowerOpts {
                     leader,
@@ -342,6 +379,35 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 deadline_ms: args.get_u64("deadline-ms", 2_000),
             };
             dynamic_gus::replication::run_router(opts)
+        }
+        "chaosproxy" => {
+            use dynamic_gus::fault::Schedule;
+            let upstream = args
+                .opt_str("upstream")
+                .ok_or_else(|| anyhow::anyhow!("chaosproxy needs --upstream HOST:PORT"))?;
+            let listen = args.get_str("listen", "127.0.0.1:0");
+            let seed = args.get_u64("seed", 0xc405);
+            let span_ms = args.get_u64("span-ms", 10_000);
+            let schedule = if args.get_bool("passthrough", false) {
+                Schedule::passthrough()
+            } else {
+                Schedule::generate(seed, span_ms, args.get_bool("ensure-partition", false))
+            };
+            let digest = schedule.digest();
+            let windows = schedule.windows.len();
+            eprintln!("[gus] chaosproxy schedule: {}", schedule.describe());
+            let proxy = dynamic_gus::fault::proxy::start(&listen, &upstream, schedule)?;
+            // One scrapable line, like `serve`'s, so orchestration can
+            // learn the bound port; the fault timeline arms right after.
+            println!(
+                "[gus] chaosproxy on {} -> {upstream} seed={seed} digest={digest:016x} \
+                 windows={windows}",
+                proxy.addr()
+            );
+            proxy.arm();
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
         }
         "promote" => {
             let addr = args.get_str("addr", "127.0.0.1:7718");
@@ -666,8 +732,8 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "loadgen" => loadgen_cmd(args),
         _ => {
             eprintln!(
-                "usage: gus <serve|follow|route|promote|recover|checkpoint|query|insert|delete|\
-                 stats|gen|preprocess|loadgen> [options]\n\
+                "usage: gus <serve|follow|route|chaosproxy|promote|recover|checkpoint|query|\
+                 insert|delete|stats|gen|preprocess|loadgen> [options]\n\
                  see rust/src/main.rs docs and docs/ARCHITECTURE.md for details"
             );
             Ok(())
@@ -696,9 +762,15 @@ struct LoadRun {
 /// Resolve the workload spec: a built-in scenario (optionally shrunk to
 /// `--smoke` scale) or an ad-hoc spec from flags, with rate/duration/…
 /// flags overriding either.
-fn resolve_scenario(args: &Args) -> anyhow::Result<dynamic_gus::loadgen::Scenario> {
+fn resolve_scenario(
+    args: &Args,
+    default_scenario: Option<&str>,
+) -> anyhow::Result<dynamic_gus::loadgen::Scenario> {
     use dynamic_gus::loadgen::{scenario, Mix, Scenario, SloSpec};
-    let mut sc: Scenario = match args.opt_str("scenario") {
+    let mut sc: Scenario = match args
+        .opt_str("scenario")
+        .or_else(|| default_scenario.map(str::to_string))
+    {
         Some(name) => {
             let sc = scenario::builtin(&name).ok_or_else(|| {
                 anyhow::anyhow!(
@@ -748,16 +820,33 @@ fn resolve_scenario(args: &Args) -> anyhow::Result<dynamic_gus::loadgen::Scenari
     Ok(sc)
 }
 
+/// Seeds accept decimal or `0x…` hex (drill digests print in hex, so
+/// replaying one pasted from a log should just work).
+fn parse_seed(s: &str) -> anyhow::Result<u64> {
+    let t = s.trim();
+    Ok(match t.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16)?,
+        None => t.parse()?,
+    })
+}
+
 fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
     use dynamic_gus::loadgen::runner::LoadOptions;
-    let sc = resolve_scenario(args)?;
     let crash_at = args.opt_str("crash-at").map(|s| s.parse::<f64>()).transpose()?;
     let crash_leader_at =
         args.opt_str("crash-leader-at").map(|s| s.parse::<f64>()).transpose()?;
+    let chaos = args.opt_str("chaos").map(|s| parse_seed(&s)).transpose()?;
     anyhow::ensure!(
-        crash_at.is_none() || crash_leader_at.is_none(),
-        "--crash-at and --crash-leader-at are mutually exclusive"
+        [crash_at.is_some(), crash_leader_at.is_some(), chaos.is_some()]
+            .iter()
+            .filter(|b| **b)
+            .count()
+            <= 1,
+        "--crash-at, --crash-leader-at and --chaos are mutually exclusive"
     );
+    // `--chaos` without `--scenario` runs the purpose-built drill
+    // workload instead of the ad-hoc default.
+    let sc = resolve_scenario(args, chaos.map(|_| "chaos_drill"))?;
     let gate_latency = args.get_bool("gate-latency", false);
     let no_gate = args.get_bool("no-gate", false);
     let bench_name = args.get_str("bench-out", &sc.name);
@@ -765,7 +854,9 @@ fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
     let sampler = sc.corpus.sampler()?;
     eprintln!("[loadgen] spec: {}", sc.to_json().dump());
 
-    let run = if let Some(t) = crash_leader_at {
+    let run = if let Some(seed) = chaos {
+        loadgen_chaos(args, &sc, &opts, &sampler, seed)?
+    } else if let Some(t) = crash_leader_at {
         loadgen_replicated(args, &sc, &opts, &sampler, t)?
     } else if let Some(t) = crash_at {
         loadgen_crash(args, &sc, &opts, &sampler, t)?
@@ -1126,12 +1217,308 @@ fn loadgen_replicated(
     })
 }
 
-/// One node's self-reported replication role (`None` = unreachable).
-fn node_role(addr: &str) -> Option<String> {
+/// One node's `stats` payload over a bounded connection (`None` =
+/// unreachable within the timeouts).
+fn node_stats(addr: &str) -> Option<Json> {
     let mut c = GusClient::connect_timeout(addr, std::time::Duration::from_secs(1)).ok()?;
     c.set_read_timeout(Some(std::time::Duration::from_secs(2))).ok()?;
-    let stats = c.stats().ok()?;
-    stats.get("replication").get("role").as_str().map(str::to_string)
+    c.stats().ok()
+}
+
+/// One node's self-reported replication role (`None` = unreachable).
+fn node_role(addr: &str) -> Option<String> {
+    node_stats(addr)?.get("replication").get("role").as_str().map(str::to_string)
+}
+
+/// One node's durable WAL sequence number (`None` = unreachable).
+fn node_wal_seq(addr: &str) -> Option<u64> {
+    node_stats(addr)?.get("replication").get("wal_last_seq").as_u64()
+}
+
+/// Backoff retries a node has counted (its stats `faults` section);
+/// unreachable counts as zero.
+fn node_backoff_retries(addr: &str) -> u64 {
+    node_stats(addr)
+        .and_then(|s| s.get("faults").get("backoff_retries").as_u64())
+        .unwrap_or(0)
+}
+
+/// Deterministic network-fault drill: the failover drill's four-process
+/// topology (leader, two followers, router), but with every inter-node
+/// link routed through an in-process chaosproxy executing a fault
+/// schedule derived from `--chaos SEED`. Nothing gets killed — the
+/// subject is the *network*: partitions, one-way blackholes, added
+/// latency, bandwidth caps, and mid-frame truncation of the replication
+/// stream. The claim under test is that the cluster degrades to
+/// refusals, never to lost acknowledged mutations or diverged WALs.
+///
+/// Promotion is suppressed (`--fail-threshold` effectively infinite): a
+/// partitioned leader is still the leader, and promoting around it would
+/// manufacture split-brain — the failover drill covers real leader
+/// death; this one covers everything short of it.
+///
+/// Gates, after the load window (whose last ~fifth is fault-free by
+/// construction, giving reconvergence a head start):
+/// 1. every follower's durable WAL seq catches up to the leader's;
+/// 2. each follower's `wal.log` is a byte prefix of the leader's
+///    (checkpoints are disabled on all nodes so the files compare raw);
+/// 3. every acknowledged mutation is present on the leader;
+/// 4. the faults demonstrably bit: follower backoff retries were counted;
+/// 5. a post-fault query-only run through the router is error-free.
+fn loadgen_chaos(
+    args: &Args,
+    sc: &dynamic_gus::loadgen::Scenario,
+    opts: &dynamic_gus::loadgen::LoadOptions,
+    sampler: &dynamic_gus::data::synthetic::PointSampler,
+    seed: u64,
+) -> anyhow::Result<LoadRun> {
+    use dynamic_gus::fault::{proxy, Schedule};
+    use dynamic_gus::loadgen::{runner, verify, ChaosProxyReport, ChaosSummary, Mix};
+    use dynamic_gus::util::hash::mix2;
+
+    let base = args.opt_str("wal-dir").ok_or_else(|| {
+        anyhow::anyhow!("--chaos needs --wal-dir DIR (scratch base for the cluster)")
+    })?;
+    let base = std::path::PathBuf::from(&base);
+    for node in ["leader", "follower-1", "follower-2"] {
+        anyhow::ensure!(
+            !wal::has_state(&base.join(node)),
+            "{} already has WAL state; the drill needs a fresh base directory",
+            base.join(node).display()
+        );
+    }
+    let exe = std::env::current_exe()?;
+
+    // The fault timeline spans the load window; per-link seeds derive
+    // from the one drill seed, so a single number replays all three
+    // schedules bit-for-bit. The leader link is guaranteed at least one
+    // partition so the reconnect/backoff machinery provably runs.
+    let span_ms = (sc.duration_s * 1_000.0) as u64;
+    let schedules = [
+        ("leader", Schedule::generate(mix2(seed, 0), span_ms, true)),
+        ("follower-1", Schedule::generate(mix2(seed, 1), span_ms, false)),
+        ("follower-2", Schedule::generate(mix2(seed, 2), span_ms, false)),
+    ];
+    for (label, sched) in &schedules {
+        eprintln!(
+            "[loadgen] chaos {label}: digest {:016x} [{}]",
+            sched.digest(),
+            sched.describe()
+        );
+    }
+
+    // Leader: durable, replicating, semi-sync (an acked mutation is
+    // durable on at least one follower). Checkpoints are off so wal.log
+    // is never truncated — gate 2 is a literal byte comparison.
+    let mut cmd = std::process::Command::new(&exe);
+    cmd.arg("serve")
+        .arg("--dataset")
+        .arg(&sc.corpus.dataset)
+        .arg("--n")
+        .arg(sc.corpus.n.to_string())
+        .arg("--seed")
+        .arg(sc.corpus.seed.to_string())
+        .arg("--scann-nn")
+        .arg(sc.corpus.k.to_string())
+        .arg("--filter-p")
+        .arg(sc.corpus.filter_p.to_string())
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--wal-dir")
+        .arg(base.join("leader"))
+        .arg("--fsync")
+        .arg("always")
+        .arg("--checkpoint-every")
+        .arg("0")
+        .arg("--replicate")
+        .arg("--ack-replicas")
+        .arg("1");
+    if let Some(s) = sc.corpus.idf_s {
+        cmd.arg("--idf-s").arg(s.to_string());
+    }
+    let (_leader_child, leader_addr) = spawn_serving(cmd, "leader")?;
+    eprintln!("[loadgen] leader on {leader_addr}");
+
+    // The leader-link proxy: followers subscribe *through* it, so its
+    // partitions cut the replication stream mid-flight and its truncate
+    // windows tear WAL frames on the wire. Unarmed = passthrough, so the
+    // topology boots cleanly; the timeline starts when load starts.
+    let leader_proxy = proxy::start("127.0.0.1:0", &leader_addr, schedules[0].1.clone())?;
+
+    let mut followers = Vec::new();
+    for name in ["follower-1", "follower-2"] {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("follow")
+            .arg("--leader")
+            .arg(leader_proxy.addr())
+            .arg("--wal-dir")
+            .arg(base.join(name))
+            .arg("--checkpoint-every")
+            .arg("0")
+            .arg("--addr")
+            .arg("127.0.0.1:0");
+        let (child, addr) = spawn_serving(cmd, name)?;
+        eprintln!("[loadgen] {name} on {addr} (leader via {})", leader_proxy.addr());
+        followers.push((child, addr));
+    }
+
+    // Follower-link proxies sit between the router and each follower, so
+    // scatter reads eat their own fault schedules too.
+    let f1_proxy = proxy::start("127.0.0.1:0", &followers[0].1, schedules[1].1.clone())?;
+    let f2_proxy = proxy::start("127.0.0.1:0", &followers[1].1, schedules[2].1.clone())?;
+
+    let targets =
+        format!("{},{},{}", leader_proxy.addr(), f1_proxy.addr(), f2_proxy.addr());
+    let mut cmd = std::process::Command::new(&exe);
+    cmd.arg("route")
+        .arg("--targets")
+        .arg(&targets)
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--health-interval-ms")
+        .arg("200")
+        .arg("--fail-threshold")
+        .arg("100000");
+    let (_router_child, router_addr) = spawn_serving(cmd, "router")?;
+    eprintln!("[loadgen] router on {router_addr} -> [{targets}]; chaos seed {seed:#x}");
+
+    // Arm every fault timeline, then start the load: drill time zero is
+    // load time zero, so the printed schedules line up with the run.
+    leader_proxy.arm();
+    f1_proxy.arm();
+    f2_proxy.arm();
+    let outcome = runner::run_load(&router_addr, opts, sampler)?;
+
+    let mut extra_failures = Vec::new();
+
+    // Gate 1: reconvergence. Probed directly (not through the proxies) —
+    // the drill measures the cluster, not the probe path.
+    let t0 = std::time::Instant::now();
+    let mut reconverge_ms = None;
+    while t0.elapsed() < std::time::Duration::from_secs(30) {
+        let leader_seq = node_wal_seq(&leader_addr);
+        if leader_seq.is_some()
+            && followers.iter().all(|(_, a)| node_wal_seq(a) == leader_seq)
+        {
+            reconverge_ms = Some(t0.elapsed().as_millis() as u64);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    match reconverge_ms {
+        Some(ms) => eprintln!("[loadgen] cluster reconverged {ms} ms after load end"),
+        None => extra_failures
+            .push("cluster did not reconverge within 30s of load end".to_string()),
+    }
+
+    // Gate 2: the prefix property, on the actual bytes. Valid because
+    // no node checkpoints (no truncation) and heartbeats are wire-only.
+    let leader_wal = std::fs::read(base.join("leader").join(wal::WAL_FILE))?;
+    for name in ["follower-1", "follower-2"] {
+        let bytes = std::fs::read(base.join(name).join(wal::WAL_FILE))?;
+        if bytes.len() > leader_wal.len() || leader_wal[..bytes.len()] != bytes[..] {
+            extra_failures.push(format!(
+                "{name} wal.log ({} bytes) is not a byte prefix of the leader's ({} bytes)",
+                bytes.len(),
+                leader_wal.len()
+            ));
+        } else {
+            eprintln!(
+                "[loadgen] {name} WAL is a byte prefix of the leader's ({}/{} bytes)",
+                bytes.len(),
+                leader_wal.len()
+            );
+        }
+    }
+
+    // Gate 3: acked-mutation survival, against the leader directly.
+    let expected = verify::determinate_final_state(&outcome.ledgers);
+    let mut client = GusClient::connect(&leader_addr)?;
+    let violations = verify::check_survival_rpc(&mut client, &expected)?;
+    eprintln!(
+        "[loadgen] acked-mutation survival on leader: {} determinate ids, {} violations",
+        expected.len(),
+        violations.len()
+    );
+
+    // Gate 4: the faults must have actually bitten. The guaranteed
+    // leader-link partition forces at least one follower reconnect, and
+    // every reconnect wait is counted by the fault gauges.
+    let retries: u64 = followers.iter().map(|(_, a)| node_backoff_retries(a)).sum();
+    if retries == 0 {
+        extra_failures.push(
+            "no backoff retries recorded on any follower — the fault schedule never bit \
+             the replication stream"
+                .to_string(),
+        );
+    }
+
+    // Gate 5: with the schedules exhausted the proxies are passthrough
+    // again; queries through the router must be error-free.
+    let post_opts = dynamic_gus::loadgen::LoadOptions {
+        mix: Mix::query_only(),
+        duration: std::time::Duration::from_secs_f64(opts.duration.as_secs_f64().min(5.0)),
+        record_points: false,
+        ..opts.clone()
+    };
+    let post = runner::run_load(&router_addr, &post_opts, sampler)?;
+    eprintln!(
+        "[loadgen] post-chaos queries via router: {} ok, {} errors, p50 {:.2} ms  \
+         p99 {:.2} ms",
+        post.report.ok,
+        post.report.error_total(),
+        post.report.latency.p50_ns as f64 / 1e6,
+        post.report.latency.p99_ns as f64 / 1e6
+    );
+    if post.report.error_total() > 0 || post.report.transport_lost > 0 {
+        extra_failures.push(format!(
+            "post-chaos run had {} errors / {} unanswered",
+            post.report.error_total(),
+            post.report.transport_lost
+        ));
+    }
+    let extra_slo = post
+        .report
+        .slo_violations(&sc.slo)
+        .into_iter()
+        .map(|v| format!("post-chaos {v}"))
+        .collect();
+
+    let mut report = outcome.report;
+    report.lost_acked_mutations = Some(violations.len() as u64);
+    runner::attach_server_stats(&mut report, &leader_addr);
+    report.chaos = Some(ChaosSummary {
+        seed,
+        proxies: schedules
+            .iter()
+            .map(|(label, s)| ChaosProxyReport {
+                label: label.to_string(),
+                digest: s.digest(),
+                by_kind: s.windows_by_kind(),
+                schedule: s.describe(),
+            })
+            .collect(),
+        reconverge_ms,
+        backoff_retries: retries,
+    });
+    // During fault windows the router legitimately answers UNAVAILABLE
+    // (leader unreachable), NOT_LEADER (stale adoption), DEADLINE_EXCEEDED
+    // (latency/blackhole windows) and OVERLOADED (queues absorb the
+    // backlog); the ledger check above is the correctness gate for
+    // everything those refusals covered.
+    Ok(LoadRun {
+        report,
+        extra_failures,
+        extra_slo,
+        crash_mode: true,
+        exempt_codes: &[
+            "TRANSPORT",
+            "UNAVAILABLE",
+            "NOT_LEADER",
+            "DEADLINE_EXCEEDED",
+            "OVERLOADED",
+        ],
+    })
 }
 
 /// Crash/recovery injection: spawn a real `gus serve` child (fsync

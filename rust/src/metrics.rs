@@ -232,12 +232,104 @@ impl ReplicationRole {
 
 /// Nanoseconds on a process-local monotonic clock (first call is 0).
 /// Replication code reads time exclusively through [`ReplicationGauges`]
-/// so `replication/*.rs` stays free of `Instant::now` — the
-/// replay-determinism lint covers those files.
+/// or [`monotonic_ms`] so `replication/*.rs` stays free of
+/// `Instant::now` — the replay-determinism lint covers those files.
 fn monotonic_ns() -> u64 {
     use std::sync::OnceLock;
     static START: OnceLock<std::time::Instant> = OnceLock::new();
     START.get_or_init(std::time::Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Milliseconds on the process-local monotonic clock (first call is 0).
+/// The sanctioned way for lint-covered modules (replication, fault) to
+/// measure elapsed wall time for deadlines and stall detection.
+pub fn monotonic_ms() -> u64 {
+    monotonic_ns() / 1_000_000
+}
+
+/// Fault-injection and resilience counters: what the `stats` RPC reports
+/// under `"faults"`. Injected counts are bumped by
+/// [`crate::fault::FaultInjector::check`] when a plan rule fires;
+/// backoff/circuit counters by [`crate::fault::Backoff`]. All zero on a
+/// process with no fault plan and no retries.
+#[derive(Default)]
+pub struct FaultGauges {
+    injected_enospc: AtomicU64,
+    injected_err: AtomicU64,
+    injected_torn: AtomicU64,
+    injected_crash: AtomicU64,
+    /// Backoff delays handed out across all retry loops.
+    backoff_retries: AtomicU64,
+    /// Retry streaks that reached the backoff cap (remote considered
+    /// down; retries at maximum spacing until reset).
+    circuit_open_windows: AtomicU64,
+}
+
+impl FaultGauges {
+    /// A plan rule fired; `kind` is [`crate::fault::FaultKind::name`].
+    pub fn note_injected(&self, kind: &str) {
+        let c = match kind {
+            "enospc" => &self.injected_enospc,
+            "err" => &self.injected_err,
+            "torn" => &self.injected_torn,
+            _ => &self.injected_crash,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A backoff delay was computed (the caller is about to sleep it).
+    pub fn note_backoff_retry(&self) {
+        self.backoff_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A retry streak saturated at the backoff cap.
+    pub fn note_circuit_open(&self) {
+        self.circuit_open_windows.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn injected_total(&self) -> u64 {
+        // RELAXED: independent counters summed for a monitoring snapshot.
+        self.injected_enospc.load(Ordering::Relaxed)
+            + self.injected_err.load(Ordering::Relaxed)
+            + self.injected_torn.load(Ordering::Relaxed)
+            + self.injected_crash.load(Ordering::Relaxed)
+    }
+
+    pub fn backoff_retries(&self) -> u64 {
+        self.backoff_retries.load(Ordering::Relaxed)
+    }
+
+    pub fn circuit_open_windows(&self) -> u64 {
+        self.circuit_open_windows.load(Ordering::Relaxed)
+    }
+
+    /// The `"faults"` section of `stats`.
+    pub fn to_json(&self) -> Json {
+        // RELAXED: stats snapshots read independent counters; slight skew
+        // between fields is acceptable in a monitoring endpoint.
+        let g = |a: &AtomicU64| Json::u64(a.load(Ordering::Relaxed));
+        Json::obj(vec![
+            (
+                "injected",
+                Json::obj(vec![
+                    ("enospc", g(&self.injected_enospc)),
+                    ("err", g(&self.injected_err)),
+                    ("torn", g(&self.injected_torn)),
+                    ("crash", g(&self.injected_crash)),
+                ]),
+            ),
+            ("backoff_retries", g(&self.backoff_retries)),
+            ("circuit_open_windows", g(&self.circuit_open_windows)),
+        ])
+    }
+}
+
+/// The process-wide fault gauges (one set per process, like the global
+/// fault injector they mirror).
+pub fn faults() -> &'static FaultGauges {
+    use std::sync::OnceLock;
+    static GAUGES: OnceLock<FaultGauges> = OnceLock::new();
+    GAUGES.get_or_init(FaultGauges::default)
 }
 
 /// Replication health gauges: what the `stats` RPC reports under
@@ -537,6 +629,37 @@ mod tests {
         assert_eq!(j.get("subscribers").as_u64(), Some(1));
         g.subscriber_disconnected();
         assert_eq!(g.subscribers(), 0);
+    }
+
+    #[test]
+    fn fault_gauges_count_by_kind() {
+        // The gauges are process-global and other tests may bump them
+        // concurrently, so assert on deltas with ≥.
+        let f = faults();
+        let enospc0 = f.injected_total();
+        let retries0 = f.backoff_retries();
+        f.note_injected("enospc");
+        f.note_injected("torn");
+        f.note_injected("crash");
+        f.note_backoff_retry();
+        f.note_circuit_open();
+        assert!(f.injected_total() >= enospc0 + 3);
+        assert!(f.backoff_retries() >= retries0 + 1);
+        assert!(f.circuit_open_windows() >= 1);
+        let j = f.to_json();
+        assert!(j.get("injected").get("enospc").as_u64().unwrap_or(0) >= 1);
+        assert!(j.get("injected").get("torn").as_u64().unwrap_or(0) >= 1);
+        assert!(j.get("backoff_retries").as_u64().unwrap_or(0) >= 1);
+        assert!(j.get("circuit_open_windows").as_u64().unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn monotonic_ms_is_monotone() {
+        let a = monotonic_ms();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = monotonic_ms();
+        assert!(b >= a);
+        assert!(b.saturating_sub(a) >= 1, "clock did not advance: {a}..{b}");
     }
 
     #[test]

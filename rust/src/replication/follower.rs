@@ -23,7 +23,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::wal::{self, FrameError};
 use crate::coordinator::DynamicGus;
+use crate::fault::Backoff;
 use crate::protocol::{wire, ErrorCode, Response};
+use crate::util::hash::{hash_bytes, mix2};
 use crate::util::json::Json;
 
 use super::NodeReplication;
@@ -49,15 +51,34 @@ pub struct FollowerOpts {
 /// dead or the link has stalled — either way, reconnect.
 const READ_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Pause between reconnect cycles over the peer list.
-const RECONNECT_PAUSE: Duration = Duration::from_secs(1);
+/// First reconnect delay; doubles (with seeded jitter) up to
+/// [`RECONNECT_CAP`] while the leader stays unreachable. A fixed pause
+/// here made every follower hammer a dead leader in lockstep; the jitter
+/// seed is derived from the follower's own WAL dir, so distinct nodes
+/// desynchronize while each node replays its own delay sequence
+/// deterministically.
+const RECONNECT_BASE: Duration = Duration::from_millis(100);
+
+/// Largest reconnect delay (pre-jitter) once the backoff saturates.
+const RECONNECT_CAP: Duration = Duration::from_secs(5);
+
+/// Backoff cap during initial bootstrap: tighter than the steady-state
+/// cap so a follower racing its leader's startup keeps probing briskly.
+const BOOTSTRAP_CAP: Duration = Duration::from_secs(1);
 
 /// Connect timeout per subscription attempt.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// Reconnect cycles during initial bootstrap before giving up (the
-/// leader may still be starting); one cycle per second.
+/// leader may still be starting); with the bootstrap backoff cap this
+/// bounds the wait to roughly a minute.
 const BOOTSTRAP_CYCLES: usize = 60;
+
+/// The jitter seed for one node's backoff streams: stable across
+/// restarts (same WAL dir → same sequence) but distinct between nodes.
+fn backoff_seed(wal_dir: &Path, stream: u64) -> u64 {
+    mix2(hash_bytes(wal_dir.to_string_lossy().as_bytes()), stream)
+}
 
 /// One established subscription stream, positioned at the first byte
 /// after the header line.
@@ -272,9 +293,10 @@ pub fn start_follower(opts: FollowerOpts) -> Result<(Arc<DynamicGus>, Arc<NodeRe
     // the leader is still starting up.
     let mut hint: Option<String> = None;
     let mut established: Option<(String, Stream)> = None;
+    let mut backoff = Backoff::new(RECONNECT_BASE, BOOTSTRAP_CAP, backoff_seed(&opts.wal_dir, 0));
     for cycle in 0..BOOTSTRAP_CYCLES {
         if cycle > 0 {
-            std::thread::sleep(RECONNECT_PAUSE);
+            std::thread::sleep(backoff.next_delay());
         }
         let from = || local.as_ref().map(|g| g.wal_seq() + 1).unwrap_or(0);
         match subscribe_cycle(&mut hint, &opts.leader, &opts.peers, from) {
@@ -329,9 +351,10 @@ pub fn start_follower(opts: FollowerOpts) -> Result<(Arc<DynamicGus>, Arc<NodeRe
     let primary = opts.leader.clone();
     let peers = opts.peers.clone();
     let threads = opts.threads;
+    let reconnect_seed = backoff_seed(&opts.wal_dir, 1);
     std::thread::Builder::new()
         .name("gus-follower".into())
-        .spawn(move || follow_loop(thread_rep, stream, primary, peers, threads))
+        .spawn(move || follow_loop(thread_rep, stream, primary, peers, threads, reconnect_seed))
         .context("spawning follow loop")?;
     Ok((gus, rep))
 }
@@ -352,9 +375,11 @@ fn follow_loop(
     primary: String,
     peers: Vec<String>,
     threads: usize,
+    reconnect_seed: u64,
 ) {
     let mut hint: Option<String> = rep.gus().metrics.replication.leader_hint();
     let mut conn = Some(stream);
+    let mut backoff = Backoff::new(RECONNECT_BASE, RECONNECT_CAP, reconnect_seed);
     while !rep.stop_requested() {
         let stream = match conn.take() {
             Some(s) => s,
@@ -375,16 +400,17 @@ fn follow_loop(
                                  longer catch up from the log — stop it, remove its \
                                  --wal-dir, and restart to re-bootstrap"
                             );
-                            std::thread::sleep(RECONNECT_PAUSE);
+                            std::thread::sleep(backoff.next_delay());
                             continue;
                         }
                         rep.note_leader(&addr);
+                        backoff.reset();
                         eprintln!("[gus] follower resumed from {addr} at seq {}", s.resume_seq);
                         s
                     }
                     Err(why) => {
                         eprintln!("[gus] follower reconnect failed: {why}");
-                        std::thread::sleep(RECONNECT_PAUSE);
+                        std::thread::sleep(backoff.next_delay());
                         continue;
                     }
                 }

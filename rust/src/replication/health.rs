@@ -51,8 +51,16 @@ pub(crate) fn spawn_monitor(state: Arc<RouterState>, interval: Duration, thresho
 
 fn monitor_loop(state: &RouterState, interval: Duration, threshold: u32) {
     let mut leaderless_rounds: u32 = 0;
+    // Jitter each round's sleep by ±10% so multiple routers probing the
+    // same cluster spread out instead of landing in lockstep. The stream
+    // is seeded from the target list: deterministic per deployment, and
+    // covered by the replay-determinism lint like the rest of this file.
+    let mut jitter = crate::util::rng::Rng::seeded(crate::util::hash::hash_bytes(
+        state.targets.join(",").as_bytes(),
+    ));
     loop {
-        std::thread::sleep(interval);
+        let scale = 0.9 + 0.2 * jitter.f64();
+        std::thread::sleep(interval.mul_f64(scale));
         let probes: Vec<Probe> =
             state.targets.iter().filter_map(|addr| probe_target(addr)).collect();
         if let Some(leader) = live_leader(state, &probes) {

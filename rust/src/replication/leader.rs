@@ -52,6 +52,15 @@ const MAX_CHUNK_BYTES: usize = 1 << 20;
 /// resumes from its own durable seq, so nothing is lost.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
+/// A subscriber whose acks stop advancing while frames keep shipping is
+/// cut off after this long. The write timeout above only catches a
+/// wedged *forward* path; a one-way blackhole on the ack back-channel
+/// leaves shipping healthy while every semi-sync mutation eats the full
+/// ack-gate timeout — cutting the stream forces a reconnect, which
+/// re-establishes both directions (the follower resumes at its durable
+/// seq, so nothing is lost).
+const ACK_STALL: Duration = Duration::from_secs(10);
+
 /// Attempts to pair a snapshot read with a tail start before giving up
 /// (each retry observes a newer checkpoint).
 const SNAPSHOT_RETRIES: usize = 10;
@@ -209,23 +218,28 @@ pub(crate) fn serve_subscription(
             .name("gus-repl-acks".into())
             .spawn_scoped(s, move || ack_reader(rep, sub, reader))
             .context("spawning replication ack reader")?;
-        let shipped = ship_frames(gus, &signal, &mut tailer, &mut stream, &hb);
+        let shipped = ship_frames(gus, rep, sub, &signal, &mut tailer, &mut stream, &hb);
         let _ = stream.shutdown(std::net::Shutdown::Both);
         let _ = acks.join();
         shipped
     })
 }
 
-/// Ship frames until the connection drops (the only exit); heartbeat
-/// when idle so the follower's read timeout only fires on a dead leader.
+/// Ship frames until the connection drops or the subscriber's acks stall
+/// (see [`ACK_STALL`]); heartbeat when idle so the follower's read
+/// timeout only fires on a dead leader.
 fn ship_frames(
     gus: &DynamicGus,
+    rep: &NodeReplication,
+    sub: u64,
     signal: &TailSignal,
     tailer: &mut WalTailer,
     stream: &mut TcpStream,
     hb: &[u8],
 ) -> Result<()> {
     let mut buf: Vec<u8> = Vec::with_capacity(MAX_CHUNK_BYTES);
+    let mut last_acked = rep.subscriber_ack(sub).unwrap_or(0);
+    let mut last_progress_ms = crate::metrics::monotonic_ms();
     loop {
         let state = signal.snapshot();
         buf.clear();
@@ -235,10 +249,24 @@ fn ship_frames(
             if newer == state {
                 stream.write_all(hb)?;
             }
+            // Idle: nothing newly owed, so the stall clock restarts.
+            last_progress_ms = crate::metrics::monotonic_ms();
             continue;
         }
         stream.write_all(&buf)?;
         gus.metrics.replication.note_shipped(shipped as u64);
+        let acked = rep.subscriber_ack(sub).unwrap_or(0);
+        let now_ms = crate::metrics::monotonic_ms();
+        if acked > last_acked {
+            last_acked = acked;
+            last_progress_ms = now_ms;
+        } else if now_ms.saturating_sub(last_progress_ms) > ACK_STALL.as_millis() as u64 {
+            bail!(
+                "subscriber ack stalled at seq {last_acked} for {}s while frames keep \
+                 shipping; cutting the stream so the follower reconnects",
+                ACK_STALL.as_secs()
+            );
+        }
     }
 }
 

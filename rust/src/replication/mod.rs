@@ -222,6 +222,13 @@ impl NodeReplication {
         self.acks_cond.notify_all();
     }
 
+    /// The highest seq subscriber `id` has acked (`None` once it has
+    /// unregistered). The leader's shipping loop reads this to detect a
+    /// subscriber whose ack back-channel has gone dark.
+    pub(crate) fn subscriber_ack(&self, id: u64) -> Option<u64> {
+        self.acks.lock().unwrap().get(&id).copied()
+    }
+
     fn acked_replicas(acks: &BTreeMap<u64, u64>, seq: u64) -> usize {
         acks.values().filter(|&&a| a >= seq).count()
     }

@@ -37,8 +37,11 @@ use anyhow::{Context, Result};
 
 use crate::client::GusClient;
 use crate::coordinator::ScoredNeighbor;
+use crate::fault::Backoff;
 use crate::index::sharded::merge_ranked;
+use crate::metrics::monotonic_ms;
 use crate::protocol::{decode_request, ErrorCode, Incoming, Request, Response};
+use crate::util::hash::{hash_bytes, mix2};
 
 /// Configuration for [`run_router`].
 #[derive(Debug, Clone)]
@@ -65,6 +68,14 @@ const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Attempts per replica for an idempotent read (1 retry, reconnecting).
 const READ_ATTEMPTS: usize = 2;
+
+/// First pause before a read retry; doubles (with jitter seeded from the
+/// replica address) up to [`RETRY_CAP`], and is always clipped to the
+/// request's remaining deadline.
+const RETRY_BASE: Duration = Duration::from_millis(20);
+
+/// Largest read-retry pause (pre-jitter).
+const RETRY_CAP: Duration = Duration::from_millis(200);
 
 /// Shared router state: the target list is fixed at startup; the leader
 /// is whatever the health monitor (or a successful forward) last
@@ -352,6 +363,11 @@ fn scatter_query_batch(
 /// One replica's attempt at the batch: bounded retry (reads are
 /// idempotent), reconnecting on transport error. `None` drops this
 /// replica from the gather.
+///
+/// `deadline_ms` is the *client's* budget for the whole scatter, not a
+/// per-attempt allowance: every retry carries only what remains of it,
+/// so a slow first attempt cannot double the worst case — when the
+/// budget is spent the replica is dropped instead of asked again.
 fn replica_query(
     slot: &mut Option<GusClient>,
     addr: &str,
@@ -359,11 +375,25 @@ fn replica_query(
     k: Option<usize>,
     deadline_ms: u64,
 ) -> Option<Vec<Vec<ScoredNeighbor>>> {
-    for _ in 0..READ_ATTEMPTS {
+    let start = monotonic_ms();
+    let mut backoff = Backoff::new(RETRY_BASE, RETRY_CAP, mix2(hash_bytes(addr.as_bytes()), 1));
+    for attempt in 0..READ_ATTEMPTS {
+        let remaining = deadline_ms.saturating_sub(monotonic_ms().saturating_sub(start));
+        if remaining == 0 {
+            return None;
+        }
+        if attempt > 0 {
+            std::thread::sleep(backoff.next_delay().min(Duration::from_millis(remaining)));
+        }
+        let remaining = deadline_ms.saturating_sub(monotonic_ms().saturating_sub(start));
+        if remaining == 0 {
+            return None;
+        }
         if slot.is_none() {
-            *slot = connect_backend(addr, Some(deadline_ms));
+            *slot = connect_backend(addr, Some(remaining));
         }
         let Some(conn) = slot.as_mut() else { continue };
+        conn.set_deadline_ms(Some(remaining));
         let outcome = conn
             .submit(Request::QueryBatch { points: points.to_vec(), k })
             .and_then(|rid| conn.wait_response(rid));

@@ -742,12 +742,15 @@ fn execute_inner(gus: &DynamicGus, req: Request) -> Result<Response> {
 
 /// Map a coordinator error message onto a protocol error code. The
 /// vendored `anyhow` has no downcasting, so classification keys on the
-/// two stable message markers; everything else — schema violations,
-/// malformed fields — is the caller's fault.
+/// stable message markers; everything else — schema violations,
+/// malformed fields — is the caller's fault. "injected fault" is the
+/// marker [`crate::fault::injector::injected_error`] plants: an injected
+/// disk fault is server-side trouble, not a bad request, so clients see
+/// `UNAVAILABLE` exactly as they would for the real failure.
 fn classify_error(msg: &str) -> ErrorCode {
     if msg.contains("unknown point") {
         ErrorCode::NotFound
-    } else if msg.contains("WAL") {
+    } else if msg.contains("WAL") || msg.contains("injected fault") {
         ErrorCode::Unavailable
     } else {
         ErrorCode::BadRequest

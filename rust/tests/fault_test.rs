@@ -1,0 +1,379 @@
+//! Fault-injection integration: disk faults, not just SIGKILL.
+//!
+//! The contract under test (ISSUE 9): under a deterministic fault plan —
+//! ENOSPC mid-append, a torn short write, a failed fsync, an error in
+//! the checkpoint's commit/truncate window — the service fails *loudly*,
+//! never acknowledges a mutation it cannot recover, and a restart
+//! converges to exactly the acknowledged state. Each test hands a
+//! private [`FaultInjector`] to one writer (never the process-global
+//! plan), so parallel `cargo test` threads cannot share firing state.
+//! The chaosproxy half is covered too: passthrough relays verbatim,
+//! partition and truncate windows fail the way real networks do, and
+//! the drill's per-link schedule derivation replays bit-for-bit from
+//! its seed.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynamic_gus::config::{FsyncPolicy, GusConfig, ScorerKind};
+use dynamic_gus::coordinator::{snapshot, wal, DynamicGus};
+use dynamic_gus::data::synthetic::SyntheticConfig;
+use dynamic_gus::data::Dataset;
+use dynamic_gus::fault::{proxy, FaultInjector, FaultPlan, NetFault, Schedule, Window};
+use dynamic_gus::util::hash::mix2;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("gus-fault-int").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg(fsync: FsyncPolicy) -> GusConfig {
+    GusConfig {
+        scorer: ScorerKind::Native,
+        filter_p: 10.0,
+        n_shards: 2,
+        fsync,
+        ..GusConfig::default()
+    }
+}
+
+/// Boot a WAL-backed service plus its uninterrupted twin on the first
+/// `boot` points of `ds`.
+fn booted(ds: &Dataset, dir: &PathBuf, boot: usize, fsync: FsyncPolicy) -> (DynamicGus, DynamicGus) {
+    let live =
+        DynamicGus::bootstrap(ds.schema.clone(), cfg(fsync), &ds.points[..boot], 2).unwrap();
+    wal::init_fresh(&live, dir).unwrap();
+    let twin =
+        DynamicGus::bootstrap(ds.schema.clone(), cfg(fsync), &ds.points[..boot], 2).unwrap();
+    (live, twin)
+}
+
+/// Arm one service's writer with a private plan (no process-global state).
+fn arm(gus: &DynamicGus, spec: &str) -> Arc<FaultInjector> {
+    let inj = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+    gus.wal().unwrap().set_fault_injector(Some(Arc::clone(&inj)));
+    inj
+}
+
+fn wal_len(dir: &PathBuf) -> u64 {
+    std::fs::metadata(dir.join(wal::WAL_FILE)).unwrap().len()
+}
+
+/// Two services answer a fixed query workload identically.
+fn assert_equivalent(recovered: &DynamicGus, reference: &DynamicGus, ds: &Dataset, tag: &str) {
+    assert_eq!(recovered.len(), reference.len(), "{tag}: corpus size");
+    for qi in (0..ds.points.len()).step_by(19) {
+        assert_eq!(
+            recovered.query(&ds.points[qi], 10).unwrap(),
+            reference.query(&ds.points[qi], 10).unwrap(),
+            "{tag}: query {qi} diverged"
+        );
+    }
+}
+
+/// ENOSPC mid-append: the short write is rolled back to the previous
+/// record boundary, the failed mutation is not acknowledged and not
+/// applied, and a retry reuses the same sequence number — recovery sees
+/// a gap-free log holding exactly the acknowledged mutations.
+#[test]
+fn enospc_mid_append_rolls_back_to_record_boundary() {
+    let ds = SyntheticConfig::arxiv_like(160, 0xf41).generate();
+    let dir = tmpdir("enospc");
+    let (live, twin) = booted(&ds, &dir, 100, FsyncPolicy::Never);
+    let inj = arm(&live, "wal_append:enospc@seq=3");
+
+    for p in &ds.points[100..102] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    let boundary = wal_len(&dir);
+
+    let err = live.insert(ds.points[102].clone()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+    assert!(msg.contains("No space left"), "{msg}");
+    assert_eq!(inj.fired_total(), 1);
+    assert_eq!(wal_len(&dir), boundary, "partial frame must be trimmed");
+    assert!(!live.contains(ds.points[102].id), "failed insert must not apply");
+    assert_eq!(live.wal_seq(), 2, "failed append must not consume a seq");
+
+    // The rule is spent: the retry succeeds and reuses seq 3.
+    live.insert(ds.points[102].clone()).unwrap();
+    twin.insert(ds.points[102].clone()).unwrap();
+    assert_eq!(live.wal_seq(), 3);
+    live.insert(ds.points[103].clone()).unwrap();
+    twin.insert(ds.points[103].clone()).unwrap();
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert!(!rec.torn_tail);
+    assert_eq!(rec.replayed, 4);
+    assert!(rec.gus.contains(ds.points[103].id));
+    assert_equivalent(&rec.gus, &twin, &ds, "enospc");
+}
+
+/// A torn short write (`wal_append:torn`) behaves like ENOSPC from the
+/// caller's side: loud error, clean rollback, clean retry, no torn tail
+/// left for recovery.
+#[test]
+fn torn_append_rolls_back_and_retries_cleanly() {
+    let ds = SyntheticConfig::arxiv_like(140, 0xf42).generate();
+    let dir = tmpdir("torn");
+    let (live, twin) = booted(&ds, &dir, 100, FsyncPolicy::Never);
+    arm(&live, "wal_append:torn@seq=2");
+
+    live.insert(ds.points[100].clone()).unwrap();
+    twin.insert(ds.points[100].clone()).unwrap();
+    let boundary = wal_len(&dir);
+
+    let err = live.insert(ds.points[101].clone()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("torn"), "{msg}");
+    assert_eq!(wal_len(&dir), boundary);
+    assert!(!live.contains(ds.points[101].id));
+
+    live.insert(ds.points[101].clone()).unwrap();
+    twin.insert(ds.points[101].clone()).unwrap();
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert!(!rec.torn_tail, "rollback must leave no partial frame");
+    assert_eq!(rec.replayed, 2);
+    assert_equivalent(&rec.gus, &twin, &ds, "torn");
+}
+
+/// fsyncgate: a failed fsync poisons the writer — every further append
+/// is refused with a message telling the operator to restart — and the
+/// restart recovers cleanly and accepts appends again.
+#[test]
+fn fsync_failure_poisons_writer_until_restart() {
+    let ds = SyntheticConfig::arxiv_like(130, 0xf43).generate();
+    let dir = tmpdir("fsync-poison");
+    let (live, _twin) = booted(&ds, &dir, 100, FsyncPolicy::Always);
+    arm(&live, "fsync:err@nth=1");
+
+    let err = live.insert(ds.points[100].clone()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+    assert!(msg.contains("fsync"), "{msg}");
+    assert!(!live.contains(ds.points[100].id), "unacked mutation must not apply");
+
+    // The rule is spent, but the writer must stay poisoned anyway: after
+    // a failed fsync the kernel's dirty-page state is unknowable.
+    let err = live.insert(ds.points[101].clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+    drop(live);
+
+    // Restart: recovery re-scans the log (the unacked record survived in
+    // the page cache — surviving is allowed, losing acked ones is not)
+    // and the recovered writer is unpoisoned.
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.replayed, 1);
+    rec.gus.insert(ds.points[101].clone()).unwrap();
+    assert!(rec.gus.contains(ds.points[101].id));
+}
+
+/// The crash window *between* checkpoint commit and WAL truncation: the
+/// snapshot rename has committed when truncation fails, so a restart
+/// must treat the checkpoint as authoritative and skip every stale
+/// record still in the log.
+#[test]
+fn failed_truncate_after_commit_recovers_exactly() {
+    let ds = SyntheticConfig::arxiv_like(150, 0xf44).generate();
+    let dir = tmpdir("truncate-window");
+    let (live, twin) = booted(&ds, &dir, 100, FsyncPolicy::Never);
+    arm(&live, "wal_truncate:err@nth=1");
+
+    for p in &ds.points[100..130] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    let err = live.checkpoint().unwrap_err();
+    assert!(format!("{err:#}").contains("truncating WAL"), "{err:#}");
+    assert!(wal_len(&dir) > 0, "failed truncation leaves the log in place");
+    // The snapshot itself committed before the truncate site fired.
+    let (_restored, last_seq) = snapshot::restore_with_seq(&dir, 2).unwrap();
+    assert_eq!(last_seq, 30);
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_eq!(rec.replayed, 0, "records ≤ last_seq must be skipped");
+    assert_equivalent(&rec.gus, &twin, &ds, "truncate-window");
+}
+
+/// A failure at the snapshot commit rename leaves the *previous*
+/// checkpoint authoritative (the WAL still holds everything), and the
+/// spent rule lets a retry checkpoint go through.
+#[test]
+fn failed_checkpoint_rename_keeps_previous_checkpoint() {
+    let ds = SyntheticConfig::arxiv_like(150, 0xf45).generate();
+    let dir = tmpdir("rename-window");
+    let (live, twin) = booted(&ds, &dir, 100, FsyncPolicy::Never);
+    arm(&live, "checkpoint_rename:err@nth=1");
+
+    for p in &ds.points[100..120] {
+        live.insert(p.clone()).unwrap();
+        twin.insert(p.clone()).unwrap();
+    }
+    let err = live.checkpoint().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+    assert!(msg.contains(snapshot::SNAPSHOT_META), "{msg}");
+    // Commit never happened: the metadata still points at the bootstrap
+    // snapshot and the untruncated WAL replays the full delta.
+    let (_restored, last_seq) = snapshot::restore_with_seq(&dir, 2).unwrap();
+    assert_eq!(last_seq, 0, "previous checkpoint must stay authoritative");
+    assert!(wal_len(&dir) > 0);
+
+    // Retry: the rule is spent, the checkpoint commits and truncates.
+    assert_eq!(live.checkpoint().unwrap(), 20);
+    assert_eq!(live.wal_pending(), 0);
+    let (_restored, last_seq) = snapshot::restore_with_seq(&dir, 2).unwrap();
+    assert_eq!(last_seq, 20);
+    drop(live);
+
+    let rec = wal::recover(&dir, 2).unwrap();
+    assert_equivalent(&rec.gus, &twin, &ds, "rename-window");
+}
+
+/// Every fired injection is visible in the `"faults"` stats section the
+/// `stats` RPC serves — the drill's proof that the plan executed.
+#[test]
+fn fired_injections_show_up_in_stats() {
+    let ds = SyntheticConfig::arxiv_like(110, 0xf46).generate();
+    let dir = tmpdir("stats");
+    let (live, _twin) = booted(&ds, &dir, 100, FsyncPolicy::Never);
+    arm(&live, "wal_append:enospc@nth=1");
+
+    let before = dynamic_gus::metrics::faults().to_json();
+    let enospc0 = before.get("injected").get("enospc").as_u64().unwrap();
+    live.insert(ds.points[100].clone()).unwrap_err();
+
+    // Gauges are process-wide (like the plan they mirror), so assert
+    // deltas, not absolutes: parallel tests may fire their own faults.
+    let after = live.stats_json();
+    let faults = after.get("faults");
+    assert!(
+        faults.get("injected").get("enospc").as_u64().unwrap() >= enospc0 + 1,
+        "stats must count the fired enospc: {faults:?}"
+    );
+    assert!(faults.get("backoff_retries").as_u64().is_some());
+    assert!(faults.get("circuit_open_windows").as_u64().is_some());
+}
+
+/// A TCP echo server on an ephemeral port (the chaosproxy's upstream).
+fn spawn_echo() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { continue };
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 1024];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if s.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+/// An armed chaosproxy with an empty schedule is a faithful relay.
+#[test]
+fn chaosproxy_passthrough_relays_verbatim() {
+    let upstream = spawn_echo();
+    let proxy = proxy::start("127.0.0.1:0", &upstream, Schedule::passthrough()).unwrap();
+    proxy.arm();
+
+    let mut conn = TcpStream::connect(proxy.addr()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for msg in [&b"ping"[..], &b"pong-pong"[..]] {
+        conn.write_all(msg).unwrap();
+        let mut back = vec![0u8; msg.len()];
+        conn.read_exact(&mut back).unwrap();
+        assert_eq!(&back, msg, "echo through passthrough proxy diverged");
+    }
+}
+
+/// A partition window from t=0 looks like a dead host: connections are
+/// accepted and dropped, so the client sees EOF/reset, never an answer.
+#[test]
+fn chaosproxy_partition_cuts_connections() {
+    let upstream = spawn_echo();
+    let schedule = Schedule {
+        windows: vec![Window { start_ms: 0, end_ms: 600_000, fault: NetFault::Partition }],
+    };
+    let proxy = proxy::start("127.0.0.1:0", &upstream, schedule).unwrap();
+    proxy.arm();
+
+    let mut conn = TcpStream::connect(proxy.addr()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = conn.write_all(b"hello?");
+    let mut buf = [0u8; 8];
+    assert!(
+        matches!(conn.read(&mut buf), Ok(0) | Err(_)),
+        "partitioned proxy must never deliver bytes"
+    );
+}
+
+/// A truncate window tears the stream mid-frame: the receiver gets a
+/// strict prefix of what was sent, then the wire dies.
+#[test]
+fn chaosproxy_truncate_tears_mid_frame() {
+    let upstream = spawn_echo();
+    let schedule = Schedule {
+        windows: vec![Window { start_ms: 0, end_ms: 600_000, fault: NetFault::Truncate }],
+    };
+    let proxy = proxy::start("127.0.0.1:0", &upstream, schedule).unwrap();
+    proxy.arm();
+
+    let mut conn = TcpStream::connect(proxy.addr()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn.write_all(b"0123456789abcdef").unwrap();
+    let mut got = Vec::new();
+    let _ = conn.read_to_end(&mut got);
+    assert!(got.len() < 16, "truncate window must tear the frame, got {} bytes", got.len());
+}
+
+/// The acceptance criterion: the drill's per-link schedule derivation
+/// (`mix2(seed, link)`, partition guaranteed on the leader link) replays
+/// bit-for-bit from the seed — same seed, same windows, same digests;
+/// different seeds diverge.
+#[test]
+fn chaos_drill_schedules_replay_bit_for_bit() {
+    let span_ms = 10_000;
+    let links = |seed: u64| -> Vec<Schedule> {
+        (0..3u64).map(|i| Schedule::generate(mix2(seed, i), span_ms, i == 0)).collect()
+    };
+    for seed in [0xc405u64, 7, 0xdead_beef] {
+        let a = links(seed);
+        let b = links(seed);
+        assert_eq!(a, b, "seed {seed:#x}: schedules must replay bit-for-bit");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.digest(), y.digest());
+            assert_eq!(x.describe(), y.describe());
+        }
+        assert!(
+            a[0].windows.iter().any(|w| w.fault == NetFault::Partition),
+            "seed {seed:#x}: leader link must carry a partition window"
+        );
+    }
+    assert_ne!(
+        links(1)[0].digest(),
+        links(2)[0].digest(),
+        "distinct seeds must produce distinct leader schedules"
+    );
+}

@@ -688,6 +688,11 @@ fn rule_multi_lock(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
 /// wall clocks and no nondeterministic iteration order. The replication
 /// subsystem ships and re-applies those same records (a follower is a
 /// continuous replay), so all of `replication/` is held to the same bar.
+/// The fault-injection layer is too: `gus loadgen --chaos <seed>` promises
+/// the same seed replays the same faults bit-for-bit, which only holds if
+/// plans, injectors, backoff jitter, and schedules stay clock-free.
+/// (`fault/proxy.rs` is deliberately absent — it *executes* a schedule
+/// against real sockets and necessarily reads the wall clock.)
 const REPLAY_FILES: &[&str] = &[
     "coordinator/wal.rs",
     "coordinator/snapshot.rs",
@@ -697,6 +702,10 @@ const REPLAY_FILES: &[&str] = &[
     "replication/follower.rs",
     "replication/router.rs",
     "replication/health.rs",
+    "fault/plan.rs",
+    "fault/injector.rs",
+    "fault/backoff.rs",
+    "fault/schedule.rs",
 ];
 
 const REPLAY_BANNED_CALLS: &[(&str, &str)] = &[("Instant", "now"), ("SystemTime", "now")];

@@ -71,9 +71,19 @@ fn replay_determinism_is_path_scoped() {
     let in_wal = gus_lint::lint_source("coordinator/wal.rs", &src);
     assert!(in_wal.len() >= 3, "missed nondeterminism: {in_wal:?}");
     assert_all_rule(&in_wal, "replay-determinism");
+    // The fault-injection layer carries the chaos drill's seed-replay
+    // contract, so it is in scope — except the proxy, which executes
+    // schedules against real sockets and legitimately reads the clock.
+    for covered in ["fault/plan.rs", "fault/injector.rs", "fault/backoff.rs", "fault/schedule.rs"] {
+        let in_fault = gus_lint::lint_source(covered, &src);
+        assert!(in_fault.len() >= 3, "{covered} not covered: {in_fault:?}");
+        assert_all_rule(&in_fault, "replay-determinism");
+    }
     // The same source outside the replay-critical set is not flagged.
-    let elsewhere = gus_lint::lint_source("src/server.rs", &src);
-    assert!(elsewhere.is_empty(), "rule leaked outside replay files: {elsewhere:?}");
+    for exempt in ["src/server.rs", "fault/proxy.rs"] {
+        let elsewhere = gus_lint::lint_source(exempt, &src);
+        assert!(elsewhere.is_empty(), "rule leaked into {exempt}: {elsewhere:?}");
+    }
     let good = fixture("replay-determinism/good.rs");
     let good_fs = gus_lint::lint_source("coordinator/wal.rs", &good);
     assert!(good_fs.is_empty(), "false positives: {good_fs:?}");

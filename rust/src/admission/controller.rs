@@ -1,0 +1,443 @@
+//! The clock-free pressure controller.
+//!
+//! Pressure is computed from two signals the server already has:
+//!
+//! - **Sojourn time**: how long the job a worker just popped sat in the
+//!   run queue (the controlled-delay idea: queue *delay*, not queue
+//!   *length*, is what clients feel). Smoothed with an EWMA.
+//! - **Instantaneous queue depth** relative to capacity, sampled at
+//!   admission time so pressure reacts within one request even between
+//!   pops.
+//!
+//! `pressure = max(sojourn_ewma / target, 2 × depth / capacity)` — a
+//! dimensionless overload factor where 1.0 means "the queue delay has
+//! reached its target" (or the queue is half full). Tiers:
+//!
+//! | tier       | pressure   | action                                        |
+//! |------------|------------|-----------------------------------------------|
+//! | `Normal`   | `< 0.5`    | admit everything at full budget               |
+//! | `ShedBatch`| `0.5 – 1`  | shed `batch`                                  |
+//! | `Degrade`  | `1 – 2`    | shed `batch`+`replication`; scale interactive |
+//! |            |            | budget by `1/pressure`, mark `degraded`       |
+//! | `Critical` | `≥ 2`      | also skip scoring refinement; shed even       |
+//! |            |            | interactive once `1/pressure` falls below the |
+//! |            |            | configured quality floor                      |
+//!
+//! The struct is pure: no `Instant`, no `SystemTime`, no hash-order
+//! iteration (the `replay-determinism` lint enforces this). Callers
+//! measure time and feed samples; the controller only does arithmetic,
+//! so a recorded `(sojourn, depth, capacity)` stream replays the same
+//! decisions bit-for-bit.
+
+/// Request priority class carried in the v1 envelope (`class` key).
+/// Ordering is shedding priority: `Batch` sheds first, `Interactive`
+/// last. Requests without a class are treated as `Interactive` for
+/// shedding (legacy clients keep working) but are never served degraded
+/// — degradation is opt-in by classing the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    /// Latency-sensitive foreground traffic; shed last, degraded first.
+    Interactive,
+    /// Replication/maintenance traffic; middle priority.
+    Replication,
+    /// Bulk/background traffic; shed first, never degraded (a batch
+    /// caller wants full-quality answers or none).
+    Batch,
+}
+
+impl Class {
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "replication" => Some(Class::Replication),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Replication => "replication",
+            Class::Batch => "batch",
+        }
+    }
+
+    /// Stable index for per-class accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Replication => 1,
+            Class::Batch => 2,
+        }
+    }
+
+    /// All classes, ordered by [`Class::index`].
+    pub const ALL: [Class; 3] = [Class::Interactive, Class::Replication, Class::Batch];
+}
+
+/// Controller knobs (from [`crate::config::GusConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Run-queue sojourn target in milliseconds; pressure 1.0 when the
+    /// sojourn EWMA reaches it. 0 disables admission control entirely
+    /// (the queue-full backstop still sheds).
+    pub target_sojourn_ms: u64,
+    /// Quality floor: the smallest budget fraction worth serving. When
+    /// the degraded fraction `1/pressure` falls below this, interactive
+    /// requests are shed instead of answered badly.
+    pub min_budget_frac: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { target_sojourn_ms: 50, min_budget_frac: 0.25 }
+    }
+}
+
+/// Pressure tier (see the module table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Normal,
+    ShedBatch,
+    Degrade,
+    Critical,
+}
+
+impl Tier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Normal => "normal",
+            Tier::ShedBatch => "shed_batch",
+            Tier::Degrade => "degrade",
+            Tier::Critical => "critical",
+        }
+    }
+}
+
+/// What to do with one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Execute. `budget_frac < 1.0` means the query runs with a scaled
+    /// posting budget and must be marked degraded; `skip_refine` means
+    /// the scoring-refinement phase is skipped too (critical tier).
+    Admit { budget_frac: f64, skip_refine: bool },
+    /// Refuse with `OVERLOADED`; the client should wait `retry_after_ms`
+    /// before retrying.
+    Shed { retry_after_ms: u64 },
+}
+
+impl Decision {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Decision::Shed { .. })
+    }
+}
+
+/// EWMA weight for sojourn samples: new = old + ALPHA * (sample - old).
+/// 0.2 averages over roughly the last ten pops — fast enough to track a
+/// surge front, smooth enough that one slow job doesn't flip tiers.
+const ALPHA: f64 = 0.2;
+
+/// The pressure controller. One per server; the server samples sojourn
+/// at every queue pop and consults [`Controller::decide`] at every
+/// admission.
+#[derive(Debug)]
+pub struct Controller {
+    cfg: AdmissionConfig,
+    sojourn_ewma_ms: f64,
+    /// Sojourn samples observed (diagnostics; also lets the first sample
+    /// seed the EWMA exactly instead of decaying up from zero).
+    samples: u64,
+    /// Depth/capacity from the most recent decide() (diagnostics only).
+    last_depth_frac: f64,
+}
+
+impl Controller {
+    pub fn new(cfg: AdmissionConfig) -> Controller {
+        Controller { cfg, sojourn_ewma_ms: 0.0, samples: 0, last_depth_frac: 0.0 }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    /// Feed one sojourn sample: the job a worker just popped waited
+    /// `sojourn_ms` in the run queue.
+    pub fn observe_sojourn(&mut self, sojourn_ms: u64) {
+        let s = sojourn_ms as f64;
+        if self.samples == 0 {
+            self.sojourn_ewma_ms = s;
+        } else {
+            self.sojourn_ewma_ms += ALPHA * (s - self.sojourn_ewma_ms);
+        }
+        self.samples = self.samples.saturating_add(1);
+    }
+
+    /// The smoothed queue delay.
+    pub fn sojourn_ewma_ms(&self) -> f64 {
+        self.sojourn_ewma_ms
+    }
+
+    /// Dimensionless overload factor for the given instantaneous queue
+    /// state; 1.0 = at target. Disabled (target 0) always reports 0.
+    pub fn pressure(&self, depth: usize, capacity: usize) -> f64 {
+        if self.cfg.target_sojourn_ms == 0 {
+            return 0.0;
+        }
+        let sojourn = self.sojourn_ewma_ms / self.cfg.target_sojourn_ms as f64;
+        // A queue half full counts as pressure 1.0: depth leads sojourn
+        // (jobs at the back haven't been popped yet), so reacting at
+        // half-full is what keeps the sojourn target from ever being
+        // blown through by a fast ramp.
+        let depth = 2.0 * depth as f64 / capacity.max(1) as f64;
+        sojourn.max(depth)
+    }
+
+    /// Tier for a given pressure (see the module table).
+    pub fn tier_at(pressure: f64) -> Tier {
+        if pressure < 0.5 {
+            Tier::Normal
+        } else if pressure < 1.0 {
+            Tier::ShedBatch
+        } else if pressure < 2.0 {
+            Tier::Degrade
+        } else {
+            Tier::Critical
+        }
+    }
+
+    /// Current tier for the given queue state.
+    pub fn tier(&self, depth: usize, capacity: usize) -> Tier {
+        Self::tier_at(self.pressure(depth, capacity))
+    }
+
+    /// Admission decision for one request. `class` is the envelope's
+    /// class (None = unclassed/legacy). Pure: same inputs, same answer.
+    pub fn decide(&mut self, class: Option<Class>, depth: usize, capacity: usize) -> Decision {
+        let p = self.pressure(depth, capacity);
+        self.last_depth_frac = depth as f64 / capacity.max(1) as f64;
+        let tier = Self::tier_at(p);
+        let admit_full = Decision::Admit { budget_frac: 1.0, skip_refine: false };
+        match tier {
+            Tier::Normal => admit_full,
+            Tier::ShedBatch => match class {
+                Some(Class::Batch) => self.shed(p),
+                _ => admit_full,
+            },
+            Tier::Degrade | Tier::Critical => match class {
+                Some(Class::Batch) | Some(Class::Replication) => self.shed(p),
+                // Unclassed requests keep today's semantics: admitted at
+                // full budget, never marked degraded. The queue-full
+                // backstop is their only shed path.
+                None => admit_full,
+                Some(Class::Interactive) => {
+                    // Serve in inverse proportion to overload: at 2× the
+                    // target delay, half the budget. Below the quality
+                    // floor the answer would be noise — shed instead.
+                    let frac = (1.0 / p).clamp(0.0, 1.0);
+                    if frac < self.cfg.min_budget_frac {
+                        self.shed(p)
+                    } else {
+                        Decision::Admit {
+                            budget_frac: frac,
+                            skip_refine: tier == Tier::Critical,
+                        }
+                    }
+                }
+            },
+        }
+    }
+
+    /// Deterministic retry hint: proportional to how far over target the
+    /// queue delay is — the time it plausibly takes the backlog to drain
+    /// — clamped to a sane band.
+    fn shed(&self, pressure: f64) -> Decision {
+        let target = self.cfg.target_sojourn_ms as f64;
+        let ms = (target * pressure).clamp(10.0, 5_000.0) as u64;
+        Decision::Shed { retry_after_ms: ms }
+    }
+
+    /// Snapshot for the `stats` RPC's `"admission"` section.
+    pub fn snapshot(&self, depth: usize, capacity: usize) -> ControllerSnapshot {
+        let pressure = self.pressure(depth, capacity);
+        ControllerSnapshot {
+            tier: Self::tier_at(pressure),
+            pressure,
+            sojourn_ewma_ms: self.sojourn_ewma_ms,
+            samples: self.samples,
+        }
+    }
+}
+
+/// Point-in-time controller state (for stats/diagnostics).
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerSnapshot {
+    pub tier: Tier,
+    pub pressure: f64,
+    pub sojourn_ewma_ms: f64,
+    pub samples: u64,
+}
+
+impl ControllerSnapshot {
+    /// The `"admission"` section of the `stats` RPC.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("tier", Json::str(self.tier.as_str())),
+            ("pressure", Json::num(self.pressure)),
+            ("sojourn_ewma_ms", Json::num(self.sojourn_ewma_ms)),
+            ("samples", Json::u64(self.samples)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(target_ms: u64, floor: f64) -> Controller {
+        Controller::new(AdmissionConfig { target_sojourn_ms: target_ms, min_budget_frac: floor })
+    }
+
+    fn saturate(c: &mut Controller, sojourn_ms: u64, n: usize) {
+        for _ in 0..n {
+            c.observe_sojourn(sojourn_ms);
+        }
+    }
+
+    #[test]
+    fn idle_admits_everything_at_full_budget() {
+        let mut c = ctl(50, 0.25);
+        for class in [None, Some(Class::Interactive), Some(Class::Batch), Some(Class::Replication)]
+        {
+            assert_eq!(
+                c.decide(class, 0, 256),
+                Decision::Admit { budget_frac: 1.0, skip_refine: false }
+            );
+        }
+        assert_eq!(c.tier(0, 256), Tier::Normal);
+    }
+
+    #[test]
+    fn batch_sheds_before_replication_before_interactive() {
+        let mut c = ctl(50, 0.25);
+        // Sojourn at 60% of target → ShedBatch tier.
+        saturate(&mut c, 30, 64);
+        assert_eq!(c.tier(0, 256), Tier::ShedBatch);
+        assert!(c.decide(Some(Class::Batch), 0, 256).is_shed());
+        assert!(!c.decide(Some(Class::Replication), 0, 256).is_shed());
+        assert!(!c.decide(Some(Class::Interactive), 0, 256).is_shed());
+        assert!(!c.decide(None, 0, 256).is_shed());
+        // Sojourn past target → Degrade: replication sheds too.
+        saturate(&mut c, 75, 64);
+        assert_eq!(c.tier(0, 256), Tier::Degrade);
+        assert!(c.decide(Some(Class::Batch), 0, 256).is_shed());
+        assert!(c.decide(Some(Class::Replication), 0, 256).is_shed());
+        assert!(!c.decide(Some(Class::Interactive), 0, 256).is_shed());
+    }
+
+    #[test]
+    fn interactive_degrades_monotonically_then_sheds_at_floor() {
+        let mut c = ctl(50, 0.25);
+        let mut prev_frac = 1.0;
+        // Walk the sojourn EWMA up; the admitted fraction must never rise.
+        for sojourn in [60, 80, 100, 140, 190] {
+            saturate(&mut c, sojourn, 64);
+            match c.decide(Some(Class::Interactive), 0, 256) {
+                Decision::Admit { budget_frac, .. } => {
+                    assert!(
+                        budget_frac <= prev_frac + 1e-9,
+                        "budget fraction rose under growing pressure: \
+                         {budget_frac} > {prev_frac}"
+                    );
+                    assert!(budget_frac >= 0.25);
+                    prev_frac = budget_frac;
+                }
+                Decision::Shed { .. } => panic!("interactive shed above the floor"),
+            }
+        }
+        // Pressure past 1/floor = 4× → interactive sheds too.
+        saturate(&mut c, 250, 64);
+        let d = c.decide(Some(Class::Interactive), 0, 256);
+        assert!(d.is_shed(), "interactive must shed below the quality floor: {d:?}");
+    }
+
+    #[test]
+    fn critical_tier_skips_refinement() {
+        let mut c = ctl(50, 0.25);
+        saturate(&mut c, 150, 64); // pressure 3.0 → Critical, frac 1/3 ≥ floor
+        assert_eq!(c.tier(0, 256), Tier::Critical);
+        match c.decide(Some(Class::Interactive), 0, 256) {
+            Decision::Admit { budget_frac, skip_refine } => {
+                assert!(skip_refine, "critical tier must skip refinement");
+                assert!((budget_frac - 1.0 / 3.0).abs() < 0.05, "frac {budget_frac}");
+            }
+            d => panic!("expected degraded admit, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn depth_alone_raises_pressure_between_pops() {
+        let mut c = ctl(50, 0.25);
+        // No sojourn samples at all, but the queue is 80% full: depth
+        // pressure = 1.6 → Degrade tier immediately.
+        assert_eq!(c.tier(205, 256), Tier::Degrade);
+        assert!(c.decide(Some(Class::Batch), 205, 256).is_shed());
+        // Empty queue, still no samples → Normal.
+        assert_eq!(c.tier(0, 256), Tier::Normal);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_pressure_and_is_clamped() {
+        let mut c = ctl(50, 0.25);
+        saturate(&mut c, 40, 64); // pressure 0.8
+        let Decision::Shed { retry_after_ms: low } = c.decide(Some(Class::Batch), 0, 256) else {
+            panic!("batch not shed at 0.8");
+        };
+        saturate(&mut c, 400, 64); // pressure 8.0
+        let Decision::Shed { retry_after_ms: high } = c.decide(Some(Class::Batch), 0, 256) else {
+            panic!("batch not shed at 8.0");
+        };
+        assert!(high > low, "hint did not grow with pressure: {low} → {high}");
+        assert!((10..=5_000).contains(&low) && (10..=5_000).contains(&high));
+    }
+
+    #[test]
+    fn disabled_controller_never_sheds() {
+        let mut c = ctl(0, 0.25);
+        saturate(&mut c, 10_000, 64);
+        assert_eq!(c.pressure(256, 256), 0.0);
+        assert!(!c.decide(Some(Class::Batch), 256, 256).is_shed());
+    }
+
+    #[test]
+    fn replayed_sample_stream_reproduces_decisions() {
+        // Determinism contract: same samples, same decisions — this is
+        // what lets the replay-determinism lint cover the module.
+        let run = || {
+            let mut c = ctl(50, 0.25);
+            let mut out = Vec::new();
+            for i in 0..200u64 {
+                c.observe_sojourn((i * 7) % 190);
+                out.push(c.decide(
+                    Some(Class::ALL[(i % 3) as usize]),
+                    (i as usize * 13) % 256,
+                    256,
+                ));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn class_parses_and_round_trips() {
+        for c in Class::ALL {
+            assert_eq!(Class::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(Class::parse("bulk"), None);
+        assert_eq!(Class::Interactive.index(), 0);
+        assert_eq!(Class::Replication.index(), 1);
+        assert_eq!(Class::Batch.index(), 2);
+    }
+}

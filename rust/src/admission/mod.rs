@@ -1,0 +1,33 @@
+//! Adaptive admission control: graceful degradation under overload.
+//!
+//! The server's original overload response was binary — a bounded run
+//! queue that sheds with `OVERLOADED` only once completely full. That
+//! keeps the process alive but serves the worst possible latency right up
+//! to the cliff: every admitted request first waits behind a full queue.
+//! This module replaces the cliff with a gradient:
+//!
+//! 1. **Priority-aware shedding.** v1 envelopes may carry a `class`
+//!    (`interactive | batch | replication`). As pressure rises the
+//!    controller sheds lowest-class-first (batch, then replication) with
+//!    `OVERLOADED` plus a `retry_after_ms` hint, well before the queue is
+//!    full — so admitted interactive requests never queue behind bulk
+//!    work.
+//! 2. **Degraded-budget serving.** Past the degrade tier, interactive
+//!    queries run with a scaled `max_postings` budget (recall traded for
+//!    latency — the paper's approximation dial, turned dynamically) and,
+//!    at the critical tier, without scoring refinement. Degraded
+//!    responses are marked `degraded: true` with the applied fraction;
+//!    below the configured quality floor the request is shed instead.
+//!
+//! The controller itself ([`controller::Controller`]) is a pure function
+//! of the samples fed to it — no clocks, no nondeterministic iteration —
+//! so gus-lint's `replay-determinism` rule covers it and a recorded
+//! sample stream replays bit-for-bit. Callers (the server) measure
+//! sojourn time with their own clock and feed milliseconds in.
+//!
+//! Pressure tiers, the degradation contract, and the client-visible
+//! protocol are documented in `docs/ADMISSION.md`.
+
+pub mod controller;
+
+pub use controller::{AdmissionConfig, Class, Controller, Decision, Tier};

@@ -45,10 +45,17 @@ use std::net::TcpStream;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::admission::Class;
 use crate::coordinator::ScoredNeighbor;
 use crate::features::Point;
-use crate::protocol::{self, wire, Request, Response};
+use crate::protocol::{self, wire, ErrorCode, Request, Response};
 use crate::util::json::Json;
+
+/// Fallback sleep when an `OVERLOADED` response carries no retry hint.
+const DEFAULT_RETRY_HINT_MS: u64 = 50;
+/// Cap on the server's `retry_after_ms` hint — a confused (or hostile)
+/// server must not park a client for seconds per attempt.
+const RETRY_HINT_CAP_MS: u64 = 2_000;
 
 /// A connected client.
 pub struct GusClient {
@@ -60,6 +67,8 @@ pub struct GusClient {
     parked: HashMap<u64, Response>,
     /// Deadline attached to subsequently submitted requests.
     deadline_ms: Option<u64>,
+    /// Priority class attached to subsequently submitted requests.
+    class: Option<Class>,
 }
 
 impl GusClient {
@@ -89,6 +98,7 @@ impl GusClient {
             next_id: 1,
             parked: HashMap::new(),
             deadline_ms: None,
+            class: None,
         })
     }
 
@@ -109,6 +119,15 @@ impl GusClient {
         self.deadline_ms = deadline_ms;
     }
 
+    /// Set the priority class attached to every subsequently submitted
+    /// request; `None` (the default) submits unclassed — the server
+    /// admits unclassed requests at full budget for compatibility.
+    /// Under overload the server sheds `batch` and `replication` first
+    /// and degrades `interactive` before shedding it.
+    pub fn set_class(&mut self, class: Option<Class>) {
+        self.class = class;
+    }
+
     // ---------- pipelined core ----------
 
     /// Write one enveloped request and return its correlation id without
@@ -124,7 +143,7 @@ impl GusClient {
     fn submit_op(&mut self, op: Json) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        let env = protocol::envelope_to_wire(id, self.deadline_ms, op);
+        let env = protocol::envelope_to_wire_classed(id, self.deadline_ms, self.class, op);
         self.writer.write_all(env.dump().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
@@ -178,8 +197,34 @@ impl GusClient {
 
     fn into_result(resp: Response) -> Result<Response> {
         match resp {
-            Response::Error { code, message } => bail!("rpc error [{code}]: {message}"),
+            Response::Error { code, message, .. } => bail!("rpc error [{code}]: {message}"),
             other => Ok(other),
+        }
+    }
+
+    /// Submit-and-wait with backpressure handling: when the server sheds
+    /// the request with `OVERLOADED`, sleep its `retry_after_ms` hint
+    /// (capped at [`RETRY_HINT_CAP_MS`]) and resubmit, up to `attempts`
+    /// total tries. Any other error — and the final `OVERLOADED` — comes
+    /// back as `Err`, exactly like [`GusClient::wait`].
+    pub fn call_with_retry(&mut self, request: Request, attempts: usize) -> Result<Response> {
+        let op = request.to_wire();
+        let mut tries = 0usize;
+        loop {
+            tries += 1;
+            let id = self.submit_op(op.clone())?;
+            let resp = self.wait_response(id)?;
+            match &resp {
+                Response::Error { code: ErrorCode::Overloaded, retry_after_ms, .. }
+                    if tries < attempts =>
+                {
+                    let hint = retry_after_ms
+                        .unwrap_or(DEFAULT_RETRY_HINT_MS)
+                        .clamp(1, RETRY_HINT_CAP_MS);
+                    std::thread::sleep(std::time::Duration::from_millis(hint));
+                }
+                _ => return Self::into_result(resp),
+            }
         }
     }
 
@@ -209,7 +254,7 @@ impl GusClient {
     /// Wait for a `query`/`query_id` neighborhood.
     pub fn wait_neighbors(&mut self, id: u64) -> Result<Vec<ScoredNeighbor>> {
         match self.wait(id)? {
-            Response::Neighbors { neighbors } => Ok(neighbors),
+            Response::Neighbors { neighbors, .. } => Ok(neighbors),
             other => bail!("unexpected response {other:?} (wanted 'neighbors')"),
         }
     }
@@ -221,7 +266,7 @@ impl GusClient {
         expected_len: usize,
     ) -> Result<Vec<Vec<ScoredNeighbor>>> {
         match self.wait(id)? {
-            Response::Results { results } => {
+            Response::Results { results, .. } => {
                 if results.len() != expected_len {
                     bail!("results length {} != batch length {expected_len}", results.len());
                 }

@@ -144,6 +144,18 @@ pub struct GusConfig {
     /// building unbounded backlog — admission control at the API
     /// boundary keeps admitted requests' tail latency flat.
     pub rpc_queue: usize,
+    /// Adaptive admission: target run-queue sojourn in milliseconds. The
+    /// pressure controller ([`crate::admission`]) sheds low-priority
+    /// classes and degrades interactive budgets as the observed sojourn
+    /// EWMA (and queue depth) climbs past this target. 0 disables the
+    /// controller entirely — only the queue-full backstop sheds, exactly
+    /// the pre-admission behavior.
+    pub admission_target_ms: u64,
+    /// Degraded-serving quality floor: the smallest `max_postings` budget
+    /// fraction the server will serve an interactive query at. Below it
+    /// the request is shed with `OVERLOADED` instead of answering with
+    /// unusable recall. In (0, 1].
+    pub min_budget_frac: f64,
     /// Disk fault-injection plan (`--fault-plan` flag or `GUS_FAULT_PLAN`
     /// env var), e.g. `wal_append:enospc@seq=1200;fsync:err@nth=3` — see
     /// [`crate::fault::FaultPlan`] for the grammar. Armed once per
@@ -174,6 +186,8 @@ impl Default for GusConfig {
             max_connections: 64,
             rpc_workers: 0,
             rpc_queue: 256,
+            admission_target_ms: 50,
+            min_budget_frac: 0.25,
             fault_plan: None,
         }
     }
@@ -204,6 +218,8 @@ impl GusConfig {
         self.max_connections = args.get_usize("max-connections", self.max_connections);
         self.rpc_workers = args.get_usize("rpc-workers", self.rpc_workers);
         self.rpc_queue = args.get_usize("rpc-queue", self.rpc_queue);
+        self.admission_target_ms = args.get_u64("admission-target-ms", self.admission_target_ms);
+        self.min_budget_frac = args.get_f64("min-budget-frac", self.min_budget_frac);
         // Flag beats env var beats nothing; an empty value means "off"
         // either way (lets a wrapper script unconditionally forward
         // GUS_FAULT_PLAN="").
@@ -237,6 +253,9 @@ impl GusConfig {
         }
         if self.rpc_queue == 0 {
             return Err("rpc-queue must be >= 1".into());
+        }
+        if !(self.min_budget_frac > 0.0 && self.min_budget_frac <= 1.0) {
+            return Err("min-budget-frac must be in (0, 1]".into());
         }
         Ok(())
     }
@@ -282,6 +301,8 @@ impl GusConfig {
             ("max_connections", Json::num(self.max_connections as f64)),
             ("rpc_workers", Json::num(self.rpc_workers as f64)),
             ("rpc_queue", Json::num(self.rpc_queue as f64)),
+            ("admission_target_ms", Json::u64(self.admission_target_ms)),
+            ("min_budget_frac", Json::num(self.min_budget_frac)),
         ])
     }
 
@@ -310,6 +331,11 @@ impl GusConfig {
             max_connections: j.get("max_connections").as_usize().unwrap_or(d.max_connections),
             rpc_workers: j.get("rpc_workers").as_usize().unwrap_or(d.rpc_workers),
             rpc_queue: j.get("rpc_queue").as_usize().unwrap_or(d.rpc_queue),
+            admission_target_ms: j
+                .get("admission_target_ms")
+                .as_u64()
+                .unwrap_or(d.admission_target_ms),
+            min_budget_frac: j.get("min_budget_frac").as_f64().unwrap_or(d.min_budget_frac),
             // Never read from config JSON (see the field doc); even a
             // hand-edited "fault_plan" key is ignored.
             fault_plan: None,
@@ -460,6 +486,37 @@ mod tests {
         assert_eq!(old.rpc_queue, 256);
         // Degenerate values are rejected.
         for bad in ["--max-connections=0", "--rpc-queue=0"] {
+            let args = Args::parse_from([bad.to_string()]).unwrap();
+            assert!(GusConfig::default().apply_args(&args).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn admission_knobs_cli_and_json() {
+        // Defaults: controller on at a 50ms sojourn target, floor 0.25.
+        let d = GusConfig::default();
+        assert_eq!(d.admission_target_ms, 50);
+        assert_eq!(d.min_budget_frac, 0.25);
+        let args = Args::parse_from(
+            ["--admission-target-ms=20", "--min-budget-frac=0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = GusConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.admission_target_ms, 20);
+        assert_eq!(cfg.min_budget_frac, 0.5);
+        let back = GusConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.admission_target_ms, 20);
+        assert_eq!(back.min_budget_frac, 0.5);
+        // Old configs (no admission fields) fall back to defaults.
+        let old = GusConfig::from_json(&Json::parse(r#"{"scann_nn":7}"#).unwrap()).unwrap();
+        assert_eq!(old.admission_target_ms, 50);
+        assert_eq!(old.min_budget_frac, 0.25);
+        // 0 disables the controller and is valid; a zero or >1 floor is not.
+        let args = Args::parse_from(["--admission-target-ms=0".to_string()]).unwrap();
+        assert_eq!(GusConfig::default().apply_args(&args).unwrap().admission_target_ms, 0);
+        for bad in ["--min-budget-frac=0", "--min-budget-frac=1.5"] {
             let args = Args::parse_from([bad.to_string()]).unwrap();
             assert!(GusConfig::default().apply_args(&args).is_err(), "{bad}");
         }

@@ -92,6 +92,20 @@ pub struct ScoredNeighbor {
     pub dot: f32,
 }
 
+/// How far to degrade one query under overload: scale the posting-scan
+/// budget, and at the last tier skip the scoring refinement entirely.
+/// Produced by the admission controller ([`crate::admission`]), applied
+/// by the `*_degraded` query methods; the server marks the response
+/// `degraded` so clients can tell a cheap answer from a full one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeSpec {
+    /// Fraction of the full `max_postings` budget to spend, in (0, 1].
+    pub budget_frac: f64,
+    /// Skip model scoring: rank retrieved candidates by embedding dot
+    /// (`score == dot`). The cheapest answer that is still a neighborhood.
+    pub skip_refine: bool,
+}
+
 /// Service metrics bundle.
 #[derive(Default)]
 pub struct GusMetrics {
@@ -637,6 +651,120 @@ impl DynamicGus {
         self.query(&p, k)
     }
 
+    // ---------- degraded serving (overload) ----------
+
+    /// The scan budget a degraded query runs under. With a configured
+    /// budget it is simply scaled; with `max_postings = 0` (exact scan)
+    /// the budget is derived from the current live posting count so the
+    /// fraction still binds. Never zero — zero means "exact" to the index.
+    fn degraded_budget(&self, frac: f64) -> usize {
+        let base = if self.config.max_postings > 0 {
+            self.config.max_postings
+        } else {
+            self.index.stats().live_postings
+        };
+        ((base as f64 * frac).ceil() as usize).max(1)
+    }
+
+    /// Rank retrieved candidates by their embedding dot, skipping the
+    /// scoring model (`score == dot`). Same tie-break as the scored path.
+    fn rank_by_dot(neighbors: &[crate::index::Neighbor]) -> Vec<ScoredNeighbor> {
+        let mut out: Vec<ScoredNeighbor> = neighbors
+            .iter()
+            .map(|n| ScoredNeighbor { id: n.id, score: n.dot, dot: n.dot })
+            .collect();
+        out.sort_unstable_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// [`query`](DynamicGus::query) under a [`DegradeSpec`]: the retrieval
+    /// scan budget is scaled by `budget_frac`, and with `skip_refine` the
+    /// candidates come back dot-ranked instead of model-scored. A spec of
+    /// `{1.0, false}` answers exactly like `query` (modulo the derived
+    /// budget when `max_postings = 0`).
+    pub fn query_degraded(&self, p: &Point, k: usize, spec: DegradeSpec) -> Result<Vec<ScoredNeighbor>> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let t0 = Instant::now();
+        self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        let embedding = { self.embedder.read().unwrap().embed(p) };
+        let params = QueryParams {
+            exclude: Some(p.id),
+            max_postings: self.degraded_budget(spec.budget_frac),
+        };
+        let neighbors = self.index.top_k(&embedding, k, params);
+        let out = if spec.skip_refine {
+            self.metrics
+                .counters
+                .candidates_retrieved
+                .fetch_add(neighbors.len() as u64, Relaxed);
+            Self::rank_by_dot(&neighbors)
+        } else {
+            self.score_neighbors(p, &neighbors, self.index.query_threads())
+        };
+        self.metrics.query_latency.record(t0.elapsed());
+        self.metrics.counters.queries.fetch_add(1, Relaxed);
+        Ok(out)
+    }
+
+    /// [`query_by_id`](DynamicGus::query_by_id) under a [`DegradeSpec`].
+    pub fn query_by_id_degraded(
+        &self,
+        id: PointId,
+        k: usize,
+        spec: DegradeSpec,
+    ) -> Result<Vec<ScoredNeighbor>> {
+        let p = self
+            .store
+            .get(id)
+            .ok_or_else(|| anyhow!("unknown point {id}"))?;
+        self.query_degraded(&p, k, spec)
+    }
+
+    /// [`query_batch`](DynamicGus::query_batch) under a [`DegradeSpec`]:
+    /// entry `i` equals `query_degraded(&points[i], k, spec)` against the
+    /// same snapshot. The budget is derived once for the whole batch.
+    pub fn query_batch_degraded(
+        &self,
+        points: &[Point],
+        k: usize,
+        spec: DegradeSpec,
+    ) -> Result<Vec<Vec<ScoredNeighbor>>> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        for p in points {
+            self.schema.validate(p).map_err(|e| anyhow!("{e}"))?;
+        }
+        let threads = self.index.query_threads();
+        let budget = self.degraded_budget(spec.budget_frac);
+        let queries: Vec<(crate::sparse::SparseVec, QueryParams)> = {
+            let guard = self.embedder.read().unwrap();
+            let em = &*guard;
+            crate::util::threadpool::parallel_map(points.len(), threads, |i| {
+                (
+                    em.embed(&points[i]),
+                    QueryParams { exclude: Some(points[i].id), max_postings: budget },
+                )
+            })
+        };
+        let neighbor_lists = self.index.query_batch(&queries, k);
+        let out = if spec.skip_refine {
+            let total: usize = neighbor_lists.iter().map(Vec::len).sum();
+            self.metrics.counters.candidates_retrieved.fetch_add(total as u64, Relaxed);
+            neighbor_lists.iter().map(|ns| Self::rank_by_dot(ns)).collect()
+        } else {
+            crate::util::threadpool::parallel_map(points.len(), threads, |i| {
+                // One query per worker: no nested scoring fan-out.
+                self.score_neighbors(&points[i], &neighbor_lists[i], 1)
+            })
+        };
+        self.metrics.query_latency.record(t0.elapsed());
+        self.metrics.counters.queries.fetch_add(points.len() as u64, Relaxed);
+        Ok(out)
+    }
+
     /// Periodic reload (§4.3): recompute IDF/filter tables from the current
     /// corpus and swap them in without downtime. Re-embeds and re-indexes
     /// all points (embeddings depend on the tables). Logged to the WAL:
@@ -1006,6 +1134,99 @@ mod tests {
         // query_batch validates the whole batch too.
         let bad = vec![ds.points[0].clone(), Point::new(1, vec![])];
         assert!(gus.query_batch(&bad, 5).is_err());
+    }
+
+    #[test]
+    fn degraded_full_budget_matches_exact_query() {
+        let (gus, ds) = boot(300);
+        // frac = 1.0 on a single shard derives a budget of live_postings,
+        // which cannot bind: the answer must equal the exact query.
+        let spec = DegradeSpec { budget_frac: 1.0, skip_refine: false };
+        for qi in (0..50).step_by(7) {
+            let full = gus.query(&ds.points[qi], 10).unwrap();
+            let deg = gus.query_degraded(&ds.points[qi], 10, spec).unwrap();
+            assert_eq!(full, deg, "query {qi} diverged at full budget");
+        }
+    }
+
+    #[test]
+    fn degraded_skip_refine_ranks_by_dot() {
+        let (gus, ds) = boot(300);
+        let spec = DegradeSpec { budget_frac: 1.0, skip_refine: true };
+        let res = gus.query_degraded(&ds.points[0], 10, spec).unwrap();
+        assert!(!res.is_empty());
+        for n in &res {
+            assert_eq!(n.score, n.dot, "skip_refine must report score == dot");
+        }
+        for w in res.windows(2) {
+            assert!(w[0].dot >= w[1].dot, "not dot-ranked: {res:?}");
+        }
+        // The candidate set matches the scored path's retrieval (same
+        // budget): only the ordering criterion differs.
+        let full = gus.query(&ds.points[0], 10).unwrap();
+        let ids = |v: &[ScoredNeighbor]| {
+            let mut x: Vec<u64> = v.iter().map(|n| n.id).collect();
+            x.sort_unstable();
+            x
+        };
+        assert_eq!(ids(&full), ids(&res));
+    }
+
+    #[test]
+    fn degraded_budget_shrinks_scan_volume() {
+        let (gus, ds) = boot(400);
+        let scanned = |g: &DynamicGus| g.stats_json().get("postings_scanned").as_u64().unwrap();
+        let before = scanned(&gus);
+        let _ = gus.query(&ds.points[0], 10).unwrap();
+        let full_scan = scanned(&gus) - before;
+        let before = scanned(&gus);
+        let spec = DegradeSpec { budget_frac: 0.02, skip_refine: false };
+        let res = gus.query_degraded(&ds.points[0], 10, spec).unwrap();
+        let degraded_scan = scanned(&gus) - before;
+        // The index pre-slices posting lists to the budget, so the scan is
+        // capped by ceil(live_postings × frac) — and well under the exact
+        // query's volume.
+        let live = gus.stats_json().get("live_postings").as_u64().unwrap();
+        let budget = (live as f64 * 0.02).ceil() as u64;
+        assert!(
+            degraded_scan <= budget,
+            "budget did not cap the scan: {degraded_scan} > {budget}"
+        );
+        assert!(
+            degraded_scan < full_scan,
+            "2% budget did not shrink the scan: {degraded_scan} vs {full_scan}"
+        );
+        // Still a useful answer, just a cheaper one.
+        assert!(!res.is_empty());
+    }
+
+    #[test]
+    fn query_batch_degraded_matches_singles() {
+        let (gus, ds) = boot(300);
+        for spec in [
+            DegradeSpec { budget_frac: 0.5, skip_refine: false },
+            DegradeSpec { budget_frac: 0.25, skip_refine: true },
+        ] {
+            let queries: Vec<Point> = ds.points[..12].to_vec();
+            let batch = gus.query_batch_degraded(&queries, 8, spec).unwrap();
+            assert_eq!(batch.len(), 12);
+            for (i, p) in queries.iter().enumerate() {
+                let single = gus.query_degraded(p, 8, spec).unwrap();
+                assert_eq!(batch[i], single, "degraded batch query {i} diverged ({spec:?})");
+            }
+        }
+        assert!(gus
+            .query_batch_degraded(&[], 8, DegradeSpec { budget_frac: 0.5, skip_refine: false })
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn query_by_id_degraded_unknown_errors() {
+        let (gus, ds) = boot(150);
+        let spec = DegradeSpec { budget_frac: 0.5, skip_refine: true };
+        assert!(gus.query_by_id_degraded(ds.points[3].id, 5, spec).unwrap().len() > 0);
+        assert!(gus.query_by_id_degraded(123_456_789, 5, spec).is_err());
     }
 
     #[test]

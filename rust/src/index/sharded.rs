@@ -303,9 +303,8 @@ impl ShardedIndex {
 }
 
 /// Merge independently ranked result lists into one globally ranked list
-/// under `cmp` (descending relevance first). Shared by the per-shard
-/// fan-out merge above and the replication router's scatter/gather merge
-/// ([`crate::replication::router`]) — same contract, different sort key.
+/// under `cmp` (descending relevance first). Used by the per-shard
+/// fan-out merge above.
 pub fn merge_ranked<T>(
     lists: Vec<Vec<T>>,
     cmp: impl FnMut(&T, &T) -> std::cmp::Ordering,

@@ -25,6 +25,7 @@
 //! ogbn-products (offline environment — see DESIGN.md for the substitution
 //! table); [`eval`] regenerates every figure/table of the paper.
 
+pub mod admission;
 pub mod bench;
 pub mod client;
 pub mod config;

@@ -95,6 +95,12 @@ pub struct LoadReport {
     pub errors: BTreeMap<String, u64>,
     /// Requests submitted but never answered (connection died).
     pub transport_lost: u64,
+    /// Successful responses the server marked `degraded` (answered
+    /// under a reduced scan budget — see docs/ADMISSION.md).
+    pub degraded: u64,
+    /// `OVERLOADED` sheds keyed by the request's priority class
+    /// (`"unclassed"` when the envelope carried none).
+    pub shed_by_class: BTreeMap<String, u64>,
     /// Request latency over every matched response.
     pub latency: LatencySummary,
     pub per_kind: Vec<KindStats>,
@@ -178,6 +184,16 @@ impl LoadReport {
             ("ok", Json::u64(self.ok)),
             ("errors", errors),
             ("transport_lost", Json::u64(self.transport_lost)),
+            ("degraded", Json::u64(self.degraded)),
+            (
+                "shed_by_class",
+                Json::Obj(
+                    self.shed_by_class
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::u64(v)))
+                        .collect(),
+                ),
+            ),
             ("latency", self.latency.to_json()),
             ("per_kind", per_kind),
             (
@@ -241,6 +257,12 @@ impl LoadReport {
                 self.staleness_p50_ms, self.staleness_p99_ms, self.staleness_count
             );
         }
+        if self.degraded > 0 {
+            println!("degraded responses: {} (served under a reduced budget)", self.degraded);
+        }
+        if !self.shed_by_class.is_empty() {
+            println!("overload sheds by class: {:?}", self.shed_by_class);
+        }
         if !self.errors.is_empty() {
             println!("error codes: {:?}", self.errors);
         }
@@ -280,6 +302,7 @@ impl LoadReport {
                 ("achieved_rate".to_string(), Json::num(self.achieved_rate())),
                 ("staleness_p99_ms".to_string(), Json::num(self.staleness_p99_ms)),
                 ("error_total".to_string(), Json::u64(self.error_total())),
+                ("degraded".to_string(), Json::u64(self.degraded)),
                 ("report".to_string(), self.to_json()),
             ],
         );
@@ -298,6 +321,8 @@ pub fn empty_report(offered_rate: f64, duration_s: f64, connections: usize) -> L
         ok: 0,
         errors: BTreeMap::new(),
         transport_lost: 0,
+        degraded: 0,
+        shed_by_class: BTreeMap::new(),
         latency: zero_summary(),
         per_kind: OP_KINDS
             .iter()
@@ -355,9 +380,15 @@ mod tests {
     fn json_report_has_machine_keys() {
         let mut r = report_with(10.0, 50.0, 100.0);
         r.errors.insert("OVERLOADED".into(), 3);
+        r.degraded = 5;
+        r.shed_by_class.insert("batch".into(), 2);
+        r.shed_by_class.insert("interactive".into(), 1);
         let j = r.to_json();
         assert_eq!(j.get("sent").as_u64(), Some(200));
         assert_eq!(j.get("errors").get("OVERLOADED").as_u64(), Some(3));
+        assert_eq!(j.get("degraded").as_u64(), Some(5));
+        assert_eq!(j.get("shed_by_class").get("batch").as_u64(), Some(2));
+        assert_eq!(j.get("shed_by_class").get("interactive").as_u64(), Some(1));
         assert_eq!(j.get("staleness").get("count").as_u64(), Some(10));
         assert!(j.get("lost_acked_mutations").is_null());
         assert_eq!(j.get("achieved_rate").as_f64(), Some(100.0));

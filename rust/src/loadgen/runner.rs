@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::admission::Class;
 use crate::client::GusClient;
 use crate::coordinator::staleness::StalenessTracker;
 use crate::data::synthetic::PointSampler;
@@ -83,6 +84,10 @@ pub struct LoadOptions {
     /// service can replay the run (crash tests). Off for pure
     /// throughput runs — it pins every insert in client memory.
     pub record_points: bool,
+    /// Attach priority classes (queries `interactive`, mutations
+    /// `batch`) so admission control can shed by priority. Off = the
+    /// unclassed pre-admission envelope, byte for byte.
+    pub classes: bool,
 }
 
 impl LoadOptions {
@@ -97,6 +102,7 @@ impl LoadOptions {
             deadline_ms: sc.deadline_ms,
             seed: sc.load_seed,
             record_points: false,
+            classes: sc.classes,
         }
     }
 
@@ -152,6 +158,12 @@ struct Shared {
     sent: [AtomicU64; 4],
     ok: [AtomicU64; 4],
     transport_lost: AtomicU64,
+    /// Successful responses the server marked `degraded` (served under
+    /// a reduced scan budget).
+    degraded: AtomicU64,
+    /// `OVERLOADED` sheds keyed by the request's class name
+    /// (`"unclassed"` for class-less envelopes).
+    shed_by_class: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Shared {
@@ -164,11 +176,18 @@ impl Shared {
             sent: std::array::from_fn(|_| AtomicU64::new(0)),
             ok: std::array::from_fn(|_| AtomicU64::new(0)),
             transport_lost: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            shed_by_class: Mutex::new(BTreeMap::new()),
         }
     }
 
     fn bump_error(&self, code: &str) {
         *self.errors.lock().unwrap().entry(code.to_string()).or_insert(0) += 1;
+    }
+
+    fn bump_shed(&self, class: Option<Class>) {
+        let key = class.map(|c| c.as_str()).unwrap_or("unclassed");
+        *self.shed_by_class.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
     }
 }
 
@@ -180,6 +199,8 @@ struct Pending {
     record: Option<usize>,
     /// Insert target id — acked inserts become delete candidates.
     target: u64,
+    /// Priority class the request carried (for shed attribution).
+    class: Option<Class>,
 }
 
 struct ConnShared {
@@ -226,6 +247,8 @@ pub fn run_load(addr: &str, opts: &LoadOptions, sampler: &PointSampler) -> Resul
     report.latency = shared.overall.summary();
     report.errors = shared.errors.into_inner().unwrap();
     report.transport_lost = shared.transport_lost.load(Ordering::SeqCst);
+    report.degraded = shared.degraded.load(Ordering::SeqCst);
+    report.shed_by_class = shared.shed_by_class.into_inner().unwrap();
     report.staleness_count = shared.staleness.count();
     report.staleness_p50_ms = shared.staleness.p50_ms();
     report.staleness_p99_ms = shared.staleness.p99_ms();
@@ -324,14 +347,20 @@ fn writer_loop(
         let kind = opts.mix.sample(&mut rng);
         let (op, record, target_id) =
             build_op(kind, opts, sampler, conn, &mut rng, &mut fresh, &mut fallback);
+        // Classed runs mark queries interactive and mutations batch —
+        // the generator plays the latency-sensitive user while its
+        // ingest stream is deferrable.
+        let class = opts.classes.then(|| {
+            if kind.is_mutation() { Class::Batch } else { Class::Interactive }
+        });
         let rid = next_rid;
         next_rid += 1;
         shared.sent[kind.index()].fetch_add(1, Ordering::SeqCst);
         conn.pending.lock().unwrap().insert(
             rid,
-            Pending { kind, sent_at: Instant::now(), record, target: target_id },
+            Pending { kind, sent_at: Instant::now(), record, target: target_id, class },
         );
-        let env = protocol::envelope_to_wire(rid, opts.deadline_ms, op);
+        let env = protocol::envelope_to_wire_classed(rid, opts.deadline_ms, class, op);
         let sent = writer
             .write_all(env.dump().as_bytes())
             .and_then(|_| writer.write_all(b"\n"))
@@ -444,8 +473,20 @@ fn reader_loop(read_stream: TcpStream, conn: &ConnShared, shared: &Shared) {
         shared.overall.record(latency);
         shared.per_kind[entry.kind.index()].record(latency);
         match resp {
-            Response::Error { code, .. } => shared.bump_error(code.as_str()),
+            Response::Error { code, .. } => {
+                if code == crate::protocol::ErrorCode::Overloaded {
+                    shared.bump_shed(entry.class);
+                }
+                shared.bump_error(code.as_str());
+            }
             _ => {
+                if matches!(
+                    &resp,
+                    Response::Neighbors { degraded: Some(_), .. }
+                        | Response::Results { degraded: Some(_), .. }
+                ) {
+                    shared.degraded.fetch_add(1, Ordering::SeqCst);
+                }
                 shared.ok[entry.kind.index()].fetch_add(1, Ordering::SeqCst);
                 if entry.kind.is_mutation() {
                     // Mutations are applied before the ack, so submit→ack

@@ -132,13 +132,24 @@ pub struct Scenario {
     /// Seed for the arrival schedule + op sampling (distinct from the
     /// corpus seed so the same corpus can carry many traffic runs).
     pub load_seed: u64,
+    /// Attach priority classes to every request (queries `interactive`,
+    /// mutations `batch`) so the server's admission controller can shed
+    /// by priority. Off by default: unclassed envelopes are the
+    /// pre-admission wire shape, byte for byte.
+    pub classes: bool,
     pub slo: SloSpec,
 }
 
 /// Names of the built-in scenarios: the promoted `examples/` workloads
-/// plus the chaos-drill workload (`gus loadgen --chaos`'s default).
-pub const SCENARIO_NAMES: [&str; 4] =
-    ["android_security", "recsys_stream", "dynamic_clustering", "chaos_drill"];
+/// plus the chaos-drill workload (`gus loadgen --chaos`'s default) and
+/// the overload-surge drill workload.
+pub const SCENARIO_NAMES: [&str; 5] = [
+    "android_security",
+    "recsys_stream",
+    "dynamic_clustering",
+    "chaos_drill",
+    "overload_surge",
+];
 
 /// Look up a built-in scenario.
 ///
@@ -154,6 +165,12 @@ pub const SCENARIO_NAMES: [&str; 4] =
 ///   load (inserts, deletes, queries) long enough for several fault
 ///   windows plus the reconvergence tail, with per-request deadlines so
 ///   blackholed requests fail fast instead of wedging a connection.
+/// - `overload_surge` — the graceful-degradation drill workload
+///   (`gus loadgen --scenario overload_surge` runs the three-phase
+///   capacity-probe → surge → recovery drill): a classed mixed load
+///   (queries `interactive`, mutations `batch`) driven against a
+///   deliberately capacity-constrained server, so priority shedding and
+///   degraded-budget serving are what's under test. See docs/ADMISSION.md.
 pub fn builtin(name: &str) -> Option<Scenario> {
     let mix = |spec: &str| Mix::parse(spec).expect("builtin mix spec");
     match name {
@@ -167,6 +184,7 @@ pub fn builtin(name: &str) -> Option<Scenario> {
             batch: 16,
             deadline_ms: Some(1_000),
             load_seed: 0xbad,
+            classes: false,
             slo: SloSpec { p50_ms: 25.0, p99_ms: 150.0, staleness_p99_ms: 1_000.0 },
         }),
         "recsys_stream" => Some(Scenario {
@@ -179,6 +197,7 @@ pub fn builtin(name: &str) -> Option<Scenario> {
             batch: 16,
             deadline_ms: Some(1_000),
             load_seed: 0x0ec5,
+            classes: false,
             slo: SloSpec { p50_ms: 25.0, p99_ms: 100.0, staleness_p99_ms: 1_000.0 },
         }),
         "dynamic_clustering" => Some(Scenario {
@@ -191,6 +210,7 @@ pub fn builtin(name: &str) -> Option<Scenario> {
             batch: 16,
             deadline_ms: Some(1_000),
             load_seed: 0x5eed,
+            classes: false,
             slo: SloSpec { p50_ms: 25.0, p99_ms: 100.0, staleness_p99_ms: 2_000.0 },
         }),
         "chaos_drill" => Some(Scenario {
@@ -203,9 +223,28 @@ pub fn builtin(name: &str) -> Option<Scenario> {
             batch: 16,
             deadline_ms: Some(1_000),
             load_seed: 0xd311,
+            classes: false,
             // Latency under injected partitions/latency windows is not
             // the drill's subject; thresholds stay loose and advisory.
             slo: SloSpec { p50_ms: 100.0, p99_ms: 1_500.0, staleness_p99_ms: 5_000.0 },
+        }),
+        "overload_surge" => Some(Scenario {
+            name: name.to_string(),
+            corpus: CorpusSpec::new("arxiv_like", 6_000, 0x0514, 10),
+            // The drill's capacity-probe rate; the surge phase offers a
+            // multiple of whatever goodput the probe actually measured.
+            rate: 1_200.0,
+            duration_s: 8.0,
+            connections: 4,
+            mix: mix("insert=20,delete=5,query=60,query_batch=15"),
+            batch: 8,
+            deadline_ms: Some(1_000),
+            load_seed: 0x0b0d,
+            classes: true,
+            // The p99 SLO is the bar for *admitted interactive* requests
+            // during the surge (the drill gates on the interactive
+            // latency histogram, not the overall one).
+            slo: SloSpec { p50_ms: 50.0, p99_ms: 250.0, staleness_p99_ms: 2_000.0 },
         }),
         _ => None,
     }
@@ -240,6 +279,7 @@ impl Scenario {
                 self.deadline_ms.map(|d| Json::num(d as f64)).unwrap_or(Json::Null),
             ),
             ("load_seed", Json::u64(self.load_seed)),
+            ("classes", Json::Bool(self.classes)),
             ("slo", self.slo.to_json()),
         ])
     }
@@ -261,6 +301,13 @@ mod tests {
             assert_eq!(sc.to_json(), builtin(name).unwrap().to_json());
         }
         assert!(builtin("nope").is_none());
+        // The surge drill is the one classed builtin: its whole point is
+        // priority-aware shedding.
+        assert!(builtin("overload_surge").unwrap().classes);
+        assert!(SCENARIO_NAMES.iter().all(|n| {
+            let classed = builtin(n).unwrap().classes;
+            (*n == "overload_surge") == classed
+        }));
     }
 
     #[test]

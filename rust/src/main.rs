@@ -14,28 +14,41 @@
 //!             # write-ahead logged, checkpoints land in DIR, and a
 //!             # restart with the same --wal-dir recovers everything.
 //!             [--replicate] [--ack-replicas R] [--wal-retain N]
+//!             [--ack-timeout-ms MS]
 //!             # --replicate turns the durable server into a replication
 //!             # leader: followers subscribe to its WAL stream. With
 //!             # --ack-replicas R, a mutation's ack waits until R
-//!             # followers hold it durably (semi-sync). --wal-retain
-//!             # keeps N records past each checkpoint so lagging
-//!             # followers can stream instead of re-bootstrapping.
+//!             # followers hold it durably (semi-sync) for at most
+//!             # --ack-timeout-ms (default 5000) before answering
+//!             # UNAVAILABLE. --wal-retain keeps N records past each
+//!             # checkpoint so lagging followers can stream instead of
+//!             # re-bootstrapping.
+//!             [--admission-target-ms MS] [--min-budget-frac F]
+//!             # overload admission: MS is the queue-sojourn target the
+//!             # pressure controller aims for; F is the floor below
+//!             # which interactive requests are shed instead of served
+//!             # further degraded. See docs/ADMISSION.md.
 //!             [--fault-plan 'wal_append:enospc@seq=1200;fsync:err@nth=3']
 //!             # deterministic disk-fault injection (flag or the
 //!             # GUS_FAULT_PLAN env var; `follow` accepts it too) — for
 //!             # drills and tests only. Grammar in docs/CHAOS.md.
 //! gus follow  --leader HOST:PORT --wal-dir DIR [--addr 127.0.0.1:7718]
 //!             [--peers HOST:PORT,..] [--ack-replicas R]
+//!             [--ack-timeout-ms MS]
 //!             # replicating follower: bootstraps from the leader
 //!             # (snapshot + WAL tail), serves read-only queries
 //!             # (mutations -> NOT_LEADER + leader hint), and can be
-//!             # promoted to leader on failover (`gus promote`).
+//!             # promoted to leader on failover (`gus promote`); the
+//!             # ack knobs only matter after a promotion.
 //! gus route   --targets HOST:PORT,HOST:PORT,.. [--addr 127.0.0.1:7800]
 //!             [--health-interval-ms 500] [--fail-threshold 3]
 //!             [--deadline-ms 2000]
-//!             # scatter/gather router: forwards mutations to the
-//!             # leader, fans queries out across all replicas and
-//!             # merges top-k; promotes the most-durable follower after
+//!             # hedged router: forwards mutations to the leader; sends
+//!             # each query to the best replica by latency EWMA, fires
+//!             # one hedged duplicate to the next-best when the primary
+//!             # exceeds its p95 (first answer wins), and ejects
+//!             # slow/failing replicas behind per-replica circuit
+//!             # breakers; promotes the most-durable follower after
 //!             # --fail-threshold leaderless health rounds.
 //! gus chaosproxy --upstream HOST:PORT [--listen 127.0.0.1:0]
 //!             [--seed S] [--span-ms MS] [--ensure-partition] [--passthrough]
@@ -58,10 +71,15 @@
 //!             # replay a workload; `batch` drives the insert_batch /
 //!             # query_batch RPCs in --batch-size chunks
 //! gus preprocess --dataset arxiv_like --n 20000   # table summary (§4.3)
-//! gus loadgen [--scenario android_security|recsys_stream|dynamic_clustering]
+//! gus loadgen [--scenario android_security|recsys_stream|dynamic_clustering|overload_surge]
 //!             [--smoke]                 # shrink a scenario to CI scale
 //!             [--rate R] [--duration S] [--mix insert=10,delete=2,query=80,query_batch=8]
 //!             [--connections C] [--k K] [--batch B] [--deadline-ms D] [--seed S]
+//!             [--classes]               # mark queries interactive / mutations batch
+//!                                       # so admission control sheds by priority;
+//!                                       # --scenario overload_surge runs the full
+//!                                       # three-phase overload drill (capacity probe,
+//!                                       # 3x surge with priority gates, recovery)
 //!             [--dataset arxiv_like --n N --corpus-seed S2]   # ad-hoc corpus
 //!             [--addr HOST:PORT]        # drive an external server instead of self-hosting
 //!             [--wal-dir DIR]           # durable self-hosted server
@@ -175,6 +193,15 @@ fn infer_schema(points: &[Point]) -> anyhow::Result<dynamic_gus::features::Schem
     })
 }
 
+/// The semi-sync ack-gate timeout (`--ack-timeout-ms`), defaulting to
+/// the replication module's [`dynamic_gus::replication::ACK_TIMEOUT`].
+fn ack_timeout_arg(args: &Args) -> std::time::Duration {
+    std::time::Duration::from_millis(args.get_u64(
+        "ack-timeout-ms",
+        dynamic_gus::replication::ACK_TIMEOUT.as_millis() as u64,
+    ))
+}
+
 /// Arm the process-global disk-fault injector (no-op when `spec` is
 /// `None`). Must run before any WAL is opened: writers capture the
 /// injector once at open. `serve` resolves the spec via
@@ -283,13 +310,19 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             };
             let gus = Arc::new(gus);
             if replicate {
+                let ack_timeout = ack_timeout_arg(args);
                 let rep = dynamic_gus::replication::NodeReplication::leader(
                     Arc::clone(&gus),
                     ack_replicas,
+                    ack_timeout,
                 );
                 server_cfg.replication =
                     Some(rep as Arc<dyn dynamic_gus::server::Replication>);
-                eprintln!("[gus] replication leader (ack_replicas={ack_replicas})");
+                eprintln!(
+                    "[gus] replication leader (ack_replicas={ack_replicas}, \
+                     ack_timeout={}ms)",
+                    ack_timeout.as_millis()
+                );
             }
             // Background checkpointer: bounds WAL length (and restart
             // cost) without stalling the mutation path on every op.
@@ -336,6 +369,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     wal_dir: std::path::PathBuf::from(&dir),
                     threads,
                     ack_replicas: args.get_usize("ack-replicas", 0),
+                    ack_timeout: ack_timeout_arg(args),
                 },
             )?;
             // A follower checkpoints its own WAL copy, bounding its
@@ -799,6 +833,7 @@ fn resolve_scenario(
             batch: 16,
             deadline_ms: None,
             load_seed: 0x10ad,
+            classes: false,
             slo: SloSpec {
                 p50_ms: args.get_f64("slo-p50-ms", 25.0),
                 p99_ms: args.get_f64("slo-p99-ms", 150.0),
@@ -817,6 +852,7 @@ fn resolve_scenario(
         sc.deadline_ms = Some(d.parse()?);
     }
     sc.load_seed = args.get_u64("seed", sc.load_seed);
+    sc.classes = args.get_bool("classes", sc.classes);
     Ok(sc)
 }
 
@@ -860,6 +896,8 @@ fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
         loadgen_replicated(args, &sc, &opts, &sampler, t)?
     } else if let Some(t) = crash_at {
         loadgen_crash(args, &sc, &opts, &sampler, t)?
+    } else if sc.name == "overload_surge" && args.opt_str("addr").is_none() {
+        loadgen_overload(args, &sc, &opts, &sampler)?
     } else if let Some(addr) = args.opt_str("addr") {
         loadgen_external(&addr, &opts, &sampler)?
     } else {
@@ -974,6 +1012,196 @@ fn loadgen_selfhost(
         extra_slo: Vec::new(),
         crash_mode: false,
         exempt_codes: &[],
+    })
+}
+
+/// Graceful-degradation drill (`gus loadgen --scenario overload_surge`):
+/// three phases against one deliberately capacity-constrained in-process
+/// server (a single RPC worker and a short run queue, so the drill
+/// saturates at honest scale on any host).
+///
+/// - **Phase A — capacity probe.** Unclassed load at the scenario rate;
+///   the measured goodput is the server's capacity for this corpus on
+///   this host. Unclassed requests bypass priority shedding, so the
+///   probe measures the machine, not the policy.
+/// - **Phase B — surge.** Classed load (queries `interactive`,
+///   mutations `batch`) offered at 3× the measured capacity. Gates:
+///   goodput stays ≥ 70% of capacity (admission sheds cheaply instead
+///   of collapsing), batch sheds at a rate ≥ the interactive shed rate
+///   (priority order held), zero acked-mutation loss, and — under
+///   `--gate-latency` — admitted interactive p99 within the scenario
+///   SLO.
+/// - **Phase C — recovery.** After a pressure-draining warmup, a
+///   query-only run at a fraction of capacity must come back completely
+///   clean: no errors, no shed, and *no degraded responses* — proof the
+///   controller releases the brakes when the surge ends.
+fn loadgen_overload(
+    args: &Args,
+    sc: &dynamic_gus::loadgen::Scenario,
+    opts: &dynamic_gus::loadgen::LoadOptions,
+    sampler: &dynamic_gus::data::synthetic::PointSampler,
+) -> anyhow::Result<LoadRun> {
+    use dynamic_gus::loadgen::{runner, verify, LoadOptions, Mix};
+    use dynamic_gus::util::rng::Rng;
+
+    // Bound the surge's request volume: open-loop at 3× capacity can ask
+    // for more requests than a CI host can even serialize.
+    const SURGE_RATE_CAP: f64 = 30_000.0;
+
+    let ds = sc.corpus.generate()?;
+    let threads = dynamic_gus::util::threadpool::default_parallelism();
+    let mut cfg = sc.corpus.gus_config();
+    cfg.rpc_workers = args.get_usize("rpc-workers", 1);
+    cfg.rpc_queue = args.get_usize("rpc-queue", 64);
+    cfg.admission_target_ms = args.get_u64("admission-target-ms", cfg.admission_target_ms);
+    cfg.min_budget_frac = args.get_f64("min-budget-frac", cfg.min_budget_frac);
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    eprintln!(
+        "[loadgen] bootstrapping {} points ({}); constrained to {} worker(s), queue {}",
+        ds.points.len(),
+        ds.schema.name,
+        cfg.rpc_workers,
+        cfg.rpc_queue
+    );
+    let gus = Arc::new(DynamicGus::bootstrap(ds.schema.clone(), cfg, &ds.points, threads)?);
+    let handle = serve(Arc::clone(&gus), "127.0.0.1:0", ServerConfig::from_gus(gus.config()))?;
+    let addr = handle.addr.to_string();
+
+    // Phase A: capacity probe.
+    let probe_opts = LoadOptions { classes: false, ..opts.clone() };
+    let probe = runner::run_load(&addr, &probe_opts, sampler)?;
+    let capacity = probe.report.achieved_rate();
+    anyhow::ensure!(capacity > 0.0, "capacity probe measured zero goodput");
+    eprintln!(
+        "[loadgen] phase A: capacity {capacity:.0} req/s goodput (offered {:.0}, {} sheds)",
+        opts.rate,
+        probe.report.error_total()
+    );
+
+    // Phase B: classed surge at 3× measured capacity.
+    let surge_rate = (3.0 * capacity).min(SURGE_RATE_CAP);
+    let surge_opts = LoadOptions { rate: surge_rate, classes: true, ..opts.clone() };
+    let surge = runner::run_load(&addr, &surge_opts, sampler)?;
+    let goodput = surge.report.achieved_rate();
+    let shed = |class: &str| surge.report.shed_by_class.get(class).copied().unwrap_or(0);
+    let (shed_batch, shed_interactive) = (shed("batch"), shed("interactive"));
+    eprintln!(
+        "[loadgen] phase B: offered {surge_rate:.0} req/s, goodput {goodput:.0} req/s \
+         ({:.0}% of capacity); sheds batch={shed_batch} interactive={shed_interactive}; \
+         {} degraded responses",
+        100.0 * goodput / capacity,
+        surge.report.degraded
+    );
+
+    let mut extra_failures = Vec::new();
+    if goodput < 0.7 * capacity {
+        extra_failures.push(format!(
+            "goodput collapsed under surge: {goodput:.0} req/s < 70% of the measured \
+             {capacity:.0} req/s capacity"
+        ));
+    }
+    // Priority order: the batch class must be shed at least as hard as
+    // interactive, normalized by how much of each was offered.
+    let sent_of = |kinds: &[&str]| -> u64 {
+        surge
+            .report
+            .per_kind
+            .iter()
+            .filter(|k| kinds.contains(&k.kind))
+            .map(|k| k.sent)
+            .sum()
+    };
+    let batch_sent = sent_of(&["insert", "delete"]);
+    let interactive_sent = sent_of(&["query", "query_batch"]);
+    if batch_sent > 0 && interactive_sent > 0 {
+        let batch_rate = shed_batch as f64 / batch_sent as f64;
+        let interactive_rate = shed_interactive as f64 / interactive_sent as f64;
+        if interactive_rate > batch_rate {
+            extra_failures.push(format!(
+                "priority inversion: interactive shed rate {:.3} > batch shed rate {:.3} \
+                 (batch must shed first)",
+                interactive_rate, batch_rate
+            ));
+        }
+    }
+    // Admitted interactive latency vs the scenario SLO (latency gates
+    // are advisory unless --gate-latency, like every other mode).
+    let mut extra_slo = Vec::new();
+    for k in &surge.report.per_kind {
+        if ["query", "query_batch"].contains(&k.kind) && k.ok > 0 {
+            let p99 = k.latency.p99_ns as f64 / 1e6;
+            if p99 > sc.slo.p99_ms {
+                extra_slo.push(format!(
+                    "surge interactive {} p99 {p99:.2} ms > SLO {:.2} ms",
+                    k.kind, sc.slo.p99_ms
+                ));
+            }
+        }
+    }
+    // Zero acked-mutation loss: a shed mutation was refused, not acked,
+    // so the ledger proof holds through the surge unchanged.
+    let expected = verify::determinate_final_state(&surge.ledgers);
+    let violations = verify::check_survival_inproc(&gus, &expected);
+    eprintln!(
+        "[loadgen] acked-mutation survival through surge: {} determinate ids, {} violations",
+        expected.len(),
+        violations.len()
+    );
+
+    // Phase C: recovery. Unclassed warmup queries are never shed or
+    // degraded, and each observed sojourn decays the pressure EWMA, so
+    // the run that follows measures the recovered steady state rather
+    // than the controller's memory of the surge.
+    let mut client = GusClient::connect(&addr)?;
+    let mut warm_rng = Rng::seeded(sc.load_seed ^ 0xc001);
+    for i in 0..32u64 {
+        let p = sampler.sample(runner::FRESH_ID_BASE + (99 << 28) + i, &mut warm_rng);
+        let _ = client.query(&p, sc.corpus.k);
+    }
+    let post_opts = LoadOptions {
+        mix: Mix::query_only(),
+        rate: (capacity * 0.3).max(50.0),
+        duration: std::time::Duration::from_secs_f64(opts.duration.as_secs_f64().min(5.0)),
+        record_points: false,
+        classes: true,
+        ..opts.clone()
+    };
+    let post = runner::run_load(&addr, &post_opts, sampler)?;
+    eprintln!(
+        "[loadgen] phase C: {} ok, {} errors, {} degraded, p99 {:.2} ms",
+        post.report.ok,
+        post.report.error_total(),
+        post.report.degraded,
+        post.report.latency.p99_ns as f64 / 1e6
+    );
+    if post.report.error_total() > 0 || post.report.transport_lost > 0 {
+        extra_failures.push(format!(
+            "post-surge run had {} errors / {} unanswered (the controller must release \
+             the brakes once pressure drains)",
+            post.report.error_total(),
+            post.report.transport_lost
+        ));
+    }
+    if post.report.degraded > 0 {
+        extra_failures.push(format!(
+            "post-surge run still served {} degraded responses",
+            post.report.degraded
+        ));
+    }
+
+    let mut report = surge.report;
+    report.lost_acked_mutations = Some(violations.len() as u64);
+    runner::attach_server_stats(&mut report, &addr);
+    handle.shutdown();
+    // OVERLOADED is the drill's subject, not a failure; deadline misses
+    // during the surge window are the deadline system working as
+    // specified on requests admission chose to keep.
+    Ok(LoadRun {
+        report,
+        extra_failures,
+        extra_slo,
+        crash_mode: false,
+        exempt_codes: &["OVERLOADED", "DEADLINE_EXCEEDED"],
     })
 }
 

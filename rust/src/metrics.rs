@@ -186,6 +186,17 @@ pub struct Counters {
     pub overloaded: AtomicU64,
     /// Requests rejected because their deadline expired before execution.
     pub deadline_exceeded: AtomicU64,
+    /// Interactive-class requests shed by the adaptive admission
+    /// controller (past the quality floor; distinct from `overloaded`,
+    /// the queue-full backstop).
+    pub shed_interactive: AtomicU64,
+    /// Replication-class requests shed by the admission controller.
+    pub shed_replication: AtomicU64,
+    /// Batch-class requests shed by the admission controller.
+    pub shed_batch: AtomicU64,
+    /// Query responses served under a reduced `max_postings` budget
+    /// (marked `degraded: true` on the wire).
+    pub degraded_responses: AtomicU64,
 }
 
 impl Counters {
@@ -205,6 +216,10 @@ impl Counters {
             ("refused", g(&self.refused)),
             ("overloaded", g(&self.overloaded)),
             ("deadline_exceeded", g(&self.deadline_exceeded)),
+            ("shed_interactive", g(&self.shed_interactive)),
+            ("shed_replication", g(&self.shed_replication)),
+            ("shed_batch", g(&self.shed_batch)),
+            ("degraded_responses", g(&self.degraded_responses)),
         ])
     }
 }
@@ -352,6 +367,12 @@ pub struct ReplicationGauges {
     records_shipped: AtomicU64,
     /// Mutation acks gated on replication that timed out (leader).
     ack_timeouts: AtomicU64,
+    /// Ack-timeout counts per laggard subscriber (leader): subscriber
+    /// stream id → how many gated acks timed out while that subscriber
+    /// had not acked. BTreeMap, not HashMap — this file feeds stats for
+    /// lint-covered modules and deterministic iteration keeps the
+    /// `"replication"` section byte-stable across runs.
+    ack_timeouts_by_subscriber: std::sync::Mutex<std::collections::BTreeMap<u64, u64>>,
     /// Live `wal_subscribe` streams (leader).
     subscribers: AtomicU64,
 }
@@ -425,9 +446,21 @@ impl ReplicationGauges {
         self.records_shipped.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Leader: a replication-gated mutation ack timed out.
-    pub fn note_ack_timeout(&self) {
+    /// Leader: a replication-gated mutation ack timed out. `laggards`
+    /// lists the subscriber stream ids that had not acked when the
+    /// timeout fired.
+    pub fn note_ack_timeout(&self, laggards: &[u64]) {
         self.ack_timeouts.fetch_add(1, Ordering::Relaxed);
+        let mut by_sub = self.ack_timeouts_by_subscriber.lock().unwrap();
+        for id in laggards {
+            *by_sub.entry(*id).or_insert(0) += 1;
+        }
+    }
+
+    /// Ack-timeout count attributed to one subscriber stream (0 if it
+    /// never held up a gated ack).
+    pub fn ack_timeouts_for(&self, subscriber: u64) -> u64 {
+        self.ack_timeouts_by_subscriber.lock().unwrap().get(&subscriber).copied().unwrap_or(0)
     }
 
     pub fn subscriber_connected(&self) {
@@ -471,6 +504,17 @@ impl ReplicationGauges {
             ("apply_staleness_ms", Json::num(self.apply_staleness_ms())),
             ("records_shipped", Json::u64(self.records_shipped.load(Ordering::Relaxed))),
             ("ack_timeouts", Json::u64(self.ack_timeouts.load(Ordering::Relaxed))),
+            (
+                "ack_timeouts_by_subscriber",
+                Json::Obj(
+                    self.ack_timeouts_by_subscriber
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|(id, n)| (format!("{id}"), Json::u64(*n)))
+                        .collect(),
+                ),
+            ),
             ("subscribers", Json::u64(self.subscribers())),
         ])
     }
@@ -629,6 +673,22 @@ mod tests {
         assert_eq!(j.get("subscribers").as_u64(), Some(1));
         g.subscriber_disconnected();
         assert_eq!(g.subscribers(), 0);
+    }
+
+    #[test]
+    fn ack_timeouts_attributed_per_subscriber() {
+        let g = ReplicationGauges::default();
+        g.note_ack_timeout(&[3]);
+        g.note_ack_timeout(&[3, 7]);
+        g.note_ack_timeout(&[]); // timed out with no identifiable laggard
+        assert_eq!(g.ack_timeouts_for(3), 2);
+        assert_eq!(g.ack_timeouts_for(7), 1);
+        assert_eq!(g.ack_timeouts_for(9), 0);
+        let j = g.to_json(0);
+        assert_eq!(j.get("ack_timeouts").as_u64(), Some(3));
+        let by_sub = j.get("ack_timeouts_by_subscriber");
+        assert_eq!(by_sub.get("3").as_u64(), Some(2));
+        assert_eq!(by_sub.get("7").as_u64(), Some(1));
     }
 
     #[test]

@@ -49,6 +49,7 @@
 
 use std::fmt;
 
+use crate::admission::Class;
 use crate::coordinator::ScoredNeighbor;
 use crate::features::Point;
 use crate::util::json::Json;
@@ -393,27 +394,48 @@ fn decode_k(j: &Json) -> Result<Option<usize>, ProtocolError> {
 
 /// A v1 request envelope: client-chosen correlation `id` (echoed by the
 /// response), optional relative deadline in milliseconds (measured from
-/// server receipt; `0` is already expired), and the op object.
+/// server receipt; `0` is already expired), an optional priority class
+/// (`interactive | batch | replication`, see [`crate::admission`]), and
+/// the op object. `class: None` (the wire key absent) keeps today's
+/// semantics exactly: the request is shed only by the queue-full
+/// backstop and never served degraded.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
     pub id: u64,
     pub deadline_ms: Option<u64>,
+    pub class: Option<Class>,
     pub request: Request,
 }
 
 impl Envelope {
     pub fn to_wire(&self) -> Json {
-        envelope_to_wire(self.id, self.deadline_ms, self.request.to_wire())
+        envelope_to_wire_classed(self.id, self.deadline_ms, self.class, self.request.to_wire())
     }
 }
 
 /// Encode a v1 envelope around an already-encoded op object — the
 /// zero-copy submission path for callers that used the borrowing
-/// [`wire`] encoders ([`Envelope::to_wire`] goes through here too).
+/// [`wire`] encoders. Emits no `class` key (the pre-admission wire shape,
+/// byte-for-byte).
 pub fn envelope_to_wire(id: u64, deadline_ms: Option<u64>, req: Json) -> Json {
+    envelope_to_wire_classed(id, deadline_ms, None, req)
+}
+
+/// [`envelope_to_wire`] with an optional priority class. `None` omits
+/// the key entirely, keeping the envelope byte-identical to the
+/// pre-admission wire shape ([`Envelope::to_wire`] goes through here).
+pub fn envelope_to_wire_classed(
+    id: u64,
+    deadline_ms: Option<u64>,
+    class: Option<Class>,
+    req: Json,
+) -> Json {
     let mut pairs = vec![("v", Json::u64(VERSION)), ("id", Json::u64(id)), ("req", req)];
     if let Some(d) = deadline_ms {
         pairs.push(("deadline_ms", Json::u64(d)));
+    }
+    if let Some(c) = class {
+        pairs.push(("class", Json::str(c.as_str())));
     }
     Json::obj(pairs)
 }
@@ -489,6 +511,22 @@ pub fn decode_request_json(j: &Json) -> Result<Incoming, DecodeError> {
             fail(Some(id), ProtocolError::bad_request("'deadline_ms' must be a non-negative integer"))
         })?),
     };
+    let class = match j.get("class") {
+        Json::Null => None,
+        c => {
+            let name = c.as_str().ok_or_else(|| {
+                fail(Some(id), ProtocolError::bad_request("'class' must be a string"))
+            })?;
+            Some(Class::parse(name).ok_or_else(|| {
+                fail(
+                    Some(id),
+                    ProtocolError::bad_request(format!(
+                        "unknown class '{name}' (expected interactive | batch | replication)"
+                    )),
+                )
+            })?)
+        }
+    };
     let req = j.get("req");
     if req.is_null() {
         return Err(fail(
@@ -497,7 +535,7 @@ pub fn decode_request_json(j: &Json) -> Result<Incoming, DecodeError> {
         ));
     }
     let request = Request::from_wire(req).map_err(|e| fail(Some(id), e))?;
-    Ok(Incoming::V1(Envelope { id, deadline_ms, request }))
+    Ok(Incoming::V1(Envelope { id, deadline_ms, class, request }))
 }
 
 // ---------- responses ----------
@@ -510,21 +548,36 @@ pub enum Response {
     Existed { existed: bool },
     /// `insert_batch` / `delete_batch` ack, per input position.
     ExistedBatch { existed: Vec<bool> },
-    /// `query` / `query_id` neighborhood.
-    Neighbors { neighbors: Vec<ScoredNeighbor> },
-    /// `query_batch` neighborhoods, per input position.
-    Results { results: Vec<Vec<ScoredNeighbor>> },
+    /// `query` / `query_id` neighborhood. `degraded` is `Some(frac)` when
+    /// the server answered under a reduced `max_postings` budget (the
+    /// applied fraction of the configured budget); `None` encodes with no
+    /// extra keys — byte-identical to the pre-admission wire shape.
+    Neighbors { neighbors: Vec<ScoredNeighbor>, degraded: Option<f64> },
+    /// `query_batch` neighborhoods, per input position. See
+    /// [`Response::Neighbors`] for `degraded`.
+    Results { results: Vec<Vec<ScoredNeighbor>>, degraded: Option<f64> },
     /// `checkpoint` ack: the WAL sequence number covered.
     Checkpoint { seq: u64 },
     /// `stats` payload.
     Stats { stats: Json },
-    /// Any failure.
-    Error { code: ErrorCode, message: String },
+    /// Any failure. `retry_after_ms` is the admission controller's
+    /// backoff hint on `OVERLOADED` sheds; `None` (every other error)
+    /// encodes with no extra key.
+    Error { code: ErrorCode, message: String, retry_after_ms: Option<u64> },
 }
 
 impl Response {
     pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
-        Response::Error { code, message: message.into() }
+        Response::Error { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// An `OVERLOADED` shed carrying the controller's retry hint.
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> Response {
+        Response::Error {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
     }
 
     pub fn is_error(&self) -> bool {
@@ -544,24 +597,36 @@ impl Response {
                 ("ok", Json::Bool(true)),
                 ("existed", Json::Arr(existed.iter().map(|&e| Json::Bool(e)).collect())),
             ],
-            Response::Neighbors { neighbors } => {
-                vec![("ok", Json::Bool(true)), ("neighbors", neighbors_to_json(neighbors))]
+            Response::Neighbors { neighbors, degraded } => {
+                let mut p = vec![("ok", Json::Bool(true)), ("neighbors", neighbors_to_json(neighbors))];
+                push_degraded(&mut p, *degraded);
+                p
             }
-            Response::Results { results } => vec![
-                ("ok", Json::Bool(true)),
-                ("results", Json::Arr(results.iter().map(|r| neighbors_to_json(r)).collect())),
-            ],
+            Response::Results { results, degraded } => {
+                let mut p = vec![
+                    ("ok", Json::Bool(true)),
+                    ("results", Json::Arr(results.iter().map(|r| neighbors_to_json(r)).collect())),
+                ];
+                push_degraded(&mut p, *degraded);
+                p
+            }
             Response::Checkpoint { seq } => {
                 vec![("ok", Json::Bool(true)), ("seq", Json::u64(*seq))]
             }
             Response::Stats { stats } => {
                 vec![("ok", Json::Bool(true)), ("stats", stats.clone())]
             }
-            Response::Error { code, message } => vec![
-                ("ok", Json::Bool(false)),
-                ("code", Json::str(code.as_str())),
-                ("error", Json::str(message.clone())),
-            ],
+            Response::Error { code, message, retry_after_ms } => {
+                let mut p = vec![
+                    ("ok", Json::Bool(false)),
+                    ("code", Json::str(code.as_str())),
+                    ("error", Json::str(message.clone())),
+                ];
+                if let Some(ms) = retry_after_ms {
+                    p.push(("retry_after_ms", Json::u64(*ms)));
+                }
+                p
+            }
         };
         if let Some(id) = id {
             pairs.push(("v", Json::u64(VERSION)));
@@ -588,8 +653,14 @@ impl Response {
                 .as_str()
                 .and_then(ErrorCode::parse)
                 .unwrap_or(ErrorCode::BadRequest);
-            return Ok((id, Response::Error { code, message }));
+            let retry_after_ms = j.get("retry_after_ms").as_u64();
+            return Ok((id, Response::Error { code, message, retry_after_ms }));
         }
+        let degraded = if j.get("degraded").as_bool() == Some(true) {
+            Some(j.get("budget_frac").as_f64().unwrap_or(1.0))
+        } else {
+            None
+        };
         let resp = if let Some(b) = j.get("existed").as_bool() {
             Response::Existed { existed: b }
         } else if let Some(arr) = j.get("existed").as_arr() {
@@ -602,13 +673,13 @@ impl Response {
                 .collect::<Result<Vec<bool>, ProtocolError>>()?;
             Response::ExistedBatch { existed }
         } else if !j.get("neighbors").is_null() {
-            Response::Neighbors { neighbors: neighbors_from_json(j.get("neighbors"))? }
+            Response::Neighbors { neighbors: neighbors_from_json(j.get("neighbors"))?, degraded }
         } else if let Some(arr) = j.get("results").as_arr() {
             let results = arr
                 .iter()
                 .map(neighbors_from_json)
                 .collect::<Result<Vec<_>, ProtocolError>>()?;
-            Response::Results { results }
+            Response::Results { results, degraded }
         } else if let Some(seq) = j.get("seq").as_u64() {
             Response::Checkpoint { seq }
         } else if !j.get("stats").is_null() {
@@ -617,6 +688,16 @@ impl Response {
             return Err(ProtocolError::bad_request("unrecognized response shape"));
         };
         Ok((id, resp))
+    }
+}
+
+/// Append the degraded-serving marker pair(s) when a budget fraction was
+/// applied. `None` appends nothing, keeping non-degraded responses
+/// byte-identical to the pre-admission encoding.
+fn push_degraded(pairs: &mut Vec<(&'static str, Json)>, degraded: Option<f64>) {
+    if let Some(frac) = degraded {
+        pairs.push(("degraded", Json::Bool(true)));
+        pairs.push(("budget_frac", Json::num(frac)));
     }
 }
 
@@ -727,7 +808,12 @@ mod tests {
 
     #[test]
     fn envelope_round_trip_and_dialect_detection() {
-        let env = Envelope { id: 7, deadline_ms: Some(50), request: Request::QueryId { id: 3, k: Some(5) } };
+        let env = Envelope {
+            id: 7,
+            deadline_ms: Some(50),
+            class: None,
+            request: Request::QueryId { id: 3, k: Some(5) },
+        };
         let wire = env.to_wire();
         match decode_request(&wire.dump()).unwrap() {
             Incoming::V1(back) => assert_eq!(back, env),
@@ -738,6 +824,42 @@ mod tests {
             Incoming::Legacy(r) => assert_eq!(r, env.request),
             other => panic!("not legacy: {other:?}"),
         }
+    }
+
+    #[test]
+    fn envelope_class_round_trip() {
+        for class in Class::ALL {
+            let env = Envelope {
+                id: 3,
+                deadline_ms: None,
+                class: Some(class),
+                request: Request::Stats,
+            };
+            match decode_request(&env.to_wire().dump()).unwrap() {
+                Incoming::V1(back) => assert_eq!(back, env),
+                other => panic!("not v1: {other:?}"),
+            }
+        }
+        // A class-less envelope encodes byte-identically to the
+        // pre-admission shape (no 'class' key on the wire at all).
+        let classless = Envelope {
+            id: 3,
+            deadline_ms: Some(20),
+            class: None,
+            request: Request::Stats,
+        };
+        assert_eq!(
+            classless.to_wire().dump(),
+            envelope_to_wire(3, Some(20), Request::Stats.to_wire()).dump()
+        );
+        assert!(!classless.to_wire().dump().contains("class"));
+        // Bad class values are rejected with the id echoed.
+        let e = decode_request(r#"{"v":1,"id":8,"class":"bulk","req":{"op":"stats"}}"#)
+            .unwrap_err();
+        assert_eq!(e.id, Some(8));
+        assert!(e.error.message.contains("unknown class 'bulk'"));
+        let e = decode_request(r#"{"v":1,"id":8,"class":3,"req":{"op":"stats"}}"#).unwrap_err();
+        assert!(e.error.message.contains("'class' must be a string"));
     }
 
     #[test]
@@ -778,12 +900,15 @@ mod tests {
         let resps = vec![
             Response::Existed { existed: true },
             Response::ExistedBatch { existed: vec![true, false] },
-            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)] },
-            Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]] },
+            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)], degraded: None },
+            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0)], degraded: Some(0.5) },
+            Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]], degraded: None },
+            Response::Results { results: vec![vec![n(2, 0.5, 1.0)]], degraded: Some(0.75) },
             Response::Checkpoint { seq: 1041 },
             Response::Stats { stats: Json::obj(vec![("points", Json::num(10.0))]) },
             Response::error(ErrorCode::NotFound, "unknown point 3"),
             Response::error(ErrorCode::Overloaded, "run queue full"),
+            Response::overloaded("shed (class=batch)", 120),
         ];
         for r in resps {
             // Legacy shape.
@@ -795,6 +920,30 @@ mod tests {
             assert_eq!(id, Some(7));
             assert_eq!(back, r);
         }
+    }
+
+    #[test]
+    fn default_path_encodes_without_admission_keys() {
+        // Non-degraded / hint-less responses must stay byte-identical to
+        // the pre-admission encoding: none of the new keys appear.
+        let n = ScoredNeighbor { id: 4, score: 0.5, dot: 3.0 };
+        for r in [
+            Response::Neighbors { neighbors: vec![n], degraded: None },
+            Response::Results { results: vec![vec![n]], degraded: None },
+            Response::error(ErrorCode::Overloaded, "run queue full"),
+        ] {
+            for id in [None, Some(7)] {
+                let wire = r.to_wire(id).dump();
+                assert!(!wire.contains("degraded"), "{wire}");
+                assert!(!wire.contains("budget_frac"), "{wire}");
+                assert!(!wire.contains("retry_after_ms"), "{wire}");
+            }
+        }
+        // Degraded marks sit before the v1 header, which stays last.
+        let d = Response::Neighbors { neighbors: vec![n], degraded: Some(0.5) };
+        let wire = d.to_wire(Some(7)).dump();
+        let header = wire.find("\"v\":").unwrap();
+        assert!(wire.find("\"degraded\":").unwrap() < header, "{wire}");
     }
 
     #[test]

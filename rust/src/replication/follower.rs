@@ -44,6 +44,9 @@ pub struct FollowerOpts {
     /// Followers that must ack this node's own mutations if it is ever
     /// promoted (semi-sync; 0 = async).
     pub ack_replicas: usize,
+    /// How long the ack gate waits for those acks before answering
+    /// `UNAVAILABLE` (see `--ack-timeout-ms`).
+    pub ack_timeout: Duration,
 }
 
 /// Socket read timeout while tailing. The leader heartbeats every
@@ -152,10 +155,10 @@ fn try_subscribe(addr: &str, from_seq: u64) -> Attempt {
     };
     if !j.get("error").is_null() {
         return match Response::from_wire(&j) {
-            Ok((_, Response::Error { code: ErrorCode::NotLeader, message })) => {
+            Ok((_, Response::Error { code: ErrorCode::NotLeader, message, .. })) => {
                 Attempt::NotLeader(leader_hint(&message))
             }
-            Ok((_, Response::Error { code, message })) => {
+            Ok((_, Response::Error { code, message, .. })) => {
                 Attempt::Failed(format!("subscription refused [{code}]: {message}"))
             }
             _ => Attempt::Failed("unintelligible subscription refusal".into()),
@@ -346,7 +349,12 @@ pub fn start_follower(opts: FollowerOpts) -> Result<(Arc<DynamicGus>, Arc<NodeRe
         );
     }
 
-    let rep = NodeReplication::follower(Arc::clone(&gus), leader_addr.clone(), opts.ack_replicas);
+    let rep = NodeReplication::follower(
+        Arc::clone(&gus),
+        leader_addr.clone(),
+        opts.ack_replicas,
+        opts.ack_timeout,
+    );
     let thread_rep = Arc::clone(&rep);
     let primary = opts.leader.clone();
     let peers = opts.peers.clone();

@@ -1,5 +1,5 @@
-//! Scatter/gather router: the single address clients talk to in a
-//! multi-node deployment.
+//! Hedged router: the single address clients talk to in a multi-node
+//! deployment.
 //!
 //! The router speaks the same line protocol as a node (`gus serve`), so
 //! every existing client — including `gus loadgen` — points at it
@@ -13,11 +13,18 @@
 //!   its outcome unknown, so the client gets `UNAVAILABLE` rather than
 //!   a silent retry — mutations are idempotent upserts, so the client
 //!   retries safely.
-//! - **Queries** (`query`, `query_batch`) scatter to every live
-//!   replica and gather: per-query lists are merged by score (reusing
-//!   the sharded-index merge), deduped by id, and truncated to `k`.
-//!   Reads are idempotent, so each replica gets a bounded retry; one
-//!   live replica is enough to answer.
+//! - **Queries** (`query`, `query_batch`) are *hedged*: the router
+//!   tracks a latency EWMA (and deviation) per replica, sends the read
+//!   to the current best replica, and — if that primary has not
+//!   answered within its own p95 estimate — fires one duplicate to the
+//!   next-best replica. First answer wins; the loser is bounded by the
+//!   request deadline and its connection is simply discarded. A replica
+//!   that fails [`FAILURE_THRESHOLD`] reads in a row trips a circuit
+//!   breaker: it is ejected for a [`fault::Backoff`]-scheduled window,
+//!   re-admitted through a single half-open probe, and serves only
+//!   hedges (never primaries) until it has proven itself again
+//!   (slow-start). `stats` responses forwarded through the router gain
+//!   a `"router"` section exposing all of this.
 //!
 //! Failover is driven by [`super::health`]: a monitor thread probes
 //! each target's `stats`, adopts whichever node reports itself leader,
@@ -26,22 +33,26 @@
 //! makes that follower's log a superset of every acked record (see
 //! [`super`] — the prefix property), so promotion loses nothing the
 //! leader acknowledged.
+//!
+//! [`fault::Backoff`]: crate::fault::Backoff
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::admission::Class;
 use crate::client::GusClient;
 use crate::coordinator::ScoredNeighbor;
 use crate::fault::Backoff;
-use crate::index::sharded::merge_ranked;
 use crate::metrics::monotonic_ms;
 use crate::protocol::{decode_request, ErrorCode, Incoming, Request, Response};
 use crate::util::hash::{hash_bytes, mix2};
+use crate::util::json::Json;
 
 /// Configuration for [`run_router`].
 #[derive(Debug, Clone)]
@@ -54,7 +65,8 @@ pub struct RouterOpts {
     pub health_interval: Duration,
     /// Consecutive leaderless probe rounds before promoting a follower.
     pub fail_threshold: u32,
-    /// Deadline attached to scattered queries, per target.
+    /// Deadline attached to routed reads (total per request, covering
+    /// the primary, the hedge and any failover attempts).
     pub deadline_ms: u64,
 }
 
@@ -62,31 +74,228 @@ pub struct RouterOpts {
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// Read timeout on backend connections: a node that stops answering is
-/// treated as down (the request is retried elsewhere or refused), never
-/// waited on indefinitely.
+/// treated as down (the request fails over or is refused), never waited
+/// on indefinitely. Also bounds how long a losing hedge thread lives.
 const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Attempts per replica for an idempotent read (1 retry, reconnecting).
-const READ_ATTEMPTS: usize = 2;
+// ---------- per-replica health & circuit breaker ----------
 
-/// First pause before a read retry; doubles (with jitter seeded from the
-/// replica address) up to [`RETRY_CAP`], and is always clipped to the
-/// request's remaining deadline.
-const RETRY_BASE: Duration = Duration::from_millis(20);
+/// Consecutive read failures that open a replica's breaker.
+const FAILURE_THRESHOLD: u32 = 3;
 
-/// Largest read-retry pause (pre-jitter).
-const RETRY_CAP: Duration = Duration::from_millis(200);
+/// First ejection window when a breaker opens; doubles (with jitter
+/// seeded from the replica address) up to [`BREAKER_OPEN_CAP`] while
+/// half-open probes keep failing.
+const BREAKER_OPEN_BASE: Duration = Duration::from_millis(200);
+
+/// Largest ejection window (pre-jitter).
+const BREAKER_OPEN_CAP: Duration = Duration::from_secs(5);
+
+/// Successful reads after a breaker closes before the replica is
+/// trusted as a primary again; until then it serves hedges only
+/// (slow-start re-admission).
+const SLOW_START_SUCCESSES: u32 = 3;
+
+/// Floor for the hedge trigger and the latency prior before a replica
+/// has samples: hedging below this doubles load for pure noise.
+const HEDGE_FLOOR_MS: f64 = 10.0;
+
+/// Smoothing factor for the latency EWMA and its deviation EWMA.
+const LATENCY_ALPHA: f64 = 0.2;
+
+/// Circuit-breaker position for one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    /// Serving normally.
+    Closed,
+    /// Ejected until `until_ms` (monotonic), then half-open.
+    Open { until_ms: u64 },
+    /// One re-admission probe is in flight.
+    HalfOpen,
+}
+
+struct HealthInner {
+    /// EWMA of successful read latencies (ms); `None` until a sample.
+    ewma_ms: Option<f64>,
+    /// EWMA of the absolute deviation from the latency EWMA (ms).
+    dev_ms: f64,
+    consecutive_failures: u32,
+    state: BreakerState,
+    /// Ejection-window schedule: doubles per failed probe, resets when
+    /// the breaker closes. Seeded per address, so replicas
+    /// desynchronize but each replays deterministically.
+    backoff: Backoff,
+    /// Successes since the breaker last closed; below
+    /// [`SLOW_START_SUCCESSES`] the replica is hedge-only.
+    since_close: u32,
+}
+
+/// What one replica can do for a read right now.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Availability {
+    /// Breaker closed; carries the latency estimate used for ranking
+    /// and whether the replica is still in its slow-start window.
+    Ready { p95_ms: f64, slow_start: bool },
+    /// The ejection window just expired — this caller carries the one
+    /// half-open probe.
+    Probe,
+    /// Ejected: breaker open, or a probe is already in flight.
+    Ejected,
+}
+
+/// Per-replica read health: latency EWMAs, consecutive failures and the
+/// circuit breaker. Shared across connection threads; every method
+/// takes the one internal lock briefly.
+pub(crate) struct ReplicaHealth {
+    inner: Mutex<HealthInner>,
+}
+
+impl ReplicaHealth {
+    pub(crate) fn new(addr: &str) -> ReplicaHealth {
+        ReplicaHealth {
+            inner: Mutex::new(HealthInner {
+                ewma_ms: None,
+                dev_ms: 0.0,
+                consecutive_failures: 0,
+                state: BreakerState::Closed,
+                backoff: Backoff::new(
+                    BREAKER_OPEN_BASE,
+                    BREAKER_OPEN_CAP,
+                    mix2(hash_bytes(addr.as_bytes()), 0xb7ea4e7),
+                ),
+                // A fresh replica is fully trusted — slow-start applies
+                // only after a breaker re-admission.
+                since_close: u32::MAX,
+            }),
+        }
+    }
+
+    /// p95 latency estimate: EWMA + 3 × deviation EWMA (≈ mean + 3σ·0.8
+    /// for roughly-normal latencies — deliberately conservative so the
+    /// hedge fires on genuine stragglers, not routine variance).
+    fn p95_of(h: &HealthInner) -> f64 {
+        let mean = h.ewma_ms.unwrap_or(HEDGE_FLOOR_MS * 2.0);
+        (mean + 3.0 * h.dev_ms).max(HEDGE_FLOOR_MS)
+    }
+
+    pub(crate) fn p95_ms(&self) -> f64 {
+        Self::p95_of(&self.inner.lock().unwrap())
+    }
+
+    /// Classify the replica for a read starting at `now_ms`. Expired
+    /// ejection windows transition to half-open here, and exactly one
+    /// caller observes [`Availability::Probe`] per window.
+    pub(crate) fn availability(&self, now_ms: u64) -> Availability {
+        let mut h = self.inner.lock().unwrap();
+        match h.state {
+            BreakerState::Closed => Availability::Ready {
+                p95_ms: Self::p95_of(&h),
+                slow_start: h.since_close < SLOW_START_SUCCESSES,
+            },
+            BreakerState::Open { until_ms } if now_ms >= until_ms => {
+                h.state = BreakerState::HalfOpen;
+                Availability::Probe
+            }
+            BreakerState::Open { .. } | BreakerState::HalfOpen => Availability::Ejected,
+        }
+    }
+
+    /// A read answered in `latency_ms`: feed the EWMAs, clear the
+    /// failure streak, close a half-open breaker (entering slow-start).
+    pub(crate) fn record_success(&self, latency_ms: u64) {
+        let mut h = self.inner.lock().unwrap();
+        let x = latency_ms as f64;
+        match h.ewma_ms {
+            None => h.ewma_ms = Some(x),
+            Some(m) => {
+                h.dev_ms = (1.0 - LATENCY_ALPHA) * h.dev_ms + LATENCY_ALPHA * (x - m).abs();
+                h.ewma_ms = Some(m + LATENCY_ALPHA * (x - m));
+            }
+        }
+        h.consecutive_failures = 0;
+        match h.state {
+            BreakerState::HalfOpen => {
+                h.state = BreakerState::Closed;
+                h.backoff.reset();
+                h.since_close = 1;
+            }
+            BreakerState::Closed => h.since_close = h.since_close.saturating_add(1),
+            // A straggler success from before the ejection proves
+            // nothing about the replica now: stay ejected.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// A read failed (transport error or error response): extend the
+    /// failure streak and open the breaker at the threshold. A failed
+    /// half-open probe re-ejects immediately with a longer window.
+    pub(crate) fn record_failure(&self, now_ms: u64) {
+        let mut h = self.inner.lock().unwrap();
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        let open = match h.state {
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => h.consecutive_failures >= FAILURE_THRESHOLD,
+            BreakerState::Open { .. } => false,
+        };
+        if open {
+            let window = h.backoff.next_delay().as_millis() as u64;
+            h.state = BreakerState::Open { until_ms: now_ms.saturating_add(window) };
+        }
+    }
+
+    /// The `"router"` stats entry for this replica.
+    pub(crate) fn to_json(&self, addr: &str) -> Json {
+        let h = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("addr", Json::str(addr)),
+            (
+                "breaker",
+                Json::str(match h.state {
+                    BreakerState::Closed => "closed",
+                    BreakerState::Open { .. } => "open",
+                    BreakerState::HalfOpen => "half-open",
+                }),
+            ),
+            (
+                "latency_ewma_ms",
+                match h.ewma_ms {
+                    Some(m) => Json::num(m),
+                    None => Json::Null,
+                },
+            ),
+            ("p95_ms", Json::num(Self::p95_of(&h))),
+            ("consecutive_failures", Json::u64(h.consecutive_failures as u64)),
+        ])
+    }
+}
 
 /// Shared router state: the target list is fixed at startup; the leader
 /// is whatever the health monitor (or a successful forward) last
-/// observed.
+/// observed; per-replica read health drives hedging and ejection.
 pub(crate) struct RouterState {
     pub(crate) targets: Vec<String>,
     leader: Mutex<Option<String>>,
     pub(crate) deadline_ms: u64,
+    /// Read health, aligned with `targets`.
+    pub(crate) health: Vec<ReplicaHealth>,
+    /// Hedged duplicate reads launched, and how many the hedge won.
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
 }
 
 impl RouterState {
+    pub(crate) fn new(targets: Vec<String>, deadline_ms: u64) -> RouterState {
+        let health = targets.iter().map(|t| ReplicaHealth::new(t)).collect();
+        RouterState {
+            targets,
+            leader: Mutex::new(None),
+            deadline_ms,
+            health,
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+        }
+    }
+
     pub(crate) fn leader(&self) -> Option<String> {
         self.leader.lock().unwrap().clone()
     }
@@ -118,11 +327,7 @@ pub fn run_router(opts: RouterOpts) -> Result<()> {
     if opts.targets.is_empty() {
         anyhow::bail!("router needs at least one --targets address");
     }
-    let state = Arc::new(RouterState {
-        targets: opts.targets.clone(),
-        leader: Mutex::new(None),
-        deadline_ms: opts.deadline_ms,
-    });
+    let state = Arc::new(RouterState::new(opts.targets.clone(), opts.deadline_ms));
     let listener =
         TcpListener::bind(&opts.listen).with_context(|| format!("binding {}", opts.listen))?;
     // Stdout, matching `gus serve` — harnesses parse this line.
@@ -140,8 +345,10 @@ pub fn run_router(opts: RouterOpts) -> Result<()> {
 }
 
 /// Per-client-connection backend pool. Leader-forwarding connections are
-/// keyed by address (the leader can move mid-connection); scatter
-/// connections align with the target list.
+/// keyed by address (the leader can move mid-connection); read
+/// connections align with the target list. A read connection lent to a
+/// hedge that lost stays with its (detached, deadline-bounded) thread
+/// and is re-established on next use.
 struct Backends {
     forward: BTreeMap<String, GusClient>,
     scatter: Vec<Option<GusClient>>,
@@ -154,7 +361,7 @@ fn connect_backend(addr: &str, deadline_ms: Option<u64>) -> Option<GusClient> {
     Some(c)
 }
 
-fn handle_conn(state: &RouterState, stream: TcpStream) {
+fn handle_conn(state: &Arc<RouterState>, stream: TcpStream) {
     stream.set_nodelay(true).ok();
     let Ok(write_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(stream);
@@ -175,9 +382,9 @@ fn handle_conn(state: &RouterState, stream: TcpStream) {
         if trimmed.is_empty() {
             continue;
         }
-        let (id, request) = match decode_request(trimmed) {
-            Ok(Incoming::V1(env)) => (Some(env.id), env.request),
-            Ok(Incoming::Legacy(req)) => (None, req),
+        let (id, class, request) = match decode_request(trimmed) {
+            Ok(Incoming::V1(env)) => (Some(env.id), env.class, env.request),
+            Ok(Incoming::Legacy(req)) => (None, None, req),
             Err(de) => {
                 let id = if de.v1 { de.id } else { None };
                 let resp = Response::error(de.error.code, de.error.message);
@@ -187,7 +394,7 @@ fn handle_conn(state: &RouterState, stream: TcpStream) {
                 continue;
             }
         };
-        let resp = dispatch(state, &mut backends, request);
+        let resp = dispatch(state, &mut backends, request, class);
         if write_response(&mut writer, &resp, id).is_err() {
             return;
         }
@@ -205,25 +412,61 @@ fn write_response(
     writer.flush()
 }
 
-fn dispatch(state: &RouterState, backends: &mut Backends, request: Request) -> Response {
+fn dispatch(
+    state: &Arc<RouterState>,
+    backends: &mut Backends,
+    request: Request,
+    class: Option<Class>,
+) -> Response {
     match request {
         Request::Query { point, k } => {
-            match scatter_query_batch(state, backends, &[point], k) {
-                Ok(mut results) => Response::Neighbors { neighbors: results.remove(0) },
+            match hedged_query_batch(state, backends, std::slice::from_ref(&point), k, class) {
+                Ok((mut results, degraded)) => {
+                    Response::Neighbors { neighbors: results.remove(0), degraded }
+                }
                 Err(resp) => resp,
             }
         }
         Request::QueryBatch { points, k } => {
-            match scatter_query_batch(state, backends, &points, k) {
-                Ok(results) => Response::Results { results },
+            match hedged_query_batch(state, backends, &points, k, class) {
+                Ok((results, degraded)) => Response::Results { results, degraded },
                 Err(resp) => resp,
             }
         }
+        Request::Stats => match forward_to_leader(state, backends, Request::Stats, class) {
+            Response::Stats { stats } => Response::Stats { stats: annotate_stats(state, stats) },
+            other => other,
+        },
         Request::WalSubscribe { .. } => Response::error(
             ErrorCode::BadRequest,
             "wal_subscribe must target a node directly, not the router",
         ),
-        other => forward_to_leader(state, backends, other),
+        other => forward_to_leader(state, backends, other, class),
+    }
+}
+
+/// Append the router's own `"router"` section (replica health, breaker
+/// positions, hedge counters) to a forwarded `stats` body.
+fn annotate_stats(state: &RouterState, stats: Json) -> Json {
+    match stats {
+        Json::Obj(mut map) => {
+            let replicas: Vec<Json> = state
+                .targets
+                .iter()
+                .zip(&state.health)
+                .map(|(addr, h)| h.to_json(addr))
+                .collect();
+            map.insert(
+                "router".into(),
+                Json::obj(vec![
+                    ("replicas", Json::Arr(replicas)),
+                    ("hedges", Json::u64(state.hedges.load(Ordering::Relaxed))),
+                    ("hedge_wins", Json::u64(state.hedge_wins.load(Ordering::Relaxed))),
+                ]),
+            );
+            Json::Obj(map)
+        }
+        other => other,
     }
 }
 
@@ -234,7 +477,12 @@ fn dispatch(state: &RouterState, backends: &mut Backends, request: Request) -> R
 /// failure after the request was written leaves the outcome unknown, so
 /// the client gets `UNAVAILABLE` and decides (mutations are idempotent
 /// upserts, so retrying is always safe).
-fn forward_to_leader(state: &RouterState, backends: &mut Backends, request: Request) -> Response {
+fn forward_to_leader(
+    state: &RouterState,
+    backends: &mut Backends,
+    request: Request,
+    class: Option<Class>,
+) -> Response {
     let mutation = request.is_mutation();
     // The op itself tells us whether success proves we found the
     // leader: followers refuse mutations/checkpoint, but answer stats
@@ -269,11 +517,12 @@ fn forward_to_leader(state: &RouterState, backends: &mut Backends, request: Requ
             }
         }
         let conn = backends.forward.get_mut(&addr).expect("just inserted");
+        conn.set_class(class);
         let outcome = conn
             .submit(request.clone())
             .and_then(|rid| conn.wait_response(rid));
         match outcome {
-            Ok(Response::Error { code: ErrorCode::NotLeader, message }) => {
+            Ok(Response::Error { code: ErrorCode::NotLeader, message, .. }) => {
                 if let Some(hint) = leader_hint(&message) {
                     if !tried.contains(&hint) {
                         candidates.insert(0, hint);
@@ -317,158 +566,375 @@ fn leader_hint(message: &str) -> Option<String> {
     }
 }
 
-// ---------- scatter/gather ----------
+// ---------- hedged reads ----------
 
-/// Scatter a query batch to every replica, gather per-query, merge by
-/// score. Succeeds if at least one replica answers the full batch.
-fn scatter_query_batch(
-    state: &RouterState,
+/// One read's replica plan: `ranked` is the serving order (primary
+/// first, then hedge/failover candidates); `probes` are half-open
+/// re-admission probes that MUST each be launched — `availability`
+/// hands out exactly one [`Availability::Probe`] per ejection window,
+/// so a probe the caller drops would leave its replica stuck half-open
+/// (reported ejected) forever.
+struct ReadPlan {
+    ranked: Vec<usize>,
+    probes: Vec<usize>,
+}
+
+/// Rank the replicas for one read starting at `now_ms`: closed breakers
+/// by latency estimate (fully-trusted ones before slow-start
+/// re-admissions); half-open probes ride separately. With no closed
+/// replica, probes serve directly; with nothing at all — every breaker
+/// open mid-window — fall back to trying every target in order: a read
+/// must never be refused while a replica might answer.
+fn plan_reads(state: &RouterState, now_ms: u64) -> ReadPlan {
+    let mut ready: Vec<(bool, f64, usize)> = Vec::new();
+    let mut probes: Vec<usize> = Vec::new();
+    for (i, h) in state.health.iter().enumerate() {
+        match h.availability(now_ms) {
+            Availability::Ready { p95_ms, slow_start } => ready.push((slow_start, p95_ms, i)),
+            Availability::Probe => probes.push(i),
+            Availability::Ejected => {}
+        }
+    }
+    ready.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
+    let mut ranked: Vec<usize> = ready.into_iter().map(|(_, _, i)| i).collect();
+    if ranked.is_empty() {
+        ranked = std::mem::take(&mut probes);
+    }
+    if ranked.is_empty() {
+        ranked.extend(0..state.targets.len());
+    }
+    ReadPlan { ranked, probes }
+}
+
+/// What one replica read attempt reports back to the hedging loop.
+struct ReadOutcome {
+    idx: usize,
+    /// `Ok` carries the per-query lists plus the backend's degraded
+    /// marker (propagated to the client — a hedged answer served under
+    /// pressure is still a degraded answer). `Err(Some)` is a server
+    /// refusal worth relaying; `Err(None)` a transport failure.
+    result: std::result::Result<(Vec<Vec<ScoredNeighbor>>, Option<f64>), Option<Response>>,
+    /// The backend connection, if still synchronized.
+    conn: Option<GusClient>,
+}
+
+/// Fire one read attempt on a detached thread. The thread owns the
+/// connection; health is recorded from inside it (latency on success,
+/// failure streak otherwise). Losing hedges are bounded by `budget_ms`
+/// server-side and [`BACKEND_READ_TIMEOUT`] client-side; their send
+/// lands in a dropped channel and the connection is discarded.
+#[allow(clippy::too_many_arguments)]
+fn spawn_read(
+    state: &Arc<RouterState>,
+    idx: usize,
+    conn: Option<GusClient>,
+    points: Vec<crate::features::Point>,
+    k: Option<usize>,
+    class: Option<Class>,
+    budget_ms: u64,
+    tx: std::sync::mpsc::Sender<ReadOutcome>,
+) {
+    let state = Arc::clone(state);
+    let fail_tx = tx.clone();
+    let spawned = std::thread::Builder::new()
+        .name("gus-router-read".into())
+        .spawn(move || {
+            let addr = &state.targets[idx];
+            let health = &state.health[idx];
+            let t0 = monotonic_ms();
+            let n_queries = points.len();
+            let mut conn = conn.or_else(|| connect_backend(addr, None));
+            let mut desynced = false;
+            let result = match conn.as_mut() {
+                None => Err(None),
+                Some(c) => {
+                    c.set_deadline_ms(Some(budget_ms));
+                    c.set_class(class);
+                    match c
+                        .submit(Request::QueryBatch { points, k })
+                        .and_then(|rid| c.wait_response(rid))
+                    {
+                        Ok(Response::Results { results, degraded })
+                            if results.len() == n_queries =>
+                        {
+                            Ok((results, degraded))
+                        }
+                        Ok(resp) => Err(Some(resp)),
+                        Err(_) => {
+                            desynced = true;
+                            Err(None)
+                        }
+                    }
+                }
+            };
+            if desynced {
+                conn = None;
+            }
+            let now = monotonic_ms();
+            match &result {
+                Ok(_) => health.record_success(now.saturating_sub(t0)),
+                Err(_) => health.record_failure(now),
+            }
+            let _ = tx.send(ReadOutcome { idx, result, conn });
+        });
+    if spawned.is_err() {
+        // Thread spawn failed: surface it like a transport failure so
+        // the hedging loop moves on to the next candidate.
+        let _ = fail_tx.send(ReadOutcome { idx, result: Err(None), conn: None });
+    }
+}
+
+/// Answer a query batch with a hedged read: primary = best replica by
+/// the plan; if it has not answered within its own p95 estimate, one
+/// duplicate goes to the next-best replica and the first answer wins.
+/// A *failed* attempt (refusal or transport) fails over to the next
+/// candidate instead — failing over is not hedging, so it does not
+/// consume the single hedge slot. Gives up at the router deadline.
+fn hedged_query_batch(
+    state: &Arc<RouterState>,
     backends: &mut Backends,
     points: &[crate::features::Point],
     k: Option<usize>,
-) -> std::result::Result<Vec<Vec<ScoredNeighbor>>, Response> {
-    let deadline = state.deadline_ms;
-    let per_replica: Vec<Option<Vec<Vec<ScoredNeighbor>>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = backends
-            .scatter
-            .iter_mut()
-            .zip(&state.targets)
-            .map(|(slot, addr)| {
-                s.spawn(move || replica_query(slot, addr, points, k, deadline))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
-    });
-    let answered = per_replica.iter().flatten().count();
-    if answered == 0 {
-        return Err(Response::error(
-            ErrorCode::Unavailable,
-            format!("no replica answered ({} targets tried)", state.targets.len()),
-        ));
-    }
-    // Transpose and merge: query i gathers each replica's list i.
-    let merged = (0..points.len())
-        .map(|i| {
-            let lists: Vec<Vec<ScoredNeighbor>> = per_replica
-                .iter()
-                .flatten()
-                .map(|results| results[i].clone())
-                .collect();
-            merge_replica_lists(lists, k)
-        })
-        .collect();
-    Ok(merged)
-}
-
-/// One replica's attempt at the batch: bounded retry (reads are
-/// idempotent), reconnecting on transport error. `None` drops this
-/// replica from the gather.
-///
-/// `deadline_ms` is the *client's* budget for the whole scatter, not a
-/// per-attempt allowance: every retry carries only what remains of it,
-/// so a slow first attempt cannot double the worst case — when the
-/// budget is spent the replica is dropped instead of asked again.
-fn replica_query(
-    slot: &mut Option<GusClient>,
-    addr: &str,
-    points: &[crate::features::Point],
-    k: Option<usize>,
-    deadline_ms: u64,
-) -> Option<Vec<Vec<ScoredNeighbor>>> {
+    class: Option<Class>,
+) -> std::result::Result<(Vec<Vec<ScoredNeighbor>>, Option<f64>), Response> {
+    let deadline = state.deadline_ms.max(1);
     let start = monotonic_ms();
-    let mut backoff = Backoff::new(RETRY_BASE, RETRY_CAP, mix2(hash_bytes(addr.as_bytes()), 1));
-    for attempt in 0..READ_ATTEMPTS {
-        let remaining = deadline_ms.saturating_sub(monotonic_ms().saturating_sub(start));
-        if remaining == 0 {
-            return None;
-        }
-        if attempt > 0 {
-            std::thread::sleep(backoff.next_delay().min(Duration::from_millis(remaining)));
-        }
-        let remaining = deadline_ms.saturating_sub(monotonic_ms().saturating_sub(start));
-        if remaining == 0 {
-            return None;
-        }
-        if slot.is_none() {
-            *slot = connect_backend(addr, Some(remaining));
-        }
-        let Some(conn) = slot.as_mut() else { continue };
-        conn.set_deadline_ms(Some(remaining));
-        let outcome = conn
-            .submit(Request::QueryBatch { points: points.to_vec(), k })
-            .and_then(|rid| conn.wait_response(rid));
-        match outcome {
-            Ok(Response::Results { results }) if results.len() == points.len() => {
-                return Some(results)
-            }
-            Ok(Response::Error {
-                code: ErrorCode::Unavailable | ErrorCode::DeadlineExceeded,
-                ..
-            }) => continue, // transient: same connection, one more try
-            Ok(_) => return None, // wrong shape or hard refusal: drop replica
-            Err(_) => {
-                *slot = None; // desynchronized: reconnect and retry
-            }
-        }
+    let ReadPlan { ranked: plan, probes } = plan_reads(state, start);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let primary = plan[0];
+    spawn_read(
+        state,
+        primary,
+        backends.scatter[primary].take(),
+        points.to_vec(),
+        k,
+        class,
+        deadline,
+        tx.clone(),
+    );
+    let mut in_flight = 1usize;
+    // Half-open probes launch unconditionally alongside the primary —
+    // each one is this window's single re-admission attempt, and its
+    // result is what closes (or re-opens) the breaker. A probe that
+    // answers first also wins the read; it costs one duplicate read per
+    // ejection window, which is the intended re-admission price.
+    for &pi in &probes {
+        spawn_read(state, pi, backends.scatter[pi].take(), points.to_vec(), k, class, deadline, tx.clone());
+        in_flight += 1;
     }
-    None
-}
-
-/// Merge per-replica neighbor lists for one query: best score first,
-/// first occurrence of an id wins (it sorted highest), truncated to `k`.
-/// Replicas at different WAL positions can disagree transiently; the
-/// merge favors whichever replica scored a point higher, which is the
-/// same contract a single node's sharded index already provides.
-fn merge_replica_lists(lists: Vec<Vec<ScoredNeighbor>>, k: Option<usize>) -> Vec<ScoredNeighbor> {
-    let limit = k.unwrap_or_else(|| lists.iter().map(Vec::len).max().unwrap_or(0));
-    let merged = merge_ranked(lists, |a, b| {
-        b.score.total_cmp(&a.score).then(a.id.cmp(&b.id))
-    });
-    let mut seen: BTreeSet<u64> = BTreeSet::new();
-    let mut out = Vec::with_capacity(limit.min(merged.len()));
-    for n in merged {
-        if out.len() >= limit {
+    // The hedge trigger: the primary's own p95 estimate (floored so a
+    // cold estimate cannot hedge instantly), clipped to the deadline.
+    let hedge_at_ms = (state.health[primary].p95_ms() as u64)
+        .max(HEDGE_FLOOR_MS as u64)
+        .min(deadline);
+    let mut next = 1usize; // next ranked entry to launch
+    let mut hedged = false; // the duplicate-read slot is single-use
+    let mut last_refusal: Option<Response> = None;
+    loop {
+        let elapsed = monotonic_ms().saturating_sub(start);
+        if elapsed >= deadline {
             break;
         }
-        if seen.insert(n.id) {
-            out.push(n);
+        let hedge_armed = !hedged && next < plan.len() && in_flight > 0;
+        let wait_limit = if hedge_armed { hedge_at_ms } else { deadline };
+        if hedge_armed && elapsed >= wait_limit {
+            // Primary exceeded its p95: fire the one hedged duplicate.
+            let idx = plan[next];
+            spawn_read(
+                state,
+                idx,
+                backends.scatter[idx].take(),
+                points.to_vec(),
+                k,
+                class,
+                deadline - elapsed,
+                tx.clone(),
+            );
+            next += 1;
+            in_flight += 1;
+            hedged = true;
+            state.hedges.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        match rx.recv_timeout(Duration::from_millis(wait_limit - elapsed)) {
+            Ok(ReadOutcome { idx, result: Ok(ok), conn }) => {
+                backends.scatter[idx] = conn;
+                if hedged && idx != primary {
+                    state.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(ok);
+            }
+            Ok(ReadOutcome { idx, result: Err(refusal), conn }) => {
+                backends.scatter[idx] = conn;
+                if let Some(r) = refusal {
+                    last_refusal = Some(r);
+                }
+                in_flight -= 1;
+                if next < plan.len() {
+                    let remaining =
+                        deadline.saturating_sub(monotonic_ms().saturating_sub(start));
+                    if remaining > 0 {
+                        let idx = plan[next];
+                        spawn_read(
+                            state,
+                            idx,
+                            backends.scatter[idx].take(),
+                            points.to_vec(),
+                            k,
+                            class,
+                            remaining,
+                            tx.clone(),
+                        );
+                        next += 1;
+                        in_flight += 1;
+                    }
+                } else if in_flight == 0 {
+                    break;
+                }
+            }
+            Err(_) => {} // timeout: the loop re-evaluates hedge/deadline
         }
     }
-    out
+    Err(last_refusal.unwrap_or_else(|| {
+        Response::error(
+            ErrorCode::Unavailable,
+            format!("no replica answered within {deadline}ms ({next} tried)"),
+        )
+    }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn n(id: u64, score: f32) -> ScoredNeighbor {
-        ScoredNeighbor { id, score, dot: score }
+    /// Past any breaker window the address-seeded backoff could emit
+    /// (jitter never exceeds 1.0 × the cap).
+    const PAST_ANY_WINDOW: u64 = BREAKER_OPEN_CAP.as_millis() as u64 + 1;
+
+    #[test]
+    fn breaker_opens_probes_and_closes_into_slow_start() {
+        let h = ReplicaHealth::new("10.0.0.1:7717");
+        assert!(matches!(h.availability(0), Availability::Ready { .. }));
+        // Failures below the threshold do not eject.
+        for _ in 0..FAILURE_THRESHOLD - 1 {
+            h.record_failure(100);
+        }
+        assert!(matches!(h.availability(101), Availability::Ready { .. }));
+        // The threshold failure opens the breaker.
+        h.record_failure(100);
+        assert!(matches!(h.availability(101), Availability::Ejected));
+        // After the window: exactly one caller gets the half-open probe.
+        let t1 = 100 + PAST_ANY_WINDOW;
+        assert_eq!(h.availability(t1), Availability::Probe);
+        assert_eq!(h.availability(t1), Availability::Ejected);
+        // A failed probe re-ejects.
+        h.record_failure(t1);
+        assert!(matches!(h.availability(t1 + 1), Availability::Ejected));
+        // Next window, next probe — this one succeeds and closes the
+        // breaker into slow-start.
+        let t2 = t1 + PAST_ANY_WINDOW;
+        assert_eq!(h.availability(t2), Availability::Probe);
+        h.record_success(5);
+        match h.availability(t2 + 1) {
+            Availability::Ready { slow_start, .. } => {
+                assert!(slow_start, "a just-closed breaker must slow-start")
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        // Enough successes end the slow-start window.
+        for _ in 0..SLOW_START_SUCCESSES {
+            h.record_success(5);
+        }
+        match h.availability(t2 + 2) {
+            Availability::Ready { slow_start, .. } => assert!(!slow_start),
+            other => panic!("expected Ready, got {other:?}"),
+        }
     }
 
     #[test]
-    fn merge_dedupes_and_ranks_across_replicas() {
-        let a = vec![n(1, 0.9), n(2, 0.5)];
-        let b = vec![n(2, 0.7), n(3, 0.6)];
-        let merged = merge_replica_lists(vec![a, b], Some(3));
-        let ids: Vec<u64> = merged.iter().map(|x| x.id).collect();
-        assert_eq!(ids, vec![1, 2, 3]);
-        // Id 2 keeps its best score across replicas.
-        assert!((merged[1].score - 0.7).abs() < 1e-6);
+    fn latency_ewma_feeds_p95_estimate() {
+        let h = ReplicaHealth::new("10.0.0.2:7717");
+        // No samples: the estimate is the prior, never below the floor.
+        assert!(h.p95_ms() >= HEDGE_FLOOR_MS);
+        for _ in 0..20 {
+            h.record_success(40);
+        }
+        let p95 = h.p95_ms();
+        assert!(
+            (40.0..=50.0).contains(&p95),
+            "steady 40ms latencies should converge near 40 (got {p95})"
+        );
+        // A latency spike lifts the estimate above the old mean.
+        for _ in 0..5 {
+            h.record_success(400);
+        }
+        assert!(h.p95_ms() > p95, "spikes must raise the hedge trigger");
     }
 
     #[test]
-    fn merge_truncates_to_k() {
-        let a = vec![n(1, 0.9), n(2, 0.8), n(3, 0.7)];
-        let merged = merge_replica_lists(vec![a], Some(2));
-        assert_eq!(merged.len(), 2);
+    fn plan_prefers_fast_replicas_and_appends_probes() {
+        let state = RouterState::new(vec!["a".into(), "b".into(), "c".into()], 1_000);
+        for _ in 0..8 {
+            state.health[0].record_success(80);
+            state.health[1].record_success(5);
+        }
+        for _ in 0..FAILURE_THRESHOLD {
+            state.health[2].record_failure(0);
+        }
+        // c is ejected: the plan is the closed replicas, fastest first.
+        let plan = plan_reads(&state, 1);
+        assert_eq!(plan.ranked, vec![1, 0]);
+        assert_eq!(plan.probes, Vec::<usize>::new());
+        // After c's window it re-enters as this window's probe.
+        let plan = plan_reads(&state, PAST_ANY_WINDOW);
+        assert_eq!(plan.ranked, vec![1, 0]);
+        assert_eq!(plan.probes, vec![2]);
     }
 
     #[test]
-    fn merge_default_k_is_widest_replica() {
-        let a = vec![n(1, 0.9), n(2, 0.8)];
-        let b = vec![n(3, 0.7)];
-        let merged = merge_replica_lists(vec![a, b], None);
-        assert_eq!(merged.len(), 2);
+    fn plan_ranks_slow_start_replicas_after_trusted_ones() {
+        let state = RouterState::new(vec!["a".into(), "b".into()], 1_000);
+        // a: slow but trusted. b: fast but freshly re-admitted.
+        for _ in 0..8 {
+            state.health[0].record_success(80);
+        }
+        for _ in 0..FAILURE_THRESHOLD {
+            state.health[1].record_failure(0);
+        }
+        assert_eq!(state.health[1].availability(PAST_ANY_WINDOW), Availability::Probe);
+        state.health[1].record_success(2);
+        // b is Ready again but in slow-start: hedge-only, never primary.
+        let plan = plan_reads(&state, PAST_ANY_WINDOW + 1);
+        assert_eq!(plan.ranked, vec![0, 1]);
+        assert!(plan.probes.is_empty());
+    }
+
+    #[test]
+    fn plan_promotes_probes_to_serving_when_no_replica_is_closed() {
+        // Both replicas ejected; past the window both come back as
+        // probes. With nothing closed, the probes ARE the read path.
+        let state = RouterState::new(vec!["a".into(), "b".into()], 1_000);
+        for h in &state.health {
+            for _ in 0..FAILURE_THRESHOLD {
+                h.record_failure(10);
+            }
+        }
+        let plan = plan_reads(&state, 10 + PAST_ANY_WINDOW);
+        assert_eq!(plan.ranked, vec![0, 1]);
+        assert!(plan.probes.is_empty());
+    }
+
+    #[test]
+    fn plan_falls_back_to_all_targets_when_everything_is_ejected() {
+        let state = RouterState::new(vec!["a".into(), "b".into()], 1_000);
+        for h in &state.health {
+            for _ in 0..FAILURE_THRESHOLD {
+                h.record_failure(10);
+            }
+        }
+        let plan = plan_reads(&state, 11);
+        assert_eq!(plan.ranked, vec![0, 1]);
+        assert!(plan.probes.is_empty());
     }
 
     #[test]
@@ -483,15 +949,28 @@ mod tests {
 
     #[test]
     fn router_state_tracks_leader_transitions() {
-        let state = RouterState {
-            targets: vec!["a".into(), "b".into()],
-            leader: Mutex::new(None),
-            deadline_ms: 1000,
-        };
+        let state = RouterState::new(vec!["a".into(), "b".into()], 1_000);
         assert_eq!(state.leader(), None);
         state.set_leader("a");
         assert_eq!(state.leader(), Some("a".to_string()));
         state.clear_leader();
         assert_eq!(state.leader(), None);
+    }
+
+    #[test]
+    fn annotate_stats_appends_router_section() {
+        let state = RouterState::new(vec!["a".into()], 1_000);
+        state.health[0].record_success(12);
+        let stats = Json::obj(vec![("points", Json::num(10.0))]);
+        let out = annotate_stats(&state, stats);
+        let router = out.get("router");
+        assert_eq!(router.get("hedges").as_u64(), Some(0));
+        let replicas = router.get("replicas").as_arr().unwrap();
+        assert_eq!(replicas.len(), 1);
+        assert_eq!(replicas[0].get("addr").as_str(), Some("a"));
+        assert_eq!(replicas[0].get("breaker").as_str(), Some("closed"));
+        assert!(replicas[0].get("latency_ewma_ms").as_f64().unwrap() > 0.0);
+        // Non-object stats pass through untouched.
+        assert_eq!(annotate_stats(&state, Json::Null), Json::Null);
     }
 }

@@ -52,7 +52,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::DynamicGus;
+use crate::admission::controller::ControllerSnapshot;
+use crate::admission::{AdmissionConfig, Class, Controller, Decision};
+use crate::coordinator::{DegradeSpec, DynamicGus};
 use crate::protocol::{decode_request, Envelope, ErrorCode, Incoming, Request, Response};
 use crate::util::json::Json;
 
@@ -72,6 +74,9 @@ pub trait Replication: Send + Sync {
     /// the configured number of followers, or a bounded wait expires.
     /// `Err(message)` turns the (already applied) mutation's response
     /// into `UNAVAILABLE` — the client must treat it as unacknowledged.
+    /// Implementations record the timeout in the replication gauges
+    /// themselves (they know which subscribers lagged); the server only
+    /// classifies the client-visible error.
     fn ack_gate(&self, wal_seq: u64) -> std::result::Result<(), String>;
 
     /// Promote this node to leader (failover). Idempotent on a leader.
@@ -102,6 +107,10 @@ pub struct ServerConfig {
     /// Bounded run-queue capacity; when full, new requests are shed with
     /// `OVERLOADED` instead of queueing unboundedly.
     pub queue_capacity: usize,
+    /// Adaptive admission knobs (see [`crate::admission`]): sojourn
+    /// target and degraded-serving quality floor. `target_sojourn_ms: 0`
+    /// disables the controller — only the queue-full backstop sheds.
+    pub admission: AdmissionConfig,
     /// Replication hooks (leader or follower role). `None` = single-node
     /// serving: `wal_subscribe`/`promote` answer `BAD_REQUEST` and
     /// mutations are never denied or gated.
@@ -114,6 +123,7 @@ impl std::fmt::Debug for ServerConfig {
             .field("max_concurrent_connections", &self.max_concurrent_connections)
             .field("worker_threads", &self.worker_threads)
             .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
             .field("replication", &self.replication.is_some())
             .finish()
     }
@@ -125,6 +135,7 @@ impl Default for ServerConfig {
             max_concurrent_connections: 64,
             worker_threads: 0,
             queue_capacity: 256,
+            admission: AdmissionConfig::default(),
             replication: None,
         }
     }
@@ -137,6 +148,10 @@ impl ServerConfig {
             max_concurrent_connections: cfg.max_connections,
             worker_threads: cfg.rpc_workers,
             queue_capacity: cfg.rpc_queue,
+            admission: AdmissionConfig {
+                target_sojourn_ms: cfg.admission_target_ms,
+                min_budget_frac: cfg.min_budget_frac,
+            },
             replication: None,
         }
     }
@@ -196,6 +211,9 @@ struct Job {
     received: Instant,
     /// Per-connection ordering ticket (mutations + checkpoint).
     order_ticket: Option<u64>,
+    /// Degraded-serving budget decided at admission (interactive class
+    /// under pressure). `None` = full budget, responses unmarked.
+    degrade: Option<DegradeSpec>,
 }
 
 /// Bounded MPMC run queue shared by every connection reader and worker.
@@ -262,6 +280,41 @@ impl RunQueue {
         self.inner.lock().unwrap().stopped = true;
         self.cv.notify_all();
     }
+
+    /// Instantaneous depth (the controller's fast pressure signal).
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+}
+
+/// Server-wide admission state: the pressure controller plus the queue
+/// capacity its depth signal is normalized against. The controller
+/// itself is clock-free; this wrapper owns the lock and the capacity so
+/// readers (decide) and workers (observe) share one EWMA.
+struct AdmissionShared {
+    controller: Mutex<Controller>,
+    capacity: usize,
+}
+
+impl AdmissionShared {
+    fn new(cfg: AdmissionConfig, capacity: usize) -> AdmissionShared {
+        AdmissionShared {
+            controller: Mutex::new(Controller::new(cfg)),
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn decide(&self, class: Option<Class>, depth: usize) -> Decision {
+        self.controller.lock().unwrap().decide(class, depth, self.capacity)
+    }
+
+    fn observe_sojourn(&self, sojourn_ms: u64) {
+        self.controller.lock().unwrap().observe_sojourn(sojourn_ms);
+    }
+
+    fn snapshot(&self, depth: usize) -> ControllerSnapshot {
+        self.controller.lock().unwrap().snapshot(depth, self.capacity)
+    }
 }
 
 /// Per-connection state shared between its reader and the workers.
@@ -269,6 +322,10 @@ struct ConnShared {
     gus: Arc<DynamicGus>,
     /// Replication hooks (from [`ServerConfig::replication`]).
     replication: Option<Arc<dyn Replication>>,
+    /// Server-wide admission state (sojourn EWMA + pressure tiers).
+    admission: Arc<AdmissionShared>,
+    /// The shared run queue (for the stats snapshot's depth signal).
+    queue: Arc<RunQueue>,
     writer: Mutex<BufWriter<TcpStream>>,
     gate: OrderGate,
     /// Set after a write failure (client gone, or a non-reading client
@@ -340,12 +397,29 @@ impl OrderGate {
     }
 }
 
+/// Default socket write timeout: bounds what one non-reading client can
+/// cost a shared worker.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Floor for the deadline-derived write bound: zero timeouts are
+/// rejected by the socket API, and even an expired budget deserves one
+/// best-effort write attempt.
+const MIN_WRITE_TIMEOUT: Duration = Duration::from_millis(5);
+
 impl ConnShared {
     /// Serialize + write one response line. Failures (client gone, or a
     /// non-reading client hitting the socket write timeout) mark the
     /// connection dead so shared workers stop paying for it; the reader
     /// then observes EOF/error and winds the connection down.
     fn send(&self, wire: &Json) {
+        self.send_bounded(wire, None)
+    }
+
+    /// [`ConnShared::send`] with the socket write additionally bounded by
+    /// the request's remaining `deadline_ms` budget: a stalled client
+    /// never holds a worker past the point its response stops being
+    /// useful. `None` keeps the connection's default write timeout.
+    fn send_bounded(&self, wire: &Json, budget: Option<Duration>) {
         // RELAXED: `dead` is an advisory flag — the writer mutex orders
         // the flagging store with the failed write; a stale read costs at
         // most one extra write attempt, never a correctness violation.
@@ -358,10 +432,17 @@ impl ConnShared {
         if self.dead.load(Ordering::Relaxed) {
             return;
         }
+        let bounded = budget.map(|b| b.clamp(MIN_WRITE_TIMEOUT, WRITE_TIMEOUT));
+        if let Some(t) = bounded {
+            w.get_ref().set_write_timeout(Some(t)).ok();
+        }
         let ok = w
             .write_all(wire.dump().as_bytes())
             .and_then(|()| w.write_all(b"\n"))
             .and_then(|()| w.flush());
+        if bounded.is_some() {
+            w.get_ref().set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+        }
         if ok.is_err() {
             // RELAXED: published under the writer lock held above; later
             // senders observe it via the lock or via the advisory fast path.
@@ -379,6 +460,7 @@ pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<S
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let queue = Arc::new(RunQueue::new(config.queue_capacity));
+    let admission = Arc::new(AdmissionShared::new(config.admission, config.queue_capacity));
 
     let workers = (0..config.resolved_workers())
         .map(|i| {
@@ -412,11 +494,12 @@ pub fn serve(gus: Arc<DynamicGus>, addr: &str, config: ServerConfig) -> Result<S
                 let gus = Arc::clone(&gus);
                 let active = Arc::clone(&active);
                 let queue = Arc::clone(&queue2);
+                let admission = Arc::clone(&admission);
                 let replication = config.replication.clone();
                 let _ = std::thread::Builder::new()
                     .name("gus-server-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(gus, replication, queue, stream);
+                        let _ = handle_connection(gus, replication, admission, queue, stream);
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
             }
@@ -447,6 +530,7 @@ fn refuse_connection(gus: &DynamicGus, stream: TcpStream) {
 fn handle_connection(
     gus: Arc<DynamicGus>,
     replication: Option<Arc<dyn Replication>>,
+    admission: Arc<AdmissionShared>,
     queue: Arc<RunQueue>,
     stream: TcpStream,
 ) -> Result<()> {
@@ -454,12 +538,15 @@ fn handle_connection(
     // Response writes happen on shared workers; a client that stops
     // reading must cost at most one bounded stall, not a wedged pool —
     // the first timed-out write marks the connection dead (see
-    // [`ConnShared::send`]).
-    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    // [`ConnShared::send`]). Deadline-carrying requests tighten this
+    // per-write (see [`ConnShared::send_bounded`]).
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let conn = Arc::new(ConnShared {
         gus: Arc::clone(&gus),
         replication,
+        admission,
+        queue: Arc::clone(&queue),
         writer: Mutex::new(BufWriter::new(stream)),
         gate: OrderGate::new(),
         dead: AtomicBool::new(false),
@@ -484,7 +571,7 @@ fn handle_connection(
                 // pipelined client can match the failure; otherwise the
                 // error is connection-level (legacy-shaped).
                 gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
-                let resp = Response::Error { code: e.error.code, message: e.error.message };
+                let resp = Response::error(e.error.code, e.error.message);
                 conn.send(&resp.to_wire(e.id));
                 continue;
             }
@@ -542,8 +629,29 @@ fn handle_connection(
             }
             Incoming::V1(envelope) => {
                 let id = envelope.id;
+                // Adaptive admission: classed requests consult the
+                // pressure controller before the queue-full backstop —
+                // shedding lowest-class-first with a retry hint, or
+                // admitting interactive work at a reduced budget.
+                let degrade = match conn.admission.decide(envelope.class, queue.len()) {
+                    Decision::Shed { retry_after_ms } => {
+                        note_shed(&gus, envelope.class);
+                        gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        let msg = format!(
+                            "shed by admission control (class={}); retry",
+                            envelope.class.map(Class::as_str).unwrap_or("none"),
+                        );
+                        conn.send(&Response::overloaded(msg, retry_after_ms).to_wire(Some(id)));
+                        continue;
+                    }
+                    Decision::Admit { budget_frac, skip_refine } => {
+                        (budget_frac < 1.0 || skip_refine)
+                            .then_some(DegradeSpec { budget_frac, skip_refine })
+                    }
+                };
                 let order_ticket = envelope.request.is_ordered().then_some(next_ticket);
-                let job = Job { conn: Arc::clone(&conn), envelope, received, order_ticket };
+                let job =
+                    Job { conn: Arc::clone(&conn), envelope, received, order_ticket, degrade };
                 match queue.try_push(job) {
                     Ok(()) => {
                         if order_ticket.is_some() {
@@ -604,6 +712,10 @@ fn finish_ordered_turn(conn: &ConnShared) {
 /// Deadline-check, execute, and answer one v1 job (no gate logic).
 fn execute_and_send(job: Job) {
     let gus = &job.conn.gus;
+    // Sojourn: how long this job sat between socket read and execution —
+    // the controller's primary pressure signal. Parked (ordered) jobs
+    // count their park time too; that delay is just as real to clients.
+    job.conn.admission.observe_sojourn(job.received.elapsed().as_millis() as u64);
     // `checked_add`: an absurd deadline_ms must saturate to "never
     // expires", not panic the worker.
     let expired = match job.envelope.deadline_ms {
@@ -613,7 +725,7 @@ fn execute_and_send(job: Job) {
             .checked_add(Duration::from_millis(ms))
             .is_some_and(|deadline| Instant::now() >= deadline),
     };
-    let resp = if expired {
+    let mut resp = if expired {
         gus.metrics.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
         gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
         Response::error(
@@ -623,10 +735,75 @@ fn execute_and_send(job: Job) {
                 job.envelope.deadline_ms.unwrap_or(0)
             ),
         )
+    } else if let Some(spec) = job.degrade {
+        execute_degraded(gus, job.conn.replication.as_deref(), job.envelope.request, spec)
     } else {
         execute_replicated(gus, job.conn.replication.as_deref(), job.envelope.request)
     };
-    job.conn.send(&resp.to_wire(Some(job.envelope.id)));
+    // The served-path stats response carries the controller's state; the
+    // coordinator can't add this section because the server owns the
+    // controller (legacy/inline stats stay byte-identical to before).
+    if let Response::Stats { stats } = &mut resp {
+        if let Json::Obj(map) = stats {
+            let snap = job.conn.admission.snapshot(job.conn.queue.len());
+            map.insert("admission".into(), snap.to_json());
+        }
+    }
+    // Bound the writer by whatever deadline budget remains.
+    let budget = job
+        .envelope
+        .deadline_ms
+        .map(|ms| Duration::from_millis(ms).saturating_sub(job.received.elapsed()));
+    job.conn.send_bounded(&resp.to_wire(Some(job.envelope.id)), budget);
+}
+
+/// Route one admission shed to its per-class counter. Unclassed requests
+/// are never shed by the controller (only the queue-full backstop, which
+/// counts `overloaded`), but route them as interactive for safety.
+fn note_shed(gus: &DynamicGus, class: Option<Class>) {
+    let c = match class {
+        Some(Class::Replication) => &gus.metrics.counters.shed_replication,
+        Some(Class::Batch) => &gus.metrics.counters.shed_batch,
+        Some(Class::Interactive) | None => &gus.metrics.counters.shed_interactive,
+    };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Execute one admitted-but-degraded request: queries run with a scaled
+/// posting budget (and optionally without scoring refinement) and their
+/// responses are marked `degraded`; every other op is unaffected by
+/// degradation and executes normally.
+fn execute_degraded(
+    gus: &DynamicGus,
+    rep: Option<&dyn Replication>,
+    req: Request,
+    spec: DegradeSpec,
+) -> Response {
+    let default_k = gus.config().scann_nn;
+    let frac = spec.budget_frac;
+    let result = match req {
+        Request::Query { point, k } => gus
+            .query_degraded(&point, k.unwrap_or(default_k), spec)
+            .map(|neighbors| Response::Neighbors { neighbors, degraded: Some(frac) }),
+        Request::QueryId { id, k } => gus
+            .query_by_id_degraded(id, k.unwrap_or(default_k), spec)
+            .map(|neighbors| Response::Neighbors { neighbors, degraded: Some(frac) }),
+        Request::QueryBatch { points, k } => gus
+            .query_batch_degraded(&points, k.unwrap_or(default_k), spec)
+            .map(|results| Response::Results { results, degraded: Some(frac) }),
+        other => return execute_replicated(gus, rep, other),
+    };
+    match result {
+        Ok(resp) => {
+            gus.metrics.counters.degraded_responses.fetch_add(1, Ordering::Relaxed);
+            resp
+        }
+        Err(e) => {
+            gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("{e}");
+            Response::error(classify_error(&msg), msg)
+        }
+    }
 }
 
 // ---------- typed dispatch ----------
@@ -666,7 +843,8 @@ fn execute_replicated(gus: &DynamicGus, rep: Option<&dyn Replication>, req: Requ
         // UNAVAILABLE and must treat the mutation as unacknowledged
         // (it may still survive — at-least-once, like any retried RPC).
         if let Err(msg) = rep.ack_gate(gus.wal_seq()) {
-            gus.metrics.replication.note_ack_timeout();
+            // The implementation counts the timeout (it knows which
+            // subscribers lagged); we only classify the client error.
             gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
             return Response::error(ErrorCode::Unavailable, msg);
         }
@@ -682,7 +860,7 @@ pub fn execute(gus: &DynamicGus, req: Request) -> Response {
         Ok(resp) => resp,
         Err(e) => {
             let msg = format!("{e}");
-            Response::Error { code: classify_error(&msg), message: msg }
+            Response::error(classify_error(&msg), msg)
         }
     };
     if resp.is_error() {
@@ -700,9 +878,11 @@ fn execute_inner(gus: &DynamicGus, req: Request) -> Result<Response> {
         Request::Delete { id } => Ok(Response::Existed { existed: gus.delete(id)? }),
         Request::Query { point, k } => Ok(Response::Neighbors {
             neighbors: gus.query(&point, k.unwrap_or(default_k))?,
+            degraded: None,
         }),
         Request::QueryId { id, k } => Ok(Response::Neighbors {
             neighbors: gus.query_by_id(id, k.unwrap_or(default_k))?,
+            degraded: None,
         }),
         Request::InsertBatch { points } => {
             Ok(Response::ExistedBatch { existed: gus.insert_batch(points)? })
@@ -712,6 +892,7 @@ fn execute_inner(gus: &DynamicGus, req: Request) -> Result<Response> {
         }
         Request::QueryBatch { points, k } => Ok(Response::Results {
             results: gus.query_batch(&points, k.unwrap_or(default_k))?,
+            degraded: None,
         }),
         // Checkpoint failures are the server's state/fault (no WAL
         // attached, disk full, I/O error) — always UNAVAILABLE, never
@@ -765,7 +946,7 @@ pub fn dispatch(gus: &DynamicGus, line: &str) -> Json {
     match decode_request(line) {
         Err(e) => {
             gus.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
-            Response::Error { code: e.error.code, message: e.error.message }.to_wire(e.id)
+            Response::error(e.error.code, e.error.message).to_wire(e.id)
         }
         Ok(Incoming::Legacy(request)) => execute(gus, request).to_wire(None),
         Ok(Incoming::V1(envelope)) => {
@@ -1018,7 +1199,7 @@ mod tests {
         for req in [Request::Insert { point: p }, Request::Delete { id: 3 }, Request::Checkpoint] {
             let resp = execute_replicated(&gus, Some(&rep), req);
             match resp {
-                Response::Error { code, message } => {
+                Response::Error { code, message, .. } => {
                     assert_eq!(code, ErrorCode::NotLeader);
                     assert!(message.contains("leader=10.0.0.1:4242"), "{message}");
                 }
@@ -1041,12 +1222,15 @@ mod tests {
 
     #[test]
     fn leader_ack_gate_failure_turns_ack_into_unavailable() {
-        struct SlowReplicas;
+        struct SlowReplicas(Arc<DynamicGus>);
         impl Replication for SlowReplicas {
             fn deny_mutations(&self) -> Option<String> {
                 None
             }
             fn ack_gate(&self, seq: u64) -> std::result::Result<(), String> {
+                // Real implementations count their own timeouts (they know
+                // which subscribers lagged); the mock mirrors that contract.
+                self.0.metrics.replication.note_ack_timeout(&[]);
                 Err(format!("replication ack timeout at seq {seq}"))
             }
             fn promote(&self) -> Result<u64> {
@@ -1063,12 +1247,12 @@ mod tests {
             }
         }
         let (gus, ds) = boot();
-        let rep = SlowReplicas;
+        let rep = SlowReplicas(Arc::clone(&gus));
         let mut p = ds.points[0].clone();
         p.id = 91_000;
         let resp = execute_replicated(&gus, Some(&rep), Request::Insert { point: p });
         match resp {
-            Response::Error { code, message } => {
+            Response::Error { code, message, .. } => {
                 assert_eq!(code, ErrorCode::Unavailable);
                 assert!(message.contains("ack timeout"), "{message}");
             }
@@ -1092,6 +1276,7 @@ mod tests {
         let req = Envelope {
             id: 5,
             deadline_ms: Some(0),
+            class: None,
             request: Request::Insert { point: p },
         };
         let resp = dispatch(&gus, &req.to_wire().dump());

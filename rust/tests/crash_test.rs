@@ -108,6 +108,7 @@ fn crash_opts(rng: &mut Rng, connections: usize) -> LoadOptions {
         deadline_ms: None,
         seed: rng.below(1 << 32),
         record_points: true,
+        classes: false,
     }
 }
 

@@ -6,6 +6,7 @@
 //! formatting fails here loudly instead of silently breaking clients,
 //! WAL replay, and cross-version compatibility.
 
+use dynamic_gus::admission::Class;
 use dynamic_gus::coordinator::ScoredNeighbor;
 use dynamic_gus::features::{FeatureValue, Point};
 use dynamic_gus::protocol::{
@@ -43,11 +44,13 @@ fn request_fixture_values() -> Vec<Incoming> {
         Incoming::V1(Envelope {
             id: 7,
             deadline_ms: Some(50),
+            class: None,
             request: Request::QueryId { id: 3, k: Some(5) },
         }),
         Incoming::V1(Envelope {
             id: 9,
             deadline_ms: None,
+            class: None,
             request: Request::Insert { point: fixture_point(1) },
         }),
     ]
@@ -62,9 +65,15 @@ fn response_fixture_values() -> Vec<(Option<u64>, Response)> {
         (None, Response::ExistedBatch { existed: vec![true, false] }),
         (
             None,
-            Response::Neighbors { neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)] },
+            Response::Neighbors {
+                neighbors: vec![n(4, 0.5, 3.0), n(9, 0.25, -0.5)],
+                degraded: None,
+            },
         ),
-        (None, Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]] }),
+        (
+            None,
+            Response::Results { results: vec![vec![n(2, 0.5, 1.0)], vec![]], degraded: None },
+        ),
         (None, Response::Checkpoint { seq: 1041 }),
         (
             None,
@@ -174,6 +183,15 @@ fn random_neighbors(rng: &mut Rng) -> Vec<ScoredNeighbor> {
         .collect()
 }
 
+/// Quarter-grid budget fractions (exactly representable, so the
+/// dump → parse round trip is lossless, like `grid_f32` for scores).
+fn random_degraded(rng: &mut Rng) -> Option<f64> {
+    match rng.below(4) {
+        0 => Some(0.25 * (1 + rng.below(3)) as f64),
+        _ => None,
+    }
+}
+
 fn random_response(rng: &mut Rng) -> Response {
     let codes = [
         ErrorCode::BadRequest,
@@ -187,9 +205,13 @@ fn random_response(rng: &mut Rng) -> Response {
         1 => Response::ExistedBatch {
             existed: (0..rng.below(6)).map(|_| rng.below(2) == 0).collect(),
         },
-        2 => Response::Neighbors { neighbors: random_neighbors(rng) },
+        2 => Response::Neighbors {
+            neighbors: random_neighbors(rng),
+            degraded: random_degraded(rng),
+        },
         3 => Response::Results {
             results: (0..rng.below(4)).map(|_| random_neighbors(rng)).collect(),
+            degraded: random_degraded(rng),
         },
         4 => Response::Checkpoint { seq: rng.below(1 << 60) },
         5 => Response::Stats {
@@ -227,6 +249,12 @@ fn prop_every_envelope_round_trips() {
         let env = Envelope {
             id: rng.below(1 << 60),
             deadline_ms: if rng.below(2) == 0 { None } else { Some(rng.below(100_000)) },
+            class: match rng.below(4) {
+                0 => Some(Class::Interactive),
+                1 => Some(Class::Batch),
+                2 => Some(Class::Replication),
+                _ => None,
+            },
             request: random_request(&mut rng),
         };
         match decode_request(&env.to_wire().dump()) {

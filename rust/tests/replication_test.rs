@@ -20,7 +20,7 @@ use dynamic_gus::data::synthetic::SyntheticConfig;
 use dynamic_gus::data::Dataset;
 use dynamic_gus::features::Point;
 use dynamic_gus::protocol::{ErrorCode, Request, Response};
-use dynamic_gus::replication::{start_follower, FollowerOpts, NodeReplication};
+use dynamic_gus::replication::{start_follower, FollowerOpts, NodeReplication, ACK_TIMEOUT};
 use dynamic_gus::server::{serve, Replication, ServerConfig, ServerHandle};
 use dynamic_gus::testing::proptest_cases;
 use dynamic_gus::util::rng::Rng;
@@ -52,6 +52,7 @@ fn boot_leader(
     boot: usize,
     dir: &Path,
     ack_replicas: usize,
+    ack_timeout: Duration,
     wal_retain: u64,
 ) -> (ServerHandle, Arc<DynamicGus>, Arc<NodeReplication>) {
     let gus =
@@ -59,7 +60,7 @@ fn boot_leader(
             .unwrap();
     wal::init_fresh(&gus, dir).unwrap();
     let gus = Arc::new(gus);
-    let rep = NodeReplication::leader(Arc::clone(&gus), ack_replicas);
+    let rep = NodeReplication::leader(Arc::clone(&gus), ack_replicas, ack_timeout);
     let config = ServerConfig {
         replication: Some(Arc::clone(&rep) as Arc<dyn Replication>),
         ..ServerConfig::default()
@@ -75,6 +76,7 @@ fn boot_follower(leader_addr: &str, dir: &Path) -> (Arc<DynamicGus>, Arc<NodeRep
         wal_dir: dir.to_path_buf(),
         threads: 2,
         ack_replicas: 0,
+        ack_timeout: ACK_TIMEOUT,
     })
     .unwrap()
 }
@@ -138,7 +140,7 @@ fn follower_replicates_and_serves_reads() {
     let ds = SyntheticConfig::arxiv_like(300, 0xe1).generate();
     let ldir = tmpdir("basic-leader");
     let fdir = tmpdir("basic-follower");
-    let (l_handle, leader, _l_rep) = boot_leader(&ds, 240, &ldir, 0, 0);
+    let (l_handle, leader, _l_rep) = boot_leader(&ds, 240, &ldir, 0, ACK_TIMEOUT, 0);
     let leader_addr = l_handle.addr.to_string();
     let (follower, f_rep) = boot_follower(&leader_addr, &fdir);
     let f_config = ServerConfig {
@@ -171,7 +173,7 @@ fn follower_replicates_and_serves_reads() {
         .submit(Request::Insert { point: ds.points[240].clone() })
         .unwrap();
     match f_client.wait_response(id).unwrap() {
-        Response::Error { code: ErrorCode::NotLeader, message } => {
+        Response::Error { code: ErrorCode::NotLeader, message, .. } => {
             assert!(
                 message.contains(&format!("leader={leader_addr}")),
                 "NOT_LEADER hint missing leader address: {message}"
@@ -207,7 +209,7 @@ fn promote_turns_follower_into_leader() {
     let ds = SyntheticConfig::arxiv_like(260, 0xe2).generate();
     let ldir = tmpdir("promote-leader");
     let fdir = tmpdir("promote-follower");
-    let (l_handle, leader, _l_rep) = boot_leader(&ds, 200, &ldir, 0, 0);
+    let (l_handle, leader, _l_rep) = boot_leader(&ds, 200, &ldir, 0, ACK_TIMEOUT, 0);
     let leader_addr = l_handle.addr.to_string();
     let (follower, f_rep) = boot_follower(&leader_addr, &fdir);
     let f_config = ServerConfig {
@@ -253,8 +255,11 @@ fn ack_gate_requires_a_live_follower() {
     let ds = SyntheticConfig::arxiv_like(160, 0xe3).generate();
     let ldir = tmpdir("acks-leader");
     let fdir = tmpdir("acks-follower");
-    // --ack-replicas 1: every mutation ack waits for one follower.
-    let (l_handle, leader, _l_rep) = boot_leader(&ds, 120, &ldir, 1, 0);
+    // --ack-replicas 1: every mutation ack waits for one follower. The
+    // short --ack-timeout-ms keeps the dead-follower half of the test
+    // from sitting out the 5 s default gate window.
+    let ack_timeout = Duration::from_millis(600);
+    let (l_handle, leader, _l_rep) = boot_leader(&ds, 120, &ldir, 1, ack_timeout, 0);
     let leader_addr = l_handle.addr.to_string();
     let (follower, f_rep) = boot_follower(&leader_addr, &fdir);
 
@@ -286,9 +291,21 @@ fn ack_gate_requires_a_live_follower() {
     }
     assert_eq!(leader.metrics.replication.subscribers(), 0);
     let before = leader.wal_seq();
+    let timeouts_before = leader.metrics.replication.to_json(0).get("ack_timeouts").as_u64();
+    let start = std::time::Instant::now();
     let err = client.insert(&ds.points[150]).unwrap_err().to_string();
     assert!(err.contains("UNAVAILABLE"), "gate timeout must be UNAVAILABLE: {err}");
+    assert!(
+        start.elapsed() < Duration::from_secs(4),
+        "gate held the ack past the configured 600 ms timeout: {:?}",
+        start.elapsed()
+    );
     assert_eq!(leader.wal_seq(), before + 1, "gated mutation is still applied + logged");
+    assert_eq!(
+        leader.metrics.replication.to_json(0).get("ack_timeouts").as_u64(),
+        timeouts_before.map(|n| n + 1),
+        "the timed-out gated ack must be counted in replication stats"
+    );
 
     l_handle.shutdown();
 }
@@ -301,7 +318,7 @@ fn retention_bounds_catchup_and_forces_rebootstrap() {
     let ldir = tmpdir("retain-leader");
     let fdir = tmpdir("retain-follower");
     // Keep only the last 8 records past each checkpoint.
-    let (l_handle, leader, _l_rep) = boot_leader(&ds, 120, &ldir, 0, 8);
+    let (l_handle, leader, _l_rep) = boot_leader(&ds, 120, &ldir, 0, ACK_TIMEOUT, 8);
     let leader_addr = l_handle.addr.to_string();
 
     let (follower, f_rep) = boot_follower(&leader_addr, &fdir);
@@ -430,7 +447,7 @@ fn follower_converges_across_random_disconnects() {
         let fdir = tmpdir(&format!("prop-follower-{case:016x}"));
         let mut fresh = boot;
 
-        let (l_handle, leader, _l_rep) = boot_leader(&ds, boot, &ldir, 0, 0);
+        let (l_handle, leader, _l_rep) = boot_leader(&ds, boot, &ldir, 0, ACK_TIMEOUT, 0);
         let leader_addr = l_handle.addr.to_string();
 
         // Random prefix before the follower ever connects: shipped via

@@ -697,6 +697,7 @@ const REPLAY_FILES: &[&str] = &[
     "coordinator/wal.rs",
     "coordinator/snapshot.rs",
     "protocol.rs",
+    "admission/controller.rs",
     "replication/mod.rs",
     "replication/leader.rs",
     "replication/follower.rs",

@@ -23,6 +23,14 @@
 //! |            |            | interactive once `1/pressure` falls below the |
 //! |            |            | configured quality floor                      |
 //!
+//! Recovery is built into [`Controller::decide`]: sojourn samples
+//! normally arrive only when a worker pops a job, so a controller that
+//! sheds *everything* (classed-only traffic after a severe surge) would
+//! otherwise never see another sample and stay latched above target
+//! forever. A shed decided against an empty queue therefore folds in a
+//! zero sojourn sample — the empty queue is the observation — so
+//! sustained shedding itself decays pressure back below the tiers.
+//!
 //! The struct is pure: no `Instant`, no `SystemTime`, no hash-order
 //! iteration (the `replay-determinism` lint enforces this). Callers
 //! measure time and feed samples; the controller only does arithmetic,
@@ -212,13 +220,14 @@ impl Controller {
     }
 
     /// Admission decision for one request. `class` is the envelope's
-    /// class (None = unclassed/legacy). Pure: same inputs, same answer.
+    /// class (None = unclassed/legacy). Pure: same input stream, same
+    /// answers.
     pub fn decide(&mut self, class: Option<Class>, depth: usize, capacity: usize) -> Decision {
         let p = self.pressure(depth, capacity);
         self.last_depth_frac = depth as f64 / capacity.max(1) as f64;
         let tier = Self::tier_at(p);
         let admit_full = Decision::Admit { budget_frac: 1.0, skip_refine: false };
-        match tier {
+        let decision = match tier {
             Tier::Normal => admit_full,
             Tier::ShedBatch => match class {
                 Some(Class::Batch) => self.shed(p),
@@ -245,7 +254,20 @@ impl Controller {
                     }
                 }
             },
+        };
+        // Admitted jobs report their real sojourn when a worker pops
+        // them; a shed job reports nothing. If every arriving request is
+        // classed and shed, no pops ever happen, the queue stays empty,
+        // and the EWMA would freeze above target forever — pressure
+        // latched by its own response. An empty queue at shed time is
+        // itself a sojourn observation ("a job admitted now would wait
+        // ~0ms"), so fold in a zero sample: each shed decays the EWMA by
+        // `ALPHA` until interactive traffic clears the floor again.
+        // Still clock-free and a pure function of the input stream.
+        if decision.is_shed() && depth == 0 {
+            self.observe_sojourn(0);
         }
+        decision
     }
 
     /// Deterministic retry hint: proportional to how far over target the
@@ -400,6 +422,34 @@ mod tests {
         };
         assert!(high > low, "hint did not grow with pressure: {low} → {high}");
         assert!((10..=5_000).contains(&low) && (10..=5_000).contains(&high));
+    }
+
+    #[test]
+    fn pressure_unlatches_under_classed_only_shedding() {
+        // After a severe surge the EWMA sits far above target. With only
+        // classed traffic arriving, every request is shed at admission —
+        // no job is ever popped, so no real sojourn samples can drain
+        // the EWMA. Each shed against the (empty) queue must decay
+        // pressure itself, or the controller sheds 100% forever.
+        let mut c = ctl(50, 0.25);
+        saturate(&mut c, 400, 64); // pressure 8.0 — deep into Critical
+        assert!(c.decide(Some(Class::Interactive), 0, 256).is_shed());
+        let mut sheds = 0;
+        for _ in 0..200 {
+            if c.decide(Some(Class::Interactive), 0, 256).is_shed() {
+                sheds += 1;
+            } else {
+                break;
+            }
+        }
+        assert!(
+            sheds < 200,
+            "pressure latched: 200 consecutive interactive sheds with an empty queue"
+        );
+        // And recovery is monotone from here: once interactive is
+        // admitted again it stays admitted while the queue is empty.
+        assert!(!c.decide(Some(Class::Interactive), 0, 256).is_shed());
+        assert!(!c.decide(None, 0, 256).is_shed());
     }
 
     #[test]

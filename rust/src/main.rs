@@ -1148,10 +1148,12 @@ fn loadgen_overload(
         violations.len()
     );
 
-    // Phase C: recovery. Unclassed warmup queries are never shed or
-    // degraded, and each observed sojourn decays the pressure EWMA, so
-    // the run that follows measures the recovered steady state rather
-    // than the controller's memory of the surge.
+    // Phase C: recovery. The controller unlatches on its own (sheds
+    // against an empty queue decay the pressure EWMA), but that takes a
+    // handful of requests — a short unclassed warmup (never shed or
+    // degraded, each pop feeding a real sojourn sample) drains the
+    // surge's memory first, so the gated run measures the recovered
+    // steady state rather than the decay transient.
     let mut client = GusClient::connect(&addr)?;
     let mut warm_rng = Rng::seeded(sc.load_seed ^ 0xc001);
     for i in 0..32u64 {

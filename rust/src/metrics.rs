@@ -463,6 +463,15 @@ impl ReplicationGauges {
         self.ack_timeouts_by_subscriber.lock().unwrap().get(&subscriber).copied().unwrap_or(0)
     }
 
+    /// Leader: a subscription stream closed — drop its attribution row.
+    /// Stream ids are per-connection, so without pruning a long-lived
+    /// leader with follower churn plus ack timeouts grows the map (and
+    /// the stats JSON) without bound. The aggregate `ack_timeouts`
+    /// counter keeps the full history.
+    pub fn forget_subscriber(&self, subscriber: u64) {
+        self.ack_timeouts_by_subscriber.lock().unwrap().remove(&subscriber);
+    }
+
     pub fn subscriber_connected(&self) {
         self.subscribers.fetch_add(1, Ordering::Relaxed);
     }
@@ -689,6 +698,14 @@ mod tests {
         let by_sub = j.get("ack_timeouts_by_subscriber");
         assert_eq!(by_sub.get("3").as_u64(), Some(2));
         assert_eq!(by_sub.get("7").as_u64(), Some(1));
+        // A closed stream's row is pruned (subscriber churn must not
+        // grow the map forever); the aggregate count survives.
+        g.forget_subscriber(3);
+        assert_eq!(g.ack_timeouts_for(3), 0);
+        assert_eq!(g.ack_timeouts_for(7), 1);
+        let j = g.to_json(0);
+        assert_eq!(j.get("ack_timeouts").as_u64(), Some(3));
+        assert!(j.get("ack_timeouts_by_subscriber").get("3").as_u64().is_none());
     }
 
     #[test]

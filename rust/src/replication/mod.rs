@@ -218,6 +218,9 @@ impl NodeReplication {
         self.acks.lock().unwrap().remove(&id);
         // Wake gate waiters so they recount against the shrunk table.
         self.acks_cond.notify_all();
+        // Stream ids are never reused, so the dead stream's ack-timeout
+        // attribution is dropped with it (the aggregate counter stays).
+        self.gus.metrics.replication.forget_subscriber(id);
         self.gus.metrics.replication.subscriber_disconnected();
     }
 
@@ -388,6 +391,13 @@ mod tests {
             Some(1)
         );
         rep.unregister_subscriber(sub);
+        // Unregistering prunes the per-stream attribution row, so
+        // reconnect churn cannot grow the stats map without bound.
+        assert_eq!(rep.gus().metrics.replication.ack_timeouts_for(sub), 0);
+        assert_eq!(
+            rep.gus().metrics.replication.to_json(5).get("ack_timeouts").as_u64(),
+            Some(1)
+        );
     }
 
     #[test]

@@ -582,9 +582,13 @@ struct ReadPlan {
 /// Rank the replicas for one read starting at `now_ms`: closed breakers
 /// by latency estimate (fully-trusted ones before slow-start
 /// re-admissions); half-open probes ride separately. With no closed
-/// replica, probes serve directly; with nothing at all — every breaker
-/// open mid-window — fall back to trying every target in order: a read
-/// must never be refused while a replica might answer.
+/// replica, one probe is promoted to primary — the rest STAY in
+/// `probes`, because the caller guarantees a launched read for every
+/// probe but only for `ranked[0]`; moving them all into `ranked` would
+/// strand any unlaunched entry half-open (reported ejected) until a
+/// health recording that never comes. With nothing at all — every
+/// breaker open mid-window — fall back to trying every target in
+/// order: a read must never be refused while a replica might answer.
 fn plan_reads(state: &RouterState, now_ms: u64) -> ReadPlan {
     let mut ready: Vec<(bool, f64, usize)> = Vec::new();
     let mut probes: Vec<usize> = Vec::new();
@@ -597,8 +601,8 @@ fn plan_reads(state: &RouterState, now_ms: u64) -> ReadPlan {
     }
     ready.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
     let mut ranked: Vec<usize> = ready.into_iter().map(|(_, _, i)| i).collect();
-    if ranked.is_empty() {
-        ranked = std::mem::take(&mut probes);
+    if ranked.is_empty() && !probes.is_empty() {
+        ranked.push(probes.remove(0));
     }
     if ranked.is_empty() {
         ranked.extend(0..state.targets.len());
@@ -634,11 +638,12 @@ fn spawn_read(
     budget_ms: u64,
     tx: std::sync::mpsc::Sender<ReadOutcome>,
 ) {
-    let state = Arc::clone(state);
+    let thread_state = Arc::clone(state);
     let fail_tx = tx.clone();
     let spawned = std::thread::Builder::new()
         .name("gus-router-read".into())
         .spawn(move || {
+            let state = thread_state;
             let addr = &state.targets[idx];
             let health = &state.health[idx];
             let t0 = monotonic_ms();
@@ -678,8 +683,12 @@ fn spawn_read(
             let _ = tx.send(ReadOutcome { idx, result, conn });
         });
     if spawned.is_err() {
-        // Thread spawn failed: surface it like a transport failure so
-        // the hedging loop moves on to the next candidate.
+        // Thread spawn failed: record the failure here — health is
+        // normally recorded inside the thread that never started, and
+        // without it a half-open probe replica would stay half-open
+        // (reported ejected) forever — then surface it like a transport
+        // failure so the hedging loop moves on to the next candidate.
+        state.health[idx].record_failure(monotonic_ms());
         let _ = fail_tx.send(ReadOutcome { idx, result: Err(None), conn: None });
     }
 }
@@ -912,7 +921,9 @@ mod tests {
     #[test]
     fn plan_promotes_probes_to_serving_when_no_replica_is_closed() {
         // Both replicas ejected; past the window both come back as
-        // probes. With nothing closed, the probes ARE the read path.
+        // probes. With nothing closed, a probe IS the read path — but
+        // only one is promoted to primary; the rest must stay probes so
+        // the caller still launches every one of them.
         let state = RouterState::new(vec!["a".into(), "b".into()], 1_000);
         for h in &state.health {
             for _ in 0..FAILURE_THRESHOLD {
@@ -920,8 +931,46 @@ mod tests {
             }
         }
         let plan = plan_reads(&state, 10 + PAST_ANY_WINDOW);
-        assert_eq!(plan.ranked, vec![0, 1]);
-        assert!(plan.probes.is_empty());
+        assert_eq!(plan.ranked, vec![0]);
+        assert_eq!(plan.probes, vec![1]);
+    }
+
+    #[test]
+    fn plan_guarantees_a_launch_for_every_probe_after_full_outage() {
+        // Every half-open probe must land in the guaranteed-launch set:
+        // ranked[0] (the primary) or `probes` (launched unconditionally).
+        // Entries in ranked[1..] are only launched on hedge/failover, so
+        // a probe parked there could stay half-open (reported ejected)
+        // forever after a full-outage heal.
+        let state = RouterState::new(vec!["a".into(), "b".into(), "c".into()], 1_000);
+        for h in &state.health {
+            for _ in 0..FAILURE_THRESHOLD {
+                h.record_failure(10);
+            }
+        }
+        let plan = plan_reads(&state, 10 + PAST_ANY_WINDOW);
+        let mut launched = vec![plan.ranked[0]];
+        launched.extend(&plan.probes);
+        launched.sort_unstable();
+        assert_eq!(launched, vec![0, 1, 2], "a probe was handed out without a launch slot");
+        // Each probe read closes or re-opens its breaker; nothing is
+        // left half-open once they are all recorded.
+        for (i, h) in state.health.iter().enumerate() {
+            if i == plan.ranked[0] {
+                h.record_success(5);
+            } else {
+                h.record_failure(10 + PAST_ANY_WINDOW);
+            }
+        }
+        assert!(matches!(
+            state.health[plan.ranked[0]].availability(11 + PAST_ANY_WINDOW),
+            Availability::Ready { .. }
+        ));
+        for &i in &plan.probes {
+            // Re-opened, not stuck half-open: a fresh window eventually
+            // hands out a new probe.
+            assert_eq!(state.health[i].availability(10 + 2 * PAST_ANY_WINDOW), Availability::Probe);
+        }
     }
 
     #[test]

@@ -205,10 +205,11 @@ fn call_with_retry_honors_retry_after_ms_until_readmitted() {
         })
     };
 
-    // Drain A's admitted jobs, then keep trickling unclassed queries:
-    // shed requests never execute and so never feed the sojourn EWMA —
-    // without admitted traffic observing small sojourns, pressure would
-    // stay pinned and batch would be shed forever.
+    // Drain A's admitted jobs, then keep trickling unclassed queries.
+    // Admitted traffic observing small sojourns is the fast decay path;
+    // the controller also decays on its own (a shed against an empty
+    // queue counts as a zero-sojourn observation), so either way the
+    // retrying batch call must eventually be re-admitted.
     for id in a_ids.iter().take(a_ids.len() - 1) {
         let _ = a.wait_response(*id).unwrap();
     }
